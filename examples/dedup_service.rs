@@ -1,0 +1,62 @@
+//! Network deduplication service demo: spawn the TCP service, drive it
+//! from three concurrent ingestion clients, print shared-index stats.
+//!
+//! ```bash
+//! cargo run --release --example dedup_service
+//! ```
+//!
+//! In production the server runs standalone (`lshbloom serve`) and
+//! scraper/parser fleets connect as clients; here everything lives in
+//! one process for a self-contained demo.
+
+use lshbloom::config::PipelineConfig;
+use lshbloom::corpus::stream::StreamSpec;
+use lshbloom::service::{DedupClient, DedupServer};
+
+fn main() {
+    let cfg = PipelineConfig {
+        threshold: 0.5,
+        num_perms: 256,
+        p_effective: 1e-10,
+        expected_docs: 100_000,
+        blocked_bloom: true, // §Perf: fast inserts for a live service
+        ..Default::default()
+    };
+    let server = DedupServer::bind("127.0.0.1:0", &cfg).expect("bind");
+    let addr = server.local_addr().unwrap().to_string();
+    println!("service on {addr}");
+    let server_thread = std::thread::spawn(move || server.serve().expect("serve"));
+
+    // Three ingestion workers, each feeding a slice of the same stream
+    // (with overlap, as re-scraped content produces).
+    let mut workers = Vec::new();
+    for w in 0..3u64 {
+        let addr = addr.clone();
+        workers.push(std::thread::spawn(move || {
+            let mut client = DedupClient::connect(&addr).expect("connect");
+            let spec = StreamSpec { dup_rate: 0.3, ..StreamSpec::pes2o_sim(7, 1200) };
+            let mut dups = 0u64;
+            // Overlapping windows: worker w takes docs [w*300, w*300+600).
+            for ld in spec.stream().skip((w * 300) as usize).take(600) {
+                if client.check(&ld.doc.text).expect("check") {
+                    dups += 1;
+                }
+            }
+            (w, dups)
+        }));
+    }
+    for h in workers {
+        let (w, dups) = h.join().unwrap();
+        println!("worker {w}: {dups} duplicates flagged");
+    }
+
+    let mut client = DedupClient::connect(&addr).unwrap();
+    let (docs, dups, disk) = client.stats().unwrap();
+    println!("\nshared index: {docs} docs, {dups} duplicates, {disk} bytes");
+    assert_eq!(docs, 1800);
+    // Overlapping windows guarantee plenty of cross-worker duplicates.
+    assert!(dups > 400, "expected cross-worker duplicates, got {dups}");
+    client.shutdown().unwrap();
+    server_thread.join().unwrap();
+    println!("ok");
+}

@@ -1,0 +1,119 @@
+//! End-to-end validation driver (recorded in EXPERIMENTS.md).
+//!
+//! ```bash
+//! cargo run --release --example e2e_pipeline            # 200k docs
+//! LSHBLOOM_E2E_DOCS=20000 cargo run --release --example e2e_pipeline
+//! ```
+//!
+//! Exercises the *full three-layer stack* on a peS2o-sim workload:
+//!
+//! 1. Layer 1+2: the AOT-compiled Pallas/JAX artifacts computing MinHash
+//!    band hashes, executed from rust via PJRT (`--backend xla` path).
+//! 2. Layer 3: the streaming coordinator (parallel workers, bounded
+//!    channels, sequential Bloom-index stage).
+//! 3. The MinHashLSH baseline on the identical stream — reproducing the
+//!    paper's headline comparison (throughput ratio + index size ratio)
+//!    at local scale, plus fidelity vs ground-truth labels.
+
+use lshbloom::config::PipelineConfig;
+use lshbloom::corpus::stream::StreamSpec;
+use lshbloom::eval::Confusion;
+use lshbloom::methods::{MethodKind, MethodSpec};
+use lshbloom::minhash::PermFamily;
+use lshbloom::pipeline::{run_stream, PipelineOptions, RunStats};
+use lshbloom::report::table::{bytes, f, Table};
+
+fn main() {
+    let docs: u64 = std::env::var("LSHBLOOM_E2E_DOCS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200_000);
+    let spec = StreamSpec::pes2o_sim(0xE2E, docs);
+    println!("e2e: {} docs of peS2o-sim (dup rate {})", docs, spec.dup_rate);
+
+    let labels: Vec<bool> = spec.stream().map(|ld| ld.is_duplicate()).collect();
+    let sample: Vec<lshbloom::corpus::Doc> =
+        spec.stream().take(500).map(|ld| ld.doc).collect();
+
+    let cfg = PipelineConfig {
+        threshold: 0.5,
+        num_perms: 256,
+        p_effective: 1e-10,
+        expected_docs: docs,
+        artifacts_dir: "artifacts".into(),
+        ..Default::default()
+    };
+
+    let mut rows: Vec<(String, RunStats)> = Vec::new();
+
+    // --- LSHBloom, XLA backend (full three-layer stack). ---
+    match lshbloom::runtime::lshbloom_method_xla(&cfg) {
+        Ok(mut xla) => {
+            let stats = run_stream(
+                &mut xla,
+                spec.stream().map(|ld| ld.doc),
+                PipelineOptions::from_config(&cfg),
+            );
+            rows.push(("lshbloom (xla artifacts)".into(), stats));
+        }
+        Err(e) => {
+            eprintln!("xla backend unavailable ({e}); run `make artifacts` — continuing");
+        }
+    }
+
+    // --- LSHBloom, native backend. ---
+    let mut native =
+        lshbloom::methods::lshbloom::lshbloom_method(&cfg, PermFamily::Mix64);
+    let stats = run_stream(
+        &mut native,
+        spec.stream().map(|ld| ld.doc),
+        PipelineOptions::from_config(&cfg),
+    );
+    rows.push(("lshbloom (native)".into(), stats));
+
+    // --- MinHashLSH baseline. ---
+    let mut baseline = MethodSpec::best(MethodKind::MinHashLsh, docs).build(&sample);
+    let stats = run_stream(
+        &mut baseline,
+        spec.stream().map(|ld| ld.doc),
+        PipelineOptions::from_config(&cfg),
+    );
+    rows.push(("minhashlsh (baseline)".into(), stats));
+
+    // --- Report. ---
+    let mut t = Table::new(
+        "end-to-end results",
+        &["system", "docs/s", "wall (s)", "index disk", "dups found", "precision", "recall", "F1"],
+    );
+    for (name, stats) in &rows {
+        let c = Confusion::from_verdicts(&stats.verdicts, &labels);
+        t.row_disp(&[
+            name.clone(),
+            format!("{:.0}", stats.throughput()),
+            f(stats.times.wall.as_secs_f64(), 1),
+            bytes(stats.disk_bytes),
+            stats.duplicates.to_string(),
+            f(c.precision(), 4),
+            f(c.recall(), 4),
+            f(c.f1(), 4),
+        ]);
+    }
+    t.print();
+
+    // Headline ratios (paper: 12x throughput, 18x disk on peS2o).
+    let native_stats = &rows.iter().find(|(n, _)| n.contains("native")).unwrap().1;
+    let base_stats = &rows.iter().find(|(n, _)| n.contains("baseline")).unwrap().1;
+    let speedup = base_stats.times.wall.as_secs_f64() / native_stats.times.wall.as_secs_f64();
+    let disk_adv = base_stats.disk_bytes as f64 / native_stats.disk_bytes as f64;
+    println!("\nheadline: LSHBloom vs MinHashLSH — {speedup:.1}x wall-clock, {disk_adv:.1}x disk");
+
+    // Verdict agreement between XLA and native paths must be exact.
+    if rows.len() == 3 {
+        assert_eq!(
+            rows[0].1.verdicts, rows[1].1.verdicts,
+            "XLA and native verdicts must be identical"
+        );
+        println!("xla/native verdict agreement: exact ({} docs)", docs);
+    }
+    println!("ok");
+}

@@ -1,0 +1,63 @@
+//! Quickstart: 60 seconds with the LSHBloom public API.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Builds a small labeled corpus, deduplicates it with LSHBloom through
+//! the parallel pipeline, and prints fidelity + resource numbers.
+
+use lshbloom::config::PipelineConfig;
+use lshbloom::corpus::{DatasetSpec, LabeledCorpus};
+use lshbloom::eval::Confusion;
+use lshbloom::methods::lshbloom::lshbloom_method;
+use lshbloom::minhash::PermFamily;
+use lshbloom::pipeline::{run_stream, PipelineOptions};
+use lshbloom::report::table::{bytes, f, Table};
+
+fn main() {
+    // 1. A corpus with ground-truth duplicate labels: 5k docs, 40%
+    //    near-duplicates (parser noise + truncations, §5.1.4 style).
+    let corpus = LabeledCorpus::build(DatasetSpec::testing(2024, 5_000, 0.4));
+    println!(
+        "corpus: {} docs, {} labeled duplicates",
+        corpus.docs.len(),
+        corpus.num_duplicates()
+    );
+
+    // 2. Configure LSHBloom: Jaccard threshold 0.5, 256 permutations
+    //    (Table 1 best settings), index-wide false-positive bound 1e-10.
+    let cfg = PipelineConfig {
+        threshold: 0.5,
+        num_perms: 256,
+        p_effective: 1e-10,
+        expected_docs: corpus.docs.len() as u64,
+        ..Default::default()
+    };
+    let mut method = lshbloom_method(&cfg, PermFamily::Mix64);
+
+    // 3. Run the streaming pipeline (parallel MinHash workers, sequential
+    //    Bloom index stage).
+    let stats = run_stream(
+        &mut method,
+        corpus.docs.iter().map(|ld| ld.doc.clone()),
+        PipelineOptions::default(),
+    );
+
+    // 4. Score against the labels.
+    let labels: Vec<bool> = corpus.docs.iter().map(|ld| ld.is_duplicate()).collect();
+    let c = Confusion::from_verdicts(&stats.verdicts, &labels);
+
+    let mut t = Table::new("LSHBloom quickstart", &["metric", "value"]);
+    t.row_disp(&["documents".to_string(), stats.docs.to_string()]);
+    t.row_disp(&["flagged duplicates".to_string(), stats.duplicates.to_string()]);
+    t.row_disp(&["precision".to_string(), f(c.precision(), 4)]);
+    t.row_disp(&["recall".to_string(), f(c.recall(), 4)]);
+    t.row_disp(&["F1".to_string(), f(c.f1(), 4)]);
+    t.row_disp(&["throughput".to_string(), format!("{:.0} docs/s", stats.throughput())]);
+    t.row_disp(&["index size".to_string(), bytes(stats.disk_bytes)]);
+    t.print();
+
+    assert!(c.f1() > 0.8, "quickstart should achieve strong F1");
+    println!("ok");
+}

@@ -1,0 +1,11 @@
+"""Build-time compile package: Layer-2 JAX model + Layer-1 Pallas kernels.
+
+Nothing in this package runs at request time; `aot.py` lowers the model to
+HLO text artifacts that the rust coordinator loads through PJRT.
+"""
+
+import jax
+
+# The whole stack works on u64 token hashes / signatures; enable x64 before
+# any tracing happens anywhere in this package.
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,172 @@
+"""AOT entrypoint: lower the Layer-2 model to HLO-text artifacts.
+
+Run once at build time (``make artifacts``)::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits, per configuration in ``CONFIGS``:
+  * ``minhash_bands_B{B}_L{L}_P{P}_T{T}.hlo.txt``  (fused hot path)
+  * ``minhash_sigs_B{B}_L{L}_P{P}.hlo.txt``        (chunked-doc path, 1st half)
+  * ``band_hashes_B{B}_P{P}_T{T}.hlo.txt``         (chunked-doc path, 2nd half)
+plus ``manifest.json`` describing every artifact's static geometry and
+``golden.json`` with cross-language test vectors that pin the rust native
+backend to these kernels bit-for-bit.
+
+HLO **text** (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
+the text parser reassigns ids and round-trips cleanly.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+from .kernels.common import PAD_SENTINEL, splitmix64_stream  # noqa: E402
+from .kernels.ref import minhash_bands_ref, minhash_signatures_ref  # noqa: E402
+from .lsh_params import optimal_param  # noqa: E402
+
+# Master seed for the permutation-seed stream; rust mirrors this constant
+# (rust/src/minhash/signature.rs::PERM_MASTER_SEED).
+PERM_MASTER_SEED = 0x5348426C6F6F6D  # b"SHBloom"
+
+# (batch, max tokens per row, permutations, similarity threshold)
+# - the "main" config is the pipeline default (T=0.5, P=256, Table 1);
+# - the "tune" config covers the paper's T=0.8/P=128 example (9 bands);
+# - the "test" config is tiny so runtime unit tests compile fast.
+CONFIGS = [
+    {"name": "main", "B": 64, "L": 512, "P": 256, "T": 0.5},
+    {"name": "tune", "B": 64, "L": 512, "P": 128, "T": 0.8},
+    {"name": "test", "B": 8, "L": 128, "P": 128, "T": 0.5},
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_config(cfg, out_dir):
+    num_docs, length, num_perms, threshold = cfg["B"], cfg["L"], cfg["P"], cfg["T"]
+    num_bands, rows_per_band = optimal_param(threshold, num_perms)
+
+    tok_spec = jax.ShapeDtypeStruct((num_docs, length), jnp.uint64)
+    seed_spec = jax.ShapeDtypeStruct((num_perms,), jnp.uint64)
+    sig_spec = jax.ShapeDtypeStruct((num_docs, num_perms), jnp.uint64)
+
+    entries = []
+
+    fused = jax.jit(model.fused_fn(num_bands, rows_per_band))
+    name = f"minhash_bands_B{num_docs}_L{length}_P{num_perms}_T{threshold}"
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(fused.lower(tok_spec, seed_spec)))
+    entries.append(
+        {
+            "kind": "minhash_bands",
+            "file": os.path.basename(path),
+            "B": num_docs,
+            "L": length,
+            "P": num_perms,
+            "threshold": threshold,
+            "num_bands": num_bands,
+            "rows_per_band": rows_per_band,
+        }
+    )
+
+    sigs = jax.jit(model.minhash_signatures)
+    name = f"minhash_sigs_B{num_docs}_L{length}_P{num_perms}"
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(sigs.lower(tok_spec, seed_spec)))
+    entries.append(
+        {
+            "kind": "minhash_sigs",
+            "file": os.path.basename(path),
+            "B": num_docs,
+            "L": length,
+            "P": num_perms,
+        }
+    )
+
+    bands = jax.jit(
+        lambda s: model.band_hashes(
+            s, num_bands=num_bands, rows_per_band=rows_per_band
+        )
+    )
+    name = f"band_hashes_B{num_docs}_P{num_perms}_T{threshold}"
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(bands.lower(sig_spec)))
+    entries.append(
+        {
+            "kind": "band_hashes",
+            "file": os.path.basename(path),
+            "B": num_docs,
+            "P": num_perms,
+            "threshold": threshold,
+            "num_bands": num_bands,
+            "rows_per_band": rows_per_band,
+        }
+    )
+    return entries
+
+
+def golden_vectors():
+    """Small deterministic vectors pinning python<->rust equivalence."""
+    num_docs, length, num_perms = 4, 16, 8
+    num_bands, rows_per_band = 4, 2
+    seeds = splitmix64_stream(PERM_MASTER_SEED, num_perms)
+    # Deterministic token hashes, including padded rows.
+    toks = splitmix64_stream(0xC0FFEE, num_docs * length).reshape(num_docs, length)
+    toks = toks.at[1, 10:].set(jnp.uint64(PAD_SENTINEL))  # partially padded row
+    toks = toks.at[3, :].set(jnp.uint64(PAD_SENTINEL))  # fully padded row
+    toks = toks.at[2, :].set(toks[0, :])  # duplicate of row 0
+    sigs = minhash_signatures_ref(toks, seeds)
+    bands = minhash_bands_ref(toks, seeds, num_bands, rows_per_band)
+    return {
+        "perm_master_seed": str(PERM_MASTER_SEED),
+        "B": num_docs,
+        "L": length,
+        "P": num_perms,
+        "num_bands": num_bands,
+        "rows_per_band": rows_per_band,
+        "seeds": [str(int(x)) for x in seeds],
+        "tokens": [[str(int(x)) for x in row] for row in toks],
+        "signatures": [[str(int(x)) for x in row] for row in sigs],
+        "band_hashes": [[str(int(x)) for x in row] for row in bands],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"configs": []}
+    for cfg in CONFIGS:
+        entries = lower_config(cfg, args.out_dir)
+        manifest["configs"].append({"name": cfg["name"], "artifacts": entries})
+        print(f"lowered config {cfg['name']}: {[e['file'] for e in entries]}")
+
+    with open(os.path.join(args.out_dir, "golden.json"), "w") as f:
+        json.dump(golden_vectors(), f, indent=1)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest + golden vectors to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

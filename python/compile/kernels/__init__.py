@@ -1,0 +1,7 @@
+"""Layer-1 Pallas kernels for LSHBloom's MinHash hot path.
+
+Exports:
+  minhash.minhash_signatures  -- pallas kernel: token hashes -> signatures
+  bandhash.band_hashes        -- pallas kernel: signatures -> band sum-hashes
+  ref                         -- pure-jnp oracles used by pytest
+"""

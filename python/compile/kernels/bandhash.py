@@ -1,0 +1,54 @@
+"""Layer-1 Pallas kernel: band sum-hashes (paper §4.1).
+
+Reduces each band of ``rows_per_band`` MinHash values to a single u64 via
+a wrapping sum — i.e. ``(sum_i h_i) mod N`` with ``N = 2^64``, which makes
+the modulo free and the band-collision term ``b/N`` negligible (§4.3).
+
+This is the operation §4.4.1 of the paper ports from Python bigints to
+fixed-precision native arithmetic; here it is data-parallel over the
+whole signature batch.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_B = 8
+
+
+def _bandhash_kernel(sigs_ref, out_ref, *, num_bands: int, rows_per_band: int):
+    sigs = sigs_ref[...]  # (BLOCK_B, P)
+    block_b = sigs.shape[0]
+    used = sigs[:, : num_bands * rows_per_band]
+    grouped = used.reshape(block_b, num_bands, rows_per_band)
+    out_ref[...] = grouped.sum(axis=2, dtype=jnp.uint64)
+
+
+def band_hashes(sigs, num_bands: int, rows_per_band: int, *, block_b: int = BLOCK_B):
+    """Pallas band hashes: u64[B, P] -> u64[B, num_bands].
+
+    Requires ``num_bands * rows_per_band <= P`` (datasketch convention:
+    leftover signature rows are unused) and B a multiple of ``block_b``.
+    """
+    sigs = jnp.asarray(sigs, dtype=jnp.uint64)
+    num_docs, num_perms = sigs.shape
+    if num_bands * rows_per_band > num_perms:
+        raise ValueError(
+            f"b*r = {num_bands}*{rows_per_band} exceeds P={num_perms}"
+        )
+    if num_docs % block_b:
+        raise ValueError(f"B={num_docs} not a multiple of block_b={block_b}")
+
+    grid = (num_docs // block_b,)
+    return pl.pallas_call(
+        functools.partial(
+            _bandhash_kernel, num_bands=num_bands, rows_per_band=rows_per_band
+        ),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_b, num_perms), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_b, num_bands), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_docs, num_bands), jnp.uint64),
+        interpret=True,
+    )(sigs)

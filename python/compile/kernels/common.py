@@ -1,0 +1,49 @@
+"""Shared constants + the mix64 permutation family.
+
+The permutation family must match `rust/src/hash/mix64.rs` bit-for-bit:
+``perm_i(h) = mix64(h XOR seed_i)`` where ``mix64`` is the splitmix64
+finalizer (Vigna).  All arithmetic is wrapping u64, which both XLA and
+rust implement natively (see DESIGN.md "Deviation: permutation family"
+for why the datasketch `(a*h+b) mod 2^61-1` family is not XLA-expressible
+without 128-bit intermediates).
+"""
+
+import jax.numpy as jnp
+
+# splitmix64 finalizer multipliers (Vigna / Stafford mix13).
+MIX64_M1 = 0xBF58476D1CE4E5B9
+MIX64_M2 = 0x94D049BB133111EB
+
+# Token rows are padded to the static length L with this sentinel; the
+# kernel maps sentinel lanes to u64::MAX so they never win the min-reduce.
+PAD_SENTINEL = 0xFFFF_FFFF_FFFF_FFFF
+
+U64_MAX = 0xFFFF_FFFF_FFFF_FFFF
+
+
+def mix64(z):
+    """splitmix64 finalizer over a u64 array (wrapping arithmetic)."""
+    z = jnp.asarray(z, dtype=jnp.uint64)
+    z = (z ^ (z >> jnp.uint64(30))) * jnp.uint64(MIX64_M1)
+    z = (z ^ (z >> jnp.uint64(27))) * jnp.uint64(MIX64_M2)
+    return z ^ (z >> jnp.uint64(31))
+
+
+def splitmix64_stream(seed: int, n: int):
+    """First ``n`` outputs of the splitmix64 generator seeded with ``seed``.
+
+    Matches ``rust/src/rng.rs::SplitMix64`` exactly: state advances by the
+    golden-gamma constant and each output is the finalizer of the new state.
+    Used to derive the per-permutation seeds on both sides of the bridge.
+    """
+    golden = 0x9E3779B97F4A7C15
+    out = []
+    state = seed & U64_MAX
+    for _ in range(n):
+        state = (state + golden) & U64_MAX
+        z = state
+        z = ((z ^ (z >> 30)) * MIX64_M1) & U64_MAX
+        z = ((z ^ (z >> 27)) * MIX64_M2) & U64_MAX
+        z = z ^ (z >> 31)
+        out.append(z)
+    return jnp.array(out, dtype=jnp.uint64)

@@ -1,0 +1,100 @@
+"""Layer-1 Pallas kernel: MinHash signatures.
+
+Computes ``sig[d, p] = min over valid tokens t of mix64(tokens[d, t] ^ seeds[p])``
+for a block-tiled grid over documents and permutations.
+
+TPU-shaped design (see DESIGN.md §Hardware-Adaptation):
+
+* Output is tiled ``(BLOCK_B, BLOCK_P)``; each program instance owns one
+  tile of the signature matrix.
+* The token axis is *streamed*: an inner ``fori_loop`` walks L in
+  ``CHUNK_L``-sized slabs so the live intermediate is
+  ``(BLOCK_B, BLOCK_P, CHUNK_L)`` — with the defaults (8, 128, 128) that is
+  1 MiB of u64, comfortably inside VMEM, instead of materializing the full
+  ``(B, P, L)`` cube like the reference oracle.
+* Integer-only VPU work; the MXU is structurally idle (no matmul).
+
+``interpret=True`` is mandatory on this CPU testbed: real-TPU lowering
+emits a Mosaic custom-call that the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import MIX64_M1, MIX64_M2, PAD_SENTINEL, U64_MAX
+
+# Default tile sizes; BLOCK_P is the lane-dim multiple of the VPU (128),
+# BLOCK_B trades grid size against VMEM (8*128 u64 accumulator = 8 KiB).
+BLOCK_B = 8
+BLOCK_P = 128
+CHUNK_L = 128
+
+
+def _mix64_u64(z):
+    z = (z ^ (z >> jnp.uint64(30))) * jnp.uint64(MIX64_M1)
+    z = (z ^ (z >> jnp.uint64(27))) * jnp.uint64(MIX64_M2)
+    return z ^ (z >> jnp.uint64(31))
+
+
+def _minhash_kernel(tokens_ref, seeds_ref, out_ref, *, chunk_l: int):
+    """One (BLOCK_B, BLOCK_P) signature tile; streams tokens in chunks."""
+    toks = tokens_ref[...]  # (BLOCK_B, L)
+    seeds = seeds_ref[...]  # (BLOCK_P,)
+    block_b, length = toks.shape
+    block_p = seeds.shape[0]
+    num_chunks = length // chunk_l  # L is padded to a CHUNK_L multiple
+
+    def body(c, acc):
+        sl = jax.lax.dynamic_slice(toks, (0, c * chunk_l), (block_b, chunk_l))
+        # (BLOCK_B, 1, CHUNK_L) ^ (1, BLOCK_P, 1) -> (BLOCK_B, BLOCK_P, CHUNK_L)
+        mixed = _mix64_u64(sl[:, None, :] ^ seeds[None, :, None])
+        valid = sl[:, None, :] != jnp.uint64(PAD_SENTINEL)
+        masked = jnp.where(valid, mixed, jnp.uint64(U64_MAX))
+        return jnp.minimum(acc, masked.min(axis=2))
+
+    init = jnp.full((block_b, block_p), U64_MAX, dtype=jnp.uint64)
+    out_ref[...] = jax.lax.fori_loop(0, num_chunks, body, init)
+
+
+def minhash_signatures(
+    tokens,
+    seeds,
+    *,
+    block_b: int = BLOCK_B,
+    block_p: int = BLOCK_P,
+    chunk_l: int = CHUNK_L,
+):
+    """Pallas MinHash signatures: u64[B, L] x u64[P] -> u64[B, P].
+
+    B must be a multiple of ``block_b``, P of ``block_p``, and L of
+    ``chunk_l`` (the rust marshaller pads all three with PAD_SENTINEL /
+    duplicate seeds as needed).
+    """
+    tokens = jnp.asarray(tokens, dtype=jnp.uint64)
+    seeds = jnp.asarray(seeds, dtype=jnp.uint64)
+    num_docs, length = tokens.shape
+    num_perms = seeds.shape[0]
+    if num_docs % block_b:
+        raise ValueError(f"B={num_docs} not a multiple of block_b={block_b}")
+    if num_perms % block_p:
+        raise ValueError(f"P={num_perms} not a multiple of block_p={block_p}")
+    if length % chunk_l:
+        raise ValueError(f"L={length} not a multiple of chunk_l={chunk_l}")
+
+    grid = (num_docs // block_b, num_perms // block_p)
+    return pl.pallas_call(
+        functools.partial(_minhash_kernel, chunk_l=chunk_l),
+        grid=grid,
+        in_specs=[
+            # Each tile sees its document rows and the full token axis.
+            pl.BlockSpec((block_b, length), lambda i, j: (i, 0)),
+            # And its slice of the permutation seeds.
+            pl.BlockSpec((block_p,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_p), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((num_docs, num_perms), jnp.uint64),
+        interpret=True,
+    )(tokens, seeds)

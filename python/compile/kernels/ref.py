@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the "obviously correct" reference implementations that pytest
+compares the kernels against.  They also define the semantics that the
+native rust backend (`rust/src/minhash/signature.rs`) mirrors bit-for-bit
+via golden vectors (`artifacts/golden.json`).
+"""
+
+import jax.numpy as jnp
+
+from .common import PAD_SENTINEL, U64_MAX, mix64
+
+
+def minhash_signatures_ref(tokens, seeds):
+    """MinHash signature matrix.
+
+    Args:
+      tokens: u64[B, L] token hashes, padded with ``PAD_SENTINEL``.
+      seeds:  u64[P] per-permutation seeds.
+
+    Returns:
+      u64[B, P]: ``sig[d, p] = min over valid tokens t of mix64(t ^ seeds[p])``.
+      A row with no valid token yields ``U64_MAX``.
+    """
+    tokens = jnp.asarray(tokens, dtype=jnp.uint64)
+    seeds = jnp.asarray(seeds, dtype=jnp.uint64)
+    # (B, 1, L) ^ (1, P, 1) -> (B, P, L)
+    mixed = mix64(tokens[:, None, :] ^ seeds[None, :, None])
+    valid = tokens[:, None, :] != jnp.uint64(PAD_SENTINEL)
+    masked = jnp.where(valid, mixed, jnp.uint64(U64_MAX))
+    return masked.min(axis=2)
+
+
+def band_hashes_ref(sigs, num_bands, rows_per_band):
+    """Band sum-hashes (paper §4.1): ``h(band) = (sum_i sig_i) mod 2^64``.
+
+    Uses only the first ``num_bands * rows_per_band`` signature rows (the
+    datasketch convention when b*r < P).
+
+    Args:
+      sigs: u64[B, P] signature matrix.
+
+    Returns:
+      u64[B, num_bands] wrapping sums per band.
+    """
+    sigs = jnp.asarray(sigs, dtype=jnp.uint64)
+    used = sigs[:, : num_bands * rows_per_band]
+    grouped = used.reshape(sigs.shape[0], num_bands, rows_per_band)
+    # uint64 addition wraps in XLA == sum mod 2^64 (N = 2^64 in §4.1).
+    return grouped.sum(axis=2, dtype=jnp.uint64)
+
+
+def minhash_bands_ref(tokens, seeds, num_bands, rows_per_band):
+    """Fused oracle: token hashes -> band hashes."""
+    return band_hashes_ref(
+        minhash_signatures_ref(tokens, seeds), num_bands, rows_per_band
+    )

@@ -1,0 +1,56 @@
+"""Optimal LSH band parameters (b, r) — datasketch/Zhu-et-al. procedure.
+
+Minimizes ``w_fp * FP_lsh(b, r) + w_fn * FN_lsh(b, r)`` over all integer
+(b, r) with ``b * r <= num_perm``, where FP/FN are the paper's Eqs. (1)/(2)
+evaluated by rectangle-rule integration with dx = 0.001.
+
+This module MUST stay in lock-step with ``rust/src/minhash/params.rs``:
+both sides compute (b, r) independently (python at AOT time to fix the
+band-hash artifact's static shape, rust at run time) and the golden
+manifest pins them against each other.
+"""
+
+_INTEGRATION_DX = 0.001
+
+
+def _integrate(f, a: float, b: float) -> float:
+    """Midpoint rectangle rule, dx=0.001 (matches datasketch._integration)."""
+    area = 0.0
+    x = a
+    while x < b:
+        area += f(x + 0.5 * _INTEGRATION_DX) * _INTEGRATION_DX
+        x += _INTEGRATION_DX
+    return area
+
+
+def false_positive_probability(threshold: float, b: int, r: int) -> float:
+    """Paper Eq. (1): integral over [0, T] of 1 - (1 - t^r)^b."""
+    return _integrate(lambda t: 1.0 - (1.0 - t**r) ** b, 0.0, threshold)
+
+
+def false_negative_probability(threshold: float, b: int, r: int) -> float:
+    """Paper Eq. (2): integral over [T, 1] of (1 - t^r)^b."""
+    return _integrate(lambda t: (1.0 - t**r) ** b, threshold, 1.0)
+
+
+def optimal_param(
+    threshold: float,
+    num_perm: int,
+    fp_weight: float = 0.5,
+    fn_weight: float = 0.5,
+):
+    """Best (b, r) minimizing the weighted FP/FN error.
+
+    Returns:
+      (b, r): the argmin over b in [1, num_perm], r in [1, num_perm // b].
+    """
+    best = (float("inf"), 1, 1)
+    for b in range(1, num_perm + 1):
+        max_r = num_perm // b
+        for r in range(1, max_r + 1):
+            err = fp_weight * false_positive_probability(
+                threshold, b, r
+            ) + fn_weight * false_negative_probability(threshold, b, r)
+            if err < best[0]:
+                best = (err, b, r)
+    return best[1], best[2]

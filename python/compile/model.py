@@ -1,0 +1,42 @@
+"""Layer-2 JAX model: the batched MinHash → band-hash compute graph.
+
+This is the unit the rust coordinator executes per document batch on its
+ingest path: token hashes in, band hashes out.  It composes the two
+Layer-1 Pallas kernels so that a single fused HLO module is produced at
+AOT time.
+
+Variants:
+  * ``minhash_bands``      — fused tokens -> band hashes (the hot path).
+  * ``minhash_signatures`` — tokens -> full signature matrix (used when the
+    coordinator min-combines chunked long documents before band hashing).
+  * ``band_hashes``        — signatures -> band hashes (second half of the
+    chunked path).
+"""
+
+import functools
+
+from .kernels import bandhash as bandhash_kernel
+from .kernels import minhash as minhash_kernel
+
+
+def minhash_signatures(tokens, seeds):
+    """u64[B, L] x u64[P] -> u64[B, P] (Pallas kernel, tiled)."""
+    return minhash_kernel.minhash_signatures(tokens, seeds)
+
+
+def band_hashes(sigs, *, num_bands: int, rows_per_band: int):
+    """u64[B, P] -> u64[B, b] (Pallas kernel)."""
+    return bandhash_kernel.band_hashes(sigs, num_bands, rows_per_band)
+
+
+def minhash_bands(tokens, seeds, *, num_bands: int, rows_per_band: int):
+    """Fused hot path: u64[B, L] x u64[P] -> u64[B, b]."""
+    sigs = minhash_signatures(tokens, seeds)
+    return band_hashes(sigs, num_bands=num_bands, rows_per_band=rows_per_band)
+
+
+def fused_fn(num_bands: int, rows_per_band: int):
+    """A jit-lowerable callable for AOT export (static band geometry)."""
+    return functools.partial(
+        minhash_bands, num_bands=num_bands, rows_per_band=rows_per_band
+    )

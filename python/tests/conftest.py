@@ -1,0 +1,11 @@
+"""Shared pytest fixtures for the compile-path test suite."""
+
+import os
+import sys
+
+# Make `compile` importable when pytest runs from python/ or the repo root.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,49 @@
+"""Layer-1 Pallas bandhash kernel vs the pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bandhash, ref
+from compile.kernels.common import splitmix64_stream
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b_blocks=st.integers(1, 4),
+    p=st.sampled_from([128, 256]),
+    geometry=st.sampled_from([(9, 13), (25, 5), (42, 6), (1, 1), (4, 32)]),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_bandhash_sweep(b_blocks, p, geometry, seed):
+    num_bands, rows = geometry
+    if num_bands * rows > p:
+        return  # geometry must fit P
+    B = 8 * b_blocks
+    sigs = splitmix64_stream(seed, B * p).reshape(B, p)
+    got = bandhash.band_hashes(sigs, num_bands, rows)
+    want = ref.band_hashes_ref(sigs, num_bands, rows)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_wrapping_sums_explicitly():
+    # Two values that overflow u64: (2^64-1) + 1 wraps to 0.
+    sigs = jnp.array([[jnp.uint64(2**64 - 1), jnp.uint64(1)]] * 8, dtype=jnp.uint64)
+    got = np.asarray(bandhash.band_hashes(sigs, 1, 2))
+    assert (got == 0).all()
+
+
+def test_leftover_rows_are_ignored():
+    # b*r < P: trailing signature rows must not affect band hashes.
+    sigs = splitmix64_stream(5, 8 * 128).reshape(8, 128)
+    tweaked = sigs.at[:, 125:].set(jnp.uint64(0))
+    a = np.asarray(bandhash.band_hashes(sigs, 25, 5))  # uses rows 0..125
+    b = np.asarray(bandhash.band_hashes(tweaked, 25, 5))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_rejects_oversized_geometry():
+    sigs = splitmix64_stream(1, 8 * 128).reshape(8, 128)
+    with pytest.raises(ValueError):
+        bandhash.band_hashes(sigs, 26, 5)  # 130 > 128

@@ -1,0 +1,117 @@
+"""Layer-1 Pallas minhash kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and data; every case asserts exact (integer)
+equality — there is no tolerance in this pipeline, signatures must be
+bit-identical across kernel, oracle, and the rust backends.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import minhash, ref
+from compile.kernels.common import PAD_SENTINEL, U64_MAX, mix64, splitmix64_stream
+
+
+def make_tokens(rows, cols, seed, pad_tail=None):
+    toks = splitmix64_stream(seed, rows * cols).reshape(rows, cols)
+    if pad_tail:
+        for row, keep in pad_tail:
+            toks = toks.at[row, keep:].set(jnp.uint64(PAD_SENTINEL))
+    return toks
+
+
+class TestMix64:
+    def test_matches_rust_reference_vector(self):
+        # Pinned against rust's splitmix64 tests (seed=0 stream).
+        s = splitmix64_stream(0, 3)
+        assert int(s[0]) == 0xE220A8397B1DCDAF
+        assert int(s[1]) == 0x6E789E6AA1B965F4
+        assert int(s[2]) == 0x06C45D188009454F
+
+    def test_mix64_is_deterministic_and_nontrivial(self):
+        xs = jnp.arange(16, dtype=jnp.uint64)
+        a = mix64(xs)
+        b = mix64(xs)
+        assert (a == b).all()
+        assert len(set(int(v) for v in a)) == 16
+
+
+class TestMinhashKernelVsRef:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b_blocks=st.integers(1, 3),
+        p_blocks=st.integers(1, 2),
+        l_chunks=st.integers(1, 3),
+        seed=st.integers(0, 2**32 - 1),
+    )
+    def test_shapes_sweep_exact_equality(self, b_blocks, p_blocks, l_chunks, seed):
+        B, P, L = 8 * b_blocks, 128 * p_blocks, 128 * l_chunks
+        toks = make_tokens(B, L, seed)
+        seeds = splitmix64_stream(seed ^ 0xABCDEF, P)
+        got = minhash.minhash_signatures(toks, seeds)
+        want = ref.minhash_signatures_ref(toks, seeds)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        seed=st.integers(0, 2**32 - 1),
+        pad_rows=st.lists(
+            st.tuples(st.integers(0, 7), st.integers(0, 128)), max_size=4
+        ),
+    )
+    def test_padding_sweep(self, seed, pad_rows):
+        toks = make_tokens(8, 128, seed, pad_tail=pad_rows)
+        seeds = splitmix64_stream(seed + 1, 128)
+        got = minhash.minhash_signatures(toks, seeds)
+        want = ref.minhash_signatures_ref(toks, seeds)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_fully_padded_row_yields_u64max(self):
+        toks = jnp.full((8, 128), PAD_SENTINEL, dtype=jnp.uint64)
+        seeds = splitmix64_stream(7, 128)
+        got = minhash.minhash_signatures(toks, seeds)
+        assert (np.asarray(got) == np.uint64(U64_MAX)).all()
+
+    def test_duplicate_rows_get_identical_signatures(self):
+        toks = make_tokens(8, 128, 99)
+        toks = toks.at[3].set(toks[0])
+        seeds = splitmix64_stream(5, 128)
+        got = np.asarray(minhash.minhash_signatures(toks, seeds))
+        np.testing.assert_array_equal(got[0], got[3])
+
+    def test_signature_is_permutation_invariant_over_tokens(self):
+        # MinHash is a set operation: shuffling the token axis must not
+        # change signatures.
+        toks = make_tokens(8, 128, 31)
+        perm = np.random.RandomState(0).permutation(128)
+        shuffled = jnp.asarray(np.asarray(toks)[:, perm])
+        seeds = splitmix64_stream(11, 128)
+        a = minhash.minhash_signatures(toks, seeds)
+        b = minhash.minhash_signatures(shuffled, seeds)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_rejects_bad_shapes(self):
+        seeds = splitmix64_stream(1, 128)
+        with pytest.raises(ValueError):
+            minhash.minhash_signatures(jnp.zeros((7, 128), jnp.uint64), seeds)
+        with pytest.raises(ValueError):
+            minhash.minhash_signatures(jnp.zeros((8, 100), jnp.uint64), seeds)
+        with pytest.raises(ValueError):
+            minhash.minhash_signatures(
+                jnp.zeros((8, 128), jnp.uint64), splitmix64_stream(1, 100)
+            )
+
+    def test_block_shape_ablation_identical_results(self):
+        # Different tile geometries must not change the numerics.
+        toks = make_tokens(16, 256, 77)
+        seeds = splitmix64_stream(13, 128)
+        base = np.asarray(minhash.minhash_signatures(toks, seeds))
+        for block_b, chunk_l in [(8, 128), (16, 256), (8, 256), (16, 128)]:
+            alt = np.asarray(
+                minhash.minhash_signatures(
+                    toks, seeds, block_b=block_b, chunk_l=chunk_l
+                )
+            )
+            np.testing.assert_array_equal(base, alt, err_msg=f"{block_b}/{chunk_l}")

@@ -1,0 +1,100 @@
+"""Layer-2 model composition, LSH parameter optimizer, and AOT artifacts."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.common import splitmix64_stream
+from compile.lsh_params import (
+    false_negative_probability,
+    false_positive_probability,
+    optimal_param,
+)
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestLshParams:
+    def test_paper_example(self):
+        # §4.5: T=0.8, 128 perms -> nine bands (r=13).
+        assert optimal_param(0.8, 128) == (9, 13)
+
+    def test_main_config(self):
+        assert optimal_param(0.5, 256) == (42, 6)
+        assert optimal_param(0.5, 128) == (25, 5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        t=st.sampled_from([0.2, 0.4, 0.5, 0.6, 0.8]),
+        p=st.sampled_from([32, 48, 64, 128]),
+    )
+    def test_geometry_fits(self, t, p):
+        b, r = optimal_param(t, p)
+        assert 1 <= b and 1 <= r and b * r <= p
+
+    def test_integral_monotonicity(self):
+        # More bands -> FP mass up, FN mass down.
+        assert false_positive_probability(0.5, 16, 8) > false_positive_probability(0.5, 4, 8)
+        assert false_negative_probability(0.5, 16, 8) < false_negative_probability(0.5, 4, 8)
+
+
+class TestModel:
+    def test_fused_equals_composition(self):
+        toks = splitmix64_stream(3, 8 * 128).reshape(8, 128)
+        seeds = splitmix64_stream(4, 128)
+        fused = model.minhash_bands(toks, seeds, num_bands=25, rows_per_band=5)
+        sigs = model.minhash_signatures(toks, seeds)
+        bands = model.band_hashes(sigs, num_bands=25, rows_per_band=5)
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(bands))
+        want = ref.minhash_bands_ref(toks, seeds, 25, 5)
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(want))
+
+    def test_jit_lowering_shapes(self):
+        fn = jax.jit(model.fused_fn(25, 5))
+        tok_spec = jax.ShapeDtypeStruct((8, 128), jnp.uint64)
+        seed_spec = jax.ShapeDtypeStruct((128,), jnp.uint64)
+        lowered = fn.lower(tok_spec, seed_spec)
+        hlo = lowered.compiler_ir("stablehlo")
+        text = str(hlo)
+        assert "8x25" in text.replace("tensor<", ""), "output shape missing"
+
+
+class TestArtifacts:
+    def test_manifest_exists_and_is_consistent(self):
+        path = os.path.join(ARTIFACTS, "manifest.json")
+        if not os.path.exists(path):
+            import pytest
+
+            pytest.skip("artifacts not built (run `make artifacts`)")
+        with open(path) as f:
+            manifest = json.load(f)
+        for cfg in manifest["configs"]:
+            for art in cfg["artifacts"]:
+                # Every artifact file must exist and be non-trivial HLO text.
+                fp = os.path.join(ARTIFACTS, art["file"])
+                assert os.path.exists(fp), art["file"]
+                head = open(fp).read(200)
+                assert "HloModule" in head, f"{art['file']} is not HLO text"
+                # Band geometry in the manifest must match the optimizer.
+                if "num_bands" in art:
+                    b, r = optimal_param(art["threshold"], art["P"])
+                    assert (b, r) == (art["num_bands"], art["rows_per_band"])
+
+    def test_golden_vectors_reproduce(self):
+        path = os.path.join(ARTIFACTS, "golden.json")
+        if not os.path.exists(path):
+            import pytest
+
+            pytest.skip("artifacts not built (run `make artifacts`)")
+        from compile.aot import golden_vectors
+
+        with open(path) as f:
+            on_disk = json.load(f)
+        fresh = golden_vectors()
+        assert on_disk == fresh, "golden vectors drifted from the oracle"

@@ -1,0 +1,49 @@
+//! Figure 1: wall-clock breakdown (MinHash vs index ops) for conventional
+//! MinHashLSH and LSHBloom on a 10% peS2o-sim subset.
+//!
+//! Rows: rust-normalized MinHashLSH, the paper-calibrated datasketch
+//! cost simulation, and LSHBloom. CSV at reports/fig1_breakdown.csv.
+//!
+//! `cargo bench --bench fig1_breakdown`   (LSHBLOOM_BENCH_QUICK=1 to shrink)
+
+use lshbloom::eval::experiments::{fig1_breakdown, Scale};
+use lshbloom::report::table::{f, Table};
+use lshbloom::report::CsvWriter;
+use std::path::Path;
+
+fn main() {
+    let scale = Scale::from_env();
+    let rows = fig1_breakdown(scale);
+
+    let mut t = Table::new(
+        "Fig 1 — wall clock breakdown (10% subset)",
+        &["method", "minhash (s)", "index ops (s)", "other (s)", "total (s)", "index share"],
+    );
+    let mut csv = CsvWriter::create(
+        Path::new("reports/fig1_breakdown.csv"),
+        &["method", "docs", "minhash_secs", "index_secs", "other_secs", "wall_secs"],
+    )
+    .expect("csv");
+    for b in &rows {
+        t.row_disp(&[
+            b.method.clone(),
+            f(b.minhash_secs, 2),
+            f(b.index_secs, 2),
+            f(b.other_secs, 2),
+            f(b.wall_secs, 2),
+            format!("{:.0}%", 100.0 * b.index_secs / b.wall_secs.max(1e-9)),
+        ]);
+        csv.row_disp(&[
+            b.method.clone(),
+            b.docs.to_string(),
+            b.minhash_secs.to_string(),
+            b.index_secs.to_string(),
+            b.other_secs.to_string(),
+            b.wall_secs.to_string(),
+        ])
+        .unwrap();
+    }
+    csv.finish().unwrap();
+    t.print();
+    println!("(paper: index ops are >85% of datasketch MinHashLSH; LSHBloom is minhash-dominated)");
+}

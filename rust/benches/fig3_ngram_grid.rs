@@ -1,0 +1,41 @@
+//! Figure 3: F1 heatmaps for DCLM and Dolma-Ngram over
+//! (n-gram size × overlap threshold) on the tuning corpus.
+//!
+//! `cargo bench --bench fig3_ngram_grid`
+
+use lshbloom::eval::experiments::{fig3_grids, Scale};
+use lshbloom::eval::tuner::ranges;
+use lshbloom::report::{heatmap, CsvWriter};
+use std::path::Path;
+
+fn main() {
+    let scale = Scale::from_env();
+    let mut csv = CsvWriter::create(
+        Path::new("reports/fig3_ngram_grid.csv"),
+        &["method", "threshold", "ngram", "precision", "recall", "f1"],
+    )
+    .expect("csv");
+
+    for (kind, pts) in fig3_grids(scale) {
+        let rows: Vec<String> = ranges::THRESHOLDS.iter().map(|t| format!("T={t}")).collect();
+        let cols: Vec<String> = ranges::NGRAMS.iter().map(|n| format!("n={n}")).collect();
+        let mut grid = vec![vec![0.0; ranges::NGRAMS.len()]; ranges::THRESHOLDS.len()];
+        for gp in &pts {
+            let ri = ranges::THRESHOLDS.iter().position(|&t| t == gp.spec.threshold).unwrap();
+            let ci = ranges::NGRAMS.iter().position(|&n| n == gp.spec.ngram).unwrap();
+            grid[ri][ci] = gp.f1();
+            csv.row_disp(&[
+                kind.name().to_string(),
+                gp.spec.threshold.to_string(),
+                gp.spec.ngram.to_string(),
+                format!("{:.4}", gp.result.confusion.precision()),
+                format!("{:.4}", gp.result.confusion.recall()),
+                format!("{:.4}", gp.f1()),
+            ])
+            .unwrap();
+        }
+        println!("{}", heatmap(&format!("Fig 3 — {} F1", kind.name()), &rows, &cols, &grid));
+    }
+    csv.finish().unwrap();
+    println!("(paper: DCLM best at T=0.2/n=5, small n better; Dolma-Ngram weaker and flat)");
+}

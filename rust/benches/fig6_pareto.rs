@@ -1,0 +1,51 @@
+//! Figure 6: pareto plots — F1 vs runtime (a) and F1 vs disk usage (b)
+//! on the balanced 50%-duplicates testing corpus.
+//!
+//! `cargo bench --bench fig6_pareto`
+
+use lshbloom::eval::experiments::{fig6_pareto, Scale};
+use lshbloom::report::table::{bytes, f, Table};
+use lshbloom::report::{line_plot, CsvWriter, Series};
+use std::path::Path;
+
+fn main() {
+    let scale = Scale::from_env();
+    let results = fig6_pareto(scale);
+
+    let mut csv = CsvWriter::create(
+        Path::new("reports/fig6_pareto.csv"),
+        &["method", "f1", "wall_secs", "disk_bytes"],
+    )
+    .expect("csv");
+    let mut t = Table::new(
+        "Fig 6 — F1 vs resource usage (50% dup corpus)",
+        &["method", "F1", "runtime (s)", "disk"],
+    );
+    let mut rt_series = Vec::new();
+    let mut disk_series = Vec::new();
+    for r in &results {
+        t.row_disp(&[
+            r.method.clone(),
+            f(r.confusion.f1(), 4),
+            f(r.wall_secs, 2),
+            bytes(r.disk_bytes),
+        ]);
+        csv.row_disp(&[
+            r.method.clone(),
+            format!("{:.4}", r.confusion.f1()),
+            format!("{:.3}", r.wall_secs),
+            r.disk_bytes.to_string(),
+        ])
+        .unwrap();
+        rt_series.push(Series::new(r.method.clone(), vec![(r.wall_secs, r.confusion.f1())]));
+        disk_series.push(Series::new(
+            r.method.clone(),
+            vec![(r.disk_bytes as f64 / 1e6, r.confusion.f1())],
+        ));
+    }
+    csv.finish().unwrap();
+    t.print();
+    println!("{}", line_plot("Fig 6a — F1 vs runtime", "seconds", "F1", &rt_series));
+    println!("{}", line_plot("Fig 6b — F1 vs disk", "MB", "F1", &disk_series));
+    println!("(paper: MinHashLSH & LSHBloom dominate; LSHBloom at a fraction of the disk)");
+}

@@ -1,0 +1,69 @@
+//! Figure 7: wall-clock time (a) and disk usage (b) while deduplicating
+//! increasing subsets of the peS2o-sim corpus — the 12×/18× headline.
+//!
+//! `cargo bench --bench fig7_scaling`
+
+use lshbloom::eval::experiments::{fig7_scaling, Scale};
+use lshbloom::report::table::{bytes, f, Table};
+use lshbloom::report::{line_plot, CsvWriter, Series};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+fn main() {
+    let scale = Scale::from_env();
+    let fractions = [0.01, 0.02, 0.05, 0.1, 0.25, 0.5, 1.0];
+    let pts = fig7_scaling(scale, &fractions);
+
+    let mut csv = CsvWriter::create(
+        Path::new("reports/fig7_scaling.csv"),
+        &["method", "docs", "wall_secs", "disk_bytes", "duplicates"],
+    )
+    .expect("csv");
+    let mut t = Table::new("Fig 7 — scaling", &["method", "docs", "wall (s)", "disk"]);
+    let mut wall: BTreeMap<String, Vec<(f64, f64)>> = BTreeMap::new();
+    let mut disk: BTreeMap<String, Vec<(f64, f64)>> = BTreeMap::new();
+    for p in &pts {
+        t.row_disp(&[p.method.clone(), p.docs.to_string(), f(p.wall_secs, 2), bytes(p.disk_bytes)]);
+        wall.entry(p.method.clone()).or_default().push((p.docs as f64, p.wall_secs));
+        disk.entry(p.method.clone()).or_default().push((p.docs as f64, p.disk_bytes as f64 / 1e6));
+        csv.row_disp(&[
+            p.method.clone(),
+            p.docs.to_string(),
+            format!("{:.3}", p.wall_secs),
+            p.disk_bytes.to_string(),
+            p.duplicates.to_string(),
+        ])
+        .unwrap();
+    }
+    csv.finish().unwrap();
+    t.print();
+
+    let to_series = |m: &BTreeMap<String, Vec<(f64, f64)>>| -> Vec<Series> {
+        m.iter().map(|(k, v)| Series::new(k.clone(), v.clone())).collect()
+    };
+    println!("{}", line_plot("Fig 7a — wall clock vs docs", "docs", "seconds", &to_series(&wall)));
+    println!("{}", line_plot("Fig 7b — disk vs docs", "docs", "MB", &to_series(&disk)));
+
+    // Headline ratios at the largest shared size.
+    let max_docs = pts.iter().map(|p| p.docs).max().unwrap();
+    let at = |m: &str| pts.iter().find(|p| p.method == m && p.docs == max_docs);
+    if let (Some(mlsh), Some(lshb)) = (at("minhashlsh"), at("lshbloom")) {
+        println!(
+            "headline (rust-normalized) at {} docs: {:.1}x wall, {:.1}x disk",
+            max_docs,
+            mlsh.wall_secs / lshb.wall_secs,
+            mlsh.disk_bytes as f64 / lshb.disk_bytes as f64
+        );
+    }
+    let pysim_max = pts.iter().filter(|p| p.method == "minhashlsh-pysim").map(|p| p.docs).max();
+    if let Some(pd) = pysim_max {
+        let pysim = pts.iter().find(|p| p.method == "minhashlsh-pysim" && p.docs == pd).unwrap();
+        let lshb = pts.iter().find(|p| p.method == "lshbloom" && p.docs == pd).unwrap();
+        println!(
+            "headline (datasketch-calibrated) at {} docs: {:.1}x wall, {:.1}x disk (paper: 12x, 18x)",
+            pd,
+            pysim.wall_secs / lshb.wall_secs,
+            pysim.disk_bytes as f64 / lshb.disk_bytes as f64
+        );
+    }
+}

@@ -1,0 +1,100 @@
+//! Bloom filter and index-structure op latency (§4.5's throughput story):
+//! contiguous bit-array probes vs hashmap band-index inserts/queries.
+//!
+//! `cargo bench --bench micro_bloom`
+
+use lshbloom::bloom::BloomFilter;
+use lshbloom::index::lshbloom::{LshBloomConfig, LshBloomIndex};
+use lshbloom::index::minhashlsh::MinHashLshIndex;
+use lshbloom::index::BandIndex;
+use lshbloom::minhash::LshParams;
+use lshbloom::perf::bench::Bencher;
+use lshbloom::rng::Xoshiro256pp;
+
+fn main() {
+    println!("# index-structure op latency: bloom bit arrays vs hashmap band index\n");
+    let mut rng = Xoshiro256pp::seeded(0xB100);
+    let mut b = Bencher::default();
+
+    // Raw filter ops at three fill levels.
+    for &n in &[100_000u64, 1_000_000] {
+        let mut filter = BloomFilter::with_capacity(n, 1e-10);
+        for _ in 0..n / 2 {
+            filter.insert(rng.next_u64());
+        }
+        let mut k = 0u64;
+        let r = b.run(&format!("bloom/insert/n={n}"), || {
+            k = k.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            filter.insert(k)
+        });
+        println!("{}", r.report());
+        let mut q = 0u64;
+        let r = b.run(&format!("bloom/query/n={n}"), || {
+            q = q.wrapping_add(0xDEAD_BEEF);
+            filter.contains(q)
+        });
+        println!("{}", r.report());
+    }
+    println!();
+
+    // Whole-index op latency on identical band-hash inputs (b=42).
+    let lsh = LshParams { num_bands: 42, rows_per_band: 6 };
+    let docs: Vec<Vec<u64>> = (0..50_000)
+        .map(|_| (0..42).map(|_| rng.next_u64()).collect())
+        .collect();
+
+    let mut bloom_idx = LshBloomIndex::new(LshBloomConfig {
+        lsh,
+        p_effective: 1e-10,
+        expected_docs: 100_000,
+        blocked: false,
+    });
+    let mut hashmap_idx = MinHashLshIndex::new(42, 6);
+    for d in &docs {
+        bloom_idx.insert_if_new(d);
+        hashmap_idx.insert_if_new(d);
+    }
+
+    let mut blocked_idx = LshBloomIndex::new(LshBloomConfig {
+        lsh,
+        p_effective: 1e-10,
+        expected_docs: 100_000,
+        blocked: true,
+    });
+    for d in &docs {
+        blocked_idx.insert_if_new(d);
+    }
+
+    let mut i = 0usize;
+    let bloom = b.run("index/insert_if_new/lshbloom(b=42)", || {
+        i = (i + 1) % docs.len();
+        bloom_idx.insert_if_new(&docs[i])
+    });
+    println!("{}", bloom.report());
+    let mut bi = 0usize;
+    let blocked = b.run("index/insert_if_new/lshbloom-blocked(b=42)", || {
+        bi = (bi + 1) % docs.len();
+        blocked_idx.insert_if_new(&docs[bi])
+    });
+    println!("{}", blocked.report());
+    println!(
+        "  -> blocked filter speedup over classic: {:.1}x",
+        bloom.median_ns() / blocked.median_ns()
+    );
+    let mut j = 0usize;
+    let hashmap = b.run("index/insert_if_new/minhashlsh(b=42)", || {
+        j = (j + 1) % docs.len();
+        hashmap_idx.insert_if_new(&docs[j])
+    });
+    println!("{}", hashmap.report());
+    println!(
+        "\n  -> lshbloom index op is {:.1}x faster than the hashmap index",
+        hashmap.median_ns() / bloom.median_ns()
+    );
+    println!(
+        "  -> disk: lshbloom {} vs minhashlsh {} ({:.1}x smaller)",
+        bloom_idx.disk_bytes(),
+        hashmap_idx.disk_bytes(),
+        hashmap_idx.disk_bytes() as f64 / bloom_idx.disk_bytes() as f64
+    );
+}

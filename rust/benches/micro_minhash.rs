@@ -1,0 +1,45 @@
+//! MinHash signature throughput: the prepare-phase hot loop (Fig. 1's
+//! dominant cost for LSHBloom), across permutation counts and families.
+//!
+//! `cargo bench --bench micro_minhash`
+
+use lshbloom::corpus::{CorpusGenerator, GeneratorConfig};
+use lshbloom::minhash::{MinHasher, PermFamily};
+use lshbloom::perf::bench::Bencher;
+use lshbloom::text::normalize;
+
+fn main() {
+    println!("# minhash signature computation (per document)\n");
+    let g = CorpusGenerator::new(GeneratorConfig::default());
+    let doc = normalize(&g.generate(0x3141, 0).text);
+    let tokens = doc.split_whitespace().count();
+    println!("document: {tokens} tokens\n");
+
+    let mut b = Bencher::default();
+    for perms in [32usize, 64, 128, 256] {
+        for family in [PermFamily::Mix64, PermFamily::Datasketch] {
+            let mh = MinHasher::new(family, perms, 1);
+            let hashes = mh.shingle_hashes(&doc);
+            let r = b.run(
+                &format!("signature/p={perms}/{family:?}"),
+                || mh.signature_of_hashes(&hashes),
+            );
+            println!("{}", r.report());
+        }
+    }
+
+    println!();
+    let mh = MinHasher::new(PermFamily::Mix64, 256, 1);
+    let r = b.run("shingle+sha1/p=256", || mh.shingle_hashes(&doc));
+    println!("{}", r.report());
+    let r = b.run("normalize", || normalize(&g.generate(0x3141, 0).text));
+    println!("{}", r.report());
+    let full = b.run("full-prepare/p=256 (normalize+shingle+signature)", || {
+        mh.signature(&doc)
+    });
+    println!("{}", full.report());
+    println!(
+        "\n  -> prepare-phase docs/s (single core, 256 perms): {:.0}",
+        1e9 / full.median_ns()
+    );
+}

@@ -1,0 +1,54 @@
+//! XLA artifact backend vs native rust backend for the same band-hash
+//! computation (identical bits, different execution engines).
+//!
+//! On this CPU testbed the artifact runs the interpret-mode Pallas
+//! lowering, so native wins; the artifact path exists to prove the
+//! three-layer architecture and to be the TPU deployment story (see
+//! DESIGN.md §Hardware-Adaptation).
+//!
+//! `cargo bench --bench micro_xla_vs_native`
+
+use lshbloom::config::PipelineConfig;
+use lshbloom::corpus::{CorpusGenerator, Doc, GeneratorConfig};
+use lshbloom::methods::lshbloom::lshbloom_method;
+use lshbloom::methods::Preparer;
+use lshbloom::minhash::PermFamily;
+use lshbloom::perf::bench::Bencher;
+use lshbloom::runtime::XlaBandPreparer;
+use std::path::Path;
+
+fn main() {
+    println!("# batched band-hash preparation: XLA artifacts vs native rust\n");
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts missing — run `make artifacts` first");
+        return;
+    }
+
+    let g = CorpusGenerator::new(GeneratorConfig::short());
+    let batch: Vec<Doc> = (0..64).map(|i| g.generate(0xA0, i)).collect();
+
+    let cfg = PipelineConfig {
+        threshold: 0.5,
+        num_perms: 256,
+        expected_docs: 10_000,
+        ..Default::default()
+    };
+    let native = lshbloom_method(&cfg, PermFamily::Mix64);
+    let xla = XlaBandPreparer::from_manifest(dir, 0.5, 256, 1).expect("artifacts");
+
+    let mut b = Bencher::default().throughput(batch.len() as u64);
+    let rn = b.run("prepare_batch/native/p=256/b=64docs", || {
+        native.preparer.prepare_batch(&batch)
+    });
+    println!("{}", rn.report());
+    let rx = b.run("prepare_batch/xla/p=256/b=64docs", || {
+        xla.prepare_batch(&batch)
+    });
+    println!("{}", rx.report());
+    println!(
+        "\n  -> native/xla ratio on CPU: {:.2}x (artifact path is the TPU story; \
+         numerics are bit-identical — see rust/tests/xla_backend.rs)",
+        rx.median_ns() / rn.median_ns()
+    );
+}

@@ -1,0 +1,56 @@
+//! Table 1: best hyperparameter settings per technique, selected by F1
+//! over the Figs. 2–4 tuning grids.
+//!
+//! `cargo bench --bench table1_best_settings`
+
+use lshbloom::eval::experiments::{table1, Scale};
+use lshbloom::methods::MethodKind;
+use lshbloom::report::table::{f, Table};
+use lshbloom::report::CsvWriter;
+use std::path::Path;
+
+fn main() {
+    let scale = Scale::from_env();
+    let best = table1(scale);
+
+    let mut csv = CsvWriter::create(
+        Path::new("reports/table1_best_settings.csv"),
+        &["technique", "ngram", "threshold", "perms", "f1"],
+    )
+    .expect("csv");
+    let mut t = Table::new(
+        "Table 1 — best settings per technique",
+        &["technique", "ngram", "threshold", "perms", "F1"],
+    );
+    for gp in &best {
+        let ngram_cell = match gp.spec.kind {
+            MethodKind::Dolma | MethodKind::CcNet | MethodKind::CcNetExact => "-".to_string(),
+            _ => gp.spec.ngram.to_string(),
+        };
+        let perms_cell = match gp.spec.kind {
+            MethodKind::MinHashLsh | MethodKind::LshBloom => gp.spec.num_perms.to_string(),
+            _ => "-".to_string(),
+        };
+        t.row_disp(&[
+            gp.spec.kind.name().to_string(),
+            ngram_cell.clone(),
+            format!("{}", gp.spec.threshold),
+            perms_cell.clone(),
+            f(gp.f1(), 4),
+        ]);
+        csv.row_disp(&[
+            gp.spec.kind.name().to_string(),
+            ngram_cell,
+            gp.spec.threshold.to_string(),
+            perms_cell,
+            format!("{:.4}", gp.f1()),
+        ])
+        .unwrap();
+    }
+    csv.finish().unwrap();
+    t.print();
+    println!(
+        "(paper Table 1: minhashlsh/lshbloom n=1 T=0.5; dolma-ngram/dclm n=5 T=0.2; \
+         dolma/ccnet T=0.2)"
+    );
+}

@@ -1,0 +1,317 @@
+//! The Bloom filter proper: contiguous bit array + double hashing.
+//!
+//! Probe positions follow Kirsch–Mitzenmacher double hashing:
+//! `pos_j = (h1 + j·h2) mod m` with `h1`,`h2` derived from the u64 key by
+//! independent mixes. Keys are already well-mixed u64s (band sum-hashes or
+//! `fast_str_hash` outputs), so two cheap finalizers suffice.
+//!
+//! The backing storage is pluggable ([`Bits`]): an in-heap `Vec<u64>` or a
+//! [`super::shm::ShmBitArray`] mapping (§4.4.2 /dev/shm codesign).
+
+use super::params::BloomParams;
+use super::shm::ShmBitArray;
+use crate::error::{Error, Result};
+use crate::rng::mix64;
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Backing bit storage.
+pub enum Bits {
+    Heap(Vec<u64>),
+    Shm(ShmBitArray),
+}
+
+impl Bits {
+    #[inline(always)]
+    fn words(&self) -> &[u64] {
+        match self {
+            Bits::Heap(v) => v,
+            Bits::Shm(s) => s.words(),
+        }
+    }
+
+    #[inline(always)]
+    fn words_mut(&mut self) -> &mut [u64] {
+        match self {
+            Bits::Heap(v) => v,
+            Bits::Shm(s) => s.words_mut(),
+        }
+    }
+}
+
+/// A single Bloom filter.
+pub struct BloomFilter {
+    bits: Bits,
+    /// Bit-array length (= params.bits rounded up to a word multiple).
+    m: u64,
+    k: u32,
+    inserted: u64,
+    params: BloomParams,
+}
+
+impl BloomFilter {
+    /// Heap-backed filter with the given geometry.
+    pub fn new(params: BloomParams) -> Self {
+        let words = params.bits.div_ceil(64) as usize;
+        Self {
+            bits: Bits::Heap(vec![0u64; words]),
+            m: words as u64 * 64,
+            k: params.hashes,
+            inserted: 0,
+            params,
+        }
+    }
+
+    /// Heap-backed filter for `n` planned elements at rate `p`.
+    pub fn with_capacity(n: u64, p: f64) -> Self {
+        Self::new(BloomParams::for_capacity(n, p))
+    }
+
+    /// Filter backed by an mmap-ed file (e.g. under `/dev/shm`).
+    pub fn new_shm(params: BloomParams, path: &Path) -> Result<Self> {
+        let words = params.bits.div_ceil(64) as usize;
+        let shm = ShmBitArray::create(path, words)?;
+        Ok(Self { bits: Bits::Shm(shm), m: words as u64 * 64, k: params.hashes, inserted: 0, params })
+    }
+
+    #[inline(always)]
+    fn probes(&self, key: u64) -> (u64, u64) {
+        // Two independent mixes; h2 forced odd so all probe strides hit
+        // distinct positions for power-of-two-ish m.
+        let h1 = mix64(key);
+        let h2 = mix64(key ^ 0x9E37_79B9_7F4A_7C15) | 1;
+        (h1, h2)
+    }
+
+    /// Insert a key. Returns `true` if the key was (possibly) already
+    /// present — i.e. every probed bit was already set.
+    #[inline]
+    pub fn insert(&mut self, key: u64) -> bool {
+        let (h1, h2) = self.probes(key);
+        let m = self.m;
+        let words = self.bits.words_mut();
+        let mut all_set = true;
+        let mut h = h1;
+        for _ in 0..self.k {
+            let bit = h % m;
+            let (w, mask) = (bit / 64, 1u64 << (bit % 64));
+            let word = &mut words[w as usize];
+            if *word & mask == 0 {
+                all_set = false;
+                *word |= mask;
+            }
+            h = h.wrapping_add(h2);
+        }
+        self.inserted += 1;
+        all_set
+    }
+
+    /// Query a key: `true` means "possibly present" (no false negatives).
+    #[inline]
+    pub fn contains(&self, key: u64) -> bool {
+        let (h1, h2) = self.probes(key);
+        let m = self.m;
+        let words = self.bits.words();
+        let mut h = h1;
+        for _ in 0..self.k {
+            let bit = h % m;
+            if words[(bit / 64) as usize] & (1u64 << (bit % 64)) == 0 {
+                return false;
+            }
+            h = h.wrapping_add(h2);
+        }
+        true
+    }
+
+    /// Number of bits set (popcount) — fill diagnostics.
+    pub fn ones(&self) -> u64 {
+        self.bits.words().iter().map(|w| w.count_ones() as u64).sum()
+    }
+
+    /// Fraction of bits set.
+    pub fn fill_ratio(&self) -> f64 {
+        self.ones() as f64 / self.m as f64
+    }
+
+    /// Elements inserted so far.
+    pub fn inserted(&self) -> u64 {
+        self.inserted
+    }
+
+    /// Geometry.
+    pub fn params(&self) -> BloomParams {
+        self.params
+    }
+
+    /// Bytes of backing storage (the disk footprint of this filter).
+    pub fn size_bytes(&self) -> u64 {
+        (self.bits.words().len() * 8) as u64
+    }
+
+    /// Serialize: header (m, k, inserted, capacity) + raw words.
+    pub fn save<W: Write>(&self, w: &mut W) -> Result<()> {
+        let hdr = [
+            self.m,
+            self.k as u64,
+            self.inserted,
+            self.params.capacity,
+            self.params.bits,
+        ];
+        let mut buf = Vec::with_capacity(40);
+        for v in hdr {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        w.write_all(&buf).map_err(|e| Error::io("bloom save", e))?;
+        // Write words in bulk.
+        let words = self.bits.words();
+        let bytes: Vec<u8> = words.iter().flat_map(|w| w.to_le_bytes()).collect();
+        w.write_all(&bytes).map_err(|e| Error::io("bloom save", e))?;
+        Ok(())
+    }
+
+    /// Deserialize a heap-backed filter.
+    pub fn load<R: Read>(r: &mut R) -> Result<Self> {
+        let mut hdr = [0u8; 40];
+        r.read_exact(&mut hdr).map_err(|e| Error::io("bloom load", e))?;
+        let get = |i: usize| u64::from_le_bytes(hdr[i * 8..(i + 1) * 8].try_into().unwrap());
+        let (m, k, inserted, capacity, bits) = (get(0), get(1), get(2), get(3), get(4));
+        if m == 0 || m % 64 != 0 || k == 0 || k > 1024 {
+            return Err(Error::Format(format!("bad bloom header: m={m} k={k}")));
+        }
+        let words = (m / 64) as usize;
+        let mut raw = vec![0u8; words * 8];
+        r.read_exact(&mut raw).map_err(|e| Error::io("bloom load", e))?;
+        let vec: Vec<u64> = raw
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(Self {
+            bits: Bits::Heap(vec),
+            m,
+            k: k as u32,
+            inserted,
+            params: BloomParams { bits, hashes: k as u32, capacity },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn no_false_negatives() {
+        let mut f = BloomFilter::with_capacity(10_000, 1e-4);
+        let mut rng = Xoshiro256pp::seeded(1);
+        let keys: Vec<u64> = (0..10_000).map(|_| rng.next_u64()).collect();
+        for &k in &keys {
+            f.insert(k);
+        }
+        for &k in &keys {
+            assert!(f.contains(k), "false negative for {k}");
+        }
+    }
+
+    #[test]
+    fn fp_rate_within_design_bound() {
+        let p = 1e-3;
+        let n = 50_000u64;
+        let mut f = BloomFilter::with_capacity(n, p);
+        let mut rng = Xoshiro256pp::seeded(2);
+        for _ in 0..n {
+            f.insert(rng.next_u64());
+        }
+        // Probe fresh keys; observed FP rate should be ~p (allow 3x).
+        let trials = 200_000;
+        let mut fps = 0u64;
+        for _ in 0..trials {
+            if f.contains(rng.next_u64()) {
+                fps += 1;
+            }
+        }
+        let observed = fps as f64 / trials as f64;
+        assert!(observed < p * 3.0, "observed FP {observed} vs design {p}");
+    }
+
+    #[test]
+    fn insert_reports_prior_presence() {
+        let mut f = BloomFilter::with_capacity(1000, 1e-6);
+        assert!(!f.insert(42), "first insert must report absent");
+        assert!(f.insert(42), "second insert must report present");
+    }
+
+    #[test]
+    fn empty_filter_contains_nothing() {
+        let f = BloomFilter::with_capacity(1000, 1e-4);
+        let mut rng = Xoshiro256pp::seeded(3);
+        for _ in 0..1000 {
+            assert!(!f.contains(rng.next_u64()));
+        }
+    }
+
+    #[test]
+    fn fill_ratio_tracks_inserts() {
+        let mut f = BloomFilter::with_capacity(1000, 0.01);
+        assert_eq!(f.fill_ratio(), 0.0);
+        for i in 0..500 {
+            f.insert(i);
+        }
+        let half = f.fill_ratio();
+        for i in 500..1000 {
+            f.insert(i);
+        }
+        let full = f.fill_ratio();
+        assert!(full > half && half > 0.0);
+        // At design capacity the fill should be ~50% (optimal k property).
+        assert!((0.4..0.6).contains(&full), "fill at capacity {full}");
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut f = BloomFilter::with_capacity(5000, 1e-4);
+        let mut rng = Xoshiro256pp::seeded(4);
+        let keys: Vec<u64> = (0..5000).map(|_| rng.next_u64()).collect();
+        for &k in &keys {
+            f.insert(k);
+        }
+        let mut buf = Vec::new();
+        f.save(&mut buf).unwrap();
+        let g = BloomFilter::load(&mut buf.as_slice()).unwrap();
+        assert_eq!(g.inserted(), f.inserted());
+        assert_eq!(g.size_bytes(), f.size_bytes());
+        for &k in &keys {
+            assert!(g.contains(k));
+        }
+        assert_eq!(g.ones(), f.ones());
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let buf = vec![0xFFu8; 32]; // truncated header
+        assert!(BloomFilter::load(&mut buf.as_slice()).is_err());
+        let mut hdr = Vec::new();
+        for v in [63u64, 5, 0, 0, 63] {
+            hdr.extend_from_slice(&v.to_le_bytes()); // m not word multiple
+        }
+        assert!(BloomFilter::load(&mut hdr.as_slice()).is_err());
+    }
+
+    #[test]
+    fn shm_backed_filter_works() {
+        let dir = std::env::temp_dir().join(format!("lshbloom-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("test.bloom.bits");
+        {
+            let params = BloomParams::for_capacity(1000, 1e-4);
+            let mut f = BloomFilter::new_shm(params, &path).unwrap();
+            for i in 0..1000u64 {
+                f.insert(i * 7);
+            }
+            for i in 0..1000u64 {
+                assert!(f.contains(i * 7));
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

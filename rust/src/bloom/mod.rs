@@ -1,0 +1,22 @@
+//! Bloom filters (paper §2.4, §4.5) — the space-efficient probabilistic
+//! membership substrate LSHBloom's index is built from.
+//!
+//! * [`BloomFilter`] — contiguous bit array + k hash probes (double
+//!   hashing). Contiguity is the §4.5 "cache-aware data layout" point:
+//!   a query touches k cache lines with no pointer chasing.
+//! * [`params`] — optimal sizing: `m = -n·ln p / (ln 2)²`,
+//!   `k = (m/n)·ln 2` (§4.5, after Bender et al.).
+//! * [`shm`] — a `/dev/shm`-backed (or any mmap-able path) bit array so
+//!   the index lives in DRAM with file persistence (§4.4.2 codesign).
+
+pub mod blocked;
+pub mod filter;
+pub mod params;
+pub mod scalable;
+pub mod shm;
+
+pub use blocked::BlockedBloomFilter;
+pub use filter::BloomFilter;
+pub use params::{optimal_bits, optimal_hashes, BloomParams};
+pub use scalable::ScalableBloomFilter;
+pub use shm::ShmBitArray;

@@ -1,0 +1,131 @@
+//! Optimal Bloom filter sizing (§4.5).
+//!
+//! For a planned capacity of `n` elements and per-filter false-positive
+//! bound `p`: `m = -n·ln p / (ln 2)²` bits and `k = (m/n)·ln 2 = -log2 p`
+//! hash functions. LSHBloom instantiates `b` such filters (one per LSH
+//! band) with `p = 1 - (1 - p_eff)^(1/b)` so the whole index meets the
+//! user's effective false-positive bound `p_eff` (§4.3).
+
+/// Bits required for `n` elements at false-positive rate `p`.
+pub fn optimal_bits(n: u64, p: f64) -> u64 {
+    assert!(n > 0, "capacity must be positive");
+    assert!(p > 0.0 && p < 1.0, "p must be in (0,1), got {p}");
+    let ln2 = std::f64::consts::LN_2;
+    let m = -(n as f64) * p.ln() / (ln2 * ln2);
+    (m.ceil() as u64).max(64)
+}
+
+/// Number of hash probes for a given bits/element ratio.
+pub fn optimal_hashes(m: u64, n: u64) -> u32 {
+    assert!(n > 0);
+    let k = (m as f64 / n as f64) * std::f64::consts::LN_2;
+    (k.round() as u32).max(1)
+}
+
+/// Resolved Bloom geometry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BloomParams {
+    /// Bit-array length.
+    pub bits: u64,
+    /// Number of hash probes per element.
+    pub hashes: u32,
+    /// Planned capacity.
+    pub capacity: u64,
+}
+
+impl BloomParams {
+    /// Geometry for `n` planned insertions at false-positive rate `p`.
+    pub fn for_capacity(n: u64, p: f64) -> Self {
+        let bits = optimal_bits(n, p);
+        Self { bits, hashes: optimal_hashes(bits, n), capacity: n }
+    }
+
+    /// Per-band rate from an index-wide effective bound (§4.3):
+    /// `p = 1 - (1 - p_eff)^(1/b)`.
+    pub fn per_filter_rate(p_effective: f64, num_bands: usize) -> f64 {
+        assert!(num_bands > 0);
+        assert!(p_effective > 0.0 && p_effective < 1.0);
+        // For tiny p_eff, 1-(1-p)^(1/b) loses precision; use ln1p/expm1.
+        let r = -(-p_effective).ln_1p() / num_bands as f64; // -ln(1-p_eff)/b
+        -(-r).exp_m1() // 1 - exp(-r)
+    }
+
+    /// Predicted false-positive rate after `inserted` elements
+    /// (standard approximation `(1 - e^{-k·i/m})^k`).
+    pub fn predicted_fp_rate(&self, inserted: u64) -> f64 {
+        let k = self.hashes as f64;
+        let fill = 1.0 - (-k * inserted as f64 / self.bits as f64).exp();
+        fill.powf(k)
+    }
+
+    /// Bytes of backing storage.
+    pub fn bytes(&self) -> u64 {
+        self.bits.div_ceil(8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_sizing_example() {
+        // §4.5: T=0.8, 128 perms -> 9 bands; p_eff = 1e-10, n = 10B docs
+        // -> "only 590 GB" for all nine filters.
+        let p_eff = 1e-10;
+        let b = 9;
+        let p = BloomParams::per_filter_rate(p_eff, b);
+        let params = BloomParams::for_capacity(10_000_000_000, p);
+        let total_gb = (params.bytes() * b as u64) as f64 / 1e9;
+        assert!(
+            (500.0..700.0).contains(&total_gb),
+            "paper says ~590 GB, got {total_gb:.1} GB"
+        );
+    }
+
+    #[test]
+    fn bits_per_element_classic_values() {
+        // p = 1% -> ~9.585 bits/element, k ~ 7.
+        let params = BloomParams::for_capacity(1_000_000, 0.01);
+        let bpe = params.bits as f64 / 1_000_000.0;
+        assert!((9.5..9.7).contains(&bpe), "bits/elem {bpe}");
+        assert_eq!(params.hashes, 7);
+    }
+
+    #[test]
+    fn per_filter_rate_composes_back() {
+        for b in [1usize, 9, 42] {
+            for p_eff in [1e-3, 1e-5, 1e-10] {
+                let p = BloomParams::per_filter_rate(p_eff, b);
+                let recomposed = 1.0 - (1.0 - p).powi(b as i32);
+                assert!(
+                    (recomposed - p_eff).abs() / p_eff < 1e-4,
+                    "b={b} p_eff={p_eff}: recomposed {recomposed}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn predicted_fp_at_capacity_close_to_design_p() {
+        let p = 1e-4;
+        let params = BloomParams::for_capacity(100_000, p);
+        let at_cap = params.predicted_fp_rate(100_000);
+        assert!(at_cap < p * 1.6, "predicted {at_cap} vs design {p}");
+        assert!(at_cap > p * 0.4);
+    }
+
+    #[test]
+    fn monotonicity() {
+        assert!(optimal_bits(1000, 1e-6) > optimal_bits(1000, 1e-3));
+        assert!(optimal_bits(10_000, 1e-3) > optimal_bits(1000, 1e-3));
+        let params = BloomParams::for_capacity(1000, 1e-3);
+        assert!(params.predicted_fp_rate(2000) > params.predicted_fp_rate(500));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bad_p() {
+        optimal_bits(10, 0.0);
+    }
+}

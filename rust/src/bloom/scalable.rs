@@ -1,0 +1,185 @@
+//! Scalable Bloom filter (Almeida et al., 2007) — LSHBloom without a
+//! planned corpus cardinality.
+//!
+//! The paper's index must be sized for `n` expected documents up front
+//! (§4.5); continuously growing corpora (its own motivation: monthly
+//! CommonCrawl drops, §1) eventually exceed any plan. A scalable filter
+//! chains sub-filters of geometrically increasing capacity and
+//! geometrically tightening error so the *total* false-positive rate
+//! stays below the configured bound no matter how many elements arrive:
+//!
+//! ```text
+//!   p_total ≤ p0 · Σ r^i = p0 / (1 - r)      (r = TIGHTENING < 1)
+//! ```
+//!
+//! Queries probe every sub-filter (newest first — recent keys are the
+//! likeliest matches in a dedup stream); inserts go to the newest.
+//! This powers [`crate::index::lshbloom`]'s unbounded mode and is the
+//! concrete realization of the paper's §6 scaling future work.
+
+use super::filter::BloomFilter;
+use super::params::BloomParams;
+
+/// Error tightening ratio between successive sub-filters.
+pub const TIGHTENING: f64 = 0.5;
+/// Capacity growth factor between successive sub-filters.
+pub const GROWTH: u64 = 2;
+
+/// A chain of Bloom filters with bounded total false-positive rate.
+pub struct ScalableBloomFilter {
+    /// Sub-filters, oldest first.
+    stages: Vec<BloomFilter>,
+    /// First-stage capacity.
+    initial_capacity: u64,
+    /// Total false-positive budget across all stages.
+    p_total: f64,
+    inserted: u64,
+}
+
+impl ScalableBloomFilter {
+    /// New scalable filter: `initial_capacity` sizes stage 0; the chain
+    /// keeps overall FP ≤ `p_total` forever.
+    pub fn new(initial_capacity: u64, p_total: f64) -> Self {
+        assert!(initial_capacity > 0);
+        assert!(p_total > 0.0 && p_total < 1.0);
+        let mut f = Self {
+            stages: Vec::new(),
+            initial_capacity,
+            p_total,
+            inserted: 0,
+        };
+        f.push_stage();
+        f
+    }
+
+    fn stage_rate(&self, i: usize) -> f64 {
+        // p_i = p0 * r^i with p0 = p_total * (1 - r) so that Σ p_i = p_total.
+        self.p_total * (1.0 - TIGHTENING) * TIGHTENING.powi(i as i32)
+    }
+
+    fn push_stage(&mut self) {
+        let i = self.stages.len();
+        let capacity = self.initial_capacity * GROWTH.pow(i as u32);
+        let params = BloomParams::for_capacity(capacity, self.stage_rate(i));
+        self.stages.push(BloomFilter::new(params));
+    }
+
+    /// Insert a key; returns `true` when it was (possibly) already
+    /// present in *any* stage.
+    pub fn insert(&mut self, key: u64) -> bool {
+        if self.contains(key) {
+            // Matching the plain filter's insert-reports-presence
+            // semantics; still record the key in the active stage so the
+            // positive is stable even if older stages are compacted away.
+            self.active_insert(key);
+            return true;
+        }
+        self.active_insert(key);
+        false
+    }
+
+    fn active_insert(&mut self, key: u64) {
+        let last = self.stages.len() - 1;
+        let full = {
+            let s = &self.stages[last];
+            s.inserted() >= s.params().capacity
+        };
+        if full {
+            self.push_stage();
+        }
+        let last = self.stages.len() - 1;
+        self.stages[last].insert(key);
+        self.inserted += 1;
+    }
+
+    /// Query newest-first.
+    pub fn contains(&self, key: u64) -> bool {
+        self.stages.iter().rev().any(|s| s.contains(key))
+    }
+
+    /// Elements inserted.
+    pub fn inserted(&self) -> u64 {
+        self.inserted
+    }
+
+    /// Number of chained stages.
+    pub fn num_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Total backing bytes.
+    pub fn size_bytes(&self) -> u64 {
+        self.stages.iter().map(|s| s.size_bytes()).sum()
+    }
+
+    /// The design-time total FP bound.
+    pub fn p_total(&self) -> f64 {
+        self.p_total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn grows_past_initial_capacity_without_false_negatives() {
+        let mut f = ScalableBloomFilter::new(1_000, 1e-4);
+        let mut rng = Xoshiro256pp::seeded(1);
+        let keys: Vec<u64> = (0..20_000).map(|_| rng.next_u64()).collect();
+        for &k in &keys {
+            f.insert(k);
+        }
+        assert!(f.num_stages() > 3, "should have chained stages");
+        for &k in &keys {
+            assert!(f.contains(k), "lost key across stage boundary");
+        }
+    }
+
+    #[test]
+    fn fp_rate_stays_bounded_after_many_growths() {
+        let p_total = 1e-3;
+        let mut f = ScalableBloomFilter::new(500, p_total);
+        let mut rng = Xoshiro256pp::seeded(2);
+        for _ in 0..30_000 {
+            f.insert(rng.next_u64());
+        }
+        let trials = 300_000u64;
+        let mut fps = 0u64;
+        for _ in 0..trials {
+            fps += f.contains(rng.next_u64()) as u64;
+        }
+        let observed = fps as f64 / trials as f64;
+        assert!(
+            observed < p_total * 3.0,
+            "observed {observed} vs total budget {p_total} after {} stages",
+            f.num_stages()
+        );
+    }
+
+    #[test]
+    fn insert_reports_duplicates() {
+        let mut f = ScalableBloomFilter::new(100, 1e-6);
+        assert!(!f.insert(42));
+        assert!(f.insert(42));
+        // Force growth, then re-check an old key.
+        for i in 0..5_000u64 {
+            f.insert(i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        }
+        assert!(f.insert(42), "old-stage key must still be recognized");
+    }
+
+    #[test]
+    fn stage_sizes_grow_geometrically() {
+        let mut f = ScalableBloomFilter::new(100, 1e-4);
+        let mut rng = Xoshiro256pp::seeded(3);
+        for _ in 0..2_000 {
+            f.insert(rng.next_u64());
+        }
+        let caps: Vec<u64> = f.stages.iter().map(|s| s.params().capacity).collect();
+        for w in caps.windows(2) {
+            assert_eq!(w[1], w[0] * GROWTH);
+        }
+    }
+}

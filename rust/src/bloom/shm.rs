@@ -1,0 +1,170 @@
+//! mmap-backed bit arrays for `/dev/shm`-resident Bloom filters (§4.4.2).
+//!
+//! The paper hosts its filters in node-local shared-memory segments so the
+//! index lives in DRAM with file semantics (persistence across pipeline
+//! stages, observable by other processes, swap-backed by local SSD).
+//! This module implements that with `mmap(MAP_SHARED)` over a regular
+//! file — point it at `/dev/shm/...` to get the paper's exact setup, or
+//! at any filesystem path for plain persistence.
+
+use crate::error::{Error, Result};
+use std::fs::OpenOptions;
+use std::os::fd::AsRawFd;
+use std::path::{Path, PathBuf};
+
+/// A u64-word bit array backed by a shared file mapping.
+pub struct ShmBitArray {
+    ptr: *mut u64,
+    words: usize,
+    path: PathBuf,
+}
+
+// The mapping is owned exclusively by this struct; concurrent mutation is
+// prevented by &mut discipline, matching Vec<u64> semantics.
+unsafe impl Send for ShmBitArray {}
+
+impl ShmBitArray {
+    /// Create (or truncate) a file of `words * 8` bytes and map it shared.
+    pub fn create(path: &Path, words: usize) -> Result<Self> {
+        Self::open_impl(path, words, true)
+    }
+
+    /// Map an existing array created by [`ShmBitArray::create`].
+    pub fn open(path: &Path, words: usize) -> Result<Self> {
+        Self::open_impl(path, words, false)
+    }
+
+    fn open_impl(path: &Path, words: usize, truncate: bool) -> Result<Self> {
+        assert!(words > 0);
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(truncate)
+            .open(path)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        let bytes = words * 8;
+        file.set_len(bytes as u64)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        let ptr = unsafe {
+            libc::mmap(
+                std::ptr::null_mut(),
+                bytes,
+                libc::PROT_READ | libc::PROT_WRITE,
+                libc::MAP_SHARED,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == libc::MAP_FAILED {
+            return Err(Error::io(
+                path.display().to_string(),
+                std::io::Error::last_os_error(),
+            ));
+        }
+        Ok(Self { ptr: ptr as *mut u64, words, path: path.to_path_buf() })
+    }
+
+    /// The words as an immutable slice.
+    #[inline(always)]
+    pub fn words(&self) -> &[u64] {
+        unsafe { std::slice::from_raw_parts(self.ptr, self.words) }
+    }
+
+    /// The words as a mutable slice.
+    #[inline(always)]
+    pub fn words_mut(&mut self) -> &mut [u64] {
+        unsafe { std::slice::from_raw_parts_mut(self.ptr, self.words) }
+    }
+
+    /// Flush dirty pages to the backing file (msync).
+    pub fn sync(&self) -> Result<()> {
+        let rc = unsafe { libc::msync(self.ptr as *mut _, self.words * 8, libc::MS_SYNC) };
+        if rc != 0 {
+            return Err(Error::io(
+                self.path.display().to_string(),
+                std::io::Error::last_os_error(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Backing path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for ShmBitArray {
+    fn drop(&mut self) {
+        unsafe {
+            libc::munmap(self.ptr as *mut _, self.words * 8);
+        }
+    }
+}
+
+/// Pick the default shared-memory directory: `/dev/shm` when present
+/// (Linux), falling back to the system temp dir.
+pub fn default_shm_dir() -> PathBuf {
+    let shm = PathBuf::from("/dev/shm");
+    if shm.is_dir() {
+        shm
+    } else {
+        std::env::temp_dir()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("lshbloom-shm-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn create_write_reopen() {
+        let path = tmp("a.bits");
+        {
+            let mut arr = ShmBitArray::create(&path, 16).unwrap();
+            arr.words_mut()[0] = 0xDEAD_BEEF;
+            arr.words_mut()[15] = u64::MAX;
+            arr.sync().unwrap();
+        }
+        {
+            let arr = ShmBitArray::open(&path, 16).unwrap();
+            assert_eq!(arr.words()[0], 0xDEAD_BEEF);
+            assert_eq!(arr.words()[15], u64::MAX);
+            assert_eq!(arr.words()[7], 0);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn create_truncates_existing() {
+        let path = tmp("b.bits");
+        {
+            let mut arr = ShmBitArray::create(&path, 4).unwrap();
+            arr.words_mut().fill(u64::MAX);
+            arr.sync().unwrap();
+        }
+        {
+            let arr = ShmBitArray::create(&path, 4).unwrap();
+            assert!(arr.words().iter().all(|&w| w == 0), "create must zero");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bad_path_is_io_error() {
+        let r = ShmBitArray::create(Path::new("/nonexistent-dir-xyz/f.bits"), 4);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn shm_dir_exists() {
+        assert!(default_shm_dir().is_dir());
+    }
+}

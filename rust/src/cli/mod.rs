@@ -1,0 +1,277 @@
+//! Declarative CLI argument parser (no `clap` offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean switches, defaults,
+//! required flags, and generated `--help`. Each binary declares an
+//! [`ArgSpec`] list and gets back a typed [`Args`] map.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the xla rpath; the same flow is
+//! // covered by this module's unit tests)
+//! use lshbloom::cli::{ArgSpec, Command};
+//! let cmd = Command::new("demo", "demo tool")
+//!     .arg(ArgSpec::opt("docs", "number of documents").default("1000"))
+//!     .arg(ArgSpec::switch("verbose", "chatty output"));
+//! let args = cmd.parse_from(vec!["--docs".into(), "5".into()]).unwrap();
+//! assert_eq!(args.get_usize("docs"), 5);
+//! assert!(!args.get_bool("verbose"));
+//! ```
+
+use std::collections::BTreeMap;
+
+/// Declaration of one flag.
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub required: bool,
+    pub is_switch: bool,
+}
+
+impl ArgSpec {
+    /// Optional value flag (`--name value`).
+    pub fn opt(name: &'static str, help: &'static str) -> Self {
+        Self { name, help, default: None, required: false, is_switch: false }
+    }
+
+    /// Required value flag.
+    pub fn req(name: &'static str, help: &'static str) -> Self {
+        Self { name, help, default: None, required: true, is_switch: false }
+    }
+
+    /// Boolean switch (`--name`, default false).
+    pub fn switch(name: &'static str, help: &'static str) -> Self {
+        Self { name, help, default: None, required: false, is_switch: true }
+    }
+
+    /// Set a default value.
+    pub fn default(mut self, v: &'static str) -> Self {
+        self.default = Some(v);
+        self
+    }
+}
+
+/// A command: name, description, flags.
+#[derive(Clone, Debug)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub specs: Vec<ArgSpec>,
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    switches: BTreeMap<String, bool>,
+}
+
+/// CLI parse failure (message already user-formatted).
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+impl Command {
+    /// New command with no flags.
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, specs: Vec::new() }
+    }
+
+    /// Add a flag.
+    pub fn arg(mut self, spec: ArgSpec) -> Self {
+        self.specs.push(spec);
+        self
+    }
+
+    /// Render `--help` text.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nflags:\n", self.name, self.about);
+        for spec in &self.specs {
+            let kind = if spec.is_switch {
+                String::new()
+            } else if let Some(d) = spec.default {
+                format!(" <value, default {d}>")
+            } else if spec.required {
+                " <value, required>".to_string()
+            } else {
+                " <value>".to_string()
+            };
+            s.push_str(&format!("  --{}{}\n      {}\n", spec.name, kind, spec.help));
+        }
+        s.push_str("  --help\n      print this message\n");
+        s
+    }
+
+    /// Parse a raw token stream (excluding program/subcommand names).
+    pub fn parse_from(&self, tokens: Vec<String>) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        for spec in &self.specs {
+            if spec.is_switch {
+                args.switches.insert(spec.name.to_string(), false);
+            } else if let Some(d) = spec.default {
+                args.values.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(CliError(self.help()));
+            }
+            let Some(stripped) = tok.strip_prefix("--") else {
+                return Err(CliError(format!(
+                    "unexpected positional argument '{tok}' (see --help)"
+                )));
+            };
+            let (name, inline_val) = match stripped.split_once('=') {
+                Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                None => (stripped.to_string(), None),
+            };
+            let Some(spec) = self.specs.iter().find(|s| s.name == name) else {
+                return Err(CliError(format!("unknown flag '--{name}' (see --help)")));
+            };
+            if spec.is_switch {
+                if let Some(v) = inline_val {
+                    let b = match v.as_str() {
+                        "true" | "1" => true,
+                        "false" | "0" => false,
+                        _ => return Err(CliError(format!("bad boolean for --{name}: {v}"))),
+                    };
+                    args.switches.insert(name, b);
+                } else {
+                    args.switches.insert(name, true);
+                }
+            } else {
+                let val = match inline_val {
+                    Some(v) => v,
+                    None => it
+                        .next()
+                        .ok_or_else(|| CliError(format!("flag --{name} needs a value")))?,
+                };
+                args.values.insert(name, val);
+            }
+        }
+        for spec in &self.specs {
+            if spec.required && !args.values.contains_key(spec.name) {
+                return Err(CliError(format!("missing required flag --{}", spec.name)));
+            }
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    /// Raw string value (panics if the flag wasn't declared with a default
+    /// and wasn't provided — use `get_opt` for truly optional values).
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} has no value"))
+    }
+
+    /// Optional string value.
+    pub fn get_opt(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    /// Switch state.
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.switches.get(name).copied().unwrap_or(false)
+    }
+
+    /// usize value with clear panic on malformed input.
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.parse_or_exit(name)
+    }
+
+    /// u64 value.
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.parse_or_exit(name)
+    }
+
+    /// f64 value.
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.parse_or_exit(name)
+    }
+
+    fn parse_or_exit<T: std::str::FromStr>(&self, name: &str) -> T {
+        let raw = self.get(name);
+        raw.parse().unwrap_or_else(|_| {
+            eprintln!("invalid value for --{name}: '{raw}'");
+            std::process::exit(2);
+        })
+    }
+
+    /// Insert a value programmatically (tests, config overlay).
+    pub fn set(&mut self, name: &str, value: impl Into<String>) {
+        self.values.insert(name.to_string(), value.into());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("t", "test")
+            .arg(ArgSpec::opt("n", "count").default("10"))
+            .arg(ArgSpec::req("path", "input path"))
+            .arg(ArgSpec::switch("fast", "go fast"))
+    }
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let args = cmd().parse_from(toks(&["--path", "/x"])).unwrap();
+        assert_eq!(args.get_usize("n"), 10);
+        assert_eq!(args.get("path"), "/x");
+        assert!(!args.get_bool("fast"));
+    }
+
+    #[test]
+    fn equals_syntax_and_switch() {
+        let args = cmd().parse_from(toks(&["--path=/y", "--n=42", "--fast"])).unwrap();
+        assert_eq!(args.get_usize("n"), 42);
+        assert!(args.get_bool("fast"));
+    }
+
+    #[test]
+    fn missing_required_rejected() {
+        assert!(cmd().parse_from(toks(&["--n", "5"])).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let e = cmd().parse_from(toks(&["--path", "/x", "--bogus", "1"])).unwrap_err();
+        assert!(e.0.contains("bogus"));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(cmd().parse_from(toks(&["--path"])).is_err());
+    }
+
+    #[test]
+    fn help_lists_flags() {
+        let h = cmd().help();
+        assert!(h.contains("--n"));
+        assert!(h.contains("--path"));
+        assert!(h.contains("--fast"));
+    }
+
+    #[test]
+    fn switch_with_explicit_bool() {
+        let args = cmd().parse_from(toks(&["--path", "/x", "--fast=false"])).unwrap();
+        assert!(!args.get_bool("fast"));
+        let args = cmd().parse_from(toks(&["--path", "/x", "--fast=1"])).unwrap();
+        assert!(args.get_bool("fast"));
+    }
+}

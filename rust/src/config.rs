@@ -1,0 +1,257 @@
+//! Pipeline configuration.
+//!
+//! [`PipelineConfig`] is the single source of truth for a dedup run:
+//! similarity threshold, MinHash geometry, Bloom bounds, worker counts,
+//! and backend selection. It can be loaded from a small TOML-subset file
+//! (`key = value`, `[section]` headers flattened to `section.key`) and
+//! overridden from CLI flags — the config-system layer that a deployment
+//! would drive.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Which MinHash backend computes signatures.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MinHashBackend {
+    /// Native rust (mix64 family) — default.
+    Native,
+    /// AOT-compiled XLA artifact through PJRT (mix64 family, bit-identical).
+    Xla,
+    /// Native rust, datasketch-compatible `(a·h+b) mod p` family.
+    Datasketch,
+}
+
+impl MinHashBackend {
+    /// Parse from a CLI/config token.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "native" => Ok(Self::Native),
+            "xla" => Ok(Self::Xla),
+            "datasketch" => Ok(Self::Datasketch),
+            _ => Err(Error::Config(format!(
+                "unknown minhash backend '{s}' (native|xla|datasketch)"
+            ))),
+        }
+    }
+}
+
+/// Full configuration for a deduplication run.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    /// Jaccard similarity threshold T (Table 1 best: 0.5).
+    pub threshold: f64,
+    /// Number of MinHash permutations P (Table 1 best: 256).
+    pub num_perms: usize,
+    /// Word n-gram size for shingling (Table 1 best for LSH methods: 1).
+    pub ngram: usize,
+    /// Effective index-wide false-positive bound p_eff (§4.3).
+    pub p_effective: f64,
+    /// Planned corpus cardinality (sizes the Bloom filters).
+    pub expected_docs: u64,
+    /// MinHash worker threads (0 = available parallelism).
+    pub workers: usize,
+    /// Documents per worker batch (also the XLA artifact's B dimension).
+    pub batch_size: usize,
+    /// Signature backend.
+    pub backend: MinHashBackend,
+    /// Directory holding AOT artifacts (XLA backend).
+    pub artifacts_dir: String,
+    /// Host the Bloom index in /dev/shm (§4.4.2) instead of the heap.
+    pub use_shm: bool,
+    /// Use cache-line-blocked Bloom filters (§Perf; heap-only, faster
+    /// inserts at conservative p_effective, ~30% more space).
+    pub blocked_bloom: bool,
+    /// Bounded-channel depth between pipeline stages (backpressure).
+    pub channel_depth: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self {
+            threshold: 0.5,
+            num_perms: 256,
+            ngram: 1,
+            p_effective: 1e-10,
+            expected_docs: 1_000_000,
+            workers: 0,
+            batch_size: 64,
+            backend: MinHashBackend::Native,
+            artifacts_dir: "artifacts".into(),
+            use_shm: false,
+            blocked_bloom: false,
+            channel_depth: 64,
+        }
+    }
+}
+
+impl PipelineConfig {
+    /// Validate parameter combinations.
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0..=1.0).contains(&self.threshold) {
+            return Err(Error::Config(format!("threshold {} not in [0,1]", self.threshold)));
+        }
+        if self.num_perms == 0 || self.num_perms > 4096 {
+            return Err(Error::Config(format!("num_perms {} out of range", self.num_perms)));
+        }
+        if self.ngram == 0 {
+            return Err(Error::Config("ngram must be >= 1".into()));
+        }
+        if !(self.p_effective > 0.0 && self.p_effective < 1.0) {
+            return Err(Error::Config(format!("p_effective {} not in (0,1)", self.p_effective)));
+        }
+        if self.expected_docs == 0 {
+            return Err(Error::Config("expected_docs must be positive".into()));
+        }
+        if self.batch_size == 0 || self.channel_depth == 0 {
+            return Err(Error::Config("batch_size/channel_depth must be positive".into()));
+        }
+        Ok(())
+    }
+
+    /// Resolved worker count.
+    pub fn effective_workers(&self) -> usize {
+        if self.workers > 0 {
+            self.workers
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        }
+    }
+
+    /// Load from a TOML-subset file and overlay onto defaults.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        let kv = parse_toml_subset(&text)?;
+        let mut cfg = Self::default();
+        cfg.apply(&kv)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Apply string key/values (from file or CLI) onto this config.
+    pub fn apply(&mut self, kv: &BTreeMap<String, String>) -> Result<()> {
+        for (k, v) in kv {
+            let bad = |what: &str| Error::Config(format!("bad {what} value '{v}'"));
+            match k.as_str() {
+                "threshold" | "pipeline.threshold" => {
+                    self.threshold = v.parse().map_err(|_| bad("threshold"))?
+                }
+                "num_perms" | "pipeline.num_perms" => {
+                    self.num_perms = v.parse().map_err(|_| bad("num_perms"))?
+                }
+                "ngram" | "pipeline.ngram" => self.ngram = v.parse().map_err(|_| bad("ngram"))?,
+                "p_effective" | "bloom.p_effective" => {
+                    self.p_effective = v.parse().map_err(|_| bad("p_effective"))?
+                }
+                "expected_docs" | "bloom.expected_docs" => {
+                    self.expected_docs = v.parse().map_err(|_| bad("expected_docs"))?
+                }
+                "workers" | "pipeline.workers" => {
+                    self.workers = v.parse().map_err(|_| bad("workers"))?
+                }
+                "batch_size" | "pipeline.batch_size" => {
+                    self.batch_size = v.parse().map_err(|_| bad("batch_size"))?
+                }
+                "backend" | "pipeline.backend" => self.backend = MinHashBackend::parse(v)?,
+                "artifacts_dir" | "pipeline.artifacts_dir" => self.artifacts_dir = v.clone(),
+                "use_shm" | "bloom.use_shm" => {
+                    self.use_shm = matches!(v.as_str(), "true" | "1")
+                }
+                "blocked_bloom" | "bloom.blocked" => {
+                    self.blocked_bloom = matches!(v.as_str(), "true" | "1")
+                }
+                "channel_depth" | "pipeline.channel_depth" => {
+                    self.channel_depth = v.parse().map_err(|_| bad("channel_depth"))?
+                }
+                other => return Err(Error::Config(format!("unknown config key '{other}'"))),
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Parse `key = value` lines with optional `[section]` headers; values may
+/// be bare, quoted, numeric, or booleans. Comments start with `#`.
+pub fn parse_toml_subset(text: &str) -> Result<BTreeMap<String, String>> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            section = name.trim().to_string();
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            return Err(Error::parse("config", format!("line {}: no '='", lineno + 1)));
+        };
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        let val = v.trim().trim_matches('"').to_string();
+        out.insert(key, val);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        PipelineConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn toml_subset_parses_sections_and_comments() {
+        let kv = parse_toml_subset(
+            "# comment\nthreshold = 0.8\n[bloom]\np_effective = 1e-5 # inline\nuse_shm = true\n",
+        )
+        .unwrap();
+        assert_eq!(kv["threshold"], "0.8");
+        assert_eq!(kv["bloom.p_effective"], "1e-5");
+        assert_eq!(kv["bloom.use_shm"], "true");
+    }
+
+    #[test]
+    fn apply_overrides() {
+        let mut cfg = PipelineConfig::default();
+        let kv = parse_toml_subset("threshold = 0.8\nnum_perms = 128\nbackend = xla").unwrap();
+        cfg.apply(&kv).unwrap();
+        assert_eq!(cfg.threshold, 0.8);
+        assert_eq!(cfg.num_perms, 128);
+        assert_eq!(cfg.backend, MinHashBackend::Xla);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_values() {
+        let mut cfg = PipelineConfig::default();
+        assert!(cfg.apply(&parse_toml_subset("bogus = 1").unwrap()).is_err());
+        assert!(cfg.apply(&parse_toml_subset("threshold = x").unwrap()).is_err());
+    }
+
+    #[test]
+    fn validate_catches_bad_combos() {
+        let mut cfg = PipelineConfig::default();
+        cfg.threshold = 1.5;
+        assert!(cfg.validate().is_err());
+        let mut cfg = PipelineConfig::default();
+        cfg.p_effective = 0.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = PipelineConfig::default();
+        cfg.ngram = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn backend_parse() {
+        assert_eq!(MinHashBackend::parse("xla").unwrap(), MinHashBackend::Xla);
+        assert!(MinHashBackend::parse("gpu").is_err());
+    }
+}

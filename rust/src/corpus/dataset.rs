@@ -1,0 +1,273 @@
+//! Labeled dataset construction (§5.1.4).
+//!
+//! Builds a document stream with a target duplication rate where every
+//! duplicate is either a *parser-noise* or a *truncation* variant of an
+//! earlier original — balanced 50/50 as in the paper — and ground-truth
+//! labels record which original each duplicate came from.
+//!
+//! Stream-order guarantee: an original always precedes its duplicates,
+//! matching the streaming SAMQ task definition (§2.1) where `F(d_i)`
+//! is evaluated against `D_seen`.
+
+use super::generator::{CorpusGenerator, GeneratorConfig};
+use super::noise::{parser_noise, truncate, Parser, TruncationNoise};
+use super::{Doc, LabeledDoc};
+use crate::rng::Xoshiro256pp;
+
+/// Specification for a labeled corpus.
+#[derive(Clone, Debug)]
+pub struct DatasetSpec {
+    /// Total documents in the stream.
+    pub total_docs: usize,
+    /// Fraction of the stream that is duplicates (0.0–0.9).
+    pub dup_rate: f64,
+    /// Master seed.
+    pub seed: u64,
+    /// Document shape.
+    pub generator: GeneratorConfig,
+    /// Truncation parameters.
+    pub truncation: TruncationNoise,
+}
+
+impl DatasetSpec {
+    /// The paper's tuning-set shape: balanced (50% duplicates), 24k docs.
+    ///
+    /// Truncation keeps as little as 55% of the document so near-duplicate
+    /// pairs straddle the T=0.5 decision boundary (the paper's benchmark
+    /// likewise contains borderline duplicates; a too-easy corpus saturates
+    /// every method at F1=1).
+    pub fn tuning(seed: u64, total_docs: usize) -> Self {
+        Self {
+            total_docs,
+            dup_rate: 0.5,
+            seed,
+            generator: GeneratorConfig::short(),
+            truncation: TruncationNoise { min_keep: 0.55, max_keep: 0.95 },
+        }
+    }
+
+    /// The paper's testing-set shape at a given duplication level.
+    pub fn testing(seed: u64, total_docs: usize, dup_rate: f64) -> Self {
+        Self { dup_rate, ..Self::tuning(seed, total_docs) }
+    }
+}
+
+/// A fully materialized labeled corpus.
+pub struct LabeledCorpus {
+    pub docs: Vec<LabeledDoc>,
+    pub spec: DatasetSpec,
+}
+
+impl LabeledCorpus {
+    /// Build the corpus per spec (deterministic).
+    pub fn build(spec: DatasetSpec) -> Self {
+        assert!((0.0..1.0).contains(&spec.dup_rate), "dup_rate in [0,1)");
+        let n = spec.total_docs;
+        let num_dups = (n as f64 * spec.dup_rate).round() as usize;
+        let num_orig = n - num_dups;
+        assert!(num_orig > 0, "need at least one original");
+
+        let gen = CorpusGenerator::new(spec.generator.clone());
+        let mut rng = Xoshiro256pp::seeded(spec.seed);
+
+        // Originals: ids 0..num_orig (generated lazily below by stream id).
+        // Stream layout: start with originals in order; then interleave
+        // duplicates at random positions *after* their original. Simplest
+        // construction preserving the precedence invariant: fill the
+        // stream with originals, then insert each duplicate at a uniform
+        // position after its source, shifting the tail.
+        let mut stream: Vec<LabeledDoc> = Vec::with_capacity(n);
+        for i in 0..num_orig {
+            stream.push(LabeledDoc {
+                doc: gen.generate(spec.seed, i as u64),
+                duplicate_of: None,
+            });
+        }
+
+        for d in 0..num_dups {
+            // Pick a source among current stream entries that are originals.
+            let src_pos = rng.below(stream.len() as u64) as usize;
+            let src_pos = match stream[src_pos].duplicate_of {
+                None => src_pos,
+                // If we hit a duplicate, follow to its original's position.
+                Some(orig_id) => stream
+                    .iter()
+                    .position(|ld| ld.doc.id == orig_id && ld.duplicate_of.is_none())
+                    .unwrap_or(src_pos),
+            };
+            let src_text = stream[src_pos].doc.text.clone();
+            let src_id = stream[src_pos].doc.id;
+            // Balanced duplicate types (§5.1.4): even = parser, odd = trunc.
+            let text = if d % 2 == 0 {
+                let parser = *rng_choose(&mut rng, &Parser::ALL);
+                parser_noise(&src_text, parser, &mut rng)
+            } else {
+                truncate(&src_text, spec.truncation, &mut rng)
+            };
+            // Insert after the source position.
+            let insert_at = src_pos + 1 + rng.below((stream.len() - src_pos) as u64) as usize;
+            stream.insert(
+                insert_at,
+                LabeledDoc {
+                    doc: Doc { id: (num_orig + d) as u64, text },
+                    duplicate_of: Some(src_id),
+                },
+            );
+        }
+
+        // Re-number stream ids to ingestion order (labels keep original
+        // doc ids via duplicate_of -> remap).
+        let mut remap = std::collections::HashMap::new();
+        for (pos, ld) in stream.iter().enumerate() {
+            remap.insert(ld.doc.id, pos as u64);
+        }
+        for (pos, ld) in stream.iter_mut().enumerate() {
+            ld.doc.id = pos as u64;
+            if let Some(orig) = ld.duplicate_of {
+                ld.duplicate_of = Some(remap[&orig]);
+            }
+        }
+
+        Self { docs: stream, spec }
+    }
+
+    /// Number of ground-truth duplicates.
+    pub fn num_duplicates(&self) -> usize {
+        self.docs.iter().filter(|d| d.is_duplicate()).count()
+    }
+
+    /// Write as JSONL: `{"id": .., "text": .., "duplicate_of": ..|null}`.
+    pub fn save_jsonl(&self, path: &std::path::Path) -> crate::error::Result<()> {
+        use crate::error::Error;
+        use crate::json::{obj, Value};
+        use std::io::Write;
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).map_err(|e| Error::io(dir.display().to_string(), e))?;
+        }
+        let f = std::fs::File::create(path)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        let mut w = std::io::BufWriter::new(f);
+        for ld in &self.docs {
+            let dup = match ld.duplicate_of {
+                Some(id) => Value::u64(id),
+                None => Value::Null,
+            };
+            let line = obj(vec![
+                ("id", Value::u64(ld.doc.id)),
+                ("text", Value::str(ld.doc.text.clone())),
+                ("duplicate_of", dup),
+            ]);
+            writeln!(w, "{}", line.to_json()).map_err(|e| Error::io(path.display().to_string(), e))?;
+        }
+        Ok(())
+    }
+
+    /// Read back a JSONL corpus produced by [`LabeledCorpus::save_jsonl`].
+    pub fn load_jsonl(path: &std::path::Path) -> crate::error::Result<Vec<LabeledDoc>> {
+        use crate::error::Error;
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        let mut out = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let v = crate::json::parse(line)
+                .map_err(|e| Error::parse(format!("corpus line {}", i + 1), e.to_string()))?;
+            let id = v
+                .get("id")
+                .and_then(|x| x.as_u64())
+                .ok_or_else(|| Error::parse("corpus", format!("line {}: missing id", i + 1)))?;
+            let doc_text = v
+                .get("text")
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| Error::parse("corpus", format!("line {}: missing text", i + 1)))?
+                .to_string();
+            let duplicate_of = v.get("duplicate_of").and_then(|x| x.as_u64());
+            out.push(LabeledDoc { doc: Doc { id, text: doc_text }, duplicate_of });
+        }
+        Ok(out)
+    }
+}
+
+fn rng_choose<'a, T>(rng: &mut Xoshiro256pp, xs: &'a [T]) -> &'a T {
+    &xs[rng.below(xs.len() as u64) as usize]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn duplicate_rate_is_respected() {
+        let c = LabeledCorpus::build(DatasetSpec::testing(1, 500, 0.3));
+        assert_eq!(c.docs.len(), 500);
+        let rate = c.num_duplicates() as f64 / 500.0;
+        assert!((rate - 0.3).abs() < 0.01, "rate {rate}");
+    }
+
+    #[test]
+    fn originals_precede_their_duplicates() {
+        let c = LabeledCorpus::build(DatasetSpec::testing(2, 400, 0.5));
+        let pos: std::collections::HashMap<u64, usize> =
+            c.docs.iter().enumerate().map(|(i, d)| (d.doc.id, i)).collect();
+        for d in &c.docs {
+            if let Some(orig) = d.duplicate_of {
+                assert!(pos[&orig] < pos[&d.doc.id], "dup {:?} precedes original", d.doc.id);
+                // The referenced original must itself be an original.
+                let orig_doc = &c.docs[pos[&orig]];
+                assert!(orig_doc.duplicate_of.is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn duplicates_are_near_duplicates_of_their_original() {
+        use crate::minhash::signature::{exact_jaccard, MinHasher, PermFamily};
+        let c = LabeledCorpus::build(DatasetSpec::testing(3, 200, 0.5));
+        let mh = MinHasher::new(PermFamily::Mix64, 32, 1);
+        let by_id: std::collections::HashMap<u64, &str> =
+            c.docs.iter().map(|d| (d.doc.id, d.doc.text.as_str())).collect();
+        let mut min_j: f64 = 1.0;
+        for d in c.docs.iter().filter(|d| d.is_duplicate()).take(50) {
+            let orig = by_id[&d.duplicate_of.unwrap()];
+            let j = exact_jaccard(
+                &mh.shingle_hashes(&crate::text::normalize(orig)),
+                &mh.shingle_hashes(&crate::text::normalize(&d.doc.text)),
+            );
+            min_j = min_j.min(j);
+        }
+        assert!(min_j > 0.45, "weakest duplicate pair jaccard {min_j}");
+    }
+
+    #[test]
+    fn build_is_deterministic() {
+        let a = LabeledCorpus::build(DatasetSpec::testing(7, 100, 0.4));
+        let b = LabeledCorpus::build(DatasetSpec::testing(7, 100, 0.4));
+        for (x, y) in a.docs.iter().zip(&b.docs) {
+            assert_eq!(x.doc, y.doc);
+            assert_eq!(x.duplicate_of, y.duplicate_of);
+        }
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let c = LabeledCorpus::build(DatasetSpec::testing(9, 50, 0.5));
+        let dir = std::env::temp_dir().join(format!("lshbloom-ds-{}", std::process::id()));
+        let path = dir.join("c.jsonl");
+        c.save_jsonl(&path).unwrap();
+        let loaded = LabeledCorpus::load_jsonl(&path).unwrap();
+        assert_eq!(loaded.len(), c.docs.len());
+        for (a, b) in c.docs.iter().zip(&loaded) {
+            assert_eq!(a.doc, b.doc);
+            assert_eq!(a.duplicate_of, b.duplicate_of);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn zero_dup_rate_all_originals() {
+        let c = LabeledCorpus::build(DatasetSpec::testing(11, 50, 0.0));
+        assert_eq!(c.num_duplicates(), 0);
+    }
+}

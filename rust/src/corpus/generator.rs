@@ -1,0 +1,196 @@
+//! Synthetic document generator.
+//!
+//! Documents are scientific-prose-shaped: a title line, several
+//! paragraphs of Zipf-sampled sentences, occasional inline numerics.
+//! Each document mixes the global vocabulary with a small *topic bank*
+//! (a random vocabulary slice) so that distinct documents share function
+//! words but differ strongly in content words — like real corpora, where
+//! non-duplicate pairs have low but non-zero Jaccard similarity.
+
+use super::vocab::build_vocab;
+use super::Doc;
+use crate::rng::{geometric, Xoshiro256pp, Zipf};
+use std::sync::Arc;
+
+/// Generator configuration.
+#[derive(Clone, Debug)]
+pub struct GeneratorConfig {
+    /// Vocabulary size.
+    pub vocab_size: usize,
+    /// Zipf exponent for word sampling.
+    pub zipf_s: f64,
+    /// Mean words per sentence.
+    pub mean_sentence_words: usize,
+    /// Mean sentences per paragraph.
+    pub mean_paragraph_sentences: usize,
+    /// Minimum / maximum paragraphs per document.
+    pub paragraphs: (usize, usize),
+    /// Words drawn from the per-document topic bank with this probability.
+    pub topic_mix: f64,
+    /// Topic bank size (distinct content words per document).
+    pub topic_bank: usize,
+}
+
+impl Default for GeneratorConfig {
+    fn default() -> Self {
+        Self {
+            vocab_size: 20_000,
+            zipf_s: 1.05,
+            mean_sentence_words: 18,
+            mean_paragraph_sentences: 5,
+            paragraphs: (3, 10),
+            topic_mix: 0.35,
+            topic_bank: 120,
+        }
+    }
+}
+
+/// Tiny config for fast tests / CI (shorter docs).
+impl GeneratorConfig {
+    /// Short-document variant (abstract-length, ~80 words).
+    pub fn short() -> Self {
+        Self {
+            mean_sentence_words: 12,
+            mean_paragraph_sentences: 3,
+            paragraphs: (2, 4),
+            ..Self::default()
+        }
+    }
+}
+
+/// Deterministic corpus generator (seeded).
+pub struct CorpusGenerator {
+    vocab: Arc<Vec<String>>,
+    zipf: Zipf,
+    config: GeneratorConfig,
+}
+
+impl CorpusGenerator {
+    /// Build with a config; vocabulary construction is O(vocab_size).
+    pub fn new(config: GeneratorConfig) -> Self {
+        let vocab = Arc::new(build_vocab(config.vocab_size));
+        let zipf = Zipf::new(config.vocab_size, config.zipf_s);
+        Self { vocab, zipf, config }
+    }
+
+    /// Generate document `id` deterministically from `seed` and `id`.
+    pub fn generate(&self, seed: u64, id: u64) -> Doc {
+        let mut rng = Xoshiro256pp::seeded(seed ^ id.wrapping_mul(crate::rng::GOLDEN_GAMMA));
+        // Per-document topic bank: a contiguous-ish random slice of vocab.
+        let bank: Vec<usize> = (0..self.config.topic_bank)
+            .map(|_| rng.below(self.vocab.len() as u64) as usize)
+            .collect();
+
+        let mut text = String::with_capacity(2048);
+        // Title.
+        let title_words = 4 + rng.below(8) as usize;
+        for i in 0..title_words {
+            if i > 0 {
+                text.push(' ');
+            }
+            text.push_str(self.word(&mut rng, &bank));
+        }
+        text.push('\n');
+
+        let num_paras = rng.range_inclusive(
+            self.config.paragraphs.0 as u64,
+            self.config.paragraphs.1 as u64,
+        ) as usize;
+        for _ in 0..num_paras {
+            let sentences =
+                1 + geometric(&mut rng, 1.0 / self.config.mean_paragraph_sentences as f64);
+            for _ in 0..sentences {
+                let words = 3 + geometric(&mut rng, 1.0 / self.config.mean_sentence_words as f64);
+                for w in 0..words {
+                    if w > 0 {
+                        text.push(' ');
+                    }
+                    // Occasional inline numeric tokens.
+                    if rng.chance(0.03) {
+                        text.push_str(&format!("{:.2}", rng.next_f64() * 100.0));
+                    } else {
+                        text.push_str(self.word(&mut rng, &bank));
+                    }
+                }
+                text.push_str(". ");
+            }
+            text.push('\n');
+        }
+        Doc { id, text }
+    }
+
+    fn word(&self, rng: &mut Xoshiro256pp, bank: &[usize]) -> &str {
+        if rng.chance(self.config.topic_mix) {
+            let idx = bank[rng.below(bank.len() as u64) as usize];
+            &self.vocab[idx]
+        } else {
+            &self.vocab[self.zipf.sample(rng)]
+        }
+    }
+
+    /// The vocabulary (shared with noise injection).
+    pub fn vocab(&self) -> &Arc<Vec<String>> {
+        &self.vocab
+    }
+
+    /// Generator configuration.
+    pub fn config(&self) -> &GeneratorConfig {
+        &self.config
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::minhash::signature::{exact_jaccard, MinHasher, PermFamily};
+
+    #[test]
+    fn generation_is_deterministic() {
+        let g = CorpusGenerator::new(GeneratorConfig::short());
+        let a = g.generate(42, 7);
+        let b = g.generate(42, 7);
+        assert_eq!(a, b);
+        let c = g.generate(42, 8);
+        assert_ne!(a.text, c.text);
+    }
+
+    #[test]
+    fn documents_have_structure() {
+        let g = CorpusGenerator::new(GeneratorConfig::default());
+        let d = g.generate(1, 0);
+        let paras = crate::text::paragraphs(&d.text);
+        assert!(paras.len() >= 3, "expected multiple paragraphs");
+        assert!(d.text.split_whitespace().count() > 50, "doc too short");
+    }
+
+    #[test]
+    fn distinct_docs_have_low_jaccard() {
+        let g = CorpusGenerator::new(GeneratorConfig::default());
+        let mh = MinHasher::new(PermFamily::Mix64, 64, 1);
+        let mut max_j: f64 = 0.0;
+        let base = g.generate(5, 0);
+        let hb = mh.shingle_hashes(&crate::text::normalize(&base.text));
+        for id in 1..20 {
+            let other = g.generate(5, id);
+            let ho = mh.shingle_hashes(&crate::text::normalize(&other.text));
+            max_j = max_j.max(exact_jaccard(&hb, &ho));
+        }
+        // Non-duplicates share function words but must sit far below any
+        // sane dedup threshold.
+        assert!(max_j < 0.35, "non-duplicate Jaccard too high: {max_j}");
+        assert!(max_j > 0.0, "docs should share some function words");
+    }
+
+    #[test]
+    fn length_scales_with_config() {
+        let short = CorpusGenerator::new(GeneratorConfig::short());
+        let long = CorpusGenerator::new(GeneratorConfig::default());
+        let avg = |g: &CorpusGenerator| -> f64 {
+            (0..10)
+                .map(|i| g.generate(9, i).text.split_whitespace().count())
+                .sum::<usize>() as f64
+                / 10.0
+        };
+        assert!(avg(&long) > avg(&short) * 1.5);
+    }
+}

@@ -1,0 +1,50 @@
+//! Synthetic corpora with ground-truth duplicate labels.
+//!
+//! The paper evaluates on (a) labeled synthetic datasets built from
+//! AdaParse PDF/HTML parse pairs (fidelity, §5.1.4) and (b) peS2o
+//! (scale, §5.4). Neither is available offline, so this module generates
+//! the closest synthetic equivalents (see DESIGN.md §3 Substitutions):
+//!
+//! * [`generator`] — scientific-prose documents over a Zipf vocabulary
+//!   with configurable length distributions (abstract-ish to full-text).
+//! * [`noise`] — the two duplication mechanisms of §5.1.4: *parser-noise*
+//!   duplicates (OCR-style character aberrations at per-parser rates
+//!   emulating PyMuPDF / Nougat / Tesseract) and *truncation* duplicates.
+//! * [`dataset`] — labeled tuning/testing dataset builder: balanced
+//!   duplicate types, target duplication rate, shuffled stream order with
+//!   originals preceding their duplicates.
+
+pub mod dataset;
+pub mod generator;
+pub mod noise;
+pub mod stream;
+pub mod vocab;
+
+pub use dataset::{DatasetSpec, LabeledCorpus};
+pub use generator::{CorpusGenerator, GeneratorConfig};
+pub use noise::{Parser, TruncationNoise};
+pub use stream::StreamSpec;
+
+/// A document in the stream.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Doc {
+    /// Stream id (position in ingestion order).
+    pub id: u64,
+    /// Raw text content.
+    pub text: String,
+}
+
+/// A labeled document: `duplicate_of` is the id of the original it
+/// duplicates (ground truth), if any.
+#[derive(Clone, Debug)]
+pub struct LabeledDoc {
+    pub doc: Doc,
+    pub duplicate_of: Option<u64>,
+}
+
+impl LabeledDoc {
+    /// Ground-truth positive ("is a duplicate") label.
+    pub fn is_duplicate(&self) -> bool {
+        self.duplicate_of.is_some()
+    }
+}

@@ -1,0 +1,220 @@
+//! Duplicate-generation noise models (§5.1.4 substitution).
+//!
+//! The paper's fidelity benchmark contains two duplicate flavors, both
+//! reproduced here:
+//!
+//! * **Parser-noise duplicates** — the same underlying document parsed by
+//!   a different tool (PyMuPDF / Nougat / Tesseract). Emulated by
+//!   character-level OCR aberrations (substitutions, ligature splits,
+//!   hyphenation, whitespace/linebreak mangling, dropped punctuation) at
+//!   per-parser rates.
+//! * **Truncation duplicates** — parsing errors that abruptly skip or cut
+//!   text; emulated by truncating a random fraction of the document tail
+//!   (and optionally a short head skip).
+
+use crate::rng::Xoshiro256pp;
+
+/// A simulated PDF/HTML parser with a characteristic error profile.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Parser {
+    /// Text-layer extraction: very light noise, linebreak changes.
+    PyMuPdf,
+    /// Neural OCR: moderate substitutions, occasional dropped spans.
+    Nougat,
+    /// Classic OCR: heaviest character confusion + hyphenation.
+    Tesseract,
+}
+
+impl Parser {
+    /// All parsers, with the paper's "roughly the same frequency" usage.
+    pub const ALL: [Parser; 3] = [Parser::PyMuPdf, Parser::Nougat, Parser::Tesseract];
+
+    /// Per-character substitution probability.
+    fn char_sub_rate(self) -> f64 {
+        match self {
+            Parser::PyMuPdf => 0.0005,
+            Parser::Nougat => 0.004,
+            Parser::Tesseract => 0.012,
+        }
+    }
+
+    /// Probability a space becomes a linebreak or is doubled.
+    fn whitespace_rate(self) -> f64 {
+        match self {
+            Parser::PyMuPdf => 0.02,
+            Parser::Nougat => 0.01,
+            Parser::Tesseract => 0.03,
+        }
+    }
+
+    /// Probability of hyphenating (splitting) a long word.
+    fn hyphenation_rate(self) -> f64 {
+        match self {
+            Parser::PyMuPdf => 0.0,
+            Parser::Nougat => 0.002,
+            Parser::Tesseract => 0.01,
+        }
+    }
+}
+
+/// Apply parser noise to a document, returning the "re-parsed" text.
+pub fn parser_noise(text: &str, parser: Parser, rng: &mut Xoshiro256pp) -> String {
+    let mut out = String::with_capacity(text.len() + 64);
+    let sub_rate = parser.char_sub_rate();
+    let ws_rate = parser.whitespace_rate();
+    let hyph_rate = parser.hyphenation_rate();
+    let mut word_len = 0usize;
+    for ch in text.chars() {
+        if ch == ' ' {
+            word_len = 0;
+            if rng.chance(ws_rate) {
+                // Linebreak reflow or doubled space.
+                if rng.chance(0.5) {
+                    out.push('\n');
+                } else {
+                    out.push_str("  ");
+                }
+            } else {
+                out.push(' ');
+            }
+            continue;
+        }
+        word_len += 1;
+        if ch.is_alphabetic() && rng.chance(sub_rate) {
+            out.push(confuse(ch, rng));
+            continue;
+        }
+        if ch.is_ascii_punctuation() && rng.chance(sub_rate * 2.0) {
+            continue; // dropped punctuation
+        }
+        if word_len > 6 && rng.chance(hyph_rate) {
+            out.push_str("-\n");
+            word_len = 0;
+        }
+        out.push(ch);
+    }
+    out
+}
+
+fn confuse(ch: char, rng: &mut Xoshiro256pp) -> char {
+    const TABLE: &[(char, char)] = &[
+        ('l', '1'),
+        ('i', 'l'),
+        ('o', '0'),
+        ('e', 'c'),
+        ('a', 'o'),
+        ('s', '5'),
+        ('b', '6'),
+        ('g', 'q'),
+        ('n', 'h'),
+        ('u', 'v'),
+    ];
+    for &(from, to) in TABLE {
+        if ch == from {
+            return to;
+        }
+        if ch == to {
+            return from;
+        }
+    }
+    // Unknown character: perturb within lowercase letters.
+    if ch.is_ascii_lowercase() {
+        (b'a' + rng.below(26) as u8) as char
+    } else {
+        ch
+    }
+}
+
+/// Truncation noise parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct TruncationNoise {
+    /// Keep at least this fraction of the document.
+    pub min_keep: f64,
+    /// Keep at most this fraction.
+    pub max_keep: f64,
+}
+
+impl Default for TruncationNoise {
+    fn default() -> Self {
+        // §5.1.4 duplicates must remain duplicates under T=0.5; keep the
+        // bulk of the document.
+        Self { min_keep: 0.7, max_keep: 0.95 }
+    }
+}
+
+/// Truncate the tail of a document at a word boundary.
+pub fn truncate(text: &str, noise: TruncationNoise, rng: &mut Xoshiro256pp) -> String {
+    let words: Vec<&str> = text.split_inclusive(char::is_whitespace).collect();
+    if words.len() < 4 {
+        return text.to_string();
+    }
+    let keep_frac = noise.min_keep + rng.next_f64() * (noise.max_keep - noise.min_keep);
+    let keep = ((words.len() as f64 * keep_frac).round() as usize).clamp(1, words.len());
+    words[..keep].concat()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::minhash::signature::{exact_jaccard, MinHasher, PermFamily};
+    use crate::text::normalize;
+
+    fn sample_doc() -> String {
+        let g = crate::corpus::generator::CorpusGenerator::new(Default::default());
+        g.generate(3, 1).text
+    }
+
+    fn jaccard(a: &str, b: &str) -> f64 {
+        let mh = MinHasher::new(PermFamily::Mix64, 32, 1);
+        exact_jaccard(
+            &mh.shingle_hashes(&normalize(a)),
+            &mh.shingle_hashes(&normalize(b)),
+        )
+    }
+
+    #[test]
+    fn parser_noise_preserves_high_similarity() {
+        let doc = sample_doc();
+        let mut rng = Xoshiro256pp::seeded(1);
+        for parser in Parser::ALL {
+            let noisy = parser_noise(&doc, parser, &mut rng);
+            let j = jaccard(&doc, &noisy);
+            assert!(j > 0.55, "{parser:?}: jaccard {j} too low to be a near-duplicate");
+            assert!(j < 1.0 || parser == Parser::PyMuPdf, "{parser:?} should perturb");
+        }
+    }
+
+    #[test]
+    fn tesseract_noisier_than_pymupdf() {
+        let doc = sample_doc();
+        let mut rng = Xoshiro256pp::seeded(2);
+        let light = jaccard(&doc, &parser_noise(&doc, Parser::PyMuPdf, &mut rng));
+        let heavy = jaccard(&doc, &parser_noise(&doc, Parser::Tesseract, &mut rng));
+        assert!(light > heavy, "light {light} vs heavy {heavy}");
+    }
+
+    #[test]
+    fn truncation_keeps_prefix() {
+        let doc = sample_doc();
+        let mut rng = Xoshiro256pp::seeded(3);
+        let t = truncate(&doc, TruncationNoise::default(), &mut rng);
+        assert!(t.len() < doc.len());
+        assert!(doc.starts_with(&t[..t.len().min(40)]));
+        let j = jaccard(&doc, &t);
+        assert!(j > 0.6, "truncation jaccard {j}");
+    }
+
+    #[test]
+    fn truncation_short_doc_is_identity() {
+        let mut rng = Xoshiro256pp::seeded(4);
+        assert_eq!(truncate("a b c", TruncationNoise::default(), &mut rng), "a b c");
+    }
+
+    #[test]
+    fn noise_is_deterministic_per_seed() {
+        let doc = sample_doc();
+        let a = parser_noise(&doc, Parser::Nougat, &mut Xoshiro256pp::seeded(9));
+        let b = parser_noise(&doc, Parser::Nougat, &mut Xoshiro256pp::seeded(9));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,146 @@
+//! Streaming corpus generation for scale experiments (Fig. 1, 7, 8).
+//!
+//! [`LabeledCorpus`](super::dataset::LabeledCorpus) materializes the whole
+//! dataset (fine at 50 k fidelity scale); the scaling study needs millions
+//! of documents, so this iterator generates documents lazily in O(1)
+//! memory: originals come from the deterministic generator, duplicates
+//! are parser-noise/truncation mutations of a bounded reservoir of recent
+//! originals (matching real streams, where near-duplicates cluster in
+//! time). Originals always precede their duplicates.
+
+use super::generator::{CorpusGenerator, GeneratorConfig};
+use super::noise::{parser_noise, truncate, Parser, TruncationNoise};
+use super::{Doc, LabeledDoc};
+use crate::rng::Xoshiro256pp;
+
+/// Specification of a lazy labeled stream.
+#[derive(Clone, Debug)]
+pub struct StreamSpec {
+    pub total_docs: u64,
+    pub dup_rate: f64,
+    pub seed: u64,
+    pub generator: GeneratorConfig,
+    pub truncation: TruncationNoise,
+    /// Duplicates are drawn from the last `reservoir` originals.
+    pub reservoir: usize,
+}
+
+impl StreamSpec {
+    /// peS2o-sim defaults: full-length docs, ~30% duplication.
+    pub fn pes2o_sim(seed: u64, total_docs: u64) -> Self {
+        Self {
+            total_docs,
+            dup_rate: 0.3,
+            seed,
+            generator: GeneratorConfig::default(),
+            truncation: TruncationNoise::default(),
+            reservoir: 1024,
+        }
+    }
+
+    /// Instantiate the iterator.
+    pub fn stream(&self) -> CorpusStream {
+        CorpusStream {
+            gen: CorpusGenerator::new(self.generator.clone()),
+            rng: Xoshiro256pp::seeded(self.seed),
+            spec: self.clone(),
+            emitted: 0,
+            originals_made: 0,
+            reservoir: Vec::with_capacity(self.reservoir),
+        }
+    }
+}
+
+/// The lazy document stream.
+pub struct CorpusStream {
+    gen: CorpusGenerator,
+    rng: Xoshiro256pp,
+    spec: StreamSpec,
+    emitted: u64,
+    originals_made: u64,
+    /// (stream id, text) of recent originals.
+    reservoir: Vec<(u64, String)>,
+}
+
+impl Iterator for CorpusStream {
+    type Item = LabeledDoc;
+
+    fn next(&mut self) -> Option<LabeledDoc> {
+        if self.emitted >= self.spec.total_docs {
+            return None;
+        }
+        let id = self.emitted;
+        self.emitted += 1;
+
+        let make_dup = !self.reservoir.is_empty() && self.rng.chance(self.spec.dup_rate);
+        let item = if make_dup {
+            let pick = self.rng.below(self.reservoir.len() as u64) as usize;
+            let (orig_id, orig_text) = &self.reservoir[pick];
+            let text = if self.rng.chance(0.5) {
+                let parser = Parser::ALL[self.rng.below(3) as usize];
+                parser_noise(orig_text, parser, &mut self.rng)
+            } else {
+                truncate(orig_text, self.spec.truncation, &mut self.rng)
+            };
+            LabeledDoc { doc: Doc { id, text }, duplicate_of: Some(*orig_id) }
+        } else {
+            let doc = self.gen.generate(self.spec.seed, self.originals_made);
+            self.originals_made += 1;
+            let text = doc.text;
+            if self.reservoir.len() < self.spec.reservoir {
+                self.reservoir.push((id, text.clone()));
+            } else {
+                let slot = self.rng.below(self.spec.reservoir as u64) as usize;
+                self.reservoir[slot] = (id, text.clone());
+            }
+            LabeledDoc { doc: Doc { id, text }, duplicate_of: None }
+        };
+        Some(item)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let left = (self.spec.total_docs - self.emitted) as usize;
+        (left, Some(left))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_respects_count_and_rate() {
+        let spec = StreamSpec { dup_rate: 0.4, ..StreamSpec::pes2o_sim(1, 2000) };
+        let docs: Vec<LabeledDoc> = spec.stream().collect();
+        assert_eq!(docs.len(), 2000);
+        let dups = docs.iter().filter(|d| d.is_duplicate()).count();
+        let rate = dups as f64 / 2000.0;
+        assert!((rate - 0.4).abs() < 0.05, "rate {rate}");
+    }
+
+    #[test]
+    fn duplicates_reference_earlier_ids() {
+        let spec = StreamSpec::pes2o_sim(2, 500);
+        for d in spec.stream() {
+            if let Some(orig) = d.duplicate_of {
+                assert!(orig < d.doc.id);
+            }
+        }
+    }
+
+    #[test]
+    fn stream_is_deterministic() {
+        let spec = StreamSpec::pes2o_sim(3, 100);
+        let a: Vec<String> = spec.stream().map(|d| d.doc.text).collect();
+        let b: Vec<String> = spec.stream().map(|d| d.doc.text).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn ids_are_stream_positions() {
+        let spec = StreamSpec::pes2o_sim(4, 50);
+        for (i, d) in spec.stream().enumerate() {
+            assert_eq!(d.doc.id, i as u64);
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Synthetic scientific vocabulary.
+//!
+//! A deterministic lexicon of plausible scientific-prose tokens: a core
+//! of real function words (so documents have natural high-frequency
+//! structure), a bank of domain stems composed with suffixes, plus
+//! numerals and symbols that PDF parsers commonly mangle.
+
+/// High-frequency function words (ranks 0..~50 under Zipf sampling).
+pub const FUNCTION_WORDS: &[&str] = &[
+    "the", "of", "and", "a", "to", "in", "is", "we", "that", "for", "with",
+    "as", "are", "this", "by", "on", "be", "an", "which", "from", "our",
+    "can", "at", "these", "it", "results", "model", "data", "using", "each",
+    "between", "where", "when", "than", "into", "both", "under", "over",
+    "not", "or", "has", "have", "was", "were", "its", "their", "however",
+    "thus", "therefore", "furthermore",
+];
+
+/// Domain stems for content words.
+pub const STEMS: &[&str] = &[
+    "spectr", "quant", "neur", "molec", "catal", "enzym", "polym", "therm",
+    "electr", "magnet", "optic", "photon", "proton", "isotop", "genom",
+    "protein", "lipid", "membran", "cellul", "vascul", "cardi", "cortic",
+    "synapt", "algorithm", "comput", "stochast", "bayes", "gradient",
+    "tensor", "matrix", "eigen", "fourier", "laplac", "hamilton", "lagrang",
+    "entrop", "diffus", "convect", "turbul", "laminar", "viscos", "elastic",
+    "plastic", "crystall", "amorph", "lattice", "dopant", "semiconduct",
+    "superconduct", "ferromagnet", "dielectr", "piezo", "katalys", "oxid",
+    "reduct", "hydrolys", "synthes", "polymeris", "ligand", "receptor",
+    "antibod", "antigen", "pathogen", "viral", "bacteri", "fungal",
+    "ecolog", "climat", "atmospher", "ocean", "seismic", "tecton",
+    "stratigraph", "sediment", "mineral", "petrolog", "econometr", "equilibr",
+];
+
+/// Suffixes composing stems into word families.
+pub const SUFFIXES: &[&str] = &[
+    "al", "ic", "ity", "ation", "ism", "ous", "ive", "ly", "s", "es", "ed",
+    "ing", "ant", "ent", "ible", "ance", "ence", "or", "er", "um", "a",
+];
+
+/// Build the full deterministic vocabulary of `size` words.
+///
+/// Layout: function words first (so Zipf rank 0.. hits them), then
+/// stem+suffix compositions, then numbered technical identifiers.
+pub fn build_vocab(size: usize) -> Vec<String> {
+    let mut v: Vec<String> = Vec::with_capacity(size);
+    for w in FUNCTION_WORDS {
+        if v.len() >= size {
+            return v;
+        }
+        v.push((*w).to_string());
+    }
+    'outer: for suf in SUFFIXES {
+        for stem in STEMS {
+            if v.len() >= size {
+                break 'outer;
+            }
+            v.push(format!("{stem}{suf}"));
+        }
+    }
+    // Tail: numbered identifiers (rare words — the Zipf tail).
+    let mut i = 0usize;
+    while v.len() < size {
+        v.push(format!("var{i:x}"));
+        i += 1;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_is_deterministic_and_sized() {
+        let a = build_vocab(5000);
+        let b = build_vocab(5000);
+        assert_eq!(a.len(), 5000);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn vocab_has_no_duplicates() {
+        let v = build_vocab(3000);
+        let mut set = std::collections::HashSet::new();
+        for w in &v {
+            assert!(set.insert(w.clone()), "duplicate word {w}");
+        }
+    }
+
+    #[test]
+    fn function_words_lead() {
+        let v = build_vocab(1000);
+        assert_eq!(v[0], "the");
+        assert!(v[..50].iter().any(|w| w == "model"));
+    }
+
+    #[test]
+    fn small_vocab_truncates_cleanly() {
+        assert_eq!(build_vocab(3).len(), 3);
+        assert_eq!(build_vocab(0).len(), 0);
+    }
+}

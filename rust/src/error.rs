@@ -1,0 +1,79 @@
+//! Crate-level error type.
+//!
+//! A small hand-rolled enum (no `thiserror` offline); `anyhow` is used at
+//! binary boundaries, this type at library boundaries where callers may
+//! want to match on the failure class.
+
+use std::fmt;
+
+/// Errors produced by the lshbloom library.
+#[derive(Debug)]
+pub enum Error {
+    /// I/O failure with context path.
+    Io { path: String, source: std::io::Error },
+    /// Malformed input (corpus line, config file, artifact manifest, …).
+    Parse { what: String, detail: String },
+    /// Invalid configuration or parameter combination.
+    Config(String),
+    /// Index persistence format problems.
+    Format(String),
+    /// PJRT / XLA runtime failures (stringified — xla::Error is not `Sync`).
+    Runtime(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io { path, source } => write!(f, "io error on {path}: {source}"),
+            Error::Parse { what, detail } => write!(f, "parse error in {what}: {detail}"),
+            Error::Config(msg) => write!(f, "config error: {msg}"),
+            Error::Format(msg) => write!(f, "format error: {msg}"),
+            Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+impl Error {
+    /// Convenience constructor for I/O errors with a path.
+    pub fn io(path: impl Into<String>, source: std::io::Error) -> Self {
+        Error::Io { path: path.into(), source }
+    }
+
+    /// Convenience constructor for parse errors.
+    pub fn parse(what: impl Into<String>, detail: impl Into<String>) -> Self {
+        Error::Parse { what: what.into(), detail: detail.into() }
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        let e = Error::parse("corpus", "bad line 3");
+        assert_eq!(e.to_string(), "parse error in corpus: bad line 3");
+        let e = Error::Config("b*r > num_perm".into());
+        assert!(e.to_string().contains("b*r"));
+    }
+
+    #[test]
+    fn io_error_preserves_source() {
+        use std::error::Error as _;
+        let e = Error::io("/tmp/x", std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        assert!(e.source().is_some());
+        assert!(e.to_string().contains("/tmp/x"));
+    }
+}

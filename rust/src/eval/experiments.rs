@@ -1,0 +1,442 @@
+//! Paper experiment drivers — one function per figure/table.
+//!
+//! Shared by the `cargo bench` binaries and the CLI so a figure is
+//! regenerated identically from either entry point. Each driver takes a
+//! [`Scale`] so CI can run a shrunken version (`LSHBLOOM_BENCH_QUICK=1`)
+//! while full runs populate EXPERIMENTS.md.
+
+use crate::corpus::{DatasetSpec, LabeledCorpus, LabeledDoc, StreamSpec};
+use crate::eval::runner::{run_method, EvalResult};
+use crate::eval::tuner::{self, GridPoint};
+use crate::methods::{MethodKind, MethodSpec};
+use crate::minhash::{optimal_param, LshParams};
+use crate::pipeline::{run_stream, PipelineOptions, RunStats};
+
+/// Experiment sizing.
+#[derive(Clone, Copy, Debug)]
+pub struct Scale {
+    /// Tuning-corpus documents (paper: 24 000).
+    pub tuning_docs: usize,
+    /// Testing-corpus documents (paper: 50 000).
+    pub testing_docs: usize,
+    /// Largest peS2o-sim subset (paper: 39 M).
+    pub scale_docs: u64,
+    /// Master seed for every corpus.
+    pub seed: u64,
+}
+
+impl Scale {
+    /// Paper-sized fidelity corpora (24 k / 50 k), 200 k scale cap.
+    pub fn paper() -> Self {
+        Self { tuning_docs: 24_000, testing_docs: 50_000, scale_docs: 200_000, seed: 0xE5C0 }
+    }
+
+    /// Default bench scale: same shapes, sized for a single-node run.
+    pub fn standard() -> Self {
+        Self { tuning_docs: 8_000, testing_docs: 15_000, scale_docs: 100_000, seed: 0xE5C0 }
+    }
+
+    /// Reduced scale for interactive/CI runs.
+    pub fn quick() -> Self {
+        Self { tuning_docs: 1_200, testing_docs: 2_000, scale_docs: 10_000, seed: 0xE5C0 }
+    }
+
+    /// Select via env: `LSHBLOOM_BENCH_QUICK=1` → quick,
+    /// `LSHBLOOM_SCALE=paper` → paper-sized, otherwise standard.
+    pub fn from_env() -> Self {
+        if std::env::var("LSHBLOOM_BENCH_QUICK").map(|v| v == "1").unwrap_or(false) {
+            return Self::quick();
+        }
+        match std::env::var("LSHBLOOM_SCALE").as_deref() {
+            Ok("paper") => Self::paper(),
+            _ => Self::standard(),
+        }
+    }
+}
+
+fn default_opts() -> PipelineOptions {
+    PipelineOptions::default()
+}
+
+/// Build (and cache per process) the tuning corpus.
+pub fn tuning_corpus(scale: Scale) -> LabeledCorpus {
+    LabeledCorpus::build(DatasetSpec::tuning(scale.seed, scale.tuning_docs))
+}
+
+/// Build a testing corpus at a duplication rate.
+pub fn testing_corpus(scale: Scale, dup_rate: f64) -> LabeledCorpus {
+    LabeledCorpus::build(DatasetSpec::testing(
+        scale.seed ^ (dup_rate * 1000.0) as u64,
+        scale.testing_docs,
+        dup_rate,
+    ))
+}
+
+// ---------------------------------------------------------------- Fig. 1
+
+/// One method's phase breakdown on a peS2o-sim subset.
+#[derive(Clone, Debug)]
+pub struct Breakdown {
+    pub method: String,
+    pub minhash_secs: f64,
+    pub index_secs: f64,
+    pub other_secs: f64,
+    pub wall_secs: f64,
+    pub docs: u64,
+}
+
+impl Breakdown {
+    fn from_stats(method: &str, stats: &RunStats) -> Self {
+        let prep = stats.times.prepare_wall_est(stats.workers).as_secs_f64();
+        let decide = stats.times.decide.as_secs_f64();
+        let wall = stats.times.wall.as_secs_f64();
+        Self {
+            method: method.to_string(),
+            minhash_secs: prep,
+            index_secs: decide,
+            other_secs: (wall - prep - decide).max(0.0),
+            wall_secs: wall,
+            docs: stats.docs,
+        }
+    }
+}
+
+/// Fig. 1: wall-clock breakdown of MinHashLSH vs LSHBloom on a 10% subset.
+///
+/// Emits three rows: the honest rust-normalized baseline, the
+/// paper-calibrated datasketch cost simulation (see
+/// `methods::minhashlsh::PySimCosts`), and LSHBloom.
+pub fn fig1_breakdown(scale: Scale) -> Vec<Breakdown> {
+    let docs = (scale.scale_docs / 10).max(1000);
+    let mut out = Vec::new();
+    for kind in [MethodKind::MinHashLsh, MethodKind::LshBloom] {
+        let spec = StreamSpec::pes2o_sim(scale.seed, docs);
+        let sample: Vec<crate::corpus::Doc> =
+            spec.stream().take(200).map(|ld| ld.doc).collect();
+        let mut method = MethodSpec::best(kind, docs).build(&sample);
+        let stats = run_stream(
+            &mut method,
+            spec.stream().map(|ld| ld.doc),
+            default_opts(),
+        );
+        out.push(Breakdown::from_stats(kind.name(), &stats));
+    }
+    // The datasketch-calibrated baseline (paper's actual comparator).
+    {
+        let spec = StreamSpec::pes2o_sim(scale.seed, docs);
+        let cfg = crate::config::PipelineConfig {
+            threshold: 0.5,
+            num_perms: 256,
+            expected_docs: docs,
+            ..Default::default()
+        };
+        let mut method = crate::methods::minhashlsh::minhashlsh_pysim_method(
+            &cfg,
+            crate::minhash::PermFamily::Mix64,
+            crate::methods::minhashlsh::PySimCosts::paper_calibrated(),
+        );
+        let stats = run_stream(&mut method, spec.stream().map(|ld| ld.doc), default_opts());
+        out.push(Breakdown::from_stats("minhashlsh-pysim", &stats));
+    }
+    out
+}
+
+// ----------------------------------------------------------- Figs. 2-4
+
+/// Fig. 2 grids (MinHashLSH + LSHBloom over permutations × threshold).
+pub fn fig2_grids(scale: Scale) -> Vec<(MethodKind, Vec<GridPoint>)> {
+    let corpus = tuning_corpus(scale);
+    [MethodKind::MinHashLsh, MethodKind::LshBloom]
+        .into_iter()
+        .map(|kind| {
+            let pts = tuner::tune_lsh(
+                kind,
+                &corpus.docs,
+                &tuner::ranges::THRESHOLDS,
+                &tuner::ranges::PERMS,
+                default_opts(),
+            );
+            (kind, pts)
+        })
+        .collect()
+}
+
+/// Fig. 3 grids (DCLM + Dolma-Ngram over n-gram size × threshold).
+pub fn fig3_grids(scale: Scale) -> Vec<(MethodKind, Vec<GridPoint>)> {
+    let corpus = tuning_corpus(scale);
+    [MethodKind::Dclm, MethodKind::DolmaNgram]
+        .into_iter()
+        .map(|kind| {
+            let pts = tuner::tune_ngram(
+                kind,
+                &corpus.docs,
+                &tuner::ranges::THRESHOLDS,
+                &tuner::ranges::NGRAMS,
+                default_opts(),
+            );
+            (kind, pts)
+        })
+        .collect()
+}
+
+/// Fig. 4 sweeps (Dolma + CCNet over threshold).
+pub fn fig4_sweeps(scale: Scale) -> Vec<(MethodKind, Vec<GridPoint>)> {
+    let corpus = tuning_corpus(scale);
+    [MethodKind::Dolma, MethodKind::CcNet]
+        .into_iter()
+        .map(|kind| {
+            let pts = tuner::tune_paragraph(
+                kind,
+                &corpus.docs,
+                &tuner::ranges::THRESHOLDS,
+                default_opts(),
+            );
+            (kind, pts)
+        })
+        .collect()
+}
+
+/// Table 1: best setting per technique from the tuning grids.
+pub fn table1(scale: Scale) -> Vec<GridPoint> {
+    let mut best = Vec::new();
+    for (_, pts) in fig2_grids(scale) {
+        best.push(tuner::best(&pts).clone());
+    }
+    for (_, pts) in fig3_grids(scale) {
+        best.push(tuner::best(&pts).clone());
+    }
+    for (_, pts) in fig4_sweeps(scale) {
+        best.push(tuner::best(&pts).clone());
+    }
+    best
+}
+
+// ---------------------------------------------------------------- Fig. 5
+
+/// Fig. 5: fidelity of all six methods across duplication rates.
+pub fn fig5_fidelity(scale: Scale, rates: &[f64]) -> Vec<(f64, Vec<EvalResult>)> {
+    let mut out = Vec::new();
+    for &rate in rates {
+        let corpus = testing_corpus(scale, rate);
+        let results = run_all_methods(&corpus.docs, scale);
+        out.push((rate, results));
+    }
+    out
+}
+
+/// Run every technique at its Table-1 best settings on a labeled corpus.
+pub fn run_all_methods(docs: &[LabeledDoc], _scale: Scale) -> Vec<EvalResult> {
+    let sample: Vec<crate::corpus::Doc> =
+        docs.iter().take(1000).map(|ld| ld.doc.clone()).collect();
+    MethodKind::ALL
+        .into_iter()
+        .map(|kind| {
+            let mut m = MethodSpec::best(kind, docs.len() as u64).build(&sample);
+            run_method(&mut m, docs, default_opts())
+        })
+        .collect()
+}
+
+/// Fig. 6: the balanced-corpus (50 % dup) pareto data.
+pub fn fig6_pareto(scale: Scale) -> Vec<EvalResult> {
+    let corpus = testing_corpus(scale, 0.5);
+    run_all_methods(&corpus.docs, scale)
+}
+
+// ---------------------------------------------------------------- Fig. 7
+
+/// One scaling measurement.
+#[derive(Clone, Debug)]
+pub struct ScalePoint {
+    pub method: String,
+    pub docs: u64,
+    pub wall_secs: f64,
+    pub disk_bytes: u64,
+    pub duplicates: u64,
+}
+
+/// Methods included in the scaling study (paper: n-gram methods excluded
+/// as prohibitively slow).
+pub const SCALE_METHODS: [MethodKind; 4] = [
+    MethodKind::MinHashLsh,
+    MethodKind::LshBloom,
+    MethodKind::Dolma,
+    MethodKind::CcNet,
+];
+
+/// Fig. 7: runtime + disk over peS2o-sim subsets.
+///
+/// Includes the datasketch-calibrated baseline (`minhashlsh-pysim`) on
+/// the smaller fractions only — its simulated 2.9 ms/doc index cost is
+/// the point being measured, so larger subsets are extrapolated (as the
+/// paper itself does for 5 B docs).
+pub fn fig7_scaling(scale: Scale, fractions: &[f64]) -> Vec<ScalePoint> {
+    let mut out = Vec::new();
+    for &frac in fractions {
+        let docs = ((scale.scale_docs as f64 * frac) as u64).max(500);
+        for kind in SCALE_METHODS {
+            let spec = StreamSpec::pes2o_sim(scale.seed, docs);
+            let sample: Vec<crate::corpus::Doc> =
+                spec.stream().take(200).map(|ld| ld.doc).collect();
+            let mut method = MethodSpec::best(kind, docs).build(&sample);
+            let stats = run_stream(&mut method, spec.stream().map(|ld| ld.doc), default_opts());
+            out.push(ScalePoint {
+                method: kind.name().to_string(),
+                docs,
+                wall_secs: stats.times.wall.as_secs_f64(),
+                disk_bytes: stats.disk_bytes,
+                duplicates: stats.duplicates,
+            });
+        }
+        if frac <= 0.25 {
+            let spec = StreamSpec::pes2o_sim(scale.seed, docs);
+            let cfg = crate::config::PipelineConfig {
+                threshold: 0.5,
+                num_perms: 256,
+                expected_docs: docs,
+                ..Default::default()
+            };
+            let mut method = crate::methods::minhashlsh::minhashlsh_pysim_method(
+                &cfg,
+                crate::minhash::PermFamily::Mix64,
+                crate::methods::minhashlsh::PySimCosts::paper_calibrated(),
+            );
+            let stats = run_stream(&mut method, spec.stream().map(|ld| ld.doc), default_opts());
+            out.push(ScalePoint {
+                method: "minhashlsh-pysim".to_string(),
+                docs,
+                wall_secs: stats.times.wall.as_secs_f64(),
+                disk_bytes: stats.disk_bytes,
+                duplicates: stats.duplicates,
+            });
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------- Fig. 8 / Table 2
+
+/// Fig. 8: per-method linear runtime fits extrapolated to target sizes.
+pub fn fig8_extrapolate(
+    points: &[ScalePoint],
+    targets: &[u64],
+) -> Vec<(String, Vec<(u64, f64)>)> {
+    use crate::eval::extrapolate::LinearFit;
+    let mut methods: Vec<String> = points.iter().map(|p| p.method.clone()).collect();
+    methods.sort();
+    methods.dedup();
+    methods
+        .into_iter()
+        .filter_map(|m| {
+            let samples: Vec<(f64, f64)> = points
+                .iter()
+                .filter(|p| p.method == m)
+                .map(|p| (p.docs as f64, p.wall_secs))
+                .collect();
+            if samples.len() < 2 {
+                return None; // not enough measurements to fit
+            }
+            let fit = LinearFit::fit(&samples);
+            let proj = targets.iter().map(|&n| (n, fit.at(n as f64))).collect();
+            Some((m, proj))
+        })
+        .collect()
+}
+
+/// Table 2: extrapolated index storage (closed-form LSHBloom vs linear
+/// MinHashLSH) using the Table-1 tuned geometry.
+pub fn table2_rows() -> Vec<crate::eval::extrapolate::StorageRow> {
+    let lsh: LshParams = optimal_param(0.5, 256); // Table-1 best: (42, 6)
+    let ns = [5_000_000_000u64, 100_000_000_000];
+    let mut rows = Vec::new();
+    for n in ns {
+        for (p, _label) in [(1e-5, "1e-5"), (1e-8, "1e-8"), (1.0 / n as f64, "1/N")] {
+            rows.push(crate::eval::extrapolate::StorageRow {
+                p_effective: p,
+                n,
+                lshbloom_bytes: crate::eval::extrapolate::lshbloom_index_bytes(n, p, lsh),
+                // 8-byte hashes (our u64 pipeline) + 24B entry overhead.
+                minhashlsh_bytes: crate::eval::extrapolate::minhashlsh_index_bytes(n, lsh, 8, 24),
+            });
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Scale {
+        Scale { tuning_docs: 120, testing_docs: 150, scale_docs: 2_000, seed: 7 }
+    }
+
+    #[test]
+    fn fig1_runs_and_shows_index_gap() {
+        let rows = fig1_breakdown(tiny());
+        assert_eq!(rows.len(), 3);
+        let mlsh = rows.iter().find(|r| r.method == "minhashlsh").unwrap();
+        let lshb = rows.iter().find(|r| r.method == "lshbloom").unwrap();
+        assert_eq!(mlsh.docs, lshb.docs);
+        // LSHBloom's index phase must be cheaper than MinHashLSH's.
+        assert!(lshb.index_secs < mlsh.index_secs, "{rows:?}");
+    }
+
+    #[test]
+    fn fig5_runs_all_methods() {
+        let results = fig5_fidelity(tiny(), &[0.5]);
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].1.len(), 6);
+        for r in &results[0].1 {
+            assert_eq!(r.docs, 150, "{}", r.method);
+        }
+    }
+
+    #[test]
+    fn fig7_and_fig8_pipeline() {
+        let pts = fig7_scaling(tiny(), &[0.25, 0.5, 1.0]);
+        // 3 fractions x 4 real methods + 1 pysim row (fraction 0.25 only).
+        assert_eq!(pts.len(), 3 * SCALE_METHODS.len() + 1);
+        let proj = fig8_extrapolate(&pts, &[100_000]);
+        // pysim has a single point -> excluded from fits.
+        assert_eq!(proj.len(), SCALE_METHODS.len());
+        for (m, targets) in &proj {
+            assert!(targets[0].1.is_finite(), "{m}");
+        }
+    }
+
+    #[test]
+    fn fig1_pysim_reproduces_paper_profile() {
+        let rows = fig1_breakdown(tiny());
+        let pysim = rows.iter().find(|r| r.method == "minhashlsh-pysim").unwrap();
+        let mlsh = rows.iter().find(|r| r.method == "minhashlsh").unwrap();
+        // Paper Fig. 1: index ops dominate the Python baseline (>85% in
+        // release at scale; in debug-built tests the prepare phase is
+        // inflated, so assert the calibrated gap instead of the share).
+        // The rust index is debug-built and this box is shared, so its
+        // absolute time is noisy; the stable claims are (a) the
+        // calibrated per-doc budget is honored and (b) pysim is at
+        // least several times the native index cost.
+        assert!(
+            pysim.index_secs > mlsh.index_secs * 4.0,
+            "pysim index {} vs rust index {}",
+            pysim.index_secs,
+            mlsh.index_secs
+        );
+        assert!(pysim.index_secs >= pysim.docs as f64 * 2.9e-3 * 0.95);
+    }
+
+    #[test]
+    fn table2_shape_matches_paper() {
+        let rows = table2_rows();
+        assert_eq!(rows.len(), 6);
+        for r in &rows {
+            assert!(
+                r.advantage() > 3.0,
+                "LSHBloom must win by a wide margin: {:?} adv {:.1}",
+                r,
+                r.advantage()
+            );
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Scale extrapolation (§5.4.2): Figure 8 runtime projection and the
+//! Table 2 index-size comparison.
+//!
+//! Runtime is modeled as a linear function of document count (the paper's
+//! observation that each method scales ~linearly), fit by ordinary least
+//! squares over the Fig. 7 measurements. Index sizes are *computed*: the
+//! MinHashLSH index grows linearly (fit), while LSHBloom's size is the
+//! closed-form `b · m(n, p)` of §4.5.
+
+use crate::bloom::BloomParams;
+use crate::minhash::LshParams;
+
+/// Ordinary least-squares line `y = a + b·x`.
+#[derive(Clone, Copy, Debug)]
+pub struct LinearFit {
+    pub intercept: f64,
+    pub slope: f64,
+    /// Coefficient of determination.
+    pub r2: f64,
+}
+
+impl LinearFit {
+    /// Fit from (x, y) samples. Requires at least two distinct x.
+    pub fn fit(points: &[(f64, f64)]) -> Self {
+        assert!(points.len() >= 2, "need >= 2 points");
+        let n = points.len() as f64;
+        let sx: f64 = points.iter().map(|p| p.0).sum();
+        let sy: f64 = points.iter().map(|p| p.1).sum();
+        let sxx: f64 = points.iter().map(|p| p.0 * p.0).sum();
+        let sxy: f64 = points.iter().map(|p| p.0 * p.1).sum();
+        let denom = n * sxx - sx * sx;
+        assert!(denom.abs() > 0.0, "degenerate x values");
+        let slope = (n * sxy - sx * sy) / denom;
+        let intercept = (sy - slope * sx) / n;
+        let mean_y = sy / n;
+        let ss_tot: f64 = points.iter().map(|p| (p.1 - mean_y).powi(2)).sum();
+        let ss_res: f64 =
+            points.iter().map(|p| (p.1 - (intercept + slope * p.0)).powi(2)).sum();
+        let r2 = if ss_tot == 0.0 { 1.0 } else { 1.0 - ss_res / ss_tot };
+        Self { intercept, slope, r2 }
+    }
+
+    /// Predict y at x.
+    pub fn at(&self, x: f64) -> f64 {
+        self.intercept + self.slope * x
+    }
+}
+
+/// LSHBloom index bytes for `n` docs at `p_effective` with `b` bands
+/// (§4.5 closed form — Table 2's "computed exactly" column).
+pub fn lshbloom_index_bytes(n: u64, p_effective: f64, lsh: LshParams) -> u64 {
+    let p = BloomParams::per_filter_rate(p_effective, lsh.num_bands);
+    BloomParams::for_capacity(n, p).bytes() * lsh.num_bands as u64
+}
+
+/// MinHashLSH index bytes for `n` docs: per-doc cost of storing each
+/// band's key (r hash values of `hash_bytes` each) plus a doc id and
+/// framing — the linear model the paper extrapolates. `entry_overhead`
+/// defaults to 24 bytes (id + framing), matching our index accounting.
+pub fn minhashlsh_index_bytes(n: u64, lsh: LshParams, hash_bytes: u64, entry_overhead: u64) -> u64 {
+    let per_doc = lsh.num_bands as u64 * (lsh.rows_per_band as u64 * hash_bytes + entry_overhead);
+    n * per_doc
+}
+
+/// A Table-2 row: LSHBloom size at a given p_effective vs MinHashLSH.
+#[derive(Clone, Debug)]
+pub struct StorageRow {
+    pub p_effective: f64,
+    pub n: u64,
+    pub lshbloom_bytes: u64,
+    pub minhashlsh_bytes: u64,
+}
+
+impl StorageRow {
+    /// The space-advantage multiple.
+    pub fn advantage(&self) -> f64 {
+        self.minhashlsh_bytes as f64 / self.lshbloom_bytes as f64
+    }
+}
+
+/// Compute Table 2 for the given corpus sizes and p_eff settings.
+pub fn table2(
+    ns: &[u64],
+    p_effs: &[(f64, &str)],
+    lsh: LshParams,
+    hash_bytes: u64,
+) -> Vec<StorageRow> {
+    let mut rows = Vec::new();
+    for &n in ns {
+        for &(p, _) in p_effs {
+            rows.push(StorageRow {
+                p_effective: p,
+                n,
+                lshbloom_bytes: lshbloom_index_bytes(n, p, lsh),
+                minhashlsh_bytes: minhashlsh_index_bytes(n, lsh, hash_bytes, 24),
+            });
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ols_recovers_exact_line() {
+        let pts: Vec<(f64, f64)> = (0..10).map(|i| (i as f64, 3.0 + 2.0 * i as f64)).collect();
+        let fit = LinearFit::fit(&pts);
+        assert!((fit.slope - 2.0).abs() < 1e-9);
+        assert!((fit.intercept - 3.0).abs() < 1e-9);
+        assert!((fit.r2 - 1.0).abs() < 1e-9);
+        assert!((fit.at(100.0) - 203.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ols_handles_noise() {
+        let pts: Vec<(f64, f64)> = (0..50)
+            .map(|i| {
+                let x = i as f64;
+                (x, 5.0 * x + if i % 2 == 0 { 1.0 } else { -1.0 })
+            })
+            .collect();
+        let fit = LinearFit::fit(&pts);
+        assert!((fit.slope - 5.0).abs() < 0.05);
+        assert!(fit.r2 > 0.99);
+    }
+
+    #[test]
+    fn paper_table2_n100b_column_matches_exactly() {
+        // Paper Table 2's N=1e11 column (computed, per §4.5, with the
+        // Table-1 tuned geometry T=0.5/P=256 -> b=42): LSHBloom needs
+        // 16.66 TB at p_eff=1e-5, 24.21 TB at 1e-8, 31.76 TB at 1/N.
+        // Our closed form reproduces all three to three decimals. (The
+        // paper's N=5e9 column is internally inconsistent — 8.33 TB at
+        // 5e9 vs 16.66 TB at 1e11 is not linear in n as §4.5 requires —
+        // so we pin against the self-consistent column; see
+        // EXPERIMENTS.md Table 2 notes.)
+        let lsh = LshParams { num_bands: 42, rows_per_band: 6 };
+        let n = 100_000_000_000u64;
+        let tb = |p: f64| lshbloom_index_bytes(n, p, lsh) as f64 / 1e12;
+        assert!((tb(1e-5) - 16.66).abs() < 0.05, "1e-5: {} TB", tb(1e-5));
+        assert!((tb(1e-8) - 24.21).abs() < 0.05, "1e-8: {} TB", tb(1e-8));
+        let inv_n = 1.0 / n as f64;
+        assert!((tb(inv_n) - 31.76).abs() < 0.05, "1/N: {} TB", tb(inv_n));
+        // MinHashLSH linear model dominates at any sane per-entry cost.
+        let mh = minhashlsh_index_bytes(n, lsh, 4, 24) as f64 / 1e12;
+        assert!(mh > tb(inv_n), "minhashlsh must dominate: {mh} TB");
+    }
+
+    #[test]
+    fn advantage_grows_with_smaller_p_nonstrictly() {
+        let lsh = LshParams { num_bands: 9, rows_per_band: 13 };
+        let rows = table2(
+            &[1_000_000_000],
+            &[(1e-5, "1e-5"), (1e-8, "1e-8")],
+            lsh,
+            8,
+        );
+        assert!(rows[0].advantage() > rows[1].advantage());
+        assert!(rows[1].advantage() > 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn fit_rejects_single_point() {
+        LinearFit::fit(&[(1.0, 1.0)]);
+    }
+}

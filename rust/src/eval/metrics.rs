@@ -1,0 +1,112 @@
+//! Fidelity metrics (§5.1.3): precision, recall, F1 over the
+//! duplicate/non-duplicate confusion matrix.
+
+/// Confusion counts; "positive" = flagged as duplicate.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Confusion {
+    pub tp: u64,
+    pub fp: u64,
+    pub tn: u64,
+    pub fn_: u64,
+}
+
+impl Confusion {
+    /// Tally verdicts against ground-truth labels.
+    pub fn from_verdicts(verdicts: &[bool], labels: &[bool]) -> Self {
+        assert_eq!(verdicts.len(), labels.len());
+        let mut c = Confusion::default();
+        for (&v, &l) in verdicts.iter().zip(labels) {
+            match (l, v) {
+                (true, true) => c.tp += 1,
+                (true, false) => c.fn_ += 1,
+                (false, true) => c.fp += 1,
+                (false, false) => c.tn += 1,
+            }
+        }
+        c
+    }
+
+    /// Precision: TP / (TP + FP); 1.0 when nothing was flagged.
+    pub fn precision(&self) -> f64 {
+        if self.tp + self.fp == 0 {
+            1.0
+        } else {
+            self.tp as f64 / (self.tp + self.fp) as f64
+        }
+    }
+
+    /// Recall: TP / (TP + FN); 1.0 when there were no positives.
+    pub fn recall(&self) -> f64 {
+        if self.tp + self.fn_ == 0 {
+            1.0
+        } else {
+            self.tp as f64 / (self.tp + self.fn_) as f64
+        }
+    }
+
+    /// F1 (§5.1.3): `TP / (TP + (FP + FN)/2)`; 1.0 for the empty task.
+    pub fn f1(&self) -> f64 {
+        let denom = self.tp as f64 + 0.5 * (self.fp + self.fn_) as f64;
+        if denom == 0.0 {
+            1.0
+        } else {
+            self.tp as f64 / denom
+        }
+    }
+
+    /// Accuracy.
+    pub fn accuracy(&self) -> f64 {
+        let total = self.tp + self.fp + self.tn + self.fn_;
+        if total == 0 {
+            1.0
+        } else {
+            (self.tp + self.tn) as f64 / total as f64
+        }
+    }
+
+    /// Total observations.
+    pub fn total(&self) -> u64 {
+        self.tp + self.fp + self.tn + self.fn_
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tally_and_metrics() {
+        let verdicts = [true, true, false, false, true];
+        let labels = [true, false, true, false, true];
+        let c = Confusion::from_verdicts(&verdicts, &labels);
+        assert_eq!(c, Confusion { tp: 2, fp: 1, tn: 1, fn_: 1 });
+        assert!((c.precision() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((c.recall() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((c.f1() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((c.accuracy() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_cases() {
+        let empty = Confusion::default();
+        assert_eq!(empty.precision(), 1.0);
+        assert_eq!(empty.recall(), 1.0);
+        assert_eq!(empty.f1(), 1.0);
+
+        let all_negative = Confusion { tn: 10, ..Default::default() };
+        assert_eq!(all_negative.f1(), 1.0);
+
+        let misses_everything = Confusion { fn_: 5, tn: 5, ..Default::default() };
+        assert_eq!(misses_everything.recall(), 0.0);
+        assert_eq!(misses_everything.f1(), 0.0);
+    }
+
+    #[test]
+    fn f1_is_harmonic_mean() {
+        let c = Confusion { tp: 30, fp: 10, fn_: 20, tn: 40 };
+        let p = c.precision();
+        let r = c.recall();
+        let harmonic = 2.0 * p * r / (p + r);
+        assert!((c.f1() - harmonic).abs() < 1e-12);
+    }
+}

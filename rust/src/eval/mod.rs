@@ -1,0 +1,12 @@
+//! Evaluation harness: fidelity metrics, method runners, hyperparameter
+//! tuning grids (Figs. 2–4, Table 1), and scale extrapolation
+//! (Fig. 8, Table 2).
+
+pub mod experiments;
+pub mod extrapolate;
+pub mod metrics;
+pub mod runner;
+pub mod tuner;
+
+pub use metrics::Confusion;
+pub use runner::{run_method, EvalResult};

@@ -1,0 +1,71 @@
+//! Run a method over a labeled corpus and collect fidelity + resources.
+
+use crate::corpus::LabeledDoc;
+use crate::eval::metrics::Confusion;
+use crate::methods::Method;
+use crate::pipeline::{run_stream, PipelineOptions};
+
+/// Fidelity + resource outcome of one (method, dataset) evaluation.
+#[derive(Clone, Debug)]
+pub struct EvalResult {
+    pub method: String,
+    pub confusion: Confusion,
+    /// End-to-end wall seconds.
+    pub wall_secs: f64,
+    /// Prepare-phase CPU seconds (summed over workers).
+    pub prepare_cpu_secs: f64,
+    /// Sequential decide-phase seconds.
+    pub decide_secs: f64,
+    /// Index footprint in bytes.
+    pub disk_bytes: u64,
+    /// Documents processed.
+    pub docs: u64,
+    /// Workers used.
+    pub workers: usize,
+}
+
+impl EvalResult {
+    /// Docs/second end-to-end.
+    pub fn throughput(&self) -> f64 {
+        self.docs as f64 / self.wall_secs.max(1e-9)
+    }
+}
+
+/// Evaluate `method` on a labeled corpus through the parallel pipeline.
+pub fn run_method(method: &mut Method, docs: &[LabeledDoc], opts: PipelineOptions) -> EvalResult {
+    let stats = run_stream(method, docs.iter().map(|ld| ld.doc.clone()), opts);
+    let labels: Vec<bool> = docs.iter().map(|ld| ld.is_duplicate()).collect();
+    let confusion = Confusion::from_verdicts(&stats.verdicts, &labels);
+    EvalResult {
+        method: method.name.clone(),
+        confusion,
+        wall_secs: stats.times.wall.as_secs_f64(),
+        prepare_cpu_secs: stats.times.prepare_cpu.as_secs_f64(),
+        decide_secs: stats.times.decide.as_secs_f64(),
+        disk_bytes: stats.disk_bytes,
+        docs: stats.docs,
+        workers: stats.workers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PipelineConfig;
+    use crate::corpus::{DatasetSpec, LabeledCorpus};
+    use crate::methods::lshbloom::lshbloom_method;
+    use crate::minhash::PermFamily;
+
+    #[test]
+    fn eval_produces_consistent_result() {
+        let c = LabeledCorpus::build(DatasetSpec::testing(37, 200, 0.5));
+        let cfg = PipelineConfig { num_perms: 128, expected_docs: 1000, ..Default::default() };
+        let mut m = lshbloom_method(&cfg, PermFamily::Mix64);
+        let r = run_method(&mut m, &c.docs, PipelineOptions::default());
+        assert_eq!(r.docs, 200);
+        assert_eq!(r.confusion.total(), 200);
+        assert!(r.confusion.f1() > 0.7, "f1 {}", r.confusion.f1());
+        assert!(r.confusion.precision() > 0.9, "precision {}", r.confusion.precision());
+        assert!(r.wall_secs > 0.0 && r.disk_bytes > 0);
+    }
+}

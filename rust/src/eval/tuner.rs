@@ -1,0 +1,162 @@
+//! Hyperparameter tuning grids (§5.1.5, §5.2) — Figures 2–4 and Table 1.
+
+use crate::corpus::LabeledDoc;
+use crate::eval::runner::{run_method, EvalResult};
+use crate::methods::{MethodKind, MethodSpec};
+use crate::pipeline::PipelineOptions;
+
+/// One evaluated grid point.
+#[derive(Clone, Debug)]
+pub struct GridPoint {
+    pub spec: MethodSpec,
+    pub result: EvalResult,
+}
+
+impl GridPoint {
+    /// The tuning objective.
+    pub fn f1(&self) -> f64 {
+        self.result.confusion.f1()
+    }
+}
+
+/// §5.1.5 parameter ranges.
+pub mod ranges {
+    /// Threshold grid (plus the finer 0.5 probe the paper added).
+    pub const THRESHOLDS: [f64; 6] = [0.2, 0.4, 0.5, 0.6, 0.8, 1.0];
+    /// Permutation counts (powers of two 32..256 plus the finer 48).
+    pub const PERMS: [usize; 5] = [32, 48, 64, 128, 256];
+    /// N-gram sizes.
+    pub const NGRAMS: [usize; 6] = [1, 2, 5, 7, 13, 26];
+}
+
+fn eval_spec(spec: MethodSpec, docs: &[LabeledDoc], opts: PipelineOptions) -> GridPoint {
+    let sample: Vec<crate::corpus::Doc> =
+        docs.iter().take(1000).map(|ld| ld.doc.clone()).collect();
+    let mut method = spec.build(&sample);
+    let result = run_method(&mut method, docs, opts);
+    GridPoint { spec, result }
+}
+
+/// Figure 2 grid: (permutations × threshold) for an LSH-family technique.
+pub fn tune_lsh(
+    kind: MethodKind,
+    docs: &[LabeledDoc],
+    thresholds: &[f64],
+    perms: &[usize],
+    opts: PipelineOptions,
+) -> Vec<GridPoint> {
+    assert!(matches!(kind, MethodKind::MinHashLsh | MethodKind::LshBloom));
+    let mut out = Vec::new();
+    for &t in thresholds {
+        for &p in perms {
+            let spec = MethodSpec {
+                threshold: t,
+                num_perms: p,
+                ngram: 1,
+                ..MethodSpec::best(kind, docs.len() as u64)
+            };
+            out.push(eval_spec(spec, docs, opts));
+        }
+    }
+    out
+}
+
+/// Figure 3 grid: (n-gram size × threshold) for an n-gram technique.
+pub fn tune_ngram(
+    kind: MethodKind,
+    docs: &[LabeledDoc],
+    thresholds: &[f64],
+    ngrams: &[usize],
+    opts: PipelineOptions,
+) -> Vec<GridPoint> {
+    assert!(matches!(kind, MethodKind::DolmaNgram | MethodKind::Dclm));
+    let mut out = Vec::new();
+    for &t in thresholds {
+        for &n in ngrams {
+            let spec = MethodSpec {
+                threshold: t,
+                ngram: n,
+                ..MethodSpec::best(kind, docs.len() as u64)
+            };
+            out.push(eval_spec(spec, docs, opts));
+        }
+    }
+    out
+}
+
+/// Figure 4 grid: threshold sweep for a paragraph-level technique.
+pub fn tune_paragraph(
+    kind: MethodKind,
+    docs: &[LabeledDoc],
+    thresholds: &[f64],
+    opts: PipelineOptions,
+) -> Vec<GridPoint> {
+    assert!(matches!(kind, MethodKind::Dolma | MethodKind::CcNet));
+    thresholds
+        .iter()
+        .map(|&t| {
+            let spec = MethodSpec { threshold: t, ..MethodSpec::best(kind, docs.len() as u64) };
+            eval_spec(spec, docs, opts)
+        })
+        .collect()
+}
+
+/// Argmax by F1 (Table 1 selection).
+pub fn best(points: &[GridPoint]) -> &GridPoint {
+    points
+        .iter()
+        .max_by(|a, b| a.f1().partial_cmp(&b.f1()).unwrap())
+        .expect("empty grid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{DatasetSpec, LabeledCorpus};
+
+    fn quick_corpus() -> LabeledCorpus {
+        LabeledCorpus::build(DatasetSpec::tuning(41, 160))
+    }
+
+    #[test]
+    fn lsh_grid_shape_and_best() {
+        let c = quick_corpus();
+        let pts = tune_lsh(
+            MethodKind::LshBloom,
+            &c.docs,
+            &[0.5, 0.9],
+            &[32, 64],
+            PipelineOptions::default(),
+        );
+        assert_eq!(pts.len(), 4);
+        let b = best(&pts);
+        // A sane threshold should beat the absurd 0.9 on this benchmark.
+        assert!(b.spec.threshold < 0.9, "best grid point {:?}", b.spec);
+        assert!(b.f1() > 0.5);
+    }
+
+    #[test]
+    fn paragraph_grid_runs() {
+        let c = quick_corpus();
+        let pts = tune_paragraph(MethodKind::Dolma, &c.docs, &[0.2, 0.8], PipelineOptions::default());
+        assert_eq!(pts.len(), 2);
+        // Low threshold flags more -> recall no worse than high threshold.
+        assert!(pts[0].result.confusion.recall() >= pts[1].result.confusion.recall());
+    }
+
+    #[test]
+    fn ngram_grid_runs() {
+        let c = quick_corpus();
+        let pts = tune_ngram(
+            MethodKind::Dclm,
+            &c.docs,
+            &[0.2],
+            &[1, 5],
+            PipelineOptions::default(),
+        );
+        assert_eq!(pts.len(), 2);
+        for p in &pts {
+            assert_eq!(p.result.docs, 160);
+        }
+    }
+}

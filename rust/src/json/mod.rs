@@ -1,0 +1,151 @@
+//! Minimal JSON substrate (no `serde` offline).
+//!
+//! Supports the full JSON grammar with a DOM-style [`Value`]; used for
+//! JSONL corpora, the AOT artifact manifest, golden vectors, and report
+//! emission. Numbers are kept as `f64` plus the raw token so u64 hash
+//! values round-trip exactly (the AOT side writes them as strings for
+//! that reason, but the parser is robust either way).
+
+mod parse;
+mod write;
+
+pub use parse::{parse, ParseError};
+pub use write::write_string;
+
+use std::collections::BTreeMap;
+
+/// A JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    /// Numeric value plus the raw source token (exact integer round-trip).
+    Num(f64, String),
+    Str(String),
+    Arr(Vec<Value>),
+    /// BTreeMap for deterministic serialization order.
+    Obj(BTreeMap<String, Value>),
+}
+
+impl Value {
+    /// Build a number value from anything numeric.
+    pub fn num<T: Into<f64>>(v: T) -> Value {
+        let f = v.into();
+        Value::Num(f, fmt_f64(f))
+    }
+
+    /// Build a number from a u64 without precision loss in the raw token.
+    pub fn u64(v: u64) -> Value {
+        Value::Num(v as f64, v.to_string())
+    }
+
+    /// Build a string value.
+    pub fn str(s: impl Into<String>) -> Value {
+        Value::Str(s.into())
+    }
+
+    /// Object field access.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// As string slice.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// As f64.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(f, _) => Some(*f),
+            _ => None,
+        }
+    }
+
+    /// As u64 — prefers the exact raw token (for 64-bit hash values that
+    /// exceed f64's 53-bit mantissa), accepting decimal strings too.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Num(_, raw) => raw.parse().ok(),
+            Value::Str(s) => s.parse().ok(),
+            _ => None,
+        }
+    }
+
+    /// As usize.
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_u64().map(|v| v as usize)
+    }
+
+    /// As bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// As array slice.
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Serialize to a compact JSON string.
+    pub fn to_json(&self) -> String {
+        write_string(self)
+    }
+}
+
+/// Format an f64 the way JSON expects (shortest round-trip-ish).
+pub(crate) fn fmt_f64(f: f64) -> String {
+    if f.fract() == 0.0 && f.abs() < 1e15 {
+        format!("{}", f as i64)
+    } else {
+        let s = format!("{f}");
+        s
+    }
+}
+
+/// Build an object from pairs (helper for report emission).
+pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
+    Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u64_exact_roundtrip() {
+        let v = Value::u64(u64::MAX);
+        assert_eq!(v.as_u64(), Some(u64::MAX));
+        let parsed = parse(&v.to_json()).unwrap();
+        assert_eq!(parsed.as_u64(), Some(u64::MAX));
+    }
+
+    #[test]
+    fn accessors() {
+        let v = parse(r#"{"a": 1, "b": "x", "c": [true, null], "d": 2.5}"#).unwrap();
+        assert_eq!(v.get("a").unwrap().as_u64(), Some(1));
+        assert_eq!(v.get("b").unwrap().as_str(), Some("x"));
+        assert_eq!(v.get("c").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(v.get("c").unwrap().as_arr().unwrap()[0].as_bool(), Some(true));
+        assert_eq!(v.get("d").unwrap().as_f64(), Some(2.5));
+        assert_eq!(v.get("missing"), None);
+    }
+
+    #[test]
+    fn string_number_coercion_for_u64() {
+        let v = parse(r#"{"h": "18446744073709551615"}"#).unwrap();
+        assert_eq!(v.get("h").unwrap().as_u64(), Some(u64::MAX));
+    }
+}

@@ -1,0 +1,93 @@
+//! Compact JSON serialization.
+
+use super::Value;
+
+/// Serialize a [`Value`] to a compact JSON string.
+pub fn write_string(v: &Value) -> String {
+    let mut out = String::new();
+    write_value(v, &mut out);
+    out
+}
+
+fn write_value(v: &Value, out: &mut String) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(true) => out.push_str("true"),
+        Value::Bool(false) => out.push_str("false"),
+        Value::Num(_, raw) => out.push_str(raw),
+        Value::Str(s) => write_escaped(s, out),
+        Value::Arr(items) => {
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_value(item, out);
+            }
+            out.push(']');
+        }
+        Value::Obj(map) => {
+            out.push('{');
+            for (i, (k, val)) in map.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_escaped(k, out);
+                out.push(':');
+                write_value(val, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{obj, parse, Value};
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let src = r#"{"a":[1,2.5,"x\ny"],"b":{"c":null,"d":true}}"#;
+        let v = parse(src).unwrap();
+        let emitted = write_string(&v);
+        assert_eq!(parse(&emitted).unwrap(), v);
+    }
+
+    #[test]
+    fn escapes_controls() {
+        let v = Value::str("a\u{1}b");
+        assert_eq!(write_string(&v), "\"a\\u0001b\"");
+    }
+
+    #[test]
+    fn deterministic_key_order() {
+        let v = obj(vec![("zebra", Value::u64(1)), ("apple", Value::u64(2))]);
+        assert_eq!(write_string(&v), r#"{"apple":2,"zebra":1}"#);
+    }
+
+    #[test]
+    fn unicode_passthrough() {
+        let v = Value::str("café 😀");
+        let emitted = write_string(&v);
+        assert_eq!(parse(&emitted).unwrap().as_str(), Some("café 😀"));
+    }
+}

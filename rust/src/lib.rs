@@ -1,0 +1,39 @@
+//! # LSHBloom
+//!
+//! Memory-efficient, extreme-scale document deduplication.
+//!
+//! Reproduction of *LSHBloom: Internet-Scale Text Deduplication*
+//! (Khan et al., 2024) as a three-layer rust + JAX/Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the streaming deduplication coordinator:
+//!   document ingestion, parallel MinHashing workers, the sequential
+//!   Bloom-filter LSH index, the baseline methods the paper compares
+//!   against, the synthetic labeled-corpus generator, and the full
+//!   evaluation/benchmark harness.
+//! * **Layer 2 (python/compile/model.py)** — the batched
+//!   token-hashes → MinHash-signatures → band-hashes compute graph in JAX,
+//!   AOT-lowered to HLO text at build time.
+//! * **Layer 1 (python/compile/kernels/)** — the MinHash permutation +
+//!   min-reduce hot loop as a Pallas kernel, called from Layer 2.
+//!
+//! Python never runs on the ingest path: `make artifacts` lowers the
+//! kernels once, and [`runtime`] loads the HLO artifacts through PJRT.
+pub mod bloom;
+pub mod cli;
+pub mod config;
+pub mod corpus;
+pub mod error;
+pub mod eval;
+pub mod hash;
+pub mod index;
+pub mod json;
+pub mod logging;
+pub mod methods;
+pub mod minhash;
+pub mod perf;
+pub mod pipeline;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod service;
+pub mod text;

@@ -1,0 +1,97 @@
+//! Minimal leveled stderr logger.
+//!
+//! No `log`/`env_logger` facade offline; this is a tiny global logger with
+//! levels controlled by `LSHBLOOM_LOG` (error|warn|info|debug|trace) or
+//! programmatically via [`set_level`]. Timestamps are seconds since
+//! process start to keep output deterministic-ish and cheap.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+/// Log verbosity levels, ordered.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(2); // Info
+
+fn start() -> Instant {
+    use std::sync::OnceLock;
+    static START: OnceLock<Instant> = OnceLock::new();
+    *START.get_or_init(Instant::now)
+}
+
+/// Set the global level programmatically.
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Initialize from the `LSHBLOOM_LOG` environment variable (call once).
+pub fn init_from_env() {
+    start();
+    if let Ok(v) = std::env::var("LSHBLOOM_LOG") {
+        let lv = match v.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "info" => Level::Info,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => Level::Info,
+        };
+        set_level(lv);
+    }
+}
+
+/// Whether a message at `level` would be emitted.
+#[inline]
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit a log line (used by the macros; prefer those).
+pub fn emit(level: Level, args: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let t = start().elapsed().as_secs_f64();
+    let tag = match level {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    };
+    eprintln!("[{t:9.3}s {tag}] {args}");
+}
+
+/// Log at error level.
+#[macro_export]
+macro_rules! log_error { ($($t:tt)*) => { $crate::logging::emit($crate::logging::Level::Error, format_args!($($t)*)) } }
+/// Log at warn level.
+#[macro_export]
+macro_rules! log_warn { ($($t:tt)*) => { $crate::logging::emit($crate::logging::Level::Warn, format_args!($($t)*)) } }
+/// Log at info level.
+#[macro_export]
+macro_rules! log_info { ($($t:tt)*) => { $crate::logging::emit($crate::logging::Level::Info, format_args!($($t)*)) } }
+/// Log at debug level.
+#[macro_export]
+macro_rules! log_debug { ($($t:tt)*) => { $crate::logging::emit($crate::logging::Level::Debug, format_args!($($t)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+    }
+}

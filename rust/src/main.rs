@@ -1,0 +1,460 @@
+//! `lshbloom` — leader entrypoint for the deduplication system.
+//!
+//! Subcommands:
+//!   gen-corpus    build a labeled synthetic corpus (JSONL)
+//!   dedup         deduplicate a JSONL corpus with any technique
+//!   tune          hyperparameter grids (Figs. 2–4, Table 1)
+//!   fidelity      fidelity-vs-duplication study (Fig. 5)
+//!   scale         resource scaling study (Figs. 1, 7)
+//!   extrapolate   runtime/storage projection (Fig. 8, Table 2)
+//!   info          environment + artifact status
+
+use lshbloom::cli::{ArgSpec, Args, Command};
+use lshbloom::config::{MinHashBackend, PipelineConfig};
+use lshbloom::corpus::{DatasetSpec, LabeledCorpus};
+use lshbloom::eval::experiments::{self, Scale};
+use lshbloom::methods::{MethodKind, MethodSpec};
+use lshbloom::pipeline::{run_stream, PipelineOptions};
+use lshbloom::report::table::{bytes, f, Table};
+use std::path::{Path, PathBuf};
+
+fn main() {
+    lshbloom::logging::init_from_env();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some((sub, rest)) = argv.split_first() else {
+        print_usage();
+        std::process::exit(2);
+    };
+    let rest = rest.to_vec();
+    let outcome = match sub.as_str() {
+        "gen-corpus" => cmd_gen_corpus(rest),
+        "dedup" => cmd_dedup(rest),
+        "tune" => cmd_tune(rest),
+        "fidelity" => cmd_fidelity(rest),
+        "scale" => cmd_scale(rest),
+        "extrapolate" => cmd_extrapolate(rest),
+        "serve" => cmd_serve(rest),
+        "info" => cmd_info(rest),
+        "--help" | "-h" | "help" => {
+            print_usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand '{other}'\n");
+            print_usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = outcome {
+        eprintln!("{e}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "lshbloom — memory-efficient extreme-scale document deduplication\n\n\
+         usage: lshbloom <subcommand> [flags]\n\n\
+         subcommands:\n\
+           gen-corpus    build a labeled synthetic corpus (JSONL)\n\
+           dedup         deduplicate a JSONL corpus\n\
+           tune          hyperparameter grids (Figs. 2-4, Table 1)\n\
+           fidelity      fidelity vs duplication rate (Fig. 5)\n\
+           scale         resource scaling study (Figs. 1, 7)\n\
+           extrapolate   projections at extreme scale (Fig. 8, Table 2)\n\
+           serve         run the TCP deduplication service\n\
+           info          environment + artifact status\n\n\
+         run `lshbloom <subcommand> --help` for flags"
+    );
+}
+
+type CliResult = Result<(), Box<dyn std::error::Error>>;
+
+fn parse(cmd: Command, rest: Vec<String>) -> Result<Args, Box<dyn std::error::Error>> {
+    cmd.parse_from(rest).map_err(|e| {
+        // --help lands here with the rendered help text.
+        Box::new(e) as Box<dyn std::error::Error>
+    })
+}
+
+fn scale_from(args: &Args) -> Scale {
+    if args.get_bool("quick") {
+        Scale::quick()
+    } else {
+        Scale::from_env()
+    }
+}
+
+fn cmd_gen_corpus(rest: Vec<String>) -> CliResult {
+    let cmd = Command::new("gen-corpus", "build a labeled synthetic corpus")
+        .arg(ArgSpec::req("out", "output JSONL path"))
+        .arg(ArgSpec::opt("docs", "number of documents").default("10000"))
+        .arg(ArgSpec::opt("dup-rate", "duplication rate in [0,0.9]").default("0.5"))
+        .arg(ArgSpec::opt("seed", "corpus seed").default("42"));
+    let args = parse(cmd, rest)?;
+    let spec = DatasetSpec::testing(args.get_u64("seed"), args.get_usize("docs"), args.get_f64("dup-rate"));
+    let corpus = LabeledCorpus::build(spec);
+    let path = PathBuf::from(args.get("out"));
+    corpus.save_jsonl(&path)?;
+    println!(
+        "wrote {} docs ({} duplicates) to {}",
+        corpus.docs.len(),
+        corpus.num_duplicates(),
+        path.display()
+    );
+    Ok(())
+}
+
+fn cmd_dedup(rest: Vec<String>) -> CliResult {
+    let cmd = Command::new("dedup", "deduplicate a JSONL corpus")
+        .arg(ArgSpec::req("input", "input JSONL (from gen-corpus or external)"))
+        .arg(ArgSpec::opt("method", "technique: lshbloom|minhashlsh|dolma|dolma-ngram|ccnet|dclm").default("lshbloom"))
+        .arg(ArgSpec::opt("backend", "minhash backend: native|xla|datasketch").default("native"))
+        .arg(ArgSpec::opt("threshold", "similarity/overlap threshold").default("0.5"))
+        .arg(ArgSpec::opt("perms", "minhash permutations").default("256"))
+        .arg(ArgSpec::opt("ngram", "shingle size").default("1"))
+        .arg(ArgSpec::opt("p-effective", "index-wide FP bound").default("1e-10"))
+        .arg(ArgSpec::opt("expected-docs", "planned corpus size (filter sizing; 0 = use input size)").default("0"))
+        .arg(ArgSpec::opt("workers", "worker threads (0 = all cores)").default("0"))
+        .arg(ArgSpec::opt("artifacts", "AOT artifacts dir (xla backend)").default("artifacts"))
+        .arg(ArgSpec::opt("out", "write surviving docs to this JSONL").default(""))
+        .arg(ArgSpec::opt("save-index", "persist the LSHBloom index to this dir").default(""))
+        .arg(ArgSpec::switch("shm", "host bloom filters in /dev/shm"))
+        .arg(ArgSpec::switch("report-fidelity", "score against duplicate_of labels if present"));
+    let args = parse(cmd, rest)?;
+
+    let docs = LabeledCorpus::load_jsonl(Path::new(args.get("input")))?;
+    let expected = match args.get_u64("expected-docs") {
+        0 => docs.len() as u64,
+        n => n,
+    };
+    let cfg = PipelineConfig {
+        threshold: args.get_f64("threshold"),
+        num_perms: args.get_usize("perms"),
+        ngram: args.get_usize("ngram"),
+        p_effective: args.get_f64("p-effective"),
+        expected_docs: expected,
+        workers: args.get_usize("workers"),
+        backend: MinHashBackend::parse(args.get("backend"))?,
+        artifacts_dir: args.get("artifacts").to_string(),
+        use_shm: args.get_bool("shm"),
+        ..Default::default()
+    };
+    cfg.validate()?;
+
+    let kind = MethodKind::parse(args.get("method"))
+        .ok_or_else(|| format!("unknown method '{}'", args.get("method")))?;
+    let sample: Vec<lshbloom::corpus::Doc> =
+        docs.iter().take(1000).map(|ld| ld.doc.clone()).collect();
+    let mut method = build_method(&cfg, kind, &sample)?;
+
+    let stats = run_stream(
+        &mut method,
+        docs.iter().map(|ld| ld.doc.clone()),
+        PipelineOptions::from_config(&cfg),
+    );
+
+    let mut t = Table::new("dedup run", &["metric", "value"]);
+    t.row_disp(&["method".to_string(), method.name.clone()]);
+    t.row_disp(&["documents".to_string(), stats.docs.to_string()]);
+    t.row_disp(&["duplicates".to_string(), stats.duplicates.to_string()]);
+    t.row_disp(&["throughput (docs/s)".to_string(), format!("{:.0}", stats.throughput())]);
+    t.row_disp(&["wall".to_string(), format!("{:.2}s", stats.times.wall.as_secs_f64())]);
+    t.row_disp(&[
+        "minhash phase (est wall)".to_string(),
+        format!("{:.2}s", stats.times.prepare_wall_est(stats.workers).as_secs_f64()),
+    ]);
+    t.row_disp(&["index phase".to_string(), format!("{:.2}s", stats.times.decide.as_secs_f64())]);
+    t.row_disp(&["index disk".to_string(), bytes(stats.disk_bytes)]);
+    t.print();
+
+    if args.get_bool("report-fidelity") {
+        let labels: Vec<bool> = docs.iter().map(|ld| ld.is_duplicate()).collect();
+        let c = lshbloom::eval::Confusion::from_verdicts(&stats.verdicts, &labels);
+        let mut t = Table::new("fidelity", &["precision", "recall", "f1"]);
+        t.row_disp(&[f(c.precision(), 4), f(c.recall(), 4), f(c.f1(), 4)]);
+        t.print();
+    }
+
+    if let Some(out) = args.get_opt("out").filter(|s| !s.is_empty()) {
+        let survivors: Vec<&lshbloom::corpus::LabeledDoc> = docs
+            .iter()
+            .zip(&stats.verdicts)
+            .filter(|(_, &dup)| !dup)
+            .map(|(d, _)| d)
+            .collect();
+        use std::io::Write;
+        let mut w = std::io::BufWriter::new(std::fs::File::create(out)?);
+        for ld in &survivors {
+            let line = lshbloom::json::obj(vec![
+                ("id", lshbloom::json::Value::u64(ld.doc.id)),
+                ("text", lshbloom::json::Value::str(ld.doc.text.clone())),
+            ]);
+            writeln!(w, "{}", line.to_json())?;
+        }
+        println!("wrote {} survivors to {out}", survivors.len());
+    }
+
+    if let Some(dir) = args.get_opt("save-index").filter(|s| !s.is_empty()) {
+        save_index_if_lshbloom(&method, Path::new(dir))?;
+    }
+    Ok(())
+}
+
+fn build_method(
+    cfg: &PipelineConfig,
+    kind: MethodKind,
+    sample: &[lshbloom::corpus::Doc],
+) -> Result<lshbloom::methods::Method, Box<dyn std::error::Error>> {
+    use lshbloom::minhash::PermFamily;
+    if kind == MethodKind::LshBloom && cfg.backend == MinHashBackend::Xla {
+        return Ok(lshbloom::runtime::lshbloom_method_xla(cfg)?);
+    }
+    let family = match cfg.backend {
+        MinHashBackend::Datasketch => PermFamily::Datasketch,
+        _ => PermFamily::Mix64,
+    };
+    let spec = MethodSpec {
+        kind,
+        threshold: cfg.threshold,
+        num_perms: cfg.num_perms,
+        ngram: cfg.ngram,
+        p_effective: cfg.p_effective,
+        unit_fp: lshbloom::methods::UnitBudget::DEFAULT_FP,
+        expected_docs: cfg.expected_docs,
+        family,
+    };
+    Ok(spec.build(sample))
+}
+
+fn save_index_if_lshbloom(method: &lshbloom::methods::Method, dir: &Path) -> CliResult {
+    // Downcast-free: only the lshbloom methods expose a persistable index;
+    // re-building a typed decider is not possible here, so persistence is
+    // provided through the example/streaming path. Emit a hint instead.
+    let _ = method;
+    std::fs::create_dir_all(dir)?;
+    eprintln!(
+        "note: index persistence is exposed through the library API \
+         (LshBloomIndex::save_dir) and the streaming_ingest example; \
+         the CLI run completed without saving."
+    );
+    Ok(())
+}
+
+fn cmd_tune(rest: Vec<String>) -> CliResult {
+    let cmd = Command::new("tune", "hyperparameter grids (Figs. 2-4, Table 1)")
+        .arg(ArgSpec::opt("family", "lsh|ngram|paragraph|all").default("all"))
+        .arg(ArgSpec::switch("quick", "reduced corpus for a fast pass"));
+    let args = parse(cmd, rest)?;
+    let scale = scale_from(&args);
+    let family = args.get("family");
+
+    if family == "lsh" || family == "all" {
+        for (kind, pts) in experiments::fig2_grids(scale) {
+            print_grid(&format!("Fig 2 — {} F1 (perms × threshold)", kind.name()), &pts);
+        }
+    }
+    if family == "ngram" || family == "all" {
+        for (kind, pts) in experiments::fig3_grids(scale) {
+            print_grid(&format!("Fig 3 — {} F1 (ngram × threshold)", kind.name()), &pts);
+        }
+    }
+    if family == "paragraph" || family == "all" {
+        for (kind, pts) in experiments::fig4_sweeps(scale) {
+            print_grid(&format!("Fig 4 — {} F1 vs threshold", kind.name()), &pts);
+        }
+    }
+    if family == "all" {
+        let best = experiments::table1(scale);
+        let mut t = Table::new("Table 1 — best settings", &["technique", "ngram", "threshold", "perms", "F1"]);
+        for gp in best {
+            t.row_disp(&[
+                gp.spec.kind.name().to_string(),
+                gp.spec.ngram.to_string(),
+                format!("{}", gp.spec.threshold),
+                gp.spec.num_perms.to_string(),
+                f(gp.f1(), 4),
+            ]);
+        }
+        t.print();
+    }
+    Ok(())
+}
+
+fn print_grid(title: &str, pts: &[lshbloom::eval::tuner::GridPoint]) {
+    let mut t = Table::new(title, &["threshold", "perms", "ngram", "precision", "recall", "F1"]);
+    for gp in pts {
+        t.row_disp(&[
+            format!("{}", gp.spec.threshold),
+            gp.spec.num_perms.to_string(),
+            gp.spec.ngram.to_string(),
+            f(gp.result.confusion.precision(), 4),
+            f(gp.result.confusion.recall(), 4),
+            f(gp.f1(), 4),
+        ]);
+    }
+    t.print();
+}
+
+fn cmd_fidelity(rest: Vec<String>) -> CliResult {
+    let cmd = Command::new("fidelity", "fidelity vs duplication rate (Fig. 5)")
+        .arg(ArgSpec::opt("rates", "comma-separated duplication rates").default("0.1,0.3,0.5,0.7,0.9"))
+        .arg(ArgSpec::switch("quick", "reduced corpus for a fast pass"));
+    let args = parse(cmd, rest)?;
+    let scale = scale_from(&args);
+    let rates: Vec<f64> = args
+        .get("rates")
+        .split(',')
+        .map(|s| s.trim().parse().expect("bad rate"))
+        .collect();
+    for (rate, results) in experiments::fig5_fidelity(scale, &rates) {
+        let mut t = Table::new(
+            format!("Fig 5 — duplication rate {rate}"),
+            &["method", "precision", "recall", "F1", "wall (s)", "disk"],
+        );
+        for r in results {
+            t.row_disp(&[
+                r.method.clone(),
+                f(r.confusion.precision(), 4),
+                f(r.confusion.recall(), 4),
+                f(r.confusion.f1(), 4),
+                f(r.wall_secs, 2),
+                bytes(r.disk_bytes),
+            ]);
+        }
+        t.print();
+    }
+    Ok(())
+}
+
+fn cmd_scale(rest: Vec<String>) -> CliResult {
+    let cmd = Command::new("scale", "resource scaling study (Figs. 1, 7)")
+        .arg(ArgSpec::opt("fractions", "comma-separated corpus fractions").default("0.01,0.02,0.05,0.1,0.25,0.5,1.0"))
+        .arg(ArgSpec::switch("quick", "reduced corpus for a fast pass"));
+    let args = parse(cmd, rest)?;
+    let scale = scale_from(&args);
+
+    let rows = experiments::fig1_breakdown(scale);
+    let mut t = Table::new(
+        "Fig 1 — wall clock breakdown (10% subset)",
+        &["method", "minhash (s)", "index (s)", "other (s)", "total (s)"],
+    );
+    for b in &rows {
+        t.row_disp(&[
+            b.method.clone(),
+            f(b.minhash_secs, 2),
+            f(b.index_secs, 2),
+            f(b.other_secs, 2),
+            f(b.wall_secs, 2),
+        ]);
+    }
+    t.print();
+
+    let fractions: Vec<f64> = args
+        .get("fractions")
+        .split(',')
+        .map(|s| s.trim().parse().expect("bad fraction"))
+        .collect();
+    let pts = experiments::fig7_scaling(scale, &fractions);
+    let mut t = Table::new("Fig 7 — scaling", &["method", "docs", "wall (s)", "disk"]);
+    for p in &pts {
+        t.row_disp(&[p.method.clone(), p.docs.to_string(), f(p.wall_secs, 2), bytes(p.disk_bytes)]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_extrapolate(rest: Vec<String>) -> CliResult {
+    let cmd = Command::new("extrapolate", "projection at extreme scale (Fig. 8, Table 2)")
+        .arg(ArgSpec::opt("targets", "comma-separated doc counts").default("1000000000,5000000000"))
+        .arg(ArgSpec::switch("quick", "reduced measurement corpus"));
+    let args = parse(cmd, rest)?;
+    let scale = scale_from(&args);
+    let targets: Vec<u64> = args
+        .get("targets")
+        .split(',')
+        .map(|s| s.trim().parse().expect("bad target"))
+        .collect();
+
+    let pts = experiments::fig7_scaling(scale, &[0.25, 0.5, 0.75, 1.0]);
+    let proj = experiments::fig8_extrapolate(&pts, &targets);
+    let mut t = Table::new("Fig 8 — extrapolated runtime", &["method", "docs", "projected"]);
+    for (m, targets) in &proj {
+        for (n, secs) in targets {
+            let days = secs / 86_400.0;
+            t.row_disp(&[m.clone(), n.to_string(), format!("{secs:.0}s (~{days:.1} days)")]);
+        }
+    }
+    t.print();
+
+    let rows = experiments::table2_rows();
+    let mut t = Table::new(
+        "Table 2 — extrapolated index storage",
+        &["N", "bloom FP", "lshbloom", "minhashlsh", "advantage"],
+    );
+    for r in rows {
+        t.row_disp(&[
+            r.n.to_string(),
+            format!("{:.1e}", r.p_effective),
+            bytes(r.lshbloom_bytes),
+            bytes(r.minhashlsh_bytes),
+            format!("{:.1}x", r.advantage()),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_serve(rest: Vec<String>) -> CliResult {
+    let cmd = Command::new("serve", "run the TCP deduplication service")
+        .arg(ArgSpec::opt("addr", "listen address").default("127.0.0.1:7878"))
+        .arg(ArgSpec::opt("threshold", "Jaccard threshold").default("0.5"))
+        .arg(ArgSpec::opt("perms", "minhash permutations").default("256"))
+        .arg(ArgSpec::opt("p-effective", "index-wide FP bound").default("1e-10"))
+        .arg(ArgSpec::opt("expected-docs", "planned corpus size").default("1000000"))
+        .arg(ArgSpec::switch("shm", "host bloom filters in /dev/shm"))
+        .arg(ArgSpec::switch("blocked", "use blocked bloom filters (faster inserts)"));
+    let args = parse(cmd, rest)?;
+    let cfg = PipelineConfig {
+        threshold: args.get_f64("threshold"),
+        num_perms: args.get_usize("perms"),
+        p_effective: args.get_f64("p-effective"),
+        expected_docs: args.get_u64("expected-docs"),
+        use_shm: args.get_bool("shm"),
+        blocked_bloom: args.get_bool("blocked"),
+        ..Default::default()
+    };
+    cfg.validate()?;
+    let server = lshbloom::service::DedupServer::bind(args.get("addr"), &cfg)?;
+    println!(
+        "lshbloom dedup service listening on {} (send {{\"op\":\"shutdown\"}} to stop)",
+        server.local_addr()?
+    );
+    server.serve()?;
+    Ok(())
+}
+
+fn cmd_info(rest: Vec<String>) -> CliResult {
+    let cmd = Command::new("info", "environment + artifact status")
+        .arg(ArgSpec::opt("artifacts", "artifacts directory").default("artifacts"));
+    let args = parse(cmd, rest)?;
+    let dir = PathBuf::from(args.get("artifacts"));
+    println!("lshbloom {}", env!("CARGO_PKG_VERSION"));
+    println!("cores: {}", std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0));
+    println!("shm dir: {}", lshbloom::bloom::shm::default_shm_dir().display());
+    let manifest = dir.join("manifest.json");
+    if manifest.exists() {
+        println!("artifacts: {} (present)", dir.display());
+        match lshbloom::runtime::PjrtEngine::cpu() {
+            Ok(engine) => println!(
+                "pjrt: platform={} devices={}",
+                engine.platform_name(),
+                engine.device_count()
+            ),
+            Err(e) => println!("pjrt: UNAVAILABLE ({e:#})"),
+        }
+    } else {
+        println!("artifacts: missing — run `make artifacts`");
+    }
+    Ok(())
+}

@@ -1,0 +1,179 @@
+//! CCNet deduplication (§3.3), document-level extension (§5.1.2).
+//!
+//! CCNet lowercases, strips special unicode, splits on newlines, and
+//! SHA-1-hashes each unit; duplicates are exact hash matches. Extended to
+//! the document level per the paper: a document is a duplicate when the
+//! fraction of its paragraphs already seen exceeds the threshold.
+//!
+//! The membership structure is a single Bloom filter (the paper
+//! normalizes Bloom-filter modules across techniques, §5.1.2); an exact
+//! `HashSet` variant is provided for ablation.
+
+use super::{Decider, Method, Prepared, Preparer, UnitBudget};
+use crate::bloom::BloomFilter;
+use crate::corpus::Doc;
+use crate::hash::sha1::Sha1;
+use crate::text::{normalize, paragraphs};
+use std::collections::HashSet;
+use std::sync::Arc;
+
+/// Parallel stage: SHA-1 (low-8) keys of normalized paragraphs.
+pub struct CcnetPreparer;
+
+impl Preparer for CcnetPreparer {
+    fn prepare_batch(&self, docs: &[Doc]) -> Vec<Prepared> {
+        docs.iter()
+            .map(|d| {
+                let keys: Vec<u64> = paragraphs(&d.text)
+                    .into_iter()
+                    .map(|p| {
+                        let digest = Sha1::digest(normalize(p).as_bytes());
+                        u64::from_le_bytes(digest[..8].try_into().unwrap())
+                    })
+                    .collect();
+                Prepared::Keys(keys)
+            })
+            .collect()
+    }
+}
+
+/// Paragraph-fraction decider over a Bloom filter or exact set.
+pub struct CcnetDecider {
+    filter: Membership,
+    threshold: f64,
+    docs: u64,
+}
+
+enum Membership {
+    Bloom(BloomFilter),
+    Exact(HashSet<u64>),
+}
+
+impl Membership {
+    fn contains(&self, k: u64) -> bool {
+        match self {
+            Membership::Bloom(f) => f.contains(k),
+            Membership::Exact(s) => s.contains(&k),
+        }
+    }
+
+    fn insert(&mut self, k: u64) {
+        match self {
+            Membership::Bloom(f) => {
+                f.insert(k);
+            }
+            Membership::Exact(s) => {
+                s.insert(k);
+            }
+        }
+    }
+
+    fn disk_bytes(&self) -> u64 {
+        match self {
+            Membership::Bloom(f) => f.size_bytes(),
+            // Exact set serialized as raw 8-byte hashes.
+            Membership::Exact(s) => (s.len() * 8) as u64,
+        }
+    }
+}
+
+impl Decider for CcnetDecider {
+    fn decide(&mut self, prep: &Prepared) -> bool {
+        let Prepared::Keys(keys) = prep else {
+            panic!("CcnetDecider fed wrong payload");
+        };
+        self.docs += 1;
+        if keys.is_empty() {
+            return false;
+        }
+        let dup = keys.iter().filter(|&&k| self.filter.contains(k)).count();
+        for &k in keys {
+            self.filter.insert(k);
+        }
+        (dup as f64 / keys.len() as f64) >= self.threshold
+    }
+
+    fn disk_bytes(&self) -> u64 {
+        self.filter.disk_bytes()
+    }
+
+    fn len(&self) -> u64 {
+        self.docs
+    }
+}
+
+/// Build CCNet with the normalized Bloom-filter membership structure.
+pub fn ccnet_method(threshold: f64, budget: UnitBudget) -> Method {
+    Method {
+        name: "ccnet".to_string(),
+        preparer: Arc::new(CcnetPreparer),
+        decider: Box::new(CcnetDecider {
+            filter: Membership::Bloom(BloomFilter::with_capacity(
+                budget.expected_units,
+                budget.fp_rate,
+            )),
+            threshold,
+            docs: 0,
+        }),
+    }
+}
+
+/// Exact-set ablation variant (original CCNet semantics).
+pub fn ccnet_exact_method(threshold: f64) -> Method {
+    Method {
+        name: "ccnet-exact".to_string(),
+        preparer: Arc::new(CcnetPreparer),
+        decider: Box::new(CcnetDecider {
+            filter: Membership::Exact(HashSet::new()),
+            threshold,
+            docs: 0,
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(text: &str) -> Doc {
+        Doc { id: 0, text: text.to_string() }
+    }
+
+    #[test]
+    fn exact_duplicate_detected_both_variants() {
+        for mut m in [ccnet_method(0.2, UnitBudget::new(10_000)), ccnet_exact_method(0.2)] {
+            let d = doc("paragraph alpha content\nparagraph beta content");
+            assert!(!m.process(&d), "{}", m.name);
+            assert!(m.process(&d), "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn paragraph_fraction_thresholding() {
+        let mut m = ccnet_method(0.5, UnitBudget::new(10_000));
+        m.process(&doc("p one\np two\np three\np four"));
+        // 1/4 shared < 0.5.
+        assert!(!m.process(&doc("p one\nnew a\nnew b\nnew c")));
+        // 3/4 shared >= 0.5.
+        assert!(m.process(&doc("p one\np two\np three\nnew d")));
+    }
+
+    #[test]
+    fn exact_matching_is_not_robust_to_noise() {
+        // The paper's point: CCNet only catches byte-identical units.
+        let mut m = ccnet_exact_method(0.2);
+        m.process(&doc("the measurement was performed at cryogenic temperature"));
+        assert!(!m.process(&doc("the rneasurement was perforrned at cryogenic ternperature")));
+    }
+
+    #[test]
+    fn bloom_and_exact_agree_on_clean_data() {
+        let mut a = ccnet_method(0.2, UnitBudget::new(10_000));
+        let mut b = ccnet_exact_method(0.2);
+        let g = crate::corpus::CorpusGenerator::new(crate::corpus::GeneratorConfig::short());
+        for i in 0..60 {
+            let d = g.generate(55, i % 30); // every doc repeats once
+            assert_eq!(a.process(&d), b.process(&d), "doc {i}");
+        }
+    }
+}

@@ -1,0 +1,86 @@
+//! DataComp-LM document-level deduplication (§3.3).
+//!
+//! Same Bloom-filter n-gram vote as Dolma-Ngram but tokenized with the
+//! UniSeg-style Unicode segmenter — the difference the paper credits for
+//! DCLM's better fidelity (§5.2.2). (The paper's BFF also removes
+//! duplicated paragraphs in-place; for the document-level comparison of
+//! §5.1.2 only the document verdict matters.)
+
+use super::dolma_ngram::NgramBloomDecider;
+use super::{Method, Prepared, Preparer, UnitBudget};
+use crate::bloom::BloomFilter;
+use crate::corpus::Doc;
+use crate::hash::fast_str_hash;
+use crate::text::{ngram::word_ngrams, normalize, tokenize::uniseg_words};
+use std::sync::Arc;
+
+/// Parallel stage: uniseg n-gram keys.
+pub struct UnisegNgramPreparer {
+    pub n: usize,
+}
+
+impl Preparer for UnisegNgramPreparer {
+    fn prepare_batch(&self, docs: &[Doc]) -> Vec<Prepared> {
+        docs.iter()
+            .map(|d| {
+                let norm = normalize(&d.text);
+                let tokens = uniseg_words(&norm);
+                let mut keys = Vec::with_capacity(tokens.len());
+                word_ngrams(&tokens, self.n, |g| keys.push(fast_str_hash(g.as_bytes())));
+                Prepared::Keys(keys)
+            })
+            .collect()
+    }
+}
+
+/// Build DCLM.
+pub fn dclm_method(n: usize, threshold: f64, budget: UnitBudget) -> Method {
+    Method {
+        name: "dclm".to_string(),
+        preparer: Arc::new(UnisegNgramPreparer { n }),
+        decider: Box::new(NgramBloomDecider {
+            filter: BloomFilter::with_capacity(budget.expected_units, budget.fp_rate),
+            threshold,
+            docs: 0,
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(text: &str) -> Doc {
+        Doc { id: 0, text: text.to_string() }
+    }
+
+    #[test]
+    fn exact_duplicate_detected() {
+        let mut m = dclm_method(5, 0.2, UnitBudget::new(100_000));
+        let d = doc("measurement of the cross section in proton collisions at high energy");
+        assert!(!m.process(&d));
+        assert!(m.process(&d));
+    }
+
+    #[test]
+    fn uniseg_tokenization_is_punctuation_robust() {
+        // Same content, different spacing around punctuation: DCLM (uniseg)
+        // should still match; Dolma-Ngram (whitespace) should not.
+        let a = "results show p<0.05 for the primary endpoint, confirming the effect size";
+        let b = "results show p < 0.05 for the primary endpoint , confirming the effect size";
+        let mut dclm = dclm_method(5, 0.6, UnitBudget::new(100_000));
+        dclm.process(&doc(a));
+        assert!(dclm.process(&doc(b)), "uniseg should bridge spacing variants");
+
+        let mut dn = super::super::dolma_ngram::dolma_ngram_method(5, 0.6, UnitBudget::new(100_000));
+        dn.process(&doc(a));
+        assert!(!dn.process(&doc(b)), "whitespace n-grams should not");
+    }
+
+    #[test]
+    fn distinct_documents_pass() {
+        let mut m = dclm_method(5, 0.2, UnitBudget::new(100_000));
+        assert!(!m.process(&doc("entirely original first document about enzymes and catalysis")));
+        assert!(!m.process(&doc("second manuscript concerning tectonic plate motion and seismics")));
+    }
+}

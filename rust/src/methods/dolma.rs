@@ -1,0 +1,150 @@
+//! Dolma paragraph-level deduplication (§3.3), document-level extension
+//! (§5.1.2).
+//!
+//! Paragraphs are exact-matched against a single Bloom filter; a document
+//! is a duplicate when the fraction of its *text* (characters) belonging
+//! to duplicated paragraphs exceeds the overlap threshold `T`.
+//!
+//! Within-document handling: all paragraphs are queried first, then
+//! inserted, so a document repeating its own paragraph is not
+//! self-matching.
+
+use super::{Decider, Method, Prepared, Preparer, UnitBudget};
+use crate::bloom::BloomFilter;
+use crate::corpus::Doc;
+use crate::hash::fast_str_hash;
+use crate::text::{normalize, paragraphs};
+use std::sync::Arc;
+
+/// Parallel stage: normalized-paragraph keys weighted by char length.
+pub struct ParagraphPreparer;
+
+impl Preparer for ParagraphPreparer {
+    fn prepare_batch(&self, docs: &[Doc]) -> Vec<Prepared> {
+        docs.iter()
+            .map(|d| {
+                let keys: Vec<(u64, u32)> = paragraphs(&d.text)
+                    .into_iter()
+                    .map(|p| {
+                        let norm = normalize(p);
+                        (fast_str_hash(norm.as_bytes()), norm.chars().count() as u32)
+                    })
+                    .collect();
+                Prepared::WeightedKeys(keys)
+            })
+            .collect()
+    }
+}
+
+/// Sequential stage: single Bloom filter over paragraph keys.
+pub struct DolmaDecider {
+    filter: BloomFilter,
+    threshold: f64,
+    docs: u64,
+}
+
+impl Decider for DolmaDecider {
+    fn decide(&mut self, prep: &Prepared) -> bool {
+        let Prepared::WeightedKeys(keys) = prep else {
+            panic!("DolmaDecider fed wrong payload");
+        };
+        self.docs += 1;
+        if keys.is_empty() {
+            return false;
+        }
+        // Query all first (avoid within-doc self matches) …
+        let total: u64 = keys.iter().map(|&(_, w)| w as u64).sum();
+        let dup: u64 = keys
+            .iter()
+            .filter(|&&(k, _)| self.filter.contains(k))
+            .map(|&(_, w)| w as u64)
+            .sum();
+        // … then insert.
+        for &(k, _) in keys {
+            self.filter.insert(k);
+        }
+        total > 0 && (dup as f64 / total as f64) >= self.threshold
+    }
+
+    fn disk_bytes(&self) -> u64 {
+        self.filter.size_bytes()
+    }
+
+    fn len(&self) -> u64 {
+        self.docs
+    }
+}
+
+/// Build Dolma (paragraph-level) with a unit budget for filter sizing.
+pub fn dolma_method(threshold: f64, budget: UnitBudget) -> Method {
+    Method {
+        name: "dolma".to_string(),
+        preparer: Arc::new(ParagraphPreparer),
+        decider: Box::new(DolmaDecider {
+            filter: BloomFilter::with_capacity(budget.expected_units, budget.fp_rate),
+            threshold,
+            docs: 0,
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(text: &str) -> Doc {
+        Doc { id: 0, text: text.to_string() }
+    }
+
+    #[test]
+    fn exact_duplicate_document_detected() {
+        let mut m = dolma_method(0.2, UnitBudget::new(10_000));
+        let d = doc("first paragraph here\nsecond paragraph text\nthird one");
+        assert!(!m.process(&d));
+        assert!(m.process(&d));
+    }
+
+    #[test]
+    fn partial_overlap_respects_threshold() {
+        let mut m = dolma_method(0.6, UnitBudget::new(10_000));
+        m.process(&doc("shared paragraph alpha\nshared paragraph beta"));
+        // One of three paragraphs shared (~1/3 of chars) < 0.6 threshold.
+        assert!(!m.process(&doc(
+            "shared paragraph alpha\nnovel paragraph content one\nnovel paragraph content two"
+        )));
+        // Two of two shared >= 0.6.
+        assert!(m.process(&doc("shared paragraph alpha\nshared paragraph beta")));
+    }
+
+    #[test]
+    fn weighting_is_by_characters_not_count() {
+        let mut m = dolma_method(0.5, UnitBudget::new(10_000));
+        let long = "x".repeat(400);
+        m.process(&doc(&format!("{long}\nshort one")));
+        // New doc: shares only the LONG paragraph -> >50% of chars dup.
+        assert!(m.process(&doc(&format!("{long}\nbrand new tail"))));
+        // New doc sharing only the SHORT paragraph -> far below 50%.
+        let long2 = "y".repeat(400);
+        assert!(!m.process(&doc(&format!("{long2}\nshort one"))));
+    }
+
+    #[test]
+    fn within_doc_repetition_is_not_self_duplicate() {
+        let mut m = dolma_method(0.2, UnitBudget::new(10_000));
+        assert!(!m.process(&doc("same line\nsame line\nsame line")));
+    }
+
+    #[test]
+    fn empty_document_is_not_duplicate() {
+        let mut m = dolma_method(0.2, UnitBudget::new(100));
+        assert!(!m.process(&doc("")));
+        assert!(!m.process(&doc("\n\n")));
+    }
+
+    #[test]
+    fn normalization_bridges_parser_variants() {
+        let mut m = dolma_method(0.2, UnitBudget::new(10_000));
+        m.process(&doc("The E\u{FB03}cient   Method"));
+        assert!(m.process(&doc("the efficient method")));
+    }
+}

@@ -1,0 +1,119 @@
+//! Dolma-Ngram (§3.3): whitespace-tokenized n-grams against a single
+//! Bloom filter; a document is a duplicate when the fraction of its
+//! n-grams already present exceeds the overlap threshold `T`.
+
+use super::{Decider, Method, Prepared, Preparer, UnitBudget};
+use crate::bloom::BloomFilter;
+use crate::corpus::Doc;
+use crate::hash::fast_str_hash;
+use crate::text::{ngram::word_ngrams, normalize, tokenize::whitespace_tokens};
+use std::sync::Arc;
+
+/// Parallel stage: whitespace n-gram keys.
+pub struct WhitespaceNgramPreparer {
+    pub n: usize,
+}
+
+impl Preparer for WhitespaceNgramPreparer {
+    fn prepare_batch(&self, docs: &[Doc]) -> Vec<Prepared> {
+        docs.iter()
+            .map(|d| {
+                let norm = normalize(&d.text);
+                let tokens: Vec<&str> = whitespace_tokens(&norm).collect();
+                let mut keys = Vec::with_capacity(tokens.len());
+                word_ngrams(&tokens, self.n, |g| keys.push(fast_str_hash(g.as_bytes())));
+                Prepared::Keys(keys)
+            })
+            .collect()
+    }
+}
+
+/// Sequential stage: fraction-duplicated vote against one Bloom filter.
+/// Shared by Dolma-Ngram and DCLM (they differ only in tokenization).
+pub struct NgramBloomDecider {
+    pub(crate) filter: BloomFilter,
+    pub(crate) threshold: f64,
+    pub(crate) docs: u64,
+}
+
+impl Decider for NgramBloomDecider {
+    fn decide(&mut self, prep: &Prepared) -> bool {
+        let Prepared::Keys(keys) = prep else {
+            panic!("NgramBloomDecider fed wrong payload");
+        };
+        self.docs += 1;
+        if keys.is_empty() {
+            return false;
+        }
+        // Query all n-grams first, then insert (no self-matching).
+        let dup = keys.iter().filter(|&&k| self.filter.contains(k)).count();
+        for &k in keys {
+            self.filter.insert(k);
+        }
+        (dup as f64 / keys.len() as f64) >= self.threshold
+    }
+
+    fn disk_bytes(&self) -> u64 {
+        self.filter.size_bytes()
+    }
+
+    fn len(&self) -> u64 {
+        self.docs
+    }
+}
+
+/// Build Dolma-Ngram.
+pub fn dolma_ngram_method(n: usize, threshold: f64, budget: UnitBudget) -> Method {
+    Method {
+        name: "dolma-ngram".to_string(),
+        preparer: Arc::new(WhitespaceNgramPreparer { n }),
+        decider: Box::new(NgramBloomDecider {
+            filter: BloomFilter::with_capacity(budget.expected_units, budget.fp_rate),
+            threshold,
+            docs: 0,
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(text: &str) -> Doc {
+        Doc { id: 0, text: text.to_string() }
+    }
+
+    #[test]
+    fn exact_duplicate_detected() {
+        let mut m = dolma_ngram_method(5, 0.2, UnitBudget::new(100_000));
+        let d = doc("one two three four five six seven eight nine ten eleven twelve");
+        assert!(!m.process(&d));
+        assert!(m.process(&d));
+    }
+
+    #[test]
+    fn distinct_documents_pass() {
+        let mut m = dolma_ngram_method(5, 0.2, UnitBudget::new(100_000));
+        assert!(!m.process(&doc("alpha beta gamma delta epsilon zeta eta theta")));
+        assert!(!m.process(&doc("iota kappa lambda mu nu xi omicron pi rho")));
+    }
+
+    #[test]
+    fn threshold_controls_sensitivity() {
+        let shared = "the method achieves strong results on every benchmark suite tested";
+        let tail = "but the analysis requires care regarding confounders and baselines";
+        let mut strict = dolma_ngram_method(5, 0.9, UnitBudget::new(100_000));
+        strict.process(&doc(shared));
+        assert!(!strict.process(&doc(&format!("{shared} {tail}"))), "strict T");
+        let mut loose = dolma_ngram_method(5, 0.2, UnitBudget::new(100_000));
+        loose.process(&doc(shared));
+        assert!(loose.process(&doc(&format!("{shared} {tail}"))), "loose T");
+    }
+
+    #[test]
+    fn short_doc_single_shingle() {
+        let mut m = dolma_ngram_method(13, 0.2, UnitBudget::new(1000));
+        assert!(!m.process(&doc("tiny doc")));
+        assert!(m.process(&doc("tiny doc")));
+    }
+}

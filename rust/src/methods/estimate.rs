@@ -1,0 +1,104 @@
+//! Corpus unit-count estimation (§5.1.2).
+//!
+//! Bloom-based unit methods need an expected n-gram/paragraph count to
+//! size their filter. Counting exactly requires a full pass, so the paper
+//! samples N=1000 documents, takes the mean unit count, and multiplies by
+//! the corpus cardinality. Reproduced here over any doc iterator.
+
+use crate::corpus::Doc;
+use crate::text::{ngram::word_ngrams, normalize, paragraphs, tokenize};
+
+/// What to count per document.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Unit {
+    /// Newline paragraphs (Dolma, CCNet).
+    Paragraphs,
+    /// Whitespace-token n-grams of size n (Dolma-Ngram).
+    WhitespaceNgrams(usize),
+    /// Uniseg-token n-grams of size n (DCLM).
+    UnisegNgrams(usize),
+}
+
+/// Count units in one document.
+pub fn count_units(doc: &Doc, unit: Unit) -> u64 {
+    match unit {
+        Unit::Paragraphs => paragraphs(&doc.text).len() as u64,
+        Unit::WhitespaceNgrams(n) => {
+            let norm = normalize(&doc.text);
+            let tokens: Vec<&str> = tokenize::whitespace_tokens(&norm).collect();
+            let mut c = 0u64;
+            word_ngrams(&tokens, n, |_| c += 1);
+            c
+        }
+        Unit::UnisegNgrams(n) => {
+            let norm = normalize(&doc.text);
+            let tokens = tokenize::uniseg_words(&norm);
+            let mut c = 0u64;
+            word_ngrams(&tokens, n, |_| c += 1);
+            c
+        }
+    }
+}
+
+/// §5.1.2 estimator: mean unit count over a sample of up to
+/// `sample_size` docs (paper: 1000), scaled to `total_docs`.
+pub fn estimate_total_units<'a, I>(sample: I, sample_size: usize, total_docs: u64, unit: Unit) -> u64
+where
+    I: IntoIterator<Item = &'a Doc>,
+{
+    let mut n = 0u64;
+    let mut total = 0u64;
+    for doc in sample.into_iter().take(sample_size) {
+        total += count_units(doc, unit);
+        n += 1;
+    }
+    if n == 0 {
+        return total_docs; // degenerate fallback: 1 unit/doc
+    }
+    let mean = total as f64 / n as f64;
+    (mean * total_docs as f64).ceil() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{CorpusGenerator, GeneratorConfig};
+
+    fn sample_docs(n: usize) -> Vec<Doc> {
+        let g = CorpusGenerator::new(GeneratorConfig::short());
+        (0..n as u64).map(|i| g.generate(77, i)).collect()
+    }
+
+    #[test]
+    fn estimator_close_to_exact_on_uniform_corpus() {
+        let docs = sample_docs(400);
+        for unit in [Unit::Paragraphs, Unit::WhitespaceNgrams(5), Unit::UnisegNgrams(5)] {
+            let exact: u64 = docs.iter().map(|d| count_units(d, unit)).sum();
+            let est = estimate_total_units(docs.iter().take(100), 100, 400, unit);
+            let rel = (est as f64 - exact as f64).abs() / exact as f64;
+            assert!(rel < 0.15, "{unit:?}: est {est} vs exact {exact} (rel {rel:.3})");
+        }
+    }
+
+    #[test]
+    fn ngram_counts_shrink_with_n() {
+        let docs = sample_docs(10);
+        let c1: u64 = docs.iter().map(|d| count_units(d, Unit::WhitespaceNgrams(1))).sum();
+        let c5: u64 = docs.iter().map(|d| count_units(d, Unit::WhitespaceNgrams(5))).sum();
+        assert!(c1 > c5);
+    }
+
+    #[test]
+    fn uniseg_yields_more_tokens_than_whitespace() {
+        // Punctuation splitting produces more unigrams.
+        let docs = sample_docs(10);
+        let w: u64 = docs.iter().map(|d| count_units(d, Unit::WhitespaceNgrams(1))).sum();
+        let u: u64 = docs.iter().map(|d| count_units(d, Unit::UnisegNgrams(1))).sum();
+        assert!(u >= w);
+    }
+
+    #[test]
+    fn empty_sample_fallback() {
+        assert_eq!(estimate_total_units([].iter(), 1000, 500, Unit::Paragraphs), 500);
+    }
+}

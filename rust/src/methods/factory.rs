@@ -1,0 +1,173 @@
+//! Uniform method construction for the evaluation harness.
+//!
+//! A [`MethodSpec`] names a technique plus its hyperparameters; `build`
+//! materializes the [`Method`], estimating Bloom unit budgets from a
+//! document sample exactly as §5.1.2 prescribes.
+
+use super::estimate::{estimate_total_units, Unit};
+use super::{Method, UnitBudget};
+use crate::config::PipelineConfig;
+use crate::corpus::Doc;
+use crate::minhash::PermFamily;
+
+/// The six techniques (plus the CCNet exact-set ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MethodKind {
+    MinHashLsh,
+    LshBloom,
+    Dolma,
+    DolmaNgram,
+    CcNet,
+    CcNetExact,
+    Dclm,
+}
+
+impl MethodKind {
+    /// All paper-benchmarked techniques (Fig. 5 set).
+    pub const ALL: [MethodKind; 6] = [
+        MethodKind::MinHashLsh,
+        MethodKind::LshBloom,
+        MethodKind::Dolma,
+        MethodKind::DolmaNgram,
+        MethodKind::CcNet,
+        MethodKind::Dclm,
+    ];
+
+    /// Display name (matches the paper's figures).
+    pub fn name(self) -> &'static str {
+        match self {
+            MethodKind::MinHashLsh => "minhashlsh",
+            MethodKind::LshBloom => "lshbloom",
+            MethodKind::Dolma => "dolma",
+            MethodKind::DolmaNgram => "dolma-ngram",
+            MethodKind::CcNet => "ccnet",
+            MethodKind::CcNetExact => "ccnet-exact",
+            MethodKind::Dclm => "dclm",
+        }
+    }
+
+    /// Parse from a CLI token.
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "minhashlsh" => MethodKind::MinHashLsh,
+            "lshbloom" => MethodKind::LshBloom,
+            "dolma" => MethodKind::Dolma,
+            "dolma-ngram" => MethodKind::DolmaNgram,
+            "ccnet" => MethodKind::CcNet,
+            "ccnet-exact" => MethodKind::CcNetExact,
+            "dclm" => MethodKind::Dclm,
+            _ => return None,
+        })
+    }
+}
+
+/// A technique plus hyperparameters (one grid point).
+#[derive(Clone, Debug)]
+pub struct MethodSpec {
+    pub kind: MethodKind,
+    /// Overlap / Jaccard threshold T.
+    pub threshold: f64,
+    /// MinHash permutations (LSH methods).
+    pub num_perms: usize,
+    /// N-gram size (LSH shingles and n-gram unit methods).
+    pub ngram: usize,
+    /// Index-wide p_effective (LSHBloom).
+    pub p_effective: f64,
+    /// Unit-method Bloom FP rate (§5.1.5: 1e-5).
+    pub unit_fp: f64,
+    /// Expected corpus size in documents.
+    pub expected_docs: u64,
+    /// MinHash permutation family.
+    pub family: PermFamily,
+}
+
+impl MethodSpec {
+    /// Table-1 best settings for a technique.
+    pub fn best(kind: MethodKind, expected_docs: u64) -> Self {
+        let (threshold, ngram) = match kind {
+            MethodKind::MinHashLsh | MethodKind::LshBloom => (0.5, 1),
+            MethodKind::DolmaNgram | MethodKind::Dclm => (0.2, 5),
+            MethodKind::Dolma | MethodKind::CcNet | MethodKind::CcNetExact => (0.2, 1),
+        };
+        Self {
+            kind,
+            threshold,
+            num_perms: 256,
+            ngram,
+            p_effective: 1e-5,
+            unit_fp: UnitBudget::DEFAULT_FP,
+            expected_docs,
+            family: PermFamily::Mix64,
+        }
+    }
+
+    /// Build the method; `sample` is used for §5.1.2 unit estimation
+    /// (pass any representative slice of the corpus, e.g. the first 1000).
+    pub fn build(&self, sample: &[Doc]) -> Method {
+        let cfg = PipelineConfig {
+            threshold: self.threshold,
+            num_perms: self.num_perms,
+            ngram: self.ngram,
+            p_effective: self.p_effective,
+            expected_docs: self.expected_docs,
+            ..Default::default()
+        };
+        let budget = |unit: Unit| {
+            UnitBudget {
+                expected_units: estimate_total_units(
+                    sample.iter(),
+                    1000,
+                    self.expected_docs,
+                    unit,
+                )
+                .max(1),
+                fp_rate: self.unit_fp,
+            }
+        };
+        match self.kind {
+            MethodKind::MinHashLsh => super::minhashlsh::minhashlsh_method(&cfg, self.family),
+            MethodKind::LshBloom => super::lshbloom::lshbloom_method(&cfg, self.family),
+            MethodKind::Dolma => super::dolma::dolma_method(self.threshold, budget(Unit::Paragraphs)),
+            MethodKind::DolmaNgram => super::dolma_ngram::dolma_ngram_method(
+                self.ngram,
+                self.threshold,
+                budget(Unit::WhitespaceNgrams(self.ngram)),
+            ),
+            MethodKind::CcNet => super::ccnet::ccnet_method(self.threshold, budget(Unit::Paragraphs)),
+            MethodKind::CcNetExact => super::ccnet::ccnet_exact_method(self.threshold),
+            MethodKind::Dclm => super::dclm::dclm_method(
+                self.ngram,
+                self.threshold,
+                budget(Unit::UnisegNgrams(self.ngram)),
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{CorpusGenerator, GeneratorConfig};
+
+    #[test]
+    fn every_kind_builds_and_runs() {
+        let g = CorpusGenerator::new(GeneratorConfig::short());
+        let sample: Vec<Doc> = (0..20).map(|i| g.generate(99, i)).collect();
+        for kind in MethodKind::ALL {
+            let spec = MethodSpec::best(kind, 1000);
+            let mut m = spec.build(&sample);
+            assert_eq!(m.name, kind.name());
+            let d = g.generate(99, 100);
+            assert!(!m.process(&d), "{}: fresh doc flagged", m.name);
+            assert!(m.process(&d), "{}: exact dup missed", m.name);
+        }
+    }
+
+    #[test]
+    fn kind_roundtrip() {
+        for kind in MethodKind::ALL {
+            assert_eq!(MethodKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(MethodKind::parse("nope"), None);
+    }
+}

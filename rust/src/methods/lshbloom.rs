@@ -1,0 +1,166 @@
+//! LSHBloom (§4) — the paper's method.
+//!
+//! Prepare: normalize → shingle → MinHash signature → band sum-hashes
+//! (parallel; or batched through the XLA artifact — see
+//! `crate::runtime::minhash_xla::XlaBandPreparer`).
+//! Decide: probe/insert `b` Bloom filters (sequential, contiguous
+//! bit-array access — the §4.5 throughput story).
+
+use super::{Decider, Method, Prepared, Preparer};
+use crate::config::PipelineConfig;
+use crate::corpus::Doc;
+use crate::hash::band::band_hashes_for_doc;
+use crate::index::lshbloom::{LshBloomConfig, LshBloomIndex};
+use crate::index::BandIndex;
+use crate::minhash::{optimal_param, LshParams, MinHasher, PermFamily};
+use crate::text::normalize;
+use std::sync::Arc;
+
+/// Parallel stage: band sum-hashes via the native backend.
+pub struct BandPreparer {
+    pub hasher: MinHasher,
+    pub lsh: LshParams,
+}
+
+impl Preparer for BandPreparer {
+    fn prepare_batch(&self, docs: &[Doc]) -> Vec<Prepared> {
+        let mut out = Vec::with_capacity(docs.len());
+        let mut bands = Vec::with_capacity(self.lsh.num_bands);
+        for d in docs {
+            let sig = self.hasher.signature(&normalize(&d.text));
+            band_hashes_for_doc(&sig, self.lsh.num_bands, self.lsh.rows_per_band, &mut bands);
+            out.push(Prepared::Bands(bands.clone()));
+        }
+        out
+    }
+}
+
+/// Sequential stage: the per-band Bloom index.
+pub struct LshBloomDecider {
+    index: LshBloomIndex,
+}
+
+impl LshBloomDecider {
+    /// Expose the index (persistence, diagnostics).
+    pub fn index(&self) -> &LshBloomIndex {
+        &self.index
+    }
+
+    /// Take the index out (for saving at end of run).
+    pub fn into_index(self) -> LshBloomIndex {
+        self.index
+    }
+}
+
+impl Decider for LshBloomDecider {
+    fn decide(&mut self, prep: &Prepared) -> bool {
+        let Prepared::Bands(bands) = prep else {
+            panic!("LshBloomDecider fed non-bands payload");
+        };
+        self.index.insert_if_new(bands)
+    }
+
+    fn disk_bytes(&self) -> u64 {
+        self.index.disk_bytes()
+    }
+
+    fn len(&self) -> u64 {
+        self.index.len()
+    }
+}
+
+/// Build LSHBloom with the native backend.
+pub fn lshbloom_method(cfg: &PipelineConfig, family: PermFamily) -> Method {
+    let lsh = optimal_param(cfg.threshold, cfg.num_perms);
+    let hasher = MinHasher::new(family, lsh.rows_used(), cfg.ngram);
+    Method {
+        name: "lshbloom".to_string(),
+        preparer: Arc::new(BandPreparer { hasher, lsh }),
+        decider: Box::new(decider_from_config(cfg, lsh)),
+    }
+}
+
+/// Build just the decider (shared by the XLA-preparer variant).
+pub fn decider_from_config(cfg: &PipelineConfig, lsh: LshParams) -> LshBloomDecider {
+    let index_cfg = LshBloomConfig {
+        lsh,
+        p_effective: cfg.p_effective,
+        expected_docs: cfg.expected_docs,
+        blocked: cfg.blocked_bloom && !cfg.use_shm,
+    };
+    let index = if cfg.use_shm {
+        let dir = crate::bloom::shm::default_shm_dir().join(format!(
+            "lshbloom-{}-{}",
+            std::process::id(),
+            lsh.num_bands
+        ));
+        LshBloomIndex::new_shm(index_cfg, &dir).unwrap_or_else(|e| {
+            crate::log_warn!("shm index unavailable ({e}); falling back to heap");
+            LshBloomIndex::new(index_cfg)
+        })
+    } else {
+        LshBloomIndex::new(index_cfg)
+    };
+    LshBloomDecider { index }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{DatasetSpec, LabeledCorpus};
+
+    fn cfg() -> PipelineConfig {
+        PipelineConfig {
+            num_perms: 128,
+            threshold: 0.5,
+            expected_docs: 10_000,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn detects_exact_and_rejects_distinct() {
+        let mut m = lshbloom_method(&cfg(), PermFamily::Mix64);
+        let d1 = Doc { id: 0, text: "the quick brown fox jumps over the lazy dog".into() };
+        let d2 = d1.clone();
+        let d3 = Doc { id: 2, text: "completely unrelated content with other words".into() };
+        assert!(!m.process(&d1));
+        assert!(m.process(&d2));
+        assert!(!m.process(&d3));
+    }
+
+    #[test]
+    fn tracks_minhashlsh_verdicts_closely() {
+        // The paper's core fidelity claim: LSHBloom ≈ MinHashLSH. Same
+        // family + same corpus -> nearly identical verdict vectors.
+        let corpus = LabeledCorpus::build(DatasetSpec::testing(13, 150, 0.5));
+        let mut lshb = lshbloom_method(&cfg(), PermFamily::Mix64);
+        let mut mlsh = super::super::minhashlsh::minhashlsh_method(&cfg(), PermFamily::Mix64);
+        let va = lshb.process_all(&corpus.docs);
+        let vb = mlsh.process_all(&corpus.docs);
+        let agree = va.iter().zip(&vb).filter(|(a, b)| a == b).count();
+        let agreement = agree as f64 / va.len() as f64;
+        assert!(agreement > 0.97, "agreement {agreement}");
+    }
+
+    #[test]
+    fn disk_is_fixed_by_capacity_not_docs() {
+        let mut m = lshbloom_method(&cfg(), PermFamily::Mix64);
+        let before = m.decider.disk_bytes();
+        let g = crate::corpus::CorpusGenerator::new(crate::corpus::GeneratorConfig::short());
+        for i in 0..100 {
+            m.process(&g.generate(21, i));
+        }
+        assert_eq!(m.decider.disk_bytes(), before, "bloom index size is static");
+    }
+
+    #[test]
+    fn shm_variant_constructs() {
+        let mut c = cfg();
+        c.use_shm = true;
+        let mut m = lshbloom_method(&c, PermFamily::Mix64);
+        let d = Doc { id: 0, text: "shm backed bloom filter test".into() };
+        assert!(!m.process(&d));
+        assert!(m.process(&d));
+    }
+}

@@ -1,0 +1,204 @@
+//! MinHashLSH (§2.3 / §3.3) — the datasketch-style baseline.
+//!
+//! Prepare: normalize → shingle → MinHash signature (parallel).
+//! Decide: hashmap band index query + insert (sequential, pointer-heavy —
+//! the structure whose cost Fig. 1 and Fig. 7 quantify).
+
+use super::{Decider, Method, Prepared, Preparer};
+use crate::config::PipelineConfig;
+use crate::corpus::Doc;
+use crate::index::minhashlsh::MinHashLshIndex;
+use crate::index::BandIndex;
+use crate::minhash::{optimal_param, LshParams, MinHasher, PermFamily};
+use crate::text::normalize;
+use std::sync::Arc;
+
+/// Parallel stage: full signatures.
+pub struct SignaturePreparer {
+    pub hasher: MinHasher,
+}
+
+impl Preparer for SignaturePreparer {
+    fn prepare_batch(&self, docs: &[Doc]) -> Vec<Prepared> {
+        docs.iter()
+            .map(|d| Prepared::Signature(self.hasher.signature(&normalize(&d.text))))
+            .collect()
+    }
+}
+
+/// Sequential stage: the hashmap band index.
+pub struct MinHashLshDecider {
+    index: MinHashLshIndex,
+    next_id: u64,
+}
+
+impl Decider for MinHashLshDecider {
+    fn decide(&mut self, prep: &Prepared) -> bool {
+        let Prepared::Signature(sig) = prep else {
+            panic!("MinHashLshDecider fed non-signature payload");
+        };
+        let id = self.next_id;
+        self.next_id += 1;
+        self.index.insert_signature_if_new(id, sig)
+    }
+
+    fn disk_bytes(&self) -> u64 {
+        self.index.disk_bytes()
+    }
+
+    fn len(&self) -> u64 {
+        self.index.len()
+    }
+}
+
+/// Build the MinHashLSH method from pipeline config.
+///
+/// `family` selects the permutation family; the paper's baseline is
+/// datasketch-compatible, which is the default here.
+pub fn minhashlsh_method(cfg: &PipelineConfig, family: PermFamily) -> Method {
+    let params: LshParams = optimal_param(cfg.threshold, cfg.num_perms);
+    let hasher = MinHasher::new(family, params.rows_used(), cfg.ngram);
+    Method {
+        name: "minhashlsh".to_string(),
+        preparer: Arc::new(SignaturePreparer { hasher }),
+        decider: Box::new(MinHashLshDecider {
+            index: MinHashLshIndex::new(params.num_bands, params.rows_per_band),
+            next_id: 0,
+        }),
+    }
+}
+
+/// Calibrated datasketch cost model (see DESIGN.md §Substitutions and
+/// EXPERIMENTS.md Fig. 1 notes).
+///
+/// The paper benchmarks the *Python* datasketch implementation, whose
+/// index ops cost ~2.9 ms/doc (37 h / 39 M docs with >85% in the index
+/// per Fig. 1) — three orders of magnitude above a native hashmap.
+/// Our rust port of the same structure removes that interpreter overhead,
+/// which would silently change the baseline. This decider runs the REAL
+/// hashmap work plus a busy-wait calibrated to the paper's measured
+/// per-document index cost, so Fig. 1/7 can regenerate the paper's
+/// end-to-end shape under a documented substitution. The honest
+/// rust-normalized comparison is always reported alongside it.
+#[derive(Clone, Copy, Debug)]
+pub struct PySimCosts {
+    /// Simulated index-op nanoseconds per document.
+    pub per_doc_index_ns: u64,
+}
+
+impl PySimCosts {
+    /// Paper-calibrated: 37 h over 39 M docs, 85% index share.
+    pub fn paper_calibrated() -> Self {
+        Self { per_doc_index_ns: 2_900_000 }
+    }
+}
+
+/// MinHashLSH with the datasketch interpreter-cost simulation.
+pub struct MinHashLshPySimDecider {
+    inner: MinHashLshDecider,
+    costs: PySimCosts,
+}
+
+impl Decider for MinHashLshPySimDecider {
+    fn decide(&mut self, prep: &Prepared) -> bool {
+        let t0 = std::time::Instant::now();
+        let verdict = self.inner.decide(prep);
+        // Busy-wait out the remainder of the calibrated per-doc budget
+        // (datasketch's Python dict/pickle machinery has no rust analog).
+        let budget = std::time::Duration::from_nanos(self.costs.per_doc_index_ns);
+        while t0.elapsed() < budget {
+            std::hint::spin_loop();
+        }
+        verdict
+    }
+
+    fn disk_bytes(&self) -> u64 {
+        // datasketch persists Python-pickled entries: ~5.4 kB/doc measured
+        // by the paper (200 GB / 39 M docs, §5.4.1).
+        self.inner.disk_bytes().max(self.inner.len() * 5400)
+    }
+
+    fn len(&self) -> u64 {
+        self.inner.len()
+    }
+}
+
+/// Build the datasketch-cost-simulated baseline.
+pub fn minhashlsh_pysim_method(cfg: &PipelineConfig, family: PermFamily, costs: PySimCosts) -> Method {
+    let params: LshParams = optimal_param(cfg.threshold, cfg.num_perms);
+    let hasher = MinHasher::new(family, params.rows_used(), cfg.ngram);
+    Method {
+        name: "minhashlsh-pysim".to_string(),
+        preparer: Arc::new(SignaturePreparer { hasher }),
+        decider: Box::new(MinHashLshPySimDecider {
+            inner: MinHashLshDecider {
+                index: MinHashLshIndex::new(params.num_bands, params.rows_per_band),
+                next_id: 0,
+            },
+            costs,
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{DatasetSpec, LabeledCorpus};
+
+    fn small_cfg() -> PipelineConfig {
+        PipelineConfig { num_perms: 128, threshold: 0.5, ..Default::default() }
+    }
+
+    #[test]
+    fn detects_exact_duplicates() {
+        let mut m = minhashlsh_method(&small_cfg(), PermFamily::Datasketch);
+        let d1 = Doc { id: 0, text: "alpha beta gamma delta epsilon zeta".into() };
+        let d2 = Doc { id: 1, text: "alpha beta gamma delta epsilon zeta".into() };
+        let d3 = Doc { id: 2, text: "totally different words entirely here now".into() };
+        assert!(!m.process(&d1));
+        assert!(m.process(&d2), "exact duplicate missed");
+        assert!(!m.process(&d3), "distinct doc flagged");
+    }
+
+    #[test]
+    fn detects_near_duplicates_from_corpus() {
+        let corpus = LabeledCorpus::build(DatasetSpec::testing(5, 120, 0.5));
+        let mut m = minhashlsh_method(&small_cfg(), PermFamily::Datasketch);
+        let verdicts = m.process_all(&corpus.docs);
+        // Recall: most labeled duplicates detected.
+        let (mut tp, mut fn_, mut fp) = (0, 0, 0);
+        for (v, ld) in verdicts.iter().zip(&corpus.docs) {
+            match (ld.is_duplicate(), *v) {
+                (true, true) => tp += 1,
+                (true, false) => fn_ += 1,
+                (false, true) => fp += 1,
+                _ => {}
+            }
+        }
+        let recall = tp as f64 / (tp + fn_) as f64;
+        assert!(recall > 0.6, "recall {recall} (tp={tp} fn={fn_})");
+        assert!(fp <= 3, "too many false positives: {fp}");
+    }
+
+    #[test]
+    fn both_families_work() {
+        for fam in [PermFamily::Mix64, PermFamily::Datasketch] {
+            let mut m = minhashlsh_method(&small_cfg(), fam);
+            let d = Doc { id: 0, text: "repeat me please repeat me please".into() };
+            assert!(!m.process(&d));
+            assert!(m.process(&d));
+        }
+    }
+
+    #[test]
+    fn disk_grows_with_docs() {
+        let mut m = minhashlsh_method(&small_cfg(), PermFamily::Datasketch);
+        let g = crate::corpus::CorpusGenerator::new(crate::corpus::GeneratorConfig::short());
+        let before = m.decider.disk_bytes();
+        for i in 0..50 {
+            m.process(&g.generate(33, i));
+        }
+        assert!(m.decider.disk_bytes() > before);
+        assert_eq!(m.decider.len(), 50);
+    }
+}

@@ -1,0 +1,140 @@
+//! The six deduplication techniques the paper benchmarks (§3.3, §5.1.2).
+//!
+//! Every method is expressed as a two-stage object, mirroring the paper's
+//! pipeline phases (Fig. 1):
+//!
+//! * a [`Preparer`] (stateless, `Sync`) — the *parallelizable* per-document
+//!   work: normalization, shingling, MinHashing / paragraph hashing.
+//! * a [`Decider`] (stateful, sequential) — the *index* work: query the
+//!   method's structure for a duplicate verdict and insert the document.
+//!
+//! The orchestrator fans [`Preparer::prepare_batch`] out across worker
+//! threads and runs [`Decider::decide`] on the single insert thread
+//! (§4.4.2: index insertion must be sequential to keep the streaming
+//! duplicate semantics exact).
+//!
+//! | Method        | Prepared payload                  | Decider state              |
+//! |---------------|-----------------------------------|----------------------------|
+//! | MinHashLSH    | full MinHash signature            | hashmap band index         |
+//! | LSHBloom      | band sum-hashes                   | per-band Bloom filters     |
+//! | Dolma         | paragraph keys + char weights     | single Bloom filter        |
+//! | Dolma-Ngram   | whitespace n-gram keys            | single Bloom filter        |
+//! | CCNet         | normalized-paragraph SHA-1 keys   | single Bloom filter        |
+//! | DCLM          | uniseg n-gram keys                | single Bloom filter        |
+
+pub mod ccnet;
+pub mod dclm;
+pub mod dolma;
+pub mod dolma_ngram;
+pub mod estimate;
+pub mod factory;
+pub mod lshbloom;
+pub mod minhashlsh;
+
+pub use factory::{MethodKind, MethodSpec};
+
+use crate::corpus::Doc;
+use std::sync::Arc;
+
+/// Per-document intermediate produced by the parallel stage.
+#[derive(Clone, Debug)]
+pub enum Prepared {
+    /// Full MinHash signature (MinHashLSH).
+    Signature(Vec<u64>),
+    /// Band sum-hashes (LSHBloom).
+    Bands(Vec<u64>),
+    /// Unit keys with weights: (key, weight) — e.g. paragraph hash with
+    /// its character count (Dolma weights overlap by text length).
+    WeightedKeys(Vec<(u64, u32)>),
+    /// Unweighted unit keys (n-grams, paragraphs counted equally).
+    Keys(Vec<u64>),
+}
+
+impl Prepared {
+    /// Number of units in the payload (diagnostics).
+    pub fn len(&self) -> usize {
+        match self {
+            Prepared::Signature(v) | Prepared::Bands(v) | Prepared::Keys(v) => v.len(),
+            Prepared::WeightedKeys(v) => v.len(),
+        }
+    }
+
+    /// True when the payload is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Stateless, thread-shareable per-document preparation.
+pub trait Preparer: Send + Sync {
+    /// Prepare a batch of documents (batched so the XLA backend can run
+    /// one artifact execution per batch).
+    fn prepare_batch(&self, docs: &[Doc]) -> Vec<Prepared>;
+}
+
+/// Sequential duplicate decision + state update.
+pub trait Decider: Send {
+    /// Atomically query-and-insert; `true` = duplicate (§2.1's F(d_i)).
+    fn decide(&mut self, prep: &Prepared) -> bool;
+
+    /// Current index footprint in bytes (Fig. 6b / 7b metric).
+    fn disk_bytes(&self) -> u64;
+
+    /// Documents processed.
+    fn len(&self) -> u64;
+}
+
+/// A complete deduplication method: name + the two stages.
+pub struct Method {
+    pub name: String,
+    pub preparer: Arc<dyn Preparer>,
+    pub decider: Box<dyn Decider>,
+}
+
+impl Method {
+    /// Convenience for tests / single-threaded evaluation: process one
+    /// document through both stages.
+    pub fn process(&mut self, doc: &Doc) -> bool {
+        let prepared = self.preparer.prepare_batch(std::slice::from_ref(doc));
+        self.decider.decide(&prepared[0])
+    }
+
+    /// Process a full labeled corpus sequentially, returning per-doc
+    /// verdicts (the simple evaluation path; the pipeline module provides
+    /// the parallel one).
+    pub fn process_all(&mut self, docs: &[crate::corpus::LabeledDoc]) -> Vec<bool> {
+        docs.iter().map(|ld| self.process(&ld.doc)).collect()
+    }
+}
+
+/// Count-estimation inputs shared by Bloom-based unit methods (§5.1.2):
+/// expected number of unit insertions, used to size the filter.
+#[derive(Clone, Copy, Debug)]
+pub struct UnitBudget {
+    /// Expected total units (n-grams / paragraphs) across the corpus.
+    pub expected_units: u64,
+    /// Per-filter false-positive rate (paper: 1e-5 for unit methods).
+    pub fp_rate: f64,
+}
+
+impl UnitBudget {
+    /// Default unit-method FP rate from §5.1.5.
+    pub const DEFAULT_FP: f64 = 1e-5;
+
+    /// Construct with the default rate.
+    pub fn new(expected_units: u64) -> Self {
+        Self { expected_units: expected_units.max(1), fp_rate: Self::DEFAULT_FP }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prepared_len() {
+        assert_eq!(Prepared::Keys(vec![1, 2, 3]).len(), 3);
+        assert_eq!(Prepared::WeightedKeys(vec![(1, 10)]).len(), 1);
+        assert!(Prepared::Signature(vec![]).is_empty());
+    }
+}

@@ -1,0 +1,13 @@
+//! MinHash signatures and LSH band parameters (§2.2–§2.3).
+//!
+//! * [`params`] — optimal (b, r) selection minimizing the weighted FP/FN
+//!   integrals (paper Eqs. 1–2, Zhu et al. procedure); kept in lock-step
+//!   with `python/compile/lsh_params.py`.
+//! * [`signature`] — native signature computation over shingle sets for
+//!   both permutation families (mix64 / datasketch-compatible).
+
+pub mod params;
+pub mod signature;
+
+pub use params::{optimal_param, LshParams};
+pub use signature::{MinHasher, PermFamily, Signature};

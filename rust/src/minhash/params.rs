@@ -1,0 +1,164 @@
+//! Optimal LSH band geometry (b, r).
+//!
+//! Implements the paper's Eqs. (1)–(2) and the datasketch/Zhu-et-al.
+//! `_optimal_param` search: enumerate all (b, r) with `b·r ≤ P`, score by
+//! `w_fp·FP + w_fn·FN` with the integrals evaluated by midpoint-rectangle
+//! integration at dx = 0.001, pick the argmin.
+//!
+//! `python/compile/lsh_params.py` implements the identical procedure; the
+//! AOT manifest pins both sides together (`rust/tests/xla_backend.rs`).
+
+const INTEGRATION_DX: f64 = 0.001;
+
+fn integrate<F: Fn(f64) -> f64>(f: F, a: f64, b: f64) -> f64 {
+    let mut area = 0.0;
+    let mut x = a;
+    while x < b {
+        area += f(x + 0.5 * INTEGRATION_DX) * INTEGRATION_DX;
+        x += INTEGRATION_DX;
+    }
+    area
+}
+
+/// Paper Eq. (1): probability mass of false positives below threshold T.
+pub fn false_positive_probability(threshold: f64, b: usize, r: usize) -> f64 {
+    integrate(
+        |t| 1.0 - (1.0 - t.powi(r as i32)).powi(b as i32),
+        0.0,
+        threshold,
+    )
+}
+
+/// Paper Eq. (2): probability mass of false negatives above threshold T.
+pub fn false_negative_probability(threshold: f64, b: usize, r: usize) -> f64 {
+    integrate(
+        |t| (1.0 - t.powi(r as i32)).powi(b as i32),
+        threshold,
+        1.0,
+    )
+}
+
+/// Resolved LSH band geometry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LshParams {
+    /// Number of bands b (= number of Bloom filters in LSHBloom).
+    pub num_bands: usize,
+    /// Rows per band r.
+    pub rows_per_band: usize,
+}
+
+impl LshParams {
+    /// Signature rows actually consumed (`b·r ≤ P`).
+    pub fn rows_used(&self) -> usize {
+        self.num_bands * self.rows_per_band
+    }
+}
+
+/// Find the (b, r) minimizing `0.5·FP + 0.5·FN` (datasketch defaults).
+pub fn optimal_param(threshold: f64, num_perm: usize) -> LshParams {
+    optimal_param_weighted(threshold, num_perm, 0.5, 0.5)
+}
+
+/// Weighted variant (`fp_weight + fn_weight` need not sum to 1).
+pub fn optimal_param_weighted(
+    threshold: f64,
+    num_perm: usize,
+    fp_weight: f64,
+    fn_weight: f64,
+) -> LshParams {
+    assert!(num_perm >= 1);
+    let mut best = (f64::INFINITY, LshParams { num_bands: 1, rows_per_band: 1 });
+    for b in 1..=num_perm {
+        let max_r = num_perm / b;
+        for r in 1..=max_r {
+            let err = fp_weight * false_positive_probability(threshold, b, r)
+                + fn_weight * false_negative_probability(threshold, b, r);
+            if err < best.0 {
+                best = (err, LshParams { num_bands: b, rows_per_band: r });
+            }
+        }
+    }
+    best.1
+}
+
+/// The LSH S-curve: probability two docs with Jaccard similarity `s`
+/// share at least one identical band.
+pub fn collision_probability(s: f64, params: LshParams) -> f64 {
+    1.0 - (1.0 - s.powi(params.rows_per_band as i32)).powi(params.num_bands as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example_t08_p128_gives_9_bands() {
+        // §4.5: "a Jaccard similarity threshold T of 0.8, and 128 random
+        // permutations ... MinHashLSH creates nine bands".
+        let p = optimal_param(0.8, 128);
+        assert_eq!(p.num_bands, 9);
+        assert_eq!(p.rows_per_band, 13);
+    }
+
+    #[test]
+    fn main_config_matches_python_manifest() {
+        // aot.py lowered T=0.5/P=256 as (42, 6) and test config T=0.5/P=128.
+        let p = optimal_param(0.5, 256);
+        assert_eq!((p.num_bands, p.rows_per_band), (42, 6));
+        let p = optimal_param(0.5, 128);
+        assert_eq!((p.num_bands, p.rows_per_band), (25, 5));
+    }
+
+    #[test]
+    fn geometry_fits_permutations() {
+        for &t in &[0.2, 0.4, 0.5, 0.6, 0.8, 1.0f64] {
+            for &p in &[32usize, 48, 64, 128, 256] {
+                let params = optimal_param(t, p);
+                assert!(params.rows_used() <= p, "t={t} p={p}: {params:?}");
+                assert!(params.num_bands >= 1 && params.rows_per_band >= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn integrals_are_probability_masses() {
+        let (b, r) = (9, 13);
+        let fp = false_positive_probability(0.8, b, r);
+        let fn_ = false_negative_probability(0.8, b, r);
+        assert!(fp > 0.0 && fp < 0.8);
+        assert!(fn_ > 0.0 && fn_ < 0.2);
+    }
+
+    #[test]
+    fn fp_monotone_in_bands_fn_antitone() {
+        // More bands -> more collisions -> FP up, FN down.
+        let t = 0.5;
+        let fp1 = false_positive_probability(t, 4, 8);
+        let fp2 = false_positive_probability(t, 16, 8);
+        assert!(fp2 > fp1);
+        let fn1 = false_negative_probability(t, 4, 8);
+        let fn2 = false_negative_probability(t, 16, 8);
+        assert!(fn2 < fn1);
+    }
+
+    #[test]
+    fn s_curve_shape() {
+        let p = LshParams { num_bands: 9, rows_per_band: 13 };
+        assert!(collision_probability(0.1, p) < 0.01);
+        assert!(collision_probability(0.95, p) > 0.99);
+        // Monotone increasing.
+        let mut prev = 0.0;
+        for i in 0..=20 {
+            let c = collision_probability(i as f64 / 20.0, p);
+            assert!(c >= prev);
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn higher_fn_weight_prefers_more_bands() {
+        let fn_heavy = optimal_param_weighted(0.5, 128, 0.1, 0.9);
+        let fp_heavy = optimal_param_weighted(0.5, 128, 0.9, 0.1);
+        assert!(fn_heavy.num_bands >= fp_heavy.num_bands);
+    }
+}

@@ -1,0 +1,258 @@
+//! Native MinHash signature computation.
+//!
+//! A document is shingled (word n-grams over normalized text), each
+//! shingle hashed to u64 (SHA-1 low-8), and the signature is the
+//! per-permutation minimum over the shingle hashes:
+//!
+//! * [`PermFamily::Mix64`] — `min_t mix64(t ^ seed_i)`; identical to the
+//!   Pallas kernel / XLA artifacts (golden vectors pin this).
+//! * [`PermFamily::Datasketch`] — `min_t ((a_i·t + b_i) mod p) & 2^32-1`;
+//!   faithful to the paper's datasketch baseline, needs u128 (§4.4.1).
+//!
+//! The empty document yields a signature of all `u64::MAX` (matching the
+//! kernel's padded-row semantics).
+
+use crate::hash::mix64::{self, PERM_MASTER_SEED};
+use crate::hash::universal::{self, PermPair};
+use crate::hash::token_hash_u64;
+use crate::text::{ngram::word_ngrams, tokenize::whitespace_tokens};
+
+/// A document signature: `P` u64 MinHash values.
+pub type Signature = Vec<u64>;
+
+/// Which permutation family drives the signature.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PermFamily {
+    /// splitmix64-finalizer family (XLA-identical).
+    Mix64,
+    /// datasketch-compatible `(a·h+b) mod 2^61-1`, truncated to 32 bits.
+    Datasketch,
+}
+
+/// Signature generator: holds derived permutation state.
+pub struct MinHasher {
+    family: PermFamily,
+    /// mix64 family: per-permutation seeds.
+    seeds: Vec<u64>,
+    /// datasketch family: (a, b) pairs.
+    pairs: Vec<PermPair>,
+    ngram: usize,
+}
+
+impl MinHasher {
+    /// Build for `num_perms` permutations and word `ngram` shingles.
+    pub fn new(family: PermFamily, num_perms: usize, ngram: usize) -> Self {
+        assert!(num_perms > 0 && ngram > 0);
+        match family {
+            PermFamily::Mix64 => Self {
+                family,
+                seeds: mix64::derive_seeds(PERM_MASTER_SEED, num_perms),
+                pairs: Vec::new(),
+                ngram,
+            },
+            PermFamily::Datasketch => Self {
+                family,
+                seeds: Vec::new(),
+                pairs: universal::derive_pairs(PERM_MASTER_SEED, num_perms),
+                ngram,
+            },
+        }
+    }
+
+    /// Number of permutations.
+    pub fn num_perms(&self) -> usize {
+        match self.family {
+            PermFamily::Mix64 => self.seeds.len(),
+            PermFamily::Datasketch => self.pairs.len(),
+        }
+    }
+
+    /// Permutation seeds (mix64 family) — the values fed to the XLA
+    /// artifact's `seeds` input.
+    pub fn seeds(&self) -> &[u64] {
+        &self.seeds
+    }
+
+    /// N-gram size used for shingling.
+    pub fn ngram(&self) -> usize {
+        self.ngram
+    }
+
+    /// Shingle a normalized document into *unique* token hashes (the
+    /// kernel-input representation; also used by the XLA batch
+    /// marshaller). MinHash has set semantics, so repeated shingles are
+    /// skipped before the SHA-1 — detected with a cheap 64-bit pre-hash
+    /// (§Perf: Zipf text repeats heavily; a pre-hash collision merely
+    /// drops one shingle, indistinguishable from an ordinary token-hash
+    /// collision at the same 2^-64 scale).
+    pub fn shingle_hashes(&self, text: &str) -> Vec<u64> {
+        use std::collections::HashSet;
+        let tokens: Vec<&str> = whitespace_tokens(text).collect();
+        let mut seen: HashSet<u64> = HashSet::with_capacity(tokens.len());
+        let mut hashes = Vec::with_capacity(tokens.len());
+        word_ngrams(&tokens, self.ngram, |sh| {
+            if seen.insert(crate::hash::fast_str_hash(sh.as_bytes())) {
+                hashes.push(token_hash_u64(sh.as_bytes()));
+            }
+        });
+        hashes
+    }
+
+    /// Signature of a pre-hashed shingle multiset.
+    ///
+    /// Hot path (§Perf): duplicate shingles are removed first (MinHash is
+    /// a set operation, and Zipf-distributed text repeats heavily), then
+    /// each permutation reduces the unique hashes with four independent
+    /// accumulators — no signature-array traffic in the inner loop and a
+    /// broken `min` dependency chain. See EXPERIMENTS.md §Perf.
+    pub fn signature_of_hashes(&self, hashes: &[u64]) -> Signature {
+        // Dedup: sort + dedup beats a hash set at these sizes.
+        let mut uniq: Vec<u64> = hashes.to_vec();
+        uniq.sort_unstable();
+        uniq.dedup();
+        self.signature_of_unique_hashes(&uniq)
+    }
+
+    /// Signature over hashes already known to be unique (or where the
+    /// caller accepts multiset semantics — the min is unaffected).
+    pub fn signature_of_unique_hashes(&self, uniq: &[u64]) -> Signature {
+        #[inline(always)]
+        fn reduce<F: Fn(u64) -> u64>(uniq: &[u64], apply: F) -> u64 {
+            let mut acc = [u64::MAX; 4];
+            let chunks = uniq.chunks_exact(4);
+            let rem = chunks.remainder();
+            for c in chunks {
+                acc[0] = acc[0].min(apply(c[0]));
+                acc[1] = acc[1].min(apply(c[1]));
+                acc[2] = acc[2].min(apply(c[2]));
+                acc[3] = acc[3].min(apply(c[3]));
+            }
+            let mut m = acc[0].min(acc[1]).min(acc[2].min(acc[3]));
+            for &h in rem {
+                m = m.min(apply(h));
+            }
+            m
+        }
+        match self.family {
+            PermFamily::Mix64 => self
+                .seeds
+                .iter()
+                .map(|&seed| reduce(uniq, |h| mix64::perm(h, seed)))
+                .collect(),
+            PermFamily::Datasketch => self
+                .pairs
+                .iter()
+                .map(|pair| reduce(uniq, |h| pair.apply(h)))
+                .collect(),
+        }
+    }
+
+    /// Full path: normalized text -> signature.
+    pub fn signature(&self, text: &str) -> Signature {
+        self.signature_of_hashes(&self.shingle_hashes(text))
+    }
+}
+
+/// Estimate Jaccard similarity from two signatures (fraction of equal
+/// rows) — the MinHash estimator (§2.2).
+pub fn estimate_jaccard(a: &Signature, b: &Signature) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let eq = a.iter().zip(b).filter(|(x, y)| x == y).count();
+    eq as f64 / a.len() as f64
+}
+
+/// Exact Jaccard similarity of two shingle-hash sets (test oracle).
+pub fn exact_jaccard(a: &[u64], b: &[u64]) -> f64 {
+    use std::collections::HashSet;
+    let sa: HashSet<u64> = a.iter().copied().collect();
+    let sb: HashSet<u64> = b.iter().copied().collect();
+    if sa.is_empty() && sb.is_empty() {
+        return 1.0;
+    }
+    let inter = sa.intersection(&sb).count();
+    let union = sa.len() + sb.len() - inter;
+    inter as f64 / union as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lorem(n: usize, offset: usize) -> String {
+        (0..n).map(|i| format!("w{}", i + offset)).collect::<Vec<_>>().join(" ")
+    }
+
+    #[test]
+    fn identical_docs_identical_signatures() {
+        for family in [PermFamily::Mix64, PermFamily::Datasketch] {
+            let mh = MinHasher::new(family, 128, 1);
+            let a = mh.signature("alpha beta gamma delta");
+            let b = mh.signature("alpha beta gamma delta");
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn empty_doc_is_all_max() {
+        let mh = MinHasher::new(PermFamily::Mix64, 64, 1);
+        assert!(mh.signature("").iter().all(|&v| v == u64::MAX));
+    }
+
+    #[test]
+    fn signature_order_invariant_set_semantics() {
+        let mh = MinHasher::new(PermFamily::Mix64, 128, 1);
+        // Same token multiset in different orders -> same shingle set (n=1).
+        let a = mh.signature("one two three four");
+        let b = mh.signature("four three two one");
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn estimator_tracks_exact_jaccard() {
+        // Construct docs with known overlap; estimator within ~0.1.
+        for family in [PermFamily::Mix64, PermFamily::Datasketch] {
+            let mh = MinHasher::new(family, 256, 1);
+            let a_text = lorem(200, 0);
+            let b_text = lorem(200, 100); // words 100..300: Jaccard = 100/300
+            let ha = mh.shingle_hashes(&a_text);
+            let hb = mh.shingle_hashes(&b_text);
+            let exact = exact_jaccard(&ha, &hb);
+            let est = estimate_jaccard(
+                &mh.signature_of_hashes(&ha),
+                &mh.signature_of_hashes(&hb),
+            );
+            assert!(
+                (est - exact).abs() < 0.1,
+                "{family:?}: est {est} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn ngram_size_changes_shingles() {
+        let mh1 = MinHasher::new(PermFamily::Mix64, 32, 1);
+        let mh2 = MinHasher::new(PermFamily::Mix64, 32, 2);
+        let text = "a b c d e";
+        assert_eq!(mh1.shingle_hashes(text).len(), 5);
+        assert_eq!(mh2.shingle_hashes(text).len(), 4);
+        assert_ne!(mh1.signature(text), mh2.signature(text));
+    }
+
+    #[test]
+    fn datasketch_signatures_are_32bit() {
+        let mh = MinHasher::new(PermFamily::Datasketch, 64, 1);
+        let sig = mh.signature("some example document text");
+        assert!(sig.iter().all(|&v| v <= u32::MAX as u64));
+    }
+
+    #[test]
+    fn matches_golden_semantics_for_mix64() {
+        // Mirror of the python ref oracle on a toy case: one token.
+        let mh = MinHasher::new(PermFamily::Mix64, 8, 1);
+        let h = token_hash_u64(b"tok");
+        let sig = mh.signature_of_hashes(&[h]);
+        for (i, &seed) in mh.seeds().iter().enumerate() {
+            assert_eq!(sig[i], crate::rng::mix64(h ^ seed));
+        }
+    }
+}

@@ -1,0 +1,211 @@
+//! Micro-benchmark harness.
+//!
+//! Usage from a `harness = false` bench binary:
+//! ```no_run
+//! use lshbloom::perf::bench::Bencher;
+//! let mut b = Bencher::default();
+//! let r = b.run("band_hash/u128", || {
+//!     // work under measurement; return a value to defeat DCE
+//!     42u64
+//! });
+//! println!("{}", r.report());
+//! ```
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// Statistics for one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Median wall time per iteration.
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    /// Iterations measured.
+    pub iters: u64,
+    /// Optional element count per iteration for throughput reporting.
+    pub elems_per_iter: Option<u64>,
+}
+
+impl BenchResult {
+    /// Human-readable single-line report.
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "{:<44} {:>12} median   [{} .. {}]  ({} iters)",
+            self.name,
+            fmt_dur(self.median),
+            fmt_dur(self.p10),
+            fmt_dur(self.p90),
+            self.iters
+        );
+        if let Some(n) = self.elems_per_iter {
+            let per_sec = n as f64 / self.median.as_secs_f64();
+            s.push_str(&format!("  {:>12}/s", fmt_count(per_sec)));
+        }
+        s
+    }
+
+    /// Median nanoseconds (for machine-readable output).
+    pub fn median_ns(&self) -> f64 {
+        self.median.as_nanos() as f64
+    }
+}
+
+/// Format a duration with a sensible unit.
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Format a count with SI suffix.
+pub fn fmt_count(v: f64) -> String {
+    if v >= 1e9 {
+        format!("{:.2} G", v / 1e9)
+    } else if v >= 1e6 {
+        format!("{:.2} M", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.2} k", v / 1e3)
+    } else {
+        format!("{v:.1}")
+    }
+}
+
+/// Benchmark runner with warmup + adaptive iteration.
+pub struct Bencher {
+    /// Minimum total measurement time per case.
+    pub measure_time: Duration,
+    /// Warmup time per case.
+    pub warmup_time: Duration,
+    /// Number of samples the measurement is split into.
+    pub samples: usize,
+    /// Elements processed per iteration (for throughput lines).
+    pub elems_per_iter: Option<u64>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // Honor LSHBLOOM_BENCH_FAST=1 for CI smoke runs.
+        let fast = std::env::var("LSHBLOOM_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+        Self {
+            measure_time: if fast { Duration::from_millis(80) } else { Duration::from_millis(600) },
+            warmup_time: if fast { Duration::from_millis(20) } else { Duration::from_millis(150) },
+            samples: 30,
+            elems_per_iter: None,
+        }
+    }
+}
+
+impl Bencher {
+    /// Set elements/iteration for throughput reporting (builder style).
+    pub fn throughput(mut self, elems: u64) -> Self {
+        self.elems_per_iter = Some(elems);
+        self
+    }
+
+    /// Run one case: `f` is invoked repeatedly; its return value is
+    /// black-boxed to defeat dead-code elimination.
+    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> BenchResult {
+        // Warmup and iteration-count calibration.
+        let warm_start = Instant::now();
+        let mut calib_iters: u64 = 0;
+        while warm_start.elapsed() < self.warmup_time || calib_iters == 0 {
+            black_box(f());
+            calib_iters += 1;
+        }
+        let per_iter = self.warmup_time.as_secs_f64() / calib_iters as f64;
+        let per_sample = (self.measure_time.as_secs_f64() / self.samples as f64).max(per_iter);
+        let iters_per_sample = (per_sample / per_iter).ceil().max(1.0) as u64;
+
+        let mut sample_times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_sample {
+                black_box(f());
+            }
+            sample_times.push(t0.elapsed().as_secs_f64() / iters_per_sample as f64);
+        }
+        sample_times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |frac: f64| {
+            let idx = ((sample_times.len() - 1) as f64 * frac).round() as usize;
+            Duration::from_secs_f64(sample_times[idx])
+        };
+        BenchResult {
+            name: name.to_string(),
+            median: q(0.5),
+            p10: q(0.1),
+            p90: q(0.9),
+            iters: iters_per_sample * self.samples as u64,
+            elems_per_iter: self.elems_per_iter,
+        }
+    }
+}
+
+/// One-shot convenience: default bencher, print + return the result.
+pub fn bench<T, F: FnMut() -> T>(name: &str, f: F) -> BenchResult {
+    let r = Bencher::default().run(name, f);
+    println!("{}", r.report());
+    r
+}
+
+/// One-shot with throughput units.
+pub fn bench_n<T, F: FnMut() -> T>(name: &str, elems: u64, f: F) -> BenchResult {
+    let r = Bencher::default().throughput(elems).run(name, f);
+    println!("{}", r.report());
+    r
+}
+
+/// Time a single closure invocation (macro-benchmarks where one run is
+/// seconds long; no warmup).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        std::env::set_var("LSHBLOOM_BENCH_FAST", "1");
+        let mut b = Bencher::default();
+        b.measure_time = Duration::from_millis(30);
+        b.warmup_time = Duration::from_millis(5);
+        let r = b.run("noop-ish", || {
+            let mut x = 0u64;
+            for i in 0..100u64 {
+                x = x.wrapping_add(i * i);
+            }
+            x
+        });
+        assert!(r.median.as_nanos() > 0);
+        assert!(r.p10 <= r.median && r.median <= r.p90);
+        assert!(r.iters > 0);
+    }
+
+    #[test]
+    fn formatting() {
+        assert!(fmt_dur(Duration::from_nanos(500)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(50)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(50)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with("s"));
+        assert_eq!(fmt_count(1_500_000.0), "1.50 M");
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, d) = time_once(|| 7);
+        assert_eq!(v, 7);
+        assert!(d.as_nanos() > 0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Performance + testing harnesses (criterion/proptest are unavailable
+//! offline, so the repo carries its own).
+//!
+//! * [`bench`] — micro/macro benchmark runner: warmup, adaptive iteration
+//!   count, median/p10/p90 reporting, throughput units.
+//! * [`prop`] — property-testing mini-framework: seeded generators, many
+//!   cases per property, failing-seed reporting.
+
+pub mod bench;
+pub mod prop;
+
+pub use bench::{bench, bench_n, BenchResult, Bencher};

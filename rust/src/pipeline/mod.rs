@@ -1,0 +1,28 @@
+//! The streaming deduplication pipeline (§4.4.2).
+//!
+//! Topology (single leader process):
+//!
+//! ```text
+//!  reader ──batches──▶ [bounded ch] ──▶ worker×W (prepare: MinHash etc.)
+//!                                            │ (batch_idx, Vec<Prepared>)
+//!                                            ▼
+//!                      [bounded ch] ──▶ sequencer ──▶ decider (sequential)
+//! ```
+//!
+//! * **Parallel prepare** — MinHashing dominates runtime (Fig. 1) and is
+//!   embarrassingly parallel; W workers pull document batches.
+//! * **Sequential decide** — index insertion must observe stream order so
+//!   the duplicate relation stays exact (§4.4.2); the sequencer reorders
+//!   out-of-order worker output before feeding the decider.
+//! * **Backpressure** — both channels are bounded; a slow decider stalls
+//!   workers, a slow reader starves them, memory stays O(depth · batch).
+//!
+//! [`timing`] instruments the two phases for the Fig. 1 breakdown;
+//! [`shard`] implements the paper's §6 sharded-aggregation extension.
+
+pub mod orchestrator;
+pub mod shard;
+pub mod timing;
+
+pub use orchestrator::{run_stream, PipelineOptions, RunStats};
+pub use timing::PhaseTimes;

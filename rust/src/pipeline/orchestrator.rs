@@ -1,0 +1,264 @@
+//! The leader event loop: reader → workers → sequencer → decider.
+
+use super::timing::PhaseTimes;
+use crate::corpus::Doc;
+use crate::methods::{Method, Prepared};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::sync_channel;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Pipeline tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineOptions {
+    /// Worker thread count (0 = available parallelism).
+    pub workers: usize,
+    /// Documents per batch.
+    pub batch_size: usize,
+    /// Bounded channel depth (batches in flight per stage).
+    pub channel_depth: usize,
+}
+
+impl Default for PipelineOptions {
+    fn default() -> Self {
+        Self { workers: 0, batch_size: 64, channel_depth: 64 }
+    }
+}
+
+impl PipelineOptions {
+    /// From the pipeline config.
+    pub fn from_config(cfg: &crate::config::PipelineConfig) -> Self {
+        Self {
+            workers: cfg.workers,
+            batch_size: cfg.batch_size,
+            channel_depth: cfg.channel_depth,
+        }
+    }
+
+    fn effective_workers(&self) -> usize {
+        if self.workers > 0 {
+            self.workers
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        }
+    }
+}
+
+/// Result of a pipeline run.
+#[derive(Clone, Debug)]
+pub struct RunStats {
+    /// Per-document duplicate verdicts, in stream order.
+    pub verdicts: Vec<bool>,
+    /// Documents processed.
+    pub docs: u64,
+    /// Duplicates found.
+    pub duplicates: u64,
+    /// Phase timing (Fig. 1).
+    pub times: PhaseTimes,
+    /// Workers actually used.
+    pub workers: usize,
+    /// Index footprint after the run.
+    pub disk_bytes: u64,
+}
+
+impl RunStats {
+    /// Documents per second end-to-end.
+    pub fn throughput(&self) -> f64 {
+        self.docs as f64 / self.times.wall.as_secs_f64().max(1e-9)
+    }
+}
+
+/// Run the full pipeline over a document stream.
+///
+/// Verdicts are produced in exact stream order regardless of worker
+/// scheduling (the sequencer reorders batches), so results are
+/// deterministic for a deterministic `Method`.
+pub fn run_stream<I>(method: &mut Method, docs: I, opts: PipelineOptions) -> RunStats
+where
+    I: IntoIterator<Item = Doc>,
+    I::IntoIter: Send,
+{
+    let workers = opts.effective_workers();
+    let batch_size = opts.batch_size.max(1);
+    let t_wall = Instant::now();
+
+    // Stage channels. Work items are (batch_idx, Vec<Doc>).
+    let (work_tx, work_rx) = sync_channel::<(u64, Vec<Doc>)>(opts.channel_depth);
+    let work_rx = Arc::new(Mutex::new(work_rx));
+    let (done_tx, done_rx) = sync_channel::<(u64, Vec<Prepared>)>(opts.channel_depth);
+
+    let prepare_ns = Arc::new(AtomicU64::new(0));
+    let preparer = Arc::clone(&method.preparer);
+    let doc_iter = docs.into_iter();
+
+    std::thread::scope(|scope| {
+        // Workers.
+        for _ in 0..workers {
+            let work_rx = Arc::clone(&work_rx);
+            let done_tx = done_tx.clone();
+            let preparer = Arc::clone(&preparer);
+            let prepare_ns = Arc::clone(&prepare_ns);
+            scope.spawn(move || {
+                loop {
+                    let item = {
+                        let guard = work_rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    let Ok((idx, batch)) = item else { break };
+                    let t0 = Instant::now();
+                    let prepared = preparer.prepare_batch(&batch);
+                    prepare_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    if done_tx.send((idx, prepared)).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(done_tx); // workers hold the remaining clones
+
+        // Reader: batch the stream into the work channel.
+        let reader = scope.spawn(move || {
+            let mut idx = 0u64;
+            let mut batch = Vec::with_capacity(batch_size);
+            let mut total = 0u64;
+            for doc in doc_iter {
+                batch.push(doc);
+                total += 1;
+                if batch.len() == batch_size {
+                    if work_tx.send((idx, std::mem::take(&mut batch))).is_err() {
+                        return total;
+                    }
+                    idx += 1;
+                    batch.reserve(batch_size);
+                }
+            }
+            if !batch.is_empty() {
+                let _ = work_tx.send((idx, batch));
+            }
+            total
+        });
+
+        // Sequencer + decider (this thread).
+        let decider = &mut method.decider;
+        let mut verdicts = Vec::new();
+        let mut duplicates = 0u64;
+        let mut decide_time = Duration::ZERO;
+        let mut next_idx = 0u64;
+        let mut pending: BTreeMap<u64, Vec<Prepared>> = BTreeMap::new();
+        for (idx, prepared) in done_rx.iter() {
+            pending.insert(idx, prepared);
+            while let Some(prepared) = pending.remove(&next_idx) {
+                let t0 = Instant::now();
+                for prep in &prepared {
+                    let dup = decider.decide(prep);
+                    duplicates += dup as u64;
+                    verdicts.push(dup);
+                }
+                decide_time += t0.elapsed();
+                next_idx += 1;
+            }
+        }
+        assert!(pending.is_empty(), "sequencer drained with gaps");
+        let docs = reader.join().expect("reader panicked");
+        assert_eq!(verdicts.len() as u64, docs, "verdict count mismatch");
+
+        RunStats {
+            docs,
+            duplicates,
+            disk_bytes: decider.disk_bytes(),
+            verdicts,
+            times: PhaseTimes {
+                prepare_cpu: Duration::from_nanos(prepare_ns.load(Ordering::Relaxed)),
+                decide: decide_time,
+                wall: t_wall.elapsed(),
+            },
+            workers,
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PipelineConfig;
+    use crate::corpus::{DatasetSpec, LabeledCorpus};
+    use crate::methods::lshbloom::lshbloom_method;
+    use crate::minhash::PermFamily;
+
+    fn cfg() -> PipelineConfig {
+        PipelineConfig { num_perms: 64, expected_docs: 10_000, ..Default::default() }
+    }
+
+    fn corpus(n: usize) -> LabeledCorpus {
+        LabeledCorpus::build(DatasetSpec::testing(17, n, 0.5))
+    }
+
+    #[test]
+    fn parallel_run_matches_sequential() {
+        let c = corpus(300);
+        // Sequential reference.
+        let mut seq = lshbloom_method(&cfg(), PermFamily::Mix64);
+        let expected = seq.process_all(&c.docs);
+        // Parallel with several worker counts and batch sizes.
+        for (w, b) in [(1usize, 7usize), (2, 16), (4, 64), (8, 3)] {
+            let mut m = lshbloom_method(&cfg(), PermFamily::Mix64);
+            let stats = run_stream(
+                &mut m,
+                c.docs.iter().map(|ld| ld.doc.clone()),
+                PipelineOptions { workers: w, batch_size: b, channel_depth: 4 },
+            );
+            assert_eq!(stats.verdicts, expected, "w={w} b={b}");
+            assert_eq!(stats.docs, 300);
+            assert_eq!(
+                stats.duplicates,
+                expected.iter().filter(|&&v| v).count() as u64
+            );
+        }
+    }
+
+    #[test]
+    fn empty_stream() {
+        let mut m = lshbloom_method(&cfg(), PermFamily::Mix64);
+        let stats = run_stream(&mut m, std::iter::empty(), PipelineOptions::default());
+        assert_eq!(stats.docs, 0);
+        assert!(stats.verdicts.is_empty());
+    }
+
+    #[test]
+    fn single_doc_stream() {
+        let mut m = lshbloom_method(&cfg(), PermFamily::Mix64);
+        let doc = Doc { id: 0, text: "just one document".into() };
+        let stats = run_stream(&mut m, vec![doc], PipelineOptions::default());
+        assert_eq!(stats.verdicts, vec![false]);
+    }
+
+    #[test]
+    fn timing_phases_populated() {
+        let c = corpus(200);
+        let mut m = lshbloom_method(&cfg(), PermFamily::Mix64);
+        let stats = run_stream(
+            &mut m,
+            c.docs.iter().map(|ld| ld.doc.clone()),
+            PipelineOptions { workers: 2, batch_size: 32, channel_depth: 8 },
+        );
+        assert!(stats.times.prepare_cpu > Duration::ZERO);
+        assert!(stats.times.decide > Duration::ZERO);
+        assert!(stats.times.wall >= stats.times.decide);
+        assert!(stats.throughput() > 0.0);
+    }
+
+    #[test]
+    fn tiny_channel_depth_backpressure_still_correct() {
+        let c = corpus(150);
+        let mut seq = lshbloom_method(&cfg(), PermFamily::Mix64);
+        let expected = seq.process_all(&c.docs);
+        let mut m = lshbloom_method(&cfg(), PermFamily::Mix64);
+        let stats = run_stream(
+            &mut m,
+            c.docs.iter().map(|ld| ld.doc.clone()),
+            PipelineOptions { workers: 4, batch_size: 2, channel_depth: 1 },
+        );
+        assert_eq!(stats.verdicts, expected);
+    }
+}

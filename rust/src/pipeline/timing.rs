@@ -1,0 +1,51 @@
+//! Phase timing for the Fig. 1 wall-clock breakdown.
+
+use std::time::Duration;
+
+/// Accumulated time per pipeline phase.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseTimes {
+    /// CPU time spent in prepare (MinHashing / unit hashing), summed over
+    /// workers — divide by worker count for wall-clock contribution.
+    pub prepare_cpu: Duration,
+    /// Wall time of the sequential decide (index insert/query) stage.
+    pub decide: Duration,
+    /// End-to-end wall time of the run.
+    pub wall: Duration,
+}
+
+impl PhaseTimes {
+    /// Wall-clock share of prepare assuming `workers` ran concurrently.
+    pub fn prepare_wall_est(&self, workers: usize) -> Duration {
+        if workers == 0 {
+            self.prepare_cpu
+        } else {
+            self.prepare_cpu / workers as u32
+        }
+    }
+
+    /// "Other" time: wall − (prepare estimate + decide), clamped at zero.
+    pub fn other(&self, workers: usize) -> Duration {
+        self.wall
+            .saturating_sub(self.prepare_wall_est(workers))
+            .saturating_sub(self.decide)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_arithmetic() {
+        let t = PhaseTimes {
+            prepare_cpu: Duration::from_secs(8),
+            decide: Duration::from_secs(1),
+            wall: Duration::from_secs(4),
+        };
+        assert_eq!(t.prepare_wall_est(4), Duration::from_secs(2));
+        assert_eq!(t.other(4), Duration::from_secs(1));
+        // Clamping.
+        assert_eq!(t.other(1), Duration::ZERO);
+    }
+}

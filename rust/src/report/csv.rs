@@ -1,0 +1,81 @@
+//! CSV emission for figure data.
+
+use crate::error::{Error, Result};
+use std::io::Write;
+use std::path::Path;
+
+/// Buffered CSV writer with quoting.
+pub struct CsvWriter {
+    out: std::io::BufWriter<std::fs::File>,
+    columns: usize,
+    path: String,
+}
+
+impl CsvWriter {
+    /// Create/truncate `path` and write the header row.
+    pub fn create(path: &Path, header: &[&str]) -> Result<Self> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).map_err(|e| Error::io(dir.display().to_string(), e))?;
+        }
+        let file = std::fs::File::create(path)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        let mut w = Self {
+            out: std::io::BufWriter::new(file),
+            columns: header.len(),
+            path: path.display().to_string(),
+        };
+        let cells: Vec<String> = header.iter().map(|s| s.to_string()).collect();
+        w.row(&cells)?;
+        Ok(w)
+    }
+
+    /// Write one row.
+    pub fn row(&mut self, cells: &[String]) -> Result<()> {
+        assert_eq!(cells.len(), self.columns, "csv row arity mismatch");
+        let line = cells.iter().map(|c| quote(c)).collect::<Vec<_>>().join(",");
+        writeln!(self.out, "{line}").map_err(|e| Error::io(self.path.clone(), e))
+    }
+
+    /// Write displayable cells.
+    pub fn row_disp<T: std::fmt::Display>(&mut self, cells: &[T]) -> Result<()> {
+        let cells: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&cells)
+    }
+
+    /// Flush to disk.
+    pub fn finish(mut self) -> Result<()> {
+        self.out.flush().map_err(|e| Error::io(self.path.clone(), e))
+    }
+}
+
+fn quote(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_quotes() {
+        let dir = std::env::temp_dir().join(format!("lshbloom-csv-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row_disp(&["plain", "with,comma"]).unwrap();
+            w.row_disp(&["with\"quote", "x"]).unwrap();
+            w.finish().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(
+            text,
+            "a,b\nplain,\"with,comma\"\n\"with\"\"quote\",x\n"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

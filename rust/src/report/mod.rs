@@ -1,0 +1,13 @@
+//! Report rendering: ASCII tables, line plots, heatmaps, CSV.
+//!
+//! Every paper figure/table is regenerated as (a) a CSV file for plotting
+//! elsewhere and (b) an ASCII rendering printed by the bench binaries so
+//! the shape of each result is visible directly in `cargo bench` output.
+
+pub mod csv;
+pub mod plot;
+pub mod table;
+
+pub use csv::CsvWriter;
+pub use plot::{heatmap, line_plot, Series};
+pub use table::Table;

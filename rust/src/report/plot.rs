@@ -1,0 +1,162 @@
+//! ASCII line plots and heatmaps for figure regeneration.
+
+/// One labeled series of (x, y) points.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub label: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    /// New series from points.
+    pub fn new(label: impl Into<String>, points: Vec<(f64, f64)>) -> Self {
+        Self { label: label.into(), points }
+    }
+}
+
+const GLYPHS: &[char] = &['*', 'o', '+', 'x', '#', '@', '%', '&'];
+
+/// Render multiple series on one ASCII grid (linear axes).
+pub fn line_plot(title: &str, x_label: &str, y_label: &str, series: &[Series]) -> String {
+    let width = 72usize;
+    let height = 20usize;
+    let all: Vec<(f64, f64)> = series.iter().flat_map(|s| s.points.iter().copied()).collect();
+    if all.is_empty() {
+        return format!("## {title}\n(no data)\n");
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &all {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if (x1 - x0).abs() < f64::EPSILON {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < f64::EPSILON {
+        y1 = y0 + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let glyph = GLYPHS[si % GLYPHS.len()];
+        // Plot points and connect consecutive ones with interpolation.
+        let proj = |x: f64, y: f64| {
+            let cx = ((x - x0) / (x1 - x0) * (width - 1) as f64).round() as usize;
+            let cy = ((y - y0) / (y1 - y0) * (height - 1) as f64).round() as usize;
+            (cx.min(width - 1), height - 1 - cy.min(height - 1))
+        };
+        for w in s.points.windows(2) {
+            let (ax, ay) = proj(w[0].0, w[0].1);
+            let (bx, by) = proj(w[1].0, w[1].1);
+            let steps = ax.abs_diff(bx).max(ay.abs_diff(by)).max(1);
+            for t in 0..=steps {
+                let fx = ax as f64 + (bx as f64 - ax as f64) * t as f64 / steps as f64;
+                let fy = ay as f64 + (by as f64 - ay as f64) * t as f64 / steps as f64;
+                grid[fy.round() as usize][fx.round() as usize] = glyph;
+            }
+        }
+        if s.points.len() == 1 {
+            let (cx, cy) = proj(s.points[0].0, s.points[0].1);
+            grid[cy][cx] = glyph;
+        }
+    }
+    let mut out = format!("## {title}\n");
+    out.push_str(&format!("{y_label} (top={y1:.3}, bottom={y0:.3})\n"));
+    for row in grid {
+        out.push('|');
+        out.push_str(&row.iter().collect::<String>());
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out.push_str(&format!("{x_label}: {x0:.3} .. {x1:.3}\n"));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("  {} = {}\n", GLYPHS[si % GLYPHS.len()], s.label));
+    }
+    out
+}
+
+/// Render a heatmap of `values[row][col]` with row/col labels; the cell
+/// glyph encodes value intensity over the observed range.
+pub fn heatmap(
+    title: &str,
+    row_labels: &[String],
+    col_labels: &[String],
+    values: &[Vec<f64>],
+) -> String {
+    const SHADES: &[char] = &['.', ':', '-', '=', '+', '*', '#', '@'];
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for row in values {
+        for &v in row {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+    }
+    if !lo.is_finite() || (hi - lo).abs() < f64::EPSILON {
+        hi = lo + 1.0;
+    }
+    let label_w = row_labels.iter().map(|l| l.len()).max().unwrap_or(0).max(4);
+    let cell_w = col_labels.iter().map(|l| l.len()).max().unwrap_or(1).max(5) + 1;
+    let mut out = format!("## {title}  (low {lo:.3} '.', high {hi:.3} '@')\n");
+    out.push_str(&" ".repeat(label_w + 2));
+    for cl in col_labels {
+        out.push_str(&format!("{cl:>cell_w$}"));
+    }
+    out.push('\n');
+    for (ri, row) in values.iter().enumerate() {
+        let lbl = row_labels.get(ri).cloned().unwrap_or_default();
+        out.push_str(&format!("{lbl:>label_w$}  "));
+        for &v in row {
+            let t = ((v - lo) / (hi - lo) * (SHADES.len() - 1) as f64).round() as usize;
+            let glyph = SHADES[t.min(SHADES.len() - 1)];
+            let cell = format!("{glyph}{v:.2}");
+            out.push_str(&format!("{cell:>cell_w$}"));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_plot_renders_all_series() {
+        let s = line_plot(
+            "t",
+            "x",
+            "y",
+            &[
+                Series::new("a", vec![(0.0, 0.0), (1.0, 1.0)]),
+                Series::new("b", vec![(0.0, 1.0), (1.0, 0.0)]),
+            ],
+        );
+        assert!(s.contains("## t"));
+        assert!(s.contains("* = a"));
+        assert!(s.contains("o = b"));
+        assert!(s.contains('*') && s.contains('o'));
+    }
+
+    #[test]
+    fn line_plot_empty() {
+        assert!(line_plot("e", "x", "y", &[]).contains("no data"));
+    }
+
+    #[test]
+    fn heatmap_shades_extremes() {
+        let s = heatmap(
+            "h",
+            &["r1".into(), "r2".into()],
+            &["c1".into(), "c2".into()],
+            &[vec![0.0, 0.5], vec![0.75, 1.0]],
+        );
+        assert!(s.contains("## h"));
+        assert!(s.contains(".0.00")); // low shade
+        assert!(s.contains("@1.00")); // high shade
+    }
+}

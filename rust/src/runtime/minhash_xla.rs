@@ -1,0 +1,264 @@
+//! The XLA MinHash backend: batched signature/band computation through
+//! the AOT artifacts (Layer 1+2 executed from rust via PJRT).
+//!
+//! Two artifacts are used (see `python/compile/aot.py`):
+//! * `minhash_bands_*` — fused tokens→bands for documents whose shingle
+//!   count fits the artifact's static L dimension (the common case).
+//! * `minhash_sigs_*` — tokens→signatures for *longer* documents: the
+//!   document is split into L-sized chunk rows, each chunk's signature is
+//!   computed on-device, and the chunks are min-combined in rust (valid
+//!   because `min` distributes over set union), then band-hashed with the
+//!   same wrapping sum the kernel uses. Both paths are bit-identical to
+//!   the native backend — `rust/tests/xla_backend.rs` enforces it.
+
+use crate::corpus::Doc;
+use crate::error::{Error, Result};
+use crate::hash::band::band_hashes_for_doc;
+use crate::json;
+use crate::methods::{Prepared, Preparer};
+use crate::minhash::{LshParams, MinHasher, PermFamily};
+use crate::text::normalize;
+use std::path::Path;
+use std::sync::Mutex;
+
+use super::pjrt::{PjrtEngine, PjrtExecutable};
+
+/// Sentinel padding value (must match `kernels/common.py::PAD_SENTINEL`).
+pub const PAD_SENTINEL: u64 = u64::MAX;
+
+/// Geometry of a loaded artifact pair.
+#[derive(Clone, Copy, Debug)]
+pub struct ArtifactDims {
+    pub batch: usize,
+    pub max_tokens: usize,
+    pub num_perms: usize,
+    pub lsh: LshParams,
+}
+
+struct XlaState {
+    // Note: PjRtClient is Rc-based; every Rc clone (client, executables)
+    // lives inside this struct and is only touched while the Mutex in
+    // `XlaBandPreparer` is held, so moving the whole struct across
+    // threads is sound. Do NOT hand out clones of these fields.
+    _engine: PjrtEngine,
+    fused: PjrtExecutable,
+    sigs: PjrtExecutable,
+    /// Cached permutation-seed literal (constant across batches — §Perf).
+    seeds_lit: xla::Literal,
+}
+
+/// A [`Preparer`] that computes band hashes through the XLA artifacts.
+pub struct XlaBandPreparer {
+    state: Mutex<XlaState>,
+    dims: ArtifactDims,
+    /// Shingling + seed derivation (and the long-doc band hashing) reuse
+    /// the native mix64 machinery; signatures themselves come from XLA.
+    hasher: MinHasher,
+}
+
+// SAFETY: all Rc-carrying XLA objects are owned exclusively by `state`
+// and only accessed under its Mutex; no Rc clone escapes. The PJRT CPU
+// client itself is thread-safe; the Rc refcounts are only manipulated
+// from whichever thread holds the lock at that moment.
+unsafe impl Send for XlaBandPreparer {}
+unsafe impl Sync for XlaBandPreparer {}
+
+impl XlaBandPreparer {
+    /// Load the artifact pair described by `manifest.json` in
+    /// `artifacts_dir` whose config matches (threshold, num_perms).
+    pub fn from_manifest(artifacts_dir: &Path, threshold: f64, num_perms: usize, ngram: usize) -> Result<Self> {
+        let manifest_path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .map_err(|e| Error::io(manifest_path.display().to_string(), e))?;
+        let manifest =
+            json::parse(&text).map_err(|e| Error::parse("manifest.json", e.to_string()))?;
+        let configs = manifest
+            .get("configs")
+            .and_then(|c| c.as_arr())
+            .ok_or_else(|| Error::Format("manifest.json missing configs".into()))?;
+
+        let mut fused_entry = None;
+        let mut sigs_entry = None;
+        for cfg in configs {
+            let Some(arts) = cfg.get("artifacts").and_then(|a| a.as_arr()) else { continue };
+            for a in arts {
+                let kind = a.get("kind").and_then(|k| k.as_str()).unwrap_or("");
+                let p = a.get("P").and_then(|v| v.as_usize()).unwrap_or(0);
+                let t = a.get("threshold").and_then(|v| v.as_f64());
+                match kind {
+                    "minhash_bands" if p == num_perms && t == Some(threshold) => {
+                        fused_entry = Some(a.clone());
+                    }
+                    "minhash_sigs" if p == num_perms => {
+                        sigs_entry = Some(a.clone());
+                    }
+                    _ => {}
+                }
+            }
+        }
+        let fused_entry = fused_entry.ok_or_else(|| {
+            Error::Config(format!(
+                "no minhash_bands artifact for T={threshold} P={num_perms}; re-run `make artifacts`"
+            ))
+        })?;
+        let sigs_entry = sigs_entry
+            .ok_or_else(|| Error::Config(format!("no minhash_sigs artifact for P={num_perms}")))?;
+
+        let dims = ArtifactDims {
+            batch: fused_entry.get("B").and_then(|v| v.as_usize()).unwrap_or(0),
+            max_tokens: fused_entry.get("L").and_then(|v| v.as_usize()).unwrap_or(0),
+            num_perms,
+            lsh: LshParams {
+                num_bands: fused_entry.get("num_bands").and_then(|v| v.as_usize()).unwrap_or(0),
+                rows_per_band: fused_entry
+                    .get("rows_per_band")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(0),
+            },
+        };
+        if dims.batch == 0 || dims.max_tokens == 0 || dims.lsh.num_bands == 0 {
+            return Err(Error::Format("manifest artifact has zero dims".into()));
+        }
+        // The manifest's (b, r) must agree with our own optimizer — both
+        // sides implement the same procedure (DESIGN.md lock-step rule).
+        let expect = crate::minhash::optimal_param(threshold, num_perms);
+        if expect != dims.lsh {
+            return Err(Error::Config(format!(
+                "manifest (b,r)=({},{}) disagrees with rust optimizer ({},{})",
+                dims.lsh.num_bands, dims.lsh.rows_per_band, expect.num_bands, expect.rows_per_band
+            )));
+        }
+
+        let engine = PjrtEngine::cpu().map_err(|e| Error::Runtime(format!("{e:#}")))?;
+        let load = |entry: &json::Value| -> Result<PjrtExecutable> {
+            let file = entry
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| Error::Format("artifact entry missing file".into()))?;
+            engine
+                .load_hlo_text(artifacts_dir.join(file))
+                .map_err(|e| Error::Runtime(format!("{e:#}")))
+        };
+        let fused = load(&fused_entry)?;
+        let sigs = load(&sigs_entry)?;
+
+        let hasher = MinHasher::new(PermFamily::Mix64, num_perms, ngram);
+        let seeds_lit = xla::Literal::vec1(hasher.seeds())
+            .reshape(&[num_perms as i64])
+            .map_err(|e| Error::Runtime(format!("{e:#}")))?;
+        Ok(Self {
+            state: Mutex::new(XlaState { _engine: engine, fused, sigs, seeds_lit }),
+            dims,
+            hasher,
+        })
+    }
+
+    /// Artifact geometry.
+    pub fn dims(&self) -> ArtifactDims {
+        self.dims
+    }
+
+    /// Fused path: `rows` of exactly B×L token hashes -> B×bands.
+    fn run_fused(&self, tokens: &[u64]) -> Vec<u64> {
+        debug_assert_eq!(tokens.len(), self.dims.batch * self.dims.max_tokens);
+        let lit = xla::Literal::vec1(tokens)
+            .reshape(&[self.dims.batch as i64, self.dims.max_tokens as i64])
+            .expect("tokens reshape");
+        let state = self.state.lock().unwrap();
+        let out = state
+            .fused
+            .execute_refs(&[&lit, &state.seeds_lit])
+            .expect("fused artifact execution failed");
+        out[0].to_vec::<u64>().expect("fused output marshal")
+    }
+
+    /// Sigs path: B×L token rows -> B×P signatures.
+    fn run_sigs(&self, tokens: &[u64]) -> Vec<u64> {
+        debug_assert_eq!(tokens.len(), self.dims.batch * self.dims.max_tokens);
+        let lit = xla::Literal::vec1(tokens)
+            .reshape(&[self.dims.batch as i64, self.dims.max_tokens as i64])
+            .expect("tokens reshape");
+        let state = self.state.lock().unwrap();
+        let out = state
+            .sigs
+            .execute_refs(&[&lit, &state.seeds_lit])
+            .expect("sigs artifact execution failed");
+        out[0].to_vec::<u64>().expect("sigs output marshal")
+    }
+}
+
+impl Preparer for XlaBandPreparer {
+    fn prepare_batch(&self, docs: &[Doc]) -> Vec<Prepared> {
+        let (b_dim, l_dim) = (self.dims.batch, self.dims.max_tokens);
+        let bands = self.dims.lsh;
+        // Shingle outside the XLA lock (parallel-friendly).
+        let shingles: Vec<Vec<u64>> = docs
+            .iter()
+            .map(|d| self.hasher.shingle_hashes(&normalize(&d.text)))
+            .collect();
+
+        let mut out: Vec<Option<Prepared>> = vec![None; docs.len()];
+        let mut band_buf = Vec::with_capacity(bands.num_bands);
+
+        // Short docs through the fused artifact, B at a time.
+        let short_idx: Vec<usize> =
+            (0..docs.len()).filter(|&i| shingles[i].len() <= l_dim).collect();
+        for group in short_idx.chunks(b_dim) {
+            let mut tokens = vec![PAD_SENTINEL; b_dim * l_dim];
+            for (row, &i) in group.iter().enumerate() {
+                tokens[row * l_dim..row * l_dim + shingles[i].len()]
+                    .copy_from_slice(&shingles[i]);
+            }
+            let bands_out = self.run_fused(&tokens);
+            for (row, &i) in group.iter().enumerate() {
+                let start = row * bands.num_bands;
+                out[i] = Some(Prepared::Bands(
+                    bands_out[start..start + bands.num_bands].to_vec(),
+                ));
+            }
+        }
+
+        // Long docs: chunk rows through the sigs artifact, min-combine.
+        let long_idx: Vec<usize> =
+            (0..docs.len()).filter(|&i| shingles[i].len() > l_dim).collect();
+        for &i in &long_idx {
+            let hashes = &shingles[i];
+            let mut sig = vec![u64::MAX; self.dims.num_perms];
+            for chunk_group in hashes.chunks(l_dim).collect::<Vec<_>>().chunks(b_dim) {
+                let mut tokens = vec![PAD_SENTINEL; b_dim * l_dim];
+                for (row, chunk) in chunk_group.iter().enumerate() {
+                    tokens[row * l_dim..row * l_dim + chunk.len()].copy_from_slice(chunk);
+                }
+                let sigs_out = self.run_sigs(&tokens);
+                for row in 0..chunk_group.len() {
+                    let start = row * self.dims.num_perms;
+                    for (s, &v) in sig.iter_mut().zip(&sigs_out[start..start + self.dims.num_perms]) {
+                        if v < *s {
+                            *s = v;
+                        }
+                    }
+                }
+            }
+            band_hashes_for_doc(&sig, bands.num_bands, bands.rows_per_band, &mut band_buf);
+            out[i] = Some(Prepared::Bands(band_buf.clone()));
+        }
+
+        out.into_iter().map(|p| p.expect("every doc prepared")).collect()
+    }
+}
+
+/// Build the full LSHBloom method with the XLA backend.
+pub fn lshbloom_method_xla(cfg: &crate::config::PipelineConfig) -> Result<crate::methods::Method> {
+    let preparer = XlaBandPreparer::from_manifest(
+        Path::new(&cfg.artifacts_dir),
+        cfg.threshold,
+        cfg.num_perms,
+        cfg.ngram,
+    )?;
+    let lsh = preparer.dims().lsh;
+    Ok(crate::methods::Method {
+        name: "lshbloom-xla".to_string(),
+        preparer: std::sync::Arc::new(preparer),
+        decider: Box::new(crate::methods::lshbloom::decider_from_config(cfg, lsh)),
+    })
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from rust.
+//!
+//! The python side (`python/compile/aot.py`) lowers the Layer-2 JAX model
+//! (which calls the Layer-1 Pallas kernels) to **HLO text** once at build
+//! time; this module loads that text, compiles it on the PJRT CPU client,
+//! and exposes typed batch entry points used by the ingest pipeline.
+//!
+//! HLO *text* (not a serialized `HloModuleProto`) is the interchange format:
+//! jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids and round-trips cleanly.
+pub mod minhash_xla;
+mod pjrt;
+
+pub use minhash_xla::{lshbloom_method_xla, XlaBandPreparer};
+pub use pjrt::{PjrtEngine, PjrtExecutable};

@@ -1,0 +1,68 @@
+//! Thin, typed wrapper over the `xla` crate's PJRT CPU client.
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A PJRT client plus a cache of compiled executables.
+///
+/// One engine is created per process; executables are cheap to call
+/// repeatedly and internally thread-safe at the PJRT level, but we keep
+/// usage single-threaded per executable (the ingest pipeline executes
+/// batches from the sequential insert stage).
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+}
+
+impl PjrtEngine {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    /// Name of the underlying PJRT platform (e.g. "cpu").
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Number of addressable devices.
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO-text artifact produced by `python/compile/aot.py` and
+    /// compile it for this client.
+    pub fn load_hlo_text<P: AsRef<Path>>(&self, path: P) -> Result<PjrtExecutable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text at {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling HLO artifact {}", path.display()))?;
+        Ok(PjrtExecutable { exe })
+    }
+}
+
+/// A compiled HLO artifact ready to execute.
+pub struct PjrtExecutable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl PjrtExecutable {
+    /// Execute with literal inputs; returns the elements of the output
+    /// tuple (artifacts are lowered with `return_tuple=True`).
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.execute_refs(&inputs.iter().collect::<Vec<_>>())
+    }
+
+    /// Execute with borrowed inputs (callers can cache constant literals,
+    /// e.g. the permutation-seed vector, across batches).
+    pub fn execute_refs(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let mut result = self.exe.execute::<&xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        // `return_tuple=True` always yields a tuple literal; decompose it.
+        let parts = result.decompose_tuple()?;
+        anyhow::ensure!(!parts.is_empty(), "expected non-empty tuple output");
+        Ok(parts)
+    }
+}

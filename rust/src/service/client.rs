@@ -1,0 +1,81 @@
+//! Minimal blocking client for the dedup service.
+
+use crate::json::{self, Value};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+/// A connected dedup-service client.
+pub struct DedupClient {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl DedupClient {
+    /// Connect to a [`super::DedupServer`].
+    pub fn connect(addr: &str) -> std::io::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Self { writer: stream, reader })
+    }
+
+    fn round_trip(&mut self, req: Value) -> std::io::Result<Value> {
+        self.writer.write_all((req.to_json() + "\n").as_bytes())?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        json::parse(&line).map_err(|e| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, format!("bad response: {e}"))
+        })
+    }
+
+    /// Query + insert: is `text` a duplicate of anything seen so far?
+    pub fn check(&mut self, text: &str) -> std::io::Result<bool> {
+        let resp = self.round_trip(json::obj(vec![
+            ("op", Value::str("check")),
+            ("text", Value::str(text)),
+        ]))?;
+        resp.get("duplicate")
+            .and_then(|v| v.as_bool())
+            .ok_or_else(|| err_from(&resp))
+    }
+
+    /// Query only (no state change).
+    pub fn query(&mut self, text: &str) -> std::io::Result<bool> {
+        let resp = self.round_trip(json::obj(vec![
+            ("op", Value::str("query")),
+            ("text", Value::str(text)),
+        ]))?;
+        resp.get("duplicate")
+            .and_then(|v| v.as_bool())
+            .ok_or_else(|| err_from(&resp))
+    }
+
+    /// Server counters: (docs, duplicates, disk_bytes).
+    pub fn stats(&mut self) -> std::io::Result<(u64, u64, u64)> {
+        let resp = self.round_trip(json::obj(vec![("op", Value::str("stats"))]))?;
+        let get = |k: &str| resp.get(k).and_then(|v| v.as_u64());
+        match (get("docs"), get("duplicates"), get("disk_bytes")) {
+            (Some(d), Some(dup), Some(b)) => Ok((d, dup, b)),
+            _ => Err(err_from(&resp)),
+        }
+    }
+
+    /// Ask the server to stop accepting connections and exit.
+    pub fn shutdown(&mut self) -> std::io::Result<()> {
+        let resp = self.round_trip(json::obj(vec![("op", Value::str("shutdown"))]))?;
+        if resp.get("ok").and_then(|v| v.as_bool()) == Some(true) {
+            Ok(())
+        } else {
+            Err(err_from(&resp))
+        }
+    }
+}
+
+fn err_from(resp: &Value) -> std::io::Error {
+    let msg = resp
+        .get("error")
+        .and_then(|v| v.as_str())
+        .unwrap_or("malformed response")
+        .to_string();
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+}

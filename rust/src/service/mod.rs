@@ -1,0 +1,31 @@
+//! Network deduplication service.
+//!
+//! Exposes the streaming SAMQ operation (§2.1) over a TCP line
+//! protocol so upstream ingestion workers (scrapers, parser fleets) can
+//! deduplicate against one shared index without linking the library —
+//! the deployment shape the paper's introduction motivates (continuous
+//! CommonCrawl-style drops feeding one corpus state).
+//!
+//! Protocol (JSON per line, newline-terminated):
+//!
+//! ```text
+//! -> {"op": "check",  "text": "..."}           query + insert
+//! <- {"duplicate": false, "id": 17}
+//! -> {"op": "query",  "text": "..."}           query only (no insert)
+//! <- {"duplicate": true}
+//! -> {"op": "stats"}
+//! <- {"docs": 17, "duplicates": 3, "disk_bytes": 1048576}
+//! -> {"op": "shutdown"}
+//! <- {"ok": true}
+//! ```
+//!
+//! Concurrency model mirrors the pipeline: connection handlers
+//! parallelize MinHashing (the dominant cost) and serialize index
+//! access behind one mutex, preserving the §4.4.2 sequential-insert
+//! requirement.
+
+mod client;
+mod server;
+
+pub use client::DedupClient;
+pub use server::{DedupServer, ServerStats};

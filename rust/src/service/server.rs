@@ -1,0 +1,198 @@
+//! The dedup server: TCP listener + shared LSHBloom state.
+
+use crate::config::PipelineConfig;
+use crate::corpus::Doc;
+use crate::json::{self, obj, Value};
+use crate::methods::lshbloom::{decider_from_config, BandPreparer, LshBloomDecider};
+use crate::methods::{Decider, Prepared, Preparer};
+use crate::minhash::{optimal_param, MinHasher, PermFamily};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Shared counters exposed by `{"op":"stats"}`.
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    pub docs: AtomicU64,
+    pub duplicates: AtomicU64,
+}
+
+struct Shared {
+    preparer: BandPreparer,
+    decider: Mutex<LshBloomDecider>,
+    stats: ServerStats,
+    shutdown: AtomicBool,
+}
+
+/// A running deduplication service.
+pub struct DedupServer {
+    listener: TcpListener,
+    shared: Arc<Shared>,
+}
+
+impl DedupServer {
+    /// Bind to `addr` (e.g. "127.0.0.1:0" for an ephemeral port).
+    pub fn bind(addr: &str, cfg: &PipelineConfig) -> std::io::Result<Self> {
+        let lsh = optimal_param(cfg.threshold, cfg.num_perms);
+        let preparer = BandPreparer {
+            hasher: MinHasher::new(PermFamily::Mix64, lsh.rows_used(), cfg.ngram),
+            lsh,
+        };
+        let shared = Arc::new(Shared {
+            preparer,
+            decider: Mutex::new(decider_from_config(cfg, lsh)),
+            stats: ServerStats::default(),
+            shutdown: AtomicBool::new(false),
+        });
+        let listener = TcpListener::bind(addr)?;
+        Ok(Self { listener, shared })
+    }
+
+    /// The bound address (for ephemeral-port tests).
+    pub fn local_addr(&self) -> std::io::Result<std::net::SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Serve until a client sends `{"op":"shutdown"}`. Each connection
+    /// gets a thread; MinHashing runs on the connection thread (parallel
+    /// across clients), index access serializes on the decider mutex.
+    pub fn serve(self) -> std::io::Result<()> {
+        // Period polling of the shutdown flag via a nonblocking accept
+        // loop keeps the implementation dependency-free.
+        self.listener.set_nonblocking(true)?;
+        let mut handles = Vec::new();
+        loop {
+            if self.shared.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false).ok();
+                    let shared = Arc::clone(&self.shared);
+                    handles.push(std::thread::spawn(move || handle_conn(stream, shared)));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+fn handle_conn(stream: TcpStream, shared: Arc<Shared>) {
+    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+    // Poll the shutdown flag between reads so idle connections do not
+    // keep `serve()` joining forever after a shutdown request.
+    stream
+        .set_read_timeout(Some(std::time::Duration::from_millis(100)))
+        .ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        // NB: on timeout, bytes read so far remain in `line`; the next
+        // read_line call appends, so partial lines are never dropped.
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // EOF
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(_) => break,
+        }
+        if line.trim().is_empty() {
+            line.clear();
+            continue;
+        }
+        let response = handle_request(&line, &shared);
+        line.clear();
+        let done = shared.shutdown.load(Ordering::SeqCst);
+        if writer
+            .write_all((response.to_json() + "\n").as_bytes())
+            .and_then(|_| writer.flush())
+            .is_err()
+        {
+            break;
+        }
+        if done {
+            break;
+        }
+    }
+    crate::log_debug!("connection {peer} closed");
+}
+
+fn handle_request(line: &str, shared: &Shared) -> Value {
+    let req = match json::parse(line) {
+        Ok(v) => v,
+        Err(e) => {
+            return obj(vec![
+                ("error", Value::str(format!("bad request json: {e}"))),
+            ])
+        }
+    };
+    match req.get("op").and_then(|v| v.as_str()) {
+        Some("check") | Some("query") => {
+            let insert = req.get("op").and_then(|v| v.as_str()) == Some("check");
+            let Some(text) = req.get("text").and_then(|v| v.as_str()) else {
+                return obj(vec![("error", Value::str("missing 'text'"))]);
+            };
+            let doc = Doc { id: 0, text: text.to_string() };
+            // MinHash outside the lock (parallel across connections).
+            let prepared = shared.preparer.prepare_batch(std::slice::from_ref(&doc));
+            let Prepared::Bands(ref bands) = prepared[0] else { unreachable!() };
+            let duplicate = {
+                let mut decider = shared.decider.lock().unwrap();
+                if insert {
+                    decider.decide(&prepared[0])
+                } else {
+                    use crate::index::BandIndex;
+                    decider.index().query(bands)
+                }
+            };
+            if insert {
+                let id = shared.stats.docs.fetch_add(1, Ordering::SeqCst);
+                if duplicate {
+                    shared.stats.duplicates.fetch_add(1, Ordering::SeqCst);
+                }
+                obj(vec![
+                    ("duplicate", Value::Bool(duplicate)),
+                    ("id", Value::u64(id)),
+                ])
+            } else {
+                obj(vec![("duplicate", Value::Bool(duplicate))])
+            }
+        }
+        Some("stats") => {
+            let decider = shared.decider.lock().unwrap();
+            obj(vec![
+                ("docs", Value::u64(shared.stats.docs.load(Ordering::SeqCst))),
+                (
+                    "duplicates",
+                    Value::u64(shared.stats.duplicates.load(Ordering::SeqCst)),
+                ),
+                ("disk_bytes", Value::u64(decider.disk_bytes())),
+            ])
+        }
+        Some("shutdown") => {
+            shared.shutdown.store(true, Ordering::SeqCst);
+            obj(vec![("ok", Value::Bool(true))])
+        }
+        Some(other) => obj(vec![("error", Value::str(format!("unknown op '{other}'")))]),
+        None => obj(vec![("error", Value::str("missing 'op'"))]),
+    }
+}

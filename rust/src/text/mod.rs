@@ -1,0 +1,16 @@
+//! Text processing substrate: normalization, tokenization, shingling,
+//! paragraph splitting.
+//!
+//! Every dedup method consumes documents through this module so that the
+//! methods differ only in *algorithm*, not in text plumbing — mirroring
+//! the paper's methodology of normalizing all implementations (§5.1.2).
+
+pub mod ngram;
+pub mod normalize;
+pub mod paragraph;
+pub mod tokenize;
+
+pub use ngram::{char_ngrams, word_ngrams};
+pub use normalize::normalize;
+pub use paragraph::paragraphs;
+pub use tokenize::{uniseg_words, whitespace_tokens};

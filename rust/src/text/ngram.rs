@@ -1,0 +1,114 @@
+//! N-gram shingling.
+//!
+//! MinHash methods view a document as the *set* of its word n-grams
+//! (shingles); n-gram Bloom methods (Dolma-Ngram, DCLM) stream the
+//! multiset. Shingles are produced as joined strings ("w1 w2 ... wn") and
+//! typically consumed through a hash, so the joining buffer is reused.
+
+/// Produce word n-grams from a token list, invoking `f` with each shingle.
+///
+/// For `tokens.len() < n` a single shingle containing all tokens is
+/// emitted (a short document is still a non-empty set — matching the
+/// Dolma/DCLM behaviour of not dropping short paragraphs).
+pub fn word_ngrams<'a, F: FnMut(&str)>(tokens: &[&'a str], n: usize, mut f: F) {
+    assert!(n > 0, "n-gram size must be positive");
+    if tokens.is_empty() {
+        return;
+    }
+    let mut buf = String::new();
+    if tokens.len() < n {
+        buf.push_str(tokens[0]);
+        for t in &tokens[1..] {
+            buf.push(' ');
+            buf.push_str(t);
+        }
+        f(&buf);
+        return;
+    }
+    for start in 0..=(tokens.len() - n) {
+        buf.clear();
+        buf.push_str(tokens[start]);
+        for t in &tokens[start + 1..start + n] {
+            buf.push(' ');
+            buf.push_str(t);
+        }
+        f(&buf);
+    }
+}
+
+/// Collect word n-grams into a Vec (test/analysis convenience).
+pub fn word_ngrams_vec(tokens: &[&str], n: usize) -> Vec<String> {
+    let mut out = Vec::new();
+    word_ngrams(tokens, n, |s| out.push(s.to_string()));
+    out
+}
+
+/// Character n-grams over a string (used by noise-robustness analyses).
+pub fn char_ngrams<F: FnMut(&str)>(text: &str, n: usize, mut f: F) {
+    assert!(n > 0);
+    let idx: Vec<usize> = text
+        .char_indices()
+        .map(|(i, _)| i)
+        .chain(std::iter::once(text.len()))
+        .collect();
+    if idx.len() <= 1 {
+        return;
+    }
+    let chars = idx.len() - 1;
+    if chars < n {
+        f(text);
+        return;
+    }
+    for s in 0..=(chars - n) {
+        f(&text[idx[s]..idx[s + n]]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_word_ngrams() {
+        assert_eq!(
+            word_ngrams_vec(&["a", "b", "c", "d"], 2),
+            vec!["a b", "b c", "c d"]
+        );
+    }
+
+    #[test]
+    fn unigrams_are_tokens() {
+        assert_eq!(word_ngrams_vec(&["x", "y"], 1), vec!["x", "y"]);
+    }
+
+    #[test]
+    fn short_doc_emits_single_shingle() {
+        assert_eq!(word_ngrams_vec(&["a", "b"], 5), vec!["a b"]);
+        assert!(word_ngrams_vec(&[], 3).is_empty());
+    }
+
+    #[test]
+    fn count_is_len_minus_n_plus_1() {
+        let toks: Vec<&str> = vec!["t"; 100];
+        for n in [1usize, 2, 5, 7, 13, 26] {
+            assert_eq!(word_ngrams_vec(&toks, n).len(), 100 - n + 1, "n={n}");
+        }
+    }
+
+    #[test]
+    fn char_ngrams_unicode_safe() {
+        let mut grams = Vec::new();
+        char_ngrams("añb", 2, |g| grams.push(g.to_string()));
+        assert_eq!(grams, vec!["añ", "ñb"]);
+    }
+
+    #[test]
+    fn char_ngrams_short_input() {
+        let mut grams = Vec::new();
+        char_ngrams("ab", 5, |g| grams.push(g.to_string()));
+        assert_eq!(grams, vec!["ab"]);
+        grams.clear();
+        char_ngrams("", 2, |g| grams.push(g.to_string()));
+        assert!(grams.is_empty());
+    }
+}

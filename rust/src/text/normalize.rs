@@ -1,0 +1,203 @@
+//! CCNet-style text normalization (§3.3).
+//!
+//! Lowercases, strips accents/special unicode down to a canonical form,
+//! and collapses whitespace. CCNet applies this before hashing paragraph
+//! units; the LSH methods use it before shingling so that trivially
+//! different byte encodings of the same text compare equal.
+
+/// Normalize a document: lowercase, map typographic punctuation to ASCII,
+/// drop non-printing/format characters, collapse runs of whitespace.
+pub fn normalize(text: &str) -> String {
+    let mut out = String::with_capacity(text.len());
+    let mut last_space = true; // also trims leading whitespace
+    let mut rest = text;
+    // §Perf: bulk ASCII fast path — printable non-space ASCII that is
+    // already lowercase copies byte-wise; only the first "interesting"
+    // byte falls through to the general char loop below.
+    loop {
+        let stop = rest
+            .as_bytes()
+            .iter()
+            .position(|&b| !(b'!'..=b'~').contains(&b) || b.is_ascii_uppercase());
+        match stop {
+            None => {
+                out.push_str(rest);
+                return finish(out);
+            }
+            Some(n) => {
+                if n > 0 {
+                    out.push_str(&rest[..n]);
+                    last_space = false;
+                }
+                // Handle one general char, then resume the fast scan.
+                let ch = rest[n..].chars().next().unwrap();
+                push_mapped(ch, &mut out, &mut last_space);
+                rest = &rest[n + ch.len_utf8()..];
+            }
+        }
+    }
+}
+
+fn finish(mut out: String) -> String {
+    while out.ends_with(' ') {
+        out.pop();
+    }
+    out
+}
+
+#[inline]
+fn push_mapped(ch: char, out: &mut String, last_space: &mut bool) {
+    match map_char(ch) {
+        MappedChar::Drop => {}
+        MappedChar::Space => {
+            if !*last_space {
+                out.push(' ');
+                *last_space = true;
+            }
+        }
+        MappedChar::Keep(c) => {
+            for lc in c.to_lowercase() {
+                out.push(lc);
+            }
+            *last_space = false;
+        }
+        MappedChar::Str(s) => {
+            out.push_str(s);
+            *last_space = false;
+        }
+    }
+}
+
+/// Reference (char-at-a-time) implementation kept for differential tests.
+#[doc(hidden)]
+pub fn normalize_reference(text: &str) -> String {
+    let mut out = String::with_capacity(text.len());
+    let mut last_space = true; // also trims leading whitespace
+    for ch in text.chars() {
+        let mapped = map_char(ch);
+        match mapped {
+            MappedChar::Drop => {}
+            MappedChar::Space => {
+                if !last_space {
+                    out.push(' ');
+                    last_space = true;
+                }
+            }
+            MappedChar::Keep(c) => {
+                for lc in c.to_lowercase() {
+                    out.push(lc);
+                }
+                last_space = false;
+            }
+            MappedChar::Str(s) => {
+                out.push_str(s);
+                last_space = false;
+            }
+        }
+    }
+    while out.ends_with(' ') {
+        out.pop();
+    }
+    out
+}
+
+enum MappedChar {
+    Keep(char),
+    Str(&'static str),
+    Space,
+    Drop,
+}
+
+fn map_char(ch: char) -> MappedChar {
+    match ch {
+        // Whitespace classes (incl. NBSP and ideographic space).
+        c if c.is_whitespace() => MappedChar::Space,
+        // Typographic quotes/dashes → ASCII (common PDF-parser artifacts).
+        '\u{2018}' | '\u{2019}' | '\u{201A}' | '\u{2032}' => MappedChar::Keep('\''),
+        '\u{201C}' | '\u{201D}' | '\u{201E}' | '\u{2033}' => MappedChar::Keep('"'),
+        '\u{2010}' | '\u{2011}' | '\u{2012}' | '\u{2013}' | '\u{2014}' | '\u{2212}' => {
+            MappedChar::Keep('-')
+        }
+        '\u{2026}' => MappedChar::Str("..."),
+        // Ligatures OCR tools emit.
+        '\u{FB00}' => MappedChar::Str("ff"),
+        '\u{FB01}' => MappedChar::Str("fi"),
+        '\u{FB02}' => MappedChar::Str("fl"),
+        '\u{FB03}' => MappedChar::Str("ffi"),
+        '\u{FB04}' => MappedChar::Str("ffl"),
+        // Zero-width/format/control characters: drop.
+        c if c.is_control() => MappedChar::Drop,
+        '\u{200B}'..='\u{200F}' | '\u{FEFF}' | '\u{00AD}' => MappedChar::Drop,
+        c => MappedChar::Keep(c),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lowercases_and_collapses_whitespace() {
+        assert_eq!(normalize("Hello   World\n\nFoo\tBar"), "hello world foo bar");
+    }
+
+    #[test]
+    fn trims_edges() {
+        assert_eq!(normalize("  x  "), "x");
+        assert_eq!(normalize(""), "");
+        assert_eq!(normalize(" \n\t "), "");
+    }
+
+    #[test]
+    fn maps_typographic_characters() {
+        assert_eq!(normalize("\u{201C}quoted\u{201D}"), "\"quoted\"");
+        assert_eq!(normalize("em\u{2014}dash"), "em-dash");
+        assert_eq!(normalize("e\u{FB03}cient"), "efficient");
+    }
+
+    #[test]
+    fn drops_zero_width_and_controls() {
+        assert_eq!(normalize("a\u{200B}b\u{00AD}c"), "abc");
+        assert_eq!(normalize("a\u{0007}b"), "ab");
+    }
+
+    #[test]
+    fn normalization_makes_parser_variants_equal() {
+        // Two "parses" of the same sentence with different artifacts.
+        let html = "The efficient \u{201C}method\u{201D} works";
+        let pdf = "the e\u{FB03}cient \"method\"  works\n";
+        assert_eq!(normalize(html), normalize(pdf));
+    }
+
+    #[test]
+    fn idempotent() {
+        let s = "Mixed \u{2018}Case\u{2019}\u{2026} with \u{FB01}xes";
+        assert_eq!(normalize(&normalize(s)), normalize(s));
+    }
+
+    #[test]
+    fn fast_path_matches_reference() {
+        let cases = [
+            "",
+            "plain ascii text here",
+            "  leading and trailing  ",
+            "MIXED Case With\tTabs\nAnd\u{2014}Dashes",
+            "e\u{FB03}cient \u{201C}quotes\u{201D} caf\u{00E9} \u{200B}zero",
+            "all!printable@ascii#chars$%^&*()",
+            "\u{0007}control\u{0007}",
+            "ends with unicode \u{2026}",
+        ];
+        for c in cases {
+            assert_eq!(normalize(c), normalize_reference(c), "case: {c:?}");
+        }
+    }
+
+    #[test]
+    fn fast_path_matches_reference_on_generated_docs() {
+        let g = crate::corpus::CorpusGenerator::new(Default::default());
+        for i in 0..10 {
+            let d = g.generate(99, i);
+            assert_eq!(normalize(&d.text), normalize_reference(&d.text), "doc {i}");
+        }
+    }
+}

@@ -1,0 +1,38 @@
+//! Paragraph splitting (CCNet / Dolma / DCLM unit of deduplication).
+//!
+//! CCNet splits documents on newline characters (§3.3); Dolma and DCLM do
+//! the same. Empty/whitespace-only units are skipped.
+
+/// Split a document into paragraph slices on newlines, skipping blanks.
+pub fn paragraphs(text: &str) -> Vec<&str> {
+    text.split('\n')
+        .map(str::trim)
+        .filter(|p| !p.is_empty())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splits_on_newlines() {
+        assert_eq!(paragraphs("a\nb\nc"), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn skips_blank_lines_and_trims() {
+        assert_eq!(paragraphs("a\n\n  \n  b  \n"), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn empty_document() {
+        assert!(paragraphs("").is_empty());
+        assert!(paragraphs("\n\n\n").is_empty());
+    }
+
+    #[test]
+    fn single_paragraph() {
+        assert_eq!(paragraphs("only one"), vec!["only one"]);
+    }
+}

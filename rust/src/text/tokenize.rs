@@ -1,0 +1,129 @@
+//! Tokenizers.
+//!
+//! Two flavors, matching the paper's discussion of why DCLM beats
+//! Dolma-Ngram (§5.2.2):
+//!
+//! * [`whitespace_tokens`] — naive whitespace split (Dolma-Ngram).
+//! * [`uniseg_words`] — Unicode-category word segmentation, a practical
+//!   subset of UAX-29 (DCLM's UniSeg tokenizer): alphanumeric runs are
+//!   words, digits group with digits, everything else separates.
+//!
+//! Tokenizers return byte ranges into the input so callers can hash
+//! without allocating per-token `String`s (the MinHash hot path).
+
+/// Iterator over whitespace-separated tokens as `&str` slices.
+pub fn whitespace_tokens(text: &str) -> impl Iterator<Item = &str> {
+    text.split_whitespace()
+}
+
+/// Word classes for the UAX-29-flavored segmenter.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Class {
+    Letter,
+    Digit,
+    Other,
+    Space,
+}
+
+fn classify(c: char) -> Class {
+    if c.is_whitespace() {
+        Class::Space
+    } else if c.is_alphabetic() || c == '\'' || c == '\u{2019}' {
+        // Apostrophes join letter runs ("don't") per UAX-29 MidLetter.
+        Class::Letter
+    } else if c.is_ascii_digit() || c.is_numeric() {
+        Class::Digit
+    } else {
+        Class::Other
+    }
+}
+
+/// Unicode-category word segmentation (UniSeg/UAX-29-flavored subset).
+///
+/// Emits maximal runs of letters (with embedded apostrophes) and maximal
+/// runs of digits; each other non-space character is its own token
+/// (punctuation is meaningful for n-gram overlap of parsed PDFs).
+pub fn uniseg_words(text: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut start: Option<(usize, Class)> = None;
+    for (i, c) in text.char_indices() {
+        let class = classify(c);
+        match (start, class) {
+            (None, Class::Space) => {}
+            (None, Class::Other) => out.push(&text[i..i + c.len_utf8()]),
+            (None, cl) => start = Some((i, cl)),
+            (Some((s, run)), cl) => {
+                if cl == run && cl != Class::Other {
+                    // continue the run
+                } else {
+                    out.push(&text[s..i]);
+                    start = None;
+                    match cl {
+                        Class::Space => {}
+                        Class::Other => out.push(&text[i..i + c.len_utf8()]),
+                        _ => start = Some((i, cl)),
+                    }
+                }
+            }
+        }
+    }
+    if let Some((s, _)) = start {
+        out.push(&text[s..]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn whitespace_basic() {
+        let toks: Vec<&str> = whitespace_tokens("a  b\tc\nd").collect();
+        assert_eq!(toks, vec!["a", "b", "c", "d"]);
+    }
+
+    #[test]
+    fn whitespace_keeps_punctuation_attached() {
+        let toks: Vec<&str> = whitespace_tokens("end. next,word").collect();
+        assert_eq!(toks, vec!["end.", "next,word"]);
+    }
+
+    #[test]
+    fn uniseg_splits_punctuation() {
+        assert_eq!(uniseg_words("end. next,word"), vec!["end", ".", "next", ",", "word"]);
+    }
+
+    #[test]
+    fn uniseg_groups_digits() {
+        assert_eq!(uniseg_words("pi=3.14159"), vec!["pi", "=", "3", ".", "14159"]);
+    }
+
+    #[test]
+    fn uniseg_keeps_apostrophe_words() {
+        assert_eq!(uniseg_words("don't stop"), vec!["don't", "stop"]);
+    }
+
+    #[test]
+    fn uniseg_handles_unicode() {
+        assert_eq!(uniseg_words("naïve café 42"), vec!["naïve", "café", "42"]);
+    }
+
+    #[test]
+    fn uniseg_empty_and_spaces() {
+        assert!(uniseg_words("").is_empty());
+        assert!(uniseg_words("   \n\t ").is_empty());
+    }
+
+    #[test]
+    fn uniseg_vs_whitespace_difference_matters() {
+        // The paper's explanation for DCLM > Dolma-Ngram: punctuation
+        // variants don't perturb uniseg n-grams as much.
+        let a = uniseg_words("result (p<0.05) shown");
+        let b = uniseg_words("result (p < 0.05) shown");
+        assert_eq!(a, b, "uniseg is robust to spacing around punctuation");
+        let wa: Vec<&str> = whitespace_tokens("result (p<0.05) shown").collect();
+        let wb: Vec<&str> = whitespace_tokens("result (p < 0.05) shown").collect();
+        assert_ne!(wa, wb, "whitespace split is not");
+    }
+}

@@ -1,0 +1,199 @@
+//! Property tests on coordinator invariants: routing (band slicing),
+//! batching/ordering, and index state management.
+
+use lshbloom::config::PipelineConfig;
+use lshbloom::corpus::Doc;
+use lshbloom::hash::band::{band_hash_mod_n, band_hash_wrapping};
+use lshbloom::hash::pybigint::band_hash_pybigint;
+use lshbloom::index::lshbloom::{LshBloomConfig, LshBloomIndex};
+use lshbloom::index::{BandIndex, MinHashLshIndex};
+use lshbloom::methods::lshbloom::lshbloom_method;
+use lshbloom::minhash::{optimal_param, LshParams, PermFamily};
+use lshbloom::perf::prop::{check, Gen};
+use lshbloom::pipeline::{run_stream, PipelineOptions};
+
+/// The streaming SAMQ contract: for any document stream, a document is
+/// flagged duplicate iff some earlier document collided with it — and
+/// re-running the identical stream yields identical verdicts.
+#[test]
+fn prop_pipeline_verdicts_deterministic_across_schedules() {
+    check("pipeline-determinism", 25, |g: &mut Gen| {
+        let n = g.size(5, 60);
+        let vocab = ["alpha", "beta", "gamma", "delta", "epsilon", "zeta"];
+        let docs: Vec<Doc> = (0..n)
+            .map(|i| {
+                let words: Vec<&str> =
+                    (0..g.size(3, 30)).map(|_| *g.choose(&vocab)).collect();
+                Doc { id: i as u64, text: words.join(" ") }
+            })
+            .collect();
+        let cfg = PipelineConfig { num_perms: 32, expected_docs: 1000, ..Default::default() };
+
+        let mut reference = lshbloom_method(&cfg, PermFamily::Mix64);
+        let expected: Vec<bool> = docs
+            .iter()
+            .map(|d| {
+                let prep = reference.preparer.prepare_batch(std::slice::from_ref(d));
+                reference.decider.decide(&prep[0])
+            })
+            .collect();
+
+        let workers = 1 + g.size(0, 3);
+        let batch = 1 + g.size(0, 7);
+        let mut m = lshbloom_method(&cfg, PermFamily::Mix64);
+        let stats = run_stream(
+            &mut m,
+            docs.clone(),
+            PipelineOptions { workers, batch_size: batch, channel_depth: 2 },
+        );
+        assert_eq!(stats.verdicts, expected, "workers={workers} batch={batch}");
+    });
+}
+
+/// Bloom-layer soundness: the index never yields a false negative — any
+/// inserted band vector is reported as a duplicate forever after.
+#[test]
+fn prop_lshbloom_index_no_false_negatives() {
+    check("no-false-negatives", 40, |g: &mut Gen| {
+        let bands = 1 + g.size(0, 15);
+        let mut idx = LshBloomIndex::new(LshBloomConfig {
+            lsh: LshParams { num_bands: bands, rows_per_band: 1 + g.size(0, 7) },
+            p_effective: 1e-6,
+            expected_docs: 2000,
+            blocked: false,
+        });
+        let docs: Vec<Vec<u64>> = (0..g.size(1, 200))
+            .map(|_| (0..bands).map(|_| g.u64()).collect())
+            .collect();
+        for d in &docs {
+            idx.insert_if_new(d);
+        }
+        for (i, d) in docs.iter().enumerate() {
+            assert!(idx.query(d), "doc {i} lost");
+        }
+    });
+}
+
+/// Structural agreement: on identical band-hash inputs, LSHBloom may add
+/// false positives over the exact hashmap index but never misses a
+/// duplicate the hashmap finds.
+#[test]
+fn prop_lshbloom_dominates_hashmap_duplicates() {
+    check("bloom-superset-of-exact", 30, |g: &mut Gen| {
+        let bands = 1 + g.size(1, 11);
+        let mut bloom = LshBloomIndex::new(LshBloomConfig {
+            lsh: LshParams { num_bands: bands, rows_per_band: 4 },
+            p_effective: 1e-6,
+            expected_docs: 1000,
+            blocked: false,
+        });
+        let mut exact = MinHashLshIndex::new(bands, 4);
+        // Low-entropy band values force genuine collisions.
+        let n = g.size(2, 120);
+        for _ in 0..n {
+            let d: Vec<u64> = (0..bands).map(|_| g.below(12)).collect();
+            let bloom_dup = bloom.insert_if_new(&d);
+            let exact_dup = exact.insert_if_new(&d);
+            if exact_dup {
+                assert!(bloom_dup, "bloom missed a true band collision");
+            }
+        }
+    });
+}
+
+/// Band-hash routing: all three implementations agree, and band hashes
+/// are invariant under permutation of values within a band but sensitive
+/// to moving values across bands (the multiset-per-band contract).
+#[test]
+fn prop_band_hash_implementations_agree() {
+    check("band-hash-agreement", 60, |g: &mut Gen| {
+        let band = g.vec_u64(40);
+        let n = 1 + g.u64() % ((1 << 61) - 1);
+        let wrap = band_hash_wrapping(&band);
+        let modn = band_hash_mod_n(&band, n);
+        // pybigint simulation must agree with the exact u128 path.
+        assert_eq!(band_hash_pybigint(&band, n), modn);
+        // wrapping == mod 2^64
+        let total: u128 = band.iter().map(|&x| x as u128).sum();
+        assert_eq!(wrap, (total & u64::MAX as u128) as u64);
+    });
+}
+
+/// Optimal-param routing invariants: geometry always fits the
+/// permutation budget and responds monotonically to threshold.
+#[test]
+fn prop_optimal_param_invariants() {
+    check("optimal-param", 40, |g: &mut Gen| {
+        let t = 0.05 + g.f64() * 0.9;
+        let p = 8 + g.size(0, 248);
+        let params = optimal_param(t, p);
+        assert!(params.num_bands >= 1 && params.rows_per_band >= 1);
+        assert!(params.rows_used() <= p, "t={t} p={p} -> {params:?}");
+        // Higher thresholds favor longer bands (more rows) — verify the
+        // weak form: r at T+0.3 is >= r at T.
+        if t + 0.3 < 1.0 {
+            let hi = optimal_param(t + 0.3, p);
+            assert!(
+                hi.rows_per_band >= params.rows_per_band,
+                "r not monotone: T={t} -> {params:?}, T+0.3 -> {hi:?}"
+            );
+        }
+    });
+}
+
+/// Index persistence is lossless for duplicate detection state.
+#[test]
+fn prop_index_persistence_roundtrip() {
+    check("index-save-load", 10, |g: &mut Gen| {
+        let bands = 2 + g.size(0, 8);
+        let dir = std::env::temp_dir()
+            .join(format!("lshbloom-prop-{}-{:x}", std::process::id(), g.seed()));
+        let mut idx = LshBloomIndex::new(LshBloomConfig {
+            lsh: LshParams { num_bands: bands, rows_per_band: 3 },
+            p_effective: 1e-5,
+            expected_docs: 500,
+            blocked: false,
+        });
+        let docs: Vec<Vec<u64>> = (0..g.size(1, 80))
+            .map(|_| (0..bands).map(|_| g.u64()).collect())
+            .collect();
+        for d in &docs {
+            idx.insert_if_new(d);
+        }
+        idx.save_dir(&dir).unwrap();
+        let loaded = LshBloomIndex::load_dir(&dir).unwrap();
+        for d in &docs {
+            assert!(loaded.query(d));
+        }
+        assert_eq!(loaded.len(), idx.len());
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
+
+/// Sharded aggregation preserves the survivor count of sequential dedup.
+#[test]
+fn prop_sharded_matches_sequential_survivors() {
+    check("shard-aggregation", 8, |g: &mut Gen| {
+        let cfg = PipelineConfig { num_perms: 32, expected_docs: 2000, ..Default::default() };
+        // Stream with guaranteed exact duplicates.
+        let uniques = g.size(5, 30);
+        let n = uniques * 3;
+        let docs: Vec<Doc> = (0..n)
+            .map(|i| {
+                let u = g.below(uniques as u64);
+                Doc { id: i as u64, text: format!("document body number {u} with shared words") }
+            })
+            .collect();
+        let mut seq = lshbloom_method(&cfg, PermFamily::Mix64);
+        let survivors_seq = docs
+            .iter()
+            .filter(|d| {
+                let prep = seq.preparer.prepare_batch(std::slice::from_ref(*d));
+                !seq.decider.decide(&prep[0])
+            })
+            .count();
+        let shards = 1 + g.size(0, 5);
+        let stats = lshbloom::pipeline::shard::dedup_sharded(&cfg, docs, shards);
+        assert_eq!(stats.survivors.len(), survivors_seq, "shards={shards}");
+    });
+}

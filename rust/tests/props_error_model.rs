@@ -1,0 +1,112 @@
+//! Property tests on the analytic error model (§4.3) and its empirical
+//! agreement with the real index.
+
+use lshbloom::index::ErrorModel;
+use lshbloom::minhash::params::collision_probability;
+use lshbloom::minhash::{optimal_param, LshParams};
+use lshbloom::perf::prop::{check, Gen};
+
+#[test]
+fn prop_error_model_basic_bounds() {
+    check("error-model-bounds", 60, |g: &mut Gen| {
+        let t = 0.05 + g.f64() * 0.9;
+        let lsh = LshParams {
+            num_bands: 1 + g.size(0, 60),
+            rows_per_band: 1 + g.size(0, 20),
+        };
+        let p_eff = 10f64.powf(-(1.0 + g.f64() * 11.0));
+        let m = ErrorModel::evaluate_u64(t, lsh, p_eff);
+        assert!((0.0..=1.0).contains(&m.fp_lsh), "{m:?}");
+        assert!((0.0..=1.0).contains(&m.fn_lsh), "{m:?}");
+        // Eq. 3: bloom only adds FPs. Eq. 4: bloom only removes FNs.
+        assert!(m.fp_bloom >= m.fp_lsh);
+        assert!(m.fn_bloom <= m.fn_lsh);
+        assert!(m.fp_bloom <= 1.0 && m.fn_bloom >= 0.0);
+    });
+}
+
+#[test]
+fn prop_error_model_monotone_in_p_effective() {
+    check("error-model-monotone", 40, |g: &mut Gen| {
+        let t = 0.2 + g.f64() * 0.6;
+        let lsh = optimal_param(t, 128);
+        let lo = ErrorModel::evaluate_u64(t, lsh, 1e-10);
+        let hi = ErrorModel::evaluate_u64(t, lsh, 1e-3);
+        assert!(hi.fp_bloom >= lo.fp_bloom);
+        assert!(hi.fn_bloom <= lo.fn_bloom);
+    });
+}
+
+#[test]
+fn prop_s_curve_monotone_and_bounded() {
+    check("s-curve", 50, |g: &mut Gen| {
+        let lsh = LshParams {
+            num_bands: 1 + g.size(0, 50),
+            rows_per_band: 1 + g.size(0, 15),
+        };
+        let mut prev = 0.0;
+        for i in 0..=10 {
+            let s = i as f64 / 10.0;
+            let c = collision_probability(s, lsh);
+            assert!((0.0..=1.0 + 1e-12).contains(&c));
+            assert!(c + 1e-12 >= prev, "not monotone at s={s}");
+            prev = c;
+        }
+        // Endpoints.
+        assert!(collision_probability(0.0, lsh) < 1e-12);
+        assert!((collision_probability(1.0, lsh) - 1.0).abs() < 1e-9);
+    });
+}
+
+/// Empirical check that the S-curve predicts real LSHBloom collision
+/// behaviour: documents engineered to a target Jaccard similarity
+/// collide at roughly the modeled rate.
+#[test]
+fn s_curve_matches_empirical_collisions() {
+    use lshbloom::hash::band::band_hashes_for_doc;
+    use lshbloom::index::lshbloom::{LshBloomConfig, LshBloomIndex};
+    use lshbloom::index::BandIndex;
+    use lshbloom::minhash::{MinHasher, PermFamily};
+    use lshbloom::rng::Xoshiro256pp;
+
+    let lsh = optimal_param(0.5, 128); // (25, 5)
+    let mh = MinHasher::new(PermFamily::Mix64, lsh.rows_used(), 1);
+    let mut rng = Xoshiro256pp::seeded(0x5C);
+
+    for (target_j, expect_band) in [(0.3, collision_probability(0.3, lsh)), (0.7, collision_probability(0.7, lsh))] {
+        let trials = 300;
+        let mut collided = 0u64;
+        for _ in 0..trials {
+            // Two token-hash sets with expected Jaccard `target_j`:
+            // shared fraction s where s/(2-s) = J  =>  s = 2J/(1+J).
+            let s = 2.0 * target_j / (1.0 + target_j);
+            let total = 200usize;
+            let shared = (total as f64 * s) as usize;
+            let base: Vec<u64> = (0..total).map(|_| rng.next_u64()).collect();
+            let mut a = base.clone();
+            let mut b: Vec<u64> = base[..shared].to_vec();
+            for _ in shared..total {
+                b.push(rng.next_u64());
+            }
+            a.truncate(total);
+            let mut idx = LshBloomIndex::new(LshBloomConfig {
+                lsh,
+                p_effective: 1e-10,
+                expected_docs: 10,
+                blocked: false,
+            });
+            let mut bands = Vec::new();
+            let sig_a = mh.signature_of_hashes(&a);
+            band_hashes_for_doc(&sig_a, lsh.num_bands, lsh.rows_per_band, &mut bands);
+            idx.insert_if_new(&bands);
+            let sig_b = mh.signature_of_hashes(&b);
+            band_hashes_for_doc(&sig_b, lsh.num_bands, lsh.rows_per_band, &mut bands);
+            collided += idx.query(&bands) as u64;
+        }
+        let observed = collided as f64 / trials as f64;
+        assert!(
+            (observed - expect_band).abs() < 0.15,
+            "J={target_j}: observed {observed:.3} vs modeled {expect_band:.3}"
+        );
+    }
+}

@@ -1,0 +1,134 @@
+//! Property tests over the deduplication methods: streaming semantics,
+//! exact-duplicate detection, and cross-method consistency.
+
+use lshbloom::corpus::Doc;
+use lshbloom::methods::{MethodKind, MethodSpec};
+use lshbloom::perf::prop::{check, Gen};
+
+fn random_doc(g: &mut Gen, sentences: usize) -> String {
+    let mut text = String::new();
+    for s in 0..sentences {
+        for _ in 0..(4 + g.size(0, 12)) {
+            text.push_str(&g.word(9));
+            text.push(' ');
+        }
+        text.push('.');
+        if s % 2 == 1 {
+            text.push('\n');
+        } else {
+            text.push(' ');
+        }
+    }
+    text
+}
+
+fn sample(g: &mut Gen) -> Vec<Doc> {
+    (0..8).map(|i| Doc { id: i, text: random_doc(g, 4) }).collect()
+}
+
+/// Every technique must flag a byte-identical replay of a seen document.
+#[test]
+fn prop_exact_duplicates_always_flagged() {
+    check("exact-dup-flagged", 20, |g: &mut Gen| {
+        let s = sample(g);
+        for kind in MethodKind::ALL {
+            let mut m = MethodSpec::best(kind, 500).build(&s);
+            let doc = Doc { id: 0, text: random_doc(g, 5) };
+            assert!(!m.process(&doc), "{}: fresh doc flagged", kind.name());
+            assert!(m.process(&doc), "{}: exact replay missed", kind.name());
+            // And it stays flagged on every subsequent replay.
+            assert!(m.process(&doc), "{}: third replay missed", kind.name());
+        }
+    });
+}
+
+/// The first document of any stream is never a duplicate.
+#[test]
+fn prop_first_document_never_duplicate() {
+    check("first-doc-clean", 30, |g: &mut Gen| {
+        let s = sample(g);
+        for kind in MethodKind::ALL {
+            let mut m = MethodSpec::best(kind, 500).build(&s);
+            let doc = Doc { id: 0, text: random_doc(g, 3) };
+            assert!(!m.process(&doc), "{}", kind.name());
+        }
+    });
+}
+
+/// Method verdicts are a pure function of the stream prefix: replaying
+/// the same stream into a fresh instance yields the same verdicts.
+#[test]
+fn prop_methods_are_deterministic() {
+    check("method-determinism", 12, |g: &mut Gen| {
+        let s = sample(g);
+        let stream: Vec<Doc> = (0..20)
+            .map(|i| {
+                // Mix fresh docs with replays of earlier ones.
+                if i > 3 && g.bool(0.4) {
+                    Doc { id: i, text: format!("replay body {}", g.below(3)) }
+                } else {
+                    Doc { id: i, text: random_doc(g, 3) }
+                }
+            })
+            .collect();
+        for kind in MethodKind::ALL {
+            let run = |docs: &[Doc]| -> Vec<bool> {
+                let mut m = MethodSpec::best(kind, 500).build(&s);
+                docs.iter().map(|d| m.process(d)).collect()
+            };
+            assert_eq!(run(&stream), run(&stream), "{}", kind.name());
+        }
+    });
+}
+
+/// LSHBloom and MinHashLSH agree on (nearly) every verdict when driven
+/// by the same permutation family — the paper's fidelity-parity claim,
+/// as a property over random streams. Bloom false positives are bounded
+/// by p_effective, so at these sizes disagreement means a bug.
+#[test]
+fn prop_lshbloom_minhashlsh_parity() {
+    check("lsh-parity", 10, |g: &mut Gen| {
+        let s = sample(g);
+        let stream: Vec<Doc> = (0..30)
+            .map(|i| {
+                if i > 2 && g.bool(0.35) {
+                    Doc { id: i, text: format!("shared duplicate body variant {}", g.below(4)) }
+                } else {
+                    Doc { id: i, text: random_doc(g, 3) }
+                }
+            })
+            .collect();
+        let mut a = MethodSpec::best(MethodKind::LshBloom, 500).build(&s);
+        let mut b = MethodSpec::best(MethodKind::MinHashLsh, 500).build(&s);
+        for (i, d) in stream.iter().enumerate() {
+            let va = a.process(d);
+            let vb = b.process(d);
+            assert_eq!(va, vb, "doc {i}: lshbloom={va} minhashlsh={vb}");
+        }
+    });
+}
+
+/// Empty and degenerate documents never crash any method and are never
+/// duplicates of each other... except exact-empty matches where unit
+/// methods legitimately return false (no units).
+#[test]
+fn prop_degenerate_documents_are_safe() {
+    check("degenerate-docs", 15, |g: &mut Gen| {
+        let s = sample(g);
+        let degenerates = [
+            String::new(),
+            " ".to_string(),
+            "\n\n\n".to_string(),
+            "x".to_string(),
+            "\u{FB03}".to_string(),
+            "0 0 0 0 0".to_string(),
+        ];
+        for kind in MethodKind::ALL {
+            let mut m = MethodSpec::best(kind, 100).build(&s);
+            for text in &degenerates {
+                // Must not panic; verdict itself is method-specific.
+                let _ = m.process(&Doc { id: g.u64(), text: text.clone() });
+            }
+        }
+    });
+}

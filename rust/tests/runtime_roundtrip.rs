@@ -1,0 +1,76 @@
+//! Integration: the AOT bridge end-to-end.
+//!
+//! Loads HLO-text artifacts produced by `python -m compile.aot`, executes
+//! them on the PJRT CPU client, and checks the numerics against values
+//! computed directly in the test (band hashes) and against the golden
+//! vectors (signatures; see `xla_backend.rs` for the full cross-check).
+//!
+//! Requires `make artifacts` to have run; tests are skipped (pass
+//! trivially with a note) when the artifacts directory is missing so that
+//! plain `cargo test` works from a fresh checkout.
+
+use lshbloom::runtime::PjrtEngine;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("artifacts/ missing; run `make artifacts` first — skipping");
+        None
+    }
+}
+
+#[test]
+fn band_hash_artifact_executes_and_matches_wrapping_sums() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = PjrtEngine::cpu().expect("pjrt cpu client");
+    let exe = engine
+        .load_hlo_text(dir.join("band_hashes_B8_P128_T0.5.hlo.txt"))
+        .expect("compile band_hashes artifact");
+
+    // sigs[d][p] = d * 1e18 + p (exercises u64 range + wrapping).
+    let (b, p) = (8usize, 128usize);
+    let mut sigs = vec![0u64; b * p];
+    for d in 0..b {
+        for j in 0..p {
+            sigs[d * p + j] = (d as u64).wrapping_mul(1_000_000_000_000_000_000) + j as u64;
+        }
+    }
+    let lit = xla::Literal::vec1(&sigs).reshape(&[b as i64, p as i64]).unwrap();
+    let out = exe.execute(&[lit]).expect("execute");
+    assert_eq!(out.len(), 1);
+    let vals = out[0].to_vec::<u64>().unwrap();
+
+    // test config: T=0.5, P=128 -> (num_bands, rows_per_band) from manifest.
+    let (num_bands, rows) = (25usize, 5usize);
+    assert_eq!(vals.len(), b * num_bands);
+    for d in 0..b {
+        for band in 0..num_bands {
+            let mut expect = 0u64;
+            for i in 0..rows {
+                expect = expect.wrapping_add(sigs[d * p + band * rows + i]);
+            }
+            assert_eq!(vals[d * num_bands + band], expect, "doc {d} band {band}");
+        }
+    }
+}
+
+#[test]
+fn minhash_sigs_artifact_full_padding_yields_u64_max() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = PjrtEngine::cpu().expect("pjrt cpu client");
+    let exe = engine
+        .load_hlo_text(dir.join("minhash_sigs_B8_L128_P128.hlo.txt"))
+        .expect("compile minhash_sigs artifact");
+
+    // All rows fully padded -> every signature must be u64::MAX.
+    let toks = vec![u64::MAX; 8 * 128];
+    let seeds: Vec<u64> = (0..128u64).map(|i| i.wrapping_mul(0x9E3779B97F4A7C15)).collect();
+    let toks = xla::Literal::vec1(&toks).reshape(&[8, 128]).unwrap();
+    let seeds = xla::Literal::vec1(&seeds).reshape(&[128]).unwrap();
+    let out = exe.execute(&[toks, seeds]).expect("execute");
+    let vals = out[0].to_vec::<u64>().unwrap();
+    assert_eq!(vals.len(), 8 * 128);
+    assert!(vals.iter().all(|&v| v == u64::MAX));
+}

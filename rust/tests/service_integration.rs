@@ -1,0 +1,93 @@
+//! Integration tests for the network deduplication service.
+
+use lshbloom::config::PipelineConfig;
+use lshbloom::service::{DedupClient, DedupServer};
+
+fn start_server() -> (std::thread::JoinHandle<()>, String) {
+    let cfg = PipelineConfig {
+        num_perms: 64,
+        expected_docs: 10_000,
+        ..Default::default()
+    };
+    let server = DedupServer::bind("127.0.0.1:0", &cfg).expect("bind");
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.serve().expect("serve"));
+    (handle, addr)
+}
+
+#[test]
+fn check_query_stats_shutdown_roundtrip() {
+    let (handle, addr) = start_server();
+    let mut client = DedupClient::connect(&addr).unwrap();
+
+    // Fresh doc, then duplicate.
+    assert!(!client.check("the first document in the stream").unwrap());
+    assert!(client.check("the first document in the stream").unwrap());
+    // Query-only does not mutate.
+    assert!(!client.query("an unseen document right here").unwrap());
+    assert!(!client.query("an unseen document right here").unwrap());
+
+    let (docs, dups, disk) = client.stats().unwrap();
+    assert_eq!(docs, 2);
+    assert_eq!(dups, 1);
+    assert!(disk > 0);
+
+    client.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+#[test]
+fn multiple_clients_share_one_index() {
+    let (handle, addr) = start_server();
+    let mut a = DedupClient::connect(&addr).unwrap();
+    let mut b = DedupClient::connect(&addr).unwrap();
+
+    assert!(!a.check("shared corpus state across connections").unwrap());
+    // Client B sees A's insert.
+    assert!(b.check("shared corpus state across connections").unwrap());
+
+    // Concurrent load from two clients.
+    let t = std::thread::spawn(move || {
+        for i in 0..50 {
+            a.check(&format!("client a document number {i}")).unwrap();
+        }
+        a
+    });
+    for i in 0..50 {
+        b.check(&format!("client b document number {i}")).unwrap();
+    }
+    let mut a = t.join().unwrap();
+    let (docs, dups, _) = a.stats().unwrap();
+    // 2 checks of the shared doc + 50 per worker = 102 total inserts,
+    // of which at least the second shared check was a duplicate.
+    assert_eq!(docs, 102);
+    assert!(dups >= 1);
+
+    a.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+#[test]
+fn malformed_requests_get_error_responses() {
+    use std::io::{BufRead, BufReader, Write};
+    let (handle, addr) = start_server();
+    let mut stream = std::net::TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    let mut send = |line: &str| -> String {
+        stream.write_all(format!("{line}\n").as_bytes()).unwrap();
+        stream.flush().unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        resp
+    };
+
+    assert!(send("this is not json").contains("error"));
+    assert!(send(r#"{"op": "frobnicate"}"#).contains("unknown op"));
+    assert!(send(r#"{"op": "check"}"#).contains("missing 'text'"));
+    assert!(send(r#"{"text": "no op"}"#).contains("missing 'op'"));
+
+    let mut client = DedupClient::connect(&addr).unwrap();
+    client.shutdown().unwrap();
+    handle.join().unwrap();
+}

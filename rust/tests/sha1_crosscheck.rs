@@ -1,0 +1,34 @@
+//! Cross-check the from-scratch SHA-1 against the RustCrypto crate
+//! (dev-dependency only) over random inputs of many lengths.
+
+use lshbloom::hash::sha1::Sha1;
+use lshbloom::rng::Xoshiro256pp;
+use sha1::Digest;
+
+#[test]
+fn matches_rustcrypto_on_random_inputs() {
+    let mut rng = Xoshiro256pp::seeded(0xCAFE);
+    for len in [0usize, 1, 3, 55, 56, 57, 63, 64, 65, 127, 128, 1000, 4096, 100_000] {
+        let data: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let ours = Sha1::digest(&data);
+        let theirs = sha1::Sha1::digest(&data);
+        assert_eq!(ours.as_slice(), theirs.as_slice(), "len={len}");
+    }
+}
+
+#[test]
+fn matches_rustcrypto_streaming() {
+    let mut rng = Xoshiro256pp::seeded(0xBEEF);
+    let data: Vec<u8> = (0..10_000).map(|_| rng.next_u64() as u8).collect();
+    let mut ours = Sha1::new();
+    let mut theirs = sha1::Sha1::new();
+    let mut off = 0usize;
+    while off < data.len() {
+        let chunk = (rng.below(200) + 1) as usize;
+        let end = (off + chunk).min(data.len());
+        ours.update(&data[off..end]);
+        theirs.update(&data[off..end]);
+        off = end;
+    }
+    assert_eq!(ours.finalize().as_slice(), theirs.finalize().as_slice());
+}

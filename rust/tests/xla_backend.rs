@@ -1,0 +1,159 @@
+//! Cross-language equivalence: the XLA artifact backend must be
+//! bit-identical to the native rust mix64 backend, and both must match
+//! the golden vectors emitted by the python reference oracle.
+
+use lshbloom::config::PipelineConfig;
+use lshbloom::corpus::Doc;
+use lshbloom::hash::mix64::{default_seeds, PERM_MASTER_SEED};
+use lshbloom::json;
+use lshbloom::methods::lshbloom::lshbloom_method;
+use lshbloom::methods::{Prepared, Preparer};
+use lshbloom::minhash::{MinHasher, PermFamily};
+use lshbloom::runtime::XlaBandPreparer;
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("artifacts/ missing; run `make artifacts` first — skipping");
+        None
+    }
+}
+
+#[test]
+fn golden_vectors_pin_native_backend_to_python_oracle() {
+    let Some(dir) = artifacts_dir() else { return };
+    let text = std::fs::read_to_string(dir.join("golden.json")).unwrap();
+    let g = json::parse(&text).unwrap();
+
+    let p = g.get("P").unwrap().as_usize().unwrap();
+    let num_bands = g.get("num_bands").unwrap().as_usize().unwrap();
+    let rows = g.get("rows_per_band").unwrap().as_usize().unwrap();
+    assert_eq!(
+        g.get("perm_master_seed").unwrap().as_u64().unwrap(),
+        PERM_MASTER_SEED,
+        "master seed drifted between python and rust"
+    );
+
+    // Seeds must match the rust derivation exactly.
+    let seeds: Vec<u64> = g.get("seeds").unwrap().as_arr().unwrap().iter()
+        .map(|v| v.as_u64().unwrap())
+        .collect();
+    assert_eq!(seeds, default_seeds(p), "seed stream mismatch");
+
+    let tokens: Vec<Vec<u64>> = g.get("tokens").unwrap().as_arr().unwrap().iter()
+        .map(|row| row.as_arr().unwrap().iter().map(|v| v.as_u64().unwrap()).collect())
+        .collect();
+    let expect_sigs: Vec<Vec<u64>> = g.get("signatures").unwrap().as_arr().unwrap().iter()
+        .map(|row| row.as_arr().unwrap().iter().map(|v| v.as_u64().unwrap()).collect())
+        .collect();
+    let expect_bands: Vec<Vec<u64>> = g.get("band_hashes").unwrap().as_arr().unwrap().iter()
+        .map(|row| row.as_arr().unwrap().iter().map(|v| v.as_u64().unwrap()).collect())
+        .collect();
+
+    let hasher = MinHasher::new(PermFamily::Mix64, p, 1);
+    for (d, row) in tokens.iter().enumerate() {
+        // Golden tokens use u64::MAX as padding; the rust signature path
+        // treats pad values identically (the oracle masks them out —
+        // replicate by filtering).
+        let valid: Vec<u64> = row.iter().copied().filter(|&t| t != u64::MAX).collect();
+        let sig = hasher.signature_of_hashes(&valid);
+        assert_eq!(sig, expect_sigs[d], "signature row {d}");
+        let mut bands = Vec::new();
+        lshbloom::hash::band::band_hashes_for_doc(&sig, num_bands, rows, &mut bands);
+        assert_eq!(bands, expect_bands[d], "band row {d}");
+    }
+}
+
+#[test]
+fn xla_backend_bit_identical_to_native_on_corpus() {
+    let Some(dir) = artifacts_dir() else { return };
+    // Use the "test" config artifacts: T=0.5, P=128 (fast compile).
+    let cfg = PipelineConfig {
+        threshold: 0.5,
+        num_perms: 128,
+        ngram: 1,
+        artifacts_dir: dir.display().to_string(),
+        expected_docs: 10_000,
+        ..Default::default()
+    };
+    let xla = XlaBandPreparer::from_manifest(&dir, 0.5, 128, 1).expect("load artifacts");
+    let native = lshbloom_method(&cfg, PermFamily::Mix64);
+
+    // A mixed batch: empty doc, short docs, and one long doc exceeding
+    // the artifact's L=128 so the chunked sigs path is exercised.
+    let g = lshbloom::corpus::CorpusGenerator::new(lshbloom::corpus::GeneratorConfig::short());
+    let mut docs: Vec<Doc> = (0..20).map(|i| g.generate(123, i)).collect();
+    docs.push(Doc { id: 20, text: String::new() });
+    let long_text: String = (0..600).map(|i| format!("tok{i} ")).collect();
+    docs.push(Doc { id: 21, text: long_text });
+
+    let a = xla.prepare_batch(&docs);
+    let b = native.preparer.prepare_batch(&docs);
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let (Prepared::Bands(xb), Prepared::Bands(yb)) = (x, y) else {
+            panic!("non-bands payload");
+        };
+        assert_eq!(xb, yb, "doc {i}: XLA and native band hashes differ");
+    }
+}
+
+#[test]
+fn xla_method_end_to_end_matches_native_verdicts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = PipelineConfig {
+        threshold: 0.5,
+        num_perms: 128,
+        ngram: 1,
+        artifacts_dir: dir.display().to_string(),
+        expected_docs: 10_000,
+        ..Default::default()
+    };
+    let corpus = lshbloom::corpus::LabeledCorpus::build(
+        lshbloom::corpus::DatasetSpec::testing(47, 80, 0.5),
+    );
+    let mut xla = lshbloom::runtime::lshbloom_method_xla(&cfg).expect("xla method");
+    let mut native = lshbloom_method(&cfg, PermFamily::Mix64);
+    let va = xla.process_all(&corpus.docs);
+    let vb = native.process_all(&corpus.docs);
+    assert_eq!(va, vb, "XLA-backed pipeline must reproduce native verdicts exactly");
+}
+
+#[test]
+fn xla_method_works_through_parallel_pipeline() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = PipelineConfig {
+        threshold: 0.5,
+        num_perms: 128,
+        artifacts_dir: dir.display().to_string(),
+        expected_docs: 10_000,
+        ..Default::default()
+    };
+    let corpus = lshbloom::corpus::LabeledCorpus::build(
+        lshbloom::corpus::DatasetSpec::testing(53, 120, 0.5),
+    );
+    let mut native = lshbloom_method(&cfg, PermFamily::Mix64);
+    let expected = native.process_all(&corpus.docs);
+
+    let mut xla = lshbloom::runtime::lshbloom_method_xla(&cfg).expect("xla method");
+    let stats = lshbloom::pipeline::run_stream(
+        &mut xla,
+        corpus.docs.iter().map(|ld| ld.doc.clone()),
+        lshbloom::pipeline::PipelineOptions { workers: 3, batch_size: 16, channel_depth: 4 },
+    );
+    assert_eq!(stats.verdicts, expected);
+}
+
+#[test]
+fn manifest_mismatch_is_a_clean_error() {
+    let Some(dir) = artifacts_dir() else { return };
+    // No artifact exists for this configuration.
+    let Err(err) = XlaBandPreparer::from_manifest(&dir, 0.31, 128, 1) else {
+        panic!("expected missing-artifact error");
+    };
+    let msg = err.to_string();
+    assert!(msg.contains("minhash_bands"), "unhelpful error: {msg}");
+}
