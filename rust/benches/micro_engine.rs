@@ -1,0 +1,160 @@
+//! Concurrent engine vs. mutex-serialized decider: ingest docs/sec at
+//! 1/2/4/8 threads on the same generated corpus.
+//!
+//! Three contenders, all consuming identical documents:
+//!
+//! * `mutex`  — the naive shared-state integration the engine replaces:
+//!   every per-document operation (MinHash + decide) runs inside one
+//!   global `Mutex<LshBloomDecider>` critical section, so throughput is
+//!   capped at one core regardless of thread count.
+//! * `mutex-prepare-out` — the seed server's fine-grained variant:
+//!   MinHash on the calling thread, only `decide` under the lock.
+//! * `engine` — `ConcurrentEngine::submit`: scoped-pool MinHash +
+//!   lock-free atomic-Bloom index, no global lock anywhere.
+//!
+//! Reports the same single-line text shape as the other `micro_*`
+//! benches plus one machine-readable JSON summary line (crate `json`
+//! module) for harness scripts.
+//!
+//! `cargo bench --bench micro_engine` (LSHBLOOM_BENCH_FAST=1 for a
+//! quick pass)
+
+use lshbloom::config::PipelineConfig;
+use lshbloom::corpus::{CorpusGenerator, Doc, GeneratorConfig};
+use lshbloom::engine::ConcurrentEngine;
+use lshbloom::json::{obj, Value};
+use lshbloom::methods::lshbloom::{decider_from_config, BandPreparer};
+use lshbloom::methods::{Decider, Preparer};
+use lshbloom::minhash::{optimal_param, MinHasher, PermFamily};
+use lshbloom::perf::bench::{fmt_count, time_once};
+use std::sync::Mutex;
+
+fn band_preparer(cfg: &PipelineConfig) -> BandPreparer {
+    let lsh = optimal_param(cfg.threshold, cfg.num_perms);
+    BandPreparer {
+        hasher: MinHasher::new(PermFamily::Mix64, lsh.rows_used(), cfg.ngram),
+        lsh,
+    }
+}
+
+/// Whole-operation critical section: throughput ceiling = one core.
+fn run_mutex_coarse(docs: &[Doc], threads: usize, cfg: &PipelineConfig) -> f64 {
+    let lsh = optimal_param(cfg.threshold, cfg.num_perms);
+    let preparer = band_preparer(cfg);
+    let decider = Mutex::new(decider_from_config(cfg, lsh));
+    let (_, wall) = time_once(|| {
+        std::thread::scope(|s| {
+            for chunk in docs.chunks(docs.len().div_ceil(threads)) {
+                let (preparer, decider) = (&preparer, &decider);
+                s.spawn(move || {
+                    for doc in chunk {
+                        let mut d = decider.lock().unwrap();
+                        let prepared = preparer.prepare_batch(std::slice::from_ref(doc));
+                        d.decide(&prepared[0]);
+                    }
+                });
+            }
+        });
+    });
+    docs.len() as f64 / wall.as_secs_f64()
+}
+
+/// Seed-server shape: MinHash parallel, only decide under the lock.
+fn run_mutex_fine(docs: &[Doc], threads: usize, cfg: &PipelineConfig) -> f64 {
+    let lsh = optimal_param(cfg.threshold, cfg.num_perms);
+    let preparer = band_preparer(cfg);
+    let decider = Mutex::new(decider_from_config(cfg, lsh));
+    let (_, wall) = time_once(|| {
+        std::thread::scope(|s| {
+            for chunk in docs.chunks(docs.len().div_ceil(threads)) {
+                let (preparer, decider) = (&preparer, &decider);
+                s.spawn(move || {
+                    for doc in chunk {
+                        let prepared = preparer.prepare_batch(std::slice::from_ref(doc));
+                        decider.lock().unwrap().decide(&prepared[0]);
+                    }
+                });
+            }
+        });
+    });
+    docs.len() as f64 / wall.as_secs_f64()
+}
+
+/// Lock-free engine, batched submits sized to keep the pool saturated.
+fn run_engine(docs: &[Doc], threads: usize, cfg: &PipelineConfig) -> f64 {
+    let mut cfg = cfg.clone();
+    cfg.workers = threads;
+    let engine = ConcurrentEngine::from_config(&cfg);
+    let super_batch = (threads * 128).max(256);
+    let (_, wall) = time_once(|| {
+        for chunk in docs.chunks(super_batch) {
+            engine.submit(chunk.to_vec());
+        }
+    });
+    docs.len() as f64 / wall.as_secs_f64()
+}
+
+fn main() {
+    println!("# concurrent engine vs mutex-serialized decider (docs/sec)\n");
+    let fast = std::env::var("LSHBLOOM_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let n: usize = if fast { 600 } else { 4_000 };
+
+    // Generated corpus with ~20% exact twins so the duplicate path is hot.
+    let g = CorpusGenerator::new(GeneratorConfig::short());
+    let mut docs: Vec<Doc> = Vec::with_capacity(n);
+    for i in 0..n as u64 {
+        if i % 5 == 4 {
+            let prev = docs[i as usize - 3].clone();
+            docs.push(Doc { id: i, ..prev });
+        } else {
+            docs.push(g.generate(0xE17, i));
+        }
+    }
+
+    let cfg = PipelineConfig {
+        threshold: 0.5,
+        num_perms: 128,
+        p_effective: 1e-10,
+        expected_docs: n as u64,
+        ..Default::default()
+    };
+
+    let mut results: Vec<Value> = Vec::new();
+    for &threads in &[1usize, 2, 4, 8] {
+        let mutex = run_mutex_coarse(&docs, threads, &cfg);
+        let fine = run_mutex_fine(&docs, threads, &cfg);
+        let engine = run_engine(&docs, threads, &cfg);
+        println!(
+            "{:<44} {:>12}/s",
+            format!("ingest/mutex/threads={threads}"),
+            fmt_count(mutex)
+        );
+        println!(
+            "{:<44} {:>12}/s",
+            format!("ingest/mutex-prepare-out/threads={threads}"),
+            fmt_count(fine)
+        );
+        println!(
+            "{:<44} {:>12}/s   ({:.1}x vs mutex, {:.1}x vs prepare-out)",
+            format!("ingest/engine/threads={threads}"),
+            fmt_count(engine),
+            engine / mutex,
+            engine / fine
+        );
+        println!();
+        results.push(obj(vec![
+            ("threads", Value::u64(threads as u64)),
+            ("mutex_docs_per_sec", Value::num(mutex)),
+            ("mutex_prepare_out_docs_per_sec", Value::num(fine)),
+            ("engine_docs_per_sec", Value::num(engine)),
+            ("speedup_vs_mutex", Value::num(engine / mutex)),
+        ]));
+    }
+
+    let summary = obj(vec![
+        ("bench", Value::str("micro_engine")),
+        ("docs", Value::u64(n as u64)),
+        ("results", Value::Arr(results)),
+    ]);
+    println!("{}", summary.to_json());
+}

@@ -15,6 +15,18 @@ use crate::rng::mix64;
 use std::io::{Read, Write};
 use std::path::Path;
 
+/// Kirsch–Mitzenmacher probe pair for a key: `(h1, h2)` with `h2` forced
+/// odd so every probe stride visits distinct positions. Shared by
+/// [`BloomFilter`] and [`crate::engine::AtomicBloomFilter`] so both probe
+/// the exact same bit positions for a given key and geometry — the
+/// design-bound FP math (§4.3/§4.5) holds identically for either.
+#[inline(always)]
+pub fn probe_pair(key: u64) -> (u64, u64) {
+    let h1 = mix64(key);
+    let h2 = mix64(key ^ 0x9E37_79B9_7F4A_7C15) | 1;
+    (h1, h2)
+}
+
 /// Backing bit storage.
 pub enum Bits {
     Heap(Vec<u64>),
@@ -67,6 +79,20 @@ impl BloomFilter {
         Self::new(BloomParams::for_capacity(n, p))
     }
 
+    /// Heap-backed filter from an existing word array (e.g. a snapshot of
+    /// an [`crate::engine::AtomicBloomFilter`] being frozen for
+    /// persistence). `words` must match the geometry in `params`.
+    pub(crate) fn from_raw_parts(
+        words: Vec<u64>,
+        hashes: u32,
+        inserted: u64,
+        params: BloomParams,
+    ) -> Self {
+        debug_assert_eq!(words.len() as u64, params.bits.div_ceil(64));
+        let m = words.len() as u64 * 64;
+        Self { bits: Bits::Heap(words), m, k: hashes, inserted, params }
+    }
+
     /// Filter backed by an mmap-ed file (e.g. under `/dev/shm`).
     pub fn new_shm(params: BloomParams, path: &Path) -> Result<Self> {
         let words = params.bits.div_ceil(64) as usize;
@@ -76,11 +102,7 @@ impl BloomFilter {
 
     #[inline(always)]
     fn probes(&self, key: u64) -> (u64, u64) {
-        // Two independent mixes; h2 forced odd so all probe strides hit
-        // distinct positions for power-of-two-ish m.
-        let h1 = mix64(key);
-        let h2 = mix64(key ^ 0x9E37_79B9_7F4A_7C15) | 1;
-        (h1, h2)
+        probe_pair(key)
     }
 
     /// Insert a key. Returns `true` if the key was (possibly) already

@@ -16,7 +16,7 @@ pub mod scalable;
 pub mod shm;
 
 pub use blocked::BlockedBloomFilter;
-pub use filter::BloomFilter;
+pub use filter::{probe_pair, BloomFilter};
 pub use params::{optimal_bits, optimal_hashes, BloomParams};
 pub use scalable::ScalableBloomFilter;
 pub use shm::ShmBitArray;

@@ -36,6 +36,31 @@ impl MinHashBackend {
     }
 }
 
+/// Which index engine serves insert/query traffic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineMode {
+    /// Sequential decider behind a mutex — exact stream-order verdicts,
+    /// all methods/backends. Default.
+    Classic,
+    /// Lock-free atomic-Bloom engine (`crate::engine`) — scales inserts
+    /// and queries with cores; LSHBloom only. See the `engine` module
+    /// docs for the linearizability caveat.
+    Concurrent,
+}
+
+impl EngineMode {
+    /// Parse from a CLI/config token.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "classic" => Ok(Self::Classic),
+            "concurrent" => Ok(Self::Concurrent),
+            _ => Err(Error::Config(format!(
+                "unknown engine '{s}' (classic|concurrent)"
+            ))),
+        }
+    }
+}
+
 /// Full configuration for a deduplication run.
 #[derive(Clone, Debug)]
 pub struct PipelineConfig {
@@ -64,6 +89,9 @@ pub struct PipelineConfig {
     pub blocked_bloom: bool,
     /// Bounded-channel depth between pipeline stages (backpressure).
     pub channel_depth: usize,
+    /// Index engine: classic mutex-serialized decider or the lock-free
+    /// concurrent engine.
+    pub engine: EngineMode,
 }
 
 impl Default for PipelineConfig {
@@ -81,6 +109,7 @@ impl Default for PipelineConfig {
             use_shm: false,
             blocked_bloom: false,
             channel_depth: 64,
+            engine: EngineMode::Classic,
         }
     }
 }
@@ -164,6 +193,7 @@ impl PipelineConfig {
                 "channel_depth" | "pipeline.channel_depth" => {
                     self.channel_depth = v.parse().map_err(|_| bad("channel_depth"))?
                 }
+                "engine" | "pipeline.engine" => self.engine = EngineMode::parse(v)?,
                 other => return Err(Error::Config(format!("unknown config key '{other}'"))),
             }
         }
@@ -253,5 +283,16 @@ mod tests {
     fn backend_parse() {
         assert_eq!(MinHashBackend::parse("xla").unwrap(), MinHashBackend::Xla);
         assert!(MinHashBackend::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn engine_parse_and_apply() {
+        assert_eq!(EngineMode::parse("classic").unwrap(), EngineMode::Classic);
+        assert_eq!(EngineMode::parse("concurrent").unwrap(), EngineMode::Concurrent);
+        assert!(EngineMode::parse("turbo").is_err());
+        let mut cfg = PipelineConfig::default();
+        assert_eq!(cfg.engine, EngineMode::Classic);
+        cfg.apply(&parse_toml_subset("[pipeline]\nengine = concurrent").unwrap()).unwrap();
+        assert_eq!(cfg.engine, EngineMode::Concurrent);
     }
 }

@@ -1,0 +1,245 @@
+//! Lock-free Bloom filter backed by `Vec<AtomicU64>`.
+//!
+//! Insertion is `fetch_or` per probed word; queries are relaxed loads.
+//! Probe positions come from the same Kirsch–Mitzenmacher derivation as
+//! [`crate::bloom::BloomFilter`] ([`crate::bloom::probe_pair`]), and the
+//! geometry is the same [`BloomParams`], so the design-bound FP math
+//! (§4.3/§4.5) holds unchanged: the filter sets exactly the same bits the
+//! sequential filter would for the same key stream.
+//!
+//! ## Memory-ordering contract
+//!
+//! All atomics use `Relaxed` ordering. That is sufficient for the Bloom
+//! invariant — a set bit is never unset, so any load that observes the
+//! `fetch_or`'s effect observes a superset of the bits the inserter set —
+//! but it means a probe racing an in-flight insert may see only some of
+//! that insert's bits. Consequences:
+//!
+//! * **No false negatives after synchronization.** Once the inserting
+//!   thread happens-before the querying thread (thread join, channel
+//!   send, or any other edge), `contains` is guaranteed `true` for the
+//!   inserted key.
+//! * **Racy duplicate verdicts.** Two threads concurrently inserting the
+//!   same key can *both* observe "not previously present" (each sets a
+//!   disjoint subset of probe words first). The engine layer
+//!   ([`super::batch`]) reconciles such twins within a batch; across
+//!   unsynchronized callers the race is documented behavior.
+
+use crate::bloom::{probe_pair, BloomFilter, BloomParams};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A lock-free Bloom filter sharing geometry and probe derivation with
+/// [`BloomFilter`].
+pub struct AtomicBloomFilter {
+    words: Vec<AtomicU64>,
+    /// Bit-array length (= params.bits rounded up to a word multiple).
+    m: u64,
+    k: u32,
+    inserted: AtomicU64,
+    params: BloomParams,
+}
+
+impl AtomicBloomFilter {
+    /// Filter with the given geometry.
+    pub fn new(params: BloomParams) -> Self {
+        let words = params.bits.div_ceil(64) as usize;
+        let mut v = Vec::with_capacity(words);
+        v.resize_with(words, || AtomicU64::new(0));
+        Self {
+            words: v,
+            m: words as u64 * 64,
+            k: params.hashes,
+            inserted: AtomicU64::new(0),
+            params,
+        }
+    }
+
+    /// Filter for `n` planned elements at rate `p`.
+    pub fn with_capacity(n: u64, p: f64) -> Self {
+        Self::new(BloomParams::for_capacity(n, p))
+    }
+
+    /// Insert a key (lock-free, callable from any number of threads).
+    /// Returns `true` if every probed bit was already set — i.e. the key
+    /// was (possibly) already present. See the module docs for what this
+    /// verdict means under concurrency.
+    #[inline]
+    pub fn insert(&self, key: u64) -> bool {
+        let (h1, h2) = probe_pair(key);
+        let m = self.m;
+        let mut all_set = true;
+        let mut h = h1;
+        for _ in 0..self.k {
+            let bit = h % m;
+            let (w, mask) = (bit / 64, 1u64 << (bit % 64));
+            let prev = self.words[w as usize].fetch_or(mask, Ordering::Relaxed);
+            all_set &= prev & mask != 0;
+            h = h.wrapping_add(h2);
+        }
+        self.inserted.fetch_add(1, Ordering::Relaxed);
+        all_set
+    }
+
+    /// Query a key: `true` means "possibly present" (no false negatives
+    /// for inserts that happened-before this call).
+    #[inline]
+    pub fn contains(&self, key: u64) -> bool {
+        let (h1, h2) = probe_pair(key);
+        let m = self.m;
+        let mut h = h1;
+        for _ in 0..self.k {
+            let bit = h % m;
+            if self.words[(bit / 64) as usize].load(Ordering::Relaxed) & (1u64 << (bit % 64)) == 0
+            {
+                return false;
+            }
+            h = h.wrapping_add(h2);
+        }
+        true
+    }
+
+    /// Number of bits set (popcount) — fill diagnostics.
+    pub fn ones(&self) -> u64 {
+        self.words
+            .iter()
+            .map(|w| w.load(Ordering::Relaxed).count_ones() as u64)
+            .sum()
+    }
+
+    /// Fraction of bits set.
+    pub fn fill_ratio(&self) -> f64 {
+        self.ones() as f64 / self.m as f64
+    }
+
+    /// Elements inserted so far (across all threads).
+    pub fn inserted(&self) -> u64 {
+        self.inserted.load(Ordering::Relaxed)
+    }
+
+    /// Geometry.
+    pub fn params(&self) -> BloomParams {
+        self.params
+    }
+
+    /// Bytes of backing storage.
+    pub fn size_bytes(&self) -> u64 {
+        (self.words.len() * 8) as u64
+    }
+
+    /// Convert into a sequential heap-backed [`BloomFilter`] (for
+    /// persistence via `BloomFilter::save`). Requires exclusive ownership,
+    /// which is itself the synchronization point: the snapshot contains
+    /// every insert that happened before the caller obtained `self`.
+    pub fn into_filter(self) -> BloomFilter {
+        let inserted = self.inserted.load(Ordering::Relaxed);
+        let words: Vec<u64> = self.words.into_iter().map(|w| w.into_inner()).collect();
+        BloomFilter::from_raw_parts(words, self.k, inserted, self.params)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn no_false_negatives_single_thread() {
+        let f = AtomicBloomFilter::with_capacity(10_000, 1e-4);
+        let mut rng = Xoshiro256pp::seeded(1);
+        let keys: Vec<u64> = (0..10_000).map(|_| rng.next_u64()).collect();
+        for &k in &keys {
+            f.insert(k);
+        }
+        for &k in &keys {
+            assert!(f.contains(k), "false negative for {k}");
+        }
+    }
+
+    #[test]
+    fn bit_identical_to_sequential_filter() {
+        // Same keys, same geometry -> exactly the same bit pattern.
+        let params = BloomParams::for_capacity(5_000, 1e-5);
+        let atomic = AtomicBloomFilter::new(params);
+        let mut classic = crate::bloom::BloomFilter::new(params);
+        let mut rng = Xoshiro256pp::seeded(7);
+        for _ in 0..5_000 {
+            let k = rng.next_u64();
+            atomic.insert(k);
+            classic.insert(k);
+        }
+        assert_eq!(atomic.ones(), classic.ones());
+        // Probe agreement on fresh keys (both FP or both clean).
+        for _ in 0..50_000 {
+            let k = rng.next_u64();
+            assert_eq!(atomic.contains(k), classic.contains(k));
+        }
+    }
+
+    #[test]
+    fn insert_reports_prior_presence() {
+        let f = AtomicBloomFilter::with_capacity(1000, 1e-6);
+        assert!(!f.insert(42), "first insert must report absent");
+        assert!(f.insert(42), "second insert must report present");
+    }
+
+    #[test]
+    fn fp_rate_within_design_bound() {
+        let p = 1e-3;
+        let n = 50_000u64;
+        let f = AtomicBloomFilter::with_capacity(n, p);
+        let mut rng = Xoshiro256pp::seeded(2);
+        for _ in 0..n {
+            f.insert(rng.next_u64());
+        }
+        let trials = 200_000;
+        let mut fps = 0u64;
+        for _ in 0..trials {
+            if f.contains(rng.next_u64()) {
+                fps += 1;
+            }
+        }
+        let observed = fps as f64 / trials as f64;
+        assert!(observed < p * 3.0, "observed FP {observed} vs design {p}");
+    }
+
+    #[test]
+    fn concurrent_inserts_no_false_negatives() {
+        // 8 threads hammer overlapping key ranges; after join, every key
+        // must be present (the Bloom no-false-negative invariant must
+        // survive contention on the same words).
+        let f = AtomicBloomFilter::with_capacity(20_000, 1e-6);
+        std::thread::scope(|s| {
+            for t in 0..8u64 {
+                let f = &f;
+                s.spawn(move || {
+                    let mut rng = Xoshiro256pp::seeded(100 + t % 4); // pairs share keys
+                    for _ in 0..5_000 {
+                        f.insert(rng.next_u64());
+                    }
+                });
+            }
+        });
+        for t in 0..4u64 {
+            let mut rng = Xoshiro256pp::seeded(100 + t);
+            for _ in 0..5_000 {
+                let k = rng.next_u64();
+                assert!(f.contains(k), "lost key {k} under contention");
+            }
+        }
+    }
+
+    #[test]
+    fn into_filter_preserves_bits() {
+        let f = AtomicBloomFilter::with_capacity(1000, 1e-4);
+        for i in 0..1000u64 {
+            f.insert(i * 31);
+        }
+        let (ones, inserted) = (f.ones(), f.inserted());
+        let classic = f.into_filter();
+        assert_eq!(classic.ones(), ones);
+        assert_eq!(classic.inserted(), inserted);
+        for i in 0..1000u64 {
+            assert!(classic.contains(i * 31));
+        }
+    }
+}

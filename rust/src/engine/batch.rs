@@ -1,0 +1,336 @@
+//! Batched multi-threaded ingest: `submit(Vec<Doc>) -> Vec<Decision>`.
+//!
+//! A [`ConcurrentEngine`] owns a band preparer and a
+//! [`ConcurrentLshBloomIndex`] and processes document batches with **no
+//! global lock**:
+//!
+//! 1. **Parallel prepare + probe** — a scoped worker pool (the
+//!    `std::thread::scope` idiom from `pipeline::orchestrator`) MinHashes
+//!    each document and probes the lock-free index *read-only*, yielding
+//!    a pre-batch duplicate verdict per document.
+//! 2. **Intra-batch reconcile (sequential, cheap)** — concurrent twins
+//!    inside one batch cannot see each other through the filter probes of
+//!    step 1 (they all ran against the pre-batch snapshot), so a single
+//!    O(docs × bands) hash-set pass replays the batch in submission
+//!    order: a document is a duplicate iff the pre-batch probe said so
+//!    *or* an earlier document in the batch shares a band hash. This is
+//!    exactly the sequential decider's in-batch collision rule (an exact
+//!    band-hash match always sets identical filter bits), minus the
+//!    ~`p_effective`-probability incremental false positives a partially
+//!    filled filter could add — the engine is never *less* accurate.
+//! 3. **Parallel insert** — every document's band hashes are folded into
+//!    the atomic filters via `fetch_or` across the worker pool.
+//!
+//! Because step 2 runs in submission order, a batch's survivor set is
+//! deterministic and matches the sequential [`crate::methods::Decider`]
+//! (enforced by `rust/tests/engine_equivalence.rs`).
+//!
+//! ## When to prefer which path
+//!
+//! * **Classic (`Mutex<LshBloomDecider>` / `pipeline::run_stream`)** —
+//!   exact stream-order semantics, supports every method (not just
+//!   LSHBloom), and the blocked-filter layout. Right for evaluation runs
+//!   where verdict order must match the paper's sequential definition
+//!   bit-for-bit, including in-batch filter false positives.
+//! * **Concurrent engine** — wins whenever multiple threads contend for
+//!   the index: the batched `submit` path scales prepare *and* decide
+//!   with cores, and the per-document [`ConcurrentEngine::insert_one`]
+//!   path lets service connections ingest with zero queueing (accepting
+//!   the same-microsecond-twin caveat documented in
+//!   [`super::concurrent_index`]).
+
+use super::concurrent_index::ConcurrentLshBloomIndex;
+use crate::config::PipelineConfig;
+use crate::corpus::Doc;
+use crate::index::lshbloom::LshBloomConfig;
+use crate::methods::lshbloom::BandPreparer;
+use crate::methods::{Prepared, Preparer};
+use crate::minhash::{optimal_param, MinHasher, PermFamily};
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Verdict for one submitted document.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Decision {
+    /// The document's `Doc::id`.
+    pub id: u64,
+    /// `true` = duplicate of earlier content (this batch or any before).
+    pub duplicate: bool,
+}
+
+/// Documents per work unit handed to a pool worker. Small enough to
+/// balance skewed document lengths, large enough to amortize the cursor
+/// fetch_add and the per-chunk result push.
+const CHUNK: usize = 32;
+
+/// Run `work` over [`CHUNK`]-sized index ranges of `0..n` on up to
+/// `workers` scoped threads; ranges are claimed off an atomic cursor, so
+/// skewed per-range costs self-balance.
+fn for_chunks<F: Fn(std::ops::Range<usize>) + Sync>(workers: usize, n: usize, work: F) {
+    if n == 0 {
+        return;
+    }
+    let threads = workers.min(n.div_ceil(CHUNK)).max(1);
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let start = cursor.fetch_add(CHUNK, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                work(start..n.min(start + CHUNK));
+            });
+        }
+    });
+}
+
+/// Lock-free deduplication engine: band preparer + atomic Bloom index.
+pub struct ConcurrentEngine {
+    preparer: Arc<dyn Preparer>,
+    index: ConcurrentLshBloomIndex,
+    workers: usize,
+    docs: AtomicU64,
+    duplicates: AtomicU64,
+}
+
+impl ConcurrentEngine {
+    /// Build from the pipeline config (native Mix64 backend, same band
+    /// geometry derivation as `methods::lshbloom`).
+    pub fn from_config(cfg: &PipelineConfig) -> Self {
+        let lsh = optimal_param(cfg.threshold, cfg.num_perms);
+        let preparer = BandPreparer {
+            hasher: MinHasher::new(PermFamily::Mix64, lsh.rows_used(), cfg.ngram),
+            lsh,
+        };
+        let index_cfg = LshBloomConfig::new(lsh, cfg.p_effective, cfg.expected_docs);
+        Self::with_preparer(Arc::new(preparer), index_cfg, cfg.effective_workers())
+    }
+
+    /// Build from an explicit band-producing preparer (e.g. the XLA
+    /// artifact preparer) and index config.
+    pub fn with_preparer(
+        preparer: Arc<dyn Preparer>,
+        index_cfg: LshBloomConfig,
+        workers: usize,
+    ) -> Self {
+        Self {
+            preparer,
+            index: ConcurrentLshBloomIndex::new(index_cfg),
+            workers: workers.max(1),
+            docs: AtomicU64::new(0),
+            duplicates: AtomicU64::new(0),
+        }
+    }
+
+    /// The underlying lock-free index.
+    pub fn index(&self) -> &ConcurrentLshBloomIndex {
+        &self.index
+    }
+
+    /// Worker threads used per `submit` call.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// (documents processed, duplicates flagged) across all operations.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.docs.load(Ordering::Relaxed), self.duplicates.load(Ordering::Relaxed))
+    }
+
+    /// Index footprint in bytes (static: sized by capacity at build).
+    pub fn disk_bytes(&self) -> u64 {
+        self.index.disk_bytes()
+    }
+
+    /// Deduplicate one batch. Verdicts come back in submission order and
+    /// are deterministic for a deterministic preparer (see module docs).
+    pub fn submit(&self, docs: Vec<Doc>) -> Vec<Decision> {
+        let n = docs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+
+        // Phase 1: parallel prepare + read-only probe of the pre-batch
+        // filter state. Workers claim CHUNK-sized ranges off an atomic
+        // cursor and push (start, results) pairs; ranges are disjoint so
+        // the only shared write is the per-chunk Vec push.
+        let prepared: Vec<(Vec<u64>, bool)> = {
+            let slots: Mutex<Vec<(usize, Vec<(Vec<u64>, bool)>)>> =
+                Mutex::new(Vec::with_capacity(n.div_ceil(CHUNK)));
+            for_chunks(self.workers, n, |range| {
+                let start = range.start;
+                let batch = &docs[range];
+                let chunk: Vec<(Vec<u64>, bool)> = self
+                    .preparer
+                    .prepare_batch(batch)
+                    .into_iter()
+                    .map(|prep| {
+                        let Prepared::Bands(bands) = prep else {
+                            panic!("ConcurrentEngine requires a band-producing preparer");
+                        };
+                        let pre_dup = self.index.query(&bands);
+                        (bands, pre_dup)
+                    })
+                    .collect();
+                slots.lock().unwrap().push((start, chunk));
+            });
+            let mut chunks = slots.into_inner().unwrap();
+            chunks.sort_unstable_by_key(|(start, _)| *start);
+            debug_assert_eq!(chunks.iter().map(|(_, c)| c.len()).sum::<usize>(), n);
+            chunks.into_iter().flat_map(|(_, c)| c).collect()
+        };
+
+        // Phase 2: sequential intra-batch reconcile. Catches twins the
+        // parallel probes could not see (both probed pre-batch state).
+        let mut seen: HashSet<(u32, u64)> =
+            HashSet::with_capacity(n * self.index.num_bands());
+        let mut decisions = Vec::with_capacity(n);
+        let mut duplicates = 0u64;
+        for (doc, (bands, pre_dup)) in docs.iter().zip(&prepared) {
+            let dup = *pre_dup
+                || bands
+                    .iter()
+                    .enumerate()
+                    .any(|(band, &h)| seen.contains(&(band as u32, h)));
+            // Every document's bands enter the in-batch set — duplicates
+            // too, matching the sequential decider, which inserts the
+            // band hashes of flagged documents as well.
+            for (band, &h) in bands.iter().enumerate() {
+                seen.insert((band as u32, h));
+            }
+            duplicates += dup as u64;
+            decisions.push(Decision { id: doc.id, duplicate: dup });
+        }
+
+        // Phase 3: parallel lock-free insert of every document's bands.
+        for_chunks(self.workers, n, |range| {
+            for (bands, _) in &prepared[range] {
+                self.index.insert_if_new_shared(bands);
+            }
+        });
+
+        self.docs.fetch_add(n as u64, Ordering::Relaxed);
+        self.duplicates.fetch_add(duplicates, Ordering::Relaxed);
+        decisions
+    }
+
+    /// Single-document query+insert on the caller's thread, fully
+    /// lock-free — the service fast path. Subject to the concurrent-twin
+    /// caveat ([`super::concurrent_index`]); use [`Self::submit`] when
+    /// batch-internal exactness matters.
+    pub fn insert_one(&self, doc: &Doc) -> bool {
+        let prepared = self.preparer.prepare_batch(std::slice::from_ref(doc));
+        let Prepared::Bands(ref bands) = prepared[0] else {
+            panic!("ConcurrentEngine requires a band-producing preparer");
+        };
+        let dup = self.index.insert_if_new_shared(bands);
+        self.docs.fetch_add(1, Ordering::Relaxed);
+        self.duplicates.fetch_add(dup as u64, Ordering::Relaxed);
+        dup
+    }
+
+    /// Single-document query (no insert, no stats mutation).
+    pub fn query_one(&self, doc: &Doc) -> bool {
+        let prepared = self.preparer.prepare_batch(std::slice::from_ref(doc));
+        let Prepared::Bands(ref bands) = prepared[0] else {
+            panic!("ConcurrentEngine requires a band-producing preparer");
+        };
+        self.index.query(bands)
+    }
+
+    /// Freeze into a persistable sequential index snapshot.
+    pub fn into_index(self) -> crate::index::LshBloomIndex {
+        self.index.into_sequential()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{DatasetSpec, LabeledCorpus};
+
+    fn cfg() -> PipelineConfig {
+        PipelineConfig {
+            num_perms: 128,
+            threshold: 0.5,
+            expected_docs: 10_000,
+            workers: 4,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn exact_duplicates_within_one_batch_are_reconciled() {
+        let engine = ConcurrentEngine::from_config(&cfg());
+        let a = Doc { id: 0, text: "the quick brown fox jumps over the lazy dog".into() };
+        let b = a.clone();
+        let c = Doc { id: 2, text: "completely unrelated content with other words".into() };
+        let decisions = engine.submit(vec![a, b, c]);
+        assert_eq!(
+            decisions.iter().map(|d| d.duplicate).collect::<Vec<_>>(),
+            vec![false, true, false],
+            "twin in the same batch must be caught by the reconcile pass"
+        );
+        let (docs, dups) = engine.stats();
+        assert_eq!((docs, dups), (3, 1));
+    }
+
+    #[test]
+    fn duplicates_across_batches_are_caught_by_the_filter() {
+        let engine = ConcurrentEngine::from_config(&cfg());
+        let doc = Doc { id: 0, text: "cross batch duplicate detection test".into() };
+        let first = engine.submit(vec![doc.clone()]);
+        assert!(!first[0].duplicate);
+        let second = engine.submit(vec![Doc { id: 1, ..doc }]);
+        assert!(second[0].duplicate);
+    }
+
+    #[test]
+    fn empty_batch() {
+        let engine = ConcurrentEngine::from_config(&cfg());
+        assert!(engine.submit(Vec::new()).is_empty());
+        assert_eq!(engine.stats(), (0, 0));
+    }
+
+    #[test]
+    fn insert_one_matches_submit_semantics() {
+        let engine = ConcurrentEngine::from_config(&cfg());
+        let doc = Doc { id: 7, text: "single document fast path".into() };
+        assert!(!engine.query_one(&doc));
+        assert!(!engine.insert_one(&doc));
+        assert!(engine.query_one(&doc));
+        assert!(engine.insert_one(&doc));
+    }
+
+    #[test]
+    fn batched_verdicts_match_sequential_method() {
+        let corpus = LabeledCorpus::build(DatasetSpec::testing(13, 300, 0.5));
+        let mut seq =
+            crate::methods::lshbloom::lshbloom_method(&cfg(), PermFamily::Mix64);
+        let expected = seq.process_all(&corpus.docs);
+        for batch_size in [1usize, 7, 64, 300] {
+            let engine = ConcurrentEngine::from_config(&cfg());
+            let mut verdicts = Vec::new();
+            for chunk in corpus.docs.chunks(batch_size) {
+                let batch: Vec<Doc> = chunk.iter().map(|ld| ld.doc.clone()).collect();
+                verdicts.extend(engine.submit(batch).into_iter().map(|d| d.duplicate));
+            }
+            assert_eq!(verdicts, expected, "batch_size={batch_size}");
+        }
+    }
+
+    #[test]
+    fn into_index_snapshot_queries_like_live_engine() {
+        let engine = ConcurrentEngine::from_config(&cfg());
+        let docs: Vec<Doc> = (0..50)
+            .map(|i| Doc { id: i, text: format!("snapshot document number {i} content") })
+            .collect();
+        engine.submit(docs.clone());
+        let frozen = engine.into_index();
+        assert_eq!(frozen.len(), 50);
+        use crate::index::BandIndex as _;
+        assert!(frozen.disk_bytes() > 0);
+    }
+}

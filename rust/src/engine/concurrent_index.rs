@@ -1,0 +1,225 @@
+//! Lock-free LSHBloom index: one [`AtomicBloomFilter`] per band.
+//!
+//! The structural twin of [`crate::index::LshBloomIndex`] — same band
+//! geometry, same per-filter rate derivation (`p = 1-(1-p_eff)^(1/b)`,
+//! §4.3), same single-pass insert-if-new semantics — but every operation
+//! takes `&self`, so any number of threads insert and query without a
+//! lock.
+//!
+//! ## Linearizability caveat
+//!
+//! `insert_if_new` is *not* linearizable across threads: two concurrent
+//! inserts of near-identical documents can both return `false` ("new")
+//! because each observes the filter before the other's bits land. Within
+//! one [`super::batch::ConcurrentEngine::submit`] call this is repaired
+//! by the intra-batch reconcile pass; callers driving this index directly
+//! from unsynchronized threads (e.g. the service's per-connection path)
+//! accept the race: the duplicate pair survives, which only costs a tiny
+//! amount of recall for twins that arrive in the same microsecond —
+//! never a false positive, and never a false negative once the inserting
+//! thread synchronizes with the querier.
+
+use super::atomic_bloom::AtomicBloomFilter;
+use crate::bloom::BloomParams;
+use crate::index::lshbloom::LshBloomConfig;
+use crate::index::BandIndex;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Lock-free per-band Bloom index.
+pub struct ConcurrentLshBloomIndex {
+    filters: Vec<AtomicBloomFilter>,
+    config: LshBloomConfig,
+    inserted: AtomicU64,
+}
+
+impl ConcurrentLshBloomIndex {
+    /// Build from the same config the sequential index uses. The
+    /// `blocked` flag is ignored (atomic filters are always the classic
+    /// layout; blocking is a cache optimization for the sequential path).
+    pub fn new(config: LshBloomConfig) -> Self {
+        let p = BloomParams::per_filter_rate(config.p_effective, config.lsh.num_bands);
+        let params = BloomParams::for_capacity(config.expected_docs.max(1), p);
+        let filters = (0..config.lsh.num_bands)
+            .map(|_| AtomicBloomFilter::new(params))
+            .collect();
+        Self { filters, config, inserted: AtomicU64::new(0) }
+    }
+
+    /// The configuration this index was built with.
+    pub fn config(&self) -> LshBloomConfig {
+        self.config
+    }
+
+    /// Query without inserting (lock-free). `true` = any band collides.
+    pub fn query(&self, band_hashes: &[u64]) -> bool {
+        debug_assert_eq!(band_hashes.len(), self.filters.len());
+        self.filters.iter().zip(band_hashes).any(|(f, &h)| f.contains(h))
+    }
+
+    /// Query + insert in one lock-free pass; `&self`, callable from any
+    /// thread. Returns `true` if every probed bit of some band was
+    /// already set (duplicate). Subject to the module-level
+    /// linearizability caveat for concurrent twins.
+    pub fn insert_if_new_shared(&self, band_hashes: &[u64]) -> bool {
+        debug_assert_eq!(band_hashes.len(), self.filters.len());
+        let mut dup = false;
+        for (f, &h) in self.filters.iter().zip(band_hashes) {
+            dup |= f.insert(h);
+        }
+        self.inserted.fetch_add(1, Ordering::Relaxed);
+        dup
+    }
+
+    /// Fill ratio of each filter (diagnostics).
+    pub fn fill_ratios(&self) -> Vec<f64> {
+        self.filters.iter().map(|f| f.fill_ratio()).collect()
+    }
+
+    /// Number of bands.
+    pub fn num_bands(&self) -> usize {
+        self.filters.len()
+    }
+
+    /// Documents inserted so far.
+    pub fn len(&self) -> u64 {
+        self.inserted.load(Ordering::Relaxed)
+    }
+
+    /// True when nothing has been inserted.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes of backing storage (static: fixed by capacity, not docs).
+    pub fn disk_bytes(&self) -> u64 {
+        self.filters.iter().map(|f| f.size_bytes()).sum()
+    }
+
+    /// Freeze into a persistable sequential [`crate::index::LshBloomIndex`]
+    /// snapshot. Consumes the index; exclusive ownership is the
+    /// synchronization point, so the snapshot holds every insert that
+    /// happened before the caller obtained `self`.
+    pub fn into_sequential(self) -> crate::index::LshBloomIndex {
+        let inserted = self.inserted.load(Ordering::Relaxed);
+        let filters = self
+            .filters
+            .into_iter()
+            .map(|f| f.into_filter())
+            .collect::<Vec<_>>();
+        crate::index::LshBloomIndex::from_filters(filters, self.config, inserted)
+    }
+}
+
+// The trait's `insert_if_new` takes `&mut self`; routing it through the
+// shared-path method lets the concurrent index drop into any code written
+// against `BandIndex` (tests, the shard pipeline) at zero cost.
+impl BandIndex for ConcurrentLshBloomIndex {
+    fn query(&self, band_hashes: &[u64]) -> bool {
+        ConcurrentLshBloomIndex::query(self, band_hashes)
+    }
+
+    fn insert_if_new(&mut self, band_hashes: &[u64]) -> bool {
+        self.insert_if_new_shared(band_hashes)
+    }
+
+    fn num_bands(&self) -> usize {
+        ConcurrentLshBloomIndex::num_bands(self)
+    }
+
+    fn len(&self) -> u64 {
+        ConcurrentLshBloomIndex::len(self)
+    }
+
+    fn disk_bytes(&self) -> u64 {
+        ConcurrentLshBloomIndex::disk_bytes(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::minhash::LshParams;
+    use crate::rng::Xoshiro256pp;
+
+    fn cfg(bands: usize, rows: usize, n: u64) -> LshBloomConfig {
+        LshBloomConfig {
+            lsh: LshParams { num_bands: bands, rows_per_band: rows },
+            p_effective: 1e-8,
+            expected_docs: n,
+            blocked: false,
+        }
+    }
+
+    fn random_bands(rng: &mut Xoshiro256pp, b: usize) -> Vec<u64> {
+        (0..b).map(|_| rng.next_u64()).collect()
+    }
+
+    #[test]
+    fn matches_sequential_index_verdicts() {
+        let config = cfg(9, 13, 10_000);
+        let concurrent = ConcurrentLshBloomIndex::new(config);
+        let mut sequential = crate::index::LshBloomIndex::new(config);
+        let mut rng = Xoshiro256pp::seeded(11);
+        for _ in 0..5_000 {
+            let bands = random_bands(&mut rng, 9);
+            assert_eq!(
+                concurrent.insert_if_new_shared(&bands),
+                sequential.insert_if_new(&bands),
+            );
+        }
+        for _ in 0..20_000 {
+            let bands = random_bands(&mut rng, 9);
+            assert_eq!(concurrent.query(&bands), sequential.query(&bands));
+        }
+        assert_eq!(concurrent.disk_bytes(), sequential.disk_bytes());
+        assert_eq!(concurrent.len(), sequential.len());
+    }
+
+    #[test]
+    fn single_band_match_is_duplicate() {
+        let idx = ConcurrentLshBloomIndex::new(cfg(4, 2, 1000));
+        idx.insert_if_new_shared(&[1, 2, 3, 4]);
+        assert!(idx.query(&[9, 9, 3, 9]));
+        assert!(!idx.query(&[9, 9, 9, 9]));
+    }
+
+    #[test]
+    fn concurrent_inserts_never_lose_documents() {
+        let idx = ConcurrentLshBloomIndex::new(cfg(6, 8, 50_000));
+        std::thread::scope(|s| {
+            for t in 0..8u64 {
+                let idx = &idx;
+                s.spawn(move || {
+                    let mut rng = Xoshiro256pp::seeded(500 + t);
+                    for _ in 0..2_000 {
+                        idx.insert_if_new_shared(&random_bands(&mut rng, 6));
+                    }
+                });
+            }
+        });
+        assert_eq!(idx.len(), 16_000);
+        for t in 0..8u64 {
+            let mut rng = Xoshiro256pp::seeded(500 + t);
+            for _ in 0..2_000 {
+                assert!(idx.query(&random_bands(&mut rng, 6)), "doc lost under contention");
+            }
+        }
+    }
+
+    #[test]
+    fn into_sequential_preserves_contents() {
+        let idx = ConcurrentLshBloomIndex::new(cfg(5, 3, 5000));
+        let mut rng = Xoshiro256pp::seeded(3);
+        let docs: Vec<Vec<u64>> = (0..500).map(|_| random_bands(&mut rng, 5)).collect();
+        for d in &docs {
+            idx.insert_if_new_shared(d);
+        }
+        let (len, disk) = (idx.len(), idx.disk_bytes());
+        let frozen = idx.into_sequential();
+        assert_eq!(frozen.len(), len);
+        assert_eq!(frozen.disk_bytes(), disk);
+        for d in &docs {
+            assert!(frozen.query(d));
+        }
+    }
+}

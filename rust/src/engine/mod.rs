@@ -1,0 +1,50 @@
+//! Concurrent deduplication engine: lock-free atomic Bloom filters +
+//! batched multi-threaded ingest.
+//!
+//! The classic serving path funnels every insert/query through a single
+//! `Mutex<LshBloomDecider>`, capping index throughput at one core no
+//! matter the hardware. Bloom bit-sets are naturally lock-free — setting
+//! a bit is `AtomicU64::fetch_or`, probing is a relaxed load, and a set
+//! bit is never unset — so this module rebuilds the LSHBloom hot path
+//! around that primitive:
+//!
+//! * [`atomic_bloom::AtomicBloomFilter`] — `Vec<AtomicU64>` bit array
+//!   sharing [`crate::bloom::BloomParams`] and the probe derivation
+//!   ([`crate::bloom::probe_pair`]) with the sequential filter, so the
+//!   design-bound FP math (§4.3/§4.5) is unchanged.
+//! * [`concurrent_index::ConcurrentLshBloomIndex`] — one atomic filter
+//!   per LSH band; `insert_if_new` on `&self` from any thread.
+//! * [`batch::ConcurrentEngine`] — `submit(Vec<Doc>) -> Vec<Decision>`:
+//!   MinHash on a scoped worker pool, lock-free index probes, and an
+//!   intra-batch reconcile pass that restores deterministic verdicts.
+//!
+//! ## Linearizability caveat (read before choosing this engine)
+//!
+//! Concurrent `insert_if_new` calls are not linearizable: twins inserted
+//! from different threads at the same instant can both be reported "new"
+//! (each sets part of the probe bits before the other looks). Within one
+//! `submit` batch the reconcile pass catches this exactly; across
+//! threads using the per-document path ([`batch::ConcurrentEngine::insert_one`])
+//! the duplicate pair survives — a bounded recall loss for
+//! same-instant twins, never a false positive, and never a false
+//! negative once threads synchronize.
+//!
+//! ## Classic vs. concurrent
+//!
+//! Prefer the classic sequential decider (`pipeline::run_stream`) for
+//! paper-faithful evaluation: exact stream-order verdicts including
+//! in-batch filter false positives, every baseline method, blocked
+//! filters, shm persistence. Prefer the concurrent engine when
+//! throughput is the goal and callers are already concurrent — the
+//! service under multi-client load, or bulk ingest on many cores
+//! (`pipeline::run_stream_engine`). Follow-on scaling work (sharded
+//! serving, NUMA-aware striping, shm-backed atomic filters) builds on
+//! this seam — see ROADMAP.md.
+
+pub mod atomic_bloom;
+pub mod batch;
+pub mod concurrent_index;
+
+pub use atomic_bloom::AtomicBloomFilter;
+pub use batch::{ConcurrentEngine, Decision};
+pub use concurrent_index::ConcurrentLshBloomIndex;

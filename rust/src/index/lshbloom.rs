@@ -86,6 +86,18 @@ impl LshBloomIndex {
         Ok(Self { filters: BandFilters::Classic(filters), config, inserted: 0 })
     }
 
+    /// Index wrapping pre-built classic filters (one per band) — the
+    /// bridge from a frozen [`crate::engine::ConcurrentLshBloomIndex`]
+    /// snapshot to the persistable sequential representation.
+    pub(crate) fn from_filters(
+        filters: Vec<BloomFilter>,
+        config: LshBloomConfig,
+        inserted: u64,
+    ) -> Self {
+        debug_assert_eq!(filters.len(), config.lsh.num_bands);
+        Self { filters: BandFilters::Classic(filters), config, inserted }
+    }
+
     fn filter_params(config: &LshBloomConfig) -> BloomParams {
         let p = BloomParams::per_filter_rate(config.p_effective, config.lsh.num_bands);
         BloomParams::for_capacity(config.expected_docs.max(1), p)

@@ -17,11 +17,18 @@
 //!   min-reduce hot loop as a Pallas kernel, called from Layer 2.
 //!
 //! Python never runs on the ingest path: `make artifacts` lowers the
-//! kernels once, and [`runtime`] loads the HLO artifacts through PJRT.
+//! kernels once, and [`runtime`] loads the HLO artifacts through PJRT
+//! (gated behind the `xla` cargo feature; offline builds get stubs).
+//!
+//! Two index engines serve the hot path: the classic sequential decider
+//! ([`pipeline::run_stream`], exact stream-order semantics) and the
+//! lock-free concurrent engine ([`engine`], atomic Bloom filters +
+//! batched multi-threaded ingest — `--engine concurrent`).
 pub mod bloom;
 pub mod cli;
 pub mod config;
 pub mod corpus;
+pub mod engine;
 pub mod error;
 pub mod eval;
 pub mod hash;

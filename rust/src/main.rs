@@ -10,11 +10,11 @@
 //!   info          environment + artifact status
 
 use lshbloom::cli::{ArgSpec, Args, Command};
-use lshbloom::config::{MinHashBackend, PipelineConfig};
+use lshbloom::config::{EngineMode, MinHashBackend, PipelineConfig};
 use lshbloom::corpus::{DatasetSpec, LabeledCorpus};
 use lshbloom::eval::experiments::{self, Scale};
 use lshbloom::methods::{MethodKind, MethodSpec};
-use lshbloom::pipeline::{run_stream, PipelineOptions};
+use lshbloom::pipeline::{run_stream, run_stream_engine, PipelineOptions};
 use lshbloom::report::table::{bytes, f, Table};
 use std::path::{Path, PathBuf};
 
@@ -116,10 +116,11 @@ fn cmd_dedup(rest: Vec<String>) -> CliResult {
         .arg(ArgSpec::opt("p-effective", "index-wide FP bound").default("1e-10"))
         .arg(ArgSpec::opt("expected-docs", "planned corpus size (filter sizing; 0 = use input size)").default("0"))
         .arg(ArgSpec::opt("workers", "worker threads (0 = all cores)").default("0"))
+        .arg(ArgSpec::opt("engine", "index engine: classic|concurrent (lock-free, lshbloom only)").default("classic"))
         .arg(ArgSpec::opt("artifacts", "AOT artifacts dir (xla backend)").default("artifacts"))
         .arg(ArgSpec::opt("out", "write surviving docs to this JSONL").default(""))
         .arg(ArgSpec::opt("save-index", "persist the LSHBloom index to this dir").default(""))
-        .arg(ArgSpec::switch("shm", "host bloom filters in /dev/shm"))
+        .arg(ArgSpec::switch("shm", "host bloom filters in /dev/shm (classic engine)"))
         .arg(ArgSpec::switch("report-fidelity", "score against duplicate_of labels if present"));
     let args = parse(cmd, rest)?;
 
@@ -138,6 +139,7 @@ fn cmd_dedup(rest: Vec<String>) -> CliResult {
         backend: MinHashBackend::parse(args.get("backend"))?,
         artifacts_dir: args.get("artifacts").to_string(),
         use_shm: args.get_bool("shm"),
+        engine: EngineMode::parse(args.get("engine"))?,
         ..Default::default()
     };
     cfg.validate()?;
@@ -146,16 +148,44 @@ fn cmd_dedup(rest: Vec<String>) -> CliResult {
         .ok_or_else(|| format!("unknown method '{}'", args.get("method")))?;
     let sample: Vec<lshbloom::corpus::Doc> =
         docs.iter().take(1000).map(|ld| ld.doc.clone()).collect();
-    let mut method = build_method(&cfg, kind, &sample)?;
 
-    let stats = run_stream(
-        &mut method,
-        docs.iter().map(|ld| ld.doc.clone()),
-        PipelineOptions::from_config(&cfg),
-    );
+    let (method_name, stats) = if cfg.engine == EngineMode::Concurrent {
+        if kind != MethodKind::LshBloom {
+            return Err(format!(
+                "--engine concurrent supports only the lshbloom method (got '{}')",
+                args.get("method")
+            )
+            .into());
+        }
+        if cfg.backend != MinHashBackend::Native {
+            return Err(format!(
+                "--engine concurrent supports only the native backend (got '{}')",
+                args.get("backend")
+            )
+            .into());
+        }
+        if cfg.use_shm {
+            return Err("--engine concurrent does not support --shm (atomic filters are heap-resident)".into());
+        }
+        let engine = lshbloom::engine::ConcurrentEngine::from_config(&cfg);
+        let stats = run_stream_engine(
+            &engine,
+            docs.iter().map(|ld| ld.doc.clone()),
+            PipelineOptions::from_config(&cfg),
+        );
+        ("lshbloom-concurrent".to_string(), stats)
+    } else {
+        let mut method = build_method(&cfg, kind, &sample)?;
+        let stats = run_stream(
+            &mut method,
+            docs.iter().map(|ld| ld.doc.clone()),
+            PipelineOptions::from_config(&cfg),
+        );
+        (method.name.clone(), stats)
+    };
 
     let mut t = Table::new("dedup run", &["metric", "value"]);
-    t.row_disp(&["method".to_string(), method.name.clone()]);
+    t.row_disp(&["method".to_string(), method_name]);
     t.row_disp(&["documents".to_string(), stats.docs.to_string()]);
     t.row_disp(&["duplicates".to_string(), stats.duplicates.to_string()]);
     t.row_disp(&["throughput (docs/s)".to_string(), format!("{:.0}", stats.throughput())]);
@@ -196,7 +226,7 @@ fn cmd_dedup(rest: Vec<String>) -> CliResult {
     }
 
     if let Some(dir) = args.get_opt("save-index").filter(|s| !s.is_empty()) {
-        save_index_if_lshbloom(&method, Path::new(dir))?;
+        save_index_note(Path::new(dir))?;
     }
     Ok(())
 }
@@ -227,11 +257,10 @@ fn build_method(
     Ok(spec.build(sample))
 }
 
-fn save_index_if_lshbloom(method: &lshbloom::methods::Method, dir: &Path) -> CliResult {
+fn save_index_note(dir: &Path) -> CliResult {
     // Downcast-free: only the lshbloom methods expose a persistable index;
     // re-building a typed decider is not possible here, so persistence is
     // provided through the example/streaming path. Emit a hint instead.
-    let _ = method;
     std::fs::create_dir_all(dir)?;
     eprintln!(
         "note: index persistence is exposed through the library API \
@@ -412,8 +441,9 @@ fn cmd_serve(rest: Vec<String>) -> CliResult {
         .arg(ArgSpec::opt("perms", "minhash permutations").default("256"))
         .arg(ArgSpec::opt("p-effective", "index-wide FP bound").default("1e-10"))
         .arg(ArgSpec::opt("expected-docs", "planned corpus size").default("1000000"))
-        .arg(ArgSpec::switch("shm", "host bloom filters in /dev/shm"))
-        .arg(ArgSpec::switch("blocked", "use blocked bloom filters (faster inserts)"));
+        .arg(ArgSpec::opt("engine", "index engine: classic|concurrent (lock-free ingest)").default("classic"))
+        .arg(ArgSpec::switch("shm", "host bloom filters in /dev/shm (classic engine)"))
+        .arg(ArgSpec::switch("blocked", "use blocked bloom filters (classic engine)"));
     let args = parse(cmd, rest)?;
     let cfg = PipelineConfig {
         threshold: args.get_f64("threshold"),
@@ -422,13 +452,15 @@ fn cmd_serve(rest: Vec<String>) -> CliResult {
         expected_docs: args.get_u64("expected-docs"),
         use_shm: args.get_bool("shm"),
         blocked_bloom: args.get_bool("blocked"),
+        engine: EngineMode::parse(args.get("engine"))?,
         ..Default::default()
     };
     cfg.validate()?;
     let server = lshbloom::service::DedupServer::bind(args.get("addr"), &cfg)?;
     println!(
-        "lshbloom dedup service listening on {} (send {{\"op\":\"shutdown\"}} to stop)",
-        server.local_addr()?
+        "lshbloom dedup service listening on {} ({} engine; send {{\"op\":\"shutdown\"}} to stop)",
+        server.local_addr()?,
+        args.get("engine"),
     );
     server.serve()?;
     Ok(())

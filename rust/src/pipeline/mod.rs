@@ -24,5 +24,5 @@ pub mod orchestrator;
 pub mod shard;
 pub mod timing;
 
-pub use orchestrator::{run_stream, PipelineOptions, RunStats};
+pub use orchestrator::{run_stream, run_stream_engine, PipelineOptions, RunStats};
 pub use timing::PhaseTimes;

@@ -178,6 +178,78 @@ where
     })
 }
 
+/// Run the pipeline over a stream with the lock-free concurrent engine
+/// (`--engine concurrent`).
+///
+/// The engine parallelizes internally — each `submit` fans MinHash and
+/// index work across its scoped worker pool — so this loop just feeds it
+/// super-batches (`opts.batch_size × engine.workers()` documents,
+/// keeping every worker busy per call) and concatenates verdicts. Only
+/// `opts.batch_size` is consulted: the worker count is fixed at engine
+/// construction (`PipelineConfig::workers`), and there are no inter-stage
+/// channels, so `opts.workers` and `opts.channel_depth` have no effect
+/// here (unlike [`run_stream`]). Verdicts stay in stream
+/// order and deterministic (the engine's intra-batch reconcile runs in
+/// submission order); in-batch duplicate detection is by exact band-hash
+/// collision rather than filter probes, so verdicts can differ from
+/// [`run_stream`] only on ~`p_effective`-probability in-flight filter
+/// false positives — see `engine::batch` for the full contract.
+///
+/// `times.decide` reports total `submit` time (prepare and index work
+/// are fused inside the engine, so no separate prepare figure exists).
+pub fn run_stream_engine<I>(
+    engine: &crate::engine::ConcurrentEngine,
+    docs: I,
+    opts: PipelineOptions,
+) -> RunStats
+where
+    I: IntoIterator<Item = Doc>,
+{
+    let t_wall = Instant::now();
+    let super_batch = opts.batch_size.max(1) * engine.workers().max(1);
+    let mut verdicts = Vec::new();
+    let mut duplicates = 0u64;
+    let mut total = 0u64;
+    let mut submit_time = Duration::ZERO;
+    let mut batch: Vec<Doc> = Vec::with_capacity(super_batch);
+    let flush = |batch: &mut Vec<Doc>, verdicts: &mut Vec<bool>, duplicates: &mut u64| {
+        if batch.is_empty() {
+            return Duration::ZERO;
+        }
+        let t0 = Instant::now();
+        let decisions = engine.submit(std::mem::take(batch));
+        let spent = t0.elapsed();
+        for d in decisions {
+            *duplicates += d.duplicate as u64;
+            verdicts.push(d.duplicate);
+        }
+        spent
+    };
+    for doc in docs {
+        total += 1;
+        batch.push(doc);
+        if batch.len() == super_batch {
+            submit_time += flush(&mut batch, &mut verdicts, &mut duplicates);
+            batch.reserve(super_batch);
+        }
+    }
+    submit_time += flush(&mut batch, &mut verdicts, &mut duplicates);
+    assert_eq!(verdicts.len() as u64, total, "verdict count mismatch");
+
+    RunStats {
+        docs: total,
+        duplicates,
+        disk_bytes: engine.disk_bytes(),
+        verdicts,
+        times: PhaseTimes {
+            prepare_cpu: Duration::ZERO,
+            decide: submit_time,
+            wall: t_wall.elapsed(),
+        },
+        workers: engine.workers(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -246,6 +318,35 @@ mod tests {
         assert!(stats.times.decide > Duration::ZERO);
         assert!(stats.times.wall >= stats.times.decide);
         assert!(stats.throughput() > 0.0);
+    }
+
+    #[test]
+    fn engine_run_matches_sequential() {
+        let c = corpus(300);
+        let mut seq = lshbloom_method(&cfg(), PermFamily::Mix64);
+        let expected = seq.process_all(&c.docs);
+        for (w, b) in [(1usize, 16usize), (4, 8), (8, 3)] {
+            let mut config = cfg();
+            config.workers = w;
+            let engine = crate::engine::ConcurrentEngine::from_config(&config);
+            let stats = run_stream_engine(
+                &engine,
+                c.docs.iter().map(|ld| ld.doc.clone()),
+                PipelineOptions { workers: w, batch_size: b, channel_depth: 4 },
+            );
+            assert_eq!(stats.verdicts, expected, "w={w} b={b}");
+            assert_eq!(stats.docs, 300);
+            assert_eq!(stats.workers, w);
+            assert!(stats.disk_bytes > 0);
+        }
+    }
+
+    #[test]
+    fn engine_run_empty_stream() {
+        let engine = crate::engine::ConcurrentEngine::from_config(&cfg());
+        let stats = run_stream_engine(&engine, std::iter::empty(), PipelineOptions::default());
+        assert_eq!(stats.docs, 0);
+        assert!(stats.verdicts.is_empty());
     }
 
     #[test]

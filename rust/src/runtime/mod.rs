@@ -8,8 +8,25 @@
 //! HLO *text* (not a serialized `HloModuleProto`) is the interchange format:
 //! jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
 //! 0.5.1 rejects; the text parser reassigns ids and round-trips cleanly.
+//!
+//! The whole backend is gated behind the **`xla` cargo feature** because
+//! it links the external `xla` (PJRT) and `anyhow` crates, which are not
+//! vendored in offline environments. Without the feature, [`stub`]
+//! provides the same public surface with constructors that return
+//! [`crate::error::Error::Runtime`] — every caller already handles that
+//! path (it is indistinguishable from "artifacts missing").
+
+#[cfg(feature = "xla")]
 pub mod minhash_xla;
+#[cfg(feature = "xla")]
 mod pjrt;
 
+#[cfg(feature = "xla")]
 pub use minhash_xla::{lshbloom_method_xla, XlaBandPreparer};
+#[cfg(feature = "xla")]
 pub use pjrt::{PjrtEngine, PjrtExecutable};
+
+#[cfg(not(feature = "xla"))]
+mod stub;
+#[cfg(not(feature = "xla"))]
+pub use stub::{lshbloom_method_xla, PjrtEngine, XlaBandPreparer};

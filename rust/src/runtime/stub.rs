@@ -1,0 +1,84 @@
+//! No-op stand-ins for the PJRT/XLA backend when the `xla` cargo feature
+//! is disabled (the default in offline builds — the external `xla` and
+//! `anyhow` crates are unavailable there).
+//!
+//! Constructors fail with [`Error::Runtime`], which every call site
+//! already treats as "XLA backend unavailable"; the instance methods are
+//! unreachable because no value of these types can be constructed.
+
+use crate::corpus::Doc;
+use crate::error::{Error, Result};
+use crate::methods::{Prepared, Preparer};
+use std::path::Path;
+
+fn unavailable() -> Error {
+    Error::Runtime(
+        "built without the `xla` cargo feature; rebuild with `--features xla` \
+         (requires the xla PJRT crate and its C++ runtime)"
+            .into(),
+    )
+}
+
+/// Stub PJRT client; [`PjrtEngine::cpu`] always fails.
+pub struct PjrtEngine {
+    _private: (),
+}
+
+impl PjrtEngine {
+    /// Always returns [`Error::Runtime`] in stub builds.
+    pub fn cpu() -> Result<Self> {
+        Err(unavailable())
+    }
+
+    /// Unreachable: no `PjrtEngine` value can exist in stub builds.
+    pub fn platform_name(&self) -> String {
+        unreachable!("stub PjrtEngine cannot be constructed")
+    }
+
+    /// Unreachable: no `PjrtEngine` value can exist in stub builds.
+    pub fn device_count(&self) -> usize {
+        unreachable!("stub PjrtEngine cannot be constructed")
+    }
+}
+
+/// Stub artifact preparer; [`XlaBandPreparer::from_manifest`] always fails.
+pub struct XlaBandPreparer {
+    _private: (),
+}
+
+impl XlaBandPreparer {
+    /// Always returns [`Error::Runtime`] in stub builds.
+    pub fn from_manifest(
+        _artifacts_dir: &Path,
+        _threshold: f64,
+        _num_perms: usize,
+        _ngram: usize,
+    ) -> Result<Self> {
+        Err(unavailable())
+    }
+}
+
+impl Preparer for XlaBandPreparer {
+    fn prepare_batch(&self, _docs: &[Doc]) -> Vec<Prepared> {
+        unreachable!("stub XlaBandPreparer cannot be constructed")
+    }
+}
+
+/// Always returns [`Error::Runtime`] in stub builds.
+pub fn lshbloom_method_xla(_cfg: &crate::config::PipelineConfig) -> Result<crate::methods::Method> {
+    Err(unavailable())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stubs_fail_with_runtime_error() {
+        assert!(matches!(PjrtEngine::cpu(), Err(Error::Runtime(_))));
+        assert!(XlaBandPreparer::from_manifest(Path::new("artifacts"), 0.5, 256, 1).is_err());
+        let cfg = crate::config::PipelineConfig::default();
+        let err = lshbloom_method_xla(&cfg).unwrap_err();
+        assert!(err.to_string().contains("xla"), "{err}");
+    }
+}

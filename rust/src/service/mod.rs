@@ -19,10 +19,15 @@
 //! <- {"ok": true}
 //! ```
 //!
-//! Concurrency model mirrors the pipeline: connection handlers
-//! parallelize MinHashing (the dominant cost) and serialize index
-//! access behind one mutex, preserving the §4.4.2 sequential-insert
-//! requirement.
+//! Concurrency model depends on [`crate::config::EngineMode`]. In
+//! classic mode connection handlers parallelize MinHashing (the dominant
+//! cost) and serialize index access behind one mutex, preserving the
+//! §4.4.2 sequential-insert requirement. In concurrent mode
+//! (`--engine concurrent`) the lock-free [`crate::engine`] serves both
+//! MinHash and index work on connection threads with no serialization —
+//! throughput scales with client count, at the cost of the engine
+//! module's documented same-instant-twin caveat. Stats requests are
+//! lock-free in both modes.
 
 mod client;
 mod server;

@@ -1,7 +1,25 @@
 //! The dedup server: TCP listener + shared LSHBloom state.
+//!
+//! Two index backends ([`crate::config::EngineMode`]):
+//!
+//! * **Classic** — the sequential `LshBloomDecider` behind a mutex.
+//!   MinHashing runs on connection threads; index access serializes.
+//! * **Concurrent** — the lock-free [`crate::engine::ConcurrentEngine`]:
+//!   both MinHashing *and* index access run on connection threads with
+//!   no global lock, so ingest throughput scales with client count.
+//!   Twins arriving on different connections in the same instant may
+//!   both be admitted (see the `engine` module's linearizability
+//!   caveat); `use_shm`/`blocked_bloom` are ignored in this mode (atomic
+//!   filters are heap-resident, classic layout).
+//!
+//! `{"op":"stats"}` is always lock-free: counters live in atomic
+//! [`ServerStats`] and the index footprint is static (Bloom filters are
+//! sized by planned capacity at bind time), so health checks never queue
+//! behind ingest on either backend.
 
-use crate::config::PipelineConfig;
+use crate::config::{EngineMode, PipelineConfig};
 use crate::corpus::Doc;
+use crate::engine::ConcurrentEngine;
 use crate::json::{self, obj, Value};
 use crate::methods::lshbloom::{decider_from_config, BandPreparer, LshBloomDecider};
 use crate::methods::{Decider, Prepared, Preparer};
@@ -18,9 +36,48 @@ pub struct ServerStats {
     pub duplicates: AtomicU64,
 }
 
+/// Index state behind the listener.
+enum IndexBackend {
+    /// Sequential decider; index access serializes on the mutex.
+    Classic { preparer: BandPreparer, decider: Mutex<LshBloomDecider> },
+    /// Lock-free engine; no serialization anywhere on the request path.
+    Concurrent(ConcurrentEngine),
+}
+
+impl IndexBackend {
+    /// Query + optional insert for one document.
+    fn decide(&self, text: &str, insert: bool) -> bool {
+        let doc = Doc { id: 0, text: text.to_string() };
+        match self {
+            IndexBackend::Classic { preparer, decider } => {
+                // MinHash outside the lock (parallel across connections).
+                let prepared = preparer.prepare_batch(std::slice::from_ref(&doc));
+                let Prepared::Bands(ref bands) = prepared[0] else { unreachable!() };
+                let mut decider = decider.lock().unwrap();
+                if insert {
+                    decider.decide(&prepared[0])
+                } else {
+                    use crate::index::BandIndex;
+                    decider.index().query(bands)
+                }
+            }
+            IndexBackend::Concurrent(engine) => {
+                if insert {
+                    engine.insert_one(&doc)
+                } else {
+                    engine.query_one(&doc)
+                }
+            }
+        }
+    }
+}
+
 struct Shared {
-    preparer: BandPreparer,
-    decider: Mutex<LshBloomDecider>,
+    backend: IndexBackend,
+    /// Index footprint, captured at bind time. Bloom filters are sized by
+    /// planned capacity — the footprint never changes afterwards — so
+    /// stats requests can report it without touching the decider lock.
+    disk_bytes: u64,
     stats: ServerStats,
     shutdown: AtomicBool,
 }
@@ -34,14 +91,26 @@ pub struct DedupServer {
 impl DedupServer {
     /// Bind to `addr` (e.g. "127.0.0.1:0" for an ephemeral port).
     pub fn bind(addr: &str, cfg: &PipelineConfig) -> std::io::Result<Self> {
-        let lsh = optimal_param(cfg.threshold, cfg.num_perms);
-        let preparer = BandPreparer {
-            hasher: MinHasher::new(PermFamily::Mix64, lsh.rows_used(), cfg.ngram),
-            lsh,
+        let (backend, disk_bytes) = match cfg.engine {
+            EngineMode::Classic => {
+                let lsh = optimal_param(cfg.threshold, cfg.num_perms);
+                let preparer = BandPreparer {
+                    hasher: MinHasher::new(PermFamily::Mix64, lsh.rows_used(), cfg.ngram),
+                    lsh,
+                };
+                let decider = decider_from_config(cfg, lsh);
+                let disk = decider.disk_bytes();
+                (IndexBackend::Classic { preparer, decider: Mutex::new(decider) }, disk)
+            }
+            EngineMode::Concurrent => {
+                let engine = ConcurrentEngine::from_config(cfg);
+                let disk = engine.disk_bytes();
+                (IndexBackend::Concurrent(engine), disk)
+            }
         };
         let shared = Arc::new(Shared {
-            preparer,
-            decider: Mutex::new(decider_from_config(cfg, lsh)),
+            backend,
+            disk_bytes,
             stats: ServerStats::default(),
             shutdown: AtomicBool::new(false),
         });
@@ -56,7 +125,8 @@ impl DedupServer {
 
     /// Serve until a client sends `{"op":"shutdown"}`. Each connection
     /// gets a thread; MinHashing runs on the connection thread (parallel
-    /// across clients), index access serializes on the decider mutex.
+    /// across clients). Index access serializes on the decider mutex in
+    /// classic mode and is lock-free in concurrent mode.
     pub fn serve(self) -> std::io::Result<()> {
         // Period polling of the shutdown flag via a nonblocking accept
         // loop keeps the implementation dependency-free.
@@ -151,19 +221,7 @@ fn handle_request(line: &str, shared: &Shared) -> Value {
             let Some(text) = req.get("text").and_then(|v| v.as_str()) else {
                 return obj(vec![("error", Value::str("missing 'text'"))]);
             };
-            let doc = Doc { id: 0, text: text.to_string() };
-            // MinHash outside the lock (parallel across connections).
-            let prepared = shared.preparer.prepare_batch(std::slice::from_ref(&doc));
-            let Prepared::Bands(ref bands) = prepared[0] else { unreachable!() };
-            let duplicate = {
-                let mut decider = shared.decider.lock().unwrap();
-                if insert {
-                    decider.decide(&prepared[0])
-                } else {
-                    use crate::index::BandIndex;
-                    decider.index().query(bands)
-                }
-            };
+            let duplicate = shared.backend.decide(text, insert);
             if insert {
                 let id = shared.stats.docs.fetch_add(1, Ordering::SeqCst);
                 if duplicate {
@@ -177,17 +235,14 @@ fn handle_request(line: &str, shared: &Shared) -> Value {
                 obj(vec![("duplicate", Value::Bool(duplicate))])
             }
         }
-        Some("stats") => {
-            let decider = shared.decider.lock().unwrap();
-            obj(vec![
-                ("docs", Value::u64(shared.stats.docs.load(Ordering::SeqCst))),
-                (
-                    "duplicates",
-                    Value::u64(shared.stats.duplicates.load(Ordering::SeqCst)),
-                ),
-                ("disk_bytes", Value::u64(decider.disk_bytes())),
-            ])
-        }
+        Some("stats") => obj(vec![
+            ("docs", Value::u64(shared.stats.docs.load(Ordering::SeqCst))),
+            (
+                "duplicates",
+                Value::u64(shared.stats.duplicates.load(Ordering::SeqCst)),
+            ),
+            ("disk_bytes", Value::u64(shared.disk_bytes)),
+        ]),
         Some("shutdown") => {
             shared.shutdown.store(true, Ordering::SeqCst);
             obj(vec![("ok", Value::Bool(true))])

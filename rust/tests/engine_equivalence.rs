@@ -1,0 +1,165 @@
+//! Integration: the concurrent engine produces the same survivor set as
+//! the sequential `LshBloomDecider`, and the atomic Bloom filter keeps
+//! the no-false-negative invariant under heavy thread contention.
+
+use lshbloom::config::PipelineConfig;
+use lshbloom::corpus::{DatasetSpec, Doc, LabeledCorpus};
+use lshbloom::engine::{AtomicBloomFilter, ConcurrentEngine};
+use lshbloom::methods::lshbloom::lshbloom_method;
+use lshbloom::minhash::PermFamily;
+use lshbloom::pipeline::{run_stream_engine, PipelineOptions};
+
+fn cfg(expected_docs: u64) -> PipelineConfig {
+    PipelineConfig {
+        num_perms: 128,
+        threshold: 0.5,
+        expected_docs,
+        workers: 4,
+        ..Default::default()
+    }
+}
+
+/// Ids of documents the method would keep (verdict = not duplicate).
+fn survivors(docs: &[lshbloom::corpus::LabeledDoc], verdicts: &[bool]) -> Vec<u64> {
+    docs.iter()
+        .zip(verdicts)
+        .filter(|(_, &dup)| !dup)
+        .map(|(ld, _)| ld.doc.id)
+        .collect()
+}
+
+#[test]
+fn concurrent_engine_survivor_set_equals_sequential_decider() {
+    // Labeled generated corpus (reuses corpus::generator under
+    // DatasetSpec): half the stream is parser-noise/truncation twins.
+    let corpus = LabeledCorpus::build(DatasetSpec::testing(29, 600, 0.5));
+    let config = cfg(10_000);
+
+    let mut sequential = lshbloom_method(&config, PermFamily::Mix64);
+    let expected = sequential.process_all(&corpus.docs);
+
+    // Several batch shapes, including batches much larger than the
+    // worker pool and single-doc batches.
+    for batch_size in [1usize, 13, 128, 600] {
+        let engine = ConcurrentEngine::from_config(&config);
+        let mut verdicts = Vec::with_capacity(corpus.docs.len());
+        for chunk in corpus.docs.chunks(batch_size) {
+            let batch: Vec<Doc> = chunk.iter().map(|ld| ld.doc.clone()).collect();
+            let decisions = engine.submit(batch);
+            verdicts.extend(decisions.into_iter().map(|d| d.duplicate));
+        }
+        assert_eq!(
+            survivors(&corpus.docs, &verdicts),
+            survivors(&corpus.docs, &expected),
+            "survivor set diverged at batch_size={batch_size}"
+        );
+        // Stronger than the survivor set: the full verdict vector.
+        assert_eq!(verdicts, expected, "verdicts diverged at batch_size={batch_size}");
+    }
+}
+
+#[test]
+fn engine_pipeline_mode_equals_sequential_decider() {
+    let corpus = LabeledCorpus::build(DatasetSpec::testing(31, 400, 0.4));
+    let config = cfg(10_000);
+
+    let mut sequential = lshbloom_method(&config, PermFamily::Mix64);
+    let expected = sequential.process_all(&corpus.docs);
+
+    let engine = ConcurrentEngine::from_config(&config);
+    let stats = run_stream_engine(
+        &engine,
+        corpus.docs.iter().map(|ld| ld.doc.clone()),
+        PipelineOptions { workers: 4, batch_size: 32, channel_depth: 4 },
+    );
+    assert_eq!(stats.verdicts, expected);
+    assert_eq!(stats.docs, 400);
+    assert_eq!(
+        stats.duplicates,
+        expected.iter().filter(|&&v| v).count() as u64
+    );
+}
+
+#[test]
+fn atomic_filter_no_false_negatives_under_contention() {
+    // 8 threads insert the SAME key set concurrently (maximum word-level
+    // contention: every fetch_or races 7 peers on identical positions).
+    // Afterwards every key must be present.
+    let keys: Vec<u64> = (0..20_000u64).map(|i| i.wrapping_mul(0x9E37_79B9_7F4A_7C15)).collect();
+    let filter = AtomicBloomFilter::with_capacity(keys.len() as u64, 1e-6);
+    std::thread::scope(|s| {
+        for _ in 0..8 {
+            let (filter, keys) = (&filter, &keys);
+            s.spawn(move || {
+                for &k in keys {
+                    filter.insert(k);
+                }
+            });
+        }
+    });
+    for &k in &keys {
+        assert!(filter.contains(k), "false negative for {k} after contended inserts");
+    }
+    assert_eq!(filter.inserted(), 8 * keys.len() as u64);
+}
+
+#[test]
+fn concurrent_submitters_lose_no_documents() {
+    // Four threads push disjoint batches into one shared engine. The
+    // linearizability caveat allows cross-thread twins to both survive,
+    // but every inserted document must be queryable afterwards (no false
+    // negatives at the engine level either).
+    let config = cfg(50_000);
+    let engine = ConcurrentEngine::from_config(&config);
+    let corpus = LabeledCorpus::build(DatasetSpec::testing(37, 800, 0.0));
+    std::thread::scope(|s| {
+        for t in 0..4usize {
+            let (engine, docs) = (&engine, &corpus.docs);
+            s.spawn(move || {
+                let slice: Vec<Doc> =
+                    docs[t * 200..(t + 1) * 200].iter().map(|ld| ld.doc.clone()).collect();
+                engine.submit(slice);
+            });
+        }
+    });
+    let (docs, _) = engine.stats();
+    assert_eq!(docs, 800);
+    for ld in &corpus.docs {
+        assert!(
+            engine.query_one(&ld.doc),
+            "doc {} lost after concurrent submits",
+            ld.doc.id
+        );
+    }
+}
+
+#[test]
+fn concurrent_server_mode_serves_and_reconciles_across_connections() {
+    use lshbloom::config::EngineMode;
+    use lshbloom::service::{DedupClient, DedupServer};
+
+    let config = PipelineConfig {
+        num_perms: 64,
+        expected_docs: 10_000,
+        engine: EngineMode::Concurrent,
+        ..Default::default()
+    };
+    let server = DedupServer::bind("127.0.0.1:0", &config).expect("bind");
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.serve().expect("serve"));
+
+    let mut a = DedupClient::connect(&addr).unwrap();
+    let mut b = DedupClient::connect(&addr).unwrap();
+    assert!(!a.check("engine mode shared document state").unwrap());
+    // Sequential across connections -> the twin is always caught.
+    assert!(b.check("engine mode shared document state").unwrap());
+    assert!(!b.query("but unseen text stays unseen").unwrap());
+
+    // Stats are served lock-free; disk footprint is the static filter size.
+    let (docs, dups, disk) = a.stats().unwrap();
+    assert_eq!((docs, dups), (2, 1));
+    assert!(disk > 0);
+
+    a.shutdown().unwrap();
+    handle.join().unwrap();
+}
