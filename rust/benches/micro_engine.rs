@@ -25,23 +25,13 @@ use lshbloom::engine::ConcurrentEngine;
 use lshbloom::json::{obj, Value};
 use lshbloom::methods::lshbloom::{decider_from_config, BandPreparer};
 use lshbloom::methods::{Decider, Preparer};
-use lshbloom::minhash::{optimal_param, MinHasher, PermFamily};
 use lshbloom::perf::bench::{fmt_count, time_once};
 use std::sync::Mutex;
 
-fn band_preparer(cfg: &PipelineConfig) -> BandPreparer {
-    let lsh = optimal_param(cfg.threshold, cfg.num_perms);
-    BandPreparer {
-        hasher: MinHasher::new(PermFamily::Mix64, lsh.rows_used(), cfg.ngram),
-        lsh,
-    }
-}
-
 /// Whole-operation critical section: throughput ceiling = one core.
 fn run_mutex_coarse(docs: &[Doc], threads: usize, cfg: &PipelineConfig) -> f64 {
-    let lsh = optimal_param(cfg.threshold, cfg.num_perms);
-    let preparer = band_preparer(cfg);
-    let decider = Mutex::new(decider_from_config(cfg, lsh));
+    let preparer = BandPreparer::from_config(cfg);
+    let decider = Mutex::new(decider_from_config(cfg, preparer.lsh));
     let (_, wall) = time_once(|| {
         std::thread::scope(|s| {
             for chunk in docs.chunks(docs.len().div_ceil(threads)) {
@@ -61,9 +51,8 @@ fn run_mutex_coarse(docs: &[Doc], threads: usize, cfg: &PipelineConfig) -> f64 {
 
 /// Seed-server shape: MinHash parallel, only decide under the lock.
 fn run_mutex_fine(docs: &[Doc], threads: usize, cfg: &PipelineConfig) -> f64 {
-    let lsh = optimal_param(cfg.threshold, cfg.num_perms);
-    let preparer = band_preparer(cfg);
-    let decider = Mutex::new(decider_from_config(cfg, lsh));
+    let preparer = BandPreparer::from_config(cfg);
+    let decider = Mutex::new(decider_from_config(cfg, preparer.lsh));
     let (_, wall) = time_once(|| {
         std::thread::scope(|s| {
             for chunk in docs.chunks(docs.len().div_ceil(threads)) {
@@ -86,9 +75,13 @@ fn run_engine(docs: &[Doc], threads: usize, cfg: &PipelineConfig) -> f64 {
     cfg.workers = threads;
     let engine = ConcurrentEngine::from_config(&cfg);
     let super_batch = (threads * 128).max(256);
+    // Materialize the batches up front: the mutex contenders borrow
+    // `docs`, so cloning inside the timed loop would bill allocation +
+    // memcpy to the engine lane only and understate its speedup.
+    let batches: Vec<Vec<Doc>> = docs.chunks(super_batch).map(|c| c.to_vec()).collect();
     let (_, wall) = time_once(|| {
-        for chunk in docs.chunks(super_batch) {
-            engine.submit(chunk.to_vec());
+        for batch in batches {
+            engine.submit(batch);
         }
     });
     docs.len() as f64 / wall.as_secs_f64()

@@ -1,0 +1,82 @@
+//! Sharded-aggregation throughput: `dedup_sharded` docs/sec as the
+//! shard count grows on one corpus (§6 path, engine-backed).
+//!
+//! Phase 1 parallelism scales with shards (each shard runs its own
+//! `ConcurrentEngine`); phase 2 is the bit-OR union of shard filters
+//! plus a band-hash recheck per survivor, so its cost is reported
+//! separately — the point of the merge-by-union design is that phase 2
+//! stays a small, MinHash-free fraction of the run at every shard
+//! count.
+//!
+//! Reports the same single-line text shape as the other `micro_*`
+//! benches plus one machine-readable JSON summary line (crate `json`
+//! module) for harness scripts.
+//!
+//! `cargo bench --bench micro_shard` (LSHBLOOM_BENCH_FAST=1 for a
+//! quick pass)
+
+use lshbloom::config::PipelineConfig;
+use lshbloom::corpus::{CorpusGenerator, Doc, GeneratorConfig};
+use lshbloom::json::{obj, Value};
+use lshbloom::perf::bench::{fmt_count, time_once};
+use lshbloom::pipeline::dedup_sharded;
+
+fn main() {
+    println!("# sharded dedup throughput vs shard count (docs/sec)\n");
+    let fast = std::env::var("LSHBLOOM_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let n: usize = if fast { 1_200 } else { 8_000 };
+
+    // Generated corpus with ~25% exact twins spread across the stream so
+    // both the within-shard (phase 1) and cross-shard (phase 2) drop
+    // paths stay hot at every shard count.
+    let g = CorpusGenerator::new(GeneratorConfig::short());
+    let mut docs: Vec<Doc> = Vec::with_capacity(n);
+    for i in 0..n as u64 {
+        if i % 4 == 3 && i >= 17 {
+            let prev = docs[(i - 17) as usize].clone();
+            docs.push(Doc { id: i, ..prev });
+        } else {
+            docs.push(g.generate(0x5AAD, i));
+        }
+    }
+
+    let cfg = PipelineConfig {
+        threshold: 0.5,
+        num_perms: 128,
+        p_effective: 1e-10,
+        expected_docs: n as u64,
+        ..Default::default()
+    };
+
+    let mut results: Vec<Value> = Vec::new();
+    for &shards in &[1usize, 2, 4, 8] {
+        let input = docs.clone();
+        let (stats, wall) = time_once(|| dedup_sharded(&cfg, input, shards));
+        let docs_per_sec = n as f64 / wall.as_secs_f64();
+        let p2_frac = stats.phase2_wall.as_secs_f64() / wall.as_secs_f64().max(1e-9);
+        println!(
+            "{:<44} {:>12}/s   (p1 drop {}, p2 drop {}, p2 {:.1}% of wall)",
+            format!("sharded/shards={shards}"),
+            fmt_count(docs_per_sec),
+            stats.phase1_dropped,
+            stats.phase2_dropped,
+            p2_frac * 100.0
+        );
+        results.push(obj(vec![
+            ("shards", Value::u64(shards as u64)),
+            ("docs_per_sec", Value::num(docs_per_sec)),
+            ("phase1_dropped", Value::u64(stats.phase1_dropped)),
+            ("phase2_dropped", Value::u64(stats.phase2_dropped)),
+            ("survivors", Value::u64(stats.survivors.len() as u64)),
+            ("phase2_wall_frac", Value::num(p2_frac)),
+        ]));
+    }
+    println!();
+
+    let summary = obj(vec![
+        ("bench", Value::str("micro_shard")),
+        ("docs", Value::u64(n as u64)),
+        ("results", Value::Arr(results)),
+    ]);
+    println!("{}", summary.to_json());
+}

@@ -8,9 +8,48 @@
 //! at any filesystem path for plain persistence.
 
 use crate::error::{Error, Result};
-use std::fs::OpenOptions;
+use std::fs::{File, OpenOptions};
 use std::os::fd::AsRawFd;
 use std::path::{Path, PathBuf};
+
+/// Minimal FFI surface over the platform C library. The crate is
+/// dependency-free (no `libc` crate in Cargo.toml); these symbols are
+/// provided by the C runtime every Rust binary on this target already
+/// links, and the constants are the stable Linux ABI values
+/// (`asm-generic/mman-common.h`).
+mod libc {
+    // The constants below are the 64-bit Linux ABI; on other targets they
+    // would compile fine and misbehave at runtime (e.g. Darwin's MS_SYNC
+    // is 0x0010, and 32-bit glibc's mmap takes a 32-bit off_t, so the
+    // `offset: i64` declaration below would scramble the call ABI), so
+    // fail the build loudly instead.
+    #[cfg(any(not(target_os = "linux"), target_pointer_width = "16", target_pointer_width = "32"))]
+    compile_error!(
+        "bloom::shm's inline libc shim encodes the 64-bit Linux mman ABI; \
+         port PROT_*/MAP_*/MS_* and the off_t width before building on this target"
+    );
+
+    pub use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 0x1;
+    pub const PROT_WRITE: c_int = 0x2;
+    pub const MAP_SHARED: c_int = 0x01;
+    pub const MS_SYNC: c_int = 4;
+    pub const MAP_FAILED: *mut c_void = usize::MAX as *mut c_void; // (void *)-1
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+        pub fn msync(addr: *mut c_void, len: usize, flags: c_int) -> c_int;
+    }
+}
 
 /// A u64-word bit array backed by a shared file mapping.
 pub struct ShmBitArray {
@@ -26,26 +65,52 @@ unsafe impl Send for ShmBitArray {}
 impl ShmBitArray {
     /// Create (or truncate) a file of `words * 8` bytes and map it shared.
     pub fn create(path: &Path, words: usize) -> Result<Self> {
-        Self::open_impl(path, words, true)
-    }
-
-    /// Map an existing array created by [`ShmBitArray::create`].
-    pub fn open(path: &Path, words: usize) -> Result<Self> {
-        Self::open_impl(path, words, false)
-    }
-
-    fn open_impl(path: &Path, words: usize, truncate: bool) -> Result<Self> {
         assert!(words > 0);
         let file = OpenOptions::new()
             .read(true)
             .write(true)
             .create(true)
-            .truncate(truncate)
+            .truncate(true)
             .open(path)
             .map_err(|e| Error::io(path.display().to_string(), e))?;
-        let bytes = words * 8;
-        file.set_len(bytes as u64)
+        file.set_len((words * 8) as u64)
             .map_err(|e| Error::io(path.display().to_string(), e))?;
+        Self::map(file, path, words)
+    }
+
+    /// Map an existing array created by [`ShmBitArray::create`].
+    ///
+    /// The file must already exist and be exactly `words * 8` bytes:
+    /// opening a missing path is an I/O error (silently fabricating a
+    /// zeroed array would report every key absent — Bloom false
+    /// negatives), and a size mismatch is a [`Error::Format`] (remapping
+    /// with a smaller `words` would `set_len`-truncate, i.e. corrupt, a
+    /// live filter; a larger one would read bits the filter never
+    /// wrote). Use [`ShmBitArray::create`] to (re)initialize.
+    pub fn open(path: &Path, words: usize) -> Result<Self> {
+        assert!(words > 0);
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(path)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        let actual = file
+            .metadata()
+            .map_err(|e| Error::io(path.display().to_string(), e))?
+            .len();
+        let expected = (words * 8) as u64;
+        if actual != expected {
+            return Err(Error::Format(format!(
+                "shm bit array {}: file is {actual} bytes but {words} words need {expected}; \
+                 refusing to remap a mismatched filter",
+                path.display()
+            )));
+        }
+        Self::map(file, path, words)
+    }
+
+    fn map(file: File, path: &Path, words: usize) -> Result<Self> {
+        let bytes = words * 8;
         let ptr = unsafe {
             libc::mmap(
                 std::ptr::null_mut(),
@@ -161,6 +226,38 @@ mod tests {
     fn bad_path_is_io_error() {
         let r = ShmBitArray::create(Path::new("/nonexistent-dir-xyz/f.bits"), 4);
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn open_missing_file_errors_instead_of_fabricating() {
+        let path = tmp("missing.bits");
+        std::fs::remove_file(&path).ok();
+        let r = ShmBitArray::open(&path, 8);
+        assert!(r.is_err(), "open must not create a zeroed array");
+        assert!(!path.exists(), "open must not leave a file behind");
+    }
+
+    #[test]
+    fn open_size_mismatch_errors_instead_of_truncating() {
+        let path = tmp("sized.bits");
+        {
+            let mut arr = ShmBitArray::create(&path, 16).unwrap();
+            arr.words_mut().fill(u64::MAX);
+            arr.sync().unwrap();
+        }
+        // Smaller view would truncate, larger would read unwritten bits;
+        // both must be refused.
+        for words in [8usize, 32] {
+            let err = ShmBitArray::open(&path, words).unwrap_err();
+            assert!(
+                err.to_string().contains("refusing to remap"),
+                "unexpected error for words={words}: {err}"
+            );
+        }
+        // The existing contents survived both refused attempts.
+        let arr = ShmBitArray::open(&path, 16).unwrap();
+        assert!(arr.words().iter().all(|&w| w == u64::MAX));
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

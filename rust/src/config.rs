@@ -92,6 +92,10 @@ pub struct PipelineConfig {
     /// Index engine: classic mutex-serialized decider or the lock-free
     /// concurrent engine.
     pub engine: EngineMode,
+    /// Shard count for the §6 sharded-aggregation path (1 = unsharded).
+    /// Shard counts > 1 run `pipeline::dedup_sharded`: per-shard
+    /// concurrent-engine ingest, cross-shard bit-OR filter aggregation.
+    pub shards: usize,
 }
 
 impl Default for PipelineConfig {
@@ -110,6 +114,7 @@ impl Default for PipelineConfig {
             blocked_bloom: false,
             channel_depth: 64,
             engine: EngineMode::Classic,
+            shards: 1,
         }
     }
 }
@@ -134,6 +139,9 @@ impl PipelineConfig {
         }
         if self.batch_size == 0 || self.channel_depth == 0 {
             return Err(Error::Config("batch_size/channel_depth must be positive".into()));
+        }
+        if self.shards == 0 {
+            return Err(Error::Config("shards must be >= 1".into()));
         }
         Ok(())
     }
@@ -194,6 +202,9 @@ impl PipelineConfig {
                     self.channel_depth = v.parse().map_err(|_| bad("channel_depth"))?
                 }
                 "engine" | "pipeline.engine" => self.engine = EngineMode::parse(v)?,
+                "shards" | "pipeline.shards" => {
+                    self.shards = v.parse().map_err(|_| bad("shards"))?
+                }
                 other => return Err(Error::Config(format!("unknown config key '{other}'"))),
             }
         }
@@ -268,14 +279,11 @@ mod tests {
 
     #[test]
     fn validate_catches_bad_combos() {
-        let mut cfg = PipelineConfig::default();
-        cfg.threshold = 1.5;
+        let cfg = PipelineConfig { threshold: 1.5, ..Default::default() };
         assert!(cfg.validate().is_err());
-        let mut cfg = PipelineConfig::default();
-        cfg.p_effective = 0.0;
+        let cfg = PipelineConfig { p_effective: 0.0, ..Default::default() };
         assert!(cfg.validate().is_err());
-        let mut cfg = PipelineConfig::default();
-        cfg.ngram = 0;
+        let cfg = PipelineConfig { ngram: 0, ..Default::default() };
         assert!(cfg.validate().is_err());
     }
 
@@ -283,6 +291,19 @@ mod tests {
     fn backend_parse() {
         assert_eq!(MinHashBackend::parse("xla").unwrap(), MinHashBackend::Xla);
         assert!(MinHashBackend::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn shards_key_applies_and_validates() {
+        let mut cfg = PipelineConfig::default();
+        assert_eq!(cfg.shards, 1);
+        cfg.apply(&parse_toml_subset("[pipeline]\nshards = 8").unwrap()).unwrap();
+        assert_eq!(cfg.shards, 8);
+        cfg.validate().unwrap();
+        cfg.shards = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = PipelineConfig::default();
+        assert!(cfg.apply(&parse_toml_subset("shards = x").unwrap()).is_err());
     }
 
     #[test]

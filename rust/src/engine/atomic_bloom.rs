@@ -80,6 +80,67 @@ impl AtomicBloomFilter {
         all_set
     }
 
+    /// Insert a key without computing the presence verdict — the cheap
+    /// path once a caller has already decided a document's fate (see
+    /// [`super::concurrent_index::ConcurrentLshBloomIndex::insert_if_new_shared`]).
+    ///
+    /// Sets exactly the same bits [`Self::insert`] would (state parity is
+    /// what keeps cross-batch verdicts identical to the sequential
+    /// filter), but uses test-and-test-and-set: each probed word is first
+    /// read with a relaxed load and the contended `fetch_or` RMW is
+    /// issued only when some probe bit is actually missing. For duplicate
+    /// documents — whose bits are overwhelmingly already present — this
+    /// turns the whole insert into plain loads.
+    #[inline]
+    pub fn set(&self, key: u64) {
+        let (h1, h2) = probe_pair(key);
+        let m = self.m;
+        let mut h = h1;
+        for _ in 0..self.k {
+            let bit = h % m;
+            let (w, mask) = (bit / 64, 1u64 << (bit % 64));
+            let word = &self.words[w as usize];
+            if word.load(Ordering::Relaxed) & mask == 0 {
+                word.fetch_or(mask, Ordering::Relaxed);
+            }
+            h = h.wrapping_add(h2);
+        }
+        self.inserted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Bit-OR merge: fold every set bit of `other` into `self`, lock-free
+    /// (`fetch_or` per word; all-zero source words are skipped). Panics
+    /// if the two filters were built with different geometry — a union
+    /// across mismatched `m`/`k` would silently corrupt the membership
+    /// contract.
+    ///
+    /// The Bloom union property: after the call, `self` answers `true`
+    /// for every key either filter answered `true` for (and for no key
+    /// both answered `false` for beyond the design FP rate of the merged
+    /// fill). Concurrent inserts into `self` during the merge are safe
+    /// (both sides are monotone `fetch_or`s). Inserts racing into
+    /// `other`, however, may be *missed* — the merge's relaxed loads can
+    /// run before an in-flight `fetch_or` lands — so the caller must
+    /// establish a happens-before edge with every `other` inserter
+    /// (thread join, as `pipeline::shard` does) before merging, or those
+    /// keys become false negatives in the union.
+    pub fn union_from(&self, other: &Self) {
+        assert_eq!(
+            self.params, other.params,
+            "AtomicBloomFilter::union_from: geometry mismatch ({:?} vs {:?})",
+            self.params, other.params
+        );
+        debug_assert_eq!(self.words.len(), other.words.len());
+        for (dst, src) in self.words.iter().zip(&other.words) {
+            let bits = src.load(Ordering::Relaxed);
+            if bits != 0 {
+                dst.fetch_or(bits, Ordering::Relaxed);
+            }
+        }
+        self.inserted
+            .fetch_add(other.inserted.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
     /// Query a key: `true` means "possibly present" (no false negatives
     /// for inserts that happened-before this call).
     #[inline]
@@ -226,6 +287,76 @@ mod tests {
                 assert!(f.contains(k), "lost key {k} under contention");
             }
         }
+    }
+
+    #[test]
+    fn set_is_bit_identical_to_insert() {
+        let params = BloomParams::for_capacity(2_000, 1e-5);
+        let via_insert = AtomicBloomFilter::new(params);
+        let via_set = AtomicBloomFilter::new(params);
+        let mut rng = Xoshiro256pp::seeded(21);
+        for _ in 0..2_000 {
+            let k = rng.next_u64();
+            via_insert.insert(k);
+            via_set.set(k);
+        }
+        assert_eq!(via_insert.ones(), via_set.ones());
+        assert_eq!(via_insert.inserted(), via_set.inserted());
+        for _ in 0..20_000 {
+            let k = rng.next_u64();
+            assert_eq!(via_insert.contains(k), via_set.contains(k));
+        }
+    }
+
+    #[test]
+    fn union_from_is_bit_identical_to_combined_inserts() {
+        let params = BloomParams::for_capacity(4_000, 1e-5);
+        let a = AtomicBloomFilter::new(params);
+        let b = AtomicBloomFilter::new(params);
+        let combined = AtomicBloomFilter::new(params);
+        let mut rng = Xoshiro256pp::seeded(31);
+        let keys_a: Vec<u64> = (0..2_000).map(|_| rng.next_u64()).collect();
+        let keys_b: Vec<u64> = (0..2_000).map(|_| rng.next_u64()).collect();
+        for &k in &keys_a {
+            a.insert(k);
+            combined.insert(k);
+        }
+        for &k in &keys_b {
+            b.insert(k);
+            combined.insert(k);
+        }
+        a.union_from(&b);
+        assert_eq!(a.ones(), combined.ones(), "union must equal combined bit pattern");
+        assert_eq!(a.inserted(), combined.inserted(), "union accumulates insert counts");
+        for &k in keys_a.iter().chain(&keys_b) {
+            assert!(a.contains(k), "key {k} lost in union");
+        }
+        // Probe agreement on fresh keys too (both FP or both clean).
+        for _ in 0..20_000 {
+            let k = rng.next_u64();
+            assert_eq!(a.contains(k), combined.contains(k));
+        }
+    }
+
+    #[test]
+    fn union_from_empty_is_noop() {
+        let params = BloomParams::for_capacity(1_000, 1e-4);
+        let a = AtomicBloomFilter::new(params);
+        let empty = AtomicBloomFilter::new(params);
+        for i in 0..1_000u64 {
+            a.insert(i * 17);
+        }
+        let before = a.ones();
+        a.union_from(&empty);
+        assert_eq!(a.ones(), before);
+    }
+
+    #[test]
+    #[should_panic(expected = "geometry mismatch")]
+    fn union_from_rejects_mismatched_geometry() {
+        let a = AtomicBloomFilter::with_capacity(1_000, 1e-4);
+        let b = AtomicBloomFilter::with_capacity(2_000, 1e-4);
+        a.union_from(&b);
     }
 
     #[test]

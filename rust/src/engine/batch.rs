@@ -45,7 +45,6 @@ use crate::corpus::Doc;
 use crate::index::lshbloom::LshBloomConfig;
 use crate::methods::lshbloom::BandPreparer;
 use crate::methods::{Prepared, Preparer};
-use crate::minhash::{optimal_param, MinHasher, PermFamily};
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -99,12 +98,8 @@ impl ConcurrentEngine {
     /// Build from the pipeline config (native Mix64 backend, same band
     /// geometry derivation as `methods::lshbloom`).
     pub fn from_config(cfg: &PipelineConfig) -> Self {
-        let lsh = optimal_param(cfg.threshold, cfg.num_perms);
-        let preparer = BandPreparer {
-            hasher: MinHasher::new(PermFamily::Mix64, lsh.rows_used(), cfg.ngram),
-            lsh,
-        };
-        let index_cfg = LshBloomConfig::new(lsh, cfg.p_effective, cfg.expected_docs);
+        let preparer = BandPreparer::from_config(cfg);
+        let index_cfg = LshBloomConfig::new(preparer.lsh, cfg.p_effective, cfg.expected_docs);
         Self::with_preparer(Arc::new(preparer), index_cfg, cfg.effective_workers())
     }
 
@@ -147,9 +142,20 @@ impl ConcurrentEngine {
     /// Deduplicate one batch. Verdicts come back in submission order and
     /// are deterministic for a deterministic preparer (see module docs).
     pub fn submit(&self, docs: Vec<Doc>) -> Vec<Decision> {
+        self.submit_with_bands(&docs).0
+    }
+
+    /// [`Self::submit`], additionally returning each document's band
+    /// hashes (submission order, duplicates included).
+    ///
+    /// This is the sharded-aggregation hook (`pipeline::shard`): phase 1
+    /// already MinHashes every document once, and the returned bands let
+    /// phase 2 recheck shard survivors against the merged cross-shard
+    /// filter as a pure `query` — zero re-MinHashing anywhere.
+    pub fn submit_with_bands(&self, docs: &[Doc]) -> (Vec<Decision>, Vec<Vec<u64>>) {
         let n = docs.len();
         if n == 0 {
-            return Vec::new();
+            return (Vec::new(), Vec::new());
         }
 
         // Phase 1: parallel prepare + read-only probe of the pre-batch
@@ -205,15 +211,19 @@ impl ConcurrentEngine {
         }
 
         // Phase 3: parallel lock-free insert of every document's bands.
+        // Verdicts were fixed by the reconcile pass, so the verdict-free
+        // `set_shared` path applies: same bits, but bands whose bits are
+        // already present cost plain loads, not contended fetch_ors.
         for_chunks(self.workers, n, |range| {
             for (bands, _) in &prepared[range] {
-                self.index.insert_if_new_shared(bands);
+                self.index.set_shared(bands);
             }
         });
 
         self.docs.fetch_add(n as u64, Ordering::Relaxed);
         self.duplicates.fetch_add(duplicates, Ordering::Relaxed);
-        decisions
+        let bands = prepared.into_iter().map(|(bands, _)| bands).collect();
+        (decisions, bands)
     }
 
     /// Single-document query+insert on the caller's thread, fully
@@ -244,12 +254,23 @@ impl ConcurrentEngine {
     pub fn into_index(self) -> crate::index::LshBloomIndex {
         self.index.into_sequential()
     }
+
+    /// Take the live lock-free index out of the engine (dropping the
+    /// preparer). The sharded pipeline uses this after phase 1 to merge
+    /// per-shard filters via [`ConcurrentLshBloomIndex::union_from`]
+    /// without freezing them first; exclusive ownership of the engine is
+    /// the synchronization point, so the index holds every insert from
+    /// every prior `submit`.
+    pub fn into_concurrent_index(self) -> ConcurrentLshBloomIndex {
+        self.index
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::corpus::{DatasetSpec, LabeledCorpus};
+    use crate::minhash::{optimal_param, MinHasher, PermFamily};
 
     fn cfg() -> PipelineConfig {
         PipelineConfig {
@@ -302,6 +323,36 @@ mod tests {
         assert!(!engine.insert_one(&doc));
         assert!(engine.query_one(&doc));
         assert!(engine.insert_one(&doc));
+    }
+
+    #[test]
+    fn submit_with_bands_returns_band_hashes_in_submission_order() {
+        let config = cfg();
+        let engine = ConcurrentEngine::from_config(&config);
+        let docs: Vec<Doc> = (0..20)
+            .map(|i| Doc { id: i, text: format!("band return check document {}", i % 7) })
+            .collect();
+        let (decisions, bands) = engine.submit_with_bands(&docs);
+        assert_eq!(decisions.len(), docs.len());
+        assert_eq!(bands.len(), docs.len());
+        // Bands match an independent preparer with identical geometry
+        // (duplicates included — they are what phase 2 reuses).
+        let lsh = optimal_param(config.threshold, config.num_perms);
+        let preparer = BandPreparer {
+            hasher: MinHasher::new(PermFamily::Mix64, lsh.rows_used(), config.ngram),
+            lsh,
+        };
+        for (doc, got) in docs.iter().zip(&bands) {
+            let prep = preparer.prepare_batch(std::slice::from_ref(doc));
+            let Prepared::Bands(ref expected) = prep[0] else { unreachable!() };
+            assert_eq!(got, expected, "bands diverged for doc {}", doc.id);
+            // Every returned band vector must already be in the filter.
+            assert!(engine.index().query(got));
+        }
+        // And the two entry points agree verdict-for-verdict.
+        let engine2 = ConcurrentEngine::from_config(&config);
+        let via_submit = engine2.submit(docs.clone());
+        assert_eq!(decisions, via_submit);
     }
 
     #[test]

@@ -20,7 +20,6 @@
 //! thread synchronizes with the querier.
 
 use super::atomic_bloom::AtomicBloomFilter;
-use crate::bloom::BloomParams;
 use crate::index::lshbloom::LshBloomConfig;
 use crate::index::BandIndex;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -37,8 +36,9 @@ impl ConcurrentLshBloomIndex {
     /// `blocked` flag is ignored (atomic filters are always the classic
     /// layout; blocking is a cache optimization for the sequential path).
     pub fn new(config: LshBloomConfig) -> Self {
-        let p = BloomParams::per_filter_rate(config.p_effective, config.lsh.num_bands);
-        let params = BloomParams::for_capacity(config.expected_docs.max(1), p);
+        // Same geometry derivation as the sequential index — required for
+        // `into_sequential` snapshots and cross-index `union_from`.
+        let params = crate::index::LshBloomIndex::filter_params(&config);
         let filters = (0..config.lsh.num_bands)
             .map(|_| AtomicBloomFilter::new(params))
             .collect();
@@ -60,14 +60,72 @@ impl ConcurrentLshBloomIndex {
     /// thread. Returns `true` if every probed bit of some band was
     /// already set (duplicate). Subject to the module-level
     /// linearizability caveat for concurrent twins.
+    ///
+    /// Once some band reports a collision the verdict is final, so the
+    /// remaining bands switch from the verdict-tracking
+    /// [`AtomicBloomFilter::insert`] to the cheaper
+    /// [`AtomicBloomFilter::set`]: the same bits are still set (state
+    /// parity with the sequential single-pass insert is what keeps later
+    /// verdicts exact), but already-present bits are detected with a
+    /// plain load instead of a contended `fetch_or` — for exact
+    /// duplicates, whose bits are all present, the tail of the pass
+    /// issues no RMWs at all.
     pub fn insert_if_new_shared(&self, band_hashes: &[u64]) -> bool {
         debug_assert_eq!(band_hashes.len(), self.filters.len());
         let mut dup = false;
         for (f, &h) in self.filters.iter().zip(band_hashes) {
-            dup |= f.insert(h);
+            if dup {
+                f.set(h);
+            } else {
+                dup = f.insert(h);
+            }
         }
         self.inserted.fetch_add(1, Ordering::Relaxed);
         dup
+    }
+
+    /// Insert a document's bands without computing a verdict — the bulk
+    /// path for callers that already decided the document's fate (the
+    /// engine's phase-3 insert after its reconcile pass). Sets exactly
+    /// the bits [`Self::insert_if_new_shared`] would, via the
+    /// test-and-test-and-set [`AtomicBloomFilter::set`], so filter state
+    /// — and every later verdict — is unchanged while already-present
+    /// bits cost a plain load instead of a contended `fetch_or`.
+    pub fn set_shared(&self, band_hashes: &[u64]) {
+        debug_assert_eq!(band_hashes.len(), self.filters.len());
+        for (f, &h) in self.filters.iter().zip(band_hashes) {
+            f.set(h);
+        }
+        self.inserted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Bit-OR merge: fold every band filter of `other` into `self`
+    /// (lock-free, geometry-checked — see
+    /// [`AtomicBloomFilter::union_from`]). Panics when the two indexes
+    /// disagree on band count or per-filter geometry.
+    ///
+    /// This is the sharded-aggregation primitive (paper §6): after the
+    /// union, `self` reports a collision for every band vector either
+    /// index would have reported one for, so cross-shard deduplication
+    /// reduces to querying survivors against the running union — no
+    /// re-insertion, no re-MinHashing. Concurrent inserts into `self`
+    /// are safe during the merge; inserts racing into `other` may be
+    /// missed, so synchronize with (e.g. join) every `other` writer
+    /// first — see [`AtomicBloomFilter::union_from`] for the full
+    /// memory-ordering contract.
+    pub fn union_from(&self, other: &Self) {
+        assert_eq!(
+            self.filters.len(),
+            other.filters.len(),
+            "ConcurrentLshBloomIndex::union_from: band count mismatch ({} vs {})",
+            self.filters.len(),
+            other.filters.len()
+        );
+        for (dst, src) in self.filters.iter().zip(&other.filters) {
+            dst.union_from(src);
+        }
+        self.inserted
+            .fetch_add(other.inserted.load(Ordering::Relaxed), Ordering::Relaxed);
     }
 
     /// Fill ratio of each filter (diagnostics).
@@ -181,6 +239,81 @@ mod tests {
         idx.insert_if_new_shared(&[1, 2, 3, 4]);
         assert!(idx.query(&[9, 9, 3, 9]));
         assert!(!idx.query(&[9, 9, 9, 9]));
+    }
+
+    #[test]
+    fn short_circuited_insert_keeps_exact_state_parity() {
+        // Low-entropy band values force the duplicate verdict early in
+        // the band pass, exercising the `set` tail on nearly every
+        // insert. State must stay bit-for-bit equal to the sequential
+        // index: identical verdicts during ingest AND identical answers
+        // on every later query (a dropped tail-band insert would show up
+        // here as a sequential-true / concurrent-false divergence).
+        let config = cfg(7, 5, 5_000);
+        let concurrent = ConcurrentLshBloomIndex::new(config);
+        let mut sequential = crate::index::LshBloomIndex::new(config);
+        let mut rng = Xoshiro256pp::seeded(77);
+        let docs: Vec<Vec<u64>> =
+            (0..3_000).map(|_| (0..7).map(|_| rng.next_u64() % 40).collect()).collect();
+        for d in &docs {
+            assert_eq!(
+                concurrent.insert_if_new_shared(d),
+                sequential.insert_if_new(d),
+                "verdict diverged on {d:?}"
+            );
+        }
+        for _ in 0..20_000 {
+            let probe: Vec<u64> = (0..7).map(|_| rng.next_u64() % 60).collect();
+            assert_eq!(
+                concurrent.query(&probe),
+                sequential.query(&probe),
+                "post-ingest state diverged on {probe:?}"
+            );
+        }
+        assert_eq!(concurrent.len(), sequential.len());
+    }
+
+    #[test]
+    fn union_from_merges_membership_of_both_indexes() {
+        let config = cfg(6, 4, 10_000);
+        let a = ConcurrentLshBloomIndex::new(config);
+        let b = ConcurrentLshBloomIndex::new(config);
+        let combined = ConcurrentLshBloomIndex::new(config);
+        let mut rng = Xoshiro256pp::seeded(41);
+        let docs_a: Vec<Vec<u64>> = (0..1_500).map(|_| random_bands(&mut rng, 6)).collect();
+        let docs_b: Vec<Vec<u64>> = (0..1_500).map(|_| random_bands(&mut rng, 6)).collect();
+        for d in &docs_a {
+            a.insert_if_new_shared(d);
+            combined.insert_if_new_shared(d);
+        }
+        for d in &docs_b {
+            b.insert_if_new_shared(d);
+            combined.insert_if_new_shared(d);
+        }
+        a.union_from(&b);
+        for d in docs_a.iter().chain(&docs_b) {
+            assert!(a.query(d), "doc lost in union");
+        }
+        assert_eq!(a.len(), 3_000, "union accumulates document counts");
+        // Exact bit parity with single-index ingest of the same stream.
+        assert_eq!(a.fill_ratios(), combined.fill_ratios());
+    }
+
+    #[test]
+    #[should_panic(expected = "band count mismatch")]
+    fn union_from_rejects_band_count_mismatch() {
+        let a = ConcurrentLshBloomIndex::new(cfg(6, 4, 1_000));
+        let b = ConcurrentLshBloomIndex::new(cfg(5, 4, 1_000));
+        a.union_from(&b);
+    }
+
+    #[test]
+    #[should_panic(expected = "geometry mismatch")]
+    fn union_from_rejects_filter_geometry_mismatch() {
+        // Same band count, different capacity -> different per-filter m.
+        let a = ConcurrentLshBloomIndex::new(cfg(6, 4, 1_000));
+        let b = ConcurrentLshBloomIndex::new(cfg(6, 4, 50_000));
+        a.union_from(&b);
     }
 
     #[test]

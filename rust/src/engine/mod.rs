@@ -13,7 +13,9 @@
 //!   ([`crate::bloom::probe_pair`]) with the sequential filter, so the
 //!   design-bound FP math (§4.3/§4.5) is unchanged.
 //! * [`concurrent_index::ConcurrentLshBloomIndex`] — one atomic filter
-//!   per LSH band; `insert_if_new` on `&self` from any thread.
+//!   per LSH band; `insert_if_new` on `&self` from any thread, plus a
+//!   geometry-checked `union_from` bit-OR merge — the sharded
+//!   aggregation primitive (`pipeline::shard`, paper §6).
 //! * [`batch::ConcurrentEngine`] — `submit(Vec<Doc>) -> Vec<Decision>`:
 //!   MinHash on a scoped worker pool, lock-free index probes, and an
 //!   intra-batch reconcile pass that restores deterministic verdicts.

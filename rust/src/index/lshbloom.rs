@@ -98,7 +98,10 @@ impl LshBloomIndex {
         Self { filters: BandFilters::Classic(filters), config, inserted }
     }
 
-    fn filter_params(config: &LshBloomConfig) -> BloomParams {
+    /// Per-band Bloom geometry for a config — shared with the concurrent
+    /// index so frozen snapshots and bit-OR unions always agree on
+    /// filter layout.
+    pub(crate) fn filter_params(config: &LshBloomConfig) -> BloomParams {
         let p = BloomParams::per_filter_rate(config.p_effective, config.lsh.num_bands);
         BloomParams::for_capacity(config.expected_docs.max(1), p)
     }

@@ -117,6 +117,7 @@ fn cmd_dedup(rest: Vec<String>) -> CliResult {
         .arg(ArgSpec::opt("expected-docs", "planned corpus size (filter sizing; 0 = use input size)").default("0"))
         .arg(ArgSpec::opt("workers", "worker threads (0 = all cores)").default("0"))
         .arg(ArgSpec::opt("engine", "index engine: classic|concurrent (lock-free, lshbloom only)").default("classic"))
+        .arg(ArgSpec::opt("shards", "shard count for §6 sharded aggregation (>1 runs per-shard concurrent engines + bit-OR filter merge; lshbloom/native only)").default("1"))
         .arg(ArgSpec::opt("artifacts", "AOT artifacts dir (xla backend)").default("artifacts"))
         .arg(ArgSpec::opt("out", "write surviving docs to this JSONL").default(""))
         .arg(ArgSpec::opt("save-index", "persist the LSHBloom index to this dir").default(""))
@@ -140,76 +141,140 @@ fn cmd_dedup(rest: Vec<String>) -> CliResult {
         artifacts_dir: args.get("artifacts").to_string(),
         use_shm: args.get_bool("shm"),
         engine: EngineMode::parse(args.get("engine"))?,
+        shards: args.get_usize("shards"),
         ..Default::default()
     };
     cfg.validate()?;
 
     let kind = MethodKind::parse(args.get("method"))
         .ok_or_else(|| format!("unknown method '{}'", args.get("method")))?;
-    let sample: Vec<lshbloom::corpus::Doc> =
-        docs.iter().take(1000).map(|ld| ld.doc.clone()).collect();
 
-    let (method_name, stats) = if cfg.engine == EngineMode::Concurrent {
+    let needs_engine = cfg.shards > 1 || cfg.engine == EngineMode::Concurrent;
+    if needs_engine {
+        let what = if cfg.shards > 1 { "--shards > 1" } else { "--engine concurrent" };
         if kind != MethodKind::LshBloom {
             return Err(format!(
-                "--engine concurrent supports only the lshbloom method (got '{}')",
+                "{what} supports only the lshbloom method (got '{}')",
                 args.get("method")
             )
             .into());
         }
         if cfg.backend != MinHashBackend::Native {
             return Err(format!(
-                "--engine concurrent supports only the native backend (got '{}')",
+                "{what} supports only the native backend (got '{}')",
                 args.get("backend")
             )
             .into());
         }
         if cfg.use_shm {
-            return Err("--engine concurrent does not support --shm (atomic filters are heap-resident)".into());
+            return Err(
+                format!("{what} does not support --shm (atomic filters are heap-resident)").into()
+            );
         }
-        let engine = lshbloom::engine::ConcurrentEngine::from_config(&cfg);
-        let stats = run_stream_engine(
-            &engine,
-            docs.iter().map(|ld| ld.doc.clone()),
-            PipelineOptions::from_config(&cfg),
-        );
-        ("lshbloom-concurrent".to_string(), stats)
-    } else {
-        let mut method = build_method(&cfg, kind, &sample)?;
-        let stats = run_stream(
-            &mut method,
-            docs.iter().map(|ld| ld.doc.clone()),
-            PipelineOptions::from_config(&cfg),
-        );
-        (method.name.clone(), stats)
-    };
+    }
 
-    let mut t = Table::new("dedup run", &["metric", "value"]);
-    t.row_disp(&["method".to_string(), method_name]);
-    t.row_disp(&["documents".to_string(), stats.docs.to_string()]);
-    t.row_disp(&["duplicates".to_string(), stats.duplicates.to_string()]);
-    t.row_disp(&["throughput (docs/s)".to_string(), format!("{:.0}", stats.throughput())]);
-    t.row_disp(&["wall".to_string(), format!("{:.2}s", stats.times.wall.as_secs_f64())]);
-    t.row_disp(&[
-        "minhash phase (est wall)".to_string(),
-        format!("{:.2}s", stats.times.prepare_wall_est(stats.workers).as_secs_f64()),
-    ]);
-    t.row_disp(&["index phase".to_string(), format!("{:.2}s", stats.times.decide.as_secs_f64())]);
-    t.row_disp(&["index disk".to_string(), bytes(stats.disk_bytes)]);
-    t.print();
+    let verdicts = if cfg.shards > 1 {
+        // Sharded §6 path: per-shard concurrent engines, cross-shard
+        // bit-OR filter aggregation. Composable with --engine concurrent
+        // (shard ingest is always engine-backed).
+        let stats = lshbloom::pipeline::dedup_sharded(
+            &cfg,
+            docs.iter().map(|ld| ld.doc.clone()).collect(),
+            cfg.shards,
+        );
+        let mut t = Table::new("sharded dedup run", &["metric", "value"]);
+        t.row_disp(&["method".to_string(), "lshbloom-sharded".to_string()]);
+        t.row_disp(&["shards".to_string(), cfg.shards.to_string()]);
+        t.row_disp(&["documents".to_string(), stats.docs.to_string()]);
+        t.row_disp(&[
+            "phase 1 dropped (within-shard)".to_string(),
+            stats.phase1_dropped.to_string(),
+        ]);
+        t.row_disp(&[
+            "phase 2 dropped (cross-shard)".to_string(),
+            stats.phase2_dropped.to_string(),
+        ]);
+        t.row_disp(&["survivors".to_string(), stats.survivors.len().to_string()]);
+        t.row_disp(&[
+            "throughput (docs/s)".to_string(),
+            format!("{:.0}", stats.throughput()),
+        ]);
+        t.row_disp(&[
+            "phase 1 wall (shard dedup)".to_string(),
+            format!("{:.2}s", stats.phase1_wall.as_secs_f64()),
+        ]);
+        t.row_disp(&[
+            "phase 2 wall (bit-OR aggregation)".to_string(),
+            format!("{:.2}s", stats.phase2_wall.as_secs_f64()),
+        ]);
+        t.row_disp(&["index disk".to_string(), bytes(stats.disk_bytes)]);
+        t.print();
+        stats.verdicts
+    } else {
+        let (method_name, stats) = if cfg.engine == EngineMode::Concurrent {
+            let engine = lshbloom::engine::ConcurrentEngine::from_config(&cfg);
+            let stats = run_stream_engine(
+                &engine,
+                docs.iter().map(|ld| ld.doc.clone()),
+                PipelineOptions::from_config(&cfg),
+            );
+            ("lshbloom-concurrent".to_string(), stats)
+        } else {
+            // Unit-budget estimation sample for the Bloom-unit baselines;
+            // only the classic path builds a `Method`, so only it pays
+            // for the clones.
+            let sample: Vec<lshbloom::corpus::Doc> =
+                docs.iter().take(1000).map(|ld| ld.doc.clone()).collect();
+            let mut method = build_method(&cfg, kind, &sample)?;
+            let stats = run_stream(
+                &mut method,
+                docs.iter().map(|ld| ld.doc.clone()),
+                PipelineOptions::from_config(&cfg),
+            );
+            (method.name.clone(), stats)
+        };
+
+        let mut t = Table::new("dedup run", &["metric", "value"]);
+        t.row_disp(&["method".to_string(), method_name]);
+        t.row_disp(&["documents".to_string(), stats.docs.to_string()]);
+        t.row_disp(&["duplicates".to_string(), stats.duplicates.to_string()]);
+        t.row_disp(&["throughput (docs/s)".to_string(), format!("{:.0}", stats.throughput())]);
+        t.row_disp(&["wall".to_string(), format!("{:.2}s", stats.times.wall.as_secs_f64())]);
+        t.row_disp(&[
+            "minhash phase (est wall)".to_string(),
+            format!("{:.2}s", stats.times.prepare_wall_est(stats.workers).as_secs_f64()),
+        ]);
+        t.row_disp(&["index phase".to_string(), format!("{:.2}s", stats.times.decide.as_secs_f64())]);
+        t.row_disp(&["index disk".to_string(), bytes(stats.disk_bytes)]);
+        t.print();
+        stats.verdicts
+    };
 
     if args.get_bool("report-fidelity") {
         let labels: Vec<bool> = docs.iter().map(|ld| ld.is_duplicate()).collect();
-        let c = lshbloom::eval::Confusion::from_verdicts(&stats.verdicts, &labels);
+        let c = lshbloom::eval::Confusion::from_verdicts(&verdicts, &labels);
         let mut t = Table::new("fidelity", &["precision", "recall", "f1"]);
         t.row_disp(&[f(c.precision(), 4), f(c.recall(), 4), f(c.f1(), 4)]);
         t.print();
+        if cfg.shards > 1 {
+            // Shard-order aggregation may keep a *different copy* of a
+            // duplicate pair than stream order does (the copy's shard can
+            // aggregate before the original's), which the position-based
+            // labels score as an FP+FN pair even though the surviving
+            // content set matches the sequential run.
+            eprintln!(
+                "note: sharded runs score position labels pessimistically — a duplicate \
+                 pair whose copy aggregates first counts as one FP plus one FN; treat \
+                 these figures as a lower bound (survivor content is checked exactly by \
+                 tests/shard_union.rs)"
+            );
+        }
     }
 
     if let Some(out) = args.get_opt("out").filter(|s| !s.is_empty()) {
         let survivors: Vec<&lshbloom::corpus::LabeledDoc> = docs
             .iter()
-            .zip(&stats.verdicts)
+            .zip(&verdicts)
             .filter(|(_, &dup)| !dup)
             .map(|(d, _)| d)
             .collect();
@@ -456,6 +521,16 @@ fn cmd_serve(rest: Vec<String>) -> CliResult {
         ..Default::default()
     };
     cfg.validate()?;
+    // Same rule as `dedup`: the concurrent engine's atomic filters are
+    // heap-resident and classic-layout, so silently ignoring these flags
+    // would let an operator believe the index is shm-persisted.
+    if cfg.engine == EngineMode::Concurrent && (cfg.use_shm || cfg.blocked_bloom) {
+        return Err(
+            "--engine concurrent does not support --shm/--blocked (atomic filters are \
+             heap-resident, classic layout)"
+                .into(),
+        );
+    }
     let server = lshbloom::service::DedupServer::bind(args.get("addr"), &cfg)?;
     println!(
         "lshbloom dedup service listening on {} ({} engine; send {{\"op\":\"shutdown\"}} to stop)",

@@ -22,6 +22,16 @@ pub struct BandPreparer {
     pub lsh: LshParams,
 }
 
+impl BandPreparer {
+    /// Native (Mix64) preparer with the config's band geometry — the one
+    /// construction every engine / server / bench site must share so
+    /// band hashes stay bit-identical across them.
+    pub fn from_config(cfg: &PipelineConfig) -> Self {
+        let lsh = optimal_param(cfg.threshold, cfg.num_perms);
+        Self { hasher: MinHasher::new(PermFamily::Mix64, lsh.rows_used(), cfg.ngram), lsh }
+    }
+}
+
 impl Preparer for BandPreparer {
     fn prepare_batch(&self, docs: &[Doc]) -> Vec<Prepared> {
         let mut out = Vec::with_capacity(docs.len());

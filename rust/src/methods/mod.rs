@@ -82,6 +82,11 @@ pub trait Decider: Send {
 
     /// Documents processed.
     fn len(&self) -> u64;
+
+    /// True when no documents have been processed.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
 }
 
 /// A complete deduplication method: name + the two stages.

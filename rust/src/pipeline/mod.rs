@@ -18,11 +18,14 @@
 //!   workers, a slow reader starves them, memory stays O(depth · batch).
 //!
 //! [`timing`] instruments the two phases for the Fig. 1 breakdown;
-//! [`shard`] implements the paper's §6 sharded-aggregation extension.
+//! [`shard`] implements the paper's §6 sharded-aggregation extension on
+//! the lock-free engine (per-shard `ConcurrentEngine` ingest, bit-OR
+//! filter union for cross-shard aggregation).
 
 pub mod orchestrator;
 pub mod shard;
 pub mod timing;
 
 pub use orchestrator::{run_stream, run_stream_engine, PipelineOptions, RunStats};
+pub use shard::{dedup_sharded, ShardedStats};
 pub use timing::PhaseTimes;

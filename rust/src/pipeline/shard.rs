@@ -1,99 +1,189 @@
-//! Sharded deduplication with progressive aggregation (paper §6 future
-//! work: "splitting the dataset into subsets for processing and
-//! progressively aggregating each reduced subset").
+//! Sharded deduplication with progressive bit-OR aggregation (paper §6
+//! future work: "splitting the dataset into subsets for processing and
+//! progressively aggregating each reduced subset"), running on the
+//! lock-free [`crate::engine`].
 //!
-//! Phase 1: the stream is split into `S` shards; each shard is deduped
-//! *independently* (in parallel across shards) with its own LSHBloom
-//! index, discarding within-shard duplicates.
-//! Phase 2: shard survivors are re-deduped sequentially against a single
-//! aggregate index, catching cross-shard duplicates.
+//! Phase 1: the stream is split round-robin into `S` shards; each shard
+//! is deduped *independently* (in parallel across shards) by its own
+//! [`ConcurrentEngine`] — batched MinHash + lock-free atomic-Bloom
+//! probes via [`ConcurrentEngine::submit_with_bands`], which also hands
+//! back every document's band hashes so they are computed exactly once.
+//! Phase 2: shards are aggregated in shard order against a running
+//! **bit-OR union** of the per-shard filters: each shard's survivors are
+//! rechecked with a pure `query` of the stored phase-1 band hashes
+//! (zero re-MinHashing), then the shard's whole filter is folded into
+//! the aggregate with [`ConcurrentLshBloomIndex::union_from`] — one
+//! `fetch_or` per word, no index rebuild, no re-insertion.
 //!
-//! The final survivor set equals the sequential result whenever the
-//! duplicate relation is transitively closed through originals (a
-//! duplicate's duplicate also matches the original) — the property the
-//! `matches_sequential_on_labeled_corpus` test exercises; order of
-//! survivors follows (shard, position).
+//! ## The bit-OR aggregation invariant
+//!
+//! Bloom filters are monotone bit-sets, so the union of two filters with
+//! identical geometry answers `true` for exactly the keys either filter
+//! answers `true` for. Because phase 1 inserts *every* document's bands
+//! (duplicates included — the same rule as the sequential single-pass
+//! insert), the running union after folding shards `0..s` contains
+//! precisely the bits a single sequential index would contain after
+//! ingesting those shards' documents. A shard-`s` survivor is therefore
+//! dropped in phase 2 iff it collides with *any* earlier-shard document,
+//! originals and duplicates alike — the same membership rule as the
+//! unsharded run.
+//!
+//! ## Equality and ordering caveats
+//!
+//! The final survivor *count* equals the sequential result on corpora
+//! whose duplicate relation is transitively closed through originals
+//! (exact duplicates always are — the `props_coordinator` property test
+//! requires strict equality there), and for exact duplicates the
+//! surviving *content set* matches too. Which *copy* survives can
+//! differ, though: aggregation runs in shard order, not stream order,
+//! so a duplicate pair split across shards may keep the copy and drop
+//! the stream-first original — position-based labels score that swap as
+//! one false positive plus one false negative even when the content set
+//! is exactly right (the `dedup` CLI prints a caveat with
+//! `--report-fidelity`). Borderline near-duplicates that straddle the
+//! threshold may additionally resolve to different survivor counts.
+//! Survivor order follows (shard, in-shard position). Within one shard the engine's
+//! intra-batch reconcile keeps verdicts deterministic and equal to the
+//! sequential decider (see `engine::batch`); the engine's concurrency is
+//! confined to `submit` internals, so the linearizability caveat of
+//! unsynchronized `insert_if_new_shared` callers does not apply here —
+//! shard workers never share a live index, and phase 2 reads each shard
+//! filter only after joining its thread (a happens-before edge, so no
+//! in-flight bits can be missed by the union).
 
 use crate::config::PipelineConfig;
 use crate::corpus::Doc;
-use crate::methods::lshbloom::{decider_from_config, BandPreparer};
-use crate::methods::{Decider, Preparer};
-use crate::minhash::{optimal_param, MinHasher, PermFamily};
-use std::sync::Arc;
+use crate::engine::{ConcurrentEngine, ConcurrentLshBloomIndex};
+use std::time::{Duration, Instant};
 
 /// Result of a sharded run.
 #[derive(Debug)]
 pub struct ShardedStats {
     /// Survivor documents (non-duplicates), aggregation order.
     pub survivors: Vec<Doc>,
+    /// Per-document duplicate verdicts in original stream order
+    /// (`true` = dropped in either phase).
+    pub verdicts: Vec<bool>,
     /// Duplicates dropped in phase 1 (within-shard).
     pub phase1_dropped: u64,
     /// Duplicates dropped in phase 2 (cross-shard).
     pub phase2_dropped: u64,
     /// Total documents seen.
     pub docs: u64,
+    /// Footprint of the aggregate index (static: sized by capacity).
+    pub disk_bytes: u64,
+    /// Wall time of the parallel per-shard dedup phase.
+    pub phase1_wall: Duration,
+    /// Wall time of the recheck + bit-OR aggregation phase.
+    pub phase2_wall: Duration,
 }
+
+impl ShardedStats {
+    /// Documents per second end-to-end (both phases).
+    pub fn throughput(&self) -> f64 {
+        let wall = (self.phase1_wall + self.phase2_wall).as_secs_f64();
+        self.docs as f64 / wall.max(1e-9)
+    }
+}
+
+/// Per-shard phase-1 output: kept documents with their stream position
+/// and band hashes, dropped documents' stream positions, and the shard's
+/// filled filter (for the phase-2 union).
+type ShardOutcome = (Vec<(usize, Doc, Vec<u64>)>, Vec<usize>, ConcurrentLshBloomIndex);
 
 /// Dedup `docs` across `num_shards` shards with progressive aggregation.
 pub fn dedup_sharded(cfg: &PipelineConfig, docs: Vec<Doc>, num_shards: usize) -> ShardedStats {
     assert!(num_shards > 0);
-    let lsh = optimal_param(cfg.threshold, cfg.num_perms);
-    let preparer = Arc::new(BandPreparer {
-        hasher: MinHasher::new(PermFamily::Mix64, lsh.rows_used(), cfg.ngram),
-        lsh,
-    });
-    let total = docs.len() as u64;
+    let total = docs.len();
+    // Split the worker budget across shard engines; each shard engine
+    // runs its own scoped pool inside `submit`.
+    let mut shard_cfg = cfg.clone();
+    shard_cfg.workers = (cfg.effective_workers() / num_shards).max(1);
+    let super_batch = cfg.batch_size.max(1) * shard_cfg.workers;
 
-    // Phase 1: round-robin shard assignment preserving in-shard order,
-    // then parallel per-shard dedup.
-    let mut shards: Vec<Vec<Doc>> = (0..num_shards).map(|_| Vec::new()).collect();
+    // Round-robin shard assignment preserving in-shard stream order,
+    // remembering each document's stream position for the verdict vector.
+    let mut shard_docs: Vec<Vec<Doc>> = (0..num_shards).map(|_| Vec::new()).collect();
+    let mut shard_pos: Vec<Vec<usize>> = (0..num_shards).map(|_| Vec::new()).collect();
     for (i, doc) in docs.into_iter().enumerate() {
-        shards[i % num_shards].push(doc);
+        shard_docs[i % num_shards].push(doc);
+        shard_pos[i % num_shards].push(i);
     }
 
-    let shard_results: Vec<(Vec<Doc>, u64)> = std::thread::scope(|scope| {
-        let handles: Vec<_> = shards
+    // Phase 1: engine-backed per-shard dedup, in parallel across shards.
+    let t1 = Instant::now();
+    let shard_results: Vec<ShardOutcome> = std::thread::scope(|scope| {
+        let handles: Vec<_> = shard_docs
             .into_iter()
-            .map(|shard| {
-                let preparer = Arc::clone(&preparer);
-                let shard_cfg = cfg.clone();
+            .zip(shard_pos)
+            .map(|(docs, pos)| {
+                let shard_cfg = shard_cfg.clone();
                 scope.spawn(move || {
-                    let mut decider = decider_from_config(&shard_cfg, lsh);
-                    let mut survivors = Vec::with_capacity(shard.len());
-                    let mut dropped = 0u64;
-                    for doc in shard {
-                        let prep = preparer.prepare_batch(std::slice::from_ref(&doc));
-                        if decider.decide(&prep[0]) {
-                            dropped += 1;
+                    let engine = ConcurrentEngine::from_config(&shard_cfg);
+                    let mut flags = Vec::with_capacity(docs.len());
+                    let mut bands = Vec::with_capacity(docs.len());
+                    for chunk in docs.chunks(super_batch) {
+                        let (decisions, chunk_bands) = engine.submit_with_bands(chunk);
+                        flags.extend(decisions.into_iter().map(|d| d.duplicate));
+                        bands.extend(chunk_bands);
+                    }
+                    let mut survivors = Vec::new();
+                    let mut dropped = Vec::new();
+                    let fates = docs.into_iter().zip(pos).zip(flags.into_iter().zip(bands));
+                    for ((doc, p), (dup, doc_bands)) in fates {
+                        if dup {
+                            dropped.push(p);
                         } else {
-                            survivors.push(doc);
+                            survivors.push((p, doc, doc_bands));
                         }
                     }
-                    (survivors, dropped)
+                    (survivors, dropped, engine.into_concurrent_index())
                 })
             })
             .collect();
         handles.into_iter().map(|h| h.join().expect("shard worker panicked")).collect()
     });
+    let phase1_wall = t1.elapsed();
 
-    let phase1_dropped: u64 = shard_results.iter().map(|(_, d)| *d).sum();
-
-    // Phase 2: aggregate survivors sequentially against a fresh index.
-    let mut agg = decider_from_config(cfg, lsh);
+    // Phase 2: recheck survivors against the running cross-shard union,
+    // reusing the phase-1 band hashes, then fold each shard's filter in.
+    // Shard 0's survivors all pass (the union starts empty). Building
+    // the aggregate from a shard index's own config (identical for all
+    // shards — same `shard_cfg` geometry fields) makes a `union_from`
+    // geometry mismatch impossible by construction.
+    let t2 = Instant::now();
+    let agg = ConcurrentLshBloomIndex::new(shard_results[0].2.config());
+    let mut verdicts = vec![false; total];
     let mut survivors = Vec::new();
+    let mut phase1_dropped = 0u64;
     let mut phase2_dropped = 0u64;
-    for (shard_survivors, _) in shard_results {
-        for doc in shard_survivors {
-            let prep = preparer.prepare_batch(std::slice::from_ref(&doc));
-            if agg.decide(&prep[0]) {
+    for (shard_survivors, dropped, shard_index) in shard_results {
+        phase1_dropped += dropped.len() as u64;
+        for p in dropped {
+            verdicts[p] = true;
+        }
+        for (p, doc, bands) in shard_survivors {
+            if agg.query(&bands) {
                 phase2_dropped += 1;
+                verdicts[p] = true;
             } else {
                 survivors.push(doc);
             }
         }
+        agg.union_from(&shard_index);
     }
+    let phase2_wall = t2.elapsed();
 
-    ShardedStats { survivors, phase1_dropped, phase2_dropped, docs: total }
+    ShardedStats {
+        survivors,
+        verdicts,
+        phase1_dropped,
+        phase2_dropped,
+        docs: total as u64,
+        disk_bytes: agg.disk_bytes(),
+        phase1_wall,
+        phase2_wall,
+    }
 }
 
 #[cfg(test)]
@@ -101,6 +191,7 @@ mod tests {
     use super::*;
     use crate::corpus::{DatasetSpec, LabeledCorpus};
     use crate::methods::lshbloom::lshbloom_method;
+    use crate::minhash::PermFamily;
 
     fn cfg() -> PipelineConfig {
         PipelineConfig { num_perms: 64, expected_docs: 10_000, ..Default::default() }
@@ -118,6 +209,7 @@ mod tests {
         for shards in [1usize, 2, 4, 7] {
             let stats = dedup_sharded(&cfg(), docs.clone(), shards);
             assert_eq!(stats.docs, 240);
+            assert_eq!(stats.verdicts.len(), 240);
             // Borderline near-duplicates (truncations straddling T) may
             // resolve differently depending on which variant is seen
             // first, so sharded order can drift by a few documents; exact
@@ -129,6 +221,11 @@ mod tests {
                 stats.phase1_dropped + stats.phase2_dropped + stats.survivors.len() as u64,
                 240
             );
+            // The stream-order verdict vector agrees with the counters.
+            assert_eq!(
+                stats.verdicts.iter().filter(|&&v| !v).count(),
+                stats.survivors.len()
+            );
         }
     }
 
@@ -136,8 +233,16 @@ mod tests {
     fn single_shard_equals_plain_run() {
         let c = LabeledCorpus::build(DatasetSpec::testing(29, 100, 0.4));
         let docs: Vec<Doc> = c.docs.iter().map(|ld| ld.doc.clone()).collect();
+
+        let mut seq = lshbloom_method(&cfg(), PermFamily::Mix64);
+        let seq_verdicts = seq.process_all(&c.docs);
+
         let stats = dedup_sharded(&cfg(), docs, 1);
         assert_eq!(stats.phase2_dropped, 0, "one shard has no cross-shard dups");
+        // One shard is the whole stream through one engine: verdicts are
+        // exactly the sequential decider's (the engine equivalence
+        // contract), position for position.
+        assert_eq!(stats.verdicts, seq_verdicts);
     }
 
     #[test]
@@ -147,5 +252,24 @@ mod tests {
         let stats = dedup_sharded(&cfg(), docs, 4);
         assert_eq!(stats.survivors.len(), 80);
         assert_eq!(stats.phase1_dropped + stats.phase2_dropped, 0);
+        assert!(stats.verdicts.iter().all(|&v| !v));
+        assert!(stats.disk_bytes > 0);
+    }
+
+    #[test]
+    fn more_shards_than_docs() {
+        let c = LabeledCorpus::build(DatasetSpec::testing(37, 5, 0.0));
+        let docs: Vec<Doc> = c.docs.iter().map(|ld| ld.doc.clone()).collect();
+        let stats = dedup_sharded(&cfg(), docs, 16);
+        assert_eq!(stats.survivors.len(), 5);
+        assert_eq!(stats.docs, 5);
+    }
+
+    #[test]
+    fn empty_stream() {
+        let stats = dedup_sharded(&cfg(), Vec::new(), 4);
+        assert_eq!(stats.docs, 0);
+        assert!(stats.survivors.is_empty());
+        assert!(stats.verdicts.is_empty());
     }
 }

@@ -10,7 +10,8 @@
 //!   Twins arriving on different connections in the same instant may
 //!   both be admitted (see the `engine` module's linearizability
 //!   caveat); `use_shm`/`blocked_bloom` are ignored in this mode (atomic
-//!   filters are heap-resident, classic layout).
+//!   filters are heap-resident, classic layout — the `serve` CLI rejects
+//!   those flag combinations outright so operators are not misled).
 //!
 //! `{"op":"stats"}` is always lock-free: counters live in atomic
 //! [`ServerStats`] and the index footprint is static (Bloom filters are
@@ -23,7 +24,6 @@ use crate::engine::ConcurrentEngine;
 use crate::json::{self, obj, Value};
 use crate::methods::lshbloom::{decider_from_config, BandPreparer, LshBloomDecider};
 use crate::methods::{Decider, Prepared, Preparer};
-use crate::minhash::{optimal_param, MinHasher, PermFamily};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -93,12 +93,8 @@ impl DedupServer {
     pub fn bind(addr: &str, cfg: &PipelineConfig) -> std::io::Result<Self> {
         let (backend, disk_bytes) = match cfg.engine {
             EngineMode::Classic => {
-                let lsh = optimal_param(cfg.threshold, cfg.num_perms);
-                let preparer = BandPreparer {
-                    hasher: MinHasher::new(PermFamily::Mix64, lsh.rows_used(), cfg.ngram),
-                    lsh,
-                };
-                let decider = decider_from_config(cfg, lsh);
+                let preparer = BandPreparer::from_config(cfg);
+                let decider = decider_from_config(cfg, preparer.lsh);
                 let disk = decider.disk_bytes();
                 (IndexBackend::Classic { preparer, decider: Mutex::new(decider) }, disk)
             }
@@ -131,11 +127,16 @@ impl DedupServer {
         // Period polling of the shutdown flag via a nonblocking accept
         // loop keeps the implementation dependency-free.
         self.listener.set_nonblocking(true)?;
-        let mut handles = Vec::new();
+        let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
         loop {
             if self.shared.shutdown.load(Ordering::SeqCst) {
                 break;
             }
+            // Reap completed connection threads on every loop turn;
+            // keeping every JoinHandle until shutdown would grow
+            // `handles` (and pin each thread's unfreed resources)
+            // without bound under sustained short-lived traffic.
+            handles.retain(|h| !h.is_finished());
             match self.listener.accept() {
                 Ok((stream, _)) => {
                     stream.set_nonblocking(false).ok();
@@ -148,6 +149,8 @@ impl DedupServer {
                 Err(e) => return Err(e),
             }
         }
+        // Only still-live connections remain; join them for an orderly
+        // shutdown.
         for h in handles {
             let _ = h.join();
         }

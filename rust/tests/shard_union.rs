@@ -1,0 +1,126 @@
+//! Integration: the engine-backed sharded pipeline (§6) agrees with the
+//! sequential decider on exact-duplicate corpora, and the bit-OR filter
+//! union preserves membership across shards.
+
+use lshbloom::config::PipelineConfig;
+use lshbloom::corpus::Doc;
+use lshbloom::engine::ConcurrentLshBloomIndex;
+use lshbloom::index::lshbloom::LshBloomConfig;
+use lshbloom::methods::lshbloom::lshbloom_method;
+use lshbloom::minhash::{LshParams, PermFamily};
+use lshbloom::pipeline::dedup_sharded;
+use lshbloom::rng::Xoshiro256pp;
+use std::collections::BTreeSet;
+
+fn cfg() -> PipelineConfig {
+    PipelineConfig { num_perms: 64, threshold: 0.5, expected_docs: 10_000, ..Default::default() }
+}
+
+/// Corpus where every duplicate is an *exact* copy of an earlier
+/// document, at back-distances that land both in the same shard and in
+/// different shards for the shard counts under test. Unique documents
+/// use per-document token sets (pairwise Jaccard ~0.1, far below the
+/// 0.5 threshold) so the only duplicate relation is exact equality —
+/// the regime where sharded and sequential survivor sets must agree
+/// strictly, not just within ordering drift.
+fn exact_dup_corpus(n: usize) -> Vec<Doc> {
+    let mut docs: Vec<Doc> = Vec::with_capacity(n);
+    for i in 0..n as u64 {
+        if i % 3 == 2 && i >= 17 {
+            // Cycle copy distances: 2 and 5 are cross-shard for 8/16
+            // shards (round-robin), 16 is same-shard for both.
+            let dist = [2u64, 16, 5, 16][((i / 3) % 4) as usize];
+            let src = docs[(i - dist) as usize].clone();
+            docs.push(Doc { id: i, ..src });
+        } else {
+            docs.push(Doc {
+                id: i,
+                text: format!(
+                    "unique document alpha{i} beta{i} gamma{i} delta{i} \
+                     epsilon{i} zeta{i} eta{i} theta{i}"
+                ),
+            });
+        }
+    }
+    docs
+}
+
+#[test]
+fn sharded_equals_sequential_on_exact_duplicates_at_8_and_16_shards() {
+    let docs = exact_dup_corpus(600);
+
+    let mut seq = lshbloom_method(&cfg(), PermFamily::Mix64);
+    let seq_surviving_texts: BTreeSet<String> = docs
+        .iter()
+        .filter(|d| !seq.process(d))
+        .map(|d| d.text.clone())
+        .collect();
+    let seq_survivors = seq_surviving_texts.len();
+
+    for shards in [8usize, 16] {
+        let stats = dedup_sharded(&cfg(), docs.clone(), shards);
+        assert_eq!(
+            stats.survivors.len(),
+            seq_survivors,
+            "shards={shards}: survivor count diverged from sequential"
+        );
+        // Exact duplicates are content-identical, so whichever copy a
+        // shard keeps, the surviving *content set* must match exactly.
+        let sharded_texts: BTreeSet<String> =
+            stats.survivors.iter().map(|d| d.text.clone()).collect();
+        assert_eq!(sharded_texts, seq_surviving_texts, "shards={shards}");
+        // Counters and the stream-order verdict vector agree.
+        assert_eq!(
+            stats.phase1_dropped + stats.phase2_dropped + stats.survivors.len() as u64,
+            600
+        );
+        assert_eq!(stats.verdicts.iter().filter(|&&v| !v).count(), stats.survivors.len());
+        assert!(
+            stats.phase2_dropped > 0,
+            "shards={shards}: corpus was built to contain cross-shard duplicates"
+        );
+    }
+}
+
+fn index_config(expected_docs: u64) -> LshBloomConfig {
+    LshBloomConfig::new(
+        LshParams { num_bands: 8, rows_per_band: 8 },
+        1e-8,
+        expected_docs,
+    )
+}
+
+#[test]
+fn post_merge_union_has_no_false_negatives_across_shards() {
+    // Eight independently filled shard indexes, folded into one
+    // aggregate by bit-OR: every band vector inserted into ANY shard
+    // must be reported present by the union (the merge must never clear
+    // or miss a bit).
+    let config = index_config(50_000);
+    let agg = ConcurrentLshBloomIndex::new(config);
+    let mut rng = Xoshiro256pp::seeded(61);
+    let mut all_docs: Vec<Vec<u64>> = Vec::new();
+    for _ in 0..8 {
+        let shard = ConcurrentLshBloomIndex::new(config);
+        for _ in 0..1_000 {
+            let bands: Vec<u64> = (0..8).map(|_| rng.next_u64()).collect();
+            shard.insert_if_new_shared(&bands);
+            all_docs.push(bands);
+        }
+        agg.union_from(&shard);
+    }
+    assert_eq!(agg.len(), 8_000);
+    for (i, bands) in all_docs.iter().enumerate() {
+        assert!(agg.query(bands), "doc {i} lost across the shard merge");
+    }
+}
+
+#[test]
+#[should_panic(expected = "geometry mismatch")]
+fn union_from_panics_on_geometry_mismatch() {
+    // Same band count but different planned capacity -> different
+    // per-filter bit-array length; merging would scramble probes.
+    let a = ConcurrentLshBloomIndex::new(index_config(1_000));
+    let b = ConcurrentLshBloomIndex::new(index_config(500_000));
+    a.union_from(&b);
+}
