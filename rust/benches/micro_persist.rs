@@ -1,0 +1,117 @@
+//! Persistence overhead: mmap-backed vs heap-backed concurrent ingest,
+//! and checkpoint/restore wall times.
+//!
+//! Three questions, one JSON summary line:
+//!
+//! * **Ingest tax** — same corpus, same engine, 8 threads: heap-backed
+//!   `submit` vs mmap-backed (`new_persistent`). The mmap path's writes
+//!   land in page cache, so the tax should be noise (~10%), which is
+//!   what makes always-durable ingest a sane default.
+//! * **Checkpoint wall** — msync + manifest for the live mmap engine,
+//!   full copy + manifest for the heap engine.
+//! * **Restore wall** — mmap re-attach vs heap reload.
+//!
+//! `cargo bench --bench micro_persist` (LSHBLOOM_BENCH_FAST=1 for CI).
+
+use lshbloom::config::PipelineConfig;
+use lshbloom::corpus::{CorpusGenerator, Doc, GeneratorConfig};
+use lshbloom::engine::ConcurrentEngine;
+use lshbloom::json::{obj, Value};
+use lshbloom::perf::bench::{fmt_count, fmt_dur, time_once};
+use std::path::PathBuf;
+
+const THREADS: usize = 8;
+
+fn ingest_docs_per_sec(engine: &ConcurrentEngine, docs: &[Doc]) -> f64 {
+    let super_batch = (THREADS * 128).max(256);
+    let batches: Vec<Vec<Doc>> = docs.chunks(super_batch).map(|c| c.to_vec()).collect();
+    let (_, wall) = time_once(|| {
+        for batch in batches {
+            engine.submit(batch);
+        }
+    });
+    docs.len() as f64 / wall.as_secs_f64()
+}
+
+fn main() {
+    println!("# persistence: mmap-backed vs heap ingest, checkpoint/restore walls\n");
+    let fast = std::env::var("LSHBLOOM_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let n: usize = if fast { 600 } else { 6_000 };
+
+    let g = CorpusGenerator::new(GeneratorConfig::short());
+    let mut docs: Vec<Doc> = Vec::with_capacity(n);
+    for i in 0..n as u64 {
+        if i % 5 == 4 {
+            let prev = docs[i as usize - 3].clone();
+            docs.push(Doc { id: i, ..prev });
+        } else {
+            docs.push(g.generate(0x9E57, i));
+        }
+    }
+
+    let cfg = PipelineConfig {
+        threshold: 0.5,
+        num_perms: 128,
+        p_effective: 1e-10,
+        expected_docs: n as u64,
+        workers: THREADS,
+        ..Default::default()
+    };
+
+    let state: PathBuf =
+        std::env::temp_dir().join(format!("lshbloom-micro-persist-{}", std::process::id()));
+    std::fs::remove_dir_all(&state).ok();
+    let snap: PathBuf = state.join("snapshot");
+
+    // Ingest: heap vs mmap.
+    let heap_engine = ConcurrentEngine::from_config(&cfg);
+    let heap_rate = ingest_docs_per_sec(&heap_engine, &docs);
+    let mmap_engine = ConcurrentEngine::new_persistent(&cfg, &state).expect("persistent engine");
+    let mmap_rate = ingest_docs_per_sec(&mmap_engine, &docs);
+    println!("{:<44} {:>12}/s", format!("ingest/heap/threads={THREADS}"), fmt_count(heap_rate));
+    println!(
+        "{:<44} {:>12}/s   ({:.1}% of heap)",
+        format!("ingest/mmap/threads={THREADS}"),
+        fmt_count(mmap_rate),
+        100.0 * mmap_rate / heap_rate
+    );
+
+    // Checkpoint walls: live msync vs cold copy.
+    let (_, live_ckpt) = time_once(|| mmap_engine.checkpoint(&state).expect("live checkpoint"));
+    let (_, cold_ckpt) = time_once(|| heap_engine.checkpoint(&snap).expect("cold checkpoint"));
+    println!(
+        "{:<44} {:>12}",
+        "checkpoint/live-msync",
+        fmt_dur(live_ckpt)
+    );
+    println!("{:<44} {:>12}", "checkpoint/cold-copy", fmt_dur(cold_ckpt));
+
+    // Restore walls: mmap re-attach vs heap reload (from the cold copy,
+    // whose checksums are verified — the worst case).
+    let (warm, warm_restore) =
+        time_once(|| ConcurrentEngine::restore(&cfg, &state, true).expect("warm restore"));
+    let (cold, cold_restore) =
+        time_once(|| ConcurrentEngine::restore(&cfg, &snap, false).expect("cold restore"));
+    println!("{:<44} {:>12}", "restore/mmap-reattach", fmt_dur(warm_restore));
+    println!("{:<44} {:>12}", "restore/heap-reload+checksum", fmt_dur(cold_restore));
+    assert_eq!(warm.stats(), mmap_engine.stats());
+    assert_eq!(cold.stats(), heap_engine.stats());
+
+    let summary = obj(vec![
+        ("bench", Value::str("micro_persist")),
+        ("docs", Value::u64(n as u64)),
+        ("threads", Value::u64(THREADS as u64)),
+        ("heap_docs_per_sec", Value::num(heap_rate)),
+        ("mmap_docs_per_sec", Value::num(mmap_rate)),
+        ("mmap_vs_heap", Value::num(mmap_rate / heap_rate)),
+        ("checkpoint_live_ms", Value::num(live_ckpt.as_secs_f64() * 1e3)),
+        ("checkpoint_cold_ms", Value::num(cold_ckpt.as_secs_f64() * 1e3)),
+        ("restore_mmap_ms", Value::num(warm_restore.as_secs_f64() * 1e3)),
+        ("restore_heap_ms", Value::num(cold_restore.as_secs_f64() * 1e3)),
+    ]);
+    println!("{}", summary.to_json());
+
+    drop(warm);
+    drop(mmap_engine);
+    std::fs::remove_dir_all(&state).ok();
+}

@@ -16,8 +16,10 @@ use std::path::{Path, PathBuf};
 /// dependency-free (no `libc` crate in Cargo.toml); these symbols are
 /// provided by the C runtime every Rust binary on this target already
 /// links, and the constants are the stable Linux ABI values
-/// (`asm-generic/mman-common.h`).
-mod libc {
+/// (`asm-generic/mman-common.h`). Shared with
+/// [`crate::persist::ShmAtomicBitArray`], the `&[AtomicU64]`-viewed
+/// sibling of [`ShmBitArray`].
+pub(crate) mod libc {
     // The constants below are the 64-bit Linux ABI; on other targets they
     // would compile fine and misbehave at runtime (e.g. Darwin's MS_SYNC
     // is 0x0010, and 32-bit glibc's mmap takes a 32-bit off_t, so the
@@ -162,7 +164,13 @@ impl ShmBitArray {
 
 impl Drop for ShmBitArray {
     fn drop(&mut self) {
+        // Flush before unmapping: munmap alone only schedules writeback,
+        // and a process exiting right after a clean drop could otherwise
+        // lose the unsynced tail of the filter. Errors are unreportable
+        // from drop; callers that must observe sync failures call
+        // [`ShmBitArray::sync`] explicitly first.
         unsafe {
+            let _ = libc::msync(self.ptr as *mut _, self.words * 8, libc::MS_SYNC);
             libc::munmap(self.ptr as *mut _, self.words * 8);
         }
     }

@@ -96,6 +96,16 @@ pub struct PipelineConfig {
     /// Shard counts > 1 run `pipeline::dedup_sharded`: per-shard
     /// concurrent-engine ingest, cross-shard bit-OR filter aggregation.
     pub shards: usize,
+    /// Durable state directory for the concurrent engine ("" = none):
+    /// mmap-backed filters plus a checkpoint manifest (`crate::persist`).
+    /// Drives `dedup --checkpoint-dir` / `serve --state-dir`; with
+    /// shards > 1 it is the per-shard checkpoint root for the on-disk
+    /// phase-2 union.
+    pub checkpoint_dir: String,
+    /// Checkpoint every N documents during engine-backed streaming
+    /// ingest (0 = only the final end-of-stream checkpoint). Requires
+    /// `checkpoint_dir`.
+    pub checkpoint_every: u64,
 }
 
 impl Default for PipelineConfig {
@@ -115,6 +125,8 @@ impl Default for PipelineConfig {
             channel_depth: 64,
             engine: EngineMode::Classic,
             shards: 1,
+            checkpoint_dir: String::new(),
+            checkpoint_every: 0,
         }
     }
 }
@@ -142,6 +154,29 @@ impl PipelineConfig {
         }
         if self.shards == 0 {
             return Err(Error::Config("shards must be >= 1".into()));
+        }
+        if self.checkpoint_every > 0 && self.checkpoint_dir.is_empty() {
+            return Err(Error::Config(
+                "checkpoint_every requires a checkpoint_dir".into(),
+            ));
+        }
+        if self.checkpoint_every > 0 && self.shards > 1 {
+            return Err(Error::Config(
+                "checkpoint_every is not supported with shards > 1 (each shard \
+                 checkpoints once, after its phase-1 ingest); silently ignoring it \
+                 would promise periodic durability the sharded path does not provide"
+                    .into(),
+            ));
+        }
+        if !self.checkpoint_dir.is_empty()
+            && self.shards == 1
+            && self.engine != EngineMode::Concurrent
+        {
+            return Err(Error::Config(
+                "checkpoint_dir requires the concurrent engine (the classic index \
+                 persists via LshBloomIndex::save_dir)"
+                    .into(),
+            ));
         }
         Ok(())
     }
@@ -204,6 +239,10 @@ impl PipelineConfig {
                 "engine" | "pipeline.engine" => self.engine = EngineMode::parse(v)?,
                 "shards" | "pipeline.shards" => {
                     self.shards = v.parse().map_err(|_| bad("shards"))?
+                }
+                "checkpoint_dir" | "persist.checkpoint_dir" => self.checkpoint_dir = v.clone(),
+                "checkpoint_every" | "persist.checkpoint_every" => {
+                    self.checkpoint_every = v.parse().map_err(|_| bad("checkpoint_every"))?
                 }
                 other => return Err(Error::Config(format!("unknown config key '{other}'"))),
             }
@@ -304,6 +343,36 @@ mod tests {
         assert!(cfg.validate().is_err());
         let mut cfg = PipelineConfig::default();
         assert!(cfg.apply(&parse_toml_subset("shards = x").unwrap()).is_err());
+    }
+
+    #[test]
+    fn checkpoint_keys_apply_and_validate() {
+        let mut cfg = PipelineConfig::default();
+        cfg.apply(
+            &parse_toml_subset(
+                "[persist]\ncheckpoint_dir = \"state\"\ncheckpoint_every = 1000000",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.checkpoint_dir, "state");
+        assert_eq!(cfg.checkpoint_every, 1_000_000);
+        // checkpoint_dir needs the concurrent engine (unsharded)...
+        assert!(cfg.validate().is_err());
+        cfg.engine = EngineMode::Concurrent;
+        cfg.validate().unwrap();
+        // ...or a sharded run (per-shard checkpoint root) — but only
+        // without checkpoint_every, which the sharded path cannot honor.
+        cfg.engine = EngineMode::Classic;
+        cfg.shards = 4;
+        assert!(cfg.validate().is_err(), "periodic checkpoints + shards must be rejected");
+        cfg.checkpoint_every = 0;
+        cfg.validate().unwrap();
+        // checkpoint_every without a dir is a hard error.
+        let cfg = PipelineConfig { checkpoint_every: 10, ..Default::default() };
+        assert!(cfg.validate().is_err());
+        let mut cfg = PipelineConfig::default();
+        assert!(cfg.apply(&parse_toml_subset("checkpoint_every = x").unwrap()).is_err());
     }
 
     #[test]

@@ -1,4 +1,7 @@
-//! Lock-free Bloom filter backed by `Vec<AtomicU64>`.
+//! Lock-free Bloom filter backed by `Vec<AtomicU64>` — or, for
+//! crash-safe persistence, by an mmap-backed
+//! [`crate::persist::ShmAtomicBitArray`] with identical semantics
+//! ([`AtomicBloomFilter::new_shm`] / [`AtomicBloomFilter::open_shm`]).
 //!
 //! Insertion is `fetch_or` per probed word; queries are relaxed loads.
 //! Probe positions come from the same Kirsch–Mitzenmacher derivation as
@@ -26,12 +29,35 @@
 //!   unsynchronized callers the race is documented behavior.
 
 use crate::bloom::{probe_pair, BloomFilter, BloomParams};
+use crate::error::Result;
+use crate::persist::ShmAtomicBitArray;
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Backing storage for the atomic word array: the heap, or an
+/// mmap-backed file ([`ShmAtomicBitArray`]) for crash-safe persistence
+/// and cross-process sharing. Every operation goes through
+/// `&[AtomicU64]`, so insert/probe semantics — and the FP math — are
+/// identical for both.
+enum AtomicBits {
+    Heap(Vec<AtomicU64>),
+    Shm(ShmAtomicBitArray),
+}
+
+impl AtomicBits {
+    #[inline(always)]
+    fn words(&self) -> &[AtomicU64] {
+        match self {
+            AtomicBits::Heap(v) => v,
+            AtomicBits::Shm(s) => s.words(),
+        }
+    }
+}
 
 /// A lock-free Bloom filter sharing geometry and probe derivation with
 /// [`BloomFilter`].
 pub struct AtomicBloomFilter {
-    words: Vec<AtomicU64>,
+    bits: AtomicBits,
     /// Bit-array length (= params.bits rounded up to a word multiple).
     m: u64,
     k: u32,
@@ -40,23 +66,93 @@ pub struct AtomicBloomFilter {
 }
 
 impl AtomicBloomFilter {
-    /// Filter with the given geometry.
+    fn with_bits(bits: AtomicBits, inserted: u64, params: BloomParams) -> Self {
+        let m = bits.words().len() as u64 * 64;
+        Self { bits, m, k: params.hashes, inserted: AtomicU64::new(inserted), params }
+    }
+
+    /// Heap-backed filter with the given geometry.
     pub fn new(params: BloomParams) -> Self {
         let words = params.bits.div_ceil(64) as usize;
         let mut v = Vec::with_capacity(words);
         v.resize_with(words, || AtomicU64::new(0));
-        Self {
-            words: v,
-            m: words as u64 * 64,
-            k: params.hashes,
-            inserted: AtomicU64::new(0),
-            params,
+        Self::with_bits(AtomicBits::Heap(v), 0, params)
+    }
+
+    /// Heap-backed filter for `n` planned elements at rate `p`.
+    pub fn with_capacity(n: u64, p: f64) -> Self {
+        Self::new(BloomParams::for_capacity(n, p))
+    }
+
+    /// Filter backed by a freshly created (zeroed) mmap file — point the
+    /// path at `/dev/shm/...` for the paper's DRAM-resident setup or any
+    /// filesystem path for plain persistence. Same `fetch_or`/relaxed-
+    /// probe semantics as the heap variant.
+    pub fn new_shm(params: BloomParams, path: &Path) -> Result<Self> {
+        let words = params.bits.div_ceil(64) as usize;
+        let shm = ShmAtomicBitArray::create(path, words)?;
+        Ok(Self::with_bits(AtomicBits::Shm(shm), 0, params))
+    }
+
+    /// Filter re-attached to an existing persisted bit file (exact-size
+    /// discipline — see [`ShmAtomicBitArray::open`]). `inserted` is the
+    /// element count recorded alongside the file (checkpoint manifest).
+    pub fn open_shm(params: BloomParams, path: &Path, inserted: u64) -> Result<Self> {
+        let words = params.bits.div_ceil(64) as usize;
+        let shm = ShmAtomicBitArray::open(path, words)?;
+        Ok(Self::with_bits(AtomicBits::Shm(shm), inserted, params))
+    }
+
+    /// Heap-backed filter adopting pre-loaded words (checkpoint restore
+    /// without keeping the file mapped).
+    pub(crate) fn from_heap_words(words: Vec<u64>, inserted: u64, params: BloomParams) -> Self {
+        debug_assert_eq!(words.len() as u64, params.bits.div_ceil(64));
+        let v: Vec<AtomicU64> = words.into_iter().map(AtomicU64::new).collect();
+        Self::with_bits(AtomicBits::Heap(v), inserted, params)
+    }
+
+    /// The backing file when mmap-backed, `None` on the heap.
+    pub fn backing_path(&self) -> Option<&Path> {
+        match &self.bits {
+            AtomicBits::Heap(_) => None,
+            AtomicBits::Shm(s) => Some(s.path()),
         }
     }
 
-    /// Filter for `n` planned elements at rate `p`.
-    pub fn with_capacity(n: u64, p: f64) -> Self {
-        Self::new(BloomParams::for_capacity(n, p))
+    /// Flush an mmap-backed filter's dirty pages to its file; no-op on
+    /// the heap (checkpointing a heap filter copies it instead).
+    pub fn sync(&self) -> Result<()> {
+        match &self.bits {
+            AtomicBits::Heap(_) => Ok(()),
+            AtomicBits::Shm(s) => s.sync(),
+        }
+    }
+
+    /// The atomic word array (persistence/checksum internals).
+    pub(crate) fn words(&self) -> &[AtomicU64] {
+        self.bits.words()
+    }
+
+    /// Word count of the backing array.
+    pub(crate) fn word_count(&self) -> usize {
+        self.bits.words().len()
+    }
+
+    /// OR a run of plain words into the array starting at word `offset`
+    /// (the from-file half of [`Self::union_from`]; same monotone
+    /// `fetch_or`, all-zero source words skipped).
+    pub(crate) fn or_words_at(&self, offset: usize, src: &[u64]) {
+        let words = self.bits.words();
+        for (dst, &bits) in words[offset..offset + src.len()].iter().zip(src) {
+            if bits != 0 {
+                dst.fetch_or(bits, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Fold an externally merged element count into `inserted`.
+    pub(crate) fn add_inserted(&self, n: u64) {
+        self.inserted.fetch_add(n, Ordering::Relaxed);
     }
 
     /// Insert a key (lock-free, callable from any number of threads).
@@ -67,12 +163,13 @@ impl AtomicBloomFilter {
     pub fn insert(&self, key: u64) -> bool {
         let (h1, h2) = probe_pair(key);
         let m = self.m;
+        let words = self.bits.words();
         let mut all_set = true;
         let mut h = h1;
         for _ in 0..self.k {
             let bit = h % m;
             let (w, mask) = (bit / 64, 1u64 << (bit % 64));
-            let prev = self.words[w as usize].fetch_or(mask, Ordering::Relaxed);
+            let prev = words[w as usize].fetch_or(mask, Ordering::Relaxed);
             all_set &= prev & mask != 0;
             h = h.wrapping_add(h2);
         }
@@ -95,11 +192,12 @@ impl AtomicBloomFilter {
     pub fn set(&self, key: u64) {
         let (h1, h2) = probe_pair(key);
         let m = self.m;
+        let words = self.bits.words();
         let mut h = h1;
         for _ in 0..self.k {
             let bit = h % m;
             let (w, mask) = (bit / 64, 1u64 << (bit % 64));
-            let word = &self.words[w as usize];
+            let word = &words[w as usize];
             if word.load(Ordering::Relaxed) & mask == 0 {
                 word.fetch_or(mask, Ordering::Relaxed);
             }
@@ -130,8 +228,8 @@ impl AtomicBloomFilter {
             "AtomicBloomFilter::union_from: geometry mismatch ({:?} vs {:?})",
             self.params, other.params
         );
-        debug_assert_eq!(self.words.len(), other.words.len());
-        for (dst, src) in self.words.iter().zip(&other.words) {
+        debug_assert_eq!(self.word_count(), other.word_count());
+        for (dst, src) in self.bits.words().iter().zip(other.bits.words()) {
             let bits = src.load(Ordering::Relaxed);
             if bits != 0 {
                 dst.fetch_or(bits, Ordering::Relaxed);
@@ -147,11 +245,11 @@ impl AtomicBloomFilter {
     pub fn contains(&self, key: u64) -> bool {
         let (h1, h2) = probe_pair(key);
         let m = self.m;
+        let words = self.bits.words();
         let mut h = h1;
         for _ in 0..self.k {
             let bit = h % m;
-            if self.words[(bit / 64) as usize].load(Ordering::Relaxed) & (1u64 << (bit % 64)) == 0
-            {
+            if words[(bit / 64) as usize].load(Ordering::Relaxed) & (1u64 << (bit % 64)) == 0 {
                 return false;
             }
             h = h.wrapping_add(h2);
@@ -161,7 +259,8 @@ impl AtomicBloomFilter {
 
     /// Number of bits set (popcount) — fill diagnostics.
     pub fn ones(&self) -> u64 {
-        self.words
+        self.bits
+            .words()
             .iter()
             .map(|w| w.load(Ordering::Relaxed).count_ones() as u64)
             .sum()
@@ -184,7 +283,7 @@ impl AtomicBloomFilter {
 
     /// Bytes of backing storage.
     pub fn size_bytes(&self) -> u64 {
-        (self.words.len() * 8) as u64
+        (self.bits.words().len() * 8) as u64
     }
 
     /// Convert into a sequential heap-backed [`BloomFilter`] (for
@@ -193,7 +292,10 @@ impl AtomicBloomFilter {
     /// every insert that happened before the caller obtained `self`.
     pub fn into_filter(self) -> BloomFilter {
         let inserted = self.inserted.load(Ordering::Relaxed);
-        let words: Vec<u64> = self.words.into_iter().map(|w| w.into_inner()).collect();
+        let words: Vec<u64> = match self.bits {
+            AtomicBits::Heap(v) => v.into_iter().map(|w| w.into_inner()).collect(),
+            AtomicBits::Shm(s) => s.words().iter().map(|w| w.load(Ordering::Relaxed)).collect(),
+        };
         BloomFilter::from_raw_parts(words, self.k, inserted, self.params)
     }
 }
@@ -357,6 +459,36 @@ mod tests {
         let a = AtomicBloomFilter::with_capacity(1_000, 1e-4);
         let b = AtomicBloomFilter::with_capacity(2_000, 1e-4);
         a.union_from(&b);
+    }
+
+    #[test]
+    fn shm_backed_filter_is_bit_identical_to_heap() {
+        let dir = std::env::temp_dir().join(format!("lshbloom-ab-shm-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("f.bits");
+        let params = BloomParams::for_capacity(3_000, 1e-5);
+        let heap = AtomicBloomFilter::new(params);
+        let shm = AtomicBloomFilter::new_shm(params, &path).unwrap();
+        assert_eq!(shm.backing_path(), Some(path.as_path()));
+        assert_eq!(heap.backing_path(), None);
+        let mut rng = Xoshiro256pp::seeded(91);
+        for _ in 0..3_000 {
+            let k = rng.next_u64();
+            assert_eq!(heap.insert(k), shm.insert(k), "verdict diverged for {k}");
+        }
+        assert_eq!(heap.ones(), shm.ones());
+        shm.sync().unwrap();
+        let (ones, inserted) = (shm.ones(), shm.inserted());
+        drop(shm);
+        // Re-attach: same bits, same answers — the warm-start contract.
+        let reopened = AtomicBloomFilter::open_shm(params, &path, inserted).unwrap();
+        assert_eq!(reopened.ones(), ones);
+        assert_eq!(reopened.inserted(), inserted);
+        for _ in 0..20_000 {
+            let k = rng.next_u64();
+            assert_eq!(heap.contains(k), reopened.contains(k));
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -110,13 +110,75 @@ impl ConcurrentEngine {
         index_cfg: LshBloomConfig,
         workers: usize,
     ) -> Self {
+        Self::with_index(preparer, ConcurrentLshBloomIndex::new(index_cfg), workers, 0, 0)
+    }
+
+    fn with_index(
+        preparer: Arc<dyn Preparer>,
+        index: ConcurrentLshBloomIndex,
+        workers: usize,
+        docs: u64,
+        duplicates: u64,
+    ) -> Self {
         Self {
             preparer,
-            index: ConcurrentLshBloomIndex::new(index_cfg),
+            index,
             workers: workers.max(1),
-            docs: AtomicU64::new(0),
-            duplicates: AtomicU64::new(0),
+            docs: AtomicU64::new(docs),
+            duplicates: AtomicU64::new(duplicates),
         }
+    }
+
+    /// Engine whose filters are mmap-backed under `dir` (fresh, zeroed):
+    /// same verdicts as [`Self::from_config`], but every insert lands in
+    /// a file and [`Self::checkpoint`] into the same `dir` is an msync +
+    /// manifest rewrite instead of a full copy.
+    pub fn new_persistent(
+        cfg: &PipelineConfig,
+        dir: &std::path::Path,
+    ) -> crate::error::Result<Self> {
+        let preparer = BandPreparer::from_config(cfg);
+        let index_cfg = LshBloomConfig::new(preparer.lsh, cfg.p_effective, cfg.expected_docs);
+        let index = ConcurrentLshBloomIndex::new_shm(index_cfg, dir)?;
+        Ok(Self::with_index(Arc::new(preparer), index, cfg.effective_workers(), 0, 0))
+    }
+
+    /// Rebuild an engine from the checkpoint in `dir` (written by
+    /// [`Self::checkpoint`]), restoring filter bits and the
+    /// docs/duplicates counters recorded in the manifest.
+    ///
+    /// Geometry derived from `cfg` must match the manifest exactly or
+    /// restore refuses (a mismatched filter would answer `false` for
+    /// keys it never probed — Bloom false negatives). With `mmap` the
+    /// checkpoint files become the live backing store (warm start /
+    /// resume-in-place); without it the bits are copied to the heap and
+    /// `dir` is left untouched.
+    pub fn restore(
+        cfg: &PipelineConfig,
+        dir: &std::path::Path,
+        mmap: bool,
+    ) -> crate::error::Result<Self> {
+        let preparer = BandPreparer::from_config(cfg);
+        let index_cfg = LshBloomConfig::new(preparer.lsh, cfg.p_effective, cfg.expected_docs);
+        let (index, manifest) = crate::persist::restore_index(dir, &index_cfg, mmap)?;
+        Ok(Self::with_index(
+            Arc::new(preparer),
+            index,
+            cfg.effective_workers(),
+            manifest.docs,
+            manifest.duplicates,
+        ))
+    }
+
+    /// Persist the engine's full state into `dir` (filter bits + a
+    /// versioned manifest with geometry, counters, and checksums — see
+    /// [`crate::persist`]). Callable between batches on a live engine;
+    /// filters already mmap-backed in `dir` are msync'd in place, any
+    /// others are copied out as a cold snapshot.
+    pub fn checkpoint(&self, dir: &std::path::Path) -> crate::error::Result<()> {
+        let (docs, duplicates) = self.stats();
+        crate::persist::write_checkpoint(&self.index, docs, duplicates, dir)?;
+        Ok(())
     }
 
     /// The underlying lock-free index.
@@ -370,6 +432,49 @@ mod tests {
             }
             assert_eq!(verdicts, expected, "batch_size={batch_size}");
         }
+    }
+
+    #[test]
+    fn checkpoint_restore_roundtrip_preserves_state() {
+        let dir = std::env::temp_dir().join(format!("lshbloom-eng-ckpt-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let config = cfg();
+        let engine = ConcurrentEngine::from_config(&config);
+        let docs: Vec<Doc> = (0..40)
+            .map(|i| Doc { id: i, text: format!("checkpoint doc {}", i % 13) })
+            .collect();
+        engine.submit(docs.clone());
+        let before = engine.stats();
+        engine.checkpoint(&dir).unwrap();
+        // Heap restore: bits copied out, dir untouched afterwards.
+        let restored = ConcurrentEngine::restore(&config, &dir, false).unwrap();
+        assert_eq!(restored.stats(), before, "counters must survive the manifest");
+        for doc in &docs {
+            assert!(restored.query_one(doc), "restored engine lost doc {}", doc.id);
+        }
+        // Mmap restore re-attaches the files in place.
+        let warm = ConcurrentEngine::restore(&config, &dir, true).unwrap();
+        assert_eq!(warm.stats(), before);
+        for doc in &docs {
+            assert!(warm.query_one(doc));
+        }
+        drop(warm);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_geometry() {
+        let dir = std::env::temp_dir().join(format!("lshbloom-eng-geo-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let config = cfg();
+        let engine = ConcurrentEngine::from_config(&config);
+        engine.submit(vec![Doc { id: 0, text: "geometry guard document".into() }]);
+        engine.checkpoint(&dir).unwrap();
+        let mut other = config.clone();
+        other.expected_docs *= 2; // different filter sizing
+        let err = ConcurrentEngine::restore(&other, &dir, false).unwrap_err();
+        assert!(err.to_string().contains("geometry mismatch"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

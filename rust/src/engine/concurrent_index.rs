@@ -45,6 +45,75 @@ impl ConcurrentLshBloomIndex {
         Self { filters, config, inserted: AtomicU64::new(0) }
     }
 
+    /// Index with every band filter mmap-backed under `dir`
+    /// (`band{i:03}.bits`, freshly zeroed) — the durable variant: same
+    /// lock-free semantics, but every `fetch_or` lands in a file, and
+    /// `persist::write_checkpoint` on this index is an msync instead of
+    /// a copy. Point `dir` at `/dev/shm/...` for the paper's
+    /// DRAM-resident setup (§4.4.2) or any path for plain persistence.
+    pub fn new_shm(config: LshBloomConfig, dir: &std::path::Path) -> crate::error::Result<Self> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| crate::error::Error::io(dir.display().to_string(), e))?;
+        // A fresh index invalidates any checkpoint already in `dir`, so
+        // the stale manifest must go *before* the filter files are
+        // zeroed: if it survived and this process crashed before its
+        // first checkpoint, a later restore would trust the old
+        // manifest over the new empty filters (live mode skips
+        // checksums) and skip documents whose bits are gone — silent
+        // Bloom false negatives. Removal failure (other than the file
+        // not existing) is therefore a hard error.
+        for stale in [
+            crate::persist::manifest::MANIFEST_FILE.to_string(),
+            format!("{}.tmp", crate::persist::manifest::MANIFEST_FILE),
+        ] {
+            let path = dir.join(stale);
+            match std::fs::remove_file(&path) {
+                Ok(()) => {}
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                Err(e) => {
+                    return Err(crate::error::Error::io(path.display().to_string(), e))
+                }
+            }
+        }
+        let params = crate::index::LshBloomIndex::filter_params(&config);
+        let mut filters = Vec::with_capacity(config.lsh.num_bands);
+        for band in 0..config.lsh.num_bands {
+            let path = dir.join(crate::persist::manifest::band_file_name(band));
+            filters.push(AtomicBloomFilter::new_shm(params, &path)?);
+        }
+        Ok(Self { filters, config, inserted: AtomicU64::new(0) })
+    }
+
+    /// Index adopting pre-built band filters (checkpoint restore).
+    pub(crate) fn from_parts(
+        filters: Vec<AtomicBloomFilter>,
+        config: LshBloomConfig,
+        inserted: u64,
+    ) -> Self {
+        debug_assert_eq!(filters.len(), config.lsh.num_bands);
+        Self { filters, config, inserted: AtomicU64::new(inserted) }
+    }
+
+    /// The per-band filters (persistence internals).
+    pub(crate) fn filters(&self) -> &[AtomicBloomFilter] {
+        &self.filters
+    }
+
+    /// Fold an externally merged document count into the index counter
+    /// (the from-file half of [`Self::union_from`]'s accounting).
+    pub(crate) fn add_inserted(&self, n: u64) {
+        self.inserted.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Flush every mmap-backed band filter to its file (no-op for heap
+    /// filters). See [`AtomicBloomFilter::sync`].
+    pub fn sync(&self) -> crate::error::Result<()> {
+        for f in &self.filters {
+            f.sync()?;
+        }
+        Ok(())
+    }
+
     /// The configuration this index was built with.
     pub fn config(&self) -> LshBloomConfig {
         self.config

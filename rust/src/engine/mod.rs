@@ -20,6 +20,13 @@
 //!   MinHash on a scoped worker pool, lock-free index probes, and an
 //!   intra-batch reconcile pass that restores deterministic verdicts.
 //!
+//! Every layer can be backed by mmap'd files instead of the heap
+//! ([`crate::persist`]): `AtomicBloomFilter::new_shm`/`open_shm`,
+//! `ConcurrentLshBloomIndex::new_shm`, and
+//! `ConcurrentEngine::new_persistent`/`checkpoint`/`restore` give the
+//! lock-free path crash-safe persistence and cross-process sharing with
+//! identical insert/probe semantics.
+//!
 //! ## Linearizability caveat (read before choosing this engine)
 //!
 //! Concurrent `insert_if_new` calls are not linearizable: twins inserted

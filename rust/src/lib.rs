@@ -38,6 +38,7 @@ pub mod logging;
 pub mod methods;
 pub mod minhash;
 pub mod perf;
+pub mod persist;
 pub mod pipeline;
 pub mod report;
 pub mod rng;

@@ -14,7 +14,7 @@ use lshbloom::config::{EngineMode, MinHashBackend, PipelineConfig};
 use lshbloom::corpus::{DatasetSpec, LabeledCorpus};
 use lshbloom::eval::experiments::{self, Scale};
 use lshbloom::methods::{MethodKind, MethodSpec};
-use lshbloom::pipeline::{run_stream, run_stream_engine, PipelineOptions};
+use lshbloom::pipeline::{run_stream, PipelineOptions};
 use lshbloom::report::table::{bytes, f, Table};
 use std::path::{Path, PathBuf};
 
@@ -121,6 +121,19 @@ fn cmd_dedup(rest: Vec<String>) -> CliResult {
         .arg(ArgSpec::opt("artifacts", "AOT artifacts dir (xla backend)").default("artifacts"))
         .arg(ArgSpec::opt("out", "write surviving docs to this JSONL").default(""))
         .arg(ArgSpec::opt("save-index", "persist the LSHBloom index to this dir").default(""))
+        .arg(ArgSpec::opt(
+            "checkpoint-dir",
+            "durable state dir (concurrent engine): mmap-backed filters + checkpoint \
+             manifest; with --shards, each shard persists here for the on-disk phase-2 union",
+        ).default(""))
+        .arg(ArgSpec::opt(
+            "checkpoint-every",
+            "checkpoint every N documents (0 = only at end of stream)",
+        ).default("0"))
+        .arg(ArgSpec::switch(
+            "resume",
+            "restore from the checkpoint in --checkpoint-dir and skip the documents it covers",
+        ))
         .arg(ArgSpec::switch("shm", "host bloom filters in /dev/shm (classic engine)"))
         .arg(ArgSpec::switch("report-fidelity", "score against duplicate_of labels if present"));
     let args = parse(cmd, rest)?;
@@ -142,12 +155,27 @@ fn cmd_dedup(rest: Vec<String>) -> CliResult {
         use_shm: args.get_bool("shm"),
         engine: EngineMode::parse(args.get("engine"))?,
         shards: args.get_usize("shards"),
+        checkpoint_dir: args.get("checkpoint-dir").to_string(),
+        checkpoint_every: args.get_u64("checkpoint-every"),
         ..Default::default()
     };
     cfg.validate()?;
 
     let kind = MethodKind::parse(args.get("method"))
         .ok_or_else(|| format!("unknown method '{}'", args.get("method")))?;
+
+    let checkpoint_dir = Some(&cfg.checkpoint_dir)
+        .filter(|s| !s.is_empty())
+        .map(PathBuf::from);
+    let resume = args.get_bool("resume");
+    if resume && checkpoint_dir.is_none() {
+        return Err("--resume requires --checkpoint-dir".into());
+    }
+    if resume && cfg.shards > 1 {
+        return Err("--resume is not supported with --shards (shard checkpoints are \
+                    phase-2 aggregation state, not a stream position)"
+            .into());
+    }
 
     let needs_engine = cfg.shards > 1 || cfg.engine == EngineMode::Concurrent;
     if needs_engine {
@@ -167,21 +195,29 @@ fn cmd_dedup(rest: Vec<String>) -> CliResult {
             .into());
         }
         if cfg.use_shm {
-            return Err(
-                format!("{what} does not support --shm (atomic filters are heap-resident)").into()
-            );
+            return Err(format!(
+                "{what} does not support --shm (file-backed atomic filters go through \
+                 --checkpoint-dir instead)"
+            )
+            .into());
         }
     }
 
+    // Documents skipped on --resume (already processed by the run that
+    // wrote the checkpoint); verdicts cover only the remainder.
+    let mut skipped = 0usize;
     let verdicts = if cfg.shards > 1 {
         // Sharded §6 path: per-shard concurrent engines, cross-shard
         // bit-OR filter aggregation. Composable with --engine concurrent
-        // (shard ingest is always engine-backed).
-        let stats = lshbloom::pipeline::dedup_sharded(
+        // (shard ingest is always engine-backed). With --checkpoint-dir,
+        // every shard persists its filled filter there and phase 2
+        // aggregates straight from the files (the cross-process seam).
+        let stats = lshbloom::pipeline::dedup_sharded_with_state(
             &cfg,
             docs.iter().map(|ld| ld.doc.clone()).collect(),
             cfg.shards,
-        );
+            checkpoint_dir.as_deref(),
+        )?;
         let mut t = Table::new("sharded dedup run", &["metric", "value"]);
         t.row_disp(&["method".to_string(), "lshbloom-sharded".to_string()]);
         t.row_disp(&["shards".to_string(), cfg.shards.to_string()]);
@@ -212,12 +248,42 @@ fn cmd_dedup(rest: Vec<String>) -> CliResult {
         stats.verdicts
     } else {
         let (method_name, stats) = if cfg.engine == EngineMode::Concurrent {
-            let engine = lshbloom::engine::ConcurrentEngine::from_config(&cfg);
-            let stats = run_stream_engine(
+            let engine = match &checkpoint_dir {
+                Some(dir) if resume => {
+                    if !lshbloom::persist::CheckpointManifest::exists(dir) {
+                        return Err(format!(
+                            "--resume: no checkpoint manifest in {}",
+                            dir.display()
+                        )
+                        .into());
+                    }
+                    // Re-attach the persisted filters in place; the
+                    // manifest counters say how much of the stream the
+                    // previous run already covered.
+                    let engine = lshbloom::engine::ConcurrentEngine::restore(&cfg, dir, true)?;
+                    skipped = engine.stats().0 as usize;
+                    println!(
+                        "resumed from {} ({} documents already processed; \
+                         continuing from document {})",
+                        dir.display(),
+                        skipped,
+                        skipped
+                    );
+                    engine
+                }
+                Some(dir) => lshbloom::engine::ConcurrentEngine::new_persistent(&cfg, dir)?,
+                None => lshbloom::engine::ConcurrentEngine::from_config(&cfg),
+            };
+            let policy = checkpoint_dir.as_ref().map(|dir| lshbloom::pipeline::CheckpointPolicy {
+                dir: dir.clone(),
+                every_docs: cfg.checkpoint_every,
+            });
+            let stats = lshbloom::pipeline::run_stream_engine_checkpointed(
                 &engine,
-                docs.iter().map(|ld| ld.doc.clone()),
+                docs.iter().skip(skipped).map(|ld| ld.doc.clone()),
                 PipelineOptions::from_config(&cfg),
-            );
+                policy.as_ref(),
+            )?;
             ("lshbloom-concurrent".to_string(), stats)
         } else {
             // Unit-budget estimation sample for the Bloom-unit baselines;
@@ -250,8 +316,19 @@ fn cmd_dedup(rest: Vec<String>) -> CliResult {
         stats.verdicts
     };
 
+    if skipped > 0 {
+        // Printed unconditionally: a resumed run's fidelity AND --out
+        // survivors cover only the remainder, and the first run died
+        // before writing anything — the operator must know this output
+        // is partial.
+        eprintln!(
+            "note: --resume skipped {skipped} already-processed documents; fidelity \
+             and survivor output cover only the resumed remainder"
+        );
+    }
     if args.get_bool("report-fidelity") {
-        let labels: Vec<bool> = docs.iter().map(|ld| ld.is_duplicate()).collect();
+        let labels: Vec<bool> =
+            docs.iter().skip(skipped).map(|ld| ld.is_duplicate()).collect();
         let c = lshbloom::eval::Confusion::from_verdicts(&verdicts, &labels);
         let mut t = Table::new("fidelity", &["precision", "recall", "f1"]);
         t.row_disp(&[f(c.precision(), 4), f(c.recall(), 4), f(c.f1(), 4)]);
@@ -274,6 +351,7 @@ fn cmd_dedup(rest: Vec<String>) -> CliResult {
     if let Some(out) = args.get_opt("out").filter(|s| !s.is_empty()) {
         let survivors: Vec<&lshbloom::corpus::LabeledDoc> = docs
             .iter()
+            .skip(skipped)
             .zip(&verdicts)
             .filter(|(_, &dup)| !dup)
             .map(|(d, _)| d)
@@ -507,6 +585,11 @@ fn cmd_serve(rest: Vec<String>) -> CliResult {
         .arg(ArgSpec::opt("p-effective", "index-wide FP bound").default("1e-10"))
         .arg(ArgSpec::opt("expected-docs", "planned corpus size").default("1000000"))
         .arg(ArgSpec::opt("engine", "index engine: classic|concurrent (lock-free ingest)").default("classic"))
+        .arg(ArgSpec::opt(
+            "state-dir",
+            "durable index dir (concurrent engine): warm-start from its checkpoint when \
+             present, else create mmap-backed filters there; checkpointed on shutdown",
+        ).default(""))
         .arg(ArgSpec::switch("shm", "host bloom filters in /dev/shm (classic engine)"))
         .arg(ArgSpec::switch("blocked", "use blocked bloom filters (classic engine)"));
     let args = parse(cmd, rest)?;
@@ -518,24 +601,41 @@ fn cmd_serve(rest: Vec<String>) -> CliResult {
         use_shm: args.get_bool("shm"),
         blocked_bloom: args.get_bool("blocked"),
         engine: EngineMode::parse(args.get("engine"))?,
+        checkpoint_dir: args.get("state-dir").to_string(),
         ..Default::default()
     };
+    // Catches --state-dir without --engine concurrent, among the rest.
     cfg.validate()?;
-    // Same rule as `dedup`: the concurrent engine's atomic filters are
-    // heap-resident and classic-layout, so silently ignoring these flags
-    // would let an operator believe the index is shm-persisted.
+    // Same rule as `dedup`: these flags are classic-engine knobs, and
+    // silently ignoring them would let an operator believe the index is
+    // shm-persisted/blocked when it is not.
     if cfg.engine == EngineMode::Concurrent && (cfg.use_shm || cfg.blocked_bloom) {
         return Err(
             "--engine concurrent does not support --shm/--blocked (atomic filters are \
-             heap-resident, classic layout)"
+             classic layout; use --state-dir for file-backed persistence)"
                 .into(),
         );
     }
-    let server = lshbloom::service::DedupServer::bind(args.get("addr"), &cfg)?;
+    let state_dir = Some(&cfg.checkpoint_dir)
+        .filter(|s| !s.is_empty())
+        .map(PathBuf::from);
+    let warm = state_dir
+        .as_deref()
+        .is_some_and(lshbloom::persist::CheckpointManifest::exists);
+    let server = lshbloom::service::DedupServer::bind_with_state(
+        args.get("addr"),
+        &cfg,
+        state_dir.as_deref(),
+    )?;
     println!(
-        "lshbloom dedup service listening on {} ({} engine; send {{\"op\":\"shutdown\"}} to stop)",
+        "lshbloom dedup service listening on {} ({} engine{}; send {{\"op\":\"shutdown\"}} to stop)",
         server.local_addr()?,
         args.get("engine"),
+        match (&state_dir, warm) {
+            (Some(d), true) => format!("; warm-started from {}", d.display()),
+            (Some(d), false) => format!("; durable state in {}", d.display()),
+            (None, _) => String::new(),
+        },
     );
     server.serve()?;
     Ok(())

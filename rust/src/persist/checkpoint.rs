@@ -1,0 +1,235 @@
+//! Checkpoint write / restore / cross-process union over a
+//! [`ConcurrentLshBloomIndex`].
+//!
+//! Write order is crash-safe by construction: every filter file is
+//! durable (written-then-fsynced copies, or msync'd live mappings)
+//! *before* the manifest publishes via tmp + rename. A crash mid-
+//! checkpoint therefore leaves either the previous complete checkpoint
+//! or none; restore never sees a manifest describing half-written
+//! filters it cannot detect.
+//!
+//! Restore is strict (`ShmBitArray::open` discipline): geometry, file
+//! size, and — for snapshot checkpoints — per-file checksums must match,
+//! or restore refuses with a clear error instead of silently admitting
+//! Bloom false negatives.
+
+use super::manifest::{
+    band_file_name, CheckpointManifest, CheckpointMode, ChecksumStream, FilterFile,
+    MANIFEST_VERSION,
+};
+use crate::engine::{AtomicBloomFilter, ConcurrentLshBloomIndex};
+use crate::error::{Error, Result};
+use crate::index::lshbloom::LshBloomConfig;
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::Ordering;
+
+/// Words per IO chunk when copying a filter (64 KiB buffers).
+const COPY_CHUNK_WORDS: usize = 8 * 1024;
+
+/// Checksum a live filter's mapped/heap words (chunked relaxed loads).
+fn checksum_filter(filter: &AtomicBloomFilter) -> u64 {
+    let mut cs = ChecksumStream::new();
+    for chunk in filter.words().chunks(COPY_CHUNK_WORDS) {
+        let vals: Vec<u64> = chunk.iter().map(|w| w.load(Ordering::Relaxed)).collect();
+        cs.update(&vals);
+    }
+    cs.finish()
+}
+
+/// The one checksum-mismatch error, shared by every verify site so the
+/// writer and verifiers can never drift apart on wording or layout.
+fn checksum_mismatch(path: &Path, got: u64, want: u64) -> Error {
+    Error::Format(format!(
+        "checkpoint file {}: checksum {got:#018x} does not match manifest \
+         {want:#018x}; refusing to restore a torn filter",
+        path.display()
+    ))
+}
+
+/// Persist `index` (plus the engine counters `docs`/`duplicates`) into
+/// `dir`, returning the manifest that was written.
+///
+/// Filters already mmap-backed *inside `dir`* are checkpointed in place
+/// (msync, no copy, no checksum — the periodic-checkpoint fast path;
+/// restore never verifies live-mode checksums, so none are computed);
+/// anything else is copied out as a checksummed cold snapshot. For
+/// exact counters, call between batches — concurrent inserts during the
+/// call are safe either way (the files only ever gain bits).
+pub fn write_checkpoint(
+    index: &ConcurrentLshBloomIndex,
+    docs: u64,
+    duplicates: u64,
+    dir: &Path,
+) -> Result<CheckpointManifest> {
+    std::fs::create_dir_all(dir).map_err(|e| Error::io(dir.display().to_string(), e))?;
+    let config = index.config();
+    let params = crate::index::LshBloomIndex::filter_params(&config);
+    let filters = index.filters();
+    let mut files = Vec::with_capacity(filters.len());
+    let mut live = 0usize;
+    for (i, filter) in filters.iter().enumerate() {
+        let name = band_file_name(i);
+        let target = dir.join(&name);
+        let words = filter.word_count() as u64;
+        let checksum = if filter.backing_path() == Some(target.as_path()) {
+            // Live in-place checkpoint: the mapping *is* the file. No
+            // checksum — restore skips verification for live mode by
+            // design (post-crash bytes may legitimately be a superset),
+            // so computing one would scan every word of a multi-GB
+            // index per periodic checkpoint for a number nothing reads.
+            filter.sync()?;
+            live += 1;
+            0
+        } else {
+            // Cold copy: each word is read once into the buffer, and both
+            // the file bytes and the checksum come from that one read, so
+            // they agree even if other threads are inserting concurrently.
+            let tmp = dir.join(format!("{name}.tmp"));
+            let file = std::fs::File::create(&tmp)
+                .map_err(|e| Error::io(tmp.display().to_string(), e))?;
+            let mut w = std::io::BufWriter::new(file);
+            let mut cs = ChecksumStream::new();
+            for chunk in filter.words().chunks(COPY_CHUNK_WORDS) {
+                let vals: Vec<u64> = chunk.iter().map(|x| x.load(Ordering::Relaxed)).collect();
+                cs.update(&vals);
+                let mut bytes = Vec::with_capacity(vals.len() * 8);
+                for v in &vals {
+                    bytes.extend_from_slice(&v.to_le_bytes());
+                }
+                w.write_all(&bytes).map_err(|e| Error::io(tmp.display().to_string(), e))?;
+            }
+            let file = w
+                .into_inner()
+                .map_err(|e| Error::io(tmp.display().to_string(), e.into_error()))?;
+            file.sync_all().map_err(|e| Error::io(tmp.display().to_string(), e))?;
+            std::fs::rename(&tmp, &target)
+                .map_err(|e| Error::io(target.display().to_string(), e))?;
+            cs.finish()
+        };
+        files.push(FilterFile { name, words, checksum, inserted: filter.inserted() });
+    }
+    let manifest = CheckpointManifest {
+        version: MANIFEST_VERSION,
+        // Any in-place file means the bytes can keep moving under the
+        // manifest, so checksums are meaningless there (and unrecorded).
+        mode: if live > 0 { CheckpointMode::Live } else { CheckpointMode::Snapshot },
+        num_bands: config.lsh.num_bands,
+        rows_per_band: config.lsh.rows_per_band,
+        p_effective: config.p_effective,
+        expected_docs: config.expected_docs,
+        filter_params: params,
+        inserted: index.len(),
+        docs,
+        duplicates,
+        files,
+    };
+    manifest.save(dir)?;
+    Ok(manifest)
+}
+
+/// Read one whole band file, verifying its size (and, in snapshot mode,
+/// its checksum) before handing the words back.
+fn read_band_words(
+    dir: &Path,
+    entry: &FilterFile,
+    mode: CheckpointMode,
+    expect_words: u64,
+) -> Result<Vec<u64>> {
+    let path = dir.join(&entry.name);
+    let bytes = std::fs::read(&path).map_err(|e| Error::io(path.display().to_string(), e))?;
+    if bytes.len() as u64 != expect_words * 8 {
+        return Err(Error::Format(format!(
+            "checkpoint file {}: {} bytes on disk but the geometry needs {} \
+             ({} words); refusing to restore a torn filter",
+            path.display(),
+            bytes.len(),
+            expect_words * 8,
+            expect_words
+        )));
+    }
+    let words: Vec<u64> = bytes
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    if mode == CheckpointMode::Snapshot {
+        let mut cs = ChecksumStream::new();
+        cs.update(&words);
+        let got = cs.finish();
+        if got != entry.checksum {
+            return Err(checksum_mismatch(&path, got, entry.checksum));
+        }
+    }
+    Ok(words)
+}
+
+/// Restore an index from the checkpoint in `dir`.
+///
+/// `expect` is the geometry the caller is about to serve with; any
+/// mismatch with the manifest is a hard error (a wrong-geometry filter
+/// silently answers `false` for keys it was never probed at — Bloom
+/// false negatives). With `mmap` the band files become the live backing
+/// store (subsequent inserts mutate them in place and the next
+/// [`write_checkpoint`] is an msync); without it the words are copied to
+/// heap atomics and `dir` is left untouched.
+pub fn restore_index(
+    dir: &Path,
+    expect: &LshBloomConfig,
+    mmap: bool,
+) -> Result<(ConcurrentLshBloomIndex, CheckpointManifest)> {
+    let manifest = CheckpointManifest::load(dir)?;
+    manifest.verify_geometry(expect)?;
+    let params = manifest.filter_params;
+    let expect_words = params.bits.div_ceil(64);
+    let mut filters = Vec::with_capacity(manifest.files.len());
+    for entry in &manifest.files {
+        if mmap {
+            let path = dir.join(&entry.name);
+            let filter = AtomicBloomFilter::open_shm(params, &path, entry.inserted)?;
+            if manifest.mode == CheckpointMode::Snapshot {
+                let got = checksum_filter(&filter);
+                if got != entry.checksum {
+                    return Err(checksum_mismatch(&path, got, entry.checksum));
+                }
+            }
+            filters.push(filter);
+        } else {
+            let words = read_band_words(dir, entry, manifest.mode, expect_words)?;
+            filters.push(AtomicBloomFilter::from_heap_words(words, entry.inserted, params));
+        }
+    }
+    let index = ConcurrentLshBloomIndex::from_parts(filters, *expect, manifest.inserted);
+    Ok((index, manifest))
+}
+
+/// Bit-OR a *persisted* checkpoint into a live index — the cross-process
+/// half of the sharded-aggregation seam (paper §6): a sibling process
+/// checkpoints its shard filters, and this process folds them in
+/// straight from the files, no re-MinHashing, no IPC beyond the
+/// filesystem. Returns the merged checkpoint's document count.
+///
+/// Geometry is verified strictly against `index.config()` first, and in
+/// snapshot mode each file's checksum is verified *before* any of its
+/// bits are OR'd in, so a torn file cannot pollute the aggregate.
+pub fn union_from_checkpoint(index: &ConcurrentLshBloomIndex, dir: &Path) -> Result<u64> {
+    let manifest = CheckpointManifest::load(dir)?;
+    manifest.verify_geometry(&index.config())?;
+    let expect_words = manifest.filter_params.bits.div_ceil(64);
+    let filters = index.filters();
+    debug_assert_eq!(filters.len(), manifest.files.len());
+    for (filter, entry) in filters.iter().zip(&manifest.files) {
+        let words = read_band_words(dir, entry, manifest.mode, expect_words)?;
+        if words.len() != filter.word_count() {
+            return Err(Error::Format(format!(
+                "checkpoint file {}: {} words but the live filter has {}",
+                entry.name,
+                words.len(),
+                filter.word_count()
+            )));
+        }
+        filter.or_words_at(0, &words);
+        filter.add_inserted(entry.inserted);
+    }
+    index.add_inserted(manifest.inserted);
+    Ok(manifest.docs)
+}

@@ -1,0 +1,470 @@
+//! Versioned checkpoint manifest: the durable description of one
+//! persisted [`crate::engine::ConcurrentLshBloomIndex`].
+//!
+//! A checkpoint directory holds one raw bit file per band
+//! (`band{i:03}.bits`, little-endian u64 words — the exact bytes an
+//! mmap-backed filter leaves on disk) plus a `manifest.json` recording:
+//!
+//! * the full index geometry (band count, rows per band, the derived
+//!   per-filter [`BloomParams`], and the config inputs they came from),
+//! * the engine counters at checkpoint time (docs seen, duplicates
+//!   flagged, index inserts),
+//! * per-file word counts and checksums.
+//!
+//! The manifest is written *last* (tmp + rename) so a crash mid-
+//! checkpoint leaves either the previous complete manifest or none —
+//! never a manifest describing half-written filters. Restore verifies
+//! geometry strictly (mirroring `ShmBitArray::open`'s exact-size
+//! discipline: admitting a mismatched filter would manufacture false
+//! negatives) and, for `snapshot` checkpoints, per-file checksums.
+//! `live` checkpoints — manifests over filter files that an engine keeps
+//! mutating in place — verify geometry and size but not checksums: after
+//! a crash the kernel may have written back bits from documents ingested
+//! *after* the checkpoint, which is exactly the documented
+//! over-approximation (never under-approximation) contract.
+
+use crate::bloom::BloomParams;
+use crate::error::{Error, Result};
+use crate::index::lshbloom::LshBloomConfig;
+use crate::json::{self, obj, Value};
+use crate::minhash::LshParams;
+use crate::rng::mix64;
+use std::path::Path;
+
+/// Manifest format version; bumped on any incompatible layout change.
+pub const MANIFEST_VERSION: u64 = 1;
+
+/// File name of the manifest inside a checkpoint directory.
+pub const MANIFEST_FILE: &str = "manifest.json";
+
+/// How the filter files relate to the manifest that describes them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CheckpointMode {
+    /// Cold copy: files were written once and not touched since; restore
+    /// verifies checksums exactly.
+    Snapshot,
+    /// Files are (or were) a live mmap an engine mutates in place;
+    /// post-crash bytes may legitimately be a superset of the manifest's
+    /// snapshot, so checksums are neither recorded (stored as 0) nor
+    /// verified on restore — geometry and exact size still are.
+    Live,
+}
+
+impl CheckpointMode {
+    fn as_str(self) -> &'static str {
+        match self {
+            CheckpointMode::Snapshot => "snapshot",
+            CheckpointMode::Live => "live",
+        }
+    }
+
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "snapshot" => Ok(CheckpointMode::Snapshot),
+            "live" => Ok(CheckpointMode::Live),
+            other => Err(Error::Format(format!("unknown checkpoint mode '{other}'"))),
+        }
+    }
+}
+
+/// Per-band filter file entry.
+#[derive(Clone, Debug)]
+pub struct FilterFile {
+    /// File name inside the checkpoint directory (`band{i:03}.bits`).
+    pub name: String,
+    /// u64 word count (file size / 8).
+    pub words: u64,
+    /// [`ChecksumStream`] digest over the words at checkpoint time
+    /// (snapshot mode only; 0 and meaningless for live checkpoints).
+    pub checksum: u64,
+    /// Keys inserted into this filter at checkpoint time.
+    pub inserted: u64,
+}
+
+/// The manifest proper.
+#[derive(Clone, Debug)]
+pub struct CheckpointManifest {
+    pub version: u64,
+    pub mode: CheckpointMode,
+    /// Index geometry inputs (reconstructs [`LshBloomConfig`]).
+    pub num_bands: usize,
+    pub rows_per_band: usize,
+    pub p_effective: f64,
+    pub expected_docs: u64,
+    /// Derived per-filter geometry, recorded redundantly so a manifest
+    /// is self-checking even if the derivation formula ever drifts.
+    pub filter_params: BloomParams,
+    /// Documents inserted into the index at checkpoint time.
+    pub inserted: u64,
+    /// Engine counters at checkpoint time.
+    pub docs: u64,
+    pub duplicates: u64,
+    /// One entry per band, band order.
+    pub files: Vec<FilterFile>,
+}
+
+/// Conventional file name for band `i`.
+pub fn band_file_name(band: usize) -> String {
+    format!("band{band:03}.bits")
+}
+
+/// Running checksum over a stream of u64 words, fed in chunks.
+///
+/// mix64-chained (not a plain XOR/sum, which would miss word swaps);
+/// finish with [`ChecksumStream::finish`], which folds in the length so
+/// truncation changes the digest.
+pub struct ChecksumStream {
+    acc: u64,
+    words: u64,
+}
+
+impl ChecksumStream {
+    pub fn new() -> Self {
+        Self { acc: 0xcbf2_9ce4_8422_2325, words: 0 }
+    }
+
+    #[inline]
+    pub fn update(&mut self, words: &[u64]) {
+        for &w in words {
+            self.acc = mix64(self.acc ^ w);
+        }
+        self.words += words.len() as u64;
+    }
+
+    pub fn finish(self) -> u64 {
+        mix64(self.acc ^ self.words)
+    }
+}
+
+impl Default for ChecksumStream {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One-shot checksum of a full word slice.
+pub fn checksum_words(words: impl IntoIterator<Item = u64>) -> u64 {
+    let mut cs = ChecksumStream::new();
+    for w in words {
+        cs.update(std::slice::from_ref(&w));
+    }
+    cs.finish()
+}
+
+impl CheckpointManifest {
+    /// The [`LshBloomConfig`] this checkpoint was taken under.
+    pub fn index_config(&self) -> LshBloomConfig {
+        LshBloomConfig {
+            lsh: LshParams { num_bands: self.num_bands, rows_per_band: self.rows_per_band },
+            p_effective: self.p_effective,
+            expected_docs: self.expected_docs,
+            blocked: false,
+        }
+    }
+
+    /// Strict geometry check against a config the caller is about to
+    /// serve with. Everything that shapes filter bits must agree;
+    /// anything less silently corrupts the membership contract
+    /// (admitting false negatives), so mismatches are hard errors.
+    pub fn verify_geometry(&self, expect: &LshBloomConfig) -> Result<()> {
+        let mismatch = |what: &str, want: String, got: String| {
+            Err(Error::Format(format!(
+                "checkpoint geometry mismatch on {what}: manifest has {got}, \
+                 run config needs {want}; refusing to restore a mismatched index"
+            )))
+        };
+        if self.num_bands != expect.lsh.num_bands {
+            return mismatch(
+                "num_bands",
+                expect.lsh.num_bands.to_string(),
+                self.num_bands.to_string(),
+            );
+        }
+        if self.rows_per_band != expect.lsh.rows_per_band {
+            return mismatch(
+                "rows_per_band",
+                expect.lsh.rows_per_band.to_string(),
+                self.rows_per_band.to_string(),
+            );
+        }
+        let want = crate::index::LshBloomIndex::filter_params(expect);
+        if self.filter_params != want {
+            return mismatch(
+                "filter params",
+                format!("{want:?}"),
+                format!("{:?}", self.filter_params),
+            );
+        }
+        // Self-consistency: the recorded params must also re-derive from
+        // the recorded inputs, so a hand-edited manifest cannot smuggle
+        // mismatched geometry past the input fields.
+        let rederived = crate::index::LshBloomIndex::filter_params(&self.index_config());
+        if self.filter_params != rederived {
+            return Err(Error::Format(format!(
+                "checkpoint manifest is self-inconsistent: recorded filter params \
+                 {:?} do not re-derive from its own config inputs ({rederived:?})",
+                self.filter_params
+            )));
+        }
+        if self.files.len() != self.num_bands {
+            return Err(Error::Format(format!(
+                "checkpoint manifest lists {} filter files for {} bands",
+                self.files.len(),
+                self.num_bands
+            )));
+        }
+        let expect_words = self.filter_params.bits.div_ceil(64);
+        for f in &self.files {
+            if f.words != expect_words {
+                return Err(Error::Format(format!(
+                    "checkpoint file {} records {} words but the geometry needs {expect_words}",
+                    f.name, f.words
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize to the manifest JSON document.
+    pub fn to_json(&self) -> Value {
+        let files: Vec<Value> = self
+            .files
+            .iter()
+            .map(|f| {
+                obj(vec![
+                    ("name", Value::str(f.name.clone())),
+                    ("words", Value::u64(f.words)),
+                    // u64 checksums exceed f64's mantissa; the crate's
+                    // json keeps the raw token so they round-trip exactly.
+                    ("checksum", Value::u64(f.checksum)),
+                    ("inserted", Value::u64(f.inserted)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("version", Value::u64(self.version)),
+            ("mode", Value::str(self.mode.as_str())),
+            ("num_bands", Value::u64(self.num_bands as u64)),
+            ("rows_per_band", Value::u64(self.rows_per_band as u64)),
+            ("p_effective", Value::num(self.p_effective)),
+            ("expected_docs", Value::u64(self.expected_docs)),
+            ("filter_bits", Value::u64(self.filter_params.bits)),
+            ("filter_hashes", Value::u64(self.filter_params.hashes as u64)),
+            ("filter_capacity", Value::u64(self.filter_params.capacity)),
+            ("inserted", Value::u64(self.inserted)),
+            ("docs", Value::u64(self.docs)),
+            ("duplicates", Value::u64(self.duplicates)),
+            ("files", Value::Arr(files)),
+        ])
+    }
+
+    /// Parse a manifest document; rejects unknown versions.
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let field = |k: &str| {
+            v.get(k).ok_or_else(|| Error::Format(format!("checkpoint manifest missing '{k}'")))
+        };
+        let u = |k: &str| -> Result<u64> {
+            field(k)?
+                .as_u64()
+                .ok_or_else(|| Error::Format(format!("checkpoint manifest '{k}' not a u64")))
+        };
+        let version = u("version")?;
+        if version != MANIFEST_VERSION {
+            return Err(Error::Format(format!(
+                "checkpoint manifest version {version} unsupported (expected {MANIFEST_VERSION})"
+            )));
+        }
+        let mode = CheckpointMode::parse(
+            field("mode")?
+                .as_str()
+                .ok_or_else(|| Error::Format("checkpoint manifest 'mode' not a string".into()))?,
+        )?;
+        let p_effective = field("p_effective")?
+            .as_f64()
+            .ok_or_else(|| Error::Format("checkpoint manifest 'p_effective' not a number".into()))?;
+        let files_json = field("files")?
+            .as_arr()
+            .ok_or_else(|| Error::Format("checkpoint manifest 'files' not an array".into()))?;
+        let mut files = Vec::with_capacity(files_json.len());
+        for (i, fv) in files_json.iter().enumerate() {
+            let fu = |k: &str| -> Result<u64> {
+                fv.get(k).and_then(|x| x.as_u64()).ok_or_else(|| {
+                    Error::Format(format!("checkpoint manifest files[{i}].{k} missing or not u64"))
+                })
+            };
+            files.push(FilterFile {
+                name: fv
+                    .get("name")
+                    .and_then(|x| x.as_str())
+                    .ok_or_else(|| {
+                        Error::Format(format!("checkpoint manifest files[{i}].name missing"))
+                    })?
+                    .to_string(),
+                words: fu("words")?,
+                checksum: fu("checksum")?,
+                inserted: fu("inserted")?,
+            });
+        }
+        Ok(Self {
+            version,
+            mode,
+            num_bands: u("num_bands")? as usize,
+            rows_per_band: u("rows_per_band")? as usize,
+            p_effective,
+            expected_docs: u("expected_docs")?,
+            filter_params: BloomParams {
+                bits: u("filter_bits")?,
+                hashes: u("filter_hashes")? as u32,
+                capacity: u("filter_capacity")?,
+            },
+            inserted: u("inserted")?,
+            docs: u("docs")?,
+            duplicates: u("duplicates")?,
+            files,
+        })
+    }
+
+    /// Write to `dir/manifest.json` atomically (tmp + rename), fsyncing
+    /// the temp file so the rename publishes durable bytes.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        let tmp = dir.join(format!("{MANIFEST_FILE}.tmp"));
+        let path = dir.join(MANIFEST_FILE);
+        {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&tmp)
+                .map_err(|e| Error::io(tmp.display().to_string(), e))?;
+            f.write_all(self.to_json().to_json().as_bytes())
+                .map_err(|e| Error::io(tmp.display().to_string(), e))?;
+            f.sync_all().map_err(|e| Error::io(tmp.display().to_string(), e))?;
+        }
+        std::fs::rename(&tmp, &path).map_err(|e| Error::io(path.display().to_string(), e))?;
+        Ok(())
+    }
+
+    /// Load and parse `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        let v = json::parse(&text)
+            .map_err(|e| Error::parse("checkpoint manifest", e.to_string()))?;
+        Self::from_json(&v)
+    }
+
+    /// Whether `dir` holds a (complete) checkpoint.
+    pub fn exists(dir: &Path) -> bool {
+        dir.join(MANIFEST_FILE).is_file()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CheckpointManifest {
+        let config = LshBloomConfig {
+            lsh: LshParams { num_bands: 4, rows_per_band: 8 },
+            p_effective: 1e-8,
+            expected_docs: 10_000,
+            blocked: false,
+        };
+        let params = crate::index::LshBloomIndex::filter_params(&config);
+        let words = params.bits.div_ceil(64);
+        CheckpointManifest {
+            version: MANIFEST_VERSION,
+            mode: CheckpointMode::Snapshot,
+            num_bands: 4,
+            rows_per_band: 8,
+            p_effective: 1e-8,
+            expected_docs: 10_000,
+            filter_params: params,
+            inserted: 123,
+            docs: 150,
+            duplicates: 27,
+            files: (0..4)
+                .map(|i| FilterFile {
+                    name: band_file_name(i),
+                    words,
+                    checksum: 0xDEAD_BEEF_0000_0001 + i as u64,
+                    inserted: 123,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let m = sample();
+        let back = CheckpointManifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(back.version, m.version);
+        assert_eq!(back.mode, m.mode);
+        assert_eq!(back.num_bands, m.num_bands);
+        assert_eq!(back.rows_per_band, m.rows_per_band);
+        assert_eq!(back.p_effective, m.p_effective);
+        assert_eq!(back.expected_docs, m.expected_docs);
+        assert_eq!(back.filter_params, m.filter_params);
+        assert_eq!(back.inserted, m.inserted);
+        assert_eq!(back.docs, m.docs);
+        assert_eq!(back.duplicates, m.duplicates);
+        assert_eq!(back.files.len(), 4);
+        // u64 checksums survive the f64-mantissa trap via raw tokens.
+        assert_eq!(back.files[0].checksum, m.files[0].checksum);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("lshbloom-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = sample();
+        m.save(&dir).unwrap();
+        assert!(CheckpointManifest::exists(&dir));
+        let back = CheckpointManifest::load(&dir).unwrap();
+        assert_eq!(back.docs, m.docs);
+        assert!(!dir.join(format!("{MANIFEST_FILE}.tmp")).exists(), "tmp must be renamed away");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn geometry_verification_catches_drift() {
+        let m = sample();
+        m.verify_geometry(&m.index_config()).unwrap();
+        let mut other = m.index_config();
+        other.expected_docs = 99_999;
+        let err = m.verify_geometry(&other).unwrap_err();
+        assert!(err.to_string().contains("geometry mismatch"), "{err}");
+        let mut other = m.index_config();
+        other.lsh.num_bands = 5;
+        assert!(m.verify_geometry(&other).is_err());
+    }
+
+    #[test]
+    fn self_inconsistent_manifest_rejected() {
+        let mut m = sample();
+        m.filter_params.bits += 64; // no longer derives from the inputs
+        for f in &mut m.files {
+            f.words = m.filter_params.bits.div_ceil(64);
+        }
+        let err = m.verify_geometry(&m.index_config()).unwrap_err();
+        assert!(err.to_string().contains("mismatch"), "{err}");
+    }
+
+    #[test]
+    fn unknown_version_rejected() {
+        let mut v = sample().to_json();
+        if let Value::Obj(map) = &mut v {
+            map.insert("version".into(), Value::u64(99));
+        }
+        let err = CheckpointManifest::from_json(&v).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+    }
+
+    #[test]
+    fn checksum_detects_reorder_and_truncation() {
+        let a = checksum_words([1u64, 2, 3]);
+        let b = checksum_words([3u64, 2, 1]);
+        let c = checksum_words([1u64, 2]);
+        assert_ne!(a, b, "order must matter");
+        assert_ne!(a, c, "length must matter");
+        assert_eq!(a, checksum_words([1u64, 2, 3]), "deterministic");
+    }
+}

@@ -1,0 +1,52 @@
+//! Crash-safe persistence for the lock-free engine (ROADMAP
+//! "shm-backed atomic filters"; §4.4.2 codesign, now for the concurrent
+//! path).
+//!
+//! LSHBloom's whole dedup state is a few GB of Bloom filter bits — 18×
+//! smaller than MinhashLSH on peS2o (§4.4) — which makes whole-index
+//! persistence actually tractable at billion-document scale. This
+//! subsystem turns that size advantage into durable, resumable runs:
+//!
+//! * [`ShmAtomicBitArray`] — an mmap-backed bit store viewed as
+//!   `&[AtomicU64]`, so [`crate::engine::AtomicBloomFilter`] (and with
+//!   it the whole [`crate::engine::ConcurrentEngine`]) can be backed by
+//!   a file instead of the heap with identical `fetch_or`/relaxed-probe
+//!   semantics and unchanged FP math.
+//! * [`CheckpointManifest`] — a versioned `manifest.json` + one raw
+//!   filter file per band, recording geometry, engine counters, and
+//!   per-file checksums; restore verifies geometry strictly and refuses
+//!   torn snapshots.
+//! * [`write_checkpoint`] / [`restore_index`] — the engine-facing
+//!   checkpoint/restore primitives ([`crate::engine::ConcurrentEngine::checkpoint`]
+//!   and [`crate::engine::ConcurrentEngine::restore`] wrap them).
+//! * [`union_from_checkpoint`] — bit-OR a sibling *process's* persisted
+//!   shard filters into a live index (the cross-process half of the §6
+//!   sharded-aggregation seam; `pipeline::shard` drives it).
+//!
+//! ## Crash-consistency contract
+//!
+//! Bloom bit-sets are monotone, so a filter restored after a crash is a
+//! *superset* of the last checkpoint and a *subset* of everything ever
+//! inserted: restored state may **over-approximate** membership (a few
+//! extra duplicate flags for documents ingested after the final
+//! checkpoint) but never under-approximates — no checkpointed insert is
+//! ever lost, so resumed runs admit **zero false negatives** relative to
+//! an uninterrupted run.
+
+// Filter files are little-endian u64 words, and the mmap path reads them
+// as native words; the bloom::shm libc shim already restricts builds to
+// 64-bit Linux, and this keeps the file format honest on the (exotic)
+// big-endian variants.
+#[cfg(target_endian = "big")]
+compile_error!(
+    "persist's filter files are little-endian; the mmap-backed path would \
+     reinterpret them as big-endian words on this target"
+);
+
+pub mod checkpoint;
+pub mod manifest;
+pub mod shm_atomic;
+
+pub use checkpoint::{restore_index, union_from_checkpoint, write_checkpoint};
+pub use manifest::{CheckpointManifest, CheckpointMode, ChecksumStream, MANIFEST_FILE};
+pub use shm_atomic::ShmAtomicBitArray;

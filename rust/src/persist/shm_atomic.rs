@@ -1,0 +1,239 @@
+//! mmap-backed bit store viewed as `&[AtomicU64]`.
+//!
+//! The lock-free engine's crash-safety seam (ROADMAP: "shm-backed atomic
+//! filters"): [`crate::bloom::shm::ShmBitArray`] gives the *sequential*
+//! filter file semantics, but its `&mut`-oriented API cannot back the
+//! concurrent engine, whose whole point is `fetch_or` from many threads
+//! at once. This sibling maps the same file format (raw u64 words,
+//! page-aligned by mmap) and hands out the mapping as a shared slice of
+//! atomics, so [`crate::engine::AtomicBloomFilter`] keeps its exact
+//! `fetch_or`-insert / relaxed-probe semantics — and unchanged FP math —
+//! while every bit lands in a file.
+//!
+//! Durability model: `fetch_or` writes dirty the mapped pages; the kernel
+//! writes them back on its own schedule, [`ShmAtomicBitArray::sync`]
+//! (msync) forces it, and drop syncs before unmapping. After a crash the
+//! file holds *some superset of the last-synced state and subset of the
+//! last-written state* — for monotone Bloom bit-sets that means a
+//! restored filter can only over-approximate membership (extra duplicate
+//! flags), never under-approximate (never a lost insert that was synced,
+//! so no false negatives for checkpointed documents).
+
+use crate::bloom::shm::libc;
+use crate::error::{Error, Result};
+use std::fs::{File, OpenOptions};
+use std::os::fd::AsRawFd;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::AtomicU64;
+
+/// A u64-word bit array backed by a shared file mapping, viewed as
+/// atomics so any number of threads may `fetch_or`/load concurrently.
+pub struct ShmAtomicBitArray {
+    ptr: *mut AtomicU64,
+    words: usize,
+    path: PathBuf,
+}
+
+// The mapping itself is plain memory; all access goes through
+// `&[AtomicU64]`, which is what makes sharing across threads sound.
+unsafe impl Send for ShmAtomicBitArray {}
+unsafe impl Sync for ShmAtomicBitArray {}
+
+impl ShmAtomicBitArray {
+    /// Create (or truncate to zeros) a file of `words * 8` bytes and map
+    /// it shared.
+    pub fn create(path: &Path, words: usize) -> Result<Self> {
+        assert!(words > 0);
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        file.set_len((words * 8) as u64)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        Self::map(file, path, words)
+    }
+
+    /// Map an existing array created by [`ShmAtomicBitArray::create`] (or
+    /// any checkpointed filter file of exactly `words * 8` bytes).
+    ///
+    /// Same exact-size discipline as [`crate::bloom::shm::ShmBitArray::open`]:
+    /// a missing file is an I/O error (fabricating a zeroed array would
+    /// turn every restored key into a Bloom false negative), and a size
+    /// mismatch is [`Error::Format`] (remapping a live filter at the
+    /// wrong geometry silently corrupts the membership contract).
+    pub fn open(path: &Path, words: usize) -> Result<Self> {
+        assert!(words > 0);
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(path)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        let actual = file
+            .metadata()
+            .map_err(|e| Error::io(path.display().to_string(), e))?
+            .len();
+        let expected = (words * 8) as u64;
+        if actual != expected {
+            return Err(Error::Format(format!(
+                "shm atomic bit array {}: file is {actual} bytes but {words} words need \
+                 {expected}; refusing to remap a mismatched filter",
+                path.display()
+            )));
+        }
+        Self::map(file, path, words)
+    }
+
+    fn map(file: File, path: &Path, words: usize) -> Result<Self> {
+        let bytes = words * 8;
+        let ptr = unsafe {
+            libc::mmap(
+                std::ptr::null_mut(),
+                bytes,
+                libc::PROT_READ | libc::PROT_WRITE,
+                libc::MAP_SHARED,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == libc::MAP_FAILED {
+            return Err(Error::io(
+                path.display().to_string(),
+                std::io::Error::last_os_error(),
+            ));
+        }
+        Ok(Self { ptr: ptr as *mut AtomicU64, words, path: path.to_path_buf() })
+    }
+
+    /// The words as a shared slice of atomics — mmap guarantees the page
+    /// alignment `AtomicU64` needs, and `MAP_SHARED` makes every
+    /// `fetch_or` visible to other mappings of the same file on this
+    /// host (the cross-process sharing half of the §4.4.2 codesign).
+    #[inline(always)]
+    pub fn words(&self) -> &[AtomicU64] {
+        unsafe { std::slice::from_raw_parts(self.ptr, self.words) }
+    }
+
+    /// Flush dirty pages to the backing file (msync, blocking until the
+    /// writeback completes).
+    pub fn sync(&self) -> Result<()> {
+        let rc = unsafe { libc::msync(self.ptr as *mut _, self.words * 8, libc::MS_SYNC) };
+        if rc != 0 {
+            return Err(Error::io(
+                self.path.display().to_string(),
+                std::io::Error::last_os_error(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Backing path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for ShmAtomicBitArray {
+    fn drop(&mut self) {
+        // Same rationale as `ShmBitArray::drop`: flush the unsynced tail
+        // before unmapping so a clean shutdown never silently drops
+        // writes. Errors are unreportable here; durability-critical
+        // paths call `sync()` explicitly and observe the Result.
+        unsafe {
+            let _ = libc::msync(self.ptr as *mut _, self.words * 8, libc::MS_SYNC);
+            libc::munmap(self.ptr as *mut _, self.words * 8);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::Ordering;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("lshbloom-shma-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn create_fetch_or_reopen() {
+        let path = tmp("a.bits");
+        {
+            let arr = ShmAtomicBitArray::create(&path, 16).unwrap();
+            arr.words()[0].fetch_or(0xDEAD_BEEF, Ordering::Relaxed);
+            arr.words()[15].store(u64::MAX, Ordering::Relaxed);
+            arr.sync().unwrap();
+        }
+        {
+            let arr = ShmAtomicBitArray::open(&path, 16).unwrap();
+            assert_eq!(arr.words()[0].load(Ordering::Relaxed), 0xDEAD_BEEF);
+            assert_eq!(arr.words()[15].load(Ordering::Relaxed), u64::MAX);
+            assert_eq!(arr.words()[7].load(Ordering::Relaxed), 0);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn drop_syncs_without_explicit_msync() {
+        // Write, drop with NO sync() call, reopen: the Drop-side msync
+        // must have pushed the words to the file.
+        let path = tmp("dropsync.bits");
+        {
+            let arr = ShmAtomicBitArray::create(&path, 8).unwrap();
+            arr.words()[3].store(0x5151_5151, Ordering::Relaxed);
+        }
+        let arr = ShmAtomicBitArray::open(&path, 8).unwrap();
+        assert_eq!(arr.words()[3].load(Ordering::Relaxed), 0x5151_5151);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn open_missing_or_mismatched_refused() {
+        let path = tmp("missing.bits");
+        std::fs::remove_file(&path).ok();
+        assert!(ShmAtomicBitArray::open(&path, 8).is_err());
+        assert!(!path.exists(), "open must not fabricate a file");
+
+        let path = tmp("sized.bits");
+        {
+            let arr = ShmAtomicBitArray::create(&path, 16).unwrap();
+            arr.words()[0].store(7, Ordering::Relaxed);
+        }
+        for words in [8usize, 32] {
+            let err = ShmAtomicBitArray::open(&path, words).unwrap_err();
+            assert!(err.to_string().contains("refusing to remap"), "{err}");
+        }
+        // Refused opens left the contents intact.
+        let arr = ShmAtomicBitArray::open(&path, 16).unwrap();
+        assert_eq!(arr.words()[0].load(Ordering::Relaxed), 7);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn concurrent_fetch_or_lands_in_file() {
+        let path = tmp("conc.bits");
+        {
+            let arr = ShmAtomicBitArray::create(&path, 64).unwrap();
+            std::thread::scope(|s| {
+                for t in 0..8u64 {
+                    let arr = &arr;
+                    s.spawn(move || {
+                        for w in arr.words() {
+                            w.fetch_or(1u64 << t, Ordering::Relaxed);
+                        }
+                    });
+                }
+            });
+            arr.sync().unwrap();
+        }
+        let arr = ShmAtomicBitArray::open(&path, 64).unwrap();
+        for (i, w) in arr.words().iter().enumerate() {
+            assert_eq!(w.load(Ordering::Relaxed), 0xFF, "word {i}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}

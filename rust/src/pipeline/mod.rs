@@ -26,6 +26,9 @@ pub mod orchestrator;
 pub mod shard;
 pub mod timing;
 
-pub use orchestrator::{run_stream, run_stream_engine, PipelineOptions, RunStats};
-pub use shard::{dedup_sharded, ShardedStats};
+pub use orchestrator::{
+    run_stream, run_stream_engine, run_stream_engine_checkpointed, CheckpointPolicy,
+    PipelineOptions, RunStats,
+};
+pub use shard::{dedup_sharded, dedup_sharded_with_state, ShardedStats};
 pub use timing::PhaseTimes;

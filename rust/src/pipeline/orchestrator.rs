@@ -178,6 +178,20 @@ where
     })
 }
 
+/// When and where [`run_stream_engine_checkpointed`] persists engine
+/// state (see [`crate::persist`] for the on-disk format and the
+/// crash-consistency contract).
+#[derive(Clone, Debug)]
+pub struct CheckpointPolicy {
+    /// Checkpoint directory (`manifest.json` + one filter file per band).
+    pub dir: std::path::PathBuf,
+    /// Checkpoint after every `every_docs` processed documents
+    /// (checked at super-batch boundaries, so the manifest counters
+    /// always describe an exact stream prefix). `0` = only the final
+    /// end-of-stream checkpoint.
+    pub every_docs: u64,
+}
+
 /// Run the pipeline over a stream with the lock-free concurrent engine
 /// (`--engine concurrent`).
 ///
@@ -205,12 +219,34 @@ pub fn run_stream_engine<I>(
 where
     I: IntoIterator<Item = Doc>,
 {
+    run_stream_engine_checkpointed(engine, docs, opts, None)
+        .expect("checkpoint-free engine run cannot fail")
+}
+
+/// [`run_stream_engine`] with optional periodic durability: with a
+/// [`CheckpointPolicy`], the engine's full state (filter bits + manifest
+/// with counters) is persisted at super-batch boundaries every
+/// `every_docs` documents and once more at end of stream, so a killed
+/// run resumes from the last checkpoint instead of hour zero
+/// (`dedup --checkpoint-dir D --resume`). Checkpoints land between
+/// `submit` calls, so each manifest describes an exact stream prefix —
+/// the property the resume path's skip-count relies on.
+pub fn run_stream_engine_checkpointed<I>(
+    engine: &crate::engine::ConcurrentEngine,
+    docs: I,
+    opts: PipelineOptions,
+    policy: Option<&CheckpointPolicy>,
+) -> crate::error::Result<RunStats>
+where
+    I: IntoIterator<Item = Doc>,
+{
     let t_wall = Instant::now();
     let super_batch = opts.batch_size.max(1) * engine.workers().max(1);
     let mut verdicts = Vec::new();
     let mut duplicates = 0u64;
     let mut total = 0u64;
     let mut submit_time = Duration::ZERO;
+    let mut since_checkpoint = 0u64;
     let mut batch: Vec<Doc> = Vec::with_capacity(super_batch);
     let flush = |batch: &mut Vec<Doc>, verdicts: &mut Vec<bool>, duplicates: &mut u64| {
         if batch.is_empty() {
@@ -227,16 +263,28 @@ where
     };
     for doc in docs {
         total += 1;
+        since_checkpoint += 1;
         batch.push(doc);
         if batch.len() == super_batch {
             submit_time += flush(&mut batch, &mut verdicts, &mut duplicates);
             batch.reserve(super_batch);
+            if let Some(p) = policy {
+                if p.every_docs > 0 && since_checkpoint >= p.every_docs {
+                    engine.checkpoint(&p.dir)?;
+                    since_checkpoint = 0;
+                }
+            }
         }
     }
     submit_time += flush(&mut batch, &mut verdicts, &mut duplicates);
     assert_eq!(verdicts.len() as u64, total, "verdict count mismatch");
+    if let Some(p) = policy {
+        // Final checkpoint: a *completed* run leaves durable state too,
+        // so a follow-up incremental ingest can warm-start from it.
+        engine.checkpoint(&p.dir)?;
+    }
 
-    RunStats {
+    Ok(RunStats {
         docs: total,
         duplicates,
         disk_bytes: engine.disk_bytes(),
@@ -247,7 +295,7 @@ where
             wall: t_wall.elapsed(),
         },
         workers: engine.workers(),
-    }
+    })
 }
 
 #[cfg(test)]
@@ -339,6 +387,30 @@ mod tests {
             assert_eq!(stats.workers, w);
             assert!(stats.disk_bytes > 0);
         }
+    }
+
+    #[test]
+    fn engine_run_with_checkpoint_policy_writes_manifest() {
+        let dir = std::env::temp_dir().join(format!("lshbloom-orch-ckpt-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let c = corpus(120);
+        let mut config = cfg();
+        config.workers = 2;
+        let engine = crate::engine::ConcurrentEngine::from_config(&config);
+        let policy = CheckpointPolicy { dir: dir.clone(), every_docs: 40 };
+        let stats = run_stream_engine_checkpointed(
+            &engine,
+            c.docs.iter().map(|ld| ld.doc.clone()),
+            PipelineOptions { workers: 2, batch_size: 8, channel_depth: 4 },
+            Some(&policy),
+        )
+        .unwrap();
+        assert_eq!(stats.docs, 120);
+        // The end-of-stream checkpoint must cover the whole stream.
+        let manifest = crate::persist::CheckpointManifest::load(&dir).unwrap();
+        assert_eq!(manifest.docs, 120);
+        assert_eq!(manifest.duplicates, stats.duplicates);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

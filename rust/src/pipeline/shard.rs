@@ -54,6 +54,10 @@
 use crate::config::PipelineConfig;
 use crate::corpus::Doc;
 use crate::engine::{ConcurrentEngine, ConcurrentLshBloomIndex};
+use crate::error::Result;
+use crate::index::lshbloom::LshBloomConfig;
+use crate::minhash::optimal_param;
+use std::path::Path;
 use std::time::{Duration, Instant};
 
 /// Result of a sharded run.
@@ -88,11 +92,33 @@ impl ShardedStats {
 
 /// Per-shard phase-1 output: kept documents with their stream position
 /// and band hashes, dropped documents' stream positions, and the shard's
-/// filled filter (for the phase-2 union).
-type ShardOutcome = (Vec<(usize, Doc, Vec<u64>)>, Vec<usize>, ConcurrentLshBloomIndex);
+/// filled filter for the phase-2 union — in memory, or `None` when the
+/// shard checkpointed it to disk (the cross-process path).
+type ShardOutcome = (Vec<(usize, Doc, Vec<u64>)>, Vec<usize>, Option<ConcurrentLshBloomIndex>);
 
-/// Dedup `docs` across `num_shards` shards with progressive aggregation.
+/// Dedup `docs` across `num_shards` shards with progressive aggregation
+/// (in-memory filter union).
 pub fn dedup_sharded(cfg: &PipelineConfig, docs: Vec<Doc>, num_shards: usize) -> ShardedStats {
+    dedup_sharded_with_state(cfg, docs, num_shards, None)
+        .expect("in-memory sharded dedup cannot fail")
+}
+
+/// [`dedup_sharded`] with an optional on-disk aggregation seam: with
+/// `state_dir`, every shard *checkpoints* its filled filter to
+/// `state_dir/shard-{s:03}/` (full [`crate::persist`] manifest +
+/// per-band bit files) and phase 2 folds each shard in with
+/// [`crate::persist::union_from_checkpoint`] — straight from the files,
+/// exactly as a sibling *process* would consume them. This is the
+/// cross-process half of the §6 seam: the shard checkpoints double as
+/// the wire format for multi-process (and later multi-node) aggregation,
+/// and the survivor sets are identical to the in-memory union (the files
+/// hold the same bits the live filters do).
+pub fn dedup_sharded_with_state(
+    cfg: &PipelineConfig,
+    docs: Vec<Doc>,
+    num_shards: usize,
+    state_dir: Option<&Path>,
+) -> Result<ShardedStats> {
     assert!(num_shards > 0);
     let total = docs.len();
     // Split the worker budget across shard engines; each shard engine
@@ -111,14 +137,19 @@ pub fn dedup_sharded(cfg: &PipelineConfig, docs: Vec<Doc>, num_shards: usize) ->
     }
 
     // Phase 1: engine-backed per-shard dedup, in parallel across shards.
+    // With a state dir, each shard also checkpoints its filled filter
+    // before returning (inside the shard thread, so checkpoint IO
+    // overlaps across shards).
     let t1 = Instant::now();
     let shard_results: Vec<ShardOutcome> = std::thread::scope(|scope| {
         let handles: Vec<_> = shard_docs
             .into_iter()
             .zip(shard_pos)
-            .map(|(docs, pos)| {
+            .enumerate()
+            .map(|(s, (docs, pos))| {
                 let shard_cfg = shard_cfg.clone();
-                scope.spawn(move || {
+                let shard_state = state_dir.map(|d| d.join(format!("shard-{s:03}")));
+                scope.spawn(move || -> Result<ShardOutcome> {
                     let engine = ConcurrentEngine::from_config(&shard_cfg);
                     let mut flags = Vec::with_capacity(docs.len());
                     let mut bands = Vec::with_capacity(docs.len());
@@ -137,27 +168,43 @@ pub fn dedup_sharded(cfg: &PipelineConfig, docs: Vec<Doc>, num_shards: usize) ->
                             survivors.push((p, doc, doc_bands));
                         }
                     }
-                    (survivors, dropped, engine.into_concurrent_index())
+                    let index = match &shard_state {
+                        Some(dir) => {
+                            engine.checkpoint(dir)?;
+                            None // phase 2 reads the files, as a sibling process would
+                        }
+                        None => Some(engine.into_concurrent_index()),
+                    };
+                    Ok((survivors, dropped, index))
                 })
             })
             .collect();
-        handles.into_iter().map(|h| h.join().expect("shard worker panicked")).collect()
-    });
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("shard worker panicked"))
+            .collect::<Result<Vec<_>>>()
+    })?;
     let phase1_wall = t1.elapsed();
 
     // Phase 2: recheck survivors against the running cross-shard union,
-    // reusing the phase-1 band hashes, then fold each shard's filter in.
-    // Shard 0's survivors all pass (the union starts empty). Building
-    // the aggregate from a shard index's own config (identical for all
-    // shards — same `shard_cfg` geometry fields) makes a `union_from`
-    // geometry mismatch impossible by construction.
+    // reusing the phase-1 band hashes, then fold each shard's filter in
+    // — from memory, or straight from its persisted checkpoint. Shard
+    // 0's survivors all pass (the union starts empty). The aggregate's
+    // geometry is derived from the same config fields every shard engine
+    // used, so a `union_from` mismatch is impossible by construction
+    // (and `union_from_checkpoint` re-verifies it against each
+    // manifest anyway).
     let t2 = Instant::now();
-    let agg = ConcurrentLshBloomIndex::new(shard_results[0].2.config());
+    let agg = ConcurrentLshBloomIndex::new(LshBloomConfig::new(
+        optimal_param(cfg.threshold, cfg.num_perms),
+        cfg.p_effective,
+        cfg.expected_docs,
+    ));
     let mut verdicts = vec![false; total];
     let mut survivors = Vec::new();
     let mut phase1_dropped = 0u64;
     let mut phase2_dropped = 0u64;
-    for (shard_survivors, dropped, shard_index) in shard_results {
+    for (s, (shard_survivors, dropped, shard_index)) in shard_results.into_iter().enumerate() {
         phase1_dropped += dropped.len() as u64;
         for p in dropped {
             verdicts[p] = true;
@@ -170,11 +217,19 @@ pub fn dedup_sharded(cfg: &PipelineConfig, docs: Vec<Doc>, num_shards: usize) ->
                 survivors.push(doc);
             }
         }
-        agg.union_from(&shard_index);
+        match shard_index {
+            Some(index) => agg.union_from(&index),
+            None => {
+                let dir = state_dir
+                    .expect("index omitted only in state-dir mode")
+                    .join(format!("shard-{s:03}"));
+                crate::persist::union_from_checkpoint(&agg, &dir)?;
+            }
+        }
     }
     let phase2_wall = t2.elapsed();
 
-    ShardedStats {
+    Ok(ShardedStats {
         survivors,
         verdicts,
         phase1_dropped,
@@ -183,7 +238,7 @@ pub fn dedup_sharded(cfg: &PipelineConfig, docs: Vec<Doc>, num_shards: usize) ->
         disk_bytes: agg.disk_bytes(),
         phase1_wall,
         phase2_wall,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -254,6 +309,36 @@ mod tests {
         assert_eq!(stats.phase1_dropped + stats.phase2_dropped, 0);
         assert!(stats.verdicts.iter().all(|&v| !v));
         assert!(stats.disk_bytes > 0);
+    }
+
+    #[test]
+    fn state_dir_union_matches_in_memory_union() {
+        // The on-disk aggregation path must reproduce the in-memory
+        // bit-OR exactly: same verdict vector, same survivor contents.
+        let dir = std::env::temp_dir().join(format!("lshbloom-shard-state-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let c = LabeledCorpus::build(DatasetSpec::testing(41, 200, 0.5));
+        let docs: Vec<Doc> = c.docs.iter().map(|ld| ld.doc.clone()).collect();
+        for shards in [2usize, 5] {
+            let mem = dedup_sharded(&cfg(), docs.clone(), shards);
+            let disk =
+                dedup_sharded_with_state(&cfg(), docs.clone(), shards, Some(dir.as_path()))
+                    .unwrap();
+            assert_eq!(disk.verdicts, mem.verdicts, "shards={shards}");
+            assert_eq!(disk.survivors.len(), mem.survivors.len());
+            assert_eq!(disk.phase1_dropped, mem.phase1_dropped);
+            assert_eq!(disk.phase2_dropped, mem.phase2_dropped);
+            // The shard checkpoints are complete, manifest-described
+            // state a sibling process could consume.
+            for s in 0..shards {
+                let sdir = dir.join(format!("shard-{s:03}"));
+                assert!(
+                    crate::persist::CheckpointManifest::exists(&sdir),
+                    "shard {s} left no manifest"
+                );
+            }
+            std::fs::remove_dir_all(&dir).ok();
+        }
     }
 
     #[test]

@@ -39,6 +39,33 @@ impl DedupClient {
             .ok_or_else(|| err_from(&resp))
     }
 
+    /// Query + insert a whole batch in one round trip
+    /// (`{"op":"check_batch"}`): one syscall + one JSON parse per batch
+    /// instead of per document, and the server runs the batch through
+    /// the engine's batched fast path (which also reconciles twins
+    /// *inside* the batch). Returns one verdict per text, in order.
+    pub fn check_batch(&mut self, texts: &[&str]) -> std::io::Result<Vec<bool>> {
+        let resp = self.round_trip(json::obj(vec![
+            ("op", Value::str("check_batch")),
+            (
+                "texts",
+                Value::Arr(texts.iter().map(|t| Value::str(*t)).collect()),
+            ),
+        ]))?;
+        let Some(arr) = resp.get("duplicates").and_then(|v| v.as_arr()) else {
+            return Err(err_from(&resp));
+        };
+        if arr.len() != texts.len() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("check_batch: sent {} texts, got {} verdicts", texts.len(), arr.len()),
+            ));
+        }
+        arr.iter()
+            .map(|v| v.as_bool().ok_or_else(|| err_from(&resp)))
+            .collect()
+    }
+
     /// Query only (no state change).
     pub fn query(&mut self, text: &str) -> std::io::Result<bool> {
         let resp = self.round_trip(json::obj(vec![

@@ -9,14 +9,23 @@
 //!   no global lock, so ingest throughput scales with client count.
 //!   Twins arriving on different connections in the same instant may
 //!   both be admitted (see the `engine` module's linearizability
-//!   caveat); `use_shm`/`blocked_bloom` are ignored in this mode (atomic
-//!   filters are heap-resident, classic layout — the `serve` CLI rejects
-//!   those flag combinations outright so operators are not misled).
+//!   caveat); `use_shm`/`blocked_bloom` are classic-only (the `serve`
+//!   CLI rejects those flag combinations outright — concurrent
+//!   persistence goes through `--state-dir` instead).
 //!
-//! `{"op":"stats"}` is always lock-free: counters live in atomic
-//! [`ServerStats`] and the index footprint is static (Bloom filters are
-//! sized by planned capacity at bind time), so health checks never queue
-//! behind ingest on either backend.
+//! `{"op":"stats"}` never queues behind ingest: counters live in atomic
+//! [`ServerStats`], the classic footprint is captured at bind (genuinely
+//! static there), and the concurrent footprint is recomputed lock-free
+//! from the live engine — so a warm-started server reports its
+//! *restored* index (and, with `--state-dir`, the actual persisted
+//! bytes on disk) rather than a stale bind-time estimate.
+//!
+//! Ops: `check` / `query` (one document), `check_batch` (N documents in
+//! one round trip, hitting the engine's batched fast path), `stats`,
+//! `shutdown`. With [`DedupServer::bind_with_state`] the concurrent
+//! index is mmap-backed in a state directory: restored on bind when a
+//! checkpoint manifest is present, checkpointed again on orderly
+//! shutdown.
 
 use crate::config::{EngineMode, PipelineConfig};
 use crate::corpus::Doc;
@@ -70,16 +79,83 @@ impl IndexBackend {
             }
         }
     }
+
+    /// Query + insert for a whole batch (the `check_batch` op): one
+    /// request, one response, N verdicts — amortizing the per-document
+    /// syscall + JSON round trip the line protocol pays.
+    ///
+    /// * Concurrent — [`ConcurrentEngine::submit`]: the batched fast
+    ///   path (pooled MinHash + lock-free probes), whose intra-batch
+    ///   reconcile also catches twins *within* the batch exactly.
+    /// * Classic — MinHash the whole batch outside the lock
+    ///   (`prepare_batch`), then decide every document under a single
+    ///   lock acquisition instead of N.
+    fn decide_batch(&self, texts: &[&str]) -> Vec<bool> {
+        let docs: Vec<Doc> = texts
+            .iter()
+            .enumerate()
+            .map(|(i, t)| Doc { id: i as u64, text: (*t).to_string() })
+            .collect();
+        match self {
+            IndexBackend::Classic { preparer, decider } => {
+                let prepared = preparer.prepare_batch(&docs);
+                let mut decider = decider.lock().unwrap();
+                prepared.iter().map(|p| decider.decide(p)).collect()
+            }
+            IndexBackend::Concurrent(engine) => {
+                engine.submit(docs).into_iter().map(|d| d.duplicate).collect()
+            }
+        }
+    }
 }
 
 struct Shared {
     backend: IndexBackend,
-    /// Index footprint, captured at bind time. Bloom filters are sized by
-    /// planned capacity — the footprint never changes afterwards — so
-    /// stats requests can report it without touching the decider lock.
-    disk_bytes: u64,
+    /// Durable state directory for a warm-startable concurrent backend
+    /// (`serve --state-dir`); the orderly-shutdown checkpoint targets it.
+    state_dir: Option<std::path::PathBuf>,
+    /// Footprint snapshot taken at bind, used when the number is
+    /// genuinely static: the classic decider's backing size, or — for a
+    /// durable server — the persisted on-disk bytes (band files plus
+    /// manifest when warm-started). Bind-time is the right moment to
+    /// measure the directory: rescanning per stats request would put
+    /// filesystem walks on the health-check path and transiently
+    /// double-count `.tmp` files while a checkpoint is mid-flight. The
+    /// footprint only changes again at the shutdown checkpoint, after
+    /// which no stats request can observe it.
+    bind_disk_bytes: u64,
     stats: ServerStats,
     shutdown: AtomicBool,
+}
+
+impl Shared {
+    /// Footprint reported by `{"op":"stats"}`: the bind-time snapshot
+    /// for a durable or classic server, else recomputed lock-free from
+    /// the live engine (so a warm-started server reports its *restored*
+    /// index, never a stale estimate of some other index).
+    fn current_disk_bytes(&self) -> u64 {
+        if self.state_dir.is_some() {
+            return self.bind_disk_bytes;
+        }
+        match &self.backend {
+            IndexBackend::Classic { .. } => self.bind_disk_bytes,
+            IndexBackend::Concurrent(engine) => engine.disk_bytes(),
+        }
+    }
+}
+
+/// Total size of the regular files directly inside `dir` (the persisted
+/// checkpoint footprint: band bit files + manifest).
+fn dir_file_bytes(dir: &std::path::Path) -> Option<u64> {
+    let mut total = 0u64;
+    for entry in std::fs::read_dir(dir).ok()? {
+        let entry = entry.ok()?;
+        let md = entry.metadata().ok()?;
+        if md.is_file() {
+            total += md.len();
+        }
+    }
+    Some(total)
 }
 
 /// A running deduplication service.
@@ -91,23 +167,68 @@ pub struct DedupServer {
 impl DedupServer {
     /// Bind to `addr` (e.g. "127.0.0.1:0" for an ephemeral port).
     pub fn bind(addr: &str, cfg: &PipelineConfig) -> std::io::Result<Self> {
-        let (backend, disk_bytes) = match cfg.engine {
-            EngineMode::Classic => {
+        Self::bind_with_state(addr, cfg, None)
+    }
+
+    /// [`Self::bind`] with a durable state directory (`serve
+    /// --state-dir`, concurrent engine only): if `dir` holds a
+    /// checkpoint manifest the index (and its docs/duplicates counters)
+    /// is restored from it — warm start — otherwise fresh mmap-backed
+    /// filters are created there. Either way the files are the live
+    /// backing store, and an orderly shutdown writes a final checkpoint.
+    pub fn bind_with_state(
+        addr: &str,
+        cfg: &PipelineConfig,
+        state_dir: Option<&std::path::Path>,
+    ) -> std::io::Result<Self> {
+        let mut bind_disk_bytes = 0u64;
+        let backend = match (cfg.engine, state_dir) {
+            (EngineMode::Classic, Some(_)) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidInput,
+                    "--state-dir requires the concurrent engine \
+                     (the classic index persists via LshBloomIndex::save_dir)",
+                ));
+            }
+            (EngineMode::Classic, None) => {
                 let preparer = BandPreparer::from_config(cfg);
                 let decider = decider_from_config(cfg, preparer.lsh);
-                let disk = decider.disk_bytes();
-                (IndexBackend::Classic { preparer, decider: Mutex::new(decider) }, disk)
+                bind_disk_bytes = decider.disk_bytes();
+                IndexBackend::Classic { preparer, decider: Mutex::new(decider) }
             }
-            EngineMode::Concurrent => {
-                let engine = ConcurrentEngine::from_config(cfg);
-                let disk = engine.disk_bytes();
-                (IndexBackend::Concurrent(engine), disk)
+            (EngineMode::Concurrent, None) => {
+                IndexBackend::Concurrent(ConcurrentEngine::from_config(cfg))
+            }
+            (EngineMode::Concurrent, Some(dir)) => {
+                let engine = if crate::persist::CheckpointManifest::exists(dir) {
+                    ConcurrentEngine::restore(cfg, dir, true)
+                } else {
+                    ConcurrentEngine::new_persistent(cfg, dir)
+                }
+                .map_err(|e| {
+                    std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+                })?;
+                // Persisted footprint, measured once while no checkpoint
+                // can be in flight (band files exist from engine
+                // construction; the manifest too on a warm start).
+                bind_disk_bytes = dir_file_bytes(dir).unwrap_or_else(|| engine.disk_bytes());
+                IndexBackend::Concurrent(engine)
             }
         };
+        let stats = ServerStats::default();
+        if let IndexBackend::Concurrent(engine) = &backend {
+            // Seed the wire counters from the (possibly restored)
+            // engine so a warm-started server's stats continue where
+            // the previous process stopped.
+            let (docs, duplicates) = engine.stats();
+            stats.docs.store(docs, Ordering::SeqCst);
+            stats.duplicates.store(duplicates, Ordering::SeqCst);
+        }
         let shared = Arc::new(Shared {
             backend,
-            disk_bytes,
-            stats: ServerStats::default(),
+            state_dir: state_dir.map(|p| p.to_path_buf()),
+            bind_disk_bytes,
+            stats,
             shutdown: AtomicBool::new(false),
         });
         let listener = TcpListener::bind(addr)?;
@@ -153,6 +274,16 @@ impl DedupServer {
         // shutdown.
         for h in handles {
             let _ = h.join();
+        }
+        // Durable servers leave a complete checkpoint behind (manifest +
+        // synced filters) so the next `--state-dir` bind warm-starts
+        // with exact counters.
+        if let (Some(dir), IndexBackend::Concurrent(engine)) =
+            (&self.shared.state_dir, &self.shared.backend)
+        {
+            if let Err(e) = engine.checkpoint(dir) {
+                crate::log_warn!("final checkpoint to {} failed: {e}", dir.display());
+            }
         }
         Ok(())
     }
@@ -238,13 +369,44 @@ fn handle_request(line: &str, shared: &Shared) -> Value {
                 obj(vec![("duplicate", Value::Bool(duplicate))])
             }
         }
+        Some("check_batch") => {
+            let Some(texts_json) = req.get("texts").and_then(|v| v.as_arr()) else {
+                return obj(vec![("error", Value::str("missing 'texts' array"))]);
+            };
+            let mut texts = Vec::with_capacity(texts_json.len());
+            for (i, t) in texts_json.iter().enumerate() {
+                let Some(s) = t.as_str() else {
+                    return obj(vec![(
+                        "error",
+                        Value::str(format!("texts[{i}] is not a string")),
+                    )]);
+                };
+                texts.push(s);
+            }
+            let verdicts = shared.backend.decide_batch(&texts);
+            let first_id = shared.stats.docs.fetch_add(texts.len() as u64, Ordering::SeqCst);
+            let dups = verdicts.iter().filter(|&&d| d).count() as u64;
+            shared.stats.duplicates.fetch_add(dups, Ordering::SeqCst);
+            obj(vec![
+                (
+                    "duplicates",
+                    Value::Arr(verdicts.into_iter().map(Value::Bool).collect()),
+                ),
+                (
+                    "ids",
+                    Value::Arr(
+                        (0..texts.len() as u64).map(|i| Value::u64(first_id + i)).collect(),
+                    ),
+                ),
+            ])
+        }
         Some("stats") => obj(vec![
             ("docs", Value::u64(shared.stats.docs.load(Ordering::SeqCst))),
             (
                 "duplicates",
                 Value::u64(shared.stats.duplicates.load(Ordering::SeqCst)),
             ),
-            ("disk_bytes", Value::u64(shared.disk_bytes)),
+            ("disk_bytes", Value::u64(shared.current_disk_bytes())),
         ]),
         Some("shutdown") => {
             shared.shutdown.store(true, Ordering::SeqCst);

@@ -1,0 +1,225 @@
+//! Integration tests for the crash-safe persistence subsystem
+//! (`persist`): checkpoint/restore equality, torn-checkpoint rejection,
+//! and the cross-process shard-union seam.
+
+use lshbloom::config::PipelineConfig;
+use lshbloom::corpus::{DatasetSpec, Doc, LabeledCorpus};
+use lshbloom::engine::ConcurrentEngine;
+use lshbloom::persist::{self, CheckpointManifest, CheckpointMode};
+use lshbloom::pipeline::{
+    dedup_sharded, dedup_sharded_with_state, run_stream_engine, run_stream_engine_checkpointed,
+    CheckpointPolicy, PipelineOptions,
+};
+use std::path::PathBuf;
+
+fn cfg() -> PipelineConfig {
+    PipelineConfig { num_perms: 64, expected_docs: 10_000, workers: 4, ..Default::default() }
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("lshbloom-persist-{tag}-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn corpus(seed: u64, n: usize) -> Vec<Doc> {
+    LabeledCorpus::build(DatasetSpec::testing(seed, n, 0.5))
+        .docs
+        .into_iter()
+        .map(|ld| ld.doc)
+        .collect()
+}
+
+/// The headline acceptance test: a run checkpointed mid-stream and
+/// resumed in a *fresh* engine produces the identical survivor set —
+/// zero false negatives, zero extra drops — as the uninterrupted run.
+#[test]
+fn restore_equality_checkpoint_midstream_resume_in_fresh_engine() {
+    let dir = tmp_dir("equality");
+    let config = cfg();
+    let docs = corpus(71, 400);
+    let opts = PipelineOptions { workers: 4, batch_size: 8, channel_depth: 4 };
+
+    // Reference: one uninterrupted engine over the whole stream.
+    let full_engine = ConcurrentEngine::from_config(&config);
+    let full = run_stream_engine(&full_engine, docs.iter().cloned(), opts);
+
+    // Durable run over the first half only, then "killed" (dropped).
+    let cut = 200usize;
+    {
+        let engine = ConcurrentEngine::new_persistent(&config, &dir).unwrap();
+        let first = run_stream_engine_checkpointed(
+            &engine,
+            docs[..cut].iter().cloned(),
+            opts,
+            Some(&CheckpointPolicy { dir: dir.clone(), every_docs: 64 }),
+        )
+        .unwrap();
+        assert_eq!(first.verdicts, full.verdicts[..cut], "prefix verdicts must agree");
+    }
+
+    // Fresh engine restored from the checkpoint; continue with the rest.
+    let resumed = ConcurrentEngine::restore(&config, &dir, true).unwrap();
+    assert_eq!(resumed.stats().0, cut as u64, "manifest covers the exact prefix");
+    let rest = run_stream_engine(&resumed, docs[cut..].iter().cloned(), opts);
+    assert_eq!(
+        rest.verdicts,
+        full.verdicts[cut..],
+        "post-restore verdicts must match the uninterrupted run exactly"
+    );
+
+    // Survivor sets are therefore identical — in particular, no
+    // duplicate ever escapes (zero false negatives).
+    let full_survivors: Vec<u64> = docs
+        .iter()
+        .zip(&full.verdicts)
+        .filter(|(_, &dup)| !dup)
+        .map(|(d, _)| d.id)
+        .collect();
+    let resumed_survivors: Vec<u64> = docs[..cut]
+        .iter()
+        .zip(&full.verdicts[..cut])
+        .chain(docs[cut..].iter().zip(&rest.verdicts))
+        .filter(|(_, &dup)| !dup)
+        .map(|(d, _)| d.id)
+        .collect();
+    assert_eq!(resumed_survivors, full_survivors);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Heap restore (no mmap) answers identically to the warm mmap restore.
+#[test]
+fn heap_and_mmap_restore_agree() {
+    let dir = tmp_dir("heapmmap");
+    let config = cfg();
+    let docs = corpus(73, 150);
+    {
+        let engine = ConcurrentEngine::new_persistent(&config, &dir).unwrap();
+        for chunk in docs.chunks(32) {
+            engine.submit(chunk.to_vec());
+        }
+        engine.checkpoint(&dir).unwrap();
+    }
+    let warm = ConcurrentEngine::restore(&config, &dir, true).unwrap();
+    let cold = ConcurrentEngine::restore(&config, &dir, false).unwrap();
+    assert_eq!(warm.stats(), cold.stats());
+    for doc in &docs {
+        assert_eq!(warm.query_one(doc), cold.query_one(doc), "doc {}", doc.id);
+        assert!(cold.query_one(doc), "restored filter lost doc {}", doc.id);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Torn checkpoints must be rejected with a clear error, never silently
+/// admitted (a truncated or corrupted filter answers `false` for keys
+/// it should know — Bloom false negatives).
+#[test]
+fn torn_checkpoint_rejected() {
+    let dir = tmp_dir("torn");
+    let config = cfg();
+    // A heap engine checkpoints as a cold snapshot => checksums enforced.
+    let engine = ConcurrentEngine::from_config(&config);
+    engine.submit(corpus(79, 120));
+    engine.checkpoint(&dir).unwrap();
+    let manifest = CheckpointManifest::load(&dir).unwrap();
+    assert_eq!(manifest.mode, CheckpointMode::Snapshot);
+
+    // 1) Bit-flip inside a band file -> checksum mismatch.
+    let band0 = dir.join("band000.bits");
+    let mut bytes = std::fs::read(&band0).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&band0, &bytes).unwrap();
+    let err = ConcurrentEngine::restore(&config, &dir, false).unwrap_err();
+    assert!(err.to_string().contains("checksum"), "want checksum error, got: {err}");
+    // The mmap restore path verifies too.
+    let err = ConcurrentEngine::restore(&config, &dir, true).unwrap_err();
+    assert!(err.to_string().contains("checksum"), "want checksum error, got: {err}");
+
+    // 2) Truncated band file -> size mismatch, flagged before checksums.
+    bytes[mid] ^= 0xFF; // undo the flip
+    bytes.truncate(bytes.len() - 8);
+    std::fs::write(&band0, &bytes).unwrap();
+    let err = ConcurrentEngine::restore(&config, &dir, false).unwrap_err();
+    let msg = err.to_string();
+    assert!(
+        msg.contains("torn") || msg.contains("refusing"),
+        "want size-mismatch refusal, got: {msg}"
+    );
+
+    // 3) Geometry drift: same files, different run config.
+    let mut other = config.clone();
+    other.p_effective = 1e-6;
+    let err = ConcurrentEngine::restore(&other, &dir, false).unwrap_err();
+    assert!(err.to_string().contains("geometry mismatch"), "{err}");
+
+    // 4) Truncated manifest JSON -> parse error, not a panic.
+    std::fs::write(dir.join("manifest.json"), "{\"version\": 1, \"mode\": \"snap").unwrap();
+    assert!(ConcurrentEngine::restore(&config, &dir, false).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The cross-process union seam: OR-ing a persisted checkpoint into a
+/// live index answers exactly like the in-memory `union_from`.
+#[test]
+fn union_from_checkpoint_matches_in_memory_union() {
+    let dir = tmp_dir("union");
+    let config = cfg();
+    let docs_a = corpus(83, 120);
+    let docs_b = corpus(97, 120);
+
+    // Sibling "process" B: ingest + checkpoint.
+    let engine_b = ConcurrentEngine::from_config(&config);
+    engine_b.submit(docs_b.clone());
+    engine_b.checkpoint(&dir).unwrap();
+
+    // This process: ingest A, then fold B's files in.
+    let engine_a = ConcurrentEngine::from_config(&config);
+    engine_a.submit(docs_a.clone());
+    let merged_docs = persist::union_from_checkpoint(engine_a.index(), &dir).unwrap();
+    assert_eq!(merged_docs, 120);
+
+    // Reference: in-memory union of two fresh identical ingests.
+    let ref_a = ConcurrentEngine::from_config(&config);
+    ref_a.submit(docs_a.clone());
+    let ref_b = ConcurrentEngine::from_config(&config);
+    ref_b.submit(docs_b.clone());
+    let ref_index = ref_a.into_concurrent_index();
+    ref_index.union_from(&ref_b.into_concurrent_index());
+
+    assert_eq!(
+        engine_a.index().fill_ratios(),
+        ref_index.fill_ratios(),
+        "file-union and memory-union must be bit-identical"
+    );
+    assert_eq!(engine_a.index().len(), ref_index.len());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// End-to-end sharded equivalence: the on-disk phase-2 aggregation
+/// (shard checkpoints + union-from-files) reproduces both the in-memory
+/// sharded run and, for exact duplicates, the sequential survivor set.
+#[test]
+fn sharded_on_disk_aggregation_no_false_negatives() {
+    let dir = tmp_dir("shardfiles");
+    let config = cfg();
+    // Exact-duplicate corpus: every 3rd doc repeats an earlier one.
+    let base = corpus(101, 90);
+    let mut docs = Vec::new();
+    for (i, d) in base.into_iter().enumerate() {
+        docs.push(d.clone());
+        if i % 3 == 0 {
+            docs.push(Doc { id: 1000 + i as u64, text: d.text });
+        }
+    }
+    let mem = dedup_sharded(&config, docs.clone(), 4);
+    let disk = dedup_sharded_with_state(&config, docs.clone(), 4, Some(dir.as_path())).unwrap();
+    assert_eq!(disk.verdicts, mem.verdicts);
+    // No duplicate content may survive twice (zero false negatives).
+    let mut seen = std::collections::HashSet::new();
+    for d in &disk.survivors {
+        assert!(seen.insert(d.text.clone()), "duplicate text survived: doc {}", d.id);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,15 +1,26 @@
 //! Integration tests for the network deduplication service.
 
-use lshbloom::config::PipelineConfig;
+use lshbloom::config::{EngineMode, PipelineConfig};
 use lshbloom::service::{DedupClient, DedupServer};
 
-fn start_server() -> (std::thread::JoinHandle<()>, String) {
-    let cfg = PipelineConfig {
+fn test_cfg(engine: EngineMode) -> PipelineConfig {
+    PipelineConfig {
         num_perms: 64,
         expected_docs: 10_000,
+        engine,
         ..Default::default()
-    };
-    let server = DedupServer::bind("127.0.0.1:0", &cfg).expect("bind");
+    }
+}
+
+fn start_server() -> (std::thread::JoinHandle<()>, String) {
+    start_server_with(test_cfg(EngineMode::Classic), None)
+}
+
+fn start_server_with(
+    cfg: PipelineConfig,
+    state_dir: Option<&std::path::Path>,
+) -> (std::thread::JoinHandle<()>, String) {
+    let server = DedupServer::bind_with_state("127.0.0.1:0", &cfg, state_dir).expect("bind");
     let addr = server.local_addr().unwrap().to_string();
     let handle = std::thread::spawn(move || server.serve().expect("serve"));
     (handle, addr)
@@ -68,6 +79,86 @@ fn multiple_clients_share_one_index() {
 }
 
 #[test]
+fn check_batch_amortized_roundtrip_on_both_backends() {
+    for engine in [EngineMode::Classic, EngineMode::Concurrent] {
+        let (handle, addr) = start_server_with(test_cfg(engine), None);
+        let mut client = DedupClient::connect(&addr).unwrap();
+
+        // One round trip, three verdicts; the twin inside the batch must
+        // be caught (classic decides sequentially under one lock,
+        // concurrent through the engine's intra-batch reconcile).
+        let verdicts = client
+            .check_batch(&[
+                "batched wire protocol first document",
+                "batched wire protocol first document",
+                "a completely different second document",
+            ])
+            .unwrap();
+        assert_eq!(verdicts, vec![false, true, false], "engine={engine:?}");
+
+        // Cross-batch state is shared with the single-document path.
+        assert!(client.check("batched wire protocol first document").unwrap());
+
+        // Batch counters land in stats like per-document checks do.
+        let (docs, dups, disk) = client.stats().unwrap();
+        assert_eq!(docs, 4, "engine={engine:?}");
+        assert_eq!(dups, 2, "engine={engine:?}");
+        assert!(disk > 0);
+
+        // Empty batch is a no-op, not an error.
+        assert!(client.check_batch(&[]).unwrap().is_empty());
+
+        client.shutdown().unwrap();
+        handle.join().unwrap();
+    }
+}
+
+#[test]
+fn state_dir_warm_start_preserves_index_and_counters() {
+    let dir = std::env::temp_dir().join(format!("lshbloom-svc-state-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let cfg = test_cfg(EngineMode::Concurrent);
+
+    // Cold start: ingest, then orderly shutdown (writes the checkpoint).
+    {
+        let (handle, addr) = start_server_with(cfg.clone(), Some(dir.as_path()));
+        let mut client = DedupClient::connect(&addr).unwrap();
+        assert!(!client.check("durable document the server must remember").unwrap());
+        assert!(!client.check("second durable document").unwrap());
+        assert!(client.check("second durable document").unwrap());
+        client.shutdown().unwrap();
+        handle.join().unwrap();
+    }
+
+    // Warm start: same dir, fresh process-equivalent server.
+    {
+        let (handle, addr) = start_server_with(cfg, Some(dir.as_path()));
+        let mut client = DedupClient::connect(&addr).unwrap();
+        // Restored filters answer for documents ingested pre-restart.
+        assert!(client.query("durable document the server must remember").unwrap());
+        assert!(client.check("durable document the server must remember").unwrap());
+        let (docs, dups, disk) = client.stats().unwrap();
+        // 3 pre-restart + 1 post-restart checks; 1 + 1 duplicates.
+        assert_eq!(docs, 4, "warm-start must resume the counters");
+        assert_eq!(dups, 2);
+        // disk_bytes reports the *persisted* footprint: band files plus
+        // manifest, so strictly more than the bare filter bytes.
+        let filter_bytes = lshbloom::engine::ConcurrentEngine::from_config(&test_cfg(
+            EngineMode::Concurrent,
+        ))
+        .disk_bytes();
+        assert!(
+            disk > filter_bytes,
+            "persisted footprint {disk} should exceed filter bytes {filter_bytes} \
+             (manifest included)"
+        );
+        client.shutdown().unwrap();
+        handle.join().unwrap();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn malformed_requests_get_error_responses() {
     use std::io::{BufRead, BufReader, Write};
     let (handle, addr) = start_server();
@@ -86,6 +177,9 @@ fn malformed_requests_get_error_responses() {
     assert!(send(r#"{"op": "frobnicate"}"#).contains("unknown op"));
     assert!(send(r#"{"op": "check"}"#).contains("missing 'text'"));
     assert!(send(r#"{"text": "no op"}"#).contains("missing 'op'"));
+    assert!(send(r#"{"op": "check_batch"}"#).contains("missing 'texts'"));
+    assert!(send(r#"{"op": "check_batch", "texts": "not an array"}"#).contains("missing 'texts'"));
+    assert!(send(r#"{"op": "check_batch", "texts": ["ok", 42]}"#).contains("texts[1]"));
 
     let mut client = DedupClient::connect(&addr).unwrap();
     client.shutdown().unwrap();
