@@ -96,6 +96,13 @@ pub struct PipelineConfig {
     /// Shard counts > 1 run `pipeline::dedup_sharded`: per-shard
     /// concurrent-engine ingest, cross-shard bit-OR filter aggregation.
     pub shards: usize,
+    /// Run each shard as its own OS worker process under a supervising
+    /// orchestrator (`pipeline::supervisor`, `dedup --distributed`).
+    /// Requires `shards >= 2`. `checkpoint_dir` is the worker state root
+    /// — the only channel between supervisor and workers (the `dedup`
+    /// CLI falls back to a temp dir when unset); `checkpoint_every` sets
+    /// each worker's crash-recovery granularity.
+    pub distributed: bool,
     /// Durable state directory for the concurrent engine ("" = none):
     /// mmap-backed filters plus a checkpoint manifest (`crate::persist`).
     /// Drives `dedup --checkpoint-dir` / `serve --state-dir`; with
@@ -125,6 +132,7 @@ impl Default for PipelineConfig {
             channel_depth: 64,
             engine: EngineMode::Classic,
             shards: 1,
+            distributed: false,
             checkpoint_dir: String::new(),
             checkpoint_every: 0,
         }
@@ -155,16 +163,27 @@ impl PipelineConfig {
         if self.shards == 0 {
             return Err(Error::Config("shards must be >= 1".into()));
         }
-        if self.checkpoint_every > 0 && self.checkpoint_dir.is_empty() {
+        if self.checkpoint_every > 0 && self.checkpoint_dir.is_empty() && !self.distributed {
+            // Distributed runs are exempt: each worker checkpoints into
+            // its own directory under the state root, which the CLI
+            // defaults to a temp dir when checkpoint_dir is unset.
             return Err(Error::Config(
                 "checkpoint_every requires a checkpoint_dir".into(),
             ));
         }
-        if self.checkpoint_every > 0 && self.shards > 1 {
+        if self.distributed && self.shards < 2 {
+            return Err(Error::Config(
+                "distributed mode requires shards >= 2 (one worker process per \
+                 shard; a single shard is just the plain concurrent engine)"
+                    .into(),
+            ));
+        }
+        if self.checkpoint_every > 0 && self.shards > 1 && !self.distributed {
             return Err(Error::Config(
                 "checkpoint_every is not supported with shards > 1 (each shard \
                  checkpoints once, after its phase-1 ingest); silently ignoring it \
-                 would promise periodic durability the sharded path does not provide"
+                 would promise periodic durability the sharded path does not provide \
+                 (distributed workers do honor it — add distributed = true)"
                     .into(),
             ));
         }
@@ -239,6 +258,9 @@ impl PipelineConfig {
                 "engine" | "pipeline.engine" => self.engine = EngineMode::parse(v)?,
                 "shards" | "pipeline.shards" => {
                     self.shards = v.parse().map_err(|_| bad("shards"))?
+                }
+                "distributed" | "pipeline.distributed" => {
+                    self.distributed = matches!(v.as_str(), "true" | "1")
                 }
                 "checkpoint_dir" | "persist.checkpoint_dir" => self.checkpoint_dir = v.clone(),
                 "checkpoint_every" | "persist.checkpoint_every" => {
@@ -373,6 +395,29 @@ mod tests {
         assert!(cfg.validate().is_err());
         let mut cfg = PipelineConfig::default();
         assert!(cfg.apply(&parse_toml_subset("checkpoint_every = x").unwrap()).is_err());
+    }
+
+    #[test]
+    fn distributed_key_applies_and_validates() {
+        let mut cfg = PipelineConfig::default();
+        assert!(!cfg.distributed);
+        cfg.apply(&parse_toml_subset("[pipeline]\ndistributed = true").unwrap()).unwrap();
+        assert!(cfg.distributed);
+        // ...but distributed alone is invalid: it needs shards to split.
+        assert!(cfg.validate().is_err(), "distributed without shards must be rejected");
+        cfg.shards = 4;
+        cfg.validate().unwrap();
+        cfg.checkpoint_dir = "state".into();
+        cfg.validate().unwrap();
+        // Periodic worker checkpoints are a distributed-only feature for
+        // sharded runs — and legal even without an explicit state root
+        // (the CLI falls back to a temp dir).
+        cfg.checkpoint_every = 1000;
+        cfg.validate().unwrap();
+        cfg.checkpoint_dir = String::new();
+        cfg.validate().unwrap();
+        cfg.distributed = false;
+        assert!(cfg.validate().is_err(), "periodic checkpoints + in-process shards stay rejected");
     }
 
     #[test]

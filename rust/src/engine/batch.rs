@@ -203,6 +203,33 @@ impl ConcurrentEngine {
 
     /// Deduplicate one batch. Verdicts come back in submission order and
     /// are deterministic for a deterministic preparer (see module docs).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use lshbloom::config::PipelineConfig;
+    /// use lshbloom::corpus::Doc;
+    /// use lshbloom::engine::ConcurrentEngine;
+    ///
+    /// let cfg = PipelineConfig {
+    ///     num_perms: 128,
+    ///     threshold: 0.5,
+    ///     expected_docs: 10_000,
+    ///     workers: 4,
+    ///     ..Default::default()
+    /// };
+    /// let engine = ConcurrentEngine::from_config(&cfg);
+    /// let batch = vec![
+    ///     Doc { id: 0, text: "the quick brown fox jumps over the lazy dog".into() },
+    ///     Doc { id: 1, text: "the quick brown fox jumps over the lazy dog".into() },
+    ///     Doc { id: 2, text: "completely unrelated content with other words".into() },
+    /// ];
+    /// let verdicts: Vec<bool> = engine.submit(batch).iter().map(|d| d.duplicate).collect();
+    /// // The exact twin is reconciled within the batch; the distinct
+    /// // document survives.
+    /// assert_eq!(verdicts, [false, true, false]);
+    /// assert_eq!(engine.stats(), (3, 1));
+    /// ```
     pub fn submit(&self, docs: Vec<Doc>) -> Vec<Decision> {
         self.submit_with_bands(&docs).0
     }

@@ -66,14 +66,7 @@ impl ConcurrentLshBloomIndex {
             crate::persist::manifest::MANIFEST_FILE.to_string(),
             format!("{}.tmp", crate::persist::manifest::MANIFEST_FILE),
         ] {
-            let path = dir.join(stale);
-            match std::fs::remove_file(&path) {
-                Ok(()) => {}
-                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
-                Err(e) => {
-                    return Err(crate::error::Error::io(path.display().to_string(), e))
-                }
-            }
+            crate::persist::remove_file_if_exists(&dir.join(stale))?;
         }
         let params = crate::index::LshBloomIndex::filter_params(&config);
         let mut filters = Vec::with_capacity(config.lsh.num_bands);

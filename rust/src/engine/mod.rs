@@ -50,6 +50,11 @@
 //! serving, NUMA-aware striping, shm-backed atomic filters) builds on
 //! this seam — see ROADMAP.md.
 
+// The engine is a public API surface other subsystems (persist,
+// pipeline, service) build on; rustdoc is part of its contract. CI turns
+// these warnings into errors (RUSTDOCFLAGS="-D warnings").
+#![warn(missing_docs)]
+
 pub mod atomic_bloom;
 pub mod batch;
 pub mod concurrent_index;

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   gen-corpus    build a labeled synthetic corpus (JSONL)
 //!   dedup         deduplicate a JSONL corpus with any technique
+//!   worker        one distributed shard worker (spawned by `dedup --distributed`)
 //!   tune          hyperparameter grids (Figs. 2–4, Table 1)
 //!   fidelity      fidelity-vs-duplication study (Fig. 5)
 //!   scale         resource scaling study (Figs. 1, 7)
@@ -29,6 +30,7 @@ fn main() {
     let outcome = match sub.as_str() {
         "gen-corpus" => cmd_gen_corpus(rest),
         "dedup" => cmd_dedup(rest),
+        "worker" => cmd_worker(rest),
         "tune" => cmd_tune(rest),
         "fidelity" => cmd_fidelity(rest),
         "scale" => cmd_scale(rest),
@@ -58,6 +60,7 @@ fn print_usage() {
          subcommands:\n\
            gen-corpus    build a labeled synthetic corpus (JSONL)\n\
            dedup         deduplicate a JSONL corpus\n\
+           worker        one distributed shard worker (spawned by dedup --distributed)\n\
            tune          hyperparameter grids (Figs. 2-4, Table 1)\n\
            fidelity      fidelity vs duplication rate (Fig. 5)\n\
            scale         resource scaling study (Figs. 1, 7)\n\
@@ -118,6 +121,13 @@ fn cmd_dedup(rest: Vec<String>) -> CliResult {
         .arg(ArgSpec::opt("workers", "worker threads (0 = all cores)").default("0"))
         .arg(ArgSpec::opt("engine", "index engine: classic|concurrent (lock-free, lshbloom only)").default("classic"))
         .arg(ArgSpec::opt("shards", "shard count for §6 sharded aggregation (>1 runs per-shard concurrent engines + bit-OR filter merge; lshbloom/native only)").default("1"))
+        .arg(ArgSpec::switch(
+            "distributed",
+            "run each shard as its own OS worker process, supervised with \
+             restart-and-resume (requires --shards >= 2; --checkpoint-dir is the \
+             worker state root, defaulting to a temp dir; --checkpoint-every sets \
+             worker crash-recovery granularity)",
+        ))
         .arg(ArgSpec::opt("artifacts", "AOT artifacts dir (xla backend)").default("artifacts"))
         .arg(ArgSpec::opt("out", "write surviving docs to this JSONL").default(""))
         .arg(ArgSpec::opt("save-index", "persist the LSHBloom index to this dir").default(""))
@@ -155,6 +165,7 @@ fn cmd_dedup(rest: Vec<String>) -> CliResult {
         use_shm: args.get_bool("shm"),
         engine: EngineMode::parse(args.get("engine"))?,
         shards: args.get_usize("shards"),
+        distributed: args.get_bool("distributed"),
         checkpoint_dir: args.get("checkpoint-dir").to_string(),
         checkpoint_every: args.get_u64("checkpoint-every"),
         ..Default::default()
@@ -171,10 +182,19 @@ fn cmd_dedup(rest: Vec<String>) -> CliResult {
     if resume && checkpoint_dir.is_none() {
         return Err("--resume requires --checkpoint-dir".into());
     }
-    if resume && cfg.shards > 1 {
-        return Err("--resume is not supported with --shards (shard checkpoints are \
-                    phase-2 aggregation state, not a stream position)"
+    if resume && cfg.shards > 1 && !cfg.distributed {
+        return Err("--resume is not supported with in-process --shards (shard \
+                    checkpoints are phase-2 aggregation state, not a stream position); \
+                    distributed runs (--distributed) resume automatically"
             .into());
+    }
+    if resume && cfg.distributed {
+        // Accepted as a no-op: the supervisor always spawns workers with
+        // --resume, so incomplete slices continue from their snapshots.
+        eprintln!(
+            "note: distributed runs always resume incomplete workers from their \
+             snapshots; --resume is implied"
+        );
     }
 
     let needs_engine = cfg.shards > 1 || cfg.engine == EngineMode::Concurrent;
@@ -211,16 +231,63 @@ fn cmd_dedup(rest: Vec<String>) -> CliResult {
         // bit-OR filter aggregation. Composable with --engine concurrent
         // (shard ingest is always engine-backed). With --checkpoint-dir,
         // every shard persists its filled filter there and phase 2
-        // aggregates straight from the files (the cross-process seam).
-        let stats = lshbloom::pipeline::dedup_sharded_with_state(
-            &cfg,
-            docs.iter().map(|ld| ld.doc.clone()).collect(),
-            cfg.shards,
-            checkpoint_dir.as_deref(),
-        )?;
+        // aggregates straight from the files (the cross-process seam);
+        // with --distributed, each shard is a supervised OS worker
+        // process and phase 2 reads ONLY those files.
+        let (stats, process_info) = if cfg.distributed {
+            // The state root is the only supervisor<->worker channel, so
+            // one always exists: --checkpoint-dir when given (durable,
+            // reusable for `serve --state-dir` and incremental re-runs),
+            // else a throwaway temp dir removed after success.
+            let (state_root, temp_root) = match checkpoint_dir.as_deref() {
+                Some(dir) => (dir.to_path_buf(), false),
+                None => {
+                    let dir = std::env::temp_dir()
+                        .join(format!("lshbloom-distributed-{}", std::process::id()));
+                    eprintln!(
+                        "note: --distributed without --checkpoint-dir: worker state \
+                         root defaulting to {} (removed after a successful run; pass \
+                         --checkpoint-dir for durable, resumable state)",
+                        dir.display()
+                    );
+                    (dir, true)
+                }
+            };
+            let run = lshbloom::pipeline::run_distributed(
+                &cfg,
+                Path::new(args.get("input")),
+                &docs,
+                &state_root,
+                &lshbloom::pipeline::SupervisorOptions::default(),
+            )?;
+            if temp_root {
+                // Corpus-scale filter files are pure garbage once the
+                // run succeeded; on failure the dir survives (with its
+                // path printed above) for post-mortem or manual resume.
+                std::fs::remove_dir_all(&state_root).ok();
+            }
+            (run.stats, Some((run.restarts, run.worker_threads)))
+        } else {
+            let stats = lshbloom::pipeline::dedup_sharded_with_state(
+                &cfg,
+                docs.iter().map(|ld| ld.doc.clone()).collect(),
+                cfg.shards,
+                checkpoint_dir.as_deref(),
+            )?;
+            (stats, None)
+        };
         let mut t = Table::new("sharded dedup run", &["metric", "value"]);
-        t.row_disp(&["method".to_string(), "lshbloom-sharded".to_string()]);
+        t.row_disp(&[
+            "method".to_string(),
+            if cfg.distributed { "lshbloom-distributed" } else { "lshbloom-sharded" }
+                .to_string(),
+        ]);
         t.row_disp(&["shards".to_string(), cfg.shards.to_string()]);
+        if let Some((restarts, worker_threads)) = process_info {
+            t.row_disp(&["worker processes".to_string(), cfg.shards.to_string()]);
+            t.row_disp(&["threads per worker".to_string(), worker_threads.to_string()]);
+            t.row_disp(&["worker restarts".to_string(), restarts.to_string()]);
+        }
         t.row_disp(&["documents".to_string(), stats.docs.to_string()]);
         t.row_disp(&[
             "phase 1 dropped (within-shard)".to_string(),
@@ -409,6 +476,71 @@ fn save_index_note(dir: &Path) -> CliResult {
         "note: index persistence is exposed through the library API \
          (LshBloomIndex::save_dir) and the streaming_ingest example; \
          the CLI run completed without saving."
+    );
+    Ok(())
+}
+
+fn cmd_worker(rest: Vec<String>) -> CliResult {
+    let cmd = Command::new(
+        "worker",
+        "one distributed shard worker (normally spawned by `dedup --distributed`)",
+    )
+    .arg(ArgSpec::req("input", "input JSONL (the same file the supervisor read)"))
+    .arg(ArgSpec::req("shard", "shard index in [0, shards)"))
+    .arg(ArgSpec::req("shards", "total shard count (fixes the round-robin slice)"))
+    .arg(ArgSpec::req(
+        "dir",
+        "worker publish directory (engine checkpoint + outcomes + completion manifest)",
+    ))
+    .arg(ArgSpec::opt("threshold", "similarity threshold").default("0.5"))
+    .arg(ArgSpec::opt("perms", "minhash permutations").default("256"))
+    .arg(ArgSpec::opt("ngram", "shingle size").default("1"))
+    .arg(ArgSpec::opt("p-effective", "index-wide FP bound").default("1e-10"))
+    .arg(ArgSpec::req(
+        "expected-docs",
+        "planned corpus size (must match the supervisor's filter sizing exactly)",
+    ))
+    .arg(ArgSpec::opt("workers", "worker threads (0 = all cores)").default("1"))
+    .arg(ArgSpec::opt("batch-size", "documents per engine batch").default("64"))
+    .arg(ArgSpec::opt(
+        "checkpoint-every",
+        "snapshot the engine every N shard documents (0 = only at end of stream)",
+    ).default("0"))
+    .arg(ArgSpec::switch(
+        "resume",
+        "restore the engine checkpoint in --dir/checkpoint (if any) and continue; \
+         falls back to a fresh start when no checkpoint exists",
+    ));
+    let args = parse(cmd, rest)?;
+    let dir = PathBuf::from(args.get("dir"));
+    let cfg = PipelineConfig {
+        threshold: args.get_f64("threshold"),
+        num_perms: args.get_usize("perms"),
+        ngram: args.get_usize("ngram"),
+        p_effective: args.get_f64("p-effective"),
+        expected_docs: args.get_u64("expected-docs"),
+        workers: args.get_usize("workers"),
+        batch_size: args.get_usize("batch-size"),
+        engine: EngineMode::Concurrent,
+        checkpoint_dir: dir
+            .join(lshbloom::persist::WORKER_CHECKPOINT_DIR)
+            .display()
+            .to_string(),
+        checkpoint_every: args.get_u64("checkpoint-every"),
+        ..Default::default()
+    };
+    cfg.validate()?;
+    let manifest = lshbloom::pipeline::run_worker(
+        &cfg,
+        Path::new(args.get("input")),
+        args.get_usize("shard"),
+        args.get_usize("shards"),
+        &dir,
+        args.get_bool("resume"),
+    )?;
+    println!(
+        "worker {} complete: {} documents, {} dropped in shard, {} survivors published",
+        manifest.shard, manifest.docs, manifest.dropped, manifest.survivors
     );
     Ok(())
 }

@@ -56,6 +56,31 @@ fn checksum_mismatch(path: &Path, got: u64, want: u64) -> Error {
 /// anything else is copied out as a checksummed cold snapshot. For
 /// exact counters, call between batches — concurrent inserts during the
 /// call are safe either way (the files only ever gain bits).
+///
+/// # Examples
+///
+/// Persist an engine's index and read it back ([`restore_index`]):
+///
+/// ```
+/// use lshbloom::config::PipelineConfig;
+/// use lshbloom::corpus::Doc;
+/// use lshbloom::engine::ConcurrentEngine;
+/// use lshbloom::persist::{restore_index, write_checkpoint};
+///
+/// let cfg = PipelineConfig { num_perms: 32, expected_docs: 1_000, ..Default::default() };
+/// let dir = std::env::temp_dir().join(format!("lshbloom-doc-ckpt-{}", std::process::id()));
+/// # std::fs::remove_dir_all(&dir).ok();
+/// let engine = ConcurrentEngine::from_config(&cfg);
+/// engine.submit(vec![Doc { id: 0, text: "checkpointed document".into() }]);
+/// let manifest = write_checkpoint(engine.index(), 1, 0, &dir)?;
+/// assert_eq!(manifest.docs, 1);
+///
+/// let (restored, manifest) = restore_index(&dir, &engine.index().config(), false)?;
+/// assert_eq!(restored.len(), 1);
+/// assert_eq!(manifest.duplicates, 0);
+/// # std::fs::remove_dir_all(&dir).ok();
+/// # Ok::<(), lshbloom::error::Error>(())
+/// ```
 pub fn write_checkpoint(
     index: &ConcurrentLshBloomIndex,
     docs: u64,
@@ -172,6 +197,8 @@ fn read_band_words(
 /// store (subsequent inserts mutate them in place and the next
 /// [`write_checkpoint`] is an msync); without it the words are copied to
 /// heap atomics and `dir` is left untouched.
+///
+/// See [`write_checkpoint`] for a runnable write-then-restore example.
 pub fn restore_index(
     dir: &Path,
     expect: &LshBloomConfig,

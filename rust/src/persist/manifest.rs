@@ -84,20 +84,27 @@ pub struct FilterFile {
 /// The manifest proper.
 #[derive(Clone, Debug)]
 pub struct CheckpointManifest {
+    /// Format version ([`MANIFEST_VERSION`]).
     pub version: u64,
+    /// Snapshot (checksummed cold copy) vs live (in-place mmap) files.
     pub mode: CheckpointMode,
-    /// Index geometry inputs (reconstructs [`LshBloomConfig`]).
+    /// Index geometry inputs (reconstructs [`LshBloomConfig`]): LSH
+    /// band count…
     pub num_bands: usize,
+    /// …rows hashed per band…
     pub rows_per_band: usize,
+    /// …index-wide effective false-positive bound (§4.3)…
     pub p_effective: f64,
+    /// …and planned corpus cardinality (sizes each band filter).
     pub expected_docs: u64,
     /// Derived per-filter geometry, recorded redundantly so a manifest
     /// is self-checking even if the derivation formula ever drifts.
     pub filter_params: BloomParams,
     /// Documents inserted into the index at checkpoint time.
     pub inserted: u64,
-    /// Engine counters at checkpoint time.
+    /// Engine counter at checkpoint time: documents processed…
     pub docs: u64,
+    /// …and duplicates flagged among them.
     pub duplicates: u64,
     /// One entry per band, band order.
     pub files: Vec<FilterFile>,
@@ -119,10 +126,12 @@ pub struct ChecksumStream {
 }
 
 impl ChecksumStream {
+    /// Fresh stream (FNV offset-basis seed).
     pub fn new() -> Self {
         Self { acc: 0xcbf2_9ce4_8422_2325, words: 0 }
     }
 
+    /// Fold a chunk of words into the digest.
     #[inline]
     pub fn update(&mut self, words: &[u64]) {
         for &w in words {
@@ -131,6 +140,7 @@ impl ChecksumStream {
         self.words += words.len() as u64;
     }
 
+    /// Finalize, folding in the total length so truncation is detected.
     pub fn finish(self) -> u64 {
         mix64(self.acc ^ self.words)
     }
@@ -327,18 +337,7 @@ impl CheckpointManifest {
     /// Write to `dir/manifest.json` atomically (tmp + rename), fsyncing
     /// the temp file so the rename publishes durable bytes.
     pub fn save(&self, dir: &Path) -> Result<()> {
-        let tmp = dir.join(format!("{MANIFEST_FILE}.tmp"));
-        let path = dir.join(MANIFEST_FILE);
-        {
-            use std::io::Write;
-            let mut f = std::fs::File::create(&tmp)
-                .map_err(|e| Error::io(tmp.display().to_string(), e))?;
-            f.write_all(self.to_json().to_json().as_bytes())
-                .map_err(|e| Error::io(tmp.display().to_string(), e))?;
-            f.sync_all().map_err(|e| Error::io(tmp.display().to_string(), e))?;
-        }
-        std::fs::rename(&tmp, &path).map_err(|e| Error::io(path.display().to_string(), e))?;
-        Ok(())
+        crate::persist::write_atomic(&dir.join(MANIFEST_FILE), self.to_json().to_json().as_bytes())
     }
 
     /// Load and parse `dir/manifest.json`.

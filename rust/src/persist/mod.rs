@@ -22,6 +22,10 @@
 //! * [`union_from_checkpoint`] — bit-OR a sibling *process's* persisted
 //!   shard filters into a live index (the cross-process half of the §6
 //!   sharded-aggregation seam; `pipeline::shard` drives it).
+//! * [`WorkerManifest`] — the completion marker a distributed shard
+//!   worker *process* publishes next to its checkpoint so the
+//!   supervising orchestrator ([`crate::pipeline::supervisor`]) can tell
+//!   a finished worker from a torn one.
 //!
 //! ## Crash-consistency contract
 //!
@@ -32,6 +36,11 @@
 //! checkpoint) but never under-approximates — no checkpointed insert is
 //! ever lost, so resumed runs admit **zero false negatives** relative to
 //! an uninterrupted run.
+
+// The persistence wire format is the contract between processes (and,
+// eventually, hosts); rustdoc is part of that contract. CI turns these
+// warnings into errors (RUSTDOCFLAGS="-D warnings").
+#![warn(missing_docs)]
 
 // Filter files are little-endian u64 words, and the mmap path reads them
 // as native words; the bloom::shm libc shim already restricts builds to
@@ -46,7 +55,45 @@ compile_error!(
 pub mod checkpoint;
 pub mod manifest;
 pub mod shm_atomic;
+pub mod worker;
 
 pub use checkpoint::{restore_index, union_from_checkpoint, write_checkpoint};
 pub use manifest::{CheckpointManifest, CheckpointMode, ChecksumStream, MANIFEST_FILE};
 pub use shm_atomic::ShmAtomicBitArray;
+pub use worker::{
+    worker_dir_name, WorkerManifest, WORKER_CHECKPOINT_DIR, WORKER_MANIFEST_FILE,
+    WORKER_OUTCOMES_FILE,
+};
+
+/// Atomically publish `bytes` at `path`: write `<name>.tmp` in the same
+/// directory, fsync, rename. The one home of the durability-critical
+/// publish idiom every manifest writer uses — a crash leaves either the
+/// previous complete file or none.
+pub(crate) fn write_atomic(path: &std::path::Path, bytes: &[u8]) -> crate::error::Result<()> {
+    use crate::error::Error;
+    use std::io::Write;
+    let name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .ok_or_else(|| Error::Format(format!("write_atomic: bad path {}", path.display())))?;
+    let tmp = path.with_file_name(format!("{name}.tmp"));
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .map_err(|e| Error::io(tmp.display().to_string(), e))?;
+        f.write_all(bytes).map_err(|e| Error::io(tmp.display().to_string(), e))?;
+        f.sync_all().map_err(|e| Error::io(tmp.display().to_string(), e))?;
+    }
+    std::fs::rename(&tmp, path).map_err(|e| Error::io(path.display().to_string(), e))?;
+    Ok(())
+}
+
+/// Remove `path` if it exists; a missing file is fine, any other
+/// failure is a hard error (callers use this to clear stale markers
+/// whose survival would corrupt a later restore).
+pub(crate) fn remove_file_if_exists(path: &std::path::Path) -> crate::error::Result<()> {
+    match std::fs::remove_file(path) {
+        Ok(()) => Ok(()),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+        Err(e) => Err(crate::error::Error::io(path.display().to_string(), e)),
+    }
+}

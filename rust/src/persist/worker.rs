@@ -1,0 +1,252 @@
+//! Worker completion manifest: the durable handshake between a shard
+//! worker *process* and its supervising orchestrator.
+//!
+//! A distributed run (`dedup --shards N --distributed`) gives every
+//! shard its own OS process. The only channel between the supervisor and
+//! a worker is the filesystem, so each worker publishes its results as a
+//! small directory:
+//!
+//! ```text
+//! <state>/worker-{s:03}/
+//!   checkpoint/        engine checkpoint: manifest.json + band bit files
+//!   outcomes.jsonl     one line per shard document, in-shard order
+//!   worker-manifest.json   THIS file — written last, tmp + rename
+//!   worker.log         the worker process's stdout/stderr
+//! ```
+//!
+//! The worker manifest doubles as the **completion marker**: it is
+//! written only after the final engine checkpoint and the outcomes file
+//! are durable, and it publishes atomically (tmp + rename, fsync'd).
+//! A worker directory without a readable, consistent manifest is
+//! therefore a *torn worker* — crashed, killed, or still running — and
+//! the supervisor restarts it (with `--resume`) instead of aggregating
+//! half-written state.
+
+use crate::error::{Error, Result};
+use crate::json::{self, obj, Value};
+use std::path::Path;
+
+/// Worker manifest format version; bumped on incompatible layout change.
+pub const WORKER_MANIFEST_VERSION: u64 = 1;
+
+/// File name of the worker manifest inside a worker directory.
+pub const WORKER_MANIFEST_FILE: &str = "worker-manifest.json";
+
+/// Conventional name of the engine-checkpoint subdirectory.
+pub const WORKER_CHECKPOINT_DIR: &str = "checkpoint";
+
+/// Conventional name of the per-document outcomes file.
+pub const WORKER_OUTCOMES_FILE: &str = "outcomes.jsonl";
+
+/// Conventional worker directory name for shard `s` under a state root.
+pub fn worker_dir_name(shard: usize) -> String {
+    format!("worker-{shard:03}")
+}
+
+/// Completion record one shard worker leaves for the supervisor.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WorkerManifest {
+    /// Format version ([`WORKER_MANIFEST_VERSION`]).
+    pub version: u64,
+    /// The shard slice this worker processed (`stream_pos % num_shards
+    /// == shard`, round-robin — the same split `pipeline::shard` uses).
+    pub shard: usize,
+    /// Total shard count of the run (fixes the slice *and* the
+    /// position arithmetic `pos = line_index * num_shards + shard`).
+    pub num_shards: usize,
+    /// Documents this worker processed (= complete lines in the
+    /// outcomes file). The supervisor cross-checks this against the
+    /// shard size it derived from the input; a mismatch marks the
+    /// worker torn.
+    pub docs: u64,
+    /// Documents flagged duplicate within the shard (phase 1).
+    pub dropped: u64,
+    /// Shard survivors handed to phase-2 aggregation.
+    pub survivors: u64,
+}
+
+impl WorkerManifest {
+    /// Serialize to the manifest JSON document.
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("version", Value::u64(self.version)),
+            ("shard", Value::u64(self.shard as u64)),
+            ("num_shards", Value::u64(self.num_shards as u64)),
+            ("docs", Value::u64(self.docs)),
+            ("dropped", Value::u64(self.dropped)),
+            ("survivors", Value::u64(self.survivors)),
+        ])
+    }
+
+    /// Parse a manifest document; rejects unknown versions and
+    /// internally inconsistent counters.
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let u = |k: &str| -> Result<u64> {
+            v.get(k)
+                .and_then(|x| x.as_u64())
+                .ok_or_else(|| Error::Format(format!("worker manifest '{k}' missing or not u64")))
+        };
+        let version = u("version")?;
+        if version != WORKER_MANIFEST_VERSION {
+            return Err(Error::Format(format!(
+                "worker manifest version {version} unsupported \
+                 (expected {WORKER_MANIFEST_VERSION})"
+            )));
+        }
+        let m = Self {
+            version,
+            shard: u("shard")? as usize,
+            num_shards: u("num_shards")? as usize,
+            docs: u("docs")?,
+            dropped: u("dropped")?,
+            survivors: u("survivors")?,
+        };
+        if m.num_shards == 0 || m.shard >= m.num_shards {
+            return Err(Error::Format(format!(
+                "worker manifest shard {} out of range for {} shards",
+                m.shard, m.num_shards
+            )));
+        }
+        if m.dropped + m.survivors != m.docs {
+            return Err(Error::Format(format!(
+                "worker manifest counters disagree: {} dropped + {} survivors != {} docs",
+                m.dropped, m.survivors, m.docs
+            )));
+        }
+        Ok(m)
+    }
+
+    /// Write to `dir/worker-manifest.json` atomically (the shared
+    /// `persist::write_atomic` tmp+fsync+rename publish) — the worker's
+    /// very last act, so the manifest's existence *is* the completion
+    /// marker.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        crate::persist::write_atomic(
+            &dir.join(WORKER_MANIFEST_FILE),
+            self.to_json().to_json().as_bytes(),
+        )
+    }
+
+    /// Load and parse `dir/worker-manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join(WORKER_MANIFEST_FILE);
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        let v = json::parse(&text)
+            .map_err(|e| Error::parse("worker manifest", e.to_string()))?;
+        Self::from_json(&v)
+    }
+
+    /// Whether `dir` holds a completed worker run.
+    pub fn exists(dir: &Path) -> bool {
+        dir.join(WORKER_MANIFEST_FILE).is_file()
+    }
+
+    /// Remove a stale manifest so a (re)starting worker cannot be
+    /// mistaken for complete while it is mid-ingest. Failure to remove
+    /// an *existing* marker is a hard error — leaving it would let the
+    /// supervisor aggregate a half-written shard.
+    pub fn remove_stale(dir: &Path) -> Result<()> {
+        for name in [WORKER_MANIFEST_FILE.to_string(), format!("{WORKER_MANIFEST_FILE}.tmp")] {
+            crate::persist::remove_file_if_exists(&dir.join(name))?;
+        }
+        Ok(())
+    }
+
+    /// Supervisor-side consistency check: the manifest must describe
+    /// exactly the shard slice the supervisor expects. Any disagreement
+    /// marks the worker torn (eligible for restart), never silently
+    /// aggregated.
+    pub fn verify(&self, shard: usize, num_shards: usize, expect_docs: u64) -> Result<()> {
+        if self.shard != shard || self.num_shards != num_shards {
+            return Err(Error::Format(format!(
+                "worker manifest describes shard {}/{} but the supervisor expected {}/{}",
+                self.shard, self.num_shards, shard, num_shards
+            )));
+        }
+        if self.docs != expect_docs {
+            return Err(Error::Format(format!(
+                "worker manifest for shard {shard} covers {} documents but the shard \
+                 slice holds {expect_docs}; treating the worker as torn",
+                self.docs
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> WorkerManifest {
+        WorkerManifest {
+            version: WORKER_MANIFEST_VERSION,
+            shard: 2,
+            num_shards: 4,
+            docs: 100,
+            dropped: 37,
+            survivors: 63,
+        }
+    }
+
+    fn tmp_dir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("lshbloom-wm-{name}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = sample();
+        assert_eq!(WorkerManifest::from_json(&m.to_json()).unwrap(), m);
+    }
+
+    #[test]
+    fn save_load_and_completion_marker() {
+        let dir = tmp_dir("roundtrip");
+        let m = sample();
+        assert!(!WorkerManifest::exists(&dir));
+        m.save(&dir).unwrap();
+        assert!(WorkerManifest::exists(&dir));
+        assert_eq!(WorkerManifest::load(&dir).unwrap(), m);
+        assert!(!dir.join(format!("{WORKER_MANIFEST_FILE}.tmp")).exists());
+        WorkerManifest::remove_stale(&dir).unwrap();
+        assert!(!WorkerManifest::exists(&dir));
+        // Removing again is a no-op, not an error.
+        WorkerManifest::remove_stale(&dir).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn inconsistent_counters_rejected() {
+        let mut m = sample();
+        m.dropped += 1;
+        let err = WorkerManifest::from_json(&m.to_json()).unwrap_err();
+        assert!(err.to_string().contains("disagree"), "{err}");
+    }
+
+    #[test]
+    fn unknown_version_rejected() {
+        let mut m = sample();
+        m.version = 99;
+        assert!(WorkerManifest::from_json(&m.to_json()).is_err());
+    }
+
+    #[test]
+    fn shard_out_of_range_rejected() {
+        let mut m = sample();
+        m.shard = 4; // == num_shards
+        assert!(WorkerManifest::from_json(&m.to_json()).is_err());
+    }
+
+    #[test]
+    fn verify_cross_checks_the_slice() {
+        let m = sample();
+        m.verify(2, 4, 100).unwrap();
+        assert!(m.verify(1, 4, 100).is_err(), "wrong shard");
+        assert!(m.verify(2, 8, 100).is_err(), "wrong shard count");
+        let err = m.verify(2, 4, 101).unwrap_err();
+        assert!(err.to_string().contains("torn"), "{err}");
+    }
+}

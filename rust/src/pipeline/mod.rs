@@ -20,10 +20,18 @@
 //! [`timing`] instruments the two phases for the Fig. 1 breakdown;
 //! [`shard`] implements the paper's §6 sharded-aggregation extension on
 //! the lock-free engine (per-shard `ConcurrentEngine` ingest, bit-OR
-//! filter union for cross-shard aggregation).
+//! filter union for cross-shard aggregation); [`supervisor`] lifts that
+//! to OS **processes** — one self-exec'd worker per shard, supervised
+//! with restart-and-resume, aggregated purely from the checkpoint wire
+//! format (`dedup --shards N --distributed`).
+
+// The pipeline is the crate's main entry surface; rustdoc is part of its
+// contract. CI turns these warnings into errors (RUSTDOCFLAGS="-D warnings").
+#![warn(missing_docs)]
 
 pub mod orchestrator;
 pub mod shard;
+pub mod supervisor;
 pub mod timing;
 
 pub use orchestrator::{
@@ -31,4 +39,5 @@ pub use orchestrator::{
     PipelineOptions, RunStats,
 };
 pub use shard::{dedup_sharded, dedup_sharded_with_state, ShardedStats};
+pub use supervisor::{run_distributed, run_worker, DistributedRun, SupervisorOptions};
 pub use timing::PhaseTimes;

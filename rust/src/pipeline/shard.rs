@@ -96,6 +96,100 @@ impl ShardedStats {
 /// shard checkpointed it to disk (the cross-process path).
 type ShardOutcome = (Vec<(usize, Doc, Vec<u64>)>, Vec<usize>, Option<ConcurrentLshBloomIndex>);
 
+/// Running phase-2 state shared by the in-process sharded path (below)
+/// and the distributed supervisor (`super::supervisor`): the cross-shard
+/// bit-OR union plus verdict/survivor accounting.
+///
+/// Both paths MUST fold through this one type, shard by shard in shard
+/// order — the distributed mode's byte-identical-verdicts guarantee
+/// rests on the recheck rule living in exactly one place.
+pub(crate) struct ShardAggregator {
+    agg: ConcurrentLshBloomIndex,
+    /// Per-document duplicate verdicts, original stream order.
+    pub(crate) verdicts: Vec<bool>,
+    /// Kept documents, (shard, in-shard position) order.
+    pub(crate) survivors: Vec<Doc>,
+    /// Documents dropped within their shard (phase 1).
+    pub(crate) phase1_dropped: u64,
+    /// Shard survivors dropped against the cross-shard union (phase 2).
+    pub(crate) phase2_dropped: u64,
+}
+
+impl ShardAggregator {
+    /// Empty union sized from the same config fields every shard engine
+    /// used, so geometry mismatches are impossible by construction.
+    pub(crate) fn new(cfg: &PipelineConfig, total: usize) -> Self {
+        let agg = ConcurrentLshBloomIndex::new(LshBloomConfig::new(
+            optimal_param(cfg.threshold, cfg.num_perms),
+            cfg.p_effective,
+            cfg.expected_docs,
+        ));
+        Self {
+            agg,
+            verdicts: vec![false; total],
+            survivors: Vec::new(),
+            phase1_dropped: 0,
+            phase2_dropped: 0,
+        }
+    }
+
+    /// Record a phase-1 verdict: dropped within its shard.
+    pub(crate) fn mark_dropped(&mut self, pos: usize) {
+        self.verdicts[pos] = true;
+        self.phase1_dropped += 1;
+    }
+
+    /// Recheck one shard survivor (stream position + phase-1 band
+    /// hashes) against the running union: dropped iff it collides with
+    /// any earlier-folded shard. Takes the document by value so the
+    /// in-process path moves rather than clones its survivors.
+    pub(crate) fn recheck(&mut self, pos: usize, doc: Doc, bands: &[u64]) {
+        if self.agg.query(bands) {
+            self.phase2_dropped += 1;
+            self.verdicts[pos] = true;
+        } else {
+            self.survivors.push(doc);
+        }
+    }
+
+    /// Fold a finished shard's filter into the union from memory…
+    pub(crate) fn union_from_index(&mut self, index: &ConcurrentLshBloomIndex) {
+        self.agg.union_from(index);
+    }
+
+    /// …or straight from its persisted checkpoint.
+    pub(crate) fn union_from_checkpoint(&mut self, dir: &Path) -> Result<()> {
+        crate::persist::union_from_checkpoint(&self.agg, dir)?;
+        Ok(())
+    }
+
+    /// The live union (the distributed supervisor persists it as the
+    /// serve-ready aggregate checkpoint).
+    pub(crate) fn index(&self) -> &ConcurrentLshBloomIndex {
+        &self.agg
+    }
+
+    /// Finish: package the accounting into [`ShardedStats`].
+    pub(crate) fn into_stats(
+        self,
+        docs: u64,
+        phase1_wall: Duration,
+        phase2_wall: Duration,
+    ) -> ShardedStats {
+        let disk_bytes = self.agg.disk_bytes();
+        ShardedStats {
+            survivors: self.survivors,
+            verdicts: self.verdicts,
+            phase1_dropped: self.phase1_dropped,
+            phase2_dropped: self.phase2_dropped,
+            docs,
+            disk_bytes,
+            phase1_wall,
+            phase2_wall,
+        }
+    }
+}
+
 /// Dedup `docs` across `num_shards` shards with progressive aggregation
 /// (in-memory filter union).
 pub fn dedup_sharded(cfg: &PipelineConfig, docs: Vec<Doc>, num_shards: usize) -> ShardedStats {
@@ -113,6 +207,32 @@ pub fn dedup_sharded(cfg: &PipelineConfig, docs: Vec<Doc>, num_shards: usize) ->
 /// the wire format for multi-process (and later multi-node) aggregation,
 /// and the survivor sets are identical to the in-memory union (the files
 /// hold the same bits the live filters do).
+///
+/// # Examples
+///
+/// ```
+/// use lshbloom::config::PipelineConfig;
+/// use lshbloom::corpus::Doc;
+/// use lshbloom::pipeline::dedup_sharded_with_state;
+///
+/// let cfg = PipelineConfig {
+///     num_perms: 64,
+///     expected_docs: 10_000,
+///     workers: 2,
+///     ..Default::default()
+/// };
+/// let docs = vec![
+///     Doc { id: 0, text: "alpha beta gamma delta epsilon".into() },
+///     Doc { id: 1, text: "totally different words over here".into() },
+///     Doc { id: 2, text: "alpha beta gamma delta epsilon".into() }, // exact copy of 0
+/// ];
+/// // Two shards, in-memory aggregation (pass a state dir for the
+/// // on-disk union a sibling process could consume).
+/// let stats = dedup_sharded_with_state(&cfg, docs, 2, None)?;
+/// assert_eq!(stats.verdicts, [false, false, true]);
+/// assert_eq!(stats.survivors.len(), 2);
+/// # Ok::<(), lshbloom::error::Error>(())
+/// ```
 pub fn dedup_sharded_with_state(
     cfg: &PipelineConfig,
     docs: Vec<Doc>,
@@ -189,56 +309,32 @@ pub fn dedup_sharded_with_state(
     // Phase 2: recheck survivors against the running cross-shard union,
     // reusing the phase-1 band hashes, then fold each shard's filter in
     // — from memory, or straight from its persisted checkpoint. Shard
-    // 0's survivors all pass (the union starts empty). The aggregate's
-    // geometry is derived from the same config fields every shard engine
-    // used, so a `union_from` mismatch is impossible by construction
-    // (and `union_from_checkpoint` re-verifies it against each
-    // manifest anyway).
+    // 0's survivors all pass (the union starts empty). The recheck/fold
+    // rule lives in [`ShardAggregator`], shared with the distributed
+    // supervisor (and `union_from_checkpoint` re-verifies geometry
+    // against each manifest anyway).
     let t2 = Instant::now();
-    let agg = ConcurrentLshBloomIndex::new(LshBloomConfig::new(
-        optimal_param(cfg.threshold, cfg.num_perms),
-        cfg.p_effective,
-        cfg.expected_docs,
-    ));
-    let mut verdicts = vec![false; total];
-    let mut survivors = Vec::new();
-    let mut phase1_dropped = 0u64;
-    let mut phase2_dropped = 0u64;
+    let mut agg = ShardAggregator::new(cfg, total);
     for (s, (shard_survivors, dropped, shard_index)) in shard_results.into_iter().enumerate() {
-        phase1_dropped += dropped.len() as u64;
         for p in dropped {
-            verdicts[p] = true;
+            agg.mark_dropped(p);
         }
         for (p, doc, bands) in shard_survivors {
-            if agg.query(&bands) {
-                phase2_dropped += 1;
-                verdicts[p] = true;
-            } else {
-                survivors.push(doc);
-            }
+            agg.recheck(p, doc, &bands);
         }
         match shard_index {
-            Some(index) => agg.union_from(&index),
+            Some(index) => agg.union_from_index(&index),
             None => {
                 let dir = state_dir
                     .expect("index omitted only in state-dir mode")
                     .join(format!("shard-{s:03}"));
-                crate::persist::union_from_checkpoint(&agg, &dir)?;
+                agg.union_from_checkpoint(&dir)?;
             }
         }
     }
     let phase2_wall = t2.elapsed();
 
-    Ok(ShardedStats {
-        survivors,
-        verdicts,
-        phase1_dropped,
-        phase2_dropped,
-        docs: total as u64,
-        disk_bytes: agg.disk_bytes(),
-        phase1_wall,
-        phase2_wall,
-    })
+    Ok(agg.into_stats(total as u64, phase1_wall, phase2_wall))
 }
 
 #[cfg(test)]

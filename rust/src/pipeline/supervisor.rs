@@ -1,0 +1,911 @@
+//! Multi-process sharded deduplication: a supervising orchestrator that
+//! launches one OS **worker process per shard** and aggregates their
+//! published checkpoints (`dedup --shards N --distributed`).
+//!
+//! This crosses the seam PR 3 prepared: the checkpoint directory format
+//! ([`crate::persist`]) is the *only* channel between the supervisor and
+//! its workers — no shared memory, no pipes beyond stdout/stderr logs,
+//! no sockets. A worker ingests its shard slice through a private
+//! [`ConcurrentEngine`], streams per-document outcomes to disk, publishes
+//! its filled filters as an engine checkpoint, and finally writes a
+//! [`WorkerManifest`] (tmp + rename) as its completion marker. The
+//! supervisor spawns the workers by **self-exec** (`<current binary>
+//! worker --shard s …`), watches their exit statuses, restarts a crashed
+//! worker once with `--resume`, and then runs phase-2 aggregation
+//! entirely from the published directories via
+//! [`crate::persist::union_from_checkpoint`].
+//!
+//! ```text
+//!  supervisor (dedup --shards N --distributed --checkpoint-dir STATE)
+//!    ├─ spawn: self-exec `worker --shard 0 … --dir STATE/worker-000`
+//!    ├─ spawn: self-exec `worker --shard 1 … --dir STATE/worker-001`
+//!    │    …                       (monitor exits; restart-once on crash)
+//!    └─ phase 2: for each shard in order
+//!         recheck outcomes.jsonl survivors against the running union,
+//!         then bit-OR the shard checkpoint in (union_from_checkpoint);
+//!       finally publish the aggregate checkpoint at STATE/ for
+//!       `serve --state-dir STATE`.
+//! ```
+//!
+//! ## Equivalence with the in-process sharded run
+//!
+//! Workers split the stream round-robin (`pos % N == shard`) exactly
+//! like [`super::shard::dedup_sharded`], engine verdicts are
+//! deterministic and batch-size independent (see `engine::batch`), and
+//! phase 2 applies the same shard-order recheck + bit-OR rule — so a
+//! distributed run's verdict vector is identical to the in-process
+//! `--shards N` run (enforced by `rust/tests/distributed_shard.rs`).
+//!
+//! ## Crash recovery
+//!
+//! Workers checkpoint **cold snapshots** every `checkpoint_every`
+//! documents, with the outcomes file fsync'd *before* each snapshot, so
+//! a restored engine holds exactly the bits of an uninterrupted run at
+//! that boundary (never the mmap superset — that would poison verdict
+//! determinism for re-processed documents). On restart with `--resume`
+//! the worker truncates its outcomes file to the checkpointed prefix and
+//! continues; the survivor set is byte-identical to a crash-free run.
+//!
+//! This is the bridge from "one process, many threads" to "many
+//! processes, then many hosts": swapping [`std::process::Command`] for a
+//! remote execution endpoint is all the ROADMAP router item still needs.
+
+use super::shard::{ShardAggregator, ShardedStats};
+use crate::config::PipelineConfig;
+use crate::corpus::{Doc, LabeledDoc};
+use crate::engine::ConcurrentEngine;
+use crate::error::{Error, Result};
+use crate::json::{self, obj, Value};
+use crate::persist::{
+    worker_dir_name, write_checkpoint, CheckpointManifest, ChecksumStream, WorkerManifest,
+    WORKER_CHECKPOINT_DIR, WORKER_OUTCOMES_FILE,
+};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::Instant;
+
+/// File name of a worker's captured stdout/stderr inside its directory.
+pub const WORKER_LOG_FILE: &str = "worker.log";
+
+/// Exit code a worker uses for an injected (test-only) crash.
+pub const WORKER_CRASH_EXIT: i32 = 42;
+
+/// Fault-injection env var: shard index that should crash (test hook).
+///
+/// Together with [`CRASH_AFTER_ENV`], lets the integration tests kill a
+/// real worker process mid-ingest deterministically: the matching worker
+/// exits with [`WORKER_CRASH_EXIT`] once it has processed at least that
+/// many documents. The supervisor strips both variables from restarted
+/// workers, so the crash fires exactly once.
+pub const CRASH_SHARD_ENV: &str = "LSHBLOOM_WORKER_CRASH_SHARD";
+
+/// Fault-injection env var: crash once processed docs reach this count.
+pub const CRASH_AFTER_ENV: &str = "LSHBLOOM_WORKER_CRASH_AFTER_DOCS";
+
+/// Supervisor tuning knobs.
+#[derive(Clone, Debug)]
+pub struct SupervisorOptions {
+    /// Worker binary to self-exec (`None` = `std::env::current_exe()`;
+    /// tests pass `env!("CARGO_BIN_EXE_lshbloom")` because their own
+    /// `current_exe` is the test harness, not the CLI).
+    pub worker_bin: Option<PathBuf>,
+    /// How many times a crashed/torn worker is restarted (with
+    /// `--resume`) before the run fails. Default 1.
+    pub restarts: u32,
+    /// Extra env vars for *first-attempt* worker spawns (the
+    /// fault-injection hook; restarts never receive these).
+    pub worker_env: Vec<(String, String)>,
+}
+
+impl Default for SupervisorOptions {
+    fn default() -> Self {
+        Self { worker_bin: None, restarts: 1, worker_env: Vec::new() }
+    }
+}
+
+/// Result of a distributed run.
+#[derive(Debug)]
+pub struct DistributedRun {
+    /// Aggregated phase-1/phase-2 statistics, identical in shape to the
+    /// in-process sharded run.
+    pub stats: ShardedStats,
+    /// Worker restarts the supervisor performed (0 on a clean run).
+    pub restarts: u32,
+    /// Threads each worker process ran with.
+    pub worker_threads: usize,
+}
+
+/// One per-document record in a worker's `outcomes.jsonl`.
+struct Outcome {
+    /// Original stream position (`line_index * num_shards + shard`).
+    pos: usize,
+    /// Phase-1 verdict (`true` = dropped within the shard).
+    dup: bool,
+    /// Band hashes (survivors only — what phase 2 rechecks).
+    bands: Vec<u64>,
+}
+
+fn parse_outcome(line: &str, path: &Path, lineno: usize) -> Result<Outcome> {
+    let context = || format!("{} line {}", path.display(), lineno + 1);
+    let v = json::parse(line).map_err(|e| Error::parse(context(), e.to_string()))?;
+    let pos = v
+        .get("pos")
+        .and_then(|x| x.as_usize())
+        .ok_or_else(|| Error::parse(context(), "missing 'pos'"))?;
+    let dup = v
+        .get("dup")
+        .and_then(|x| x.as_bool())
+        .ok_or_else(|| Error::parse(context(), "missing 'dup'"))?;
+    let bands = if dup {
+        Vec::new()
+    } else {
+        v.get("bands")
+            .and_then(|x| x.as_arr())
+            .ok_or_else(|| Error::parse(context(), "survivor line missing 'bands'"))?
+            .iter()
+            .map(|b| b.as_u64().ok_or_else(|| Error::parse(context(), "band not a u64")))
+            .collect::<Result<Vec<u64>>>()?
+    };
+    Ok(Outcome { pos, dup, bands })
+}
+
+fn outcome_line(pos: usize, dup: bool, bands: &[u64]) -> String {
+    let mut fields = vec![("pos", Value::u64(pos as u64)), ("dup", Value::Bool(dup))];
+    if !dup {
+        fields.push(("bands", Value::Arr(bands.iter().map(|&h| Value::u64(h)).collect())));
+    }
+    obj(fields).to_json()
+}
+
+/// Keep only the first `keep` outcome lines (the prefix the engine
+/// checkpoint covers), rewriting the file atomically. Returns the
+/// (dropped, survivors) counts among the kept lines so the resumed
+/// worker's counters continue exactly.
+fn truncate_outcomes(path: &Path, keep: u64) -> Result<(u64, u64)> {
+    if keep == 0 {
+        crate::persist::remove_file_if_exists(path)?;
+        return Ok((0, 0));
+    }
+    use std::io::BufRead;
+    let file = std::fs::File::open(path).map_err(|e| Error::io(path.display().to_string(), e))?;
+    let reader = std::io::BufReader::new(file);
+    let tmp = path.with_extension("jsonl.tmp");
+    let mut w = std::io::BufWriter::new(
+        std::fs::File::create(&tmp).map_err(|e| Error::io(tmp.display().to_string(), e))?,
+    );
+    let mut dropped = 0u64;
+    let mut survivors = 0u64;
+    let mut n = 0u64;
+    for (lineno, line) in reader.lines().enumerate() {
+        if n == keep {
+            break;
+        }
+        let line = line.map_err(|e| Error::io(path.display().to_string(), e))?;
+        let outcome = parse_outcome(&line, path, lineno)?;
+        if outcome.dup {
+            dropped += 1;
+        } else {
+            survivors += 1;
+        }
+        w.write_all(line.as_bytes()).map_err(|e| Error::io(tmp.display().to_string(), e))?;
+        w.write_all(b"\n").map_err(|e| Error::io(tmp.display().to_string(), e))?;
+        n += 1;
+    }
+    if n < keep {
+        return Err(Error::Format(format!(
+            "outcomes file {} holds {n} complete lines but the engine checkpoint \
+             covers {keep} documents; the worker directory is corrupt",
+            path.display()
+        )));
+    }
+    let f = w
+        .into_inner()
+        .map_err(|e| Error::io(tmp.display().to_string(), e.into_error()))?;
+    f.sync_all().map_err(|e| Error::io(tmp.display().to_string(), e))?;
+    std::fs::rename(&tmp, path).map_err(|e| Error::io(path.display().to_string(), e))?;
+    Ok((dropped, survivors))
+}
+
+/// File binding a worker directory to one (input, shard layout): the
+/// guard that keeps `--resume` from silently adopting checkpointed state
+/// from a *different* corpus or shard count, which would produce a
+/// corrupt survivor set with no error. Private to the worker — the
+/// supervisor never reads it.
+const WORKER_BINDING_FILE: &str = "binding.json";
+
+/// Stream this worker's round-robin slice out of the corpus without
+/// materializing the rest (positions count non-empty JSONL lines,
+/// matching `LabeledCorpus::load_jsonl`). Returns the slice, the total
+/// stream length, and a fingerprint over the slice contents + layout
+/// that [`run_worker`] uses to bind its resume state to this input.
+fn load_shard_slice(
+    input: &Path,
+    shard: usize,
+    num_shards: usize,
+) -> Result<(Vec<(usize, Doc)>, usize, u64)> {
+    use std::io::BufRead;
+    let file =
+        std::fs::File::open(input).map_err(|e| Error::io(input.display().to_string(), e))?;
+    let reader = std::io::BufReader::new(file);
+    let mut docs: Vec<(usize, Doc)> = Vec::new();
+    let mut pos = 0usize;
+    let mut cs = ChecksumStream::new();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.map_err(|e| Error::io(input.display().to_string(), e))?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        if pos % num_shards == shard {
+            let bad = |what: &str| {
+                Error::parse("corpus", format!("line {}: missing {what}", lineno + 1))
+            };
+            let v = json::parse(&line)
+                .map_err(|e| Error::parse(format!("corpus line {}", lineno + 1), e.to_string()))?;
+            let id = v.get("id").and_then(|x| x.as_u64()).ok_or_else(|| bad("id"))?;
+            let text = v
+                .get("text")
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| bad("text"))?
+                .to_string();
+            let mut words = Vec::with_capacity(3 + text.len() / 8 + 1);
+            words.extend([pos as u64, id, text.len() as u64]);
+            for chunk in text.as_bytes().chunks(8) {
+                let mut w = [0u8; 8];
+                w[..chunk.len()].copy_from_slice(chunk);
+                words.push(u64::from_le_bytes(w));
+            }
+            cs.update(&words);
+            docs.push((pos, Doc { id, text }));
+        }
+        pos += 1;
+    }
+    cs.update(&[pos as u64, shard as u64, num_shards as u64]);
+    Ok((docs, pos, cs.finish()))
+}
+
+/// Record which (input fingerprint, shard layout) this worker directory
+/// belongs to. Written at every fresh start, after any stale engine
+/// checkpoint has been removed.
+fn write_binding(dir: &Path, shard: usize, num_shards: usize, fingerprint: u64) -> Result<()> {
+    let path = dir.join(WORKER_BINDING_FILE);
+    let doc = obj(vec![
+        ("shard", Value::u64(shard as u64)),
+        ("num_shards", Value::u64(num_shards as u64)),
+        ("fingerprint", Value::u64(fingerprint)),
+    ]);
+    std::fs::write(&path, doc.to_json()).map_err(|e| Error::io(path.display().to_string(), e))
+}
+
+/// Whether the directory's binding matches this run. Any missing or
+/// unreadable binding reads as a mismatch (resume then degrades to a
+/// fresh start — safe, just slower).
+fn binding_matches(dir: &Path, shard: usize, num_shards: usize, fingerprint: u64) -> bool {
+    let path = dir.join(WORKER_BINDING_FILE);
+    let Ok(text) = std::fs::read_to_string(&path) else { return false };
+    let Ok(v) = json::parse(&text) else { return false };
+    let field = |k: &str| v.get(k).and_then(|x| x.as_u64());
+    field("shard") == Some(shard as u64)
+        && field("num_shards") == Some(num_shards as u64)
+        && field("fingerprint") == Some(fingerprint)
+}
+
+/// Remove a stale engine-checkpoint manifest so a fresh-starting worker
+/// that crashes before its first checkpoint cannot leave an adoptable
+/// manifest describing the *previous* run's bits. Mirrors
+/// `ConcurrentLshBloomIndex::new_shm`'s discipline: failure to remove an
+/// existing manifest is a hard error.
+fn remove_stale_checkpoint(ckpt: &Path) -> Result<()> {
+    for name in [
+        crate::persist::MANIFEST_FILE.to_string(),
+        format!("{}.tmp", crate::persist::MANIFEST_FILE),
+    ] {
+        crate::persist::remove_file_if_exists(&ckpt.join(name))?;
+    }
+    Ok(())
+}
+
+/// Whether the (test-only) fault-injection env vars ask this worker to
+/// crash now. See [`CRASH_SHARD_ENV`].
+fn crash_requested(shard: usize, processed: u64) -> bool {
+    let Ok(s) = std::env::var(CRASH_SHARD_ENV) else { return false };
+    let Ok(n) = std::env::var(CRASH_AFTER_ENV) else { return false };
+    s.parse::<usize>().map(|v| v == shard).unwrap_or(false)
+        && n.parse::<u64>().map(|v| processed >= v).unwrap_or(false)
+}
+
+/// Run one shard worker to completion: ingest the round-robin slice
+/// `pos % num_shards == shard` of `input` through a private
+/// [`ConcurrentEngine`], stream per-document outcomes to
+/// `dir/outcomes.jsonl`, checkpoint the engine into `dir/checkpoint/`
+/// (periodically per `cfg.checkpoint_every`, and always at end of
+/// stream), and publish a [`WorkerManifest`] as the completion marker.
+///
+/// With `resume` and an existing engine checkpoint, the worker restores
+/// the snapshot, truncates the outcomes file to the checkpointed prefix,
+/// and continues from there; without a checkpoint, `resume` degrades to
+/// a fresh start. This is the function behind the `worker` CLI
+/// subcommand — the supervisor never calls it in-process.
+pub fn run_worker(
+    cfg: &PipelineConfig,
+    input: &Path,
+    shard: usize,
+    num_shards: usize,
+    dir: &Path,
+    resume: bool,
+) -> Result<WorkerManifest> {
+    if num_shards == 0 || shard >= num_shards {
+        return Err(Error::Config(format!(
+            "worker shard {shard} out of range for {num_shards} shards"
+        )));
+    }
+    std::fs::create_dir_all(dir).map_err(|e| Error::io(dir.display().to_string(), e))?;
+    // A (re)starting worker is by definition incomplete: a stale marker
+    // from a previous run must go before any state changes.
+    WorkerManifest::remove_stale(dir)?;
+    let ckpt = dir.join(WORKER_CHECKPOINT_DIR);
+    let outcomes_path = dir.join(WORKER_OUTCOMES_FILE);
+
+    // Stream only this shard's slice into memory (a worker holding the
+    // whole corpus would multiply the fleet's footprint by N), and
+    // fingerprint it — folding in every parameter that shapes band
+    // hashes or filter geometry: resume state is only adoptable for the
+    // exact (input, shard layout, parameters) that produced it. A
+    // parameter change thus degrades to a fresh start instead of a
+    // deterministic restore failure that would burn the restart budget.
+    let (shard_docs, _total, slice_fp) = load_shard_slice(input, shard, num_shards)?;
+    let fingerprint = {
+        let mut cs = ChecksumStream::new();
+        cs.update(&[
+            slice_fp,
+            cfg.threshold.to_bits(),
+            cfg.num_perms as u64,
+            cfg.ngram as u64,
+            cfg.p_effective.to_bits(),
+            cfg.expected_docs,
+        ]);
+        cs.finish()
+    };
+
+    let adoptable = resume
+        && CheckpointManifest::exists(&ckpt)
+        && binding_matches(dir, shard, num_shards, fingerprint);
+    if resume && CheckpointManifest::exists(&ckpt) && !adoptable {
+        eprintln!(
+            "worker {shard}: checkpoint in {} belongs to a different input or shard \
+             layout; starting this slice fresh",
+            ckpt.display()
+        );
+    }
+    let (engine, mut dropped, mut survivors, skipped) = if adoptable {
+        // Cold-snapshot restore (mmap=false): the engine holds exactly
+        // the bits of an uninterrupted run at the checkpoint boundary,
+        // so re-processing the tail yields identical verdicts. An mmap
+        // restore could hold a post-checkpoint superset, which would
+        // flag re-processed documents as duplicates of themselves.
+        let engine = ConcurrentEngine::restore(cfg, &ckpt, false)?;
+        let skipped = engine.stats().0;
+        let (dropped, survivors) = truncate_outcomes(&outcomes_path, skipped)?;
+        (engine, dropped, survivors, skipped as usize)
+    } else {
+        // Fresh start: the stale engine manifest goes FIRST (a crash
+        // after the binding rewrite but before the first checkpoint must
+        // not leave an adoptable manifest over the old bits), then the
+        // outcomes, then the new binding.
+        remove_stale_checkpoint(&ckpt)?;
+        truncate_outcomes(&outcomes_path, 0)?;
+        write_binding(dir, shard, num_shards, fingerprint)?;
+        (ConcurrentEngine::from_config(cfg), 0, 0, 0)
+    };
+    if skipped > shard_docs.len() {
+        return Err(Error::Format(format!(
+            "checkpoint in {} covers {skipped} documents but shard {shard} of {} only \
+             holds {}; the worker directory is corrupt",
+            ckpt.display(),
+            num_shards,
+            shard_docs.len()
+        )));
+    }
+
+    let mut out = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&outcomes_path)
+        .map_err(|e| Error::io(outcomes_path.display().to_string(), e))?;
+    let super_batch = cfg.batch_size.max(1) * engine.workers();
+    let mut processed = skipped;
+    let mut since_checkpoint = 0u64;
+    for chunk in shard_docs[skipped..].chunks(super_batch) {
+        let batch: Vec<Doc> = chunk.iter().map(|(_, doc)| doc.clone()).collect();
+        let (decisions, bands) = engine.submit_with_bands(&batch);
+        let mut buf = String::new();
+        for ((item, decision), doc_bands) in chunk.iter().zip(&decisions).zip(&bands) {
+            if decision.duplicate {
+                dropped += 1;
+            } else {
+                survivors += 1;
+            }
+            buf.push_str(&outcome_line(item.0, decision.duplicate, doc_bands));
+            buf.push('\n');
+        }
+        out.write_all(buf.as_bytes())
+            .map_err(|e| Error::io(outcomes_path.display().to_string(), e))?;
+        processed += chunk.len();
+        since_checkpoint += chunk.len() as u64;
+        if cfg.checkpoint_every > 0 && since_checkpoint >= cfg.checkpoint_every {
+            // Outcomes become durable BEFORE the engine checkpoint that
+            // covers them, so the file always holds at least as many
+            // complete lines as the checkpoint's document counter — the
+            // invariant the resume-side truncation relies on. Syncing
+            // only here (not per super-batch) keeps fsync off the hot
+            // ingest loop.
+            out.sync_data().map_err(|e| Error::io(outcomes_path.display().to_string(), e))?;
+            engine.checkpoint(&ckpt)?;
+            since_checkpoint = 0;
+        }
+        if crash_requested(shard, processed as u64) {
+            eprintln!(
+                "worker {shard}: injected crash after {processed} documents (test hook)"
+            );
+            std::process::exit(WORKER_CRASH_EXIT);
+        }
+    }
+    // The final checkpoint IS the published shard filter phase 2 unions;
+    // same ordering: outcomes durable first.
+    out.sync_data().map_err(|e| Error::io(outcomes_path.display().to_string(), e))?;
+    engine.checkpoint(&ckpt)?;
+    let manifest = WorkerManifest {
+        version: crate::persist::worker::WORKER_MANIFEST_VERSION,
+        shard,
+        num_shards,
+        docs: processed as u64,
+        dropped,
+        survivors,
+    };
+    manifest.save(dir)?;
+    Ok(manifest)
+}
+
+/// Everything constant across worker spawns of one distributed run.
+struct WorkerSpawner<'a> {
+    bin: PathBuf,
+    cfg: &'a PipelineConfig,
+    input: &'a Path,
+    state_dir: &'a Path,
+    num_shards: usize,
+    worker_threads: usize,
+}
+
+impl WorkerSpawner<'_> {
+    /// Spawn the worker process for `shard`, its stdout/stderr appended
+    /// to `worker.log` in its directory. Every spawn passes `--resume`
+    /// (a worker with no checkpoint just starts fresh), which makes
+    /// re-running a failed distributed command incremental: workers pick
+    /// up from their snapshots instead of redoing their slices.
+    /// `restart` spawns are additionally stripped of the fault-injection
+    /// env vars so an injected crash fires at most once.
+    fn spawn(&self, shard: usize, restart: bool, env: &[(String, String)]) -> Result<Child> {
+        let wdir = self.state_dir.join(worker_dir_name(shard));
+        std::fs::create_dir_all(&wdir).map_err(|e| Error::io(wdir.display().to_string(), e))?;
+        let log_path = wdir.join(WORKER_LOG_FILE);
+        let log = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&log_path)
+            .map_err(|e| Error::io(log_path.display().to_string(), e))?;
+        let log_err = log.try_clone().map_err(|e| Error::io(log_path.display().to_string(), e))?;
+        let mut cmd = Command::new(&self.bin);
+        cmd.arg("worker")
+            .arg("--input")
+            .arg(self.input)
+            .arg("--shard")
+            .arg(shard.to_string())
+            .arg("--shards")
+            .arg(self.num_shards.to_string())
+            .arg("--dir")
+            .arg(&wdir)
+            .arg("--threshold")
+            .arg(self.cfg.threshold.to_string())
+            .arg("--perms")
+            .arg(self.cfg.num_perms.to_string())
+            .arg("--ngram")
+            .arg(self.cfg.ngram.to_string())
+            .arg("--p-effective")
+            .arg(self.cfg.p_effective.to_string())
+            .arg("--expected-docs")
+            .arg(self.cfg.expected_docs.to_string())
+            .arg("--workers")
+            .arg(self.worker_threads.to_string())
+            .arg("--batch-size")
+            .arg(self.cfg.batch_size.to_string())
+            .arg("--checkpoint-every")
+            .arg(self.cfg.checkpoint_every.to_string())
+            .arg("--resume")
+            .stdin(Stdio::null())
+            .stdout(Stdio::from(log))
+            .stderr(Stdio::from(log_err));
+        if restart {
+            cmd.env_remove(CRASH_SHARD_ENV).env_remove(CRASH_AFTER_ENV);
+        } else {
+            for (k, v) in env {
+                cmd.env(k, v);
+            }
+        }
+        cmd.spawn().map_err(|e| Error::io(self.bin.display().to_string(), e))
+    }
+}
+
+fn describe_exit(status: &std::process::ExitStatus) -> String {
+    match status.code() {
+        Some(code) => format!("exit code {code}"),
+        None => "killed by a signal".to_string(),
+    }
+}
+
+/// Run the full distributed pipeline: spawn one worker process per
+/// shard, supervise them (restart-once-with-`--resume` on crash or torn
+/// output), aggregate phase 2 from the published checkpoint directories,
+/// and leave the aggregate index as a checkpoint at `state_dir` so
+/// `serve --state-dir` can warm-start from the whole deduplicated
+/// corpus.
+///
+/// `docs` must be the same corpus `input` holds — passed as the
+/// already-loaded [`LabeledDoc`] vector so the CLI hands over its one
+/// in-memory copy instead of cloning a second, corpus-sized `Vec<Doc>`
+/// (labels are ignored here; only positions and texts are read).
+/// Verdicts, survivor order, and counters are identical to
+/// [`super::shard::dedup_sharded_with_state`] over the same corpus and
+/// shard count.
+pub fn run_distributed(
+    cfg: &PipelineConfig,
+    input: &Path,
+    docs: &[LabeledDoc],
+    state_dir: &Path,
+    opts: &SupervisorOptions,
+) -> Result<DistributedRun> {
+    let num_shards = cfg.shards.max(1);
+    let total = docs.len();
+    // Same thread-budget split as the in-process sharded run, one
+    // process instead of one scoped pool per shard.
+    let worker_threads = (cfg.effective_workers() / num_shards).max(1);
+    let bin = match &opts.worker_bin {
+        Some(p) => p.clone(),
+        None => std::env::current_exe()
+            .map_err(|e| Error::io("current_exe".to_string(), e))?,
+    };
+    std::fs::create_dir_all(state_dir)
+        .map_err(|e| Error::io(state_dir.display().to_string(), e))?;
+    // A stale aggregate from a previous run must not stay adoptable
+    // while THIS run is in flight (or after it fails): `serve
+    // --state-dir` would warm-start from the wrong corpus. Same
+    // discipline as the per-worker stale-marker removal; the aggregate
+    // manifest republishes only when phase 2 completes.
+    remove_stale_checkpoint(state_dir)?;
+    let spawner = WorkerSpawner {
+        bin,
+        cfg,
+        input,
+        state_dir,
+        num_shards,
+        worker_threads,
+    };
+    // Documents round-robin'd onto shard `s`.
+    let shard_len = |s: usize| (s..total).step_by(num_shards).count() as u64;
+
+    // Phase 1: all workers in parallel, supervised to completion.
+    // Polling with try_wait (instead of blocking wait in shard order)
+    // restarts a crashed worker immediately, while its siblings are
+    // still running — blocking on shard 0 would delay shard 7's restart
+    // by the whole phase.
+    struct WorkerSlot {
+        shard: usize,
+        child: Child,
+        attempts: u32,
+        done: bool,
+    }
+    let t1 = Instant::now();
+    let mut slots: Vec<WorkerSlot> = Vec::with_capacity(num_shards);
+    for shard in 0..num_shards {
+        let child = spawner.spawn(shard, false, &opts.worker_env)?;
+        slots.push(WorkerSlot { shard, child, attempts: 1, done: false });
+    }
+    let mut restarts = 0u32;
+    let supervise = |slots: &mut Vec<WorkerSlot>, restarts: &mut u32| -> Result<()> {
+        let mut pending = slots.iter().filter(|s| !s.done).count();
+        while pending > 0 {
+            let mut progressed = false;
+            for slot in slots.iter_mut() {
+                if slot.done {
+                    continue;
+                }
+                let shard = slot.shard;
+                let Some(status) = slot
+                    .child
+                    .try_wait()
+                    .map_err(|e| Error::io(format!("worker {shard}"), e))?
+                else {
+                    continue;
+                };
+                progressed = true;
+                let wdir = state_dir.join(worker_dir_name(shard));
+                let outcome = if !status.success() {
+                    Err(Error::Format(format!(
+                        "worker {shard} failed: {}",
+                        describe_exit(&status)
+                    )))
+                } else {
+                    WorkerManifest::load(&wdir)
+                        .and_then(|m| m.verify(shard, num_shards, shard_len(shard)))
+                };
+                match outcome {
+                    Ok(()) => {
+                        slot.done = true;
+                        pending -= 1;
+                    }
+                    Err(e) if slot.attempts <= opts.restarts => {
+                        crate::log_warn!(
+                            "worker {shard}: {e}; restarting with --resume (attempt {})",
+                            slot.attempts + 1
+                        );
+                        *restarts += 1;
+                        slot.attempts += 1;
+                        slot.child = spawner.spawn(shard, true, &opts.worker_env)?;
+                    }
+                    Err(e) => {
+                        return Err(Error::Format(format!(
+                            "worker {shard} failed after {} attempt(s): {e}; see {}",
+                            slot.attempts,
+                            wdir.join(WORKER_LOG_FILE).display()
+                        )));
+                    }
+                }
+            }
+            if pending > 0 && !progressed {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+        }
+        Ok(())
+    };
+    if let Err(e) = supervise(&mut slots, &mut restarts) {
+        // Kill (and reap) every still-running sibling before surfacing
+        // the error: orphans racing a retried run on the same worker
+        // directories could tear the very files the retry resumes from.
+        for slot in &mut slots {
+            if !slot.done {
+                let _ = slot.child.kill();
+                let _ = slot.child.wait();
+            }
+        }
+        return Err(e);
+    }
+    let phase1_wall = t1.elapsed();
+
+    // Phase 2: shard-order recheck against the running bit-OR union —
+    // the SAME fold as the in-process path (`ShardAggregator`, defined
+    // in `super::shard`, is the single home of the recheck rule) —
+    // except every shard's verdicts, band hashes, and filter bits come
+    // from the files its worker process published, streamed line by
+    // line (an outcomes file is large at scale; it never needs to be
+    // resident at once).
+    let t2 = Instant::now();
+    let mut agg = ShardAggregator::new(cfg, total);
+    for shard in 0..num_shards {
+        use std::io::BufRead;
+        let wdir = state_dir.join(worker_dir_name(shard));
+        let manifest = WorkerManifest::load(&wdir)?;
+        let outcomes_path = wdir.join(WORKER_OUTCOMES_FILE);
+        let file = std::fs::File::open(&outcomes_path)
+            .map_err(|e| Error::io(outcomes_path.display().to_string(), e))?;
+        let (mut lines, mut dropped) = (0u64, 0u64);
+        for (lineno, line) in std::io::BufReader::new(file).lines().enumerate() {
+            let line = line.map_err(|e| Error::io(outcomes_path.display().to_string(), e))?;
+            let outcome = parse_outcome(&line, &outcomes_path, lineno)?;
+            let expect_pos = lineno * num_shards + shard;
+            if outcome.pos != expect_pos || outcome.pos >= total {
+                return Err(Error::Format(format!(
+                    "{} line {}: stream position {} does not match the round-robin \
+                     layout (expected {expect_pos}, corpus holds {total})",
+                    outcomes_path.display(),
+                    lineno + 1,
+                    outcome.pos
+                )));
+            }
+            if outcome.dup {
+                agg.mark_dropped(outcome.pos);
+                dropped += 1;
+            } else {
+                agg.recheck(outcome.pos, docs[outcome.pos].doc.clone(), &outcome.bands);
+            }
+            lines += 1;
+        }
+        if lines != manifest.docs || dropped != manifest.dropped {
+            return Err(Error::Format(format!(
+                "{}: {lines} outcome lines ({dropped} dropped) but the worker \
+                 manifest records {} ({} dropped); the worker directory is torn",
+                outcomes_path.display(),
+                manifest.docs,
+                manifest.dropped
+            )));
+        }
+        agg.union_from_checkpoint(&wdir.join(WORKER_CHECKPOINT_DIR))?;
+    }
+    // Publish the aggregate at the state root: `serve --state-dir` then
+    // warm-starts with the union of every shard filter and the full-run
+    // counters.
+    write_checkpoint(
+        agg.index(),
+        total as u64,
+        agg.phase1_dropped + agg.phase2_dropped,
+        state_dir,
+    )?;
+    let phase2_wall = t2.elapsed();
+
+    Ok(DistributedRun {
+        stats: agg.into_stats(total as u64, phase1_wall, phase2_wall),
+        restarts,
+        worker_threads,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{DatasetSpec, LabeledCorpus};
+
+    fn cfg() -> PipelineConfig {
+        PipelineConfig {
+            num_perms: 64,
+            expected_docs: 10_000,
+            workers: 2,
+            ..Default::default()
+        }
+    }
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("lshbloom-sup-{name}-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn write_corpus(dir: &Path, seed: u64, n: usize, rate: f64) -> (PathBuf, Vec<Doc>) {
+        let corpus = LabeledCorpus::build(DatasetSpec::testing(seed, n, rate));
+        let path = dir.join("corpus.jsonl");
+        corpus.save_jsonl(&path).unwrap();
+        let docs = corpus.docs.iter().map(|ld| ld.doc.clone()).collect();
+        (path, docs)
+    }
+
+    #[test]
+    fn run_worker_matches_in_process_shard_slice() {
+        // The worker's published outcomes must agree line-for-line with
+        // an in-process engine fed the same round-robin slice.
+        let dir = tmp_dir("worker-eq");
+        let (input, docs) = write_corpus(&dir, 71, 120, 0.5);
+        let config = cfg();
+        let (shard, num_shards) = (1usize, 3usize);
+        let wdir = dir.join(worker_dir_name(shard));
+        let manifest = run_worker(&config, &input, shard, num_shards, &wdir, false).unwrap();
+
+        let slice: Vec<(usize, Doc)> = docs
+            .iter()
+            .enumerate()
+            .filter(|(pos, _)| pos % num_shards == shard)
+            .map(|(pos, d)| (pos, d.clone()))
+            .collect();
+        assert_eq!(manifest.docs, slice.len() as u64);
+        assert_eq!(manifest.dropped + manifest.survivors, manifest.docs);
+
+        let engine = ConcurrentEngine::from_config(&config);
+        let batch: Vec<Doc> = slice.iter().map(|(_, d)| d.clone()).collect();
+        let (decisions, bands) = engine.submit_with_bands(&batch);
+
+        let text = std::fs::read_to_string(wdir.join(WORKER_OUTCOMES_FILE)).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), slice.len());
+        for (i, line) in lines.iter().enumerate() {
+            let outcome = parse_outcome(line, Path::new("outcomes"), i).unwrap();
+            assert_eq!(outcome.pos, slice[i].0);
+            assert_eq!(outcome.dup, decisions[i].duplicate, "line {i}");
+            if !outcome.dup {
+                assert_eq!(outcome.bands, bands[i], "line {i}");
+            }
+        }
+        // The published checkpoint is a complete, loadable engine state.
+        assert!(CheckpointManifest::exists(&wdir.join(WORKER_CHECKPOINT_DIR)));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn worker_rejects_bad_shard_index() {
+        let dir = tmp_dir("worker-badshard");
+        let (input, _) = write_corpus(&dir, 5, 10, 0.0);
+        let err = run_worker(&cfg(), &input, 3, 3, &dir.join("w"), false).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn outcome_line_roundtrip() {
+        let line = outcome_line(42, false, &[u64::MAX, 0, 123_456_789_012_345_678]);
+        let outcome = parse_outcome(&line, Path::new("x"), 0).unwrap();
+        assert_eq!(outcome.pos, 42);
+        assert!(!outcome.dup);
+        assert_eq!(outcome.bands, vec![u64::MAX, 0, 123_456_789_012_345_678]);
+
+        let line = outcome_line(7, true, &[]);
+        let outcome = parse_outcome(&line, Path::new("x"), 0).unwrap();
+        assert!(outcome.dup);
+        assert!(outcome.bands.is_empty());
+    }
+
+    #[test]
+    fn truncate_outcomes_keeps_exact_prefix() {
+        let dir = tmp_dir("truncate");
+        let path = dir.join(WORKER_OUTCOMES_FILE);
+        let mut text = String::new();
+        for i in 0..10usize {
+            text.push_str(&outcome_line(i, i % 3 == 0, &[i as u64]));
+            text.push('\n');
+        }
+        text.push_str("{\"pos\":10,\"dup\""); // torn tail from a crash
+        std::fs::write(&path, &text).unwrap();
+        let (dropped, survivors) = truncate_outcomes(&path, 6).unwrap();
+        assert_eq!(dropped, 2); // positions 0 and 3
+        assert_eq!(survivors, 4);
+        let kept = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(kept.lines().count(), 6);
+        // Asking for more than the file holds is corruption, not silence.
+        std::fs::write(&path, &text).unwrap();
+        assert!(truncate_outcomes(&path, 11).is_err());
+        // keep == 0 clears the file entirely.
+        truncate_outcomes(&path, 0).unwrap();
+        assert!(!path.exists());
+        truncate_outcomes(&path, 0).unwrap(); // idempotent on a missing file
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resume_over_a_different_input_starts_fresh_instead_of_adopting() {
+        // The binding guard: pointing --resume at state produced from a
+        // DIFFERENT corpus must not adopt its checkpoint (that would
+        // silently corrupt verdicts) — it starts the slice fresh and
+        // produces exactly what a clean run on the new corpus produces.
+        let dir = tmp_dir("worker-rebind");
+        let (input_a, _) = write_corpus(&dir, 1, 60, 0.5);
+        let wdir = dir.join(worker_dir_name(0));
+        run_worker(&cfg(), &input_a, 0, 2, &wdir, false).unwrap();
+
+        let corpus_b = LabeledCorpus::build(DatasetSpec::testing(2, 60, 0.5));
+        let input_b = dir.join("corpus-b.jsonl");
+        corpus_b.save_jsonl(&input_b).unwrap();
+        let resumed = run_worker(&cfg(), &input_b, 0, 2, &wdir, true).unwrap();
+        let fresh_dir = dir.join("fresh");
+        let fresh = run_worker(&cfg(), &input_b, 0, 2, &fresh_dir, false).unwrap();
+        assert_eq!(resumed, fresh, "stale-state resume must equal a clean run");
+        assert_eq!(
+            std::fs::read_to_string(wdir.join(WORKER_OUTCOMES_FILE)).unwrap(),
+            std::fs::read_to_string(fresh_dir.join(WORKER_OUTCOMES_FILE)).unwrap(),
+            "outcomes must be rebuilt for the new corpus, not truncated from the old"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn worker_resume_without_checkpoint_is_fresh_start() {
+        let dir = tmp_dir("worker-fresh-resume");
+        let (input, _) = write_corpus(&dir, 11, 60, 0.4);
+        let wdir = dir.join(worker_dir_name(0));
+        let fresh = run_worker(&cfg(), &input, 0, 2, &wdir, false).unwrap();
+        // Re-running with --resume over the *completed* state restores
+        // the final checkpoint, truncates nothing, and republishes the
+        // same manifest.
+        let resumed = run_worker(&cfg(), &input, 0, 2, &wdir, true).unwrap();
+        assert_eq!(resumed, fresh);
+        // And a resume pointed at an empty directory just starts over.
+        let wdir2 = dir.join(worker_dir_name(1));
+        let manifest = run_worker(&cfg(), &input, 1, 2, &wdir2, true).unwrap();
+        assert_eq!(manifest.docs, 30);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

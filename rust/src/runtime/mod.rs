@@ -11,7 +11,8 @@
 //!
 //! The whole backend is gated behind the **`xla` cargo feature** because
 //! it links the external `xla` (PJRT) and `anyhow` crates, which are not
-//! vendored in offline environments. Without the feature, [`stub`]
+//! vendored in offline environments. Without the feature, the private
+//! `stub` module (`src/runtime/stub.rs`)
 //! provides the same public surface with constructors that return
 //! [`crate::error::Error::Runtime`] — every caller already handles that
 //! path (it is indistinguishable from "artifacts missing").

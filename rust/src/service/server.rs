@@ -25,7 +25,9 @@
 //! `shutdown`. With [`DedupServer::bind_with_state`] the concurrent
 //! index is mmap-backed in a state directory: restored on bind when a
 //! checkpoint manifest is present, checkpointed again on orderly
-//! shutdown.
+//! shutdown. When the state dir is the aggregated output of a `dedup
+//! --distributed` run, `stats` additionally reports `shard_workers` —
+//! how many worker processes produced the index being served.
 
 use crate::config::{EngineMode, PipelineConfig};
 use crate::corpus::Doc;
@@ -124,6 +126,13 @@ struct Shared {
     /// footprint only changes again at the shutdown checkpoint, after
     /// which no stats request can observe it.
     bind_disk_bytes: u64,
+    /// Worker directories with completion manifests found under the
+    /// state dir at bind — nonzero exactly when this server was pointed
+    /// at the aggregated output of a `dedup --distributed` run, in which
+    /// case `{"op":"stats"}` reports how many shard workers produced the
+    /// index being served. Counted once at bind for the same reason as
+    /// `bind_disk_bytes`: the worker set cannot change while we serve.
+    shard_workers: u64,
     stats: ServerStats,
     shutdown: AtomicBool,
 }
@@ -142,6 +151,28 @@ impl Shared {
             IndexBackend::Concurrent(engine) => engine.disk_bytes(),
         }
     }
+}
+
+/// Count the shard workers that produced the aggregated state in `dir`:
+/// worker-000's [`crate::persist::WorkerManifest`] names the layout's
+/// shard count, and every shard of that layout must be present and
+/// agree. Stale `worker-*` directories left by an earlier run with a
+/// *different* shard count are thereby ignored (the latest run rewrote
+/// the manifests of the shards it owns); any inconsistency reads as 0
+/// (unknown) rather than a wrong count.
+fn count_shard_workers(dir: &std::path::Path) -> u64 {
+    use crate::persist::{worker_dir_name, WorkerManifest};
+    let Ok(first) = WorkerManifest::load(&dir.join(worker_dir_name(0))) else {
+        return 0;
+    };
+    let n = first.num_shards;
+    for shard in 0..n {
+        match WorkerManifest::load(&dir.join(worker_dir_name(shard))) {
+            Ok(m) if m.shard == shard && m.num_shards == n => {}
+            _ => return 0,
+        }
+    }
+    n as u64
 }
 
 /// Total size of the regular files directly inside `dir` (the persisted
@@ -228,6 +259,7 @@ impl DedupServer {
             backend,
             state_dir: state_dir.map(|p| p.to_path_buf()),
             bind_disk_bytes,
+            shard_workers: state_dir.map(count_shard_workers).unwrap_or(0),
             stats,
             shutdown: AtomicBool::new(false),
         });
@@ -407,6 +439,7 @@ fn handle_request(line: &str, shared: &Shared) -> Value {
                 Value::u64(shared.stats.duplicates.load(Ordering::SeqCst)),
             ),
             ("disk_bytes", Value::u64(shared.current_disk_bytes())),
+            ("shard_workers", Value::u64(shared.shard_workers)),
         ]),
         Some("shutdown") => {
             shared.shutdown.store(true, Ordering::SeqCst);

@@ -1,0 +1,203 @@
+//! Distributed shard workers: the supervisor spawns REAL worker OS
+//! processes via the self-exec path (`CARGO_BIN_EXE_lshbloom worker …`),
+//! aggregates their published checkpoint directories, and — when a
+//! worker is killed mid-ingest — restart-and-resume reproduces the
+//! crash-free result exactly.
+
+use lshbloom::config::PipelineConfig;
+use lshbloom::corpus::{Doc, LabeledDoc};
+use lshbloom::json::{obj, Value};
+use lshbloom::methods::lshbloom::lshbloom_method;
+use lshbloom::minhash::PermFamily;
+use lshbloom::persist::{worker_dir_name, CheckpointManifest, WorkerManifest};
+use lshbloom::pipeline::supervisor::{CRASH_AFTER_ENV, CRASH_SHARD_ENV};
+use lshbloom::pipeline::{dedup_sharded, run_distributed, SupervisorOptions};
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+fn cfg() -> PipelineConfig {
+    PipelineConfig {
+        num_perms: 64,
+        threshold: 0.5,
+        expected_docs: 10_000,
+        workers: 2,
+        batch_size: 16,
+        shards: 4,
+        distributed: true,
+        ..Default::default()
+    }
+}
+
+fn opts() -> SupervisorOptions {
+    SupervisorOptions {
+        // Our own current_exe is the test harness, so the self-exec
+        // target must be named explicitly.
+        worker_bin: Some(PathBuf::from(env!("CARGO_BIN_EXE_lshbloom"))),
+        ..Default::default()
+    }
+}
+
+/// Corpus where every duplicate is an *exact* copy of an earlier
+/// document (the regime where sharded and sequential survivor sets must
+/// agree strictly), with copy distances that land both same-shard and
+/// cross-shard under 4-way round-robin.
+fn exact_dup_corpus(n: usize) -> Vec<Doc> {
+    let mut docs: Vec<Doc> = Vec::with_capacity(n);
+    for i in 0..n as u64 {
+        if i % 3 == 2 && i >= 17 {
+            // 2 and 5 are cross-shard for 4 shards; 16 is same-shard.
+            let dist = [2u64, 16, 5, 16][((i / 3) % 4) as usize];
+            let src = docs[(i - dist) as usize].clone();
+            docs.push(Doc { id: i, ..src });
+        } else {
+            docs.push(Doc {
+                id: i,
+                text: format!(
+                    "unique document alpha{i} beta{i} gamma{i} delta{i} \
+                     epsilon{i} zeta{i} eta{i} theta{i}"
+                ),
+            });
+        }
+    }
+    docs
+}
+
+fn save_jsonl(docs: &[Doc], path: &Path) {
+    let mut out = String::new();
+    for d in docs {
+        out.push_str(
+            &obj(vec![
+                ("id", Value::u64(d.id)),
+                ("text", Value::str(d.text.clone())),
+                ("duplicate_of", Value::Null),
+            ])
+            .to_json(),
+        );
+        out.push('\n');
+    }
+    std::fs::write(path, out).unwrap();
+}
+
+/// `run_distributed` takes the CLI's already-loaded labeled corpus;
+/// these tests drive it with unlabeled docs.
+fn labeled(docs: &[Doc]) -> Vec<LabeledDoc> {
+    docs.iter().map(|d| LabeledDoc { doc: d.clone(), duplicate_of: None }).collect()
+}
+
+fn tmp_root(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("lshbloom-dist-{name}-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn in_process_reference(config: &PipelineConfig, docs: &[Doc]) -> lshbloom::pipeline::ShardedStats {
+    let mut mem_cfg = config.clone();
+    mem_cfg.distributed = false;
+    mem_cfg.checkpoint_dir = String::new();
+    mem_cfg.checkpoint_every = 0;
+    dedup_sharded(&mem_cfg, docs.to_vec(), config.shards)
+}
+
+#[test]
+fn distributed_run_matches_in_process_sharded_run() {
+    let root = tmp_root("clean");
+    let docs = exact_dup_corpus(400);
+    let input = root.join("corpus.jsonl");
+    save_jsonl(&docs, &input);
+    let state = root.join("state");
+    let mut config = cfg();
+    config.checkpoint_dir = state.display().to_string();
+
+    let run = run_distributed(&config, &input, &labeled(&docs), &state, &opts()).unwrap();
+    assert_eq!(run.restarts, 0, "clean run must not restart anything");
+    assert_eq!(run.stats.docs, 400);
+
+    let mem = in_process_reference(&config, &docs);
+    assert_eq!(run.stats.verdicts, mem.verdicts, "verdict vector must be byte-identical");
+    assert_eq!(run.stats.phase1_dropped, mem.phase1_dropped);
+    assert_eq!(run.stats.phase2_dropped, mem.phase2_dropped);
+    let dist_ids: Vec<u64> = run.stats.survivors.iter().map(|d| d.id).collect();
+    let mem_ids: Vec<u64> = mem.survivors.iter().map(|d| d.id).collect();
+    assert_eq!(dist_ids, mem_ids, "survivor set (and order) must be identical");
+    assert!(run.stats.phase2_dropped > 0, "corpus was built with cross-shard duplicates");
+
+    // Every worker left a complete publish directory…
+    for s in 0..config.shards {
+        let wdir = state.join(worker_dir_name(s));
+        assert!(WorkerManifest::exists(&wdir), "worker {s} left no completion manifest");
+        let m = WorkerManifest::load(&wdir).unwrap();
+        assert_eq!(m.docs, 100);
+        assert!(wdir.join("worker.log").is_file(), "worker {s} left no log");
+    }
+    // …and the supervisor published the aggregate at the state root for
+    // `serve --state-dir`.
+    assert!(CheckpointManifest::exists(&state), "aggregate checkpoint missing");
+    let agg = CheckpointManifest::load(&state).unwrap();
+    assert_eq!(agg.docs, 400);
+    assert_eq!(agg.duplicates, mem.phase1_dropped + mem.phase2_dropped);
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn killed_worker_restarts_resumes_and_matches_sequential() {
+    let root = tmp_root("crash");
+    let docs = exact_dup_corpus(400);
+    let input = root.join("corpus.jsonl");
+    save_jsonl(&docs, &input);
+    let state = root.join("state");
+    let mut config = cfg();
+    config.checkpoint_dir = state.display().to_string();
+    // Workers snapshot every 25 shard documents, so the injected crash
+    // at >= 40 (shard 2 holds 100) lands after a checkpoint but before
+    // the next one — the resume path must truncate the outcome tail and
+    // re-process it.
+    config.checkpoint_every = 25;
+    let mut o = opts();
+    o.worker_env = vec![
+        (CRASH_SHARD_ENV.to_string(), "2".to_string()),
+        (CRASH_AFTER_ENV.to_string(), "40".to_string()),
+    ];
+
+    let run = run_distributed(&config, &input, &labeled(&docs), &state, &o).unwrap();
+    assert_eq!(run.restarts, 1, "exactly one worker must have crashed and been restarted");
+
+    // Identical to the crash-free in-process run…
+    let mem = in_process_reference(&config, &docs);
+    assert_eq!(run.stats.verdicts, mem.verdicts, "restart-and-resume changed verdicts");
+    let dist_ids: Vec<u64> = run.stats.survivors.iter().map(|d| d.id).collect();
+    let mem_ids: Vec<u64> = mem.survivors.iter().map(|d| d.id).collect();
+    assert_eq!(dist_ids, mem_ids);
+
+    // …and the surviving *content set* matches the sequential decider
+    // (exact duplicates: whichever copy survives, the texts agree).
+    let mut seq_cfg = config.clone();
+    seq_cfg.distributed = false;
+    seq_cfg.checkpoint_dir = String::new();
+    seq_cfg.checkpoint_every = 0;
+    seq_cfg.shards = 1;
+    let mut seq = lshbloom_method(&seq_cfg, PermFamily::Mix64);
+    let seq_texts: BTreeSet<String> =
+        docs.iter().filter(|d| !seq.process(d)).map(|d| d.text.clone()).collect();
+    let dist_texts: BTreeSet<String> =
+        run.stats.survivors.iter().map(|d| d.text.clone()).collect();
+    assert_eq!(dist_texts, seq_texts, "survivor content diverged from the sequential run");
+
+    // The crashed worker's log records both attempts.
+    let log = std::fs::read_to_string(state.join(worker_dir_name(2)).join("worker.log")).unwrap();
+    assert!(log.contains("injected crash"), "fault injection never fired:\n{log}");
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn torn_worker_directory_is_not_mistaken_for_complete() {
+    // A worker dir with outcomes + checkpoint but NO completion manifest
+    // (the shape a kill leaves behind) must read as incomplete.
+    let root = tmp_root("torn");
+    let wdir = root.join(worker_dir_name(0));
+    std::fs::create_dir_all(wdir.join("checkpoint")).unwrap();
+    std::fs::write(wdir.join("outcomes.jsonl"), "{\"pos\":0,\"dup\":true}\n").unwrap();
+    assert!(!WorkerManifest::exists(&wdir));
+    assert!(WorkerManifest::load(&wdir).is_err());
+    std::fs::remove_dir_all(&root).ok();
+}
