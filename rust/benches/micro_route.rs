@@ -1,0 +1,152 @@
+//! Serving-tier throughput: one concurrent engine vs N in-process band
+//! slices vs a router fanning over N loopback slice servers.
+//!
+//! All three paths produce identical verdicts (the OR-reduce /
+//! reconcile parity that `tests/serving_tier.rs` asserts); what differs
+//! is where the work lands. The in-process slices add parallel slice
+//! probes on top of the engine's pooled MinHash; the router adds one
+//! JSON round trip per batch and a TCP hop per slice, which is the
+//! price of splitting the filter memory across hosts — this bench puts
+//! a number on each step.
+//!
+//! Reports the same single-line text shape as the other `micro_*`
+//! benches plus one machine-readable JSON summary line (crate `json`
+//! module) for harness scripts.
+//!
+//! `cargo bench --bench micro_route` (LSHBLOOM_BENCH_FAST=1 for a
+//! quick pass)
+
+use lshbloom::config::{EngineMode, PipelineConfig};
+use lshbloom::corpus::{CorpusGenerator, Doc, GeneratorConfig};
+use lshbloom::engine::{BandShardedEngine, ConcurrentEngine};
+use lshbloom::json::{obj, Value};
+use lshbloom::perf::bench::{fmt_count, time_once};
+use lshbloom::service::{DedupClient, DedupRouter, DedupServer, RouterOptions, ServeOptions};
+
+fn report(name: &str, n: usize, dups: usize, wall: std::time::Duration, out: &mut Vec<Value>) {
+    let docs_per_sec = n as f64 / wall.as_secs_f64();
+    println!("{:<44} {:>12}/s   ({dups} duplicates)", name, fmt_count(docs_per_sec));
+    out.push(obj(vec![
+        ("variant", Value::str(name)),
+        ("docs_per_sec", Value::num(docs_per_sec)),
+        ("duplicates", Value::u64(dups as u64)),
+    ]));
+}
+
+/// Start `count` loopback slice servers; returns (join handles, addrs).
+fn start_fleet(
+    cfg: &PipelineConfig,
+    count: usize,
+) -> (Vec<std::thread::JoinHandle<()>>, Vec<String>) {
+    let mut handles = Vec::with_capacity(count);
+    let mut addrs = Vec::with_capacity(count);
+    for slice in 0..count {
+        let opts = ServeOptions { slice: Some((slice, count)), ..ServeOptions::default() };
+        let server =
+            DedupServer::bind_with_opts("127.0.0.1:0", cfg, &opts).expect("bind slice");
+        addrs.push(server.local_addr().unwrap().to_string());
+        handles.push(std::thread::spawn(move || server.serve().expect("serve")));
+    }
+    (handles, addrs)
+}
+
+fn main() {
+    println!("# serving tier: engine vs band slices vs loopback router (docs/sec)\n");
+    let fast = std::env::var("LSHBLOOM_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let n: usize = if fast { 1_500 } else { 10_000 };
+    let batch = 64usize;
+
+    // Generated corpus with ~25% exact twins spread across the stream so
+    // both the fresh-insert and duplicate paths stay hot everywhere.
+    let g = CorpusGenerator::new(GeneratorConfig::short());
+    let mut docs: Vec<Doc> = Vec::with_capacity(n);
+    for i in 0..n as u64 {
+        if i % 4 == 3 && i >= 17 {
+            let prev = docs[(i - 17) as usize].clone();
+            docs.push(Doc { id: i, ..prev });
+        } else {
+            docs.push(g.generate(0x5EED, i));
+        }
+    }
+
+    let cfg = PipelineConfig {
+        threshold: 0.5,
+        num_perms: 128,
+        p_effective: 1e-10,
+        expected_docs: n as u64,
+        engine: EngineMode::Concurrent,
+        ..Default::default()
+    };
+
+    let mut results: Vec<Value> = Vec::new();
+
+    // Baseline: one concurrent engine, batched submit.
+    {
+        let engine = ConcurrentEngine::from_config(&cfg);
+        let input = docs.clone();
+        let (dups, wall) = time_once(|| {
+            let mut dups = 0usize;
+            for chunk in input.chunks(batch) {
+                let verdicts = engine.submit(chunk.to_vec());
+                dups += verdicts.iter().filter(|d| d.duplicate).count();
+            }
+            dups
+        });
+        report("engine/slices=1", n, dups, wall, &mut results);
+    }
+
+    // In-process band slices (serve --serve-shards N's backend).
+    for &slices in &[2usize, 4] {
+        let engine = BandShardedEngine::from_config(&cfg, slices);
+        let input = docs.clone();
+        let (dups, wall) = time_once(|| {
+            let mut dups = 0usize;
+            for chunk in input.chunks(batch) {
+                let verdicts = engine.submit(chunk.to_vec());
+                dups += verdicts.iter().filter(|d| d.duplicate).count();
+            }
+            dups
+        });
+        report(&format!("engine/slices={slices}"), n, dups, wall, &mut results);
+    }
+
+    // Router over loopback slice servers: the same batches, now paying
+    // one MinHash at the router plus a TCP fan-out per batch.
+    {
+        let slices = 4usize;
+        let (handles, addrs) = start_fleet(&cfg, slices);
+        let router =
+            DedupRouter::bind("127.0.0.1:0", &cfg, addrs.clone(), &RouterOptions::default())
+                .expect("bind router");
+        let router_addr = router.local_addr().unwrap().to_string();
+        let router_handle = std::thread::spawn(move || router.serve().expect("route"));
+        let mut client = DedupClient::connect(&router_addr).expect("connect router");
+        let (dups, wall) = time_once(|| {
+            let mut dups = 0usize;
+            for chunk in docs.chunks(batch) {
+                let texts: Vec<&str> = chunk.iter().map(|d| d.text.as_str()).collect();
+                let verdicts = client.check_batch(&texts).expect("route check_batch");
+                dups += verdicts.into_iter().filter(|&d| d).count();
+            }
+            dups
+        });
+        report(&format!("router/loopback-slices={slices}"), n, dups, wall, &mut results);
+        client.shutdown().expect("router shutdown");
+        router_handle.join().unwrap();
+        for addr in &addrs {
+            DedupClient::connect(addr).unwrap().shutdown().unwrap();
+        }
+        for handle in handles {
+            handle.join().unwrap();
+        }
+    }
+
+    println!();
+    let summary = obj(vec![
+        ("bench", Value::str("micro_route")),
+        ("docs", Value::u64(n as u64)),
+        ("batch", Value::u64(batch as u64)),
+        ("results", Value::Arr(results)),
+    ]);
+    println!("{}", summary.to_json());
+}

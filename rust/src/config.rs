@@ -113,6 +113,13 @@ pub struct PipelineConfig {
     /// ingest (0 = only the final end-of-stream checkpoint). Requires
     /// `checkpoint_dir`.
     pub checkpoint_every: u64,
+    /// Band-slice count for the serving tier (`serve --serve-shards`,
+    /// 1 = a single engine). Counts > 1 partition the b band filters
+    /// across N in-process slice engines (`crate::engine::band_slice`)
+    /// that are probed in parallel and OR-reduced per request —
+    /// verdict-identical to a single engine. Requires the concurrent
+    /// engine; ignored by `dedup` (ingest sharding is `shards`).
+    pub serve_shards: usize,
 }
 
 impl Default for PipelineConfig {
@@ -135,6 +142,7 @@ impl Default for PipelineConfig {
             distributed: false,
             checkpoint_dir: String::new(),
             checkpoint_every: 0,
+            serve_shards: 1,
         }
     }
 }
@@ -162,6 +170,16 @@ impl PipelineConfig {
         }
         if self.shards == 0 {
             return Err(Error::Config("shards must be >= 1".into()));
+        }
+        if self.serve_shards == 0 {
+            return Err(Error::Config("serve_shards must be >= 1".into()));
+        }
+        if self.serve_shards > 1 && self.engine != EngineMode::Concurrent {
+            return Err(Error::Config(
+                "serve_shards > 1 requires the concurrent engine (band slices are \
+                 atomic filters; add engine = concurrent / --engine concurrent)"
+                    .into(),
+            ));
         }
         if self.checkpoint_every > 0 && self.checkpoint_dir.is_empty() && !self.distributed {
             // Distributed runs are exempt: each worker checkpoints into
@@ -265,6 +283,9 @@ impl PipelineConfig {
                 "checkpoint_dir" | "persist.checkpoint_dir" => self.checkpoint_dir = v.clone(),
                 "checkpoint_every" | "persist.checkpoint_every" => {
                     self.checkpoint_every = v.parse().map_err(|_| bad("checkpoint_every"))?
+                }
+                "serve_shards" | "service.serve_shards" => {
+                    self.serve_shards = v.parse().map_err(|_| bad("serve_shards"))?
                 }
                 other => return Err(Error::Config(format!("unknown config key '{other}'"))),
             }
@@ -418,6 +439,23 @@ mod tests {
         cfg.validate().unwrap();
         cfg.distributed = false;
         assert!(cfg.validate().is_err(), "periodic checkpoints + in-process shards stay rejected");
+    }
+
+    #[test]
+    fn serve_shards_key_applies_and_validates() {
+        let mut cfg = PipelineConfig::default();
+        assert_eq!(cfg.serve_shards, 1);
+        cfg.apply(&parse_toml_subset("[service]\nserve_shards = 4").unwrap()).unwrap();
+        assert_eq!(cfg.serve_shards, 4);
+        // ...but sliced serving needs the concurrent engine...
+        assert!(cfg.validate().is_err(), "serve_shards without concurrent engine rejected");
+        cfg.engine = EngineMode::Concurrent;
+        cfg.validate().unwrap();
+        // ...and zero slices is nonsense.
+        cfg.serve_shards = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = PipelineConfig::default();
+        assert!(cfg.apply(&parse_toml_subset("serve_shards = x").unwrap()).is_err());
     }
 
     #[test]

@@ -1,0 +1,678 @@
+//! Band-partitioned view of the LSHBloom index: the serving-tier
+//! scale-out seam (ROADMAP "Sharded / multi-node serving").
+//!
+//! The concurrent index is `b` independent atomic Bloom filters, one per
+//! LSH band, and the duplicate rule is a pure OR across bands (`query`:
+//! a document is a duplicate iff *any* band collides, §4.2). That makes
+//! the band axis trivially partitionable: give each of `N` owners a
+//! contiguous slice of the `b` filters, probe every slice with the same
+//! full band vector, and OR-reduce the per-slice verdicts — bit-for-bit
+//! the single-index answer, because no filter moved or resized and no
+//! band is probed by more than one owner.
+//!
+//! Two layers build on that observation:
+//!
+//! * [`BandSliceIndex`] — one owner's slice: the filters for bands
+//!   `[start, start+len)`, built with the *full-index* per-filter
+//!   geometry (`p = 1-(1-p_eff)^(1/b)` with the full `b`, §4.3), so a
+//!   slice is interchangeable with the same bands of a
+//!   [`super::concurrent_index::ConcurrentLshBloomIndex`]. This is what
+//!   a router backend serves
+//!   ([`crate::service`]'s `check_bands` op) and what restores from a
+//!   slice of an existing checkpoint manifest
+//!   ([`crate::persist::restore_band_slice`]).
+//! * [`BandShardedEngine`] — the in-process composition (`serve
+//!   --serve-shards N`): all `N` slices in one process behind one
+//!   preparer. A request MinHashes once, the batch path probes every
+//!   slice in parallel, and verdicts OR-reduce; the per-batch reconcile
+//!   rule is shared with [`super::batch::ConcurrentEngine::submit`]
+//!   via [`reconcile_in_batch`], so `--serve-shards N` is
+//!   verdict-identical to the single concurrent engine for any `N`.
+//!
+//! The same OR-reduce runs across *hosts* in
+//! [`crate::service::DedupRouter`]: each remote backend is a
+//! [`BandSliceIndex`] reached over TCP, and [`reconcile_in_batch`] runs
+//! at the router so batched semantics stay identical there too.
+
+use super::atomic_bloom::AtomicBloomFilter;
+use super::batch::{for_chunks_collect, Decision};
+use crate::config::PipelineConfig;
+use crate::corpus::Doc;
+use crate::index::lshbloom::LshBloomConfig;
+use crate::methods::lshbloom::BandPreparer;
+use crate::methods::{Prepared, Preparer};
+use std::collections::HashSet;
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// The contiguous band range owned by `slice` of `count` when `b` bands
+/// are partitioned as evenly as possible (the first `b % count` slices
+/// get one extra band). Every caller that partitions bands — the
+/// in-process sharded engine, slice servers, the router's layout check —
+/// must use this one derivation so slices always tile `[0, b)`.
+pub fn slice_range(num_bands: usize, slice: usize, count: usize) -> Range<usize> {
+    assert!(count >= 1, "slice_range: count must be >= 1");
+    assert!(slice < count, "slice_range: slice {slice} out of range for count {count}");
+    let base = num_bands / count;
+    let extra = num_bands % count;
+    let start = slice * base + slice.min(extra);
+    let len = base + usize::from(slice < extra);
+    start..start + len
+}
+
+/// The intra-batch reconcile rule shared by every batched serving path:
+/// a document is a duplicate iff its pre-batch probe said so *or* an
+/// earlier document in the same batch shares a band hash with it.
+///
+/// This is exactly phase 2 of [`super::batch::ConcurrentEngine::submit`]
+/// — the rule that restores deterministic verdicts after all documents
+/// probed the pre-batch filter state. It depends only on the full band
+/// vectors and the OR-reduced pre-batch verdicts, never on filter
+/// internals, which is why the router can apply it over *remote* slices
+/// and still match the single-engine batch verdicts bit for bit.
+pub fn reconcile_in_batch(bands_batch: &[Vec<u64>], pre_dup: &[bool]) -> Vec<bool> {
+    debug_assert_eq!(bands_batch.len(), pre_dup.len());
+    let per_doc = bands_batch.first().map(|b| b.len()).unwrap_or(0);
+    let mut seen: HashSet<(u32, u64)> = HashSet::with_capacity(bands_batch.len() * per_doc);
+    let mut out = Vec::with_capacity(bands_batch.len());
+    for (bands, &pre) in bands_batch.iter().zip(pre_dup) {
+        let dup = pre
+            || bands
+                .iter()
+                .enumerate()
+                .any(|(band, &h)| seen.contains(&(band as u32, h)));
+        // Duplicates' bands enter the in-batch set too, matching the
+        // sequential decider (which inserts flagged documents as well).
+        for (band, &h) in bands.iter().enumerate() {
+            seen.insert((band as u32, h));
+        }
+        out.push(dup);
+    }
+    out
+}
+
+/// Element-wise OR of per-slice verdict vectors (each of length `n`).
+fn or_reduce(per_slice: &[Vec<bool>], n: usize) -> Vec<bool> {
+    let mut out = vec![false; n];
+    for verdicts in per_slice {
+        debug_assert_eq!(verdicts.len(), n);
+        for (o, &v) in out.iter_mut().zip(verdicts) {
+            *o |= v;
+        }
+    }
+    out
+}
+
+/// One owner's contiguous slice of the per-band atomic filters.
+///
+/// Every operation takes the *full* `b`-length band vector and touches
+/// only the owned range, so N slices driven with the same vector set
+/// exactly the bits one [`ConcurrentLshBloomIndex`] would — and the OR
+/// of their verdicts is the single-index verdict.
+///
+/// [`ConcurrentLshBloomIndex`]: super::concurrent_index::ConcurrentLshBloomIndex
+pub struct BandSliceIndex {
+    filters: Vec<AtomicBloomFilter>,
+    range: Range<usize>,
+    config: LshBloomConfig,
+    inserted: AtomicU64,
+}
+
+impl BandSliceIndex {
+    /// Fresh heap-backed slice `slice` of `count` for `config`. The
+    /// per-filter geometry derives from the full band count, never the
+    /// slice length — that is the invariant that keeps a slice
+    /// bit-compatible with the unsharded index.
+    pub fn new(config: LshBloomConfig, slice: usize, count: usize) -> Self {
+        let range = slice_range(config.lsh.num_bands, slice, count);
+        let params = crate::index::LshBloomIndex::filter_params(&config);
+        let filters = range.clone().map(|_| AtomicBloomFilter::new(params)).collect();
+        Self { filters, range, config, inserted: AtomicU64::new(0) }
+    }
+
+    /// Slice adopting pre-built filters (checkpoint restore — see
+    /// [`crate::persist::restore_band_slice`]).
+    pub(crate) fn from_parts(
+        filters: Vec<AtomicBloomFilter>,
+        range: Range<usize>,
+        config: LshBloomConfig,
+        inserted: u64,
+    ) -> Self {
+        debug_assert_eq!(filters.len(), range.len());
+        Self { filters, range, config, inserted: AtomicU64::new(inserted) }
+    }
+
+    /// Restore this slice's bands from a *full-index* checkpoint in
+    /// `dir` (heap copy; the files are left untouched). The manifest's
+    /// geometry must match `config` exactly, same strictness as a full
+    /// restore — a mismatched slice would answer `false` for keys it
+    /// never probed (Bloom false negatives).
+    pub fn restore(
+        config: LshBloomConfig,
+        dir: &std::path::Path,
+        slice: usize,
+        count: usize,
+    ) -> crate::error::Result<Self> {
+        let range = slice_range(config.lsh.num_bands, slice, count);
+        let (filters, manifest) =
+            crate::persist::restore_band_slice(dir, &config, range.clone())?;
+        Ok(Self::from_parts(filters, range, config, manifest.inserted))
+    }
+
+    /// [`Self::restore`] against an already-loaded manifest — lets
+    /// [`BandShardedEngine::restore`] parse `manifest.json` once for all
+    /// N slices.
+    pub(crate) fn restore_from(
+        config: LshBloomConfig,
+        manifest: &crate::persist::CheckpointManifest,
+        dir: &std::path::Path,
+        slice: usize,
+        count: usize,
+    ) -> crate::error::Result<Self> {
+        let range = slice_range(config.lsh.num_bands, slice, count);
+        let filters =
+            crate::persist::restore_band_slice_from(manifest, dir, &config, range.clone())?;
+        Ok(Self::from_parts(filters, range, config, manifest.inserted))
+    }
+
+    /// The band range this slice owns.
+    pub fn band_range(&self) -> Range<usize> {
+        self.range.clone()
+    }
+
+    /// Full band count of the index this slice partitions.
+    pub fn full_bands(&self) -> usize {
+        self.config.lsh.num_bands
+    }
+
+    /// The configuration the full index was built with.
+    pub fn config(&self) -> LshBloomConfig {
+        self.config
+    }
+
+    /// Documents inserted through this slice.
+    pub fn len(&self) -> u64 {
+        self.inserted.load(Ordering::Relaxed)
+    }
+
+    /// True when nothing has been inserted.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes of backing storage for the owned filters.
+    pub fn disk_bytes(&self) -> u64 {
+        self.filters.iter().map(|f| f.size_bytes()).sum()
+    }
+
+    /// The owned filters, band order (persistence internals).
+    pub(crate) fn filters(&self) -> &[AtomicBloomFilter] {
+        &self.filters
+    }
+
+    fn owned<'a>(&self, band_hashes: &'a [u64]) -> &'a [u64] {
+        assert_eq!(
+            band_hashes.len(),
+            self.config.lsh.num_bands,
+            "BandSliceIndex: got {} band hashes, the index has {} bands",
+            band_hashes.len(),
+            self.config.lsh.num_bands
+        );
+        &band_hashes[self.range.clone()]
+    }
+
+    /// Query the owned bands without inserting (lock-free). `true` =
+    /// some owned band collides; OR this across slices for the
+    /// full-index verdict.
+    pub fn query(&self, band_hashes: &[u64]) -> bool {
+        self.filters.iter().zip(self.owned(band_hashes)).any(|(f, &h)| f.contains(h))
+    }
+
+    /// Query + insert the owned bands in one lock-free pass; same
+    /// short-circuit-to-`set` discipline (and therefore the same bits
+    /// and the same verdict contribution) as
+    /// [`super::concurrent_index::ConcurrentLshBloomIndex::insert_if_new_shared`].
+    pub fn insert_if_new(&self, band_hashes: &[u64]) -> bool {
+        let mut dup = false;
+        for (f, &h) in self.filters.iter().zip(self.owned(band_hashes)) {
+            if dup {
+                f.set(h);
+            } else {
+                dup = f.insert(h);
+            }
+        }
+        self.inserted.fetch_add(1, Ordering::Relaxed);
+        dup
+    }
+
+    /// Insert the owned bands without computing a verdict (the batched
+    /// phase-3 path; test-and-test-and-set, bit-identical state).
+    pub fn set(&self, band_hashes: &[u64]) {
+        for (f, &h) in self.filters.iter().zip(self.owned(band_hashes)) {
+            f.set(h);
+        }
+        self.inserted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Probe a whole batch read-only against the pre-batch state, then
+    /// insert every document's owned bands — the slice half of the
+    /// batched serving protocol (`check_bands_batch`). Returns the
+    /// *pre-batch* verdicts; the caller (in-process engine or router)
+    /// OR-reduces them across slices and applies
+    /// [`reconcile_in_batch`] for final verdicts.
+    pub fn probe_insert_batch(&self, bands_batch: &[Vec<u64>]) -> Vec<bool> {
+        let pre: Vec<bool> = bands_batch.iter().map(|b| self.query(b)).collect();
+        for bands in bands_batch {
+            self.set(bands);
+        }
+        pre
+    }
+}
+
+/// N band slices behind one preparer: the in-process band-partitioned
+/// serving engine (`serve --serve-shards N`).
+///
+/// Verdict-identical to [`super::batch::ConcurrentEngine`] for any
+/// slice count: single documents OR-reduce per-slice
+/// [`BandSliceIndex::insert_if_new`] verdicts, batches run the same
+/// three phases as `submit` (parallel pre-batch probe — fanned across
+/// slices — sequential [`reconcile_in_batch`], parallel insert).
+pub struct BandShardedEngine {
+    preparer: Arc<dyn Preparer>,
+    slices: Vec<BandSliceIndex>,
+    config: LshBloomConfig,
+    workers: usize,
+    docs: AtomicU64,
+    duplicates: AtomicU64,
+}
+
+impl BandShardedEngine {
+    /// Fresh engine with `count` heap-backed band slices.
+    pub fn from_config(cfg: &PipelineConfig, count: usize) -> Self {
+        let preparer = BandPreparer::from_config(cfg);
+        let config = LshBloomConfig::new(preparer.lsh, cfg.p_effective, cfg.expected_docs);
+        let slices = (0..count).map(|s| BandSliceIndex::new(config, s, count)).collect();
+        Self::with_parts(Arc::new(preparer), slices, config, cfg.effective_workers(), 0, 0)
+    }
+
+    /// Rebuild a sharded engine from a *full-index* checkpoint in `dir`
+    /// (written by [`super::batch::ConcurrentEngine::checkpoint`] or a
+    /// `dedup --distributed` aggregation): each slice heap-restores its
+    /// own band files, and the docs/duplicates counters resume from the
+    /// manifest. The files are left untouched — use
+    /// [`Self::checkpoint`] to persist again.
+    pub fn restore(
+        cfg: &PipelineConfig,
+        dir: &std::path::Path,
+        count: usize,
+    ) -> crate::error::Result<Self> {
+        let preparer = BandPreparer::from_config(cfg);
+        let config = LshBloomConfig::new(preparer.lsh, cfg.p_effective, cfg.expected_docs);
+        let manifest = crate::persist::CheckpointManifest::load(dir)?;
+        manifest.verify_geometry(&config)?;
+        let mut slices = Vec::with_capacity(count);
+        for s in 0..count {
+            slices.push(BandSliceIndex::restore_from(config, &manifest, dir, s, count)?);
+        }
+        Ok(Self::with_parts(
+            Arc::new(preparer),
+            slices,
+            config,
+            cfg.effective_workers(),
+            manifest.docs,
+            manifest.duplicates,
+        ))
+    }
+
+    fn with_parts(
+        preparer: Arc<dyn Preparer>,
+        slices: Vec<BandSliceIndex>,
+        config: LshBloomConfig,
+        workers: usize,
+        docs: u64,
+        duplicates: u64,
+    ) -> Self {
+        Self {
+            preparer,
+            slices,
+            config,
+            workers: workers.max(1),
+            docs: AtomicU64::new(docs),
+            duplicates: AtomicU64::new(duplicates),
+        }
+    }
+
+    /// Persist the full index (all slices, band order) into `dir` as a
+    /// checksummed cold snapshot — the same wire format
+    /// [`super::batch::ConcurrentEngine::checkpoint`] writes, so a
+    /// sharded server's state restores into a single engine and back.
+    pub fn checkpoint(&self, dir: &std::path::Path) -> crate::error::Result<()> {
+        let filters: Vec<&AtomicBloomFilter> =
+            self.slices.iter().flat_map(|s| s.filters().iter()).collect();
+        let (docs, duplicates) = self.stats();
+        // Every processed document inserts into the index (duplicates
+        // too), so the engine's docs counter is the inserted count.
+        crate::persist::write_checkpoint_filters(
+            &filters,
+            &self.config,
+            docs,
+            docs,
+            duplicates,
+            dir,
+        )?;
+        Ok(())
+    }
+
+    /// Number of band slices.
+    pub fn num_slices(&self) -> usize {
+        self.slices.len()
+    }
+
+    /// Full band count (all slices together).
+    pub fn num_bands(&self) -> usize {
+        self.config.lsh.num_bands
+    }
+
+    /// Rows hashed per band (geometry handshake).
+    pub fn rows_per_band(&self) -> usize {
+        self.config.lsh.rows_per_band
+    }
+
+    /// (documents processed, duplicates flagged) across all operations.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.docs.load(Ordering::Relaxed), self.duplicates.load(Ordering::Relaxed))
+    }
+
+    /// Index footprint in bytes (static: sized by capacity at build).
+    pub fn disk_bytes(&self) -> u64 {
+        self.slices.iter().map(|s| s.disk_bytes()).sum()
+    }
+
+    fn prepare_one(&self, doc: &Doc) -> Vec<u64> {
+        let mut prepared = self.preparer.prepare_batch(std::slice::from_ref(doc));
+        let Prepared::Bands(bands) = prepared.remove(0) else {
+            panic!("BandShardedEngine requires a band-producing preparer");
+        };
+        bands
+    }
+
+    /// Run `f` once per slice, each on its own scoped thread, and
+    /// collect the per-slice results in slice order — the one fan-out
+    /// every batched phase (probe, insert, probe+insert) goes through.
+    fn for_slices<T, F>(&self, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(&BandSliceIndex) -> T + Sync,
+    {
+        std::thread::scope(|scope| {
+            let f = &f;
+            let handles: Vec<_> = self
+                .slices
+                .iter()
+                .map(|slice| scope.spawn(move || f(slice)))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    /// Single-document query + insert: MinHash once, fold the bands into
+    /// every slice, OR-reduce the per-slice verdicts. The per-slice
+    /// probes run on the caller's thread — each is a handful of filter
+    /// probes, far below thread-spawn cost; the batched [`Self::submit`]
+    /// path is where slices fan out in parallel.
+    pub fn insert_one(&self, doc: &Doc) -> bool {
+        let bands = self.prepare_one(doc);
+        self.insert_bands(&bands)
+    }
+
+    /// Single-document query only (no state change, no stats mutation).
+    pub fn query_one(&self, doc: &Doc) -> bool {
+        let bands = self.prepare_one(doc);
+        self.query_bands(&bands)
+    }
+
+    /// Band-level query + insert (the `check_bands` op: bands computed
+    /// elsewhere, e.g. by a router). OR-reduce of per-slice
+    /// [`BandSliceIndex::insert_if_new`].
+    pub fn insert_bands(&self, band_hashes: &[u64]) -> bool {
+        let mut dup = false;
+        for slice in &self.slices {
+            // No short-circuit: every slice must ingest its bands.
+            dup |= slice.insert_if_new(band_hashes);
+        }
+        self.docs.fetch_add(1, Ordering::Relaxed);
+        self.duplicates.fetch_add(dup as u64, Ordering::Relaxed);
+        dup
+    }
+
+    /// Band-level query only.
+    pub fn query_bands(&self, band_hashes: &[u64]) -> bool {
+        self.slices.iter().any(|s| s.query(band_hashes))
+    }
+
+    /// Band-level batch (`check_bands_batch`): every slice probes the
+    /// whole batch against its pre-batch state and then folds the batch
+    /// in, *in parallel across slices* — the same fan-out as
+    /// [`Self::submit`]'s probe/insert phases. Safe because slices own
+    /// disjoint bands: slice `i`'s probes read only filters that slice
+    /// `i`'s inserts write, so parallel slices cannot leak mid-batch
+    /// state into each other's pre-batch verdicts. Returns the
+    /// OR-reduced *pre-batch* verdicts; counters advance exactly like
+    /// [`super::batch::ConcurrentEngine::probe_insert_bands`].
+    pub fn probe_insert_bands(&self, batch: &[Vec<u64>]) -> Vec<bool> {
+        let per_slice = self.for_slices(|slice| slice.probe_insert_batch(batch));
+        let pre = or_reduce(&per_slice, batch.len());
+        self.docs.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        let dups = pre.iter().filter(|&&d| d).count() as u64;
+        self.duplicates.fetch_add(dups, Ordering::Relaxed);
+        pre
+    }
+
+    /// Deduplicate one batch; verdicts in submission order, identical to
+    /// [`super::batch::ConcurrentEngine::submit`] on the same stream.
+    ///
+    /// Phases: (1) parallel MinHash across a worker pool, once per
+    /// document; (2) every slice probes the whole batch *in parallel*
+    /// against pre-batch state and the per-slice verdicts OR-reduce;
+    /// (3) sequential [`reconcile_in_batch`]; (4) every slice folds the
+    /// batch in, again in parallel across slices.
+    pub fn submit(&self, docs: Vec<Doc>) -> Vec<Decision> {
+        let n = docs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        // Phase 1: parallel prepare (band hashes only), gathered back
+        // into submission order — the `ConcurrentEngine` idiom.
+        let bands_batch: Vec<Vec<u64>> = for_chunks_collect(self.workers, n, |range| {
+            self.preparer
+                .prepare_batch(&docs[range])
+                .into_iter()
+                .map(|prep| {
+                    let Prepared::Bands(bands) = prep else {
+                        panic!("BandShardedEngine requires a band-producing preparer");
+                    };
+                    bands
+                })
+                .collect()
+        });
+
+        // Phase 2: probe every slice in parallel (read-only, pre-batch
+        // state), then OR-reduce into one pre-verdict per document.
+        let per_slice = self.for_slices(|slice| {
+            bands_batch.iter().map(|b| slice.query(b)).collect::<Vec<bool>>()
+        });
+        let pre = or_reduce(&per_slice, n);
+
+        // Phase 3: sequential intra-batch reconcile (the shared rule).
+        let verdicts = reconcile_in_batch(&bands_batch, &pre);
+
+        // Phase 4: parallel insert, one thread per slice (verdict-free
+        // `set` path — same bits, no contended RMWs for present bits).
+        self.for_slices(|slice| {
+            for bands in &bands_batch {
+                slice.set(bands);
+            }
+        });
+
+        let dups = verdicts.iter().filter(|&&d| d).count() as u64;
+        self.docs.fetch_add(n as u64, Ordering::Relaxed);
+        self.duplicates.fetch_add(dups, Ordering::Relaxed);
+        docs.iter()
+            .zip(&verdicts)
+            .map(|(doc, &duplicate)| Decision { id: doc.id, duplicate })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{ConcurrentEngine, ConcurrentLshBloomIndex};
+    use crate::minhash::LshParams;
+    use crate::rng::Xoshiro256pp;
+
+    fn cfg() -> PipelineConfig {
+        PipelineConfig {
+            num_perms: 128,
+            threshold: 0.5,
+            expected_docs: 10_000,
+            workers: 4,
+            ..Default::default()
+        }
+    }
+
+    fn index_cfg(bands: usize, rows: usize, n: u64) -> LshBloomConfig {
+        LshBloomConfig {
+            lsh: LshParams { num_bands: bands, rows_per_band: rows },
+            p_effective: 1e-8,
+            expected_docs: n,
+            blocked: false,
+        }
+    }
+
+    #[test]
+    fn slice_range_tiles_the_band_space() {
+        for bands in [1usize, 2, 7, 9, 16] {
+            for count in 1..=bands {
+                let mut covered = Vec::new();
+                for s in 0..count {
+                    covered.extend(slice_range(bands, s, count));
+                }
+                assert_eq!(covered, (0..bands).collect::<Vec<_>>(), "bands={bands} count={count}");
+            }
+        }
+        assert_eq!(slice_range(9, 0, 4), 0..3);
+        assert_eq!(slice_range(9, 3, 4), 7..9);
+    }
+
+    #[test]
+    fn sliced_inserts_match_the_unsharded_index() {
+        let config = index_cfg(9, 13, 10_000);
+        for count in [2usize, 3, 4] {
+            let slices: Vec<BandSliceIndex> =
+                (0..count).map(|s| BandSliceIndex::new(config, s, count)).collect();
+            let whole = ConcurrentLshBloomIndex::new(config);
+            let mut rng = Xoshiro256pp::seeded(17);
+            for _ in 0..4_000 {
+                let bands: Vec<u64> = (0..9).map(|_| rng.next_u64() % 500).collect();
+                let mut dup = false;
+                for s in &slices {
+                    dup |= s.insert_if_new(&bands);
+                }
+                assert_eq!(dup, whole.insert_if_new_shared(&bands), "count={count}");
+            }
+            for _ in 0..10_000 {
+                let bands: Vec<u64> = (0..9).map(|_| rng.next_u64() % 800).collect();
+                let sliced = slices.iter().any(|s| s.query(&bands));
+                assert_eq!(sliced, whole.query(&bands), "count={count}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "band hashes")]
+    fn slice_rejects_wrong_band_count() {
+        let s = BandSliceIndex::new(index_cfg(6, 4, 1_000), 0, 2);
+        s.query(&[1, 2, 3]);
+    }
+
+    #[test]
+    fn reconcile_matches_submit_rule() {
+        // Twin inside the batch (same bands) must flag the later copy;
+        // pre-batch dups stay flagged; fresh docs stay fresh.
+        let a = vec![1u64, 2, 3];
+        let b = vec![9u64, 9, 9];
+        let batch = vec![a.clone(), b.clone(), a.clone(), vec![1, 7, 8]];
+        let out = reconcile_in_batch(&batch, &[false, true, false, false]);
+        // Doc 3 shares band 0's hash (1) with doc 0 — a band collision.
+        assert_eq!(out, vec![false, true, true, true]);
+        assert!(reconcile_in_batch(&[], &[]).is_empty());
+    }
+
+    #[test]
+    fn sharded_engine_matches_concurrent_engine_verdicts() {
+        let config = cfg();
+        let docs: Vec<Doc> = (0..400)
+            .map(|i| Doc { id: i, text: format!("band sharded parity doc {}", i % 140) })
+            .collect();
+        let reference = ConcurrentEngine::from_config(&config);
+        let mut expected = Vec::new();
+        for chunk in docs.chunks(37) {
+            expected.extend(reference.submit(chunk.to_vec()).into_iter().map(|d| d.duplicate));
+        }
+        for count in [1usize, 2, 4] {
+            let engine = BandShardedEngine::from_config(&config, count);
+            let mut got = Vec::new();
+            for chunk in docs.chunks(37) {
+                got.extend(engine.submit(chunk.to_vec()).into_iter().map(|d| d.duplicate));
+            }
+            assert_eq!(got, expected, "count={count}");
+            assert_eq!(engine.stats(), reference.stats(), "count={count}");
+        }
+    }
+
+    #[test]
+    fn sharded_single_doc_path_matches_engine() {
+        let config = cfg();
+        let reference = ConcurrentEngine::from_config(&config);
+        let engine = BandShardedEngine::from_config(&config, 3);
+        for i in 0..200u64 {
+            let doc = Doc { id: i, text: format!("single path parity {}", i % 61) };
+            assert_eq!(engine.query_one(&doc), reference.query_one(&doc), "query {i}");
+            assert_eq!(engine.insert_one(&doc), reference.insert_one(&doc), "insert {i}");
+        }
+        assert_eq!(engine.stats(), reference.stats());
+        assert_eq!(engine.disk_bytes(), reference.disk_bytes());
+    }
+
+    #[test]
+    fn checkpoint_restore_roundtrips_through_slices() {
+        let dir = std::env::temp_dir().join(format!("lshbloom-bands-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let config = cfg();
+        let engine = ConcurrentEngine::from_config(&config);
+        let docs: Vec<Doc> = (0..60)
+            .map(|i| Doc { id: i, text: format!("slice restore doc {}", i % 23) })
+            .collect();
+        engine.submit(docs.clone());
+        let stats = engine.stats();
+        engine.checkpoint(&dir).unwrap();
+
+        // Slice restore: every checkpointed document is recognized.
+        let sharded = BandShardedEngine::restore(&config, &dir, 4).unwrap();
+        assert_eq!(sharded.stats(), stats, "counters resume from the manifest");
+        for doc in &docs {
+            assert!(sharded.query_one(doc), "restored slices lost doc {}", doc.id);
+        }
+
+        // Sharded checkpoint writes the same full-index wire format back.
+        let dir2 = dir.join("resaved");
+        sharded.checkpoint(&dir2).unwrap();
+        let whole = ConcurrentEngine::restore(&config, &dir2, false).unwrap();
+        for doc in &docs {
+            assert!(whole.query_one(doc), "resaved checkpoint lost doc {}", doc.id);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -45,7 +45,6 @@ use crate::corpus::Doc;
 use crate::index::lshbloom::LshBloomConfig;
 use crate::methods::lshbloom::BandPreparer;
 use crate::methods::{Prepared, Preparer};
-use std::collections::HashSet;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -65,8 +64,10 @@ const CHUNK: usize = 32;
 
 /// Run `work` over [`CHUNK`]-sized index ranges of `0..n` on up to
 /// `workers` scoped threads; ranges are claimed off an atomic cursor, so
-/// skewed per-range costs self-balance.
-fn for_chunks<F: Fn(std::ops::Range<usize>) + Sync>(workers: usize, n: usize, work: F) {
+/// skewed per-range costs self-balance. Shared with the band-sliced
+/// engine ([`super::band_slice`]), whose prepare phase is the same
+/// pooled MinHash.
+pub(crate) fn for_chunks<F: Fn(std::ops::Range<usize>) + Sync>(workers: usize, n: usize, work: F) {
     if n == 0 {
         return;
     }
@@ -83,6 +84,27 @@ fn for_chunks<F: Fn(std::ops::Range<usize>) + Sync>(workers: usize, n: usize, wo
             });
         }
     });
+}
+
+/// [`for_chunks`] with per-item results gathered back into submission
+/// order: `f` maps an index range to that range's results, chunks land
+/// under a mutex tagged by start index, and the final Vec is the
+/// re-ordered concatenation. The one home of the ordered-collect idiom
+/// every batched probe/prepare pass uses.
+pub(crate) fn for_chunks_collect<T, F>(workers: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(std::ops::Range<usize>) -> Vec<T> + Sync,
+{
+    let slots: Mutex<Vec<(usize, Vec<T>)>> = Mutex::new(Vec::with_capacity(n.div_ceil(CHUNK)));
+    for_chunks(workers, n, |range| {
+        let start = range.start;
+        let chunk = f(range);
+        slots.lock().unwrap().push((start, chunk));
+    });
+    let mut chunks = slots.into_inner().unwrap();
+    chunks.sort_unstable_by_key(|(start, _)| *start);
+    chunks.into_iter().flat_map(|(_, c)| c).collect()
 }
 
 /// Lock-free deduplication engine: band preparer + atomic Bloom index.
@@ -248,71 +270,50 @@ impl ConcurrentEngine {
         }
 
         // Phase 1: parallel prepare + read-only probe of the pre-batch
-        // filter state. Workers claim CHUNK-sized ranges off an atomic
-        // cursor and push (start, results) pairs; ranges are disjoint so
-        // the only shared write is the per-chunk Vec push.
-        let prepared: Vec<(Vec<u64>, bool)> = {
-            let slots: Mutex<Vec<(usize, Vec<(Vec<u64>, bool)>)>> =
-                Mutex::new(Vec::with_capacity(n.div_ceil(CHUNK)));
-            for_chunks(self.workers, n, |range| {
-                let start = range.start;
-                let batch = &docs[range];
-                let chunk: Vec<(Vec<u64>, bool)> = self
-                    .preparer
-                    .prepare_batch(batch)
-                    .into_iter()
-                    .map(|prep| {
-                        let Prepared::Bands(bands) = prep else {
-                            panic!("ConcurrentEngine requires a band-producing preparer");
-                        };
-                        let pre_dup = self.index.query(&bands);
-                        (bands, pre_dup)
-                    })
-                    .collect();
-                slots.lock().unwrap().push((start, chunk));
-            });
-            let mut chunks = slots.into_inner().unwrap();
-            chunks.sort_unstable_by_key(|(start, _)| *start);
-            debug_assert_eq!(chunks.iter().map(|(_, c)| c.len()).sum::<usize>(), n);
-            chunks.into_iter().flat_map(|(_, c)| c).collect()
-        };
+        // filter state, gathered back into submission order.
+        let prepared: Vec<(Vec<u64>, bool)> = for_chunks_collect(self.workers, n, |range| {
+            self.preparer
+                .prepare_batch(&docs[range])
+                .into_iter()
+                .map(|prep| {
+                    let Prepared::Bands(bands) = prep else {
+                        panic!("ConcurrentEngine requires a band-producing preparer");
+                    };
+                    let pre_dup = self.index.query(&bands);
+                    (bands, pre_dup)
+                })
+                .collect()
+        });
+        debug_assert_eq!(prepared.len(), n);
 
         // Phase 2: sequential intra-batch reconcile. Catches twins the
         // parallel probes could not see (both probed pre-batch state).
-        let mut seen: HashSet<(u32, u64)> =
-            HashSet::with_capacity(n * self.index.num_bands());
-        let mut decisions = Vec::with_capacity(n);
-        let mut duplicates = 0u64;
-        for (doc, (bands, pre_dup)) in docs.iter().zip(&prepared) {
-            let dup = *pre_dup
-                || bands
-                    .iter()
-                    .enumerate()
-                    .any(|(band, &h)| seen.contains(&(band as u32, h)));
-            // Every document's bands enter the in-batch set — duplicates
-            // too, matching the sequential decider, which inserts the
-            // band hashes of flagged documents as well.
-            for (band, &h) in bands.iter().enumerate() {
-                seen.insert((band as u32, h));
-            }
-            duplicates += dup as u64;
-            decisions.push(Decision { id: doc.id, duplicate: dup });
-        }
+        // One shared rule ([`super::band_slice::reconcile_in_batch`]) —
+        // the band-sliced engine and the router apply the identical
+        // function, so batched verdicts cannot drift between serving
+        // paths.
+        let (bands_batch, pre): (Vec<Vec<u64>>, Vec<bool>) = prepared.into_iter().unzip();
+        let verdicts = super::band_slice::reconcile_in_batch(&bands_batch, &pre);
+        let decisions: Vec<Decision> = docs
+            .iter()
+            .zip(&verdicts)
+            .map(|(doc, &duplicate)| Decision { id: doc.id, duplicate })
+            .collect();
+        let duplicates = verdicts.iter().filter(|&&d| d).count() as u64;
 
         // Phase 3: parallel lock-free insert of every document's bands.
         // Verdicts were fixed by the reconcile pass, so the verdict-free
         // `set_shared` path applies: same bits, but bands whose bits are
         // already present cost plain loads, not contended fetch_ors.
         for_chunks(self.workers, n, |range| {
-            for (bands, _) in &prepared[range] {
+            for bands in &bands_batch[range] {
                 self.index.set_shared(bands);
             }
         });
 
         self.docs.fetch_add(n as u64, Ordering::Relaxed);
         self.duplicates.fetch_add(duplicates, Ordering::Relaxed);
-        let bands = prepared.into_iter().map(|(bands, _)| bands).collect();
-        (decisions, bands)
+        (decisions, bands_batch)
     }
 
     /// Single-document query+insert on the caller's thread, fully
@@ -328,6 +329,55 @@ impl ConcurrentEngine {
         self.docs.fetch_add(1, Ordering::Relaxed);
         self.duplicates.fetch_add(dup as u64, Ordering::Relaxed);
         dup
+    }
+
+    /// Band-level query + insert: the document was already MinHashed
+    /// elsewhere (a router fanning `check_bands` over backends) and
+    /// arrives as its `b` band hashes. Same verdict and same bits as
+    /// [`Self::insert_one`] on the originating document.
+    pub fn insert_bands(&self, band_hashes: &[u64]) -> bool {
+        let dup = self.index.insert_if_new_shared(band_hashes);
+        self.docs.fetch_add(1, Ordering::Relaxed);
+        self.duplicates.fetch_add(dup as u64, Ordering::Relaxed);
+        dup
+    }
+
+    /// Band-level query only (no insert, no stats mutation).
+    pub fn query_bands(&self, band_hashes: &[u64]) -> bool {
+        self.index.query(band_hashes)
+    }
+
+    /// Band-level batch: probe every band vector read-only against the
+    /// pre-batch state, then fold all of them in (verdict-free `set`
+    /// path). Returns the *pre-batch* verdicts — the caller applies the
+    /// intra-batch reconcile ([`super::band_slice::reconcile_in_batch`])
+    /// to get final verdicts identical to [`Self::submit`]. The docs
+    /// counter advances by the batch size; the duplicates counter
+    /// advances by the pre-batch count (the caller's reconcile may add
+    /// in-batch twins it alone can see).
+    ///
+    /// This is the per-backend hot path of the routed serving tier
+    /// (`check_bands_batch`), so both passes run on the worker pool —
+    /// the same [`for_chunks`] fan-out `submit` uses — with the probe
+    /// pass fully joined before any insert begins (the pre-batch
+    /// contract).
+    pub fn probe_insert_bands(&self, bands_batch: &[Vec<u64>]) -> Vec<bool> {
+        let n = bands_batch.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let pre: Vec<bool> = for_chunks_collect(self.workers, n, |range| {
+            bands_batch[range].iter().map(|b| self.index.query(b)).collect()
+        });
+        for_chunks(self.workers, n, |range| {
+            for bands in &bands_batch[range] {
+                self.index.set_shared(bands);
+            }
+        });
+        self.docs.fetch_add(n as u64, Ordering::Relaxed);
+        let dups = pre.iter().filter(|&&d| d).count() as u64;
+        self.duplicates.fetch_add(dups, Ordering::Relaxed);
+        pre
     }
 
     /// Single-document query (no insert, no stats mutation).

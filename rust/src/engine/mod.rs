@@ -19,6 +19,12 @@
 //! * [`batch::ConcurrentEngine`] — `submit(Vec<Doc>) -> Vec<Decision>`:
 //!   MinHash on a scoped worker pool, lock-free index probes, and an
 //!   intra-batch reconcile pass that restores deterministic verdicts.
+//! * [`band_slice`] — the band-partitioned serving tier: a contiguous
+//!   slice of the per-band filters as a standalone unit
+//!   ([`band_slice::BandSliceIndex`], the router-backend primitive) and
+//!   N slices behind one preparer
+//!   ([`band_slice::BandShardedEngine`], `serve --serve-shards N`),
+//!   verdict-identical to the single engine by OR-reduction.
 //!
 //! Every layer can be backed by mmap'd files instead of the heap
 //! ([`crate::persist`]): `AtomicBloomFilter::new_shm`/`open_shm`,
@@ -56,9 +62,11 @@
 #![warn(missing_docs)]
 
 pub mod atomic_bloom;
+pub mod band_slice;
 pub mod batch;
 pub mod concurrent_index;
 
 pub use atomic_bloom::AtomicBloomFilter;
+pub use band_slice::{reconcile_in_batch, slice_range, BandShardedEngine, BandSliceIndex};
 pub use batch::{ConcurrentEngine, Decision};
 pub use concurrent_index::ConcurrentLshBloomIndex;

@@ -8,6 +8,8 @@
 //!   fidelity      fidelity-vs-duplication study (Fig. 5)
 //!   scale         resource scaling study (Figs. 1, 7)
 //!   extrapolate   runtime/storage projection (Fig. 8, Table 2)
+//!   serve         the TCP deduplication service (full, band-sharded, or slice)
+//!   route         band-partition router over N backend dedup servers
 //!   info          environment + artifact status
 
 use lshbloom::cli::{ArgSpec, Args, Command};
@@ -36,6 +38,7 @@ fn main() {
         "scale" => cmd_scale(rest),
         "extrapolate" => cmd_extrapolate(rest),
         "serve" => cmd_serve(rest),
+        "route" => cmd_route(rest),
         "info" => cmd_info(rest),
         "--help" | "-h" | "help" => {
             print_usage();
@@ -66,6 +69,7 @@ fn print_usage() {
            scale         resource scaling study (Figs. 1, 7)\n\
            extrapolate   projections at extreme scale (Fig. 8, Table 2)\n\
            serve         run the TCP deduplication service\n\
+           route         band-partition router over N backend dedup servers\n\
            info          environment + artifact status\n\n\
          run `lshbloom <subcommand> --help` for flags"
     );
@@ -718,9 +722,32 @@ fn cmd_serve(rest: Vec<String>) -> CliResult {
         .arg(ArgSpec::opt("expected-docs", "planned corpus size").default("1000000"))
         .arg(ArgSpec::opt("engine", "index engine: classic|concurrent (lock-free ingest)").default("classic"))
         .arg(ArgSpec::opt(
+            "serve-shards",
+            "run N in-process band-slice engines probed in parallel and OR-reduced \
+             (concurrent engine; verdicts identical to a single engine). NB: with \
+             --state-dir the slices are heap-backed and persist only at orderly \
+             shutdown — unlike serve-shards 1, whose mmap-backed filters survive a \
+             crash",
+        ).default("1"))
+        .arg(ArgSpec::opt(
+            "slice-index",
+            "serve ONE band slice as a router backend (0-based; requires --slice-count \
+             and --engine concurrent; text ops are rejected — only band-level ops)",
+        ))
+        .arg(ArgSpec::opt(
+            "slice-count",
+            "total slice count of the router deployment this backend belongs to",
+        ))
+        .arg(ArgSpec::opt(
+            "max-line-bytes",
+            "per-connection request-line cap in bytes (oversized lines get an error \
+             response and the connection closes)",
+        ).default("16777216"))
+        .arg(ArgSpec::opt(
             "state-dir",
             "durable index dir (concurrent engine): warm-start from its checkpoint when \
-             present, else create mmap-backed filters there; checkpointed on shutdown",
+             present, else create state there; checkpointed on shutdown. Band-sharded \
+             servers slice-restore from it; slice servers treat it as read-only",
         ).default(""))
         .arg(ArgSpec::switch("shm", "host bloom filters in /dev/shm (classic engine)"))
         .arg(ArgSpec::switch("blocked", "use blocked bloom filters (classic engine)"));
@@ -734,9 +761,11 @@ fn cmd_serve(rest: Vec<String>) -> CliResult {
         blocked_bloom: args.get_bool("blocked"),
         engine: EngineMode::parse(args.get("engine"))?,
         checkpoint_dir: args.get("state-dir").to_string(),
+        serve_shards: args.get_usize("serve-shards"),
         ..Default::default()
     };
-    // Catches --state-dir without --engine concurrent, among the rest.
+    // Catches --state-dir / --serve-shards without --engine concurrent,
+    // among the rest.
     cfg.validate()?;
     // Same rule as `dedup`: these flags are classic-engine knobs, and
     // silently ignoring them would let an operator believe the index is
@@ -748,28 +777,92 @@ fn cmd_serve(rest: Vec<String>) -> CliResult {
                 .into(),
         );
     }
+    let slice = match (args.get_opt("slice-index"), args.get_opt("slice-count")) {
+        (Some(i), Some(n)) => {
+            let i: usize = i.parse().map_err(|_| format!("bad --slice-index '{i}'"))?;
+            let n: usize = n.parse().map_err(|_| format!("bad --slice-count '{n}'"))?;
+            Some((i, n))
+        }
+        (None, None) => None,
+        _ => return Err("--slice-index and --slice-count must be given together".into()),
+    };
     let state_dir = Some(&cfg.checkpoint_dir)
         .filter(|s| !s.is_empty())
         .map(PathBuf::from);
     let warm = state_dir
         .as_deref()
         .is_some_and(lshbloom::persist::CheckpointManifest::exists);
-    let server = lshbloom::service::DedupServer::bind_with_state(
-        args.get("addr"),
-        &cfg,
-        state_dir.as_deref(),
-    )?;
+    let opts = lshbloom::service::ServeOptions {
+        state_dir,
+        slice,
+        max_line_bytes: args.get_usize("max-line-bytes"),
+    };
+    let server = lshbloom::service::DedupServer::bind_with_opts(args.get("addr"), &cfg, &opts)?;
+    let mode = match slice {
+        Some((i, n)) => format!("band slice {i} of {n}"),
+        None if cfg.serve_shards > 1 => format!("{} band slices", cfg.serve_shards),
+        None => format!("{} engine", args.get("engine")),
+    };
     println!(
-        "lshbloom dedup service listening on {} ({} engine{}; send {{\"op\":\"shutdown\"}} to stop)",
+        "lshbloom dedup service listening on {} ({mode}{}; send {{\"op\":\"shutdown\"}} to stop)",
         server.local_addr()?,
-        args.get("engine"),
-        match (&state_dir, warm) {
+        match (&opts.state_dir, warm) {
             (Some(d), true) => format!("; warm-started from {}", d.display()),
             (Some(d), false) => format!("; durable state in {}", d.display()),
             (None, _) => String::new(),
         },
     );
     server.serve()?;
+    Ok(())
+}
+
+fn cmd_route(rest: Vec<String>) -> CliResult {
+    let cmd = Command::new("route", "band-partition router over N backend dedup servers")
+        .arg(ArgSpec::opt("addr", "listen address").default("127.0.0.1:7879"))
+        .arg(ArgSpec::req(
+            "backends",
+            "comma-separated backend addresses; each must be `serve --slice-index I \
+             --slice-count N` with N = number of backends (one full --engine \
+             concurrent server also works as the degenerate 1-backend fleet)",
+        ))
+        .arg(ArgSpec::opt("threshold", "Jaccard threshold (must match the backends)").default("0.5"))
+        .arg(ArgSpec::opt("perms", "minhash permutations (must match the backends)").default("256"))
+        .arg(ArgSpec::opt("p-effective", "index-wide FP bound (must match the backends)").default("1e-10"))
+        .arg(ArgSpec::opt(
+            "expected-docs",
+            "planned corpus size (must match the backends' filter sizing)",
+        ).default("1000000"))
+        .arg(ArgSpec::opt(
+            "max-line-bytes",
+            "per-connection request-line cap in bytes",
+        ).default("16777216"));
+    let args = parse(cmd, rest)?;
+    let cfg = PipelineConfig {
+        threshold: args.get_f64("threshold"),
+        num_perms: args.get_usize("perms"),
+        p_effective: args.get_f64("p-effective"),
+        expected_docs: args.get_u64("expected-docs"),
+        ..Default::default()
+    };
+    cfg.validate()?;
+    let backends: Vec<String> = args
+        .get("backends")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let opts = lshbloom::service::RouterOptions {
+        max_line_bytes: args.get_usize("max-line-bytes"),
+    };
+    let router =
+        lshbloom::service::DedupRouter::bind(args.get("addr"), &cfg, backends, &opts)?;
+    println!(
+        "lshbloom dedup router listening on {} ({} backends, one MinHash per request, \
+         OR-reduced verdicts; send {{\"op\":\"shutdown\"}} to stop)",
+        router.local_addr()?,
+        router.num_backends(),
+    );
+    router.serve()?;
     Ok(())
 }
 

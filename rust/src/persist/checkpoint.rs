@@ -87,10 +87,25 @@ pub fn write_checkpoint(
     duplicates: u64,
     dir: &Path,
 ) -> Result<CheckpointManifest> {
+    let filters: Vec<&AtomicBloomFilter> = index.filters().iter().collect();
+    write_checkpoint_filters(&filters, &index.config(), index.len(), docs, duplicates, dir)
+}
+
+/// [`write_checkpoint`] over an explicit band-ordered filter list — the
+/// shared core that also lets the band-sliced serving engine
+/// ([`crate::engine::BandShardedEngine`]) persist its slices as one
+/// full-index checkpoint (its filters live in N slice structs, not one
+/// index).
+pub(crate) fn write_checkpoint_filters(
+    filters: &[&AtomicBloomFilter],
+    config: &LshBloomConfig,
+    inserted: u64,
+    docs: u64,
+    duplicates: u64,
+    dir: &Path,
+) -> Result<CheckpointManifest> {
     std::fs::create_dir_all(dir).map_err(|e| Error::io(dir.display().to_string(), e))?;
-    let config = index.config();
-    let params = crate::index::LshBloomIndex::filter_params(&config);
-    let filters = index.filters();
+    let params = crate::index::LshBloomIndex::filter_params(config);
     let mut files = Vec::with_capacity(filters.len());
     let mut live = 0usize;
     for (i, filter) in filters.iter().enumerate() {
@@ -144,7 +159,7 @@ pub fn write_checkpoint(
         p_effective: config.p_effective,
         expected_docs: config.expected_docs,
         filter_params: params,
-        inserted: index.len(),
+        inserted,
         docs,
         duplicates,
         files,
@@ -227,6 +242,50 @@ pub fn restore_index(
     }
     let index = ConcurrentLshBloomIndex::from_parts(filters, *expect, manifest.inserted);
     Ok((index, manifest))
+}
+
+/// Restore only the bands `range` of the checkpoint in `dir` — the
+/// slice-aware half of [`restore_index`], used by the band-partitioned
+/// serving tier ([`crate::engine::BandSliceIndex::restore`]) so each of
+/// N slice owners loads just its own filters from one full-index
+/// checkpoint (e.g. the aggregated output of a `dedup --distributed`
+/// run).
+///
+/// Geometry is verified against the *full* expected config first, with
+/// the same strictness as a full restore; per-file size (and, for
+/// snapshot checkpoints, checksum) checks cover exactly the files in
+/// `range`. The filters come back as heap copies in band order and the
+/// checkpoint directory is left untouched — slices are read-only views
+/// of a checkpoint, re-persisted (if at all) through
+/// [`crate::engine::BandShardedEngine::checkpoint`].
+pub fn restore_band_slice(
+    dir: &Path,
+    expect: &LshBloomConfig,
+    range: std::ops::Range<usize>,
+) -> Result<(Vec<AtomicBloomFilter>, CheckpointManifest)> {
+    let manifest = CheckpointManifest::load(dir)?;
+    let filters = restore_band_slice_from(&manifest, dir, expect, range)?;
+    Ok((filters, manifest))
+}
+
+/// [`restore_band_slice`] against an already-loaded manifest — the
+/// many-slices path ([`crate::engine::BandShardedEngine::restore`])
+/// loads and parses `manifest.json` once instead of once per slice.
+pub(crate) fn restore_band_slice_from(
+    manifest: &CheckpointManifest,
+    dir: &Path,
+    expect: &LshBloomConfig,
+    range: std::ops::Range<usize>,
+) -> Result<Vec<AtomicBloomFilter>> {
+    manifest.verify_geometry(expect)?;
+    let params = manifest.filter_params;
+    let expect_words = params.bits.div_ceil(64);
+    let mut filters = Vec::with_capacity(range.len());
+    for entry in &manifest.files[range] {
+        let words = read_band_words(dir, entry, manifest.mode, expect_words)?;
+        filters.push(AtomicBloomFilter::from_heap_words(words, entry.inserted, params));
+    }
+    Ok(filters)
 }
 
 /// Bit-OR a *persisted* checkpoint into a live index — the cross-process

@@ -22,6 +22,11 @@
 //! * [`union_from_checkpoint`] — bit-OR a sibling *process's* persisted
 //!   shard filters into a live index (the cross-process half of the §6
 //!   sharded-aggregation seam; `pipeline::shard` drives it).
+//! * [`restore_band_slice`] — load just one contiguous band range of a
+//!   full-index checkpoint, so the band-partitioned serving tier
+//!   ([`crate::engine::band_slice`], `serve --serve-shards` and router
+//!   backends) warm-starts each slice owner from the same manifest a
+//!   single engine would restore whole.
 //! * [`WorkerManifest`] — the completion marker a distributed shard
 //!   worker *process* publishes next to its checkpoint so the
 //!   supervising orchestrator ([`crate::pipeline::supervisor`]) can tell
@@ -57,7 +62,9 @@ pub mod manifest;
 pub mod shm_atomic;
 pub mod worker;
 
-pub use checkpoint::{restore_index, union_from_checkpoint, write_checkpoint};
+pub use checkpoint::{restore_band_slice, restore_index, union_from_checkpoint, write_checkpoint};
+
+pub(crate) use checkpoint::{restore_band_slice_from, write_checkpoint_filters};
 pub use manifest::{CheckpointManifest, CheckpointMode, ChecksumStream, MANIFEST_FILE};
 pub use shm_atomic::ShmAtomicBitArray;
 pub use worker::{

@@ -1,5 +1,6 @@
 //! Minimal blocking client for the dedup service.
 
+use super::proto::bands_to_json;
 use crate::json::{self, Value};
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -11,21 +12,77 @@ pub struct DedupClient {
 }
 
 impl DedupClient {
-    /// Connect to a [`super::DedupServer`].
+    /// Connect to a [`super::DedupServer`] (or a [`super::DedupRouter`],
+    /// which speaks the same text-op protocol).
     pub fn connect(addr: &str) -> std::io::Result<Self> {
         let stream = TcpStream::connect(addr)?;
         let reader = BufReader::new(stream.try_clone()?);
         Ok(Self { writer: stream, reader })
     }
 
-    fn round_trip(&mut self, req: Value) -> std::io::Result<Value> {
-        self.writer.write_all((req.to_json() + "\n").as_bytes())?;
-        self.writer.flush()?;
+    /// [`Self::connect`] with explicit connect and read timeouts — the
+    /// router's backend-facing constructor. A backend host that
+    /// network-partitions (no FIN/RST, packets dropped) must surface as
+    /// a timely I/O error so the fail-fast path can name it, not hold a
+    /// connection thread for the OS default. A read timeout mid-reply
+    /// desynchronizes the line framing, so treat any timeout as fatal
+    /// for the connection (the router closes its whole fan-out).
+    pub(crate) fn connect_with_timeouts(
+        addr: &str,
+        connect: std::time::Duration,
+        read: std::time::Duration,
+    ) -> std::io::Result<Self> {
+        use std::net::ToSocketAddrs;
+        let resolved = addr.to_socket_addrs()?.next().ok_or_else(|| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!("address '{addr}' resolved to nothing"),
+            )
+        })?;
+        let stream = TcpStream::connect_timeout(&resolved, connect)?;
+        stream.set_read_timeout(Some(read))?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Self { writer: stream, reader })
+    }
+
+    /// Write one request line without waiting for the response — the
+    /// pipelining half the router uses to fan a request across N
+    /// backends before reading any reply (all backends work
+    /// concurrently, one connection each, no threads).
+    pub(crate) fn send(&mut self, req: &Value) -> std::io::Result<()> {
+        self.send_raw(&(req.to_json() + "\n"))
+    }
+
+    /// [`Self::send`] over a pre-serialized line (newline included) —
+    /// lets the router serialize a large fan-out request once instead
+    /// of once per backend.
+    pub(crate) fn send_raw(&mut self, line: &str) -> std::io::Result<()> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.flush()
+    }
+
+    /// Read one response line. A clean EOF here means the server closed
+    /// the connection — reported as [`std::io::ErrorKind::UnexpectedEof`]
+    /// with that exact diagnosis, never disguised as a JSON parse error:
+    /// the router's fail-fast path and human operators both need the
+    /// real cause.
+    pub(crate) fn recv(&mut self) -> std::io::Result<Value> {
         let mut line = String::new();
-        self.reader.read_line(&mut line)?;
+        let n = self.reader.read_line(&mut line)?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "server closed connection",
+            ));
+        }
         json::parse(&line).map_err(|e| {
             std::io::Error::new(std::io::ErrorKind::InvalidData, format!("bad response: {e}"))
         })
+    }
+
+    fn round_trip(&mut self, req: Value) -> std::io::Result<Value> {
+        self.send(&req)?;
+        self.recv()
     }
 
     /// Query + insert: is `text` a duplicate of anything seen so far?
@@ -77,14 +134,69 @@ impl DedupClient {
             .ok_or_else(|| err_from(&resp))
     }
 
+    /// Band-level query + insert (`{"op":"check_bands"}`): send a
+    /// pre-computed band-hash vector instead of text, so the server
+    /// never re-MinHashes. Against a slice server the verdict covers
+    /// only the bands that slice owns — OR it across the fleet (what
+    /// [`super::DedupRouter`] does) for the full-index verdict.
+    pub fn check_bands(&mut self, band_hashes: &[u64]) -> std::io::Result<bool> {
+        let resp = self.round_trip(json::obj(vec![
+            ("op", Value::str("check_bands")),
+            ("bands", bands_to_json(band_hashes)),
+        ]))?;
+        resp.get("duplicate")
+            .and_then(|v| v.as_bool())
+            .ok_or_else(|| err_from(&resp))
+    }
+
+    /// Band-level batch (`{"op":"check_bands_batch"}`): probe + insert
+    /// the whole batch, returning the server's *pre-batch* verdicts.
+    /// Final verdicts need the intra-batch reconcile
+    /// ([`crate::engine::reconcile_in_batch`]) applied by the caller —
+    /// the router does this after OR-reducing across its backends.
+    pub fn check_bands_batch(&mut self, batch: &[Vec<u64>]) -> std::io::Result<Vec<bool>> {
+        let docs: Vec<Value> = batch.iter().map(|b| bands_to_json(b)).collect();
+        let resp = self.round_trip(json::obj(vec![
+            ("op", Value::str("check_bands_batch")),
+            ("bands_batch", Value::Arr(docs)),
+        ]))?;
+        let Some(arr) = resp.get("pre_duplicates").and_then(|v| v.as_arr()) else {
+            return Err(err_from(&resp));
+        };
+        if arr.len() != batch.len() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!(
+                    "check_bands_batch: sent {} band vectors, got {} verdicts",
+                    batch.len(),
+                    arr.len()
+                ),
+            ));
+        }
+        arr.iter()
+            .map(|v| v.as_bool().ok_or_else(|| err_from(&resp)))
+            .collect()
+    }
+
     /// Server counters: (docs, duplicates, disk_bytes).
     pub fn stats(&mut self) -> std::io::Result<(u64, u64, u64)> {
-        let resp = self.round_trip(json::obj(vec![("op", Value::str("stats"))]))?;
+        let resp = self.stats_json()?;
         let get = |k: &str| resp.get(k).and_then(|v| v.as_u64());
         match (get("docs"), get("duplicates"), get("disk_bytes")) {
             (Some(d), Some(dup), Some(b)) => Ok((d, dup, b)),
             _ => Err(err_from(&resp)),
         }
+    }
+
+    /// The raw `{"op":"stats"}` response — the full document, including
+    /// the band-layout fields (`num_bands`, `slice_index`,
+    /// `slice_count`) the router's startup handshake validates.
+    pub fn stats_json(&mut self) -> std::io::Result<Value> {
+        let resp = self.round_trip(json::obj(vec![("op", Value::str("stats"))]))?;
+        if resp.get("error").is_some() {
+            return Err(err_from(&resp));
+        }
+        Ok(resp)
     }
 
     /// Ask the server to stop accepting connections and exit.

@@ -6,31 +6,63 @@
 //! the deployment shape the paper's introduction motivates (continuous
 //! CommonCrawl-style drops feeding one corpus state).
 //!
-//! Protocol (JSON per line, newline-terminated):
+//! Protocol (JSON per line, newline-terminated; request lines capped at
+//! [`DEFAULT_MAX_LINE_BYTES`], configurable):
 //!
 //! ```text
 //! -> {"op": "check",  "text": "..."}           query + insert
 //! <- {"duplicate": false, "id": 17}
 //! -> {"op": "query",  "text": "..."}           query only (no insert)
 //! <- {"duplicate": true}
+//! -> {"op": "check_batch", "texts": ["...", "..."]}
+//! <- {"duplicates": [false, true], "ids": [18, 19]}
+//! -> {"op": "check_bands", "bands": [b0, ..., b_{b-1}], "insert": true}
+//! <- {"duplicate": false, "id": 20}            pre-MinHashed (router path)
+//! -> {"op": "check_bands_batch", "bands_batch": [[...], [...]]}
+//! <- {"pre_duplicates": [false, false]}        caller reconciles in-batch
 //! -> {"op": "stats"}
-//! <- {"docs": 17, "duplicates": 3, "disk_bytes": 1048576}
+//! <- {"docs": 21, "duplicates": 3, "disk_bytes": 1048576,
+//!     "num_bands": 9, "slice_index": 0, "slice_count": 1, ...}
 //! -> {"op": "shutdown"}
 //! <- {"ok": true}
 //! ```
 //!
-//! Concurrency model depends on [`crate::config::EngineMode`]. In
-//! classic mode connection handlers parallelize MinHashing (the dominant
-//! cost) and serialize index access behind one mutex, preserving the
-//! §4.4.2 sequential-insert requirement. In concurrent mode
-//! (`--engine concurrent`) the lock-free [`crate::engine`] serves both
-//! MinHash and index work on connection threads with no serialization —
-//! throughput scales with client count, at the cost of the engine
-//! module's documented same-instant-twin caveat. Stats requests are
-//! lock-free in both modes.
+//! Concurrency model depends on the backend. In classic mode connection
+//! handlers parallelize MinHashing (the dominant cost) and serialize
+//! index access behind one mutex, preserving the §4.4.2
+//! sequential-insert requirement. In concurrent mode (`--engine
+//! concurrent`) the lock-free [`crate::engine`] serves both MinHash and
+//! index work on connection threads with no serialization — throughput
+//! scales with client count, at the cost of the engine module's
+//! documented same-instant-twin caveat. Stats requests are lock-free in
+//! every mode.
+//!
+//! ## The band-partitioned serving tier
+//!
+//! The LSHBloom index partitions cleanly along the band axis (the
+//! duplicate rule is an OR across bands), and the serving tier exploits
+//! that at two scales:
+//!
+//! * **In-process** — `serve --serve-shards N` runs N band-slice
+//!   engines behind one listener ([`crate::engine::BandShardedEngine`]):
+//!   one MinHash per request, parallel slice probes, OR-reduced
+//!   verdicts identical to a single engine.
+//! * **Multi-host** — `N` slice servers (`serve --slice-index I
+//!   --slice-count N`, each holding `1/N` of the filter memory) behind
+//!   a [`DedupRouter`] (`route` subcommand): the router MinHashes once,
+//!   fans the band-level ops across the fleet over reused per-backend
+//!   connections, OR-reduces remote verdicts, and fails fast — naming
+//!   the backend — the moment one drops.
+//!
+//! See `docs/ARCHITECTURE.md` (serving-tier dataflow) and
+//! `docs/OPERATIONS.md` (router deployment + backend-failure runbook).
 
 mod client;
+mod proto;
+mod router;
 mod server;
 
 pub use client::DedupClient;
-pub use server::{DedupServer, ServerStats};
+pub use proto::DEFAULT_MAX_LINE_BYTES;
+pub use router::{DedupRouter, RouterOptions};
+pub use server::{DedupServer, ServeOptions, ServerStats};

@@ -1,0 +1,256 @@
+//! Shared wire-protocol plumbing for the serving tier: bounded request
+//! lines and the band-vector JSON encoding used by the `check_bands`
+//! ops.
+//!
+//! Every line-protocol reader in the tier — the dedup server and the
+//! router — goes through [`read_line_bounded`]: an unbounded
+//! `read_line` into a growing `String` lets one client that streams
+//! bytes without ever sending a newline OOM the process, so lines are
+//! capped ([`DEFAULT_MAX_LINE_BYTES`], configurable per listener) and an
+//! over-long line is reported to the caller instead of accumulating.
+
+use crate::json::Value;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Default cap on one request/response line (16 MiB): generous for a
+/// `check_batch` of real documents, far below memory-exhaustion scale.
+/// Configurable per listener (`serve --max-line-bytes`, `route
+/// --max-line-bytes`).
+pub const DEFAULT_MAX_LINE_BYTES: usize = 16 << 20;
+
+/// Outcome of one bounded line read.
+pub(crate) enum LineRead {
+    /// A complete line is in the buffer (newline included, or the
+    /// stream ended mid-line with bytes pending).
+    Line,
+    /// Clean end of stream, nothing buffered.
+    Eof,
+    /// The line exceeded the cap before a newline arrived; the caller
+    /// should report the oversize and close — the stream position is
+    /// mid-line, so no further framing is trustworthy.
+    Overflow,
+}
+
+/// Read one newline-terminated line into `line`, never letting it grow
+/// past `max` bytes. Partial bytes accumulate in the caller-owned
+/// buffer across calls, so a read timeout (`WouldBlock`/`TimedOut`
+/// propagated as `Err`) can be retried without losing input — the same
+/// contract the previous unbounded `read_line` loop relied on.
+pub(crate) fn read_line_bounded(
+    reader: &mut impl BufRead,
+    line: &mut Vec<u8>,
+    max: usize,
+) -> std::io::Result<LineRead> {
+    loop {
+        let (consumed, complete) = {
+            let available = reader.fill_buf()?;
+            if available.is_empty() {
+                return Ok(if line.is_empty() { LineRead::Eof } else { LineRead::Line });
+            }
+            match available.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    line.extend_from_slice(&available[..=pos]);
+                    (pos + 1, true)
+                }
+                None => {
+                    line.extend_from_slice(available);
+                    (available.len(), false)
+                }
+            }
+        };
+        reader.consume(consumed);
+        if line.len() > max {
+            return Ok(LineRead::Overflow);
+        }
+        if complete {
+            return Ok(LineRead::Line);
+        }
+    }
+}
+
+/// The one-line error reply shape every listener in the tier uses.
+pub(crate) fn error_response(msg: impl Into<String>) -> Value {
+    crate::json::obj(vec![("error", Value::str(msg.into()))])
+}
+
+/// The per-connection line loop shared by both listeners (dedup server
+/// and router): bounded reads, overflow → error reply + close, short
+/// read-timeout polling of the shutdown flag, one JSON reply per
+/// request line. `handle` returns the reply plus a close flag (the
+/// router's fail-fast path closes after replying; the server always
+/// passes `false`).
+pub(crate) fn serve_connection<F>(
+    stream: TcpStream,
+    shutdown: &AtomicBool,
+    max_line_bytes: usize,
+    mut handle: F,
+) where
+    F: FnMut(&str) -> (Value, bool),
+{
+    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+    // Poll the shutdown flag between reads so idle connections do not
+    // keep the accept loop joining forever after a shutdown request.
+    stream
+        .set_read_timeout(Some(std::time::Duration::from_millis(100)))
+        .ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let mut line: Vec<u8> = Vec::new();
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        // NB: on timeout, bytes read so far remain in `line` (the
+        // buffer is caller-owned), so partial lines are never dropped.
+        match read_line_bounded(&mut reader, &mut line, max_line_bytes) {
+            Ok(LineRead::Eof) => break,
+            Ok(LineRead::Line) => {}
+            Ok(LineRead::Overflow) => {
+                // The stream is mid-line; no further framing is
+                // trustworthy, so report the cap and close.
+                let msg = format!(
+                    "request line exceeds the {max_line_bytes} byte cap; closing connection"
+                );
+                let _ = writer.write_all((error_response(msg).to_json() + "\n").as_bytes());
+                let _ = writer.flush();
+                break;
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(_) => break,
+        }
+        // Borrow the line in place — copying a cap-sized request just to
+        // hand it to the handler would double the per-request allocation.
+        if std::str::from_utf8(&line).is_ok_and(|text| text.trim().is_empty()) {
+            line.clear();
+            continue;
+        }
+        let (response, close) = match std::str::from_utf8(&line) {
+            Ok(text) => handle(text),
+            Err(_) => (error_response("request line is not valid UTF-8"), false),
+        };
+        line.clear();
+        let done = shutdown.load(Ordering::SeqCst);
+        if writer
+            .write_all((response.to_json() + "\n").as_bytes())
+            .and_then(|_| writer.flush())
+            .is_err()
+        {
+            break;
+        }
+        if close || done {
+            break;
+        }
+    }
+    crate::log_debug!("connection {peer} closed");
+}
+
+/// Encode a band-hash vector for the `check_bands` ops. Band hashes are
+/// full-width u64s; the crate's JSON keeps the exact integer token, so
+/// they round-trip without the f64-mantissa loss a generic JSON layer
+/// would inflict.
+pub(crate) fn bands_to_json(band_hashes: &[u64]) -> Value {
+    Value::Arr(band_hashes.iter().map(|&h| Value::u64(h)).collect())
+}
+
+/// Decode a band-hash vector, enforcing the index's band count — a
+/// wrong-length vector would silently probe the wrong filters, so it is
+/// a protocol error, not something to truncate or pad.
+pub(crate) fn bands_from_json(v: &Value, expect_bands: usize) -> Result<Vec<u64>, String> {
+    let Some(arr) = v.as_arr() else {
+        return Err("'bands' is not an array".to_string());
+    };
+    if arr.len() != expect_bands {
+        return Err(format!(
+            "wrong band count: got {} band hashes, the index has {expect_bands} bands",
+            arr.len()
+        ));
+    }
+    let mut bands = Vec::with_capacity(arr.len());
+    for (i, h) in arr.iter().enumerate() {
+        let Some(h) = h.as_u64() else {
+            return Err(format!("bands[{i}] is not a u64 band hash"));
+        };
+        bands.push(h);
+    }
+    Ok(bands)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    /// (line bytes, overflowed) per read until EOF or overflow.
+    fn read_all(input: &[u8], max: usize) -> Vec<(Vec<u8>, bool)> {
+        let mut reader = BufReader::with_capacity(8, input);
+        let mut out = Vec::new();
+        let mut line = Vec::new();
+        loop {
+            match read_line_bounded(&mut reader, &mut line, max).unwrap() {
+                LineRead::Eof => break,
+                LineRead::Line => out.push((std::mem::take(&mut line), false)),
+                LineRead::Overflow => {
+                    out.push((std::mem::take(&mut line), true));
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn splits_lines_and_keeps_newlines() {
+        let reads = read_all(b"one\ntwo\n", 100);
+        assert_eq!(reads.len(), 2);
+        assert_eq!(reads[0].0, b"one\n");
+        assert_eq!(reads[1].0, b"two\n");
+    }
+
+    #[test]
+    fn final_unterminated_line_is_returned() {
+        let reads = read_all(b"one\ntail", 100);
+        assert_eq!(reads.len(), 2);
+        assert_eq!(reads[1].0, b"tail");
+    }
+
+    #[test]
+    fn overflow_reported_once_cap_is_exceeded() {
+        let reads = read_all(&[b'x'; 64], 16);
+        assert_eq!(reads.len(), 1);
+        assert!(reads[0].1, "must report overflow");
+        // The buffer never grows far past the cap (one fill_buf chunk).
+        assert!(reads[0].0.len() <= 16 + 8);
+    }
+
+    #[test]
+    fn over_long_terminated_line_is_still_an_overflow() {
+        let mut input = vec![b'y'; 40];
+        input.push(b'\n');
+        let reads = read_all(&input, 16);
+        assert!(reads[0].1);
+    }
+
+    #[test]
+    fn bands_roundtrip_and_validation() {
+        let bands = vec![u64::MAX, 0, 12345];
+        let v = bands_to_json(&bands);
+        assert_eq!(bands_from_json(&v, 3).unwrap(), bands);
+        let err = bands_from_json(&v, 4).unwrap_err();
+        assert!(err.contains("wrong band count"), "{err}");
+        let err = bands_from_json(&Value::str("nope"), 3).unwrap_err();
+        assert!(err.contains("not an array"), "{err}");
+        let bad = Value::Arr(vec![Value::u64(1), Value::Bool(true), Value::u64(2)]);
+        let err = bands_from_json(&bad, 3).unwrap_err();
+        assert!(err.contains("bands[1]"), "{err}");
+    }
+}

@@ -1,0 +1,542 @@
+//! The band-partition router: one MinHash, N backends, OR-reduced
+//! verdicts — the multi-host half of the serving tier (`route`
+//! subcommand).
+//!
+//! A router fronts `N` dedup servers, each serving one contiguous band
+//! slice of the same index geometry (`serve --slice-index I
+//! --slice-count N`; a single full concurrent-engine server also works
+//! as the degenerate slice 0 of 1). For every `check`/`check_batch` the router MinHashes
+//! the text *once*, fans the resulting band vectors across all backends
+//! with the band-level wire ops (`check_bands` /
+//! `check_bands_batch`) — so backends never re-MinHash — and OR-reduces
+//! the per-slice verdicts, which is exactly the single-index duplicate
+//! rule (any band collides, §4.2). Batched requests additionally run
+//! the shared intra-batch reconcile
+//! ([`crate::engine::reconcile_in_batch`]) at the router, so batch
+//! verdicts stay byte-identical to a single concurrent-engine server.
+//!
+//! ## Fleet validation and failure model
+//!
+//! At bind the router performs a stats handshake with every backend and
+//! fails fast on a misconfigured fleet: every backend must accept
+//! band-level ops (a classic text-only server is rejected here, not on
+//! the first routed request), serve the router's band count *and* rows
+//! per band (two perm counts can derive the same band count with
+//! different rows — band count alone would silently miss every probe),
+//! declare a slice count equal to the number of backends, and the slice
+//! indices must be a permutation of `0..N` — together, by the
+//! [`crate::engine::slice_range`] tiling, that proves the fleet covers
+//! every band exactly once.
+//!
+//! At serve time each client connection owns one dedicated connection
+//! per backend (established lazily, reused across requests — requests
+//! are pipelined: written to all N backends before any reply is read,
+//! so the slices work concurrently without router-side threads; each
+//! fan-out line is serialized once and size-checked before anything is
+//! sent). Failures split by blast radius: a pre-flight rejection
+//! (over-expanded batch, backend connect refused) provably sent nothing
+//! and only costs an error reply, while any failure after the first
+//! byte went out is **fail-fast** — the client receives an error naming
+//! the backend and the connection closes, because a half-applied
+//! fan-out (some slices inserted, others not) can no longer promise
+//! exact verdicts on that stream. Re-connecting gets a fresh fan-out
+//! against whatever fleet is alive.
+
+use super::client::DedupClient;
+use super::proto::error_response;
+use super::server::ServerStats;
+use super::DEFAULT_MAX_LINE_BYTES;
+use crate::config::PipelineConfig;
+use crate::corpus::Doc;
+use crate::engine::reconcile_in_batch;
+use crate::json::{self, obj, Value};
+use crate::methods::lshbloom::BandPreparer;
+use crate::methods::{Prepared, Preparer};
+use crate::minhash::LshParams;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// How long a backend may take to accept a connection before the
+/// router treats it as down. A partitioned host (packets silently
+/// dropped) would otherwise hold a client thread for the OS connect
+/// default — minutes — instead of failing fast.
+const BACKEND_CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// How long the router waits for one backend reply. Dedup ops are
+/// memory-speed (a capped request line parses and probes in well under
+/// a second), so a stall this long means a hung backend, and the
+/// fail-fast contract — error naming the backend, close the client
+/// stream — must fire rather than block forever (which would also wedge
+/// router shutdown on the connection join).
+const BACKEND_READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Listener-level router options.
+#[derive(Clone, Debug)]
+pub struct RouterOptions {
+    /// Per-connection request-line cap in bytes
+    /// ([`DEFAULT_MAX_LINE_BYTES`] unless overridden).
+    pub max_line_bytes: usize,
+}
+
+impl Default for RouterOptions {
+    fn default() -> Self {
+        Self { max_line_bytes: DEFAULT_MAX_LINE_BYTES }
+    }
+}
+
+struct RouterShared {
+    preparer: BandPreparer,
+    num_bands: usize,
+    backends: Vec<String>,
+    max_line_bytes: usize,
+    stats: ServerStats,
+    shutdown: AtomicBool,
+}
+
+/// A failed fan-out, split by blast radius: `fatal` failures may have
+/// partially applied (some backends mutated, others not), so the client
+/// stream can no longer promise exact verdicts and must close; clean
+/// failures provably sent nothing (pre-flight size check, connect
+/// refused) and only need an error reply — the client keeps its
+/// connection and can retry or split the batch.
+struct Failure {
+    msg: String,
+    fatal: bool,
+}
+
+impl Failure {
+    fn fatal(msg: String) -> Self {
+        Self { msg, fatal: true }
+    }
+
+    fn clean(msg: String) -> Self {
+        Self { msg, fatal: false }
+    }
+}
+
+/// A running band-partition router.
+pub struct DedupRouter {
+    listener: TcpListener,
+    shared: Arc<RouterShared>,
+}
+
+fn invalid_input(msg: String) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidInput, msg)
+}
+
+impl DedupRouter {
+    /// Bind to `addr`, fronting `backends` (dedup-server addresses, one
+    /// per band slice). `cfg` fixes the MinHash/band geometry — it must
+    /// match the geometry every backend was started with, and the
+    /// handshake verifies the observable half of that (band count and
+    /// slice layout) before the listener opens.
+    pub fn bind(
+        addr: &str,
+        cfg: &PipelineConfig,
+        backends: Vec<String>,
+        opts: &RouterOptions,
+    ) -> std::io::Result<Self> {
+        if backends.is_empty() {
+            return Err(invalid_input("route: need at least one backend".to_string()));
+        }
+        let preparer = BandPreparer::from_config(cfg);
+        let num_bands = preparer.lsh.num_bands;
+        validate_backend_layout(&backends, preparer.lsh)?;
+        let shared = Arc::new(RouterShared {
+            preparer,
+            num_bands,
+            backends,
+            max_line_bytes: opts.max_line_bytes,
+            stats: ServerStats::default(),
+            shutdown: AtomicBool::new(false),
+        });
+        let listener = TcpListener::bind(addr)?;
+        Ok(Self { listener, shared })
+    }
+
+    /// The bound address (for ephemeral-port tests).
+    pub fn local_addr(&self) -> std::io::Result<std::net::SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Number of backends this router fans out to.
+    pub fn num_backends(&self) -> usize {
+        self.shared.backends.len()
+    }
+
+    /// Serve until a client sends `{"op":"shutdown"}` — the same
+    /// accept/poll loop as [`super::DedupServer::serve`]. Shutting the
+    /// router down does *not* shut the backends down: they may be
+    /// shared with other routers; stop them directly when the fleet
+    /// retires.
+    pub fn serve(self) -> std::io::Result<()> {
+        self.listener.set_nonblocking(true)?;
+        let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        loop {
+            if self.shared.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            handles.retain(|h| !h.is_finished());
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false).ok();
+                    let shared = Arc::clone(&self.shared);
+                    handles.push(std::thread::spawn(move || handle_conn(stream, shared)));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+/// Stats-handshake every backend and fail fast unless the fleet forms a
+/// complete, non-overlapping band partition of this router's geometry
+/// (band count AND rows per band — two perm counts can derive the same
+/// band count with different rows, which would silently miss every
+/// probe) served by band-capable backends.
+fn validate_backend_layout(backends: &[String], lsh: LshParams) -> std::io::Result<()> {
+    let mut seen = vec![false; backends.len()];
+    for addr in backends {
+        let fail = |msg: String| invalid_input(format!("route: backend {addr}: {msg}"));
+        let mut client =
+            connect_backend(addr).map_err(|e| fail(format!("connect failed: {e}")))?;
+        let stats = client.stats_json().map_err(|e| fail(e.to_string()))?;
+        let get = |k: &str| stats.get(k).and_then(|v| v.as_usize());
+        let (Some(bands), Some(rows), Some(index), Some(count)) = (
+            get("num_bands"),
+            get("rows_per_band"),
+            get("slice_index"),
+            get("slice_count"),
+        ) else {
+            return Err(fail(
+                "stats response lacks the band-layout fields (num_bands/rows_per_band/\
+                 slice_index/slice_count) — not a band-aware dedup server?"
+                    .to_string(),
+            ));
+        };
+        if stats.get("band_ops").and_then(|v| v.as_bool()) != Some(true) {
+            return Err(fail(
+                "serves text ops only (classic engine); router backends must accept \
+                 band-level ops — start it with --engine concurrent"
+                    .to_string(),
+            ));
+        }
+        if bands != lsh.num_bands || rows != lsh.rows_per_band {
+            return Err(fail(format!(
+                "serves {bands} bands x {rows} rows but the router's geometry derives \
+                 {} x {} (threshold/perms/p-effective/expected-docs must match across \
+                 the fleet)",
+                lsh.num_bands, lsh.rows_per_band
+            )));
+        }
+        if count != backends.len() {
+            return Err(fail(format!(
+                "declares slice count {count} but the router was given {} backends",
+                backends.len()
+            )));
+        }
+        if index >= count || seen[index] {
+            return Err(fail(format!(
+                "slice index {index} is out of range or already claimed by another \
+                 backend — the fleet must be a permutation of slices 0..{count}"
+            )));
+        }
+        seen[index] = true;
+    }
+    Ok(())
+}
+
+/// Open one timed-out backend connection (see the timeout consts).
+fn connect_backend(addr: &str) -> std::io::Result<DedupClient> {
+    DedupClient::connect_with_timeouts(addr, BACKEND_CONNECT_TIMEOUT, BACKEND_READ_TIMEOUT)
+}
+
+fn handle_conn(stream: TcpStream, shared: Arc<RouterShared>) {
+    // One dedicated connection per backend, established at the first op
+    // that needs the fleet and reused for every later request on this
+    // client connection. The line loop itself is shared with the dedup
+    // server (`proto::serve_connection`); the close flag fires on the
+    // fail-fast path after a backend error.
+    let mut fleet: Option<Vec<DedupClient>> = None;
+    super::proto::serve_connection(stream, &shared.shutdown, shared.max_line_bytes, |line| {
+        handle_request(line, &shared, &mut fleet)
+    });
+}
+
+/// Handle one request line; the bool asks the connection loop to close
+/// after replying (fail-fast after a backend error — a half-applied
+/// fan-out cannot keep serving exact verdicts on this stream).
+fn handle_request(
+    line: &str,
+    shared: &RouterShared,
+    fleet: &mut Option<Vec<DedupClient>>,
+) -> (Value, bool) {
+    let req = match json::parse(line) {
+        Ok(v) => v,
+        Err(e) => return (error_response(format!("bad request json: {e}")), false),
+    };
+    match req.get("op").and_then(|v| v.as_str()) {
+        Some("check") | Some("query") => {
+            let insert = req.get("op").and_then(|v| v.as_str()) == Some("check");
+            let Some(text) = req.get("text").and_then(|v| v.as_str()) else {
+                return (error_response("missing 'text'"), false);
+            };
+            let bands = prepare_one(shared, text);
+            match fan_check(shared, fleet, &bands, insert) {
+                Ok(duplicate) if insert => {
+                    let id = shared.stats.docs.fetch_add(1, Ordering::SeqCst);
+                    if duplicate {
+                        shared.stats.duplicates.fetch_add(1, Ordering::SeqCst);
+                    }
+                    let resp = obj(vec![
+                        ("duplicate", Value::Bool(duplicate)),
+                        ("id", Value::u64(id)),
+                    ]);
+                    (resp, false)
+                }
+                Ok(duplicate) => (obj(vec![("duplicate", Value::Bool(duplicate))]), false),
+                Err(f) => (error_response(f.msg), f.fatal),
+            }
+        }
+        Some("check_batch") => {
+            let Some(texts_json) = req.get("texts").and_then(|v| v.as_arr()) else {
+                return (error_response("missing 'texts' array"), false);
+            };
+            let mut texts = Vec::with_capacity(texts_json.len());
+            for (i, t) in texts_json.iter().enumerate() {
+                let Some(s) = t.as_str() else {
+                    return (error_response(format!("texts[{i}] is not a string")), false);
+                };
+                texts.push(s);
+            }
+            let bands_batch = prepare_batch(shared, &texts);
+            match fan_check_batch(shared, fleet, &bands_batch) {
+                Ok(verdicts) => {
+                    let n = texts.len() as u64;
+                    let first_id = shared.stats.docs.fetch_add(n, Ordering::SeqCst);
+                    let dups = verdicts.iter().filter(|&&d| d).count() as u64;
+                    shared.stats.duplicates.fetch_add(dups, Ordering::SeqCst);
+                    let resp = obj(vec![
+                        (
+                            "duplicates",
+                            Value::Arr(verdicts.into_iter().map(Value::Bool).collect()),
+                        ),
+                        (
+                            "ids",
+                            Value::Arr((0..n).map(|i| Value::u64(first_id + i)).collect()),
+                        ),
+                    ]);
+                    (resp, false)
+                }
+                Err(f) => (error_response(f.msg), f.fatal),
+            }
+        }
+        Some("stats") => match fan_stats(shared, fleet) {
+            Ok(disk_bytes) => {
+                let resp = obj(vec![
+                    ("docs", Value::u64(shared.stats.docs.load(Ordering::SeqCst))),
+                    (
+                        "duplicates",
+                        Value::u64(shared.stats.duplicates.load(Ordering::SeqCst)),
+                    ),
+                    ("disk_bytes", Value::u64(disk_bytes)),
+                    ("num_bands", Value::u64(shared.num_bands as u64)),
+                    ("backends", Value::u64(shared.backends.len() as u64)),
+                ]);
+                (resp, false)
+            }
+            Err(f) => (error_response(f.msg), f.fatal),
+        },
+        Some("shutdown") => {
+            shared.shutdown.store(true, Ordering::SeqCst);
+            (obj(vec![("ok", Value::Bool(true))]), false)
+        }
+        Some(other) => {
+            let msg = format!(
+                "unknown op '{other}' (the router serves check/query/check_batch/\
+                 stats/shutdown; band-level ops go directly to slice backends)"
+            );
+            (error_response(msg), false)
+        }
+        None => (error_response("missing 'op'"), false),
+    }
+}
+
+fn prepare_one(shared: &RouterShared, text: &str) -> Vec<u64> {
+    let doc = Doc { id: 0, text: text.to_string() };
+    let mut prepared = shared.preparer.prepare_batch(std::slice::from_ref(&doc));
+    let Prepared::Bands(bands) = prepared.remove(0) else { unreachable!() };
+    bands
+}
+
+fn prepare_batch(shared: &RouterShared, texts: &[&str]) -> Vec<Vec<u64>> {
+    let docs: Vec<Doc> = texts
+        .iter()
+        .enumerate()
+        .map(|(i, t)| Doc { id: i as u64, text: (*t).to_string() })
+        .collect();
+    shared
+        .preparer
+        .prepare_batch(&docs)
+        .into_iter()
+        .map(|prep| {
+            let Prepared::Bands(bands) = prep else { unreachable!() };
+            bands
+        })
+        .collect()
+}
+
+/// Connect the per-connection backend fleet on first use.
+fn ensure_fleet<'a>(
+    shared: &RouterShared,
+    fleet: &'a mut Option<Vec<DedupClient>>,
+) -> Result<&'a mut Vec<DedupClient>, String> {
+    if fleet.is_none() {
+        let mut conns = Vec::with_capacity(shared.backends.len());
+        for addr in &shared.backends {
+            let conn = connect_backend(addr).map_err(|e| format!("backend {addr}: {e}"))?;
+            conns.push(conn);
+        }
+        *fleet = Some(conns);
+    }
+    Ok(fleet.as_mut().unwrap())
+}
+
+/// Write `req` to every backend, then read every reply — pipelined, so
+/// all N backends process concurrently over their dedicated
+/// connections. The request is serialized once for the whole fleet and
+/// size-checked against the router's own line cap *before anything is
+/// sent*: band encoding expands short documents (~21 bytes per band
+/// hash), so a client batch under the cap can re-encode past it — that
+/// must be a clean pre-flight error, never a torn half-broadcast
+/// against backends that enforce their own caps. Any I/O failure or
+/// error reply is attributed to the backend address that produced it.
+fn broadcast(
+    shared: &RouterShared,
+    fleet: &mut Option<Vec<DedupClient>>,
+    req: &Value,
+) -> Result<Vec<Value>, Failure> {
+    let line = req.to_json() + "\n";
+    if line.len() > shared.max_line_bytes {
+        // Pre-flight, nothing sent: a clean reply, connection kept.
+        return Err(Failure::clean(format!(
+            "fan-out request is {} bytes of band-encoded JSON, over the {}-byte line \
+             cap (band vectors expand short documents); split the batch, or raise \
+             --max-line-bytes on the router and every backend",
+            line.len(),
+            shared.max_line_bytes
+        )));
+    }
+    // Connect failures are clean too — the fleet is only installed once
+    // every backend connected, so no request bytes went anywhere.
+    let conns = ensure_fleet(shared, fleet).map_err(Failure::clean)?;
+    for (conn, addr) in conns.iter_mut().zip(&shared.backends) {
+        // From the first send onward a failure may be half-applied.
+        conn.send_raw(&line)
+            .map_err(|e| Failure::fatal(format!("backend {addr}: {e}")))?;
+    }
+    let mut replies = Vec::with_capacity(conns.len());
+    for (conn, addr) in conns.iter_mut().zip(&shared.backends) {
+        let resp = conn
+            .recv()
+            .map_err(|e| Failure::fatal(format!("backend {addr}: {e}")))?;
+        if let Some(err) = resp.get("error").and_then(|v| v.as_str()) {
+            return Err(Failure::fatal(format!("backend {addr}: {err}")));
+        }
+        replies.push(resp);
+    }
+    Ok(replies)
+}
+
+/// Fan one band vector to every slice and OR-reduce the verdicts.
+fn fan_check(
+    shared: &RouterShared,
+    fleet: &mut Option<Vec<DedupClient>>,
+    bands: &[u64],
+    insert: bool,
+) -> Result<bool, Failure> {
+    let req = obj(vec![
+        ("op", Value::str("check_bands")),
+        ("bands", super::proto::bands_to_json(bands)),
+        ("insert", Value::Bool(insert)),
+    ]);
+    let replies = broadcast(shared, fleet, &req)?;
+    let mut duplicate = false;
+    for (resp, addr) in replies.iter().zip(&shared.backends) {
+        let Some(d) = resp.get("duplicate").and_then(|v| v.as_bool()) else {
+            return Err(Failure::fatal(format!(
+                "backend {addr}: malformed check_bands response"
+            )));
+        };
+        duplicate |= d;
+    }
+    Ok(duplicate)
+}
+
+/// Fan a band-vector batch to every slice, OR-reduce the pre-batch
+/// verdicts, then apply the shared intra-batch reconcile — the final
+/// verdicts are byte-identical to a single concurrent-engine server
+/// processing the same batch.
+fn fan_check_batch(
+    shared: &RouterShared,
+    fleet: &mut Option<Vec<DedupClient>>,
+    bands_batch: &[Vec<u64>],
+) -> Result<Vec<bool>, Failure> {
+    let docs: Vec<Value> = bands_batch.iter().map(|b| super::proto::bands_to_json(b)).collect();
+    let req = obj(vec![
+        ("op", Value::str("check_bands_batch")),
+        ("bands_batch", Value::Arr(docs)),
+    ]);
+    let replies = broadcast(shared, fleet, &req)?;
+    let mut pre = vec![false; bands_batch.len()];
+    for (resp, addr) in replies.iter().zip(&shared.backends) {
+        let Some(arr) = resp.get("pre_duplicates").and_then(|v| v.as_arr()) else {
+            return Err(Failure::fatal(format!(
+                "backend {addr}: malformed check_bands_batch response"
+            )));
+        };
+        if arr.len() != bands_batch.len() {
+            return Err(Failure::fatal(format!(
+                "backend {addr}: sent {} band vectors, got {} verdicts",
+                bands_batch.len(),
+                arr.len()
+            )));
+        }
+        for (p, v) in pre.iter_mut().zip(arr) {
+            let Some(d) = v.as_bool() else {
+                return Err(Failure::fatal(format!(
+                    "backend {addr}: malformed check_bands_batch response"
+                )));
+            };
+            *p |= d;
+        }
+    }
+    Ok(reconcile_in_batch(bands_batch, &pre))
+}
+
+/// Aggregate the fleet's persisted footprint (sum of backend
+/// `disk_bytes`) for the router's stats reply.
+fn fan_stats(
+    shared: &RouterShared,
+    fleet: &mut Option<Vec<DedupClient>>,
+) -> Result<u64, Failure> {
+    let req = obj(vec![("op", Value::str("stats"))]);
+    let replies = broadcast(shared, fleet, &req)?;
+    let mut disk_bytes = 0u64;
+    for (resp, addr) in replies.iter().zip(&shared.backends) {
+        let Some(b) = resp.get("disk_bytes").and_then(|v| v.as_u64()) else {
+            return Err(Failure::fatal(format!("backend {addr}: malformed stats response")));
+        };
+        disk_bytes += b;
+    }
+    Ok(disk_bytes)
+}

@@ -1,6 +1,6 @@
 //! The dedup server: TCP listener + shared LSHBloom state.
 //!
-//! Two index backends ([`crate::config::EngineMode`]):
+//! Four index backends:
 //!
 //! * **Classic** — the sequential `LshBloomDecider` behind a mutex.
 //!   MinHashing runs on connection threads; index access serializes.
@@ -12,30 +12,57 @@
 //!   caveat); `use_shm`/`blocked_bloom` are classic-only (the `serve`
 //!   CLI rejects those flag combinations outright — concurrent
 //!   persistence goes through `--state-dir` instead).
+//! * **BandSharded** (`serve --serve-shards N`) — the band-partitioned
+//!   serving tier in one process: N
+//!   [`crate::engine::BandSliceIndex`] slices behind one preparer
+//!   ([`crate::engine::BandShardedEngine`]). A request MinHashes once,
+//!   every slice is probed and the per-slice verdicts OR-reduce, which
+//!   preserves single-engine semantics exactly (a duplicate iff *any*
+//!   band collides).
+//! * **Slice** (`serve --slice-index I --slice-count N`) — one band
+//!   slice served alone: the multi-host backend a
+//!   [`super::DedupRouter`] fans band-level ops across. Text ops are
+//!   rejected (a lone slice cannot answer them correctly); the slice
+//!   accepts `check_bands`/`check_bands_batch`, whose band vectors were
+//!   MinHashed once at the router.
 //!
 //! `{"op":"stats"}` never queues behind ingest: counters live in atomic
 //! [`ServerStats`], the classic footprint is captured at bind (genuinely
 //! static there), and the concurrent footprint is recomputed lock-free
 //! from the live engine — so a warm-started server reports its
 //! *restored* index (and, with `--state-dir`, the actual persisted
-//! bytes on disk) rather than a stale bind-time estimate.
+//! bytes on disk) rather than a stale bind-time estimate. Stats also
+//! reports the band layout (`num_bands`, `slice_index`, `slice_count`)
+//! so a router can fail fast on a misconfigured backend fleet.
 //!
 //! Ops: `check` / `query` (one document), `check_batch` (N documents in
-//! one round trip, hitting the engine's batched fast path), `stats`,
-//! `shutdown`. With [`DedupServer::bind_with_state`] the concurrent
-//! index is mmap-backed in a state directory: restored on bind when a
-//! checkpoint manifest is present, checkpointed again on orderly
-//! shutdown. When the state dir is the aggregated output of a `dedup
+//! one round trip, hitting the engine's batched fast path),
+//! `check_bands` / `check_bands_batch` (pre-MinHashed band vectors from
+//! a router — concurrent-family backends only), `stats`, `shutdown`.
+//! Request lines are capped ([`super::DEFAULT_MAX_LINE_BYTES`],
+//! `--max-line-bytes`): a client that streams bytes without a newline
+//! gets an error response and a closed connection instead of growing a
+//! buffer without bound.
+//!
+//! With [`DedupServer::bind_with_state`] the concurrent index is
+//! mmap-backed in a state directory: restored on bind when a checkpoint
+//! manifest is present, checkpointed again on orderly shutdown. A
+//! band-sharded server warm-starts each slice from the same full-index
+//! manifest (slice-aware restore) and writes a full-index snapshot back
+//! on shutdown; a slice server restores read-only and never writes.
+//! When the state dir is the aggregated output of a `dedup
 //! --distributed` run, `stats` additionally reports `shard_workers` —
 //! how many worker processes produced the index being served.
 
+use super::proto::{bands_from_json, error_response};
+use super::DEFAULT_MAX_LINE_BYTES;
 use crate::config::{EngineMode, PipelineConfig};
 use crate::corpus::Doc;
-use crate::engine::ConcurrentEngine;
+use crate::engine::{BandShardedEngine, BandSliceIndex, ConcurrentEngine};
+use crate::index::lshbloom::LshBloomConfig;
 use crate::json::{self, obj, Value};
 use crate::methods::lshbloom::{decider_from_config, BandPreparer, LshBloomDecider};
 use crate::methods::{Decider, Prepared, Preparer};
-use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -47,17 +74,84 @@ pub struct ServerStats {
     pub duplicates: AtomicU64,
 }
 
+/// Listener-level options beyond the pipeline config.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Durable state directory (concurrent / band-sharded backends):
+    /// warm-start from its checkpoint when present, checkpoint on
+    /// orderly shutdown. A slice server treats it as a read-only
+    /// restore source.
+    pub state_dir: Option<std::path::PathBuf>,
+    /// Serve one band slice `(index, count)` as a router backend
+    /// instead of a full index. Mutually exclusive with
+    /// `cfg.serve_shards > 1`.
+    pub slice: Option<(usize, usize)>,
+    /// Per-connection request-line cap in bytes
+    /// ([`DEFAULT_MAX_LINE_BYTES`] unless overridden).
+    pub max_line_bytes: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self { state_dir: None, slice: None, max_line_bytes: DEFAULT_MAX_LINE_BYTES }
+    }
+}
+
 /// Index state behind the listener.
 enum IndexBackend {
     /// Sequential decider; index access serializes on the mutex.
     Classic { preparer: BandPreparer, decider: Mutex<LshBloomDecider> },
     /// Lock-free engine; no serialization anywhere on the request path.
     Concurrent(ConcurrentEngine),
+    /// N in-process band slices behind one preparer (`--serve-shards`).
+    BandSharded(BandShardedEngine),
+    /// One band slice, band-level ops only (router backend).
+    Slice { index: BandSliceIndex, slice: usize, count: usize },
 }
 
 impl IndexBackend {
+    /// Full band count of the index this server partitions or serves.
+    fn num_bands(&self) -> usize {
+        match self {
+            IndexBackend::Classic { preparer, .. } => preparer.lsh.num_bands,
+            IndexBackend::Concurrent(engine) => engine.index().num_bands(),
+            IndexBackend::BandSharded(engine) => engine.num_bands(),
+            IndexBackend::Slice { index, .. } => index.full_bands(),
+        }
+    }
+
+    /// (slice index, slice count) for the stats handshake; a full
+    /// server is slice 0 of 1.
+    fn slice_layout(&self) -> (usize, usize) {
+        match self {
+            IndexBackend::Slice { slice, count, .. } => (*slice, *count),
+            _ => (0, 1),
+        }
+    }
+
+    /// Rows hashed per band — the other half of the index geometry the
+    /// router's handshake must verify: two perm counts can derive the
+    /// same band count with different rows, which band count alone
+    /// would wave through (and then every probe would silently miss).
+    fn rows_per_band(&self) -> usize {
+        match self {
+            IndexBackend::Classic { preparer, .. } => preparer.lsh.rows_per_band,
+            IndexBackend::Concurrent(engine) => engine.index().config().lsh.rows_per_band,
+            IndexBackend::BandSharded(engine) => engine.rows_per_band(),
+            IndexBackend::Slice { index, .. } => index.config().lsh.rows_per_band,
+        }
+    }
+
+    /// Whether this backend serves the band-level ops a router fans out
+    /// (everything but the classic engine) — exposed in stats so a
+    /// router can reject a text-only backend at bind instead of failing
+    /// on the first routed request.
+    fn supports_band_ops(&self) -> bool {
+        !matches!(self, IndexBackend::Classic { .. })
+    }
+
     /// Query + optional insert for one document.
-    fn decide(&self, text: &str, insert: bool) -> bool {
+    fn decide(&self, text: &str, insert: bool) -> Result<bool, String> {
         let doc = Doc { id: 0, text: text.to_string() };
         match self {
             IndexBackend::Classic { preparer, decider } => {
@@ -66,19 +160,27 @@ impl IndexBackend {
                 let Prepared::Bands(ref bands) = prepared[0] else { unreachable!() };
                 let mut decider = decider.lock().unwrap();
                 if insert {
-                    decider.decide(&prepared[0])
+                    Ok(decider.decide(&prepared[0]))
                 } else {
                     use crate::index::BandIndex;
-                    decider.index().query(bands)
+                    Ok(decider.index().query(bands))
                 }
             }
             IndexBackend::Concurrent(engine) => {
                 if insert {
-                    engine.insert_one(&doc)
+                    Ok(engine.insert_one(&doc))
                 } else {
-                    engine.query_one(&doc)
+                    Ok(engine.query_one(&doc))
                 }
             }
+            IndexBackend::BandSharded(engine) => {
+                if insert {
+                    Ok(engine.insert_one(&doc))
+                } else {
+                    Ok(engine.query_one(&doc))
+                }
+            }
+            IndexBackend::Slice { .. } => Err(self.slice_rejects_text()),
         }
     }
 
@@ -86,13 +188,13 @@ impl IndexBackend {
     /// request, one response, N verdicts — amortizing the per-document
     /// syscall + JSON round trip the line protocol pays.
     ///
-    /// * Concurrent — [`ConcurrentEngine::submit`]: the batched fast
-    ///   path (pooled MinHash + lock-free probes), whose intra-batch
-    ///   reconcile also catches twins *within* the batch exactly.
+    /// * Concurrent / BandSharded — the batched fast path (pooled
+    ///   MinHash + lock-free probes) whose intra-batch reconcile also
+    ///   catches twins *within* the batch exactly.
     /// * Classic — MinHash the whole batch outside the lock
     ///   (`prepare_batch`), then decide every document under a single
     ///   lock acquisition instead of N.
-    fn decide_batch(&self, texts: &[&str]) -> Vec<bool> {
+    fn decide_batch(&self, texts: &[&str]) -> Result<Vec<bool>, String> {
         let docs: Vec<Doc> = texts
             .iter()
             .enumerate()
@@ -102,29 +204,92 @@ impl IndexBackend {
             IndexBackend::Classic { preparer, decider } => {
                 let prepared = preparer.prepare_batch(&docs);
                 let mut decider = decider.lock().unwrap();
-                prepared.iter().map(|p| decider.decide(p)).collect()
+                Ok(prepared.iter().map(|p| decider.decide(p)).collect())
             }
             IndexBackend::Concurrent(engine) => {
-                engine.submit(docs).into_iter().map(|d| d.duplicate).collect()
+                Ok(engine.submit(docs).into_iter().map(|d| d.duplicate).collect())
+            }
+            IndexBackend::BandSharded(engine) => {
+                Ok(engine.submit(docs).into_iter().map(|d| d.duplicate).collect())
+            }
+            IndexBackend::Slice { .. } => Err(self.slice_rejects_text()),
+        }
+    }
+
+    /// Band-level query + optional insert (`check_bands`): the document
+    /// was MinHashed once elsewhere (a router); this index contributes
+    /// the verdict of the bands it owns.
+    fn decide_bands(&self, bands: &[u64], insert: bool) -> Result<bool, String> {
+        match self {
+            IndexBackend::Classic { .. } => Err(Self::classic_rejects_bands()),
+            IndexBackend::Concurrent(engine) => {
+                if insert {
+                    Ok(engine.insert_bands(bands))
+                } else {
+                    Ok(engine.query_bands(bands))
+                }
+            }
+            IndexBackend::BandSharded(engine) => {
+                if insert {
+                    Ok(engine.insert_bands(bands))
+                } else {
+                    Ok(engine.query_bands(bands))
+                }
+            }
+            IndexBackend::Slice { index, .. } => {
+                if insert {
+                    Ok(index.insert_if_new(bands))
+                } else {
+                    Ok(index.query(bands))
+                }
             }
         }
+    }
+
+    /// Band-level batch (`check_bands_batch`): probe the whole batch
+    /// read-only against pre-batch state, then insert — returning the
+    /// *pre-batch* verdicts for the caller's intra-batch reconcile (see
+    /// [`crate::engine::reconcile_in_batch`]).
+    fn probe_insert_bands(&self, batch: &[Vec<u64>]) -> Result<Vec<bool>, String> {
+        match self {
+            IndexBackend::Classic { .. } => Err(Self::classic_rejects_bands()),
+            IndexBackend::Concurrent(engine) => Ok(engine.probe_insert_bands(batch)),
+            IndexBackend::BandSharded(engine) => Ok(engine.probe_insert_bands(batch)),
+            IndexBackend::Slice { index, .. } => Ok(index.probe_insert_batch(batch)),
+        }
+    }
+
+    fn slice_rejects_text(&self) -> String {
+        let (slice, count) = self.slice_layout();
+        format!(
+            "this server owns band slice {slice} of {count}; it accepts band-level \
+             ops ('check_bands', 'check_bands_batch') from a router — send text ops \
+             to a full server or a router"
+        )
+    }
+
+    fn classic_rejects_bands() -> String {
+        "band-level ops require a concurrent-family backend (--engine concurrent, \
+         --serve-shards, or --slice-index); the classic engine serves text ops only"
+            .to_string()
     }
 }
 
 struct Shared {
     backend: IndexBackend,
-    /// Durable state directory for a warm-startable concurrent backend
-    /// (`serve --state-dir`); the orderly-shutdown checkpoint targets it.
+    /// Durable state directory for a warm-startable concurrent or
+    /// band-sharded backend (`serve --state-dir`); the orderly-shutdown
+    /// checkpoint targets it. `None` for slice backends even when they
+    /// restored from a directory — slices are read-only views.
     state_dir: Option<std::path::PathBuf>,
     /// Footprint snapshot taken at bind, used when the number is
     /// genuinely static: the classic decider's backing size, or — for a
     /// durable server — the persisted on-disk bytes (band files plus
     /// manifest when warm-started). Bind-time is the right moment to
     /// measure the directory: rescanning per stats request would put
-    /// filesystem walks on the health-check path and transiently
-    /// double-count `.tmp` files while a checkpoint is mid-flight. The
-    /// footprint only changes again at the shutdown checkpoint, after
-    /// which no stats request can observe it.
+    /// filesystem walks on the health-check path while a checkpoint is
+    /// mid-flight. The footprint only changes again at the shutdown
+    /// checkpoint, after which no stats request can observe it.
     bind_disk_bytes: u64,
     /// Worker directories with completion manifests found under the
     /// state dir at bind — nonzero exactly when this server was pointed
@@ -133,6 +298,8 @@ struct Shared {
     /// index being served. Counted once at bind for the same reason as
     /// `bind_disk_bytes`: the worker set cannot change while we serve.
     shard_workers: u64,
+    /// Per-connection request-line cap.
+    max_line_bytes: usize,
     stats: ServerStats,
     shutdown: AtomicBool,
 }
@@ -140,7 +307,7 @@ struct Shared {
 impl Shared {
     /// Footprint reported by `{"op":"stats"}`: the bind-time snapshot
     /// for a durable or classic server, else recomputed lock-free from
-    /// the live engine (so a warm-started server reports its *restored*
+    /// the live backend (so a warm-started server reports its *restored*
     /// index, never a stale estimate of some other index).
     fn current_disk_bytes(&self) -> u64 {
         if self.state_dir.is_some() {
@@ -149,6 +316,8 @@ impl Shared {
         match &self.backend {
             IndexBackend::Classic { .. } => self.bind_disk_bytes,
             IndexBackend::Concurrent(engine) => engine.disk_bytes(),
+            IndexBackend::BandSharded(engine) => engine.disk_bytes(),
+            IndexBackend::Slice { index, .. } => index.disk_bytes(),
         }
     }
 }
@@ -166,7 +335,13 @@ fn count_shard_workers(dir: &std::path::Path) -> u64 {
         return 0;
     };
     let n = first.num_shards;
-    for shard in 0..n {
+    if first.shard != 0 || n == 0 {
+        return 0;
+    }
+    // Worker-000's manifest is already in hand (and checked above) —
+    // the layout sweep starts at shard 1 instead of loading and
+    // re-parsing the same file twice.
+    for shard in 1..n {
         match WorkerManifest::load(&dir.join(worker_dir_name(shard))) {
             Ok(m) if m.shard == shard && m.num_shards == n => {}
             _ => return 0,
@@ -176,17 +351,28 @@ fn count_shard_workers(dir: &std::path::Path) -> u64 {
 }
 
 /// Total size of the regular files directly inside `dir` (the persisted
-/// checkpoint footprint: band bit files + manifest).
+/// checkpoint footprint: band bit files + manifest). `*.tmp` entries are
+/// skipped: the atomic-publish idiom (write `<name>.tmp`, fsync, rename)
+/// can leave a stale temp behind after a torn checkpoint, and that
+/// garbage — overwritten by the next checkpoint, never restored from —
+/// would otherwise inflate the reported persisted footprint.
 fn dir_file_bytes(dir: &std::path::Path) -> Option<u64> {
     let mut total = 0u64;
     for entry in std::fs::read_dir(dir).ok()? {
         let entry = entry.ok()?;
+        if entry.file_name().to_str().is_some_and(|n| n.ends_with(".tmp")) {
+            continue;
+        }
         let md = entry.metadata().ok()?;
         if md.is_file() {
             total += md.len();
         }
     }
     Some(total)
+}
+
+fn invalid_input(msg: impl Into<String>) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidInput, msg.into())
 }
 
 /// A running deduplication service.
@@ -198,68 +384,149 @@ pub struct DedupServer {
 impl DedupServer {
     /// Bind to `addr` (e.g. "127.0.0.1:0" for an ephemeral port).
     pub fn bind(addr: &str, cfg: &PipelineConfig) -> std::io::Result<Self> {
-        Self::bind_with_state(addr, cfg, None)
+        Self::bind_with_opts(addr, cfg, &ServeOptions::default())
     }
 
     /// [`Self::bind`] with a durable state directory (`serve
-    /// --state-dir`, concurrent engine only): if `dir` holds a
-    /// checkpoint manifest the index (and its docs/duplicates counters)
-    /// is restored from it — warm start — otherwise fresh mmap-backed
-    /// filters are created there. Either way the files are the live
-    /// backing store, and an orderly shutdown writes a final checkpoint.
+    /// --state-dir`): if `dir` holds a checkpoint manifest the index
+    /// (and its docs/duplicates counters) is restored from it — warm
+    /// start — otherwise fresh state is created there. Either way an
+    /// orderly shutdown writes a final checkpoint.
     pub fn bind_with_state(
         addr: &str,
         cfg: &PipelineConfig,
         state_dir: Option<&std::path::Path>,
     ) -> std::io::Result<Self> {
+        let opts = ServeOptions {
+            state_dir: state_dir.map(|p| p.to_path_buf()),
+            ..ServeOptions::default()
+        };
+        Self::bind_with_opts(addr, cfg, &opts)
+    }
+
+    /// The fully general constructor: state directory, band-slice mode,
+    /// and the request-line cap (see [`ServeOptions`]). `cfg.serve_shards
+    /// > 1` selects the in-process band-sharded backend.
+    pub fn bind_with_opts(
+        addr: &str,
+        cfg: &PipelineConfig,
+        opts: &ServeOptions,
+    ) -> std::io::Result<Self> {
+        let state_dir = opts.state_dir.as_deref();
         let mut bind_disk_bytes = 0u64;
-        let backend = match (cfg.engine, state_dir) {
-            (EngineMode::Classic, Some(_)) => {
-                return Err(std::io::Error::new(
-                    std::io::ErrorKind::InvalidInput,
-                    "--state-dir requires the concurrent engine \
-                     (the classic index persists via LshBloomIndex::save_dir)",
-                ));
-            }
-            (EngineMode::Classic, None) => {
-                let preparer = BandPreparer::from_config(cfg);
-                let decider = decider_from_config(cfg, preparer.lsh);
-                bind_disk_bytes = decider.disk_bytes();
-                IndexBackend::Classic { preparer, decider: Mutex::new(decider) }
-            }
-            (EngineMode::Concurrent, None) => {
-                IndexBackend::Concurrent(ConcurrentEngine::from_config(cfg))
-            }
-            (EngineMode::Concurrent, Some(dir)) => {
-                let engine = if crate::persist::CheckpointManifest::exists(dir) {
-                    ConcurrentEngine::restore(cfg, dir, true)
-                } else {
-                    ConcurrentEngine::new_persistent(cfg, dir)
+        // Slice mode and classic+state-dir are rejected up front; the
+        // remaining combinations pick a backend below.
+        if opts.slice.is_some() && cfg.serve_shards > 1 {
+            return Err(invalid_input(
+                "--slice-index (one slice of a multi-host deployment) and \
+                 --serve-shards (all slices in this process) are mutually exclusive",
+            ));
+        }
+        let backend = if let Some((slice, count)) = opts.slice {
+            let index_cfg = slice_mode_config(cfg, slice, count)?;
+            let index = match state_dir {
+                Some(dir) => {
+                    if !crate::persist::CheckpointManifest::exists(dir) {
+                        return Err(invalid_input(format!(
+                            "slice server: no checkpoint manifest in {} (a lone slice \
+                             cannot create durable state; omit --state-dir for a fresh \
+                             in-memory slice, or point it at an existing checkpoint)",
+                            dir.display()
+                        )));
+                    }
+                    BandSliceIndex::restore(index_cfg, dir, slice, count).map_err(|e| {
+                        std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+                    })?
                 }
-                .map_err(|e| {
-                    std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
-                })?;
-                // Persisted footprint, measured once while no checkpoint
-                // can be in flight (band files exist from engine
-                // construction; the manifest too on a warm start).
+                None => BandSliceIndex::new(index_cfg, slice, count),
+            };
+            bind_disk_bytes = index.disk_bytes();
+            IndexBackend::Slice { index, slice, count }
+        } else if cfg.serve_shards > 1 {
+            let engine = match state_dir {
+                Some(dir) if crate::persist::CheckpointManifest::exists(dir) => {
+                    BandShardedEngine::restore(cfg, dir, cfg.serve_shards).map_err(|e| {
+                        std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+                    })?
+                }
+                _ => BandShardedEngine::from_config(cfg, cfg.serve_shards),
+            };
+            if cfg.serve_shards > engine.num_bands() {
+                return Err(invalid_input(format!(
+                    "--serve-shards {} exceeds the band count ({} bands at this \
+                     threshold/perms geometry); extra slices would own no bands",
+                    cfg.serve_shards,
+                    engine.num_bands()
+                )));
+            }
+            if let Some(dir) = state_dir {
                 bind_disk_bytes = dir_file_bytes(dir).unwrap_or_else(|| engine.disk_bytes());
-                IndexBackend::Concurrent(engine)
+            }
+            IndexBackend::BandSharded(engine)
+        } else {
+            match (cfg.engine, state_dir) {
+                (EngineMode::Classic, Some(_)) => {
+                    return Err(invalid_input(
+                        "--state-dir requires the concurrent engine \
+                         (the classic index persists via LshBloomIndex::save_dir)",
+                    ));
+                }
+                (EngineMode::Classic, None) => {
+                    let preparer = BandPreparer::from_config(cfg);
+                    let decider = decider_from_config(cfg, preparer.lsh);
+                    bind_disk_bytes = decider.disk_bytes();
+                    IndexBackend::Classic { preparer, decider: Mutex::new(decider) }
+                }
+                (EngineMode::Concurrent, None) => {
+                    IndexBackend::Concurrent(ConcurrentEngine::from_config(cfg))
+                }
+                (EngineMode::Concurrent, Some(dir)) => {
+                    let engine = if crate::persist::CheckpointManifest::exists(dir) {
+                        ConcurrentEngine::restore(cfg, dir, true)
+                    } else {
+                        ConcurrentEngine::new_persistent(cfg, dir)
+                    }
+                    .map_err(|e| {
+                        std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+                    })?;
+                    // Persisted footprint, measured once while no
+                    // checkpoint can be in flight (band files exist from
+                    // engine construction; the manifest too on a warm
+                    // start).
+                    bind_disk_bytes = dir_file_bytes(dir).unwrap_or_else(|| engine.disk_bytes());
+                    IndexBackend::Concurrent(engine)
+                }
             }
         };
         let stats = ServerStats::default();
-        if let IndexBackend::Concurrent(engine) = &backend {
-            // Seed the wire counters from the (possibly restored)
-            // engine so a warm-started server's stats continue where
-            // the previous process stopped.
-            let (docs, duplicates) = engine.stats();
+        // Seed the wire counters from the (possibly restored) backend so
+        // a warm-started server's stats continue where the previous
+        // process stopped. Slice backends start at zero: their counters
+        // mean "band ops served by this slice", not corpus history.
+        let seeded = match &backend {
+            IndexBackend::Concurrent(engine) => Some(engine.stats()),
+            IndexBackend::BandSharded(engine) => Some(engine.stats()),
+            _ => None,
+        };
+        if let Some((docs, duplicates)) = seeded {
             stats.docs.store(docs, Ordering::SeqCst);
             stats.duplicates.store(duplicates, Ordering::SeqCst);
         }
+        // Slice restores are read-only: keep state_dir out of Shared so
+        // the shutdown path cannot overwrite a full-index manifest with
+        // a partial one.
+        let owned_state_dir = if opts.slice.is_some() {
+            None
+        } else {
+            opts.state_dir.clone()
+        };
+        let shard_workers = owned_state_dir.as_deref().map(count_shard_workers).unwrap_or(0);
         let shared = Arc::new(Shared {
             backend,
-            state_dir: state_dir.map(|p| p.to_path_buf()),
+            state_dir: owned_state_dir,
             bind_disk_bytes,
-            shard_workers: state_dir.map(count_shard_workers).unwrap_or(0),
+            shard_workers,
+            max_line_bytes: opts.max_line_bytes,
             stats,
             shutdown: AtomicBool::new(false),
         });
@@ -275,7 +542,7 @@ impl DedupServer {
     /// Serve until a client sends `{"op":"shutdown"}`. Each connection
     /// gets a thread; MinHashing runs on the connection thread (parallel
     /// across clients). Index access serializes on the decider mutex in
-    /// classic mode and is lock-free in concurrent mode.
+    /// classic mode and is lock-free otherwise.
     pub fn serve(self) -> std::io::Result<()> {
         // Period polling of the shutdown flag via a nonblocking accept
         // loop keeps the implementation dependency-free.
@@ -309,11 +576,15 @@ impl DedupServer {
         }
         // Durable servers leave a complete checkpoint behind (manifest +
         // synced filters) so the next `--state-dir` bind warm-starts
-        // with exact counters.
-        if let (Some(dir), IndexBackend::Concurrent(engine)) =
-            (&self.shared.state_dir, &self.shared.backend)
-        {
-            if let Err(e) = engine.checkpoint(dir) {
+        // with exact counters. Slice backends never reach here with a
+        // state dir (it is cleared at bind — read-only restores).
+        if let Some(dir) = &self.shared.state_dir {
+            let result = match &self.shared.backend {
+                IndexBackend::Concurrent(engine) => Some(engine.checkpoint(dir)),
+                IndexBackend::BandSharded(engine) => Some(engine.checkpoint(dir)),
+                _ => None,
+            };
+            if let Some(Err(e)) = result {
                 crate::log_warn!("final checkpoint to {} failed: {e}", dir.display());
             }
         }
@@ -321,101 +592,86 @@ impl DedupServer {
     }
 }
 
-fn handle_conn(stream: TcpStream, shared: Arc<Shared>) {
-    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
-    // Poll the shutdown flag between reads so idle connections do not
-    // keep `serve()` joining forever after a shutdown request.
-    stream
-        .set_read_timeout(Some(std::time::Duration::from_millis(100)))
-        .ok();
-    let mut writer = match stream.try_clone() {
-        Ok(w) => w,
-        Err(_) => return,
-    };
-    let mut reader = BufReader::new(stream);
-    let mut line = String::new();
-    loop {
-        if shared.shutdown.load(Ordering::SeqCst) {
-            break;
-        }
-        // NB: on timeout, bytes read so far remain in `line`; the next
-        // read_line call appends, so partial lines are never dropped.
-        match reader.read_line(&mut line) {
-            Ok(0) => break, // EOF
-            Ok(_) => {}
-            Err(e)
-                if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut =>
-            {
-                continue;
-            }
-            Err(_) => break,
-        }
-        if line.trim().is_empty() {
-            line.clear();
-            continue;
-        }
-        let response = handle_request(&line, &shared);
-        line.clear();
-        let done = shared.shutdown.load(Ordering::SeqCst);
-        if writer
-            .write_all((response.to_json() + "\n").as_bytes())
-            .and_then(|_| writer.flush())
-            .is_err()
-        {
-            break;
-        }
-        if done {
-            break;
-        }
+/// Derive the full-index config for slice mode, validating the slice
+/// coordinates against the engine family and band geometry.
+fn slice_mode_config(
+    cfg: &PipelineConfig,
+    slice: usize,
+    count: usize,
+) -> std::io::Result<LshBloomConfig> {
+    if cfg.engine != EngineMode::Concurrent {
+        return Err(invalid_input(
+            "--slice-index requires --engine concurrent (band slices are atomic \
+             filters; the classic engine cannot host one)",
+        ));
     }
-    crate::log_debug!("connection {peer} closed");
+    if count == 0 || slice >= count {
+        return Err(invalid_input(format!(
+            "slice index {slice} out of range for slice count {count}"
+        )));
+    }
+    let lsh = crate::minhash::optimal_param(cfg.threshold, cfg.num_perms);
+    let index_cfg = LshBloomConfig::new(lsh, cfg.p_effective, cfg.expected_docs);
+    if count > index_cfg.lsh.num_bands {
+        return Err(invalid_input(format!(
+            "slice count {count} exceeds the band count ({} bands at this \
+             threshold/perms geometry); extra slices would own no bands",
+            index_cfg.lsh.num_bands
+        )));
+    }
+    Ok(index_cfg)
+}
+
+fn handle_conn(stream: TcpStream, shared: Arc<Shared>) {
+    // The bounded-read / overflow / shutdown-polling loop lives in
+    // `proto::serve_connection`, shared with the router listener. The
+    // server never asks to close after a reply (`false`).
+    super::proto::serve_connection(stream, &shared.shutdown, shared.max_line_bytes, |line| {
+        (handle_request(line, &shared), false)
+    });
 }
 
 fn handle_request(line: &str, shared: &Shared) -> Value {
     let req = match json::parse(line) {
         Ok(v) => v,
-        Err(e) => {
-            return obj(vec![
-                ("error", Value::str(format!("bad request json: {e}"))),
-            ])
-        }
+        Err(e) => return error_response(format!("bad request json: {e}")),
     };
     match req.get("op").and_then(|v| v.as_str()) {
         Some("check") | Some("query") => {
             let insert = req.get("op").and_then(|v| v.as_str()) == Some("check");
             let Some(text) = req.get("text").and_then(|v| v.as_str()) else {
-                return obj(vec![("error", Value::str("missing 'text'"))]);
+                return error_response("missing 'text'");
             };
-            let duplicate = shared.backend.decide(text, insert);
-            if insert {
-                let id = shared.stats.docs.fetch_add(1, Ordering::SeqCst);
-                if duplicate {
-                    shared.stats.duplicates.fetch_add(1, Ordering::SeqCst);
+            match shared.backend.decide(text, insert) {
+                Ok(duplicate) if insert => {
+                    let id = shared.stats.docs.fetch_add(1, Ordering::SeqCst);
+                    if duplicate {
+                        shared.stats.duplicates.fetch_add(1, Ordering::SeqCst);
+                    }
+                    obj(vec![
+                        ("duplicate", Value::Bool(duplicate)),
+                        ("id", Value::u64(id)),
+                    ])
                 }
-                obj(vec![
-                    ("duplicate", Value::Bool(duplicate)),
-                    ("id", Value::u64(id)),
-                ])
-            } else {
-                obj(vec![("duplicate", Value::Bool(duplicate))])
+                Ok(duplicate) => obj(vec![("duplicate", Value::Bool(duplicate))]),
+                Err(e) => error_response(e),
             }
         }
         Some("check_batch") => {
             let Some(texts_json) = req.get("texts").and_then(|v| v.as_arr()) else {
-                return obj(vec![("error", Value::str("missing 'texts' array"))]);
+                return error_response("missing 'texts' array");
             };
             let mut texts = Vec::with_capacity(texts_json.len());
             for (i, t) in texts_json.iter().enumerate() {
                 let Some(s) = t.as_str() else {
-                    return obj(vec![(
-                        "error",
-                        Value::str(format!("texts[{i}] is not a string")),
-                    )]);
+                    return error_response(format!("texts[{i}] is not a string"));
                 };
                 texts.push(s);
             }
-            let verdicts = shared.backend.decide_batch(&texts);
+            let verdicts = match shared.backend.decide_batch(&texts) {
+                Ok(v) => v,
+                Err(e) => return error_response(e),
+            };
             let first_id = shared.stats.docs.fetch_add(texts.len() as u64, Ordering::SeqCst);
             let dups = verdicts.iter().filter(|&&d| d).count() as u64;
             shared.stats.duplicates.fetch_add(dups, Ordering::SeqCst);
@@ -432,20 +688,76 @@ fn handle_request(line: &str, shared: &Shared) -> Value {
                 ),
             ])
         }
-        Some("stats") => obj(vec![
-            ("docs", Value::u64(shared.stats.docs.load(Ordering::SeqCst))),
-            (
-                "duplicates",
-                Value::u64(shared.stats.duplicates.load(Ordering::SeqCst)),
-            ),
-            ("disk_bytes", Value::u64(shared.current_disk_bytes())),
-            ("shard_workers", Value::u64(shared.shard_workers)),
-        ]),
+        Some("check_bands") => {
+            let Some(bands_json) = req.get("bands") else {
+                return error_response("missing 'bands' array");
+            };
+            let bands = match bands_from_json(bands_json, shared.backend.num_bands()) {
+                Ok(b) => b,
+                Err(e) => return error_response(format!("check_bands: {e}")),
+            };
+            let insert = req.get("insert").and_then(|v| v.as_bool()).unwrap_or(true);
+            match shared.backend.decide_bands(&bands, insert) {
+                Ok(duplicate) if insert => {
+                    let id = shared.stats.docs.fetch_add(1, Ordering::SeqCst);
+                    if duplicate {
+                        shared.stats.duplicates.fetch_add(1, Ordering::SeqCst);
+                    }
+                    obj(vec![
+                        ("duplicate", Value::Bool(duplicate)),
+                        ("id", Value::u64(id)),
+                    ])
+                }
+                Ok(duplicate) => obj(vec![("duplicate", Value::Bool(duplicate))]),
+                Err(e) => error_response(e),
+            }
+        }
+        Some("check_bands_batch") => {
+            let Some(batch_json) = req.get("bands_batch").and_then(|v| v.as_arr()) else {
+                return error_response("missing 'bands_batch' array");
+            };
+            let expect = shared.backend.num_bands();
+            let mut batch = Vec::with_capacity(batch_json.len());
+            for (i, doc) in batch_json.iter().enumerate() {
+                match bands_from_json(doc, expect) {
+                    Ok(b) => batch.push(b),
+                    Err(e) => return error_response(format!("check_bands_batch[{i}]: {e}")),
+                }
+            }
+            let pre = match shared.backend.probe_insert_bands(&batch) {
+                Ok(p) => p,
+                Err(e) => return error_response(e),
+            };
+            shared.stats.docs.fetch_add(batch.len() as u64, Ordering::SeqCst);
+            let dups = pre.iter().filter(|&&d| d).count() as u64;
+            shared.stats.duplicates.fetch_add(dups, Ordering::SeqCst);
+            obj(vec![(
+                "pre_duplicates",
+                Value::Arr(pre.into_iter().map(Value::Bool).collect()),
+            )])
+        }
+        Some("stats") => {
+            let (slice, count) = shared.backend.slice_layout();
+            obj(vec![
+                ("docs", Value::u64(shared.stats.docs.load(Ordering::SeqCst))),
+                (
+                    "duplicates",
+                    Value::u64(shared.stats.duplicates.load(Ordering::SeqCst)),
+                ),
+                ("disk_bytes", Value::u64(shared.current_disk_bytes())),
+                ("shard_workers", Value::u64(shared.shard_workers)),
+                ("num_bands", Value::u64(shared.backend.num_bands() as u64)),
+                ("rows_per_band", Value::u64(shared.backend.rows_per_band() as u64)),
+                ("band_ops", Value::Bool(shared.backend.supports_band_ops())),
+                ("slice_index", Value::u64(slice as u64)),
+                ("slice_count", Value::u64(count as u64)),
+            ])
+        }
         Some("shutdown") => {
             shared.shutdown.store(true, Ordering::SeqCst);
             obj(vec![("ok", Value::Bool(true))])
         }
-        Some(other) => obj(vec![("error", Value::str(format!("unknown op '{other}'")))]),
-        None => obj(vec![("error", Value::str("missing 'op'"))]),
+        Some(other) => error_response(format!("unknown op '{other}'")),
+        None => error_response("missing 'op'"),
     }
 }

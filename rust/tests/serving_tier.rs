@@ -1,0 +1,380 @@
+//! Integration tests for the band-partitioned serving tier and the
+//! service-protocol hardening.
+//!
+//! The load-bearing assertion is verdict parity: for one connection's
+//! interleaved `check`/`check_batch` traffic, `serve --serve-shards N`
+//! and a router over N loopback slice backends must produce verdict
+//! vectors byte-identical to a single concurrent-engine server. The
+//! rest covers the protocol edges: oversized request lines, server EOF
+//! mid-request, wrong band counts, slice servers rejecting text ops,
+//! a backend killed mid-stream, and slice-aware warm starts.
+
+use lshbloom::config::{EngineMode, PipelineConfig};
+use lshbloom::corpus::Doc;
+use lshbloom::service::{DedupClient, DedupRouter, DedupServer, RouterOptions, ServeOptions};
+
+fn base_cfg() -> PipelineConfig {
+    PipelineConfig {
+        num_perms: 64,
+        expected_docs: 10_000,
+        engine: EngineMode::Concurrent,
+        ..Default::default()
+    }
+}
+
+fn start_server(
+    cfg: PipelineConfig,
+    opts: ServeOptions,
+) -> (std::thread::JoinHandle<()>, String) {
+    let server = DedupServer::bind_with_opts("127.0.0.1:0", &cfg, &opts).expect("bind");
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.serve().expect("serve"));
+    (handle, addr)
+}
+
+/// Start `count` slice servers, one per contiguous band slice.
+fn start_fleet(
+    cfg: &PipelineConfig,
+    count: usize,
+    state_dir: Option<&std::path::Path>,
+) -> (Vec<std::thread::JoinHandle<()>>, Vec<String>) {
+    let mut handles = Vec::with_capacity(count);
+    let mut addrs = Vec::with_capacity(count);
+    for slice in 0..count {
+        let opts = ServeOptions {
+            state_dir: state_dir.map(|p| p.to_path_buf()),
+            slice: Some((slice, count)),
+            ..ServeOptions::default()
+        };
+        let (handle, addr) = start_server(cfg.clone(), opts);
+        handles.push(handle);
+        addrs.push(addr);
+    }
+    (handles, addrs)
+}
+
+fn start_router(
+    cfg: &PipelineConfig,
+    backends: Vec<String>,
+) -> (std::thread::JoinHandle<()>, String) {
+    let router = DedupRouter::bind("127.0.0.1:0", cfg, backends, &RouterOptions::default())
+        .expect("bind router");
+    let addr = router.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || router.serve().expect("route"));
+    (handle, addr)
+}
+
+fn shutdown(addr: &str) {
+    DedupClient::connect(addr).unwrap().shutdown().unwrap();
+}
+
+enum Op {
+    Check(String),
+    Batch(Vec<String>),
+}
+
+/// Deterministic interleaved traffic with exact twins inside batches,
+/// across batches, and across the single/batched ops.
+fn traffic() -> Vec<Op> {
+    let doc = |i: u64| format!("serving tier parity document number {}", i % 37);
+    let mut ops = Vec::new();
+    let mut i = 0u64;
+    while i < 200 {
+        match i % 5 {
+            0 | 3 => {
+                ops.push(Op::Check(doc(i)));
+                i += 1;
+            }
+            1 => {
+                let batch: Vec<String> = (0..7).map(|j| doc(i + j)).collect();
+                i += 7;
+                ops.push(Op::Batch(batch));
+            }
+            2 => {
+                // Batch with an in-batch twin (first element repeated):
+                // exercises the reconcile rule on every serving path.
+                let mut batch: Vec<String> = (0..5).map(|j| doc(i + j)).collect();
+                batch.push(doc(i));
+                i += 5;
+                ops.push(Op::Batch(batch));
+            }
+            _ => {
+                // Occasionally a fresh never-repeated document.
+                ops.push(Op::Check(format!("one-off document {i}")));
+                i += 1;
+            }
+        }
+    }
+    // An empty batch is a no-op on every path, not an error.
+    ops.push(Op::Batch(Vec::new()));
+    ops
+}
+
+/// Run the ops on one connection, collecting the flat verdict vector.
+fn drive(addr: &str, ops: &[Op]) -> Vec<bool> {
+    let mut client = DedupClient::connect(addr).unwrap();
+    let mut verdicts = Vec::new();
+    for op in ops {
+        match op {
+            Op::Check(text) => verdicts.push(client.check(text).unwrap()),
+            Op::Batch(texts) => {
+                let refs: Vec<&str> = texts.iter().map(|s| s.as_str()).collect();
+                verdicts.extend(client.check_batch(&refs).unwrap());
+            }
+        }
+    }
+    verdicts
+}
+
+#[test]
+fn serve_shards_and_router_match_single_engine_verdicts() {
+    let ops = traffic();
+
+    // Reference: a single concurrent-engine server.
+    let (handle, addr) = start_server(base_cfg(), ServeOptions::default());
+    let expected = drive(&addr, &ops);
+    let (ref_docs, ref_dups, _) = DedupClient::connect(&addr).unwrap().stats().unwrap();
+    shutdown(&addr);
+    handle.join().unwrap();
+    // The traffic must exercise both verdicts or parity proves nothing.
+    assert!(expected.iter().any(|&d| d) && expected.iter().any(|&d| !d));
+
+    for count in [2usize, 4] {
+        // In-process band shards: byte-identical verdict vector.
+        let cfg = PipelineConfig { serve_shards: count, ..base_cfg() };
+        let (handle, addr) = start_server(cfg, ServeOptions::default());
+        let got = drive(&addr, &ops);
+        assert_eq!(got, expected, "serve-shards={count}");
+        let (docs, dups, _) = DedupClient::connect(&addr).unwrap().stats().unwrap();
+        assert_eq!((docs, dups), (ref_docs, ref_dups), "serve-shards={count} counters");
+        shutdown(&addr);
+        handle.join().unwrap();
+
+        // Router over `count` loopback slice backends: byte-identical
+        // verdict vector again, and the router's counters match too.
+        let (backend_handles, backend_addrs) = start_fleet(&base_cfg(), count, None);
+        let (router_handle, router_addr) = start_router(&base_cfg(), backend_addrs.clone());
+        let got = drive(&router_addr, &ops);
+        assert_eq!(got, expected, "router count={count}");
+        let (docs, dups, disk) = DedupClient::connect(&router_addr).unwrap().stats().unwrap();
+        assert_eq!((docs, dups), (ref_docs, ref_dups), "router count={count} counters");
+        assert!(disk > 0, "router stats must aggregate backend disk bytes");
+        shutdown(&router_addr);
+        router_handle.join().unwrap();
+        for addr in &backend_addrs {
+            shutdown(addr);
+        }
+        for handle in backend_handles {
+            handle.join().unwrap();
+        }
+    }
+}
+
+#[test]
+fn router_surfaces_backend_failure_instead_of_wrong_verdicts() {
+    let cfg = base_cfg();
+    let (mut backend_handles, backend_addrs) = start_fleet(&cfg, 2, None);
+    let (router_handle, router_addr) = start_router(&cfg, backend_addrs.clone());
+    let mut client = DedupClient::connect(&router_addr).unwrap();
+    assert!(!client.check("healthy fan-out document").unwrap());
+    assert!(client.check("healthy fan-out document").unwrap());
+
+    // Kill backend 1 mid-stream and wait until its process-equivalent
+    // thread is fully gone.
+    shutdown(&backend_addrs[1]);
+    backend_handles.remove(1).join().unwrap();
+
+    // The next fan-out must fail fast with an error naming the backend
+    // — never a verdict computed from half the bands.
+    let err = client.check("document after the backend died").unwrap_err();
+    assert!(err.to_string().contains("backend"), "got: {err}");
+    // The router closed this connection (its fan-out state is torn).
+    assert!(client.check("next request on the torn stream").is_err());
+
+    // A fresh connection still fails (the backend is still dead), again
+    // with a backend-scoped error rather than a wrong verdict.
+    let mut fresh = DedupClient::connect(&router_addr).unwrap();
+    let err = fresh.check("fresh connection, dead backend").unwrap_err();
+    assert!(err.to_string().contains("backend"), "got: {err}");
+
+    shutdown(&router_addr);
+    router_handle.join().unwrap();
+    shutdown(&backend_addrs[0]);
+    for handle in backend_handles {
+        handle.join().unwrap();
+    }
+}
+
+#[test]
+fn oversized_request_line_gets_error_then_close() {
+    use std::io::{BufRead, BufReader, Write};
+    let opts = ServeOptions { max_line_bytes: 1024, ..ServeOptions::default() };
+    let (handle, addr) = start_server(base_cfg(), opts);
+
+    let mut stream = std::net::TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    // Stream bytes with no newline, well past the cap — the attack that
+    // would previously grow the server's line buffer without bound.
+    stream.write_all(&[b'a'; 8 * 1024]).unwrap();
+    stream.flush().unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    assert!(resp.contains("error") && resp.contains("byte cap"), "got: {resp}");
+    // After replying, the server closes (the stream is mid-line; no
+    // further framing is trustworthy).
+    resp.clear();
+    assert_eq!(reader.read_line(&mut resp).unwrap(), 0, "connection must close");
+
+    // The listener itself is unaffected.
+    let mut client = DedupClient::connect(&addr).unwrap();
+    assert!(!client.check("normal traffic still works").unwrap());
+    client.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+#[test]
+fn client_reports_server_eof_as_unexpected_eof() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = std::thread::spawn(move || {
+        // Read the request fully, then hang up without replying — a
+        // clean FIN mid-request.
+        let (stream, _) = listener.accept().unwrap();
+        let mut reader = std::io::BufReader::new(stream);
+        let mut line = String::new();
+        std::io::BufRead::read_line(&mut reader, &mut line).unwrap();
+    });
+    let mut client = DedupClient::connect(&addr).unwrap();
+    let err = client.check("the server hangs up before responding").unwrap_err();
+    assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof, "got: {err}");
+    assert!(err.to_string().contains("server closed connection"), "got: {err}");
+    server.join().unwrap();
+}
+
+#[test]
+fn check_bands_rejects_wrong_band_count_and_works_at_the_right_one() {
+    let (handle, addr) = start_server(base_cfg(), ServeOptions::default());
+    let mut client = DedupClient::connect(&addr).unwrap();
+
+    let err = client.check_bands(&[1, 2, 3]).unwrap_err();
+    assert!(err.to_string().contains("wrong band count"), "got: {err}");
+
+    // At the right band count the op inserts and detects like check.
+    let stats = client.stats_json().unwrap();
+    let bands_len = stats.get("num_bands").unwrap().as_usize().unwrap();
+    assert!(bands_len >= 4, "test geometry must have enough bands");
+    let bands: Vec<u64> = (0..bands_len as u64).map(|i| i * 7 + 3).collect();
+    assert!(!client.check_bands(&bands).unwrap());
+    assert!(client.check_bands(&bands).unwrap());
+
+    client.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+#[test]
+fn slice_server_rejects_text_ops_and_reports_its_layout() {
+    let opts = ServeOptions { slice: Some((1, 2)), ..ServeOptions::default() };
+    let (handle, addr) = start_server(base_cfg(), opts);
+    let mut client = DedupClient::connect(&addr).unwrap();
+
+    let err = client.check("text op against a lone slice").unwrap_err();
+    assert!(err.to_string().contains("band slice"), "got: {err}");
+    let err = client.check_batch(&["a", "b"]).unwrap_err();
+    assert!(err.to_string().contains("band slice"), "got: {err}");
+
+    let stats = client.stats_json().unwrap();
+    assert_eq!(stats.get("slice_index").unwrap().as_usize(), Some(1));
+    assert_eq!(stats.get("slice_count").unwrap().as_usize(), Some(2));
+
+    client.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+#[test]
+fn router_rejects_a_misconfigured_fleet() {
+    let cfg = base_cfg();
+    // Two backends that both claim slice 0 of 2: the handshake must
+    // fail fast instead of serving half-covered bands.
+    let opts = ServeOptions { slice: Some((0, 2)), ..ServeOptions::default() };
+    let (h1, a1) = start_server(cfg.clone(), opts.clone());
+    let (h2, a2) = start_server(cfg.clone(), opts);
+    let err = DedupRouter::bind(
+        "127.0.0.1:0",
+        &cfg,
+        vec![a1.clone(), a2.clone()],
+        &RouterOptions::default(),
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("already claimed"), "got: {err}");
+
+    // A fleet whose slice count disagrees with the backend list.
+    let err = DedupRouter::bind("127.0.0.1:0", &cfg, vec![a1.clone()], &RouterOptions::default())
+        .unwrap_err();
+    assert!(err.to_string().contains("slice count"), "got: {err}");
+
+    // A classic (text-only) backend is rejected at bind, not on the
+    // first routed request.
+    let classic = PipelineConfig { engine: EngineMode::Classic, ..base_cfg() };
+    let (h3, a3) = start_server(classic, ServeOptions::default());
+    let err = DedupRouter::bind("127.0.0.1:0", &cfg, vec![a3.clone()], &RouterOptions::default())
+        .unwrap_err();
+    assert!(err.to_string().contains("classic"), "got: {err}");
+
+    shutdown(&a1);
+    shutdown(&a2);
+    shutdown(&a3);
+    h1.join().unwrap();
+    h2.join().unwrap();
+    h3.join().unwrap();
+}
+
+#[test]
+fn sharded_and_router_serving_warm_start_from_one_checkpoint() {
+    let dir = std::env::temp_dir().join(format!("lshbloom-servewarm-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let cfg = base_cfg();
+
+    // Build corpus state with a single engine and checkpoint it — the
+    // same artifact a `dedup --checkpoint-dir` / `--distributed` run
+    // leaves at its state root.
+    let engine = lshbloom::engine::ConcurrentEngine::from_config(&cfg);
+    let docs: Vec<Doc> = (0..50)
+        .map(|i| Doc { id: i, text: format!("warm start corpus doc {i}") })
+        .collect();
+    engine.submit(docs.clone());
+    engine.checkpoint(&dir).unwrap();
+
+    // Band-sharded server slice-restores the checkpoint: every
+    // checkpointed document is recognized and counters resume.
+    let sharded_cfg = PipelineConfig { serve_shards: 2, ..cfg.clone() };
+    let opts = ServeOptions { state_dir: Some(dir.clone()), ..ServeOptions::default() };
+    let (handle, addr) = start_server(sharded_cfg, opts);
+    let mut client = DedupClient::connect(&addr).unwrap();
+    for doc in &docs {
+        assert!(client.query(&doc.text).unwrap(), "sharded server lost doc {}", doc.id);
+    }
+    assert!(!client.query("a document that was never ingested").unwrap());
+    let (docs_count, _, _) = client.stats().unwrap();
+    assert_eq!(docs_count, 50, "warm-started counters must resume");
+    client.shutdown().unwrap();
+    handle.join().unwrap();
+
+    // Router over two slice backends, each restoring its own band range
+    // from the same full-index checkpoint.
+    let (backend_handles, backend_addrs) = start_fleet(&cfg, 2, Some(dir.as_path()));
+    let (router_handle, router_addr) = start_router(&cfg, backend_addrs.clone());
+    let mut client = DedupClient::connect(&router_addr).unwrap();
+    for doc in &docs {
+        assert!(client.query(&doc.text).unwrap(), "router fleet lost doc {}", doc.id);
+    }
+    assert!(!client.query("a document that was never ingested").unwrap());
+    shutdown(&router_addr);
+    router_handle.join().unwrap();
+    for addr in &backend_addrs {
+        shutdown(addr);
+    }
+    for handle in backend_handles {
+        handle.join().unwrap();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
