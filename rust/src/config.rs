@@ -120,6 +120,12 @@ pub struct PipelineConfig {
     /// verdict-identical to a single engine. Requires the concurrent
     /// engine; ignored by `dedup` (ingest sharding is `shards`).
     pub serve_shards: usize,
+    /// `HOST:PORT` for the Prometheus metrics endpoint served by
+    /// `serve`/`route` (`--metrics-addr`, "" = disabled). Port 0 binds
+    /// an ephemeral port. The endpoint exposes the `crate::obs`
+    /// registry as text exposition at `/metrics` and JSON at
+    /// `/metrics.json`.
+    pub metrics_addr: String,
 }
 
 impl Default for PipelineConfig {
@@ -143,6 +149,7 @@ impl Default for PipelineConfig {
             checkpoint_dir: String::new(),
             checkpoint_every: 0,
             serve_shards: 1,
+            metrics_addr: String::new(),
         }
     }
 }
@@ -180,6 +187,16 @@ impl PipelineConfig {
                  atomic filters; add engine = concurrent / --engine concurrent)"
                     .into(),
             ));
+        }
+        if !self.metrics_addr.is_empty() && !self.metrics_addr.contains(':') {
+            // Bind errors would surface anyway, but "metrics endpoint
+            // never came up" is the kind of misconfiguration an operator
+            // only notices when the first scrape fails — reject the
+            // obviously port-less form up front.
+            return Err(Error::Config(format!(
+                "metrics_addr '{}' is not HOST:PORT",
+                self.metrics_addr
+            )));
         }
         if self.checkpoint_every > 0 && self.checkpoint_dir.is_empty() && !self.distributed {
             // Distributed runs are exempt: each worker checkpoints into
@@ -287,6 +304,7 @@ impl PipelineConfig {
                 "serve_shards" | "service.serve_shards" => {
                     self.serve_shards = v.parse().map_err(|_| bad("serve_shards"))?
                 }
+                "metrics_addr" | "service.metrics_addr" => self.metrics_addr = v.clone(),
                 other => return Err(Error::Config(format!("unknown config key '{other}'"))),
             }
         }
@@ -456,6 +474,20 @@ mod tests {
         assert!(cfg.validate().is_err());
         let mut cfg = PipelineConfig::default();
         assert!(cfg.apply(&parse_toml_subset("serve_shards = x").unwrap()).is_err());
+    }
+
+    #[test]
+    fn metrics_addr_key_applies_and_validates() {
+        let mut cfg = PipelineConfig::default();
+        assert!(cfg.metrics_addr.is_empty(), "metrics endpoint is off by default");
+        cfg.apply(&parse_toml_subset("[service]\nmetrics_addr = \"127.0.0.1:9400\"").unwrap())
+            .unwrap();
+        assert_eq!(cfg.metrics_addr, "127.0.0.1:9400");
+        cfg.validate().unwrap();
+        cfg.metrics_addr = "no-port-here".into();
+        assert!(cfg.validate().is_err(), "port-less metrics_addr rejected");
+        cfg.metrics_addr.clear();
+        cfg.validate().unwrap();
     }
 
     #[test]

@@ -271,6 +271,34 @@ impl AtomicBloomFilter {
         self.ones() as f64 / self.m as f64
     }
 
+    /// Fill ratio estimated from a strided popcount over at most
+    /// `max_words` words — the cheap variant the observability gauges
+    /// use so a refresh never walks a multi-GiB filter. Exact (falls
+    /// back to [`Self::fill_ratio`]) whenever the filter fits inside
+    /// the sample budget; otherwise an evenly strided sample, whose
+    /// error shrinks as `1/sqrt(64 · max_words)` for the
+    /// uniformly-spread bit patterns Bloom probes produce.
+    pub fn fill_ratio_sampled(&self, max_words: usize) -> f64 {
+        let words = self.bits.words();
+        let n = words.len();
+        if n == 0 || self.m == 0 {
+            return 0.0;
+        }
+        if n <= max_words.max(1) {
+            return self.fill_ratio();
+        }
+        let stride = n.div_ceil(max_words.max(1));
+        let mut set_bits = 0u64;
+        let mut sampled = 0u64;
+        let mut i = 0;
+        while i < n {
+            set_bits += words[i].load(Ordering::Relaxed).count_ones() as u64;
+            sampled += 1;
+            i += stride;
+        }
+        set_bits as f64 / (sampled * 64) as f64
+    }
+
     /// Elements inserted so far (across all threads).
     pub fn inserted(&self) -> u64 {
         self.inserted.load(Ordering::Relaxed)

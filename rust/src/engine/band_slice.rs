@@ -211,6 +211,15 @@ impl BandSliceIndex {
         &self.filters
     }
 
+    /// Publish fill-ratio / estimated-FP gauges for the owned bands
+    /// (global band numbering) plus `engine.fp_estimate` over this
+    /// slice's bands — a slice server's contribution to the fleet-wide
+    /// any-band FP estimate.
+    pub fn refresh_fill_gauges(&self) {
+        let miss = super::publish_band_fill_gauges(&self.filters, self.range.start);
+        crate::obs::global().gauge("engine.fp_estimate").set(1.0 - miss);
+    }
+
     fn owned<'a>(&self, band_hashes: &'a [u64]) -> &'a [u64] {
         assert_eq!(
             band_hashes.len(),
@@ -361,6 +370,8 @@ impl BandShardedEngine {
             duplicates,
             dir,
         )?;
+        // The checkpoint walked every filter — refresh fill gauges too.
+        self.refresh_fill_gauges();
         Ok(())
     }
 
@@ -387,6 +398,18 @@ impl BandShardedEngine {
     /// Index footprint in bytes (static: sized by capacity at build).
     pub fn disk_bytes(&self) -> u64 {
         self.slices.iter().map(|s| s.disk_bytes()).sum()
+    }
+
+    /// Publish fill-ratio / estimated-FP gauges for every band across
+    /// all slices, plus the whole-index any-band FP estimate
+    /// (`engine.fp_estimate`).
+    pub fn refresh_fill_gauges(&self) {
+        let mut miss_all = 1.0f64;
+        for slice in &self.slices {
+            miss_all *=
+                super::publish_band_fill_gauges(slice.filters(), slice.band_range().start);
+        }
+        crate::obs::global().gauge("engine.fp_estimate").set(1.0 - miss_all);
     }
 
     fn prepare_one(&self, doc: &Doc) -> Vec<u64> {

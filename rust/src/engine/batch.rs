@@ -200,6 +200,9 @@ impl ConcurrentEngine {
     pub fn checkpoint(&self, dir: &std::path::Path) -> crate::error::Result<()> {
         let (docs, duplicates) = self.stats();
         crate::persist::write_checkpoint(&self.index, docs, duplicates, dir)?;
+        // A checkpoint walks every filter anyway — refresh the fill /
+        // estimated-FP gauges while the state is quiescent.
+        self.index.refresh_fill_gauges();
         Ok(())
     }
 
@@ -271,6 +274,7 @@ impl ConcurrentEngine {
 
         // Phase 1: parallel prepare + read-only probe of the pre-batch
         // filter state, gathered back into submission order.
+        let phase1 = crate::obs::span("engine.submit.prepare_probe");
         let prepared: Vec<(Vec<u64>, bool)> = for_chunks_collect(self.workers, n, |range| {
             self.preparer
                 .prepare_batch(&docs[range])
@@ -284,6 +288,7 @@ impl ConcurrentEngine {
                 })
                 .collect()
         });
+        drop(phase1);
         debug_assert_eq!(prepared.len(), n);
 
         // Phase 2: sequential intra-batch reconcile. Catches twins the
@@ -293,7 +298,9 @@ impl ConcurrentEngine {
         // function, so batched verdicts cannot drift between serving
         // paths.
         let (bands_batch, pre): (Vec<Vec<u64>>, Vec<bool>) = prepared.into_iter().unzip();
+        let phase2 = crate::obs::span("engine.submit.reconcile");
         let verdicts = super::band_slice::reconcile_in_batch(&bands_batch, &pre);
+        drop(phase2);
         let decisions: Vec<Decision> = docs
             .iter()
             .zip(&verdicts)
@@ -305,11 +312,13 @@ impl ConcurrentEngine {
         // Verdicts were fixed by the reconcile pass, so the verdict-free
         // `set_shared` path applies: same bits, but bands whose bits are
         // already present cost plain loads, not contended fetch_ors.
+        let phase3 = crate::obs::span("engine.submit.insert");
         for_chunks(self.workers, n, |range| {
             for bands in &bands_batch[range] {
                 self.index.set_shared(bands);
             }
         });
+        drop(phase3);
 
         self.docs.fetch_add(n as u64, Ordering::Relaxed);
         self.duplicates.fetch_add(duplicates, Ordering::Relaxed);
@@ -366,14 +375,18 @@ impl ConcurrentEngine {
         if n == 0 {
             return Vec::new();
         }
+        let probe = crate::obs::span("engine.bands.probe");
         let pre: Vec<bool> = for_chunks_collect(self.workers, n, |range| {
             bands_batch[range].iter().map(|b| self.index.query(b)).collect()
         });
+        drop(probe);
+        let insert = crate::obs::span("engine.bands.insert");
         for_chunks(self.workers, n, |range| {
             for bands in &bands_batch[range] {
                 self.index.set_shared(bands);
             }
         });
+        drop(insert);
         self.docs.fetch_add(n as u64, Ordering::Relaxed);
         let dups = pre.iter().filter(|&&d| d).count() as u64;
         self.duplicates.fetch_add(dups, Ordering::Relaxed);

@@ -195,6 +195,16 @@ impl ConcurrentLshBloomIndex {
         self.filters.iter().map(|f| f.fill_ratio()).collect()
     }
 
+    /// Publish per-band fill-ratio / estimated-FP gauges plus the
+    /// any-band FP estimate (`engine.fp_estimate`) into the global
+    /// observability registry. Popcounts are strided
+    /// ([`AtomicBloomFilter::fill_ratio_sampled`]), so this is cheap
+    /// enough to run on every checkpoint and every metrics scrape.
+    pub fn refresh_fill_gauges(&self) {
+        let miss = super::publish_band_fill_gauges(&self.filters, 0);
+        crate::obs::global().gauge("engine.fp_estimate").set(1.0 - miss);
+    }
+
     /// Number of bands.
     pub fn num_bands(&self) -> usize {
         self.filters.len()

@@ -70,3 +70,30 @@ pub use atomic_bloom::AtomicBloomFilter;
 pub use band_slice::{reconcile_in_batch, slice_range, BandShardedEngine, BandSliceIndex};
 pub use batch::{ConcurrentEngine, Decision};
 pub use concurrent_index::ConcurrentLshBloomIndex;
+
+/// Strided popcount budget per filter for gauge refreshes: exact for
+/// every filter up to 512 KiB of bits, an even sample above — cheap
+/// enough to run on every checkpoint and every metrics scrape.
+const GAUGE_SAMPLE_WORDS: usize = 1 << 16;
+
+/// Publish per-band fill-ratio and estimated-FP gauges for `filters`
+/// (bands numbered globally from `band_offset`) into the global
+/// observability registry, returning `Π(1 − fp_band)` so callers can
+/// combine slices into the any-band false-positive estimate
+/// `1 − Π(1 − fill_i^k)` — the quantity the paper's sizing math bounds.
+pub(crate) fn publish_band_fill_gauges(
+    filters: &[AtomicBloomFilter],
+    band_offset: usize,
+) -> f64 {
+    let reg = crate::obs::global();
+    let mut miss_all = 1.0f64;
+    for (i, f) in filters.iter().enumerate() {
+        let band = band_offset + i;
+        let fill = f.fill_ratio_sampled(GAUGE_SAMPLE_WORDS);
+        let fp = fill.powi(f.params().hashes as i32);
+        reg.gauge(&format!("engine.band_fill_ratio{{band=\"{band}\"}}")).set(fill);
+        reg.gauge(&format!("engine.band_fp_estimate{{band=\"{band}\"}}")).set(fp);
+        miss_all *= 1.0 - fp;
+    }
+    miss_all
+}

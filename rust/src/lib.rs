@@ -37,6 +37,7 @@ pub mod json;
 pub mod logging;
 pub mod methods;
 pub mod minhash;
+pub mod obs;
 pub mod perf;
 pub mod persist;
 pub mod pipeline;

@@ -81,17 +81,31 @@ macro_rules! log_info { ($($t:tt)*) => { $crate::logging::emit($crate::logging::
 /// Log at debug level.
 #[macro_export]
 macro_rules! log_debug { ($($t:tt)*) => { $crate::logging::emit($crate::logging::Level::Debug, format_args!($($t)*)) } }
+/// Log at trace level (span timings, per-request detail).
+#[macro_export]
+macro_rules! log_trace { ($($t:tt)*) => { $crate::logging::emit($crate::logging::Level::Trace, format_args!($($t)*)) } }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    // One test mutates the global level (tests run concurrently), so
+    // all gating assertions live here.
     #[test]
     fn level_gating() {
         set_level(Level::Warn);
         assert!(enabled(Level::Error));
         assert!(enabled(Level::Warn));
         assert!(!enabled(Level::Info));
+        // Trace is gated off at every default-ish level…
+        assert!(!enabled(Level::Trace));
+        set_level(Level::Debug);
+        assert!(!enabled(Level::Trace));
+        // …and on only at Trace itself, where the macro emits.
+        set_level(Level::Trace);
+        assert!(enabled(Level::Trace));
+        crate::log_trace!("trace macro is exported and callable: {}", 42);
         set_level(Level::Info);
+        assert!(!enabled(Level::Trace));
     }
 }

@@ -148,6 +148,12 @@ fn cmd_dedup(rest: Vec<String>) -> CliResult {
             "resume",
             "restore from the checkpoint in --checkpoint-dir and skip the documents it covers",
         ))
+        .arg(ArgSpec::opt(
+            "metrics-out",
+            "write periodic JSONL snapshots of the metrics registry (submit-phase \
+             walls, checkpoint walls, fill gauges) to this file — one line per \
+             second plus a final one, for offline perf trajectories",
+        ).default(""))
         .arg(ArgSpec::switch("shm", "host bloom filters in /dev/shm (classic engine)"))
         .arg(ArgSpec::switch("report-fidelity", "score against duplicate_of labels if present"));
     let args = parse(cmd, rest)?;
@@ -178,6 +184,17 @@ fn cmd_dedup(rest: Vec<String>) -> CliResult {
 
     let kind = MethodKind::parse(args.get("method"))
         .ok_or_else(|| format!("unknown method '{}'", args.get("method")))?;
+
+    // `--metrics-out`: a ticker thread snapshots the registry once per
+    // second while the run is in flight; the error paths below just let
+    // the process exit (a partial JSONL is still a valid trajectory).
+    let metrics_out = Some(args.get("metrics-out").to_string()).filter(|s| !s.is_empty());
+    let metrics_stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let metrics_ticker = metrics_out.map(|path| {
+        lshbloom::obs::init();
+        let stop = std::sync::Arc::clone(&metrics_stop);
+        std::thread::spawn(move || metrics_snapshot_loop(PathBuf::from(path), stop))
+    });
 
     let checkpoint_dir = Some(&cfg.checkpoint_dir)
         .filter(|s| !s.is_empty())
@@ -442,7 +459,47 @@ fn cmd_dedup(rest: Vec<String>) -> CliResult {
     if let Some(dir) = args.get_opt("save-index").filter(|s| !s.is_empty()) {
         save_index_note(Path::new(dir))?;
     }
+    if let Some(handle) = metrics_ticker {
+        metrics_stop.store(true, std::sync::atomic::Ordering::SeqCst);
+        let _ = handle.join();
+    }
     Ok(())
+}
+
+/// `dedup --metrics-out`: one JSONL registry snapshot per second, plus
+/// a final one once the stop flag rises — offline runs get the same
+/// telemetry a served fleet exposes over HTTP.
+fn metrics_snapshot_loop(path: PathBuf, stop: std::sync::Arc<std::sync::atomic::AtomicBool>) {
+    use std::io::Write;
+    use std::sync::atomic::Ordering;
+    let file = match std::fs::File::create(&path) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("--metrics-out {}: {e}", path.display());
+            return;
+        }
+    };
+    let mut w = std::io::BufWriter::new(file);
+    let mut seq = 0u64;
+    loop {
+        let finished = stop.load(Ordering::SeqCst);
+        let line = lshbloom::obs::global().snapshot_line(seq);
+        if writeln!(w, "{line}").and_then(|_| w.flush()).is_err() {
+            return;
+        }
+        seq += 1;
+        if finished {
+            return;
+        }
+        // 1 s cadence, polled in 50 ms steps so the final snapshot
+        // lands promptly after the run finishes.
+        for _ in 0..20 {
+            if stop.load(Ordering::SeqCst) {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        }
+    }
 }
 
 fn build_method(
@@ -749,6 +806,11 @@ fn cmd_serve(rest: Vec<String>) -> CliResult {
              present, else create state there; checkpointed on shutdown. Band-sharded \
              servers slice-restore from it; slice servers treat it as read-only",
         ).default(""))
+        .arg(ArgSpec::opt(
+            "metrics-addr",
+            "HOST:PORT for a Prometheus metrics endpoint (GET /metrics for text \
+             exposition, /metrics.json for JSON; port 0 = ephemeral; empty = off)",
+        ).default(""))
         .arg(ArgSpec::switch("shm", "host bloom filters in /dev/shm (classic engine)"))
         .arg(ArgSpec::switch("blocked", "use blocked bloom filters (classic engine)"));
     let args = parse(cmd, rest)?;
@@ -762,6 +824,7 @@ fn cmd_serve(rest: Vec<String>) -> CliResult {
         engine: EngineMode::parse(args.get("engine"))?,
         checkpoint_dir: args.get("state-dir").to_string(),
         serve_shards: args.get_usize("serve-shards"),
+        metrics_addr: args.get("metrics-addr").to_string(),
         ..Default::default()
     };
     // Catches --state-dir / --serve-shards without --engine concurrent,
@@ -796,6 +859,7 @@ fn cmd_serve(rest: Vec<String>) -> CliResult {
         state_dir,
         slice,
         max_line_bytes: args.get_usize("max-line-bytes"),
+        metrics_addr: Some(&cfg.metrics_addr).filter(|s| !s.is_empty()).cloned(),
     };
     let server = lshbloom::service::DedupServer::bind_with_opts(args.get("addr"), &cfg, &opts)?;
     let mode = match slice {
@@ -812,6 +876,9 @@ fn cmd_serve(rest: Vec<String>) -> CliResult {
             (None, _) => String::new(),
         },
     );
+    if let Some(maddr) = server.metrics_addr() {
+        println!("metrics: http://{maddr}/metrics (Prometheus text) and /metrics.json");
+    }
     server.serve()?;
     Ok(())
 }
@@ -835,16 +902,42 @@ fn cmd_route(rest: Vec<String>) -> CliResult {
         .arg(ArgSpec::opt(
             "max-line-bytes",
             "per-connection request-line cap in bytes",
-        ).default("16777216"));
+        ).default("16777216"))
+        .arg(ArgSpec::opt(
+            "backend-connect-timeout",
+            "seconds to wait for a backend to accept a connection before treating \
+             it as down (fractions allowed)",
+        ).default("5"))
+        .arg(ArgSpec::opt(
+            "backend-read-timeout",
+            "seconds to wait for one backend reply before failing fast (fractions \
+             allowed)",
+        ).default("30"))
+        .arg(ArgSpec::opt(
+            "metrics-addr",
+            "HOST:PORT for a Prometheus metrics endpoint (GET /metrics for text \
+             exposition, /metrics.json for JSON; port 0 = ephemeral; empty = off)",
+        ).default(""));
     let args = parse(cmd, rest)?;
     let cfg = PipelineConfig {
         threshold: args.get_f64("threshold"),
         num_perms: args.get_usize("perms"),
         p_effective: args.get_f64("p-effective"),
         expected_docs: args.get_u64("expected-docs"),
+        metrics_addr: args.get("metrics-addr").to_string(),
         ..Default::default()
     };
     cfg.validate()?;
+    let connect_timeout = args.get_f64("backend-connect-timeout");
+    let read_timeout = args.get_f64("backend-read-timeout");
+    for (flag, v) in [
+        ("backend-connect-timeout", connect_timeout),
+        ("backend-read-timeout", read_timeout),
+    ] {
+        if !v.is_finite() || v <= 0.0 {
+            return Err(format!("--{flag} must be a positive number of seconds (got {v})").into());
+        }
+    }
     let backends: Vec<String> = args
         .get("backends")
         .split(',')
@@ -853,15 +946,24 @@ fn cmd_route(rest: Vec<String>) -> CliResult {
         .collect();
     let opts = lshbloom::service::RouterOptions {
         max_line_bytes: args.get_usize("max-line-bytes"),
+        connect_timeout: std::time::Duration::from_secs_f64(connect_timeout),
+        read_timeout: std::time::Duration::from_secs_f64(read_timeout),
+        metrics_addr: Some(&cfg.metrics_addr).filter(|s| !s.is_empty()).cloned(),
     };
     let router =
         lshbloom::service::DedupRouter::bind(args.get("addr"), &cfg, backends, &opts)?;
     println!(
         "lshbloom dedup router listening on {} ({} backends, one MinHash per request, \
-         OR-reduced verdicts; send {{\"op\":\"shutdown\"}} to stop)",
+         OR-reduced verdicts; backend timeouts: connect {:.3}s, read {:.3}s; send \
+         {{\"op\":\"shutdown\"}} to stop)",
         router.local_addr()?,
         router.num_backends(),
+        opts.connect_timeout.as_secs_f64(),
+        opts.read_timeout.as_secs_f64(),
     );
+    if let Some(maddr) = router.metrics_addr() {
+        println!("metrics: http://{maddr}/metrics (Prometheus text) and /metrics.json");
+    }
     router.serve()?;
     Ok(())
 }

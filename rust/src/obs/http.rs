@@ -1,0 +1,220 @@
+//! The `--metrics-addr` endpoint: a minimal hand-rolled HTTP/1.1
+//! responder serving the global registry.
+//!
+//! Std-only, same discipline as the line protocol in
+//! `service/proto.rs`: no HTTP library, bounded reads, one response
+//! per connection (`Connection: close`). Routes:
+//!
+//! * `GET /metrics` (or `/`) — Prometheus text exposition 0.0.4
+//! * `GET /metrics.json` — the registry as JSON (same shape as the
+//!   `{"op":"metrics"}` wire op)
+//!
+//! Scrapes are cheap (atomic loads + one string render), so requests
+//! are handled inline on the listener thread — a scrape endpoint does
+//! not need a connection pool.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Largest request head (request line + headers) accepted before the
+/// connection is dropped — a scrape request is a few hundred bytes.
+const MAX_REQUEST_BYTES: usize = 8 * 1024;
+
+/// Hook run before rendering a scrape so on-demand gauges (per-band
+/// fill ratios, estimated FP) reflect the current filter state.
+pub type RefreshHook = Box<dyn Fn() + Send + Sync>;
+
+/// A running metrics HTTP listener (see module docs).
+pub struct MetricsHttp {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for MetricsHttp {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MetricsHttp").field("addr", &self.addr).finish()
+    }
+}
+
+impl MetricsHttp {
+    /// Bind `addr` (`HOST:PORT`, port 0 for ephemeral) and start the
+    /// listener thread. `refresh` (if any) runs before every scrape.
+    pub fn bind(addr: &str, refresh: Option<RefreshHook>) -> std::io::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let flag = shutdown.clone();
+        let handle = std::thread::Builder::new()
+            .name("metrics-http".to_string())
+            .spawn(move || listen_loop(listener, flag, refresh))
+            .expect("spawn metrics-http thread");
+        crate::log_info!("metrics endpoint listening on http://{local}/metrics");
+        Ok(Self { addr: local, shutdown, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves port 0 to the ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the listener thread and wait for it to exit.
+    pub fn stop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsHttp {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn listen_loop(listener: TcpListener, shutdown: Arc<AtomicBool>, refresh: Option<RefreshHook>) {
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => handle_scrape(stream, refresh.as_deref()),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            Err(e) => {
+                crate::log_warn!("metrics listener accept error: {e}");
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        }
+    }
+}
+
+/// Read the request head (bounded), pick a route, write one response.
+fn handle_scrape(mut stream: TcpStream, refresh: Option<&(dyn Fn() + Send + Sync)>) {
+    stream.set_read_timeout(Some(Duration::from_secs(2))).ok();
+    stream.set_write_timeout(Some(Duration::from_secs(10))).ok();
+    let mut head = Vec::new();
+    let mut buf = [0u8; 1024];
+    let complete = loop {
+        match stream.read(&mut buf) {
+            Ok(0) => break false,
+            Ok(n) => {
+                head.extend_from_slice(&buf[..n]);
+                if head.windows(4).any(|w| w == b"\r\n\r\n") || head.windows(2).any(|w| w == b"\n\n")
+                {
+                    break true;
+                }
+                if head.len() > MAX_REQUEST_BYTES {
+                    break false;
+                }
+            }
+            Err(_) => break false,
+        }
+    };
+    if !complete {
+        return;
+    }
+    let request_line = std::str::from_utf8(&head)
+        .ok()
+        .and_then(|s| s.lines().next())
+        .unwrap_or("")
+        .to_string();
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    let (status, content_type, body) = if method != "GET" {
+        ("405 Method Not Allowed", "text/plain; charset=utf-8", "method not allowed\n".to_string())
+    } else {
+        match path {
+            "/metrics" | "/" => {
+                if let Some(r) = refresh {
+                    r();
+                }
+                (
+                    "200 OK",
+                    "text/plain; version=0.0.4; charset=utf-8",
+                    super::global().to_prometheus(),
+                )
+            }
+            "/metrics.json" => {
+                if let Some(r) = refresh {
+                    r();
+                }
+                ("200 OK", "application/json", super::global().to_json().to_json() + "\n")
+            }
+            _ => ("404 Not Found", "text/plain; charset=utf-8", "not found\n".to_string()),
+        }
+    };
+    let response = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let _ = stream.write_all(response.as_bytes());
+    let _ = stream.flush();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufRead, BufReader};
+
+    fn http_get(addr: SocketAddr, path: &str) -> (String, String) {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream
+            .write_all(format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").as_bytes())
+            .unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut status = String::new();
+        reader.read_line(&mut status).unwrap();
+        let mut line = String::new();
+        loop {
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            if line.trim().is_empty() {
+                break;
+            }
+        }
+        let mut body = String::new();
+        reader.read_to_string(&mut body).unwrap();
+        (status.trim().to_string(), body)
+    }
+
+    #[test]
+    fn scrape_routes_and_refresh_hook() {
+        let hits = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let h = hits.clone();
+        let refresh: RefreshHook = Box::new(move || {
+            h.fetch_add(1, Ordering::SeqCst);
+        });
+        crate::obs::global().counter("obs.http_test.total").add(9);
+        let mut server = MetricsHttp::bind("127.0.0.1:0", Some(refresh)).unwrap();
+        let addr = server.local_addr();
+
+        let (status, body) = http_get(addr, "/metrics");
+        assert!(status.contains("200"), "{status}");
+        assert!(body.contains("lshbloom_obs_http_test_total 9"), "{body}");
+
+        let (status, body) = http_get(addr, "/metrics.json");
+        assert!(status.contains("200"), "{status}");
+        let parsed = crate::json::parse(body.trim()).unwrap();
+        assert_eq!(
+            parsed
+                .get("counters")
+                .and_then(|c| c.get("obs.http_test.total"))
+                .and_then(|v| v.as_u64()),
+            Some(9)
+        );
+
+        let (status, _) = http_get(addr, "/nope");
+        assert!(status.contains("404"), "{status}");
+        assert_eq!(hits.load(Ordering::SeqCst), 2, "refresh runs per scrape, not per 404");
+
+        server.stop();
+    }
+}

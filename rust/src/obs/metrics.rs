@@ -1,0 +1,338 @@
+//! Lock-free metric primitives: counters, gauges, and log-scale
+//! latency histograms.
+//!
+//! Everything here is a thin shell over `AtomicU64` so the hot paths
+//! (engine submit, per-request serving) can record without taking a
+//! lock. Histograms use a fixed log-linear bucket layout (4 sub-buckets
+//! per power of two, ≤ 25 % relative width) so two histograms recorded
+//! on different threads — or different processes, once serialized —
+//! merge *exactly*: merging is element-wise bucket addition, never an
+//! approximation.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A monotonically increasing event count.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// New counter at zero.
+    pub fn new() -> Self {
+        Self(AtomicU64::new(0))
+    }
+
+    /// Add one.
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n`.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-write-wins instantaneous value (fill ratio, in-flight
+/// requests, estimated FP rate). Stored as `f64` bits in an atomic so
+/// readers never see a torn value.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    /// New gauge at zero.
+    pub fn new() -> Self {
+        Self(AtomicU64::new(0f64.to_bits()))
+    }
+
+    /// Overwrite the value.
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Add `delta` (may be negative — used for in-flight tracking).
+    #[inline]
+    pub fn add(&self, delta: f64) {
+        let _ = self
+            .0
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |bits| {
+                Some((f64::from_bits(bits) + delta).to_bits())
+            });
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Sub-bucket resolution: each power of two is split into
+/// `2^SUB_BITS = 4` linear sub-buckets, bounding the relative error of
+/// any reconstructed quantile at `1/4 = 25 %` (in practice ~12 % at the
+/// bucket midpoint).
+const SUB_BITS: u32 = 2;
+const SUBS: usize = 1 << SUB_BITS; // 4
+
+/// Number of buckets needed to cover the full `u64` range of
+/// nanosecond values: 4 small linear buckets (values 0–3) plus 4
+/// sub-buckets for each of the 62 remaining octaves.
+pub const NUM_BUCKETS: usize = SUBS + (63 - SUB_BITS as usize + 1) * SUBS; // 252
+
+/// Map a recorded value (nanoseconds) to its bucket index.
+#[inline]
+fn bucket_index(v: u64) -> usize {
+    if v < SUBS as u64 {
+        return v as usize;
+    }
+    let exp = 63 - v.leading_zeros();
+    let sub = ((v >> (exp - SUB_BITS)) & (SUBS as u64 - 1)) as usize;
+    (exp as usize - 1) * SUBS + sub
+}
+
+/// Inclusive lower bound of bucket `i` in nanoseconds.
+pub fn bucket_floor(i: usize) -> u64 {
+    if i < SUBS {
+        return i as u64;
+    }
+    let exp = (i / SUBS + 1) as u32;
+    let sub = (i % SUBS) as u64;
+    (1u64 << exp) + (sub << (exp - SUB_BITS))
+}
+
+/// Exclusive upper bound of bucket `i` in nanoseconds (`u64::MAX` for
+/// the last bucket).
+pub fn bucket_ceil(i: usize) -> u64 {
+    if i + 1 >= NUM_BUCKETS {
+        u64::MAX
+    } else {
+        bucket_floor(i + 1)
+    }
+}
+
+/// A fixed-bucket log-scale latency histogram.
+///
+/// Values are recorded in integer nanoseconds. The bucket layout is
+/// identical for every histogram in the process (and across processes
+/// of the same build), so [`Histogram::merge_from`] is exact: bucket
+/// counts simply add. Quantiles are reconstructed by walking the
+/// cumulative distribution and linearly interpolating inside the
+/// target bucket; the log-linear layout bounds the relative error at
+/// 25 %.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; NUM_BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// New empty histogram.
+    pub fn new() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one value (nanoseconds).
+    #[inline]
+    pub fn record(&self, ns: u64) {
+        self.buckets[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Record a [`std::time::Duration`].
+    #[inline]
+    pub fn record_duration(&self, d: std::time::Duration) {
+        self.record(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// Total number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all recorded values in nanoseconds.
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns.load(Ordering::Relaxed)
+    }
+
+    /// Raw bucket counts (index `i` covers
+    /// `[bucket_floor(i), bucket_ceil(i))` nanoseconds).
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Fold another histogram into this one. Exact: the bucket layout
+    /// is shared, so counts add with no re-binning error.
+    pub fn merge_from(&self, other: &Histogram) {
+        for (mine, theirs) in self.buckets.iter().zip(other.buckets.iter()) {
+            let n = theirs.load(Ordering::Relaxed);
+            if n > 0 {
+                mine.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count(), Ordering::Relaxed);
+        self.sum_ns.fetch_add(other.sum_ns(), Ordering::Relaxed);
+    }
+
+    /// Reconstruct the `q`-quantile (`0.0 < q <= 1.0`) in nanoseconds.
+    /// Returns 0 for an empty histogram. Linear interpolation inside
+    /// the target bucket; error bounded by the 25 % bucket width.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        let counts = self.bucket_counts();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if cum + c >= rank {
+                let lo = bucket_floor(i) as f64;
+                let hi = bucket_ceil(i) as f64;
+                let within = (rank - cum) as f64 / c as f64;
+                return (lo + (hi - lo) * within) as u64;
+            }
+            cum += c;
+        }
+        bucket_ceil(NUM_BUCKETS - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_contiguous_and_monotone() {
+        // Every value maps into a bucket whose [floor, ceil) contains it,
+        // and floors strictly increase.
+        let probes = [
+            0u64,
+            1,
+            2,
+            3,
+            4,
+            5,
+            7,
+            8,
+            9,
+            15,
+            16,
+            17,
+            1_000,
+            1_000_000,
+            1_000_000_000,
+            u64::MAX / 2,
+            u64::MAX,
+        ];
+        for &v in &probes {
+            let i = bucket_index(v);
+            assert!(bucket_floor(i) <= v, "floor({i}) <= {v}");
+            assert!(v <= bucket_ceil(i) - (i + 1 != NUM_BUCKETS) as u64, "{v} < ceil({i})");
+        }
+        for i in 1..NUM_BUCKETS {
+            assert!(bucket_floor(i) > bucket_floor(i - 1), "floors monotone at {i}");
+            assert_eq!(bucket_ceil(i - 1), bucket_floor(i), "contiguous at {i}");
+        }
+        assert_eq!(bucket_index(u64::MAX), NUM_BUCKETS - 1);
+    }
+
+    #[test]
+    fn quantiles_of_known_distribution() {
+        // Uniform 1..=100_000 ns: p50 ≈ 50_000, p99 ≈ 99_000. The
+        // log-linear layout bounds the error at 25 %.
+        let h = Histogram::new();
+        for v in 1..=100_000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 100_000);
+        let p50 = h.quantile_ns(0.50) as f64;
+        let p99 = h.quantile_ns(0.99) as f64;
+        assert!((p50 - 50_000.0).abs() / 50_000.0 < 0.25, "p50={p50}");
+        assert!((p99 - 99_000.0).abs() / 99_000.0 < 0.25, "p99={p99}");
+        // Quantiles are monotone in q.
+        assert!(h.quantile_ns(0.99) >= h.quantile_ns(0.90));
+        assert!(h.quantile_ns(0.90) >= h.quantile_ns(0.50));
+    }
+
+    #[test]
+    fn zero_sample_edge_cases() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.sum_ns(), 0);
+        assert_eq!(h.quantile_ns(0.5), 0);
+        assert_eq!(h.quantile_ns(0.99), 0);
+        // A single zero-valued sample lands in bucket 0.
+        h.record(0);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.quantile_ns(0.5), 0);
+    }
+
+    #[test]
+    fn cross_thread_merge_is_exact() {
+        // Two threads record disjoint halves into private histograms;
+        // the merged histogram is bucket-identical to one that saw
+        // every sample.
+        let a = std::sync::Arc::new(Histogram::new());
+        let b = std::sync::Arc::new(Histogram::new());
+        let whole = Histogram::new();
+        for v in 1..=10_000u64 {
+            whole.record(v * 37);
+        }
+        let (a2, b2) = (a.clone(), b.clone());
+        let ta = std::thread::spawn(move || {
+            for v in 1..=5_000u64 {
+                a2.record(v * 37);
+            }
+        });
+        let tb = std::thread::spawn(move || {
+            for v in 5_001..=10_000u64 {
+                b2.record(v * 37);
+            }
+        });
+        ta.join().unwrap();
+        tb.join().unwrap();
+        let merged = Histogram::new();
+        merged.merge_from(&a);
+        merged.merge_from(&b);
+        assert_eq!(merged.count(), whole.count());
+        assert_eq!(merged.sum_ns(), whole.sum_ns());
+        assert_eq!(merged.bucket_counts(), whole.bucket_counts());
+        assert_eq!(merged.quantile_ns(0.5), whole.quantile_ns(0.5));
+        assert_eq!(merged.quantile_ns(0.99), whole.quantile_ns(0.99));
+    }
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        g.set(0.75);
+        assert!((g.get() - 0.75).abs() < 1e-12);
+        g.add(1.0);
+        g.add(-0.5);
+        assert!((g.get() - 1.25).abs() < 1e-12);
+    }
+}

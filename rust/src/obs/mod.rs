@@ -1,0 +1,131 @@
+//! Fleet-wide observability: lock-free metrics and span timing.
+//!
+//! The paper's claims are quantitative — false-positive rate as a
+//! function of Bloom-filter fill (§ sizing analysis) and order-of-
+//! magnitude runtime wins — so the running system has to be able to
+//! report both. This module is the shared substrate every tier records
+//! into:
+//!
+//! * [`metrics`] — atomic [`Counter`]s, [`Gauge`]s, and fixed-bucket
+//!   log-scale [`Histogram`]s with exact cross-thread merging and
+//!   p50/p90/p99 extraction;
+//! * [`registry`] — the name → metric [`Registry`] with JSON and
+//!   Prometheus text exposition;
+//! * [`span`] — RAII timing guards that record into histograms and, at
+//!   `LSHBLOOM_LOG=trace`, emit timed trace lines through
+//!   [`crate::logging`];
+//! * [`http`] — the `--metrics-addr` listener: a minimal hand-rolled
+//!   HTTP/1.1 responder (std-only, same discipline as the line
+//!   protocol in `service/proto.rs`) serving `GET /metrics`
+//!   (Prometheus text) and `GET /metrics.json`.
+//!
+//! Instrumented tiers: engine submit phases, per-band filter
+//! fill/estimated-FP gauges, persist checkpoint/restore walls, server
+//! per-op request latency + in-flight gauge, router per-backend
+//! fan-out latency + error counters, supervisor restart counters. The
+//! same registry is exposed over the wire (`{"op":"metrics"}`), over
+//! HTTP (`--metrics-addr`), and as periodic JSONL snapshots
+//! (`dedup --metrics-out`).
+//!
+//! ```
+//! use lshbloom::obs;
+//!
+//! {
+//!     let _timer = obs::span("example.work");
+//! } // records into histogram "example.work.seconds" on drop
+//! let h = obs::global().histogram("example.work.seconds");
+//! assert_eq!(h.count(), 1);
+//! ```
+#![warn(missing_docs)]
+
+pub mod http;
+pub mod metrics;
+pub mod registry;
+
+pub use http::MetricsHttp;
+pub use metrics::{Counter, Gauge, Histogram};
+pub use registry::Registry;
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// The process-global registry every instrumented tier records into.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+/// Process-start anchor for `uptime_seconds`. Lazily initialized on
+/// first observability touch; long-lived processes (serve, route,
+/// dedup) call [`init`] at startup so the anchor matches process start.
+fn process_start() -> Instant {
+    static START: OnceLock<Instant> = OnceLock::new();
+    *START.get_or_init(Instant::now)
+}
+
+/// Anchor the uptime clock. Idempotent; call once at process startup.
+pub fn init() {
+    process_start();
+}
+
+/// Seconds since [`init`] (or since the first metric was touched).
+pub fn uptime_seconds() -> f64 {
+    process_start().elapsed().as_secs_f64()
+}
+
+/// An RAII span-timing guard returned by [`span`].
+///
+/// On drop it records the elapsed wall time into the global histogram
+/// `<name>.seconds` and, when the logger is at trace level, emits a
+/// `span <name> … ms` line — so `LSHBLOOM_LOG=trace` turns any
+/// instrumented binary into a per-hop timing trace at zero cost to
+/// non-trace runs beyond the histogram update.
+#[must_use = "a span records when dropped; binding it to _ drops immediately"]
+pub struct Span {
+    name: &'static str,
+    start: Instant,
+}
+
+/// Start timing the named operation; the returned guard records on
+/// drop. Names are dotted (`"router.fan_out"`) and land in the global
+/// registry as `<name>.seconds`.
+pub fn span(name: &'static str) -> Span {
+    Span { name, start: Instant::now() }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let elapsed = self.start.elapsed();
+        global().histogram(&format!("{}.seconds", self.name)).record_duration(elapsed);
+        if crate::logging::enabled(crate::logging::Level::Trace) {
+            crate::log_trace!("span {} {:.3}ms", self.name, elapsed.as_secs_f64() * 1e3);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_records_into_global_histogram() {
+        let h = global().histogram("obs.test_span.seconds");
+        let before = h.count();
+        {
+            let _s = span("obs.test_span");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert_eq!(h.count(), before + 1);
+        // 2 ms sleep must land at ≥ 2 ms even at the bucket floor.
+        assert!(h.sum_ns() >= 2_000_000, "sum_ns={}", h.sum_ns());
+    }
+
+    #[test]
+    fn uptime_is_monotone() {
+        init();
+        let a = uptime_seconds();
+        let b = uptime_seconds();
+        assert!(b >= a);
+        assert!(a >= 0.0);
+    }
+}

@@ -1,0 +1,292 @@
+//! The metric registry: named counters, gauges, and histograms with
+//! JSON and Prometheus text exposition.
+//!
+//! Registration (name → metric lookup) takes a short `RwLock`; the
+//! returned `Arc` handles are lock-free to record into, so hot paths
+//! either cache a handle or pay one brief shared read-lock per lookup
+//! — never an exclusive lock after the first registration.
+//!
+//! ## Naming convention
+//!
+//! Internal names are dotted (`server.request.seconds`) with optional
+//! Prometheus-style labels appended verbatim
+//! (`engine.band_fill_ratio{band="3"}`). Exposition sanitizes the base
+//! name (`.` → `_`), prefixes `lshbloom_`, and passes labels through,
+//! so the example above scrapes as
+//! `lshbloom_engine_band_fill_ratio{band="3"}`. By convention counters
+//! end in `.total` and duration histograms in `.seconds` (values are
+//! recorded in nanoseconds and converted at exposition).
+
+use super::metrics::{bucket_ceil, Counter, Gauge, Histogram, NUM_BUCKETS};
+use crate::json::{obj, Value};
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
+
+/// A process-wide (or test-local) collection of named metrics.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: RwLock<BTreeMap<String, Arc<Counter>>>,
+    gauges: RwLock<BTreeMap<String, Arc<Gauge>>>,
+    histograms: RwLock<BTreeMap<String, Arc<Histogram>>>,
+}
+
+/// Get-or-create in one of the registry maps: a shared read-lock on
+/// the hit path, an exclusive lock only the first time a name is seen.
+fn intern<T: Default>(map: &RwLock<BTreeMap<String, Arc<T>>>, name: &str) -> Arc<T> {
+    if let Some(m) = map.read().expect("metric registry poisoned").get(name) {
+        return m.clone();
+    }
+    map.write()
+        .expect("metric registry poisoned")
+        .entry(name.to_string())
+        .or_default()
+        .clone()
+}
+
+impl Registry {
+    /// New empty registry (tests; production code uses
+    /// [`crate::obs::global`]).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get or create the counter `name`.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        intern(&self.counters, name)
+    }
+
+    /// Get or create the gauge `name`.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        intern(&self.gauges, name)
+    }
+
+    /// Get or create the histogram `name`.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        intern(&self.histograms, name)
+    }
+
+    /// Render the full registry as a JSON object:
+    ///
+    /// ```json
+    /// {"uptime_seconds": 12.3, "version": "0.6.0",
+    ///  "counters": {"server.requests.total": 41},
+    ///  "gauges": {"engine.band_fill_ratio{band=\"0\"}": 0.013},
+    ///  "histograms": {"server.request.seconds":
+    ///     {"count": 41, "sum_ns": 90210,
+    ///      "p50_ns": 1800, "p90_ns": 2600, "p99_ns": 4100}}}
+    /// ```
+    pub fn to_json(&self) -> Value {
+        let counters = self
+            .counters
+            .read()
+            .expect("metric registry poisoned")
+            .iter()
+            .map(|(k, c)| (k.clone(), Value::u64(c.get())))
+            .collect::<BTreeMap<_, _>>();
+        let gauges = self
+            .gauges
+            .read()
+            .expect("metric registry poisoned")
+            .iter()
+            .map(|(k, g)| (k.clone(), Value::num(g.get())))
+            .collect::<BTreeMap<_, _>>();
+        let histograms = self
+            .histograms
+            .read()
+            .expect("metric registry poisoned")
+            .iter()
+            .map(|(k, h)| {
+                let summary = obj(vec![
+                    ("count", Value::u64(h.count())),
+                    ("sum_ns", Value::u64(h.sum_ns())),
+                    ("p50_ns", Value::u64(h.quantile_ns(0.50))),
+                    ("p90_ns", Value::u64(h.quantile_ns(0.90))),
+                    ("p99_ns", Value::u64(h.quantile_ns(0.99))),
+                ]);
+                (k.clone(), summary)
+            })
+            .collect::<BTreeMap<_, _>>();
+        obj(vec![
+            ("uptime_seconds", Value::num(super::uptime_seconds())),
+            ("version", Value::str(env!("CARGO_PKG_VERSION"))),
+            ("counters", Value::Obj(counters)),
+            ("gauges", Value::Obj(gauges)),
+            ("histograms", Value::Obj(histograms)),
+        ])
+    }
+
+    /// One JSONL snapshot line (`--metrics-out`): the [`Registry::to_json`]
+    /// object plus a monotone `seq` so offline tooling can order and
+    /// diff successive snapshots.
+    pub fn snapshot_line(&self, seq: u64) -> String {
+        let mut v = self.to_json();
+        if let Value::Obj(map) = &mut v {
+            map.insert("seq".to_string(), Value::u64(seq));
+        }
+        v.to_json()
+    }
+
+    /// Render the registry in Prometheus text exposition format
+    /// (version 0.0.4). Histograms emit cumulative `_bucket{le="…"}`
+    /// series (only buckets that hold samples, plus `+Inf` — the
+    /// cumulative encoding stays exact), `_sum`, and `_count`, with
+    /// nanosecond internals converted to seconds.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut last_type_base = String::new();
+        let mut type_line = |out: &mut String, base: &str, kind: &str| {
+            if last_type_base != base {
+                out.push_str(&format!("# TYPE {base} {kind}\n"));
+                last_type_base = base.to_string();
+            }
+        };
+        for (name, c) in self.counters.read().expect("metric registry poisoned").iter() {
+            let (base, labels) = split_labels(name);
+            type_line(&mut out, &base, "counter");
+            out.push_str(&format!("{base}{labels} {}\n", c.get()));
+        }
+        for (name, g) in self.gauges.read().expect("metric registry poisoned").iter() {
+            let (base, labels) = split_labels(name);
+            type_line(&mut out, &base, "gauge");
+            out.push_str(&format!("{base}{labels} {}\n", g.get()));
+        }
+        for (name, h) in self.histograms.read().expect("metric registry poisoned").iter() {
+            let (base, labels) = split_labels(name);
+            type_line(&mut out, &base, "histogram");
+            let inner = labels.trim_start_matches('{').trim_end_matches('}');
+            let sep = if inner.is_empty() { "" } else { "," };
+            let mut cum = 0u64;
+            for (i, n) in h.bucket_counts().into_iter().enumerate() {
+                if n == 0 {
+                    continue;
+                }
+                cum += n;
+                if i + 1 >= NUM_BUCKETS {
+                    // The top bucket (≈585 years) has no finite upper
+                    // bound; its samples surface via the +Inf series.
+                    continue;
+                }
+                let le = le_seconds(i);
+                out.push_str(&format!("{base}_bucket{{{inner}{sep}le=\"{le}\"}} {cum}\n"));
+            }
+            out.push_str(&format!("{base}_bucket{{{inner}{sep}le=\"+Inf\"}} {cum}\n"));
+            out.push_str(&format!("{base}_sum{labels} {}\n", h.sum_ns() as f64 / 1e9));
+            out.push_str(&format!("{base}_count{labels} {}\n", h.count()));
+        }
+        out
+    }
+}
+
+/// Upper bound of histogram bucket `i` as seconds, for `le` labels.
+fn le_seconds(i: usize) -> f64 {
+    if i + 1 >= NUM_BUCKETS {
+        f64::INFINITY
+    } else {
+        bucket_ceil(i) as f64 / 1e9
+    }
+}
+
+/// Split an internal metric name into its sanitized, `lshbloom_`-prefixed
+/// Prometheus base name and the pass-through label block (`{…}` or "").
+fn split_labels(name: &str) -> (String, &str) {
+    let (base, labels) = match name.find('{') {
+        Some(pos) => (&name[..pos], &name[pos..]),
+        None => (name, ""),
+    };
+    let mut sanitized = String::with_capacity(base.len() + 9);
+    sanitized.push_str("lshbloom_");
+    for ch in base.chars() {
+        if ch.is_ascii_alphanumeric() || ch == '_' || ch == ':' {
+            sanitized.push(ch);
+        } else {
+            sanitized.push('_');
+        }
+    }
+    (sanitized, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+
+    #[test]
+    fn handles_are_shared_by_name() {
+        let r = Registry::new();
+        r.counter("a.total").add(2);
+        r.counter("a.total").add(3);
+        assert_eq!(r.counter("a.total").get(), 5);
+        r.gauge("g").set(1.5);
+        assert!((r.gauge("g").get() - 1.5).abs() < 1e-12);
+        r.histogram("h.seconds").record(10);
+        assert_eq!(r.histogram("h.seconds").count(), 1);
+    }
+
+    #[test]
+    fn json_roundtrips_through_crate_parser() {
+        let r = Registry::new();
+        r.counter("server.requests.total").add(7);
+        r.gauge("engine.band_fill_ratio{band=\"0\"}").set(0.25);
+        r.histogram("server.request.seconds").record(1_000_000);
+        let parsed = json::parse(&r.snapshot_line(3)).unwrap();
+        assert_eq!(parsed.get("seq").and_then(|v| v.as_u64()), Some(3));
+        assert_eq!(
+            parsed
+                .get("counters")
+                .and_then(|c| c.get("server.requests.total"))
+                .and_then(|v| v.as_u64()),
+            Some(7)
+        );
+        let h = parsed.get("histograms").and_then(|h| h.get("server.request.seconds")).unwrap();
+        assert_eq!(h.get("count").and_then(|v| v.as_u64()), Some(1));
+        assert!(parsed.get("uptime_seconds").and_then(|v| v.as_f64()).unwrap() >= 0.0);
+        assert_eq!(
+            parsed.get("version").and_then(|v| v.as_str()),
+            Some(env!("CARGO_PKG_VERSION"))
+        );
+    }
+
+    #[test]
+    fn prometheus_text_shape() {
+        let r = Registry::new();
+        r.counter("server.requests.total").add(4);
+        r.gauge("engine.band_fill_ratio{band=\"2\"}").set(0.5);
+        let h = r.histogram("server.request.seconds");
+        h.record(1_000);
+        h.record(2_000);
+        h.record(4_000_000);
+        let text = r.to_prometheus();
+        assert!(text.contains("# TYPE lshbloom_server_requests_total counter"), "{text}");
+        assert!(text.contains("lshbloom_server_requests_total 4"), "{text}");
+        assert!(
+            text.contains("lshbloom_engine_band_fill_ratio{band=\"2\"} 0.5"),
+            "{text}"
+        );
+        assert!(text.contains("# TYPE lshbloom_server_request_seconds histogram"), "{text}");
+        assert!(text.contains("lshbloom_server_request_seconds_count 3"), "{text}");
+        assert!(text.contains("le=\"+Inf\"} 3"), "{text}");
+        // Cumulative bucket counts are nondecreasing and end at count.
+        let mut last = 0u64;
+        for line in text.lines().filter(|l| l.contains("_bucket{")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "{line}");
+            last = v;
+        }
+        assert_eq!(last, 3);
+    }
+
+    #[test]
+    fn histogram_labels_merge_with_le() {
+        let r = Registry::new();
+        r.histogram("router.backend.seconds{backend=\"127.0.0.1:9\"}").record(500);
+        let text = r.to_prometheus();
+        assert!(
+            text.contains("lshbloom_router_backend_seconds_bucket{backend=\"127.0.0.1:9\",le="),
+            "{text}"
+        );
+        assert!(
+            text.contains("lshbloom_router_backend_seconds_count{backend=\"127.0.0.1:9\"} 1"),
+            "{text}"
+        );
+    }
+}

@@ -104,6 +104,8 @@ pub(crate) fn write_checkpoint_filters(
     duplicates: u64,
     dir: &Path,
 ) -> Result<CheckpointManifest> {
+    let _wall = crate::obs::span("persist.checkpoint");
+    crate::obs::global().counter("persist.checkpoints.total").inc();
     std::fs::create_dir_all(dir).map_err(|e| Error::io(dir.display().to_string(), e))?;
     let params = crate::index::LshBloomIndex::filter_params(config);
     let mut files = Vec::with_capacity(filters.len());
@@ -219,6 +221,7 @@ pub fn restore_index(
     expect: &LshBloomConfig,
     mmap: bool,
 ) -> Result<(ConcurrentLshBloomIndex, CheckpointManifest)> {
+    let _wall = crate::obs::span("persist.restore");
     let manifest = CheckpointManifest::load(dir)?;
     manifest.verify_geometry(expect)?;
     let params = manifest.filter_params;
@@ -263,6 +266,7 @@ pub fn restore_band_slice(
     expect: &LshBloomConfig,
     range: std::ops::Range<usize>,
 ) -> Result<(Vec<AtomicBloomFilter>, CheckpointManifest)> {
+    let _wall = crate::obs::span("persist.restore");
     let manifest = CheckpointManifest::load(dir)?;
     let filters = restore_band_slice_from(&manifest, dir, expect, range)?;
     Ok((filters, manifest))

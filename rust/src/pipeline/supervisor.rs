@@ -609,6 +609,7 @@ pub fn run_distributed(
         let child = spawner.spawn(shard, false, &opts.worker_env)?;
         slots.push(WorkerSlot { shard, child, attempts: 1, done: false });
     }
+    crate::obs::global().gauge("supervisor.workers").set(num_shards as f64);
     let mut restarts = 0u32;
     let supervise = |slots: &mut Vec<WorkerSlot>, restarts: &mut u32| -> Result<()> {
         let mut pending = slots.iter().filter(|s| !s.done).count();
@@ -647,11 +648,13 @@ pub fn run_distributed(
                             "worker {shard}: {e}; restarting with --resume (attempt {})",
                             slot.attempts + 1
                         );
+                        crate::obs::global().counter("supervisor.worker_restarts.total").inc();
                         *restarts += 1;
                         slot.attempts += 1;
                         slot.child = spawner.spawn(shard, true, &opts.worker_env)?;
                     }
                     Err(e) => {
+                        crate::obs::global().counter("supervisor.worker_failures.total").inc();
                         return Err(Error::Format(format!(
                             "worker {shard} failed after {} attempt(s): {e}; see {}",
                             slot.attempts,

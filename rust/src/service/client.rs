@@ -199,6 +199,17 @@ impl DedupClient {
         Ok(resp)
     }
 
+    /// The raw `{"op":"metrics"}` response — the full observability
+    /// registry (counters, gauges, histogram summaries) as JSON; the
+    /// wire twin of the `--metrics-addr` HTTP endpoint.
+    pub fn metrics_json(&mut self) -> std::io::Result<Value> {
+        let resp = self.round_trip(json::obj(vec![("op", Value::str("metrics"))]))?;
+        if resp.get("error").is_some() {
+            return Err(err_from(&resp));
+        }
+        Ok(resp)
+    }
+
     /// Ask the server to stop accepting connections and exit.
     pub fn shutdown(&mut self) -> std::io::Result<()> {
         let resp = self.round_trip(json::obj(vec![("op", Value::str("shutdown"))]))?;

@@ -58,19 +58,21 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-/// How long a backend may take to accept a connection before the
-/// router treats it as down. A partitioned host (packets silently
-/// dropped) would otherwise hold a client thread for the OS connect
-/// default — minutes — instead of failing fast.
-const BACKEND_CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+/// Default for [`RouterOptions::connect_timeout`]: how long a backend
+/// may take to accept a connection before the router treats it as
+/// down. A partitioned host (packets silently dropped) would otherwise
+/// hold a client thread for the OS connect default — minutes — instead
+/// of failing fast.
+pub const DEFAULT_BACKEND_CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
 
-/// How long the router waits for one backend reply. Dedup ops are
-/// memory-speed (a capped request line parses and probes in well under
-/// a second), so a stall this long means a hung backend, and the
-/// fail-fast contract — error naming the backend, close the client
-/// stream — must fire rather than block forever (which would also wedge
-/// router shutdown on the connection join).
-const BACKEND_READ_TIMEOUT: Duration = Duration::from_secs(30);
+/// Default for [`RouterOptions::read_timeout`]: how long the router
+/// waits for one backend reply. Dedup ops are memory-speed (a capped
+/// request line parses and probes in well under a second), so a stall
+/// this long means a hung backend, and the fail-fast contract — error
+/// naming the backend, close the client stream — must fire rather than
+/// block forever (which would also wedge router shutdown on the
+/// connection join).
+pub const DEFAULT_BACKEND_READ_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// Listener-level router options.
 #[derive(Clone, Debug)]
@@ -78,11 +80,26 @@ pub struct RouterOptions {
     /// Per-connection request-line cap in bytes
     /// ([`DEFAULT_MAX_LINE_BYTES`] unless overridden).
     pub max_line_bytes: usize,
+    /// Backend connect timeout (`route --backend-connect-timeout`,
+    /// default [`DEFAULT_BACKEND_CONNECT_TIMEOUT`]). Tune down for
+    /// same-rack fleets that should fail over fast, up for WAN hops.
+    pub connect_timeout: Duration,
+    /// Backend reply timeout (`route --backend-read-timeout`, default
+    /// [`DEFAULT_BACKEND_READ_TIMEOUT`]).
+    pub read_timeout: Duration,
+    /// `HOST:PORT` for the router's Prometheus metrics endpoint
+    /// (`route --metrics-addr`); `None` disables it.
+    pub metrics_addr: Option<String>,
 }
 
 impl Default for RouterOptions {
     fn default() -> Self {
-        Self { max_line_bytes: DEFAULT_MAX_LINE_BYTES }
+        Self {
+            max_line_bytes: DEFAULT_MAX_LINE_BYTES,
+            connect_timeout: DEFAULT_BACKEND_CONNECT_TIMEOUT,
+            read_timeout: DEFAULT_BACKEND_READ_TIMEOUT,
+            metrics_addr: None,
+        }
     }
 }
 
@@ -91,6 +108,8 @@ struct RouterShared {
     num_bands: usize,
     backends: Vec<String>,
     max_line_bytes: usize,
+    connect_timeout: Duration,
+    read_timeout: Duration,
     stats: ServerStats,
     shutdown: AtomicBool,
 }
@@ -120,6 +139,9 @@ impl Failure {
 pub struct DedupRouter {
     listener: TcpListener,
     shared: Arc<RouterShared>,
+    /// Prometheus scrape endpoint (`--metrics-addr`); stops when the
+    /// router is dropped at the end of `serve`.
+    metrics: Option<crate::obs::MetricsHttp>,
 }
 
 fn invalid_input(msg: String) -> std::io::Error {
@@ -143,22 +165,38 @@ impl DedupRouter {
         }
         let preparer = BandPreparer::from_config(cfg);
         let num_bands = preparer.lsh.num_bands;
-        validate_backend_layout(&backends, preparer.lsh)?;
+        validate_backend_layout(&backends, preparer.lsh, opts.connect_timeout, opts.read_timeout)?;
         let shared = Arc::new(RouterShared {
             preparer,
             num_bands,
             backends,
             max_line_bytes: opts.max_line_bytes,
+            connect_timeout: opts.connect_timeout,
+            read_timeout: opts.read_timeout,
             stats: ServerStats::default(),
             shutdown: AtomicBool::new(false),
         });
+        crate::obs::init();
+        // The router owns no filters, so scrapes need no refresh hook —
+        // its registry entries (fan-out latency, backend errors) are
+        // updated inline on the request path.
+        let metrics = match &opts.metrics_addr {
+            Some(maddr) => Some(crate::obs::MetricsHttp::bind(maddr, None)?),
+            None => None,
+        };
         let listener = TcpListener::bind(addr)?;
-        Ok(Self { listener, shared })
+        Ok(Self { listener, shared, metrics })
     }
 
     /// The bound address (for ephemeral-port tests).
     pub fn local_addr(&self) -> std::io::Result<std::net::SocketAddr> {
         self.listener.local_addr()
+    }
+
+    /// The bound metrics-endpoint address, when `metrics_addr` was set
+    /// (resolves port 0 to the ephemeral port actually bound).
+    pub fn metrics_addr(&self) -> Option<std::net::SocketAddr> {
+        self.metrics.as_ref().map(|m| m.local_addr())
     }
 
     /// Number of backends this router fans out to.
@@ -203,12 +241,17 @@ impl DedupRouter {
 /// (band count AND rows per band — two perm counts can derive the same
 /// band count with different rows, which would silently miss every
 /// probe) served by band-capable backends.
-fn validate_backend_layout(backends: &[String], lsh: LshParams) -> std::io::Result<()> {
+fn validate_backend_layout(
+    backends: &[String],
+    lsh: LshParams,
+    connect_timeout: Duration,
+    read_timeout: Duration,
+) -> std::io::Result<()> {
     let mut seen = vec![false; backends.len()];
     for addr in backends {
         let fail = |msg: String| invalid_input(format!("route: backend {addr}: {msg}"));
-        let mut client =
-            connect_backend(addr).map_err(|e| fail(format!("connect failed: {e}")))?;
+        let mut client = connect_backend(addr, connect_timeout, read_timeout)
+            .map_err(|e| fail(format!("connect failed: {e}")))?;
         let stats = client.stats_json().map_err(|e| fail(e.to_string()))?;
         let get = |k: &str| stats.get(k).and_then(|v| v.as_usize());
         let (Some(bands), Some(rows), Some(index), Some(count)) = (
@@ -255,9 +298,24 @@ fn validate_backend_layout(backends: &[String], lsh: LshParams) -> std::io::Resu
     Ok(())
 }
 
-/// Open one timed-out backend connection (see the timeout consts).
-fn connect_backend(addr: &str) -> std::io::Result<DedupClient> {
-    DedupClient::connect_with_timeouts(addr, BACKEND_CONNECT_TIMEOUT, BACKEND_READ_TIMEOUT)
+/// Open one timed-out backend connection (see [`RouterOptions`]).
+fn connect_backend(
+    addr: &str,
+    connect_timeout: Duration,
+    read_timeout: Duration,
+) -> std::io::Result<DedupClient> {
+    DedupClient::connect_with_timeouts(addr, connect_timeout, read_timeout)
+}
+
+/// Count one failed interaction with `addr` — connect refused, send or
+/// receive error (including a read timeout), or an error reply. The
+/// labeled counter is what a fleet dashboard alerts on: a single
+/// backend's series climbing while the others stay flat localizes the
+/// sick host.
+fn count_backend_error(addr: &str) {
+    let reg = crate::obs::global();
+    reg.counter(&format!("router.backend.errors.total{{backend=\"{addr}\"}}")).inc();
+    reg.counter("router.backend.errors.total").inc();
 }
 
 fn handle_conn(stream: TcpStream, shared: Arc<RouterShared>) {
@@ -280,10 +338,41 @@ fn handle_request(
     shared: &RouterShared,
     fleet: &mut Option<Vec<DedupClient>>,
 ) -> (Value, bool) {
+    let reg = crate::obs::global();
+    let inflight = reg.gauge("router.inflight_requests");
+    inflight.add(1.0);
+    let start = std::time::Instant::now();
     let req = match json::parse(line) {
         Ok(v) => v,
-        Err(e) => return (error_response(format!("bad request json: {e}")), false),
+        Err(e) => {
+            inflight.add(-1.0);
+            reg.counter("router.errors.total").inc();
+            return (error_response(format!("bad request json: {e}")), false);
+        }
     };
+    let op = req.get("op").and_then(|v| v.as_str()).map(str::to_string);
+    let (resp, close) = dispatch_request(&req, shared, fleet);
+    // Same contract as the server: only dedup ops feed the latency
+    // histograms, so sample counts track requests routed, not scrapes.
+    if let Some(op) = op.as_deref().filter(|&op| matches!(op, "check" | "query" | "check_batch")) {
+        let elapsed = start.elapsed();
+        reg.histogram("router.request.seconds").record_duration(elapsed);
+        reg.histogram(&format!("router.request.seconds{{op=\"{op}\"}}"))
+            .record_duration(elapsed);
+        reg.counter("router.requests.total").inc();
+    }
+    if resp.get("error").is_some() {
+        reg.counter("router.errors.total").inc();
+    }
+    inflight.add(-1.0);
+    (resp, close)
+}
+
+fn dispatch_request(
+    req: &Value,
+    shared: &RouterShared,
+    fleet: &mut Option<Vec<DedupClient>>,
+) -> (Value, bool) {
     match req.get("op").and_then(|v| v.as_str()) {
         Some("check") | Some("query") => {
             let insert = req.get("op").and_then(|v| v.as_str()) == Some("check");
@@ -351,11 +440,14 @@ fn handle_request(
                     ("disk_bytes", Value::u64(disk_bytes)),
                     ("num_bands", Value::u64(shared.num_bands as u64)),
                     ("backends", Value::u64(shared.backends.len() as u64)),
+                    ("uptime_seconds", Value::num(crate::obs::uptime_seconds())),
+                    ("version", Value::str(env!("CARGO_PKG_VERSION"))),
                 ]);
                 (resp, false)
             }
             Err(f) => (error_response(f.msg), f.fatal),
         },
+        Some("metrics") => (crate::obs::global().to_json(), false),
         Some("shutdown") => {
             shared.shutdown.store(true, Ordering::SeqCst);
             (obj(vec![("ok", Value::Bool(true))]), false)
@@ -363,7 +455,7 @@ fn handle_request(
         Some(other) => {
             let msg = format!(
                 "unknown op '{other}' (the router serves check/query/check_batch/\
-                 stats/shutdown; band-level ops go directly to slice backends)"
+                 stats/metrics/shutdown; band-level ops go directly to slice backends)"
             );
             (error_response(msg), false)
         }
@@ -403,7 +495,11 @@ fn ensure_fleet<'a>(
     if fleet.is_none() {
         let mut conns = Vec::with_capacity(shared.backends.len());
         for addr in &shared.backends {
-            let conn = connect_backend(addr).map_err(|e| format!("backend {addr}: {e}"))?;
+            let conn = connect_backend(addr, shared.connect_timeout, shared.read_timeout)
+                .map_err(|e| {
+                    count_backend_error(addr);
+                    format!("backend {addr}: {e}")
+                })?;
             conns.push(conn);
         }
         *fleet = Some(conns);
@@ -425,6 +521,11 @@ fn broadcast(
     fleet: &mut Option<Vec<DedupClient>>,
     req: &Value,
 ) -> Result<Vec<Value>, Failure> {
+    // The span covers the whole fan-out (serialize + send-all +
+    // read-all); per-backend latency is recorded below as each reply
+    // lands, so a slow slice shows up in its own labeled series.
+    let _fan = crate::obs::span("router.fan_out");
+    let reg = crate::obs::global();
     let line = req.to_json() + "\n";
     if line.len() > shared.max_line_bytes {
         // Pre-flight, nothing sent: a clean reply, connection kept.
@@ -439,17 +540,27 @@ fn broadcast(
     // Connect failures are clean too — the fleet is only installed once
     // every backend connected, so no request bytes went anywhere.
     let conns = ensure_fleet(shared, fleet).map_err(Failure::clean)?;
+    let start = std::time::Instant::now();
     for (conn, addr) in conns.iter_mut().zip(&shared.backends) {
         // From the first send onward a failure may be half-applied.
-        conn.send_raw(&line)
-            .map_err(|e| Failure::fatal(format!("backend {addr}: {e}")))?;
+        conn.send_raw(&line).map_err(|e| {
+            count_backend_error(addr);
+            Failure::fatal(format!("backend {addr}: {e}"))
+        })?;
     }
     let mut replies = Vec::with_capacity(conns.len());
     for (conn, addr) in conns.iter_mut().zip(&shared.backends) {
-        let resp = conn
-            .recv()
-            .map_err(|e| Failure::fatal(format!("backend {addr}: {e}")))?;
+        let resp = conn.recv().map_err(|e| {
+            count_backend_error(addr);
+            Failure::fatal(format!("backend {addr}: {e}"))
+        })?;
+        // Requests are pipelined, so each backend's series measures
+        // send-all → its reply read: an upper bound on that backend's
+        // service time, and the per-slice signal worth graphing.
+        reg.histogram(&format!("router.backend.seconds{{backend=\"{addr}\"}}"))
+            .record_duration(start.elapsed());
         if let Some(err) = resp.get("error").and_then(|v| v.as_str()) {
+            count_backend_error(addr);
             return Err(Failure::fatal(format!("backend {addr}: {err}")));
         }
         replies.push(resp);

@@ -38,7 +38,13 @@
 //! Ops: `check` / `query` (one document), `check_batch` (N documents in
 //! one round trip, hitting the engine's batched fast path),
 //! `check_bands` / `check_bands_batch` (pre-MinHashed band vectors from
-//! a router — concurrent-family backends only), `stats`, `shutdown`.
+//! a router — concurrent-family backends only), `stats`, `metrics`
+//! (the full [`crate::obs`] registry as JSON, fill gauges refreshed
+//! first), `shutdown`. With `--metrics-addr` the same registry is also
+//! scrapeable as Prometheus text over a minimal HTTP listener; request
+//! latency for the dedup ops feeds `server.request.seconds` (aggregate
+//! and per-op), with an in-flight gauge and request/error counters
+//! alongside.
 //! Request lines are capped ([`super::DEFAULT_MAX_LINE_BYTES`],
 //! `--max-line-bytes`): a client that streams bytes without a newline
 //! gets an error response and a closed connection instead of growing a
@@ -89,11 +95,20 @@ pub struct ServeOptions {
     /// Per-connection request-line cap in bytes
     /// ([`DEFAULT_MAX_LINE_BYTES`] unless overridden).
     pub max_line_bytes: usize,
+    /// `HOST:PORT` for the Prometheus metrics endpoint
+    /// (`serve --metrics-addr`); `None` disables it. Port 0 binds an
+    /// ephemeral port (see [`DedupServer::metrics_addr`]).
+    pub metrics_addr: Option<String>,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        Self { state_dir: None, slice: None, max_line_bytes: DEFAULT_MAX_LINE_BYTES }
+        Self {
+            state_dir: None,
+            slice: None,
+            max_line_bytes: DEFAULT_MAX_LINE_BYTES,
+            metrics_addr: None,
+        }
     }
 }
 
@@ -320,6 +335,19 @@ impl Shared {
             IndexBackend::Slice { index, .. } => index.disk_bytes(),
         }
     }
+
+    /// Refresh the per-band fill-ratio / estimated-FP gauges from the
+    /// live filters. Runs on demand — per Prometheus scrape and per
+    /// `{"op":"metrics"}` — rather than per request: a sampled popcount
+    /// is cheap, but not check-batch-path cheap.
+    fn refresh_gauges(&self) {
+        match &self.backend {
+            IndexBackend::Classic { .. } => {}
+            IndexBackend::Concurrent(engine) => engine.index().refresh_fill_gauges(),
+            IndexBackend::BandSharded(engine) => engine.refresh_fill_gauges(),
+            IndexBackend::Slice { index, .. } => index.refresh_fill_gauges(),
+        }
+    }
 }
 
 /// Count the shard workers that produced the aggregated state in `dir`:
@@ -379,6 +407,10 @@ fn invalid_input(msg: impl Into<String>) -> std::io::Error {
 pub struct DedupServer {
     listener: TcpListener,
     shared: Arc<Shared>,
+    /// Prometheus scrape endpoint (`--metrics-addr`); owned here so it
+    /// lives exactly as long as the server and stops when `serve`
+    /// returns.
+    metrics: Option<crate::obs::MetricsHttp>,
 }
 
 impl DedupServer {
@@ -530,13 +562,35 @@ impl DedupServer {
             stats,
             shutdown: AtomicBool::new(false),
         });
+        // Anchor the uptime clock before the first stats/metrics request
+        // can observe it.
+        crate::obs::init();
+        let metrics = match &opts.metrics_addr {
+            Some(maddr) => {
+                // Each scrape refreshes the fill/FP gauges first, so
+                // Prometheus always sees filter state no staler than the
+                // scrape itself.
+                let hook_shared = Arc::clone(&shared);
+                Some(crate::obs::MetricsHttp::bind(
+                    maddr,
+                    Some(Box::new(move || hook_shared.refresh_gauges())),
+                )?)
+            }
+            None => None,
+        };
         let listener = TcpListener::bind(addr)?;
-        Ok(Self { listener, shared })
+        Ok(Self { listener, shared, metrics })
     }
 
     /// The bound address (for ephemeral-port tests).
     pub fn local_addr(&self) -> std::io::Result<std::net::SocketAddr> {
         self.listener.local_addr()
+    }
+
+    /// The bound metrics-endpoint address, when `metrics_addr` was set
+    /// (resolves port 0 to the ephemeral port actually bound).
+    pub fn metrics_addr(&self) -> Option<std::net::SocketAddr> {
+        self.metrics.as_ref().map(|m| m.local_addr())
     }
 
     /// Serve until a client sends `{"op":"shutdown"}`. Each connection
@@ -631,11 +685,47 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>) {
     });
 }
 
+/// The dedup ops whose latency feeds the `server.request.seconds`
+/// histograms. Control ops (`stats`, `metrics`, `shutdown`) are
+/// excluded so the sample count equals the dedup requests served —
+/// scraping the endpoint must not inflate the histogram it reads.
+fn is_dedup_op(op: &str) -> bool {
+    matches!(
+        op,
+        "check" | "query" | "check_batch" | "check_bands" | "check_bands_batch"
+    )
+}
+
 fn handle_request(line: &str, shared: &Shared) -> Value {
+    let reg = crate::obs::global();
+    let inflight = reg.gauge("server.inflight_requests");
+    inflight.add(1.0);
+    let start = std::time::Instant::now();
     let req = match json::parse(line) {
         Ok(v) => v,
-        Err(e) => return error_response(format!("bad request json: {e}")),
+        Err(e) => {
+            inflight.add(-1.0);
+            reg.counter("server.errors.total").inc();
+            return error_response(format!("bad request json: {e}"));
+        }
     };
+    let op = req.get("op").and_then(|v| v.as_str()).map(str::to_string);
+    let resp = dispatch_request(&req, shared);
+    if let Some(op) = op.as_deref().filter(|&op| is_dedup_op(op)) {
+        let elapsed = start.elapsed();
+        reg.histogram("server.request.seconds").record_duration(elapsed);
+        reg.histogram(&format!("server.request.seconds{{op=\"{op}\"}}"))
+            .record_duration(elapsed);
+        reg.counter("server.requests.total").inc();
+    }
+    if resp.get("error").is_some() {
+        reg.counter("server.errors.total").inc();
+    }
+    inflight.add(-1.0);
+    resp
+}
+
+fn dispatch_request(req: &Value, shared: &Shared) -> Value {
     match req.get("op").and_then(|v| v.as_str()) {
         Some("check") | Some("query") => {
             let insert = req.get("op").and_then(|v| v.as_str()) == Some("check");
@@ -751,7 +841,15 @@ fn handle_request(line: &str, shared: &Shared) -> Value {
                 ("band_ops", Value::Bool(shared.backend.supports_band_ops())),
                 ("slice_index", Value::u64(slice as u64)),
                 ("slice_count", Value::u64(count as u64)),
+                ("uptime_seconds", Value::num(crate::obs::uptime_seconds())),
+                ("version", Value::str(env!("CARGO_PKG_VERSION"))),
             ])
+        }
+        Some("metrics") => {
+            // Same freshness contract as a scrape: re-sample the filter
+            // gauges, then dump the whole registry.
+            shared.refresh_gauges();
+            crate::obs::global().to_json()
         }
         Some("shutdown") => {
             shared.shutdown.store(true, Ordering::SeqCst);

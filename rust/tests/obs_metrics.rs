@@ -1,0 +1,297 @@
+//! End-to-end tests for the observability layer: a live server scraped
+//! over `--metrics-addr` under concurrent `check_batch` traffic, and a
+//! router fleet whose per-backend histograms and error counters are
+//! verified through the router's own metrics endpoint.
+//!
+//! Both tests share one process-global registry (they run as threads of
+//! one test binary), so every assertion targets series that only its
+//! own test can touch: exact counts go through per-op / per-backend
+//! labels (backend addresses are ephemeral ports, unique per run), and
+//! the fill gauges are only ever refreshed by the server test — the
+//! router owns no filters and the fleet's slice servers are never asked
+//! to refresh (no `metrics` op, no state dir, so no checkpoint either).
+
+use lshbloom::config::{EngineMode, PipelineConfig};
+use lshbloom::corpus::Doc;
+use lshbloom::service::{DedupClient, DedupRouter, DedupServer, RouterOptions, ServeOptions};
+use std::io::{BufRead, BufReader, Read, Write};
+
+fn base_cfg() -> PipelineConfig {
+    PipelineConfig {
+        num_perms: 64,
+        expected_docs: 10_000,
+        engine: EngineMode::Concurrent,
+        ..Default::default()
+    }
+}
+
+/// Minimal HTTP/1.1 GET against the metrics endpoint: status line plus
+/// body (the responder closes the connection after one response).
+fn http_get(addr: std::net::SocketAddr, path: &str) -> (String, String) {
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    stream
+        .write_all(format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").as_bytes())
+        .unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut status = String::new();
+    reader.read_line(&mut status).unwrap();
+    let mut line = String::new();
+    loop {
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        if line.trim().is_empty() {
+            break;
+        }
+    }
+    let mut body = String::new();
+    reader.read_to_string(&mut body).unwrap();
+    (status.trim().to_string(), body)
+}
+
+/// The sample value of one exact series (name + label block) in a
+/// Prometheus text exposition, if present.
+fn prom_value(text: &str, series: &str) -> Option<f64> {
+    let prefix = format!("{series} ");
+    text.lines()
+        .find_map(|l| l.strip_prefix(&prefix))
+        .map(|v| v.parse().unwrap_or_else(|e| panic!("bad sample for {series}: {e}")))
+}
+
+fn shutdown(addr: &str) {
+    DedupClient::connect(addr).unwrap().shutdown().unwrap();
+}
+
+const TRAFFIC_THREADS: u64 = 4;
+const BATCHES_PER_THREAD: u64 = 5;
+const DOCS_PER_BATCH: u64 = 8;
+
+/// Globally unique per (thread, batch, item) — no duplicates anywhere,
+/// so the server's filters hold exactly this document set afterwards.
+fn traffic_doc(t: u64, b: u64, i: u64) -> String {
+    format!("obs metrics corpus doc thread {t} batch {b} item {i}")
+}
+
+#[test]
+fn server_metrics_end_to_end() {
+    let cfg = base_cfg();
+    let opts = ServeOptions {
+        metrics_addr: Some("127.0.0.1:0".to_string()),
+        ..ServeOptions::default()
+    };
+    let server = DedupServer::bind_with_opts("127.0.0.1:0", &cfg, &opts).expect("bind");
+    let addr = server.local_addr().unwrap().to_string();
+    let maddr = server.metrics_addr().expect("metrics endpoint must be bound");
+    let handle = std::thread::spawn(move || server.serve().expect("serve"));
+
+    // Concurrent check_batch traffic: 4 clients × 5 batches × 8 docs,
+    // all globally unique (every verdict must be "fresh").
+    let mut drivers = Vec::new();
+    for t in 0..TRAFFIC_THREADS {
+        let addr = addr.clone();
+        drivers.push(std::thread::spawn(move || {
+            let mut client = DedupClient::connect(&addr).unwrap();
+            for b in 0..BATCHES_PER_THREAD {
+                let texts: Vec<String> =
+                    (0..DOCS_PER_BATCH).map(|i| traffic_doc(t, b, i)).collect();
+                let refs: Vec<&str> = texts.iter().map(|s| s.as_str()).collect();
+                let verdicts = client.check_batch(&refs).unwrap();
+                assert!(verdicts.iter().all(|&d| !d), "unique docs must not collide");
+            }
+        }));
+    }
+    for d in drivers {
+        d.join().unwrap();
+    }
+    let requests_sent = TRAFFIC_THREADS * BATCHES_PER_THREAD;
+
+    // The wire twin first: `{"op":"metrics"}` refreshes the fill gauges
+    // and returns the registry as JSON.
+    let mut client = DedupClient::connect(&addr).unwrap();
+    let json = client.metrics_json().unwrap();
+
+    // Then the HTTP scrape (its refresh hook runs again; the filters
+    // are quiescent, so both views must agree).
+    let (status, text) = http_get(maddr, "/metrics");
+    assert!(status.contains("200"), "scrape failed: {status}");
+
+    // Every sample line must parse: `name{labels} value` with a numeric
+    // value (label values never contain spaces in this registry).
+    let mut samples = 0usize;
+    for line in text.lines() {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (series, value) =
+            line.rsplit_once(' ').unwrap_or_else(|| panic!("unparseable line: {line}"));
+        assert!(series.starts_with("lshbloom_"), "unprefixed series: {line}");
+        value
+            .parse::<f64>()
+            .unwrap_or_else(|e| panic!("non-numeric sample in '{line}': {e}"));
+        samples += 1;
+    }
+    assert!(samples > 0, "scrape returned no samples:\n{text}");
+
+    // Request-latency histogram: the per-op count equals the requests
+    // this test sent — exactly. Control ops (stats/metrics/shutdown)
+    // and the router test's traffic (check_bands on its own backends)
+    // never land in the check_batch series.
+    assert_eq!(
+        prom_value(&text, "lshbloom_server_request_seconds_count{op=\"check_batch\"}"),
+        Some(requests_sent as f64),
+        "histogram count must equal requests sent"
+    );
+    let aggregate = prom_value(&text, "lshbloom_server_request_seconds_count")
+        .expect("aggregate request histogram missing");
+    assert!(aggregate >= requests_sent as f64, "aggregate {aggregate} < {requests_sent}");
+    assert!(
+        prom_value(&text, "lshbloom_server_requests_total").unwrap_or(0.0)
+            >= requests_sent as f64
+    );
+
+    // Popcount verification: the engine is deterministic, so a local
+    // replica fed the same unique document set holds byte-identical
+    // filters — its exact fill ratios are the ground truth for the
+    // scraped gauges (sampled popcounts are exact at this filter size).
+    let replica = lshbloom::engine::ConcurrentEngine::from_config(&cfg);
+    let mut docs = Vec::new();
+    for t in 0..TRAFFIC_THREADS {
+        for b in 0..BATCHES_PER_THREAD {
+            for i in 0..DOCS_PER_BATCH {
+                docs.push(Doc { id: docs.len() as u64, text: traffic_doc(t, b, i) });
+            }
+        }
+    }
+    replica.submit(docs);
+    let fills = replica.index().fill_ratios();
+    assert!(!fills.is_empty());
+    for (band, expect) in fills.iter().enumerate() {
+        let series = format!("lshbloom_engine_band_fill_ratio{{band=\"{band}\"}}");
+        let got = prom_value(&text, &series)
+            .unwrap_or_else(|| panic!("missing fill gauge {series}:\n{text}"));
+        assert!(got > 0.0, "band {band} fill gauge must be nonzero after ingest");
+        assert!(
+            (got - expect).abs() < 1e-9,
+            "band {band}: scraped fill {got}, popcount ground truth {expect}"
+        );
+    }
+    let fp = prom_value(&text, "lshbloom_engine_fp_estimate").expect("fp estimate missing");
+    assert!(fp > 0.0 && fp < 1.0, "any-band FP estimate out of range: {fp}");
+
+    // The wire JSON and the scrape expose the same registry.
+    let jfill = json
+        .get("gauges")
+        .and_then(|g| g.get("engine.band_fill_ratio{band=\"0\"}"))
+        .and_then(|v| v.as_f64())
+        .expect("band-0 fill gauge missing from {\"op\":\"metrics\"}");
+    let sfill = prom_value(&text, "lshbloom_engine_band_fill_ratio{band=\"0\"}").unwrap();
+    assert!((jfill - sfill).abs() < 1e-9, "JSON {jfill} vs scrape {sfill}");
+    let hist = json
+        .get("histograms")
+        .and_then(|h| h.get("server.request.seconds{op=\"check_batch\"}"))
+        .expect("check_batch histogram missing from JSON");
+    assert_eq!(hist.get("count").and_then(|v| v.as_u64()), Some(requests_sent));
+    assert!(json.get("uptime_seconds").and_then(|v| v.as_f64()).unwrap() >= 0.0);
+    assert_eq!(
+        json.get("version").and_then(|v| v.as_str()),
+        Some(env!("CARGO_PKG_VERSION"))
+    );
+
+    // `/metrics.json` serves the same document over HTTP.
+    let (jstatus, jbody) = http_get(maddr, "/metrics.json");
+    assert!(jstatus.contains("200"), "json scrape failed: {jstatus}");
+    let parsed = lshbloom::json::parse(&jbody).expect("metrics.json must parse");
+    assert_eq!(
+        parsed.get("version").and_then(|v| v.as_str()),
+        Some(env!("CARGO_PKG_VERSION"))
+    );
+
+    drop(client);
+    shutdown(&addr);
+    handle.join().unwrap();
+}
+
+#[test]
+fn router_backend_metrics_and_error_counter() {
+    let cfg = base_cfg();
+
+    // Two slice backends (no state dir: shutdown writes no checkpoint,
+    // so this fleet never refreshes the global fill gauges the server
+    // test asserts on).
+    let mut backend_handles = Vec::new();
+    let mut backend_addrs = Vec::new();
+    for slice in 0..2 {
+        let opts = ServeOptions { slice: Some((slice, 2)), ..ServeOptions::default() };
+        let server = DedupServer::bind_with_opts("127.0.0.1:0", &cfg, &opts).expect("bind slice");
+        backend_addrs.push(server.local_addr().unwrap().to_string());
+        backend_handles.push(std::thread::spawn(move || server.serve().expect("serve slice")));
+    }
+
+    let ropts = RouterOptions {
+        metrics_addr: Some("127.0.0.1:0".to_string()),
+        ..RouterOptions::default()
+    };
+    let router = DedupRouter::bind("127.0.0.1:0", &cfg, backend_addrs.clone(), &ropts)
+        .expect("bind router");
+    let router_addr = router.local_addr().unwrap().to_string();
+    let maddr = router.metrics_addr().expect("router metrics endpoint must be bound");
+    let router_handle = std::thread::spawn(move || router.serve().expect("route"));
+
+    // Exactly 10 routed checks → 10 fan-outs → 10 samples per backend.
+    let requests = 10u64;
+    let mut client = DedupClient::connect(&router_addr).unwrap();
+    for i in 0..requests {
+        assert!(!client.check(&format!("router metrics fleet doc {i}")).unwrap());
+    }
+
+    let (status, text) = http_get(maddr, "/metrics");
+    assert!(status.contains("200"), "router scrape failed: {status}");
+    for addr in &backend_addrs {
+        let series = format!("lshbloom_router_backend_seconds_count{{backend=\"{addr}\"}}");
+        assert_eq!(
+            prom_value(&text, &series),
+            Some(requests as f64),
+            "per-backend fan-out histogram for {addr}:\n{text}"
+        );
+    }
+    assert_eq!(
+        prom_value(&text, "lshbloom_router_fan_out_seconds_count"),
+        Some(requests as f64),
+        "one fan-out span per routed request"
+    );
+    assert_eq!(
+        prom_value(&text, "lshbloom_router_request_seconds_count{op=\"check\"}"),
+        Some(requests as f64)
+    );
+
+    // Kill backend 1 and wait until it is fully gone, then drive a
+    // request into the hole: the labeled error counter must move.
+    shutdown(&backend_addrs[1]);
+    backend_handles.remove(1).join().unwrap();
+    let mut fresh = DedupClient::connect(&router_addr).unwrap();
+    let err = fresh.check("document after the backend died").unwrap_err();
+    assert!(err.to_string().contains("backend"), "got: {err}");
+
+    let (_, text2) = http_get(maddr, "/metrics");
+    let series = format!(
+        "lshbloom_router_backend_errors_total{{backend=\"{}\"}}",
+        backend_addrs[1]
+    );
+    let errors = prom_value(&text2, &series).unwrap_or(0.0);
+    assert!(errors >= 1.0, "dead backend must increment {series}:\n{text2}");
+    assert!(
+        prom_value(&text2, "lshbloom_router_backend_errors_total").unwrap_or(0.0) >= 1.0,
+        "aggregate backend-error counter must move"
+    );
+    // The healthy backend took no new sample from the failed fan-out's
+    // reply phase — but whether its send raced the abort is timing-
+    // dependent, so only the dead backend's counter is asserted.
+
+    drop(client);
+    drop(fresh);
+    shutdown(&router_addr);
+    router_handle.join().unwrap();
+    shutdown(&backend_addrs[0]);
+    for handle in backend_handles {
+        handle.join().unwrap();
+    }
+}

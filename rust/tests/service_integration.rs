@@ -43,6 +43,16 @@ fn check_query_stats_shutdown_roundtrip() {
     assert_eq!(dups, 1);
     assert!(disk > 0);
 
+    // Operators correlate counter resets with restarts through these.
+    let stats = client.stats_json().unwrap();
+    let uptime = stats.get("uptime_seconds").and_then(|v| v.as_f64());
+    assert!(uptime.is_some_and(|u| u >= 0.0), "uptime_seconds missing: {stats:?}");
+    assert_eq!(
+        stats.get("version").and_then(|v| v.as_str()),
+        Some(env!("CARGO_PKG_VERSION")),
+        "stats must report the crate version"
+    );
+
     client.shutdown().unwrap();
     handle.join().unwrap();
 }
