@@ -1,0 +1,423 @@
+//! Cross-file lint rules: invariants spanning source, docs, and the
+//! build manifest — the checks no off-the-shelf linter can express.
+//!
+//! | Rule | Invariant |
+//! |---|---|
+//! | `wire-op-parity` | every `"op"` the server/router dispatches has a `DedupClient` sender and a docs row |
+//! | `metric-catalog` | metric names registered in code and the OPERATIONS.md catalog table match exactly, both ways |
+//! | `offline-build` | `[dependencies]` in Cargo.toml stays commented out |
+
+use super::scanner::ScannedFile;
+use super::Finding;
+use std::collections::BTreeMap;
+
+/// Rule name: server/router/client/docs wire-op parity.
+pub const WIRE_OP_PARITY: &str = "wire-op-parity";
+/// Rule name: code ↔ OPERATIONS.md metric-name parity.
+pub const METRIC_CATALOG: &str = "metric-catalog";
+/// Rule name: the crate stays dependency-free.
+pub const OFFLINE_BUILD: &str = "offline-build";
+
+/// Display path used for findings anchored in the operations manual.
+pub const OPERATIONS_MD: &str = "docs/OPERATIONS.md";
+/// Display path used for findings anchored in the build manifest.
+pub const CARGO_TOML: &str = "Cargo.toml";
+
+/// A metric/op name is plausible when it is dotted-snake-case; anything
+/// else that happens to sit in a matched position (format arguments,
+/// prose) is skipped rather than reported as a phantom name.
+fn plausible_name(name: &str) -> bool {
+    !name.is_empty()
+        && name
+            .chars()
+            .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '.' || c == '_')
+}
+
+/// Extract `"..."` directly after `pat`, or the base name (up to the
+/// first `{`) of a `&format!("...")` argument.
+fn name_after(line: &str, pat: &str) -> Vec<(String, bool)> {
+    let mut out = Vec::new();
+    for (p, _) in line.match_indices(pat) {
+        let rest = &line[p + pat.len()..];
+        if let Some(r) = rest.strip_prefix('"') {
+            if let Some(end) = r.find('"') {
+                out.push((r[..end].to_string(), false));
+            }
+        } else if let Some(r) = rest.strip_prefix("&format!(\"") {
+            let end = r.find(['{', '"']).unwrap_or(r.len());
+            out.push((r[..end].to_string(), true));
+        }
+    }
+    out
+}
+
+/// `wire-op-parity`: collect every op string the server and router
+/// dispatch on (`Some("<op>")` match arms), then require each to have a
+/// `DedupClient` sender (`("op", Value::str("<op>"))` in `client.rs`)
+/// and a row in the OPERATIONS.md wire-op catalog — and require the
+/// client and docs to list no phantom ops the servers don't dispatch.
+pub fn wire_op_parity(files: &[ScannedFile], operations_md: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    // (op -> first dispatch site) across server.rs + router.rs.
+    let mut dispatched: BTreeMap<String, (String, usize)> = BTreeMap::new();
+    let mut client_ops: BTreeMap<String, usize> = BTreeMap::new();
+    for file in files {
+        let is_dispatch =
+            file.path == "src/service/server.rs" || file.path == "src/service/router.rs";
+        let is_client = file.path == "src/service/client.rs";
+        if !is_dispatch && !is_client {
+            continue;
+        }
+        for (idx, line) in file.lines.iter().enumerate() {
+            if line.in_test {
+                continue;
+            }
+            if is_dispatch {
+                for (name, _) in name_after(&line.code_strs, "Some(") {
+                    if plausible_name(&name) {
+                        dispatched
+                            .entry(name)
+                            .or_insert_with(|| (file.path.clone(), idx + 1));
+                    }
+                }
+            } else {
+                for (name, _) in name_after(&line.code_strs, "(\"op\", Value::str(") {
+                    if plausible_name(&name) {
+                        client_ops.entry(name).or_insert(idx + 1);
+                    }
+                }
+            }
+        }
+    }
+    let docs_ops = docs_table_names(operations_md, "### Wire-op catalog");
+    for (op, (file, lineno)) in &dispatched {
+        if !client_ops.contains_key(op) {
+            out.push(Finding::new(
+                file,
+                *lineno,
+                WIRE_OP_PARITY,
+                &format!("op \"{op}\" is dispatched but DedupClient has no sender for it"),
+            ));
+        }
+        if !docs_ops.contains_key(op.as_str()) {
+            out.push(Finding::new(
+                file,
+                *lineno,
+                WIRE_OP_PARITY,
+                &format!(
+                    "op \"{op}\" is dispatched but missing from the \
+                     {OPERATIONS_MD} wire-op catalog"
+                ),
+            ));
+        }
+    }
+    for (op, lineno) in &client_ops {
+        if !dispatched.contains_key(op) {
+            out.push(Finding::new(
+                "src/service/client.rs",
+                *lineno,
+                WIRE_OP_PARITY,
+                &format!("DedupClient sends op \"{op}\" but no server dispatches it"),
+            ));
+        }
+    }
+    for (op, lineno) in &docs_ops {
+        if !dispatched.contains_key(op) {
+            out.push(Finding::new(
+                OPERATIONS_MD,
+                *lineno,
+                WIRE_OP_PARITY,
+                &format!("wire-op catalog documents \"{op}\" but no server dispatches it"),
+            ));
+        }
+    }
+    out
+}
+
+/// Parse backticked names out of the first cell of every table row in
+/// the section headed `header` (e.g. `### Metric catalog`). Returns
+/// name → 1-indexed docs line. `{label=…}` suffixes are stripped and
+/// `{a,b,c}` alternations expanded, matching how the catalog compresses
+/// related series into one row.
+fn docs_table_names(operations_md: &str, header: &str) -> BTreeMap<String, usize> {
+    let mut out: BTreeMap<String, usize> = BTreeMap::new();
+    let mut in_section = false;
+    let mut in_table = false;
+    for (idx, line) in operations_md.lines().enumerate() {
+        if line.trim_start().starts_with('#') {
+            in_section = line.trim() == header;
+            in_table = false;
+            continue;
+        }
+        if !in_section {
+            continue;
+        }
+        let t = line.trim();
+        if !t.starts_with('|') {
+            if in_table {
+                in_section = false; // table ended; ignore trailing prose
+            }
+            continue;
+        }
+        in_table = true;
+        let Some(first_cell) = t.split('|').nth(1) else { continue };
+        let mut rest = first_cell;
+        while let Some(open) = rest.find('`') {
+            let tail = &rest[open + 1..];
+            let Some(close) = tail.find('`') else { break };
+            for name in expand_docs_name(&tail[..close]) {
+                out.entry(name).or_insert(idx + 1);
+            }
+            rest = &tail[close + 1..];
+        }
+    }
+    out
+}
+
+/// Normalize one backticked docs token into zero or more metric names:
+/// `x{label="v"}` → `x`; `a.{b,c}.d` → `a.b.d`, `a.c.d`; `{op=…}`
+/// annotations (labels without a base) → nothing.
+fn expand_docs_name(token: &str) -> Vec<String> {
+    let token = token.trim();
+    if token.starts_with('{') {
+        return Vec::new();
+    }
+    let Some(open) = token.find('{') else {
+        return if plausible_name(token) { vec![token.to_string()] } else { Vec::new() };
+    };
+    let Some(close) = token.find('}') else { return Vec::new() };
+    let (prefix, inner, suffix) = (&token[..open], &token[open + 1..close], &token[close + 1..]);
+    if inner.contains('=') {
+        let base = format!("{prefix}{suffix}");
+        return if plausible_name(&base) { vec![base] } else { Vec::new() };
+    }
+    inner
+        .split(',')
+        .map(|alt| format!("{prefix}{alt}{suffix}"))
+        .filter(|n| plausible_name(n))
+        .collect()
+}
+
+/// `metric-catalog`: every metric registered through `obs::global()`
+/// (or timed with `obs::span`) in non-test source outside `obs/` itself
+/// must appear in the OPERATIONS.md metric catalog, and every
+/// documented metric must still be registered somewhere — the catalog
+/// can neither rot behind the code nor advertise phantom series.
+pub fn metric_catalog(files: &[ScannedFile], operations_md: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let mut registered: BTreeMap<String, (String, usize)> = BTreeMap::new();
+    for file in files {
+        // obs/ is the registry implementation (and its exposition
+        // tests); analysis/ embeds the extraction patterns as literals.
+        // Neither registers real series.
+        if !file.path.starts_with("src/")
+            || file.path.starts_with("src/obs/")
+            || file.path.starts_with("src/analysis/")
+        {
+            continue;
+        }
+        for (idx, line) in file.lines.iter().enumerate() {
+            if line.in_test {
+                continue;
+            }
+            for pat in [".counter(", ".gauge(", ".histogram("] {
+                for (name, _) in name_after(&line.code_strs, pat) {
+                    if plausible_name(&name) {
+                        registered
+                            .entry(name)
+                            .or_insert_with(|| (file.path.clone(), idx + 1));
+                    }
+                }
+            }
+            for (name, _) in name_after(&line.code_strs, "span(") {
+                if plausible_name(&name) {
+                    registered
+                        .entry(format!("{name}.seconds"))
+                        .or_insert_with(|| (file.path.clone(), idx + 1));
+                }
+            }
+        }
+    }
+    let documented = docs_table_names(operations_md, "### Metric catalog");
+    for (name, (file, lineno)) in &registered {
+        if !documented.contains_key(name.as_str()) {
+            out.push(Finding::new(
+                file,
+                *lineno,
+                METRIC_CATALOG,
+                &format!(
+                    "metric \"{name}\" is registered but missing from the \
+                     {OPERATIONS_MD} metric catalog"
+                ),
+            ));
+        }
+    }
+    for (name, lineno) in &documented {
+        if !registered.contains_key(name) {
+            out.push(Finding::new(
+                OPERATIONS_MD,
+                *lineno,
+                METRIC_CATALOG,
+                &format!("metric catalog documents \"{name}\" but nothing registers it"),
+            ));
+        }
+    }
+    out
+}
+
+/// `offline-build`: the crate's offline guarantee is structural — the
+/// `[dependencies]` section (and dev/build variants) must stay
+/// commented out so nothing can quietly grow a crates.io dependency.
+pub fn offline_build(cargo_toml: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (idx, line) in cargo_toml.lines().enumerate() {
+        let t = line.trim();
+        if t == "[dependencies]" || t == "[dev-dependencies]" || t == "[build-dependencies]" {
+            out.push(Finding::new(
+                CARGO_TOML,
+                idx + 1,
+                OFFLINE_BUILD,
+                &format!(
+                    "active {t} section; the crate must stay dependency-free \
+                     (keep it commented out)"
+                ),
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::scanner::scan;
+
+    const DOCS: &str = "\
+## Serving
+
+### Wire-op catalog
+
+| Op | Meaning |
+|---|---|
+| `check` | query + insert |
+| `stats` | counters |
+
+### Metric catalog
+
+| Metric (internal name) | Type | Meaning |
+|---|---|---|
+| `server.requests.total`, `server.errors.total` | counter | requests |
+| `engine.submit.{prepare_probe,reconcile}.seconds` | histogram | phases |
+| `engine.band_fill_ratio{band=\"B\"}` | gauge | fill |
+| `router.request.seconds` (+ `{op=…}`) | histogram | latency |
+";
+
+    #[test]
+    fn docs_table_parsing_expands_and_strips() {
+        let names = docs_table_names(DOCS, "### Metric catalog");
+        for expect in [
+            "server.requests.total",
+            "server.errors.total",
+            "engine.submit.prepare_probe.seconds",
+            "engine.submit.reconcile.seconds",
+            "engine.band_fill_ratio",
+            "router.request.seconds",
+        ] {
+            assert!(names.contains_key(expect), "missing {expect}: {names:?}");
+        }
+        assert!(!names.keys().any(|k| k.contains('{')), "labels must be stripped");
+        // The wire-op table must not leak into the metric set.
+        assert!(!names.contains_key("check"));
+    }
+
+    #[test]
+    fn wire_op_parity_catches_every_side() {
+        let server = scan(
+            "src/service/server.rs",
+            "fn d(op: Option<&str>) { match op {\n\
+                 Some(\"check\") => {}\n\
+                 Some(\"flush\") => {}\n\
+                 _ => {}\n\
+             } }\n",
+        );
+        let client = scan(
+            "src/service/client.rs",
+            "fn c() {\n\
+                 send((\"op\", Value::str(\"check\")));\n\
+                 send((\"op\", Value::str(\"stats\")));\n\
+             }\n",
+        );
+        let f = wire_op_parity(&[server, client], DOCS);
+        let msgs: Vec<&str> = f.iter().map(|x| x.message.as_str()).collect();
+        // "flush": dispatched, but no client sender and no docs row.
+        assert!(
+            msgs.iter().any(|m| m.contains("\"flush\"") && m.contains("no sender")),
+            "{msgs:?}"
+        );
+        assert!(msgs.iter().any(|m| m.contains("\"flush\"") && m.contains("wire-op catalog")));
+        // "stats": client + docs, but nothing dispatches it.
+        assert!(msgs.iter().any(|m| m.contains("\"stats\"") && m.contains("no server dispatches")));
+        assert_eq!(f.len(), 4, "{msgs:?}"); // flush×2 + stats client + stats docs
+    }
+
+    #[test]
+    fn metric_catalog_catches_both_directions() {
+        let src = scan(
+            "src/engine/x.rs",
+            "fn f() {\n\
+                 crate::obs::global().counter(\"server.requests.total\").inc();\n\
+                 crate::obs::global().counter(\"engine.rogue.total\").inc();\n\
+                 let _t = crate::obs::span(\"engine.submit.prepare_probe\");\n\
+             }\n",
+        );
+        let f = metric_catalog(&[src], DOCS);
+        let msgs: Vec<&str> = f.iter().map(|x| x.message.as_str()).collect();
+        assert!(msgs.iter().any(|m| m.contains("engine.rogue.total") && m.contains("missing")));
+        // Documented but unregistered names are flagged on the docs side.
+        assert!(msgs
+            .iter()
+            .any(|m| m.contains("server.errors.total") && m.contains("nothing registers")));
+        // Registered + documented names are clean.
+        assert!(!msgs.iter().any(|m| m.contains("server.requests.total\" is registered")));
+        assert!(!msgs
+            .iter()
+            .any(|m| m.contains("engine.submit.prepare_probe.seconds\" is registered")));
+    }
+
+    #[test]
+    fn format_built_metric_names_reduce_to_their_base() {
+        let src = scan(
+            "src/engine/x.rs",
+            "fn f(band: usize) {\n\
+                 reg.gauge(&format!(\"engine.band_fill_ratio{{band=\\\"{band}\\\"}}\")).set(0.5);\n\
+             }\n",
+        );
+        let f = metric_catalog(&[src], DOCS);
+        assert!(
+            !f.iter().any(|x| x.message.contains("band_fill_ratio\" is registered")),
+            "label suffix must be stripped before the docs lookup: {f:?}"
+        );
+    }
+
+    #[test]
+    fn offline_build_flags_active_dependency_sections() {
+        let clean = "[package]\nname = \"x\"\n# [dependencies]\n# anyhow = \"1\"\n";
+        assert!(offline_build(clean).is_empty());
+        let dirty = "[package]\nname = \"x\"\n[dependencies]\nanyhow = \"1\"\n";
+        let f = offline_build(dirty);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 3);
+        assert_eq!(f[0].rule, OFFLINE_BUILD);
+    }
+
+    #[test]
+    fn test_code_registrations_are_exempt() {
+        let src = scan(
+            "src/engine/x.rs",
+            "#[cfg(test)]\nmod tests {\n\
+                 fn t() { reg.counter(\"test.only.total\").inc(); }\n}\n",
+        );
+        let f = metric_catalog(&[src], DOCS);
+        assert!(!f.iter().any(|x| x.message.contains("test.only.total")), "{f:?}");
+    }
+}

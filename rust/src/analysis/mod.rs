@@ -1,0 +1,303 @@
+//! In-repo static analysis: repo-specific soundness invariants checked
+//! at `cargo test` time and via the `lint` CLI subcommand.
+//!
+//! The tree's correctness rests on hand-kept invariants no off-the-shelf
+//! tool expresses: every `unsafe` site carries a written justification,
+//! the serving/persistence paths cannot panic, verdict-carrying atomics
+//! follow the documented ordering discipline, and the wire protocol and
+//! metric catalog stay in lockstep with their documentation. This module
+//! is a dependency-free linter for exactly those rules:
+//!
+//! - [`scanner`] — a lexical pass that strips comments and string/char
+//!   literals so rules never fire on text inside them;
+//! - [`rules`] — per-file rules (`safety-comment`, `no-panic-paths`,
+//!   `ordering-discipline`, `no-stray-print`);
+//! - [`cross`] — cross-file rules (`wire-op-parity`, `metric-catalog`,
+//!   `offline-build`).
+//!
+//! Escapes: a finding is suppressed by `// lint: allow(<rule>)` on the
+//! same line or the line directly above. Every escape must suppress
+//! something and name a real rule — dead or misspelled escapes are
+//! themselves findings (`stale-allow`), so suppressions cannot rot.
+//! Doc comments (`///`, `//!`) quoting the syntax are never escapes.
+//!
+//! Entry points: [`lint_set`] for an in-memory source set (used by the
+//! fixture tests), [`lint_tree`] for the on-disk tree (used by
+//! `tests/static_analysis.rs` and `lshbloom lint`).
+
+pub mod cross;
+pub mod rules;
+pub mod scanner;
+
+use scanner::ScannedFile;
+use std::collections::BTreeSet;
+use std::fmt;
+use std::path::Path;
+
+/// Rule name: escape hygiene (unused or unknown `lint: allow`).
+pub const STALE_ALLOW: &str = "stale-allow";
+
+/// Every rule the engine knows, including the escape-hygiene meta-rule.
+pub const RULE_NAMES: &[&str] = &[
+    rules::SAFETY_COMMENT,
+    rules::NO_PANIC_PATHS,
+    rules::ORDERING_DISCIPLINE,
+    rules::NO_STRAY_PRINT,
+    cross::WIRE_OP_PARITY,
+    cross::METRIC_CATALOG,
+    cross::OFFLINE_BUILD,
+    STALE_ALLOW,
+];
+
+/// One diagnostic: a rule violation at a specific source location.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Path relative to `rust/` (e.g. `src/service/server.rs`), or a
+    /// repo-level display path for docs/manifest findings.
+    pub file: String,
+    /// 1-indexed line number.
+    pub line: usize,
+    /// Rule name, one of [`RULE_NAMES`].
+    pub rule: String,
+    /// Human-readable explanation of the violation.
+    pub message: String,
+}
+
+impl Finding {
+    /// Build a finding; `line` is 1-indexed.
+    pub fn new(file: &str, line: usize, rule: &str, message: &str) -> Self {
+        Finding {
+            file: file.to_string(),
+            line,
+            rule: rule.to_string(),
+            message: message.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Everything the rule set looks at, already loaded into memory.
+pub struct SourceSet {
+    /// Scanned `.rs` files, paths relative to `rust/`.
+    pub files: Vec<ScannedFile>,
+    /// Contents of `docs/OPERATIONS.md` (wire-op + metric catalogs).
+    pub operations_md: String,
+    /// Contents of `rust/Cargo.toml` (offline-build rule).
+    pub cargo_toml: String,
+}
+
+/// Result of a full-tree lint: the surviving findings plus how much of
+/// the tree was covered (so callers can assert the walk saw the code).
+pub struct LintReport {
+    /// Findings after escape application, sorted by (file, line, rule).
+    pub findings: Vec<Finding>,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+}
+
+/// Run every rule over a source set and apply `lint: allow` escapes.
+///
+/// Escape semantics: an escape `(line, rule)` in file F suppresses
+/// findings of `rule` in F at `line` (trailing comment) or `line + 1`
+/// (comment on its own line above the offending code). Escapes that
+/// suppress nothing, or name an unknown rule, produce [`STALE_ALLOW`]
+/// findings — which are themselves unsuppressible.
+pub fn lint_set(set: &SourceSet) -> Vec<Finding> {
+    let mut raw: Vec<Finding> = Vec::new();
+    for file in &set.files {
+        raw.extend(rules::per_file_rules(file));
+    }
+    raw.extend(cross::wire_op_parity(&set.files, &set.operations_md));
+    raw.extend(cross::metric_catalog(&set.files, &set.operations_md));
+    raw.extend(cross::offline_build(&set.cargo_toml));
+
+    // Apply escapes, remembering which ones earned their keep.
+    let mut used: BTreeSet<(String, usize, String)> = BTreeSet::new();
+    let mut findings: Vec<Finding> = Vec::new();
+    for f in raw {
+        let suppressed = set
+            .files
+            .iter()
+            .find(|sf| sf.path == f.file)
+            .map(|sf| {
+                sf.escapes.iter().any(|e| {
+                    let hit = e.rule == f.rule && (e.line == f.line || e.line + 1 == f.line);
+                    if hit {
+                        used.insert((sf.path.clone(), e.line, e.rule.clone()));
+                    }
+                    hit
+                })
+            })
+            .unwrap_or(false);
+        if !suppressed {
+            findings.push(f);
+        }
+    }
+
+    // Escape hygiene: every escape must name a real rule and suppress
+    // at least one finding, in source and test code alike.
+    for file in &set.files {
+        for e in &file.escapes {
+            if !RULE_NAMES.contains(&e.rule.as_str()) {
+                findings.push(Finding::new(
+                    &file.path,
+                    e.line,
+                    STALE_ALLOW,
+                    &format!("lint escape names unknown rule \"{}\"", e.rule),
+                ));
+            } else if !used.contains(&(file.path.clone(), e.line, e.rule.clone())) {
+                findings.push(Finding::new(
+                    &file.path,
+                    e.line,
+                    STALE_ALLOW,
+                    &format!("lint escape allow({}) suppresses nothing; remove it", e.rule),
+                ));
+            }
+        }
+    }
+
+    findings.sort_by(|a, b| {
+        (&a.file, a.line, &a.rule, &a.message).cmp(&(&b.file, b.line, &b.rule, &b.message))
+    });
+    findings
+}
+
+/// Recursively collect `.rs` files under `dir`, sorted for determinism.
+fn walk_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<(), String> {
+    let mut entries: Vec<std::path::PathBuf> = std::fs::read_dir(dir)
+        .map_err(|e| format!("read_dir {}: {e}", dir.display()))?
+        .filter_map(|ent| ent.ok().map(|ent| ent.path()))
+        .collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            walk_rs(&path, out)?;
+        } else if path.extension().is_some_and(|ext| ext == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint the on-disk tree rooted at the repository root (the directory
+/// containing `rust/` and `docs/`). Scans `rust/src` and `rust/tests`,
+/// plus `docs/OPERATIONS.md` and `rust/Cargo.toml` for the cross rules.
+pub fn lint_tree(repo_root: &Path) -> Result<LintReport, String> {
+    let rust_root = repo_root.join("rust");
+    let mut paths = Vec::new();
+    for sub in ["src", "tests"] {
+        let dir = rust_root.join(sub);
+        if dir.is_dir() {
+            walk_rs(&dir, &mut paths)?;
+        }
+    }
+    if paths.is_empty() {
+        return Err(format!("no .rs files found under {}", rust_root.display()));
+    }
+    let mut files = Vec::with_capacity(paths.len());
+    for path in &paths {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let rel = path
+            .strip_prefix(&rust_root)
+            .map_err(|_| format!("path {} escapes {}", path.display(), rust_root.display()))?
+            .to_string_lossy()
+            .replace('\\', "/");
+        files.push(scanner::scan(&rel, &text));
+    }
+    let operations_md = std::fs::read_to_string(repo_root.join("docs/OPERATIONS.md"))
+        .map_err(|e| format!("read docs/OPERATIONS.md: {e}"))?;
+    let cargo_toml = std::fs::read_to_string(rust_root.join("Cargo.toml"))
+        .map_err(|e| format!("read rust/Cargo.toml: {e}"))?;
+    let files_scanned = files.len();
+    let set = SourceSet { files, operations_md, cargo_toml };
+    Ok(LintReport { findings: lint_set(&set), files_scanned })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn set_of(files: Vec<ScannedFile>) -> SourceSet {
+        SourceSet {
+            files,
+            operations_md: String::new(),
+            cargo_toml: "# [dependencies]\n".to_string(),
+        }
+    }
+
+    #[test]
+    fn escape_on_line_above_suppresses_and_counts_as_used() {
+        let src = "fn f() {\n\
+                   // lint: allow(no-stray-print) operator-facing output\n\
+                   println!(\"x\");\n\
+                   }\n";
+        let findings = lint_set(&set_of(vec![scanner::scan("src/engine/x.rs", src)]));
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn trailing_escape_on_same_line_suppresses() {
+        let src = "fn f() {\n\
+                   println!(\"x\"); // lint: allow(no-stray-print) deliberate\n\
+                   }\n";
+        let findings = lint_set(&set_of(vec![scanner::scan("src/engine/x.rs", src)]));
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn unused_escape_is_a_stale_allow_finding() {
+        let src = "fn f() {\n\
+                   // lint: allow(no-stray-print)\n\
+                   let x = 1;\n\
+                   let _ = x;\n\
+                   }\n";
+        let findings = lint_set(&set_of(vec![scanner::scan("src/engine/x.rs", src)]));
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert_eq!(findings[0].rule, STALE_ALLOW);
+        assert_eq!(findings[0].line, 2);
+        assert!(findings[0].message.contains("suppresses nothing"));
+    }
+
+    #[test]
+    fn unknown_rule_escape_is_rejected() {
+        let src = "fn f() {\n\
+                   println!(\"x\"); // lint: allow(no-printz)\n\
+                   }\n";
+        let findings = lint_set(&set_of(vec![scanner::scan("src/engine/x.rs", src)]));
+        let rules: Vec<&str> = findings.iter().map(|f| f.rule.as_str()).collect();
+        // The typo'd escape suppresses nothing, so the print finding
+        // survives AND the escape itself is flagged.
+        assert!(rules.contains(&STALE_ALLOW), "{findings:?}");
+        assert!(rules.contains(&rules::NO_STRAY_PRINT), "{findings:?}");
+        assert!(findings.iter().any(|f| f.message.contains("unknown rule")));
+    }
+
+    #[test]
+    fn findings_are_sorted_and_display_as_file_line_rule() {
+        let b = scanner::scan(
+            "src/service/b.rs",
+            "fn f() { let x: Option<u32> = None; x.unwrap(); }\n",
+        );
+        let a = scanner::scan("src/persist/a.rs", "fn g() { panic!(\"boom\"); }\n");
+        let findings = lint_set(&set_of(vec![b, a]));
+        assert_eq!(findings.len(), 2, "{findings:?}");
+        assert!(findings[0].file < findings[1].file);
+        let shown = findings[0].to_string();
+        assert!(
+            shown.starts_with("src/persist/a.rs:1: [no-panic-paths]"),
+            "unexpected display: {shown}"
+        );
+    }
+
+    #[test]
+    fn lint_tree_errors_on_missing_root() {
+        let err = lint_tree(Path::new("/nonexistent-lint-root")).unwrap_err();
+        assert!(err.contains("no .rs files") || err.contains("read_dir"), "{err}");
+    }
+}

@@ -1,0 +1,319 @@
+//! Per-file lint rules: invariants checkable one source file at a time.
+//!
+//! Every rule walks the channels produced by [`super::scanner`] and
+//! emits [`Finding`]s with 1-indexed line numbers. Escape handling
+//! (`// lint: allow(<rule>)`) is applied by the engine in
+//! [`super::lint_set`], not here — rules always report raw hits.
+//!
+//! | Rule | Invariant |
+//! |---|---|
+//! | `safety-comment` | every `unsafe` site carries a `// SAFETY:` justification |
+//! | `no-panic-paths` | no `unwrap`/`expect`/`panic!`/`todo!` in serving/persistence non-test code |
+//! | `ordering-discipline` | no `Ordering::Relaxed` on filter loads/`fetch_or` in `bloom/`, `engine/`, `persist/` |
+//! | `no-stray-print` | `println!`/`dbg!` only in the CLI, report, and bench layers |
+
+use super::scanner::ScannedFile;
+use super::Finding;
+
+/// Rule name: `unsafe` sites must carry a `// SAFETY:` comment.
+pub const SAFETY_COMMENT: &str = "safety-comment";
+/// Rule name: panic-capable calls banned in serving/persistence paths.
+pub const NO_PANIC_PATHS: &str = "no-panic-paths";
+/// Rule name: relaxed ordering banned on verdict-carrying atomics.
+pub const ORDERING_DISCIPLINE: &str = "ordering-discipline";
+/// Rule name: `println!`/`dbg!` confined to CLI/report/bench layers.
+pub const NO_STRAY_PRINT: &str = "no-stray-print";
+
+/// Whether `code` contains `token` delimited by non-identifier chars
+/// (so `unsafe_op_in_unsafe_fn` does not count as `unsafe`, and
+/// `eprintln!` does not count as `println!`).
+pub(crate) fn has_token(code: &str, token: &str) -> bool {
+    let bytes = code.as_bytes();
+    for (p, _) in code.match_indices(token) {
+        let before_ok = p == 0 || {
+            let b = bytes[p - 1] as char;
+            !(b.is_ascii_alphanumeric() || b == '_')
+        };
+        let after = p + token.len();
+        let after_ok = after >= bytes.len() || {
+            let b = bytes[after] as char;
+            !(b.is_ascii_alphanumeric() || b == '_')
+        };
+        if before_ok && after_ok {
+            return true;
+        }
+    }
+    false
+}
+
+/// Run every per-file rule over one scanned file.
+pub fn per_file_rules(file: &ScannedFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    safety_comment(file, &mut out);
+    no_panic_paths(file, &mut out);
+    ordering_discipline(file, &mut out);
+    no_stray_print(file, &mut out);
+    out
+}
+
+/// Count `unsafe` sites (lines holding an `unsafe` token) in a file —
+/// exposed so the integration test can assert the tree-wide inventory
+/// the SAFETY sweep covers.
+pub fn count_unsafe_sites(file: &ScannedFile) -> usize {
+    file.lines.iter().filter(|l| has_token(&l.code, "unsafe")).count()
+}
+
+/// `safety-comment`: every line with an `unsafe` token must have a
+/// comment containing `SAFETY:` on the same line or in the contiguous
+/// run of comment/attribute lines directly above it.
+fn safety_comment(file: &ScannedFile, out: &mut Vec<Finding>) {
+    for (idx, line) in file.lines.iter().enumerate() {
+        if !has_token(&line.code, "unsafe") {
+            continue;
+        }
+        let mut text = line.comment.clone();
+        let mut j = idx;
+        while j > 0 {
+            let prev = &file.lines[j - 1];
+            let code = prev.code.trim();
+            let is_attr = code.starts_with("#[") || code.starts_with("#![");
+            if code.is_empty() && prev.comment.trim().is_empty() {
+                break; // blank line ends the run
+            }
+            if !code.is_empty() && !is_attr {
+                break; // real code ends the run
+            }
+            text.push_str(&prev.comment);
+            j -= 1;
+        }
+        if !text.contains("SAFETY:") {
+            out.push(Finding::new(
+                &file.path,
+                idx + 1,
+                SAFETY_COMMENT,
+                "unsafe site without a `// SAFETY:` justification directly above it",
+            ));
+        }
+    }
+}
+
+/// Paths where a panic would kill a serving thread or tear persistent
+/// state mid-write — the zones `no-panic-paths` protects.
+fn panic_free_zone(path: &str) -> bool {
+    path.starts_with("src/service/")
+        || path.starts_with("src/persist/")
+        || path == "src/pipeline/supervisor.rs"
+}
+
+/// `no-panic-paths`: inside the panic-free zones, non-test code must
+/// not call `.unwrap()`, `.expect(...)`, `panic!`, or `todo!` —
+/// failures must become error replies or propagated `Result`s.
+fn no_panic_paths(file: &ScannedFile, out: &mut Vec<Finding>) {
+    if !panic_free_zone(&file.path) {
+        return;
+    }
+    for (idx, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let code = &line.code;
+        let hit = if code.contains(".unwrap()") {
+            Some(".unwrap()")
+        } else if code.contains(".expect(") {
+            Some(".expect(...)")
+        } else if has_token(code, "panic!") {
+            Some("panic!")
+        } else if has_token(code, "todo!") {
+            Some("todo!")
+        } else {
+            None
+        };
+        if let Some(what) = hit {
+            out.push(Finding::new(
+                &file.path,
+                idx + 1,
+                NO_PANIC_PATHS,
+                &format!("{what} in a panic-free zone; return an error instead"),
+            ));
+        }
+    }
+}
+
+/// Directories whose atomics carry dedup verdicts or checkpoint bits.
+fn ordering_zone(path: &str) -> bool {
+    path.starts_with("src/bloom/")
+        || path.starts_with("src/engine/")
+        || path.starts_with("src/persist/")
+}
+
+/// `ordering-discipline`: in `bloom/`, `engine/`, `persist/` non-test
+/// code, `Ordering::Relaxed` must not appear on a line that loads or
+/// `fetch_or`s an atomic — verdict-carrying filter traffic needs
+/// acquire/release pairing. Monotone stat counters are annotated with
+/// `// lint: allow(ordering-discipline)` instead.
+fn ordering_discipline(file: &ScannedFile, out: &mut Vec<Finding>) {
+    if !ordering_zone(&file.path) {
+        return;
+    }
+    for (idx, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let code = &line.code;
+        if code.contains("Ordering::Relaxed")
+            && (code.contains(".load(") || code.contains(".fetch_or("))
+        {
+            out.push(Finding::new(
+                &file.path,
+                idx + 1,
+                ORDERING_DISCIPLINE,
+                "Ordering::Relaxed on a load/fetch_or in a verdict-carrying module; \
+                 use Acquire/Release (or annotate a stat counter)",
+            ));
+        }
+    }
+}
+
+/// Layers whose job is writing to stdout.
+fn print_allowed(path: &str) -> bool {
+    path == "src/main.rs"
+        || path.starts_with("src/cli/")
+        || path.starts_with("src/report/")
+        || path.starts_with("benches/")
+}
+
+/// `no-stray-print`: `println!`/`dbg!` are debugging leftovers
+/// everywhere except the CLI, report, and bench layers — library code
+/// logs through `crate::logging` macros instead. Applies to test code
+/// too (stray prints in integration tests pollute harness output).
+fn no_stray_print(file: &ScannedFile, out: &mut Vec<Finding>) {
+    if print_allowed(&file.path) {
+        return;
+    }
+    for (idx, line) in file.lines.iter().enumerate() {
+        for token in ["println!", "dbg!"] {
+            if has_token(&line.code, token) {
+                out.push(Finding::new(
+                    &file.path,
+                    idx + 1,
+                    NO_STRAY_PRINT,
+                    &format!("{token} outside the CLI/report/bench layers; use logging macros"),
+                ));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::scanner::scan;
+
+    fn findings(path: &str, src: &str) -> Vec<Finding> {
+        per_file_rules(&scan(path, src))
+    }
+
+    fn rules_of(f: &[Finding]) -> Vec<&str> {
+        f.iter().map(|x| x.rule.as_str()).collect()
+    }
+
+    #[test]
+    fn unsafe_without_safety_comment_is_flagged() {
+        let src = "fn f(p: *const u64) -> u64 {\n    unsafe { *p }\n}\n";
+        let f = findings("src/bloom/x.rs", src);
+        assert!(rules_of(&f).contains(&SAFETY_COMMENT), "{f:?}");
+        assert_eq!(f[0].line, 2);
+    }
+
+    #[test]
+    fn safety_comment_above_or_inline_satisfies_the_rule() {
+        let above =
+            "fn f(p: *const u64) -> u64 {\n    // SAFETY: p is valid\n    unsafe { *p }\n}\n";
+        assert!(findings("src/bloom/x.rs", above).is_empty());
+        let inline = "fn f(p: *const u64) -> u64 {\n    unsafe { *p } // SAFETY: p is valid\n}\n";
+        assert!(findings("src/bloom/x.rs", inline).is_empty());
+    }
+
+    #[test]
+    fn safety_comment_run_passes_through_attributes() {
+        let src = "// SAFETY: exclusive owner\n#[allow(dead_code)]\nunsafe impl Send for X {}\n";
+        assert!(findings("src/bloom/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn blank_line_breaks_the_safety_comment_run() {
+        let src = "// SAFETY: stale\n\nunsafe impl Send for X {}\n";
+        let f = findings("src/bloom/x.rs", src);
+        assert!(rules_of(&f).contains(&SAFETY_COMMENT));
+    }
+
+    #[test]
+    fn unsafe_in_identifier_or_comment_is_not_a_site() {
+        let src = "#![deny(unsafe_op_in_unsafe_fn)]\n// unsafe in prose\nfn f() {}\n";
+        assert!(findings("src/bloom/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn panic_sites_flagged_only_in_zone_and_outside_tests() {
+        let src = "fn f() { x.unwrap(); }\n\
+                   fn g() { y.expect(\"boom\"); }\n\
+                   fn h() { panic!(\"no\"); }\n\
+                   fn i() { todo!() }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       fn t() { z.unwrap(); }\n\
+                   }\n";
+        let f = findings("src/service/x.rs", src);
+        assert_eq!(rules_of(&f), vec![NO_PANIC_PATHS; 4], "{f:?}");
+        assert_eq!(f.iter().map(|x| x.line).collect::<Vec<_>>(), vec![1, 2, 3, 4]);
+        assert!(findings("src/engine/x.rs", src).is_empty(), "engine is not a panic-free zone");
+    }
+
+    #[test]
+    fn unwrap_or_variants_are_not_flagged() {
+        let src = "fn f() { x.unwrap_or(0); y.unwrap_or_else(|| 1); z.expect_err(\"e\"); }\n";
+        assert!(findings("src/service/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn relaxed_load_and_fetch_or_flagged_in_zone() {
+        let src = "fn f(w: &AtomicU64) {\n\
+                       w.load(Ordering::Relaxed);\n\
+                       w.fetch_or(1, Ordering::Relaxed);\n\
+                       w.fetch_add(1, Ordering::Relaxed);\n\
+                       w.load(Ordering::Acquire);\n\
+                   }\n";
+        let f = findings("src/engine/x.rs", src);
+        assert_eq!(rules_of(&f), vec![ORDERING_DISCIPLINE; 2], "{f:?}");
+        assert_eq!(f.iter().map(|x| x.line).collect::<Vec<_>>(), vec![2, 3]);
+        assert!(findings("src/obs/x.rs", src).is_empty(), "obs is allowlisted");
+    }
+
+    #[test]
+    fn stray_print_flagged_outside_allowed_layers() {
+        let src = "fn f() { println!(\"x\"); dbg!(1); eprintln!(\"ok\"); }\n";
+        let f = findings("src/engine/x.rs", src);
+        assert_eq!(rules_of(&f), vec![NO_STRAY_PRINT; 2], "eprintln must not match");
+        assert!(findings("src/cli/x.rs", src).is_empty());
+        assert!(findings("src/main.rs", src).is_empty());
+        assert!(findings("src/report/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn stray_print_in_test_code_is_still_flagged() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t() { println!(\"debug\"); }\n}\n";
+        let f = findings("tests/x.rs", src);
+        assert_eq!(rules_of(&f), vec![NO_STRAY_PRINT]);
+    }
+
+    #[test]
+    fn patterns_inside_strings_and_comments_never_fire() {
+        let src = "fn f() {\n\
+                       let s = \"call .unwrap() and println! now\";\n\
+                       // .expect( panic! todo! println! dbg!\n\
+                       let r = r#\"Ordering::Relaxed .load(\"#;\n\
+                   }\n";
+        assert!(findings("src/service/x.rs", src).is_empty());
+        assert!(findings("src/engine/x.rs", src).is_empty());
+    }
+}

@@ -1,0 +1,501 @@
+//! Line-oriented Rust source scanner: the lexical substrate every lint
+//! rule matches against.
+//!
+//! Rules must never fire on text inside comments or string literals
+//! (`"call .unwrap() here"` in a doc comment is not a panic site), and
+//! conversely must be able to *read* comments (`// SAFETY:`
+//! justifications, `// lint: allow(...)` escapes) and string contents
+//! (wire-op and metric-name literals). So the scanner splits every
+//! source line into three channels:
+//!
+//! * [`ScannedLine::code`] — code with comments removed and
+//!   string/char-literal *contents* removed (delimiters kept, so brace
+//!   tracking still works);
+//! * [`ScannedLine::code_strs`] — code with comments removed but
+//!   literals intact (for rules that extract `"op"`/metric names);
+//! * [`ScannedLine::comment`] — the comment text on that line,
+//!   including each line's share of a multi-line `/* */` block.
+//!
+//! The splitter is a character-level state machine that understands
+//! nested block comments, escapes inside string and char literals, raw
+//! strings (`r"…"`, `r#"…"#`, any hash depth), byte literals, and the
+//! char-literal/lifetime ambiguity of `'` (`'x'` and `'"'` are
+//! literals; `'a` in `&'a str` is a lifetime tick). A second pass marks
+//! every line covered by a `#[cfg(test)]` item via brace-depth
+//! tracking, so rules can exempt test code.
+
+/// One source line, split into its lexical channels.
+pub struct ScannedLine {
+    /// Code with comments stripped and literal contents blanked.
+    pub code: String,
+    /// Code with comments stripped, literals kept verbatim.
+    pub code_strs: String,
+    /// Comment text present on this line (line or block).
+    pub comment: String,
+    /// Whether the line is inside a `#[cfg(test)]` item.
+    pub in_test: bool,
+}
+
+/// One `// lint: allow(<rule>)` escape found in a comment.
+pub struct Escape {
+    /// 1-indexed line the escape comment sits on.
+    pub line: usize,
+    /// Rule name inside the parentheses.
+    pub rule: String,
+}
+
+/// A fully scanned source file.
+pub struct ScannedFile {
+    /// Path relative to the crate root, forward slashes (`src/...`).
+    pub path: String,
+    /// Per-line channels, index 0 = line 1.
+    pub lines: Vec<ScannedLine>,
+    /// Every lint-allow escape in the file, in line order.
+    pub escapes: Vec<Escape>,
+}
+
+/// Lexer state carried across lines.
+enum St {
+    Code,
+    Line,
+    Block(u32),
+    Str,
+    RawStr(u32),
+    Char,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Number of `#`s between `r` at `i` and the opening quote, or `None`
+/// if the characters after `i` do not start a raw string.
+fn raw_string_hashes(chars: &[char], i: usize) -> Option<u32> {
+    let mut j = i + 1;
+    let mut hashes = 0u32;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some(hashes)
+    } else {
+        None
+    }
+}
+
+/// Scan `text` into per-line channels. `path` is stored verbatim.
+pub fn scan(path: &str, text: &str) -> ScannedFile {
+    let chars: Vec<char> = text.chars().collect();
+    let n = chars.len();
+    let mut lines: Vec<ScannedLine> = Vec::new();
+    let mut code = String::new();
+    let mut code_strs = String::new();
+    let mut comment = String::new();
+    let mut st = St::Code;
+    let mut i = 0usize;
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            if matches!(st, St::Line) {
+                st = St::Code;
+            }
+            lines.push(ScannedLine {
+                code: std::mem::take(&mut code),
+                code_strs: std::mem::take(&mut code_strs),
+                comment: std::mem::take(&mut comment),
+                in_test: false,
+            });
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    st = St::Line;
+                    comment.push_str("//");
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = St::Block(1);
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    code_strs.push('"');
+                    st = St::Str;
+                    i += 1;
+                } else if c == 'r' && !prev_is_ident_except_b(&chars, i) {
+                    if let Some(h) = raw_string_hashes(&chars, i) {
+                        code.push_str("r\"");
+                        for k in 0..(2 + h as usize) {
+                            code_strs.push(chars[i + k]);
+                        }
+                        st = St::RawStr(h);
+                        i += 2 + h as usize;
+                    } else {
+                        code.push(c);
+                        code_strs.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // Char literal iff the tick is followed by an escape,
+                    // or by exactly one char and a closing tick;
+                    // otherwise it is a lifetime (`'a`, `'static`, `'_`).
+                    let is_char_lit = match next {
+                        Some('\\') => true,
+                        Some(_) => chars.get(i + 2) == Some(&'\''),
+                        None => false,
+                    };
+                    code.push('\'');
+                    code_strs.push('\'');
+                    if is_char_lit {
+                        st = St::Char;
+                    }
+                    i += 1;
+                } else {
+                    code.push(c);
+                    code_strs.push(c);
+                    i += 1;
+                }
+            }
+            St::Line => {
+                comment.push(c);
+                i += 1;
+            }
+            St::Block(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    st = St::Block(depth + 1);
+                    comment.push_str("/*");
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    st = if depth <= 1 { St::Code } else { St::Block(depth - 1) };
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    code_strs.push(c);
+                    // Keep the escaped char out of delimiter detection;
+                    // a bare trailing backslash (line continuation) lets
+                    // the top-of-loop newline handling run.
+                    if let Some(&e) = chars.get(i + 1) {
+                        if e != '\n' {
+                            code_strs.push(e);
+                            i += 2;
+                        } else {
+                            i += 1;
+                        }
+                    } else {
+                        i += 1;
+                    }
+                } else if c == '"' {
+                    code.push('"');
+                    code_strs.push('"');
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    code_strs.push(c);
+                    i += 1;
+                }
+            }
+            St::RawStr(h) => {
+                if c == '"' {
+                    let mut all = true;
+                    for k in 0..h as usize {
+                        if chars.get(i + 1 + k) != Some(&'#') {
+                            all = false;
+                            break;
+                        }
+                    }
+                    if all {
+                        code.push('"');
+                        for k in 0..=(h as usize) {
+                            code_strs.push(chars[i + k]);
+                        }
+                        st = St::Code;
+                        i += 1 + h as usize;
+                    } else {
+                        code_strs.push(c);
+                        i += 1;
+                    }
+                } else {
+                    code_strs.push(c);
+                    i += 1;
+                }
+            }
+            St::Char => {
+                if c == '\\' {
+                    code_strs.push(c);
+                    if let Some(&e) = chars.get(i + 1) {
+                        code_strs.push(e);
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    code.push('\'');
+                    code_strs.push('\'');
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    code_strs.push(c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !code_strs.is_empty() || !comment.is_empty() {
+        lines.push(ScannedLine { code, code_strs, comment, in_test: false });
+    }
+
+    mark_test_regions(&mut lines);
+    let escapes = collect_escapes(&lines);
+    ScannedFile { path: path.to_string(), lines, escapes }
+}
+
+/// Whether `chars[i-1]` is an identifier char, treating a lone `b`
+/// prefix (byte/raw-byte string) as *not* one so `br#"…"#` still scans
+/// as a raw string.
+fn prev_is_ident_except_b(chars: &[char], i: usize) -> bool {
+    if i == 0 {
+        return false;
+    }
+    let prev = chars[i - 1];
+    if !is_ident(prev) {
+        return false;
+    }
+    // A lone `b` before `r` is the byte-string prefix, not an ident.
+    prev != 'b' || (i >= 2 && is_ident(chars[i - 2]))
+}
+
+/// Mark every line covered by a `#[cfg(test)]` item (attribute line,
+/// item header, body, and closing brace) via brace-depth tracking over
+/// the stripped code channel.
+fn mark_test_regions(lines: &mut [ScannedLine]) {
+    let mut depth: i64 = 0;
+    let mut region_depth: Option<i64> = None;
+    let mut pending = false;
+    for line in lines.iter_mut() {
+        let mut flag = region_depth.is_some() || pending;
+        if line.code.contains("#[cfg(test)]") {
+            pending = true;
+            flag = true;
+        }
+        for ch in line.code.chars() {
+            match ch {
+                '{' => {
+                    if pending && region_depth.is_none() {
+                        region_depth = Some(depth);
+                        pending = false;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if region_depth == Some(depth) {
+                        region_depth = None;
+                    }
+                }
+                _ => {}
+            }
+        }
+        line.in_test = flag || region_depth.is_some() || pending;
+    }
+}
+
+/// Pull every `lint: allow(<rule>)` escape out of the comment channel.
+fn collect_escapes(lines: &[ScannedLine]) -> Vec<Escape> {
+    const MARK: &str = "lint: allow(";
+    let mut out = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        // Escapes are working comments, not documentation: a doc
+        // comment (`///`, `//!`) quoting the syntax in prose must not
+        // act as (or be charged as) an escape.
+        let c = line.comment.trim_start();
+        if c.starts_with("///") || c.starts_with("//!") {
+            continue;
+        }
+        let mut rest = line.comment.as_str();
+        while let Some(pos) = rest.find(MARK) {
+            let tail = &rest[pos + MARK.len()..];
+            if let Some(close) = tail.find(')') {
+                let rule = tail[..close].trim().to_string();
+                if !rule.is_empty() {
+                    out.push(Escape { line: idx + 1, rule });
+                }
+                rest = &tail[close + 1..];
+            } else {
+                break;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(file: &ScannedFile, line: usize) -> &str {
+        &file.lines[line - 1].code
+    }
+
+    #[test]
+    fn line_comments_are_stripped() {
+        let f = scan("t.rs", "let x = 1; // .unwrap() in a comment\n");
+        assert!(!code_of(&f, 1).contains("unwrap"));
+        assert!(f.lines[0].comment.contains(".unwrap()"));
+        assert!(code_of(&f, 1).contains("let x = 1;"));
+    }
+
+    #[test]
+    fn nested_block_comments_strip_to_the_outer_close() {
+        let src = "a(); /* outer /* inner */ still comment */ b();\n";
+        let f = scan("t.rs", src);
+        assert!(code_of(&f, 1).contains("a();"));
+        assert!(code_of(&f, 1).contains("b();"));
+        assert!(!code_of(&f, 1).contains("inner"));
+        assert!(f.lines[0].comment.contains("inner"));
+    }
+
+    #[test]
+    fn multiline_block_comment_spans_lines() {
+        let src = "x();\n/* panic!(\n   todo!( */\ny();\n";
+        let f = scan("t.rs", src);
+        assert!(!code_of(&f, 2).contains("panic"));
+        assert!(!code_of(&f, 3).contains("todo"));
+        assert!(code_of(&f, 4).contains("y();"));
+    }
+
+    #[test]
+    fn string_contents_are_blanked_but_kept_in_code_strs() {
+        let src = "let s = \"call .unwrap() // not a comment\"; f();\n";
+        let f = scan("t.rs", src);
+        assert!(!code_of(&f, 1).contains("unwrap"));
+        assert!(code_of(&f, 1).contains("f();"));
+        assert!(f.lines[0].code_strs.contains(".unwrap()"));
+        assert!(f.lines[0].comment.is_empty(), "// inside a string is not a comment");
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_end_strings() {
+        let src = "let s = \"a\\\"b // c\"; g();\n";
+        let f = scan("t.rs", src);
+        assert!(code_of(&f, 1).contains("g();"));
+        assert!(f.lines[0].comment.is_empty());
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let src = "let s = r#\"panic!(\"inner\") // x\"#; h();\n";
+        let f = scan("t.rs", src);
+        assert!(!code_of(&f, 1).contains("panic"));
+        assert!(code_of(&f, 1).contains("h();"));
+        assert!(f.lines[0].code_strs.contains("panic!"));
+        assert!(f.lines[0].comment.is_empty());
+    }
+
+    #[test]
+    fn multiline_raw_string_spans_lines() {
+        let src = "let s = r#\"line one .unwrap()\nline two println!\n\"#; tail();\n";
+        let f = scan("t.rs", src);
+        assert!(!code_of(&f, 1).contains("unwrap"));
+        assert!(!code_of(&f, 2).contains("println"));
+        assert!(code_of(&f, 3).contains("tail();"));
+    }
+
+    #[test]
+    fn quote_char_literal_does_not_open_a_string() {
+        // '"' must scan as a char literal, not as a string opener that
+        // would swallow the rest of the file.
+        let src = "let q = '\"'; let x = '{'; real_code();\n";
+        let f = scan("t.rs", src);
+        assert!(code_of(&f, 1).contains("real_code();"));
+        // The brace inside the char literal must not skew depth tracking.
+        assert!(!code_of(&f, 1).contains('{'));
+    }
+
+    #[test]
+    fn lifetime_ticks_are_not_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> &'a str { x } // trailing\n";
+        let f = scan("t.rs", src);
+        assert!(code_of(&f, 1).contains("&'a str"));
+        assert!(f.lines[0].comment.contains("trailing"));
+    }
+
+    #[test]
+    fn escaped_char_literals() {
+        let src = "let a = '\\''; let b = '\\\\'; let c = '\\u{1F600}'; z();\n";
+        let f = scan("t.rs", src);
+        assert!(code_of(&f, 1).contains("z();"));
+        assert!(!code_of(&f, 1).contains("1F600"));
+    }
+
+    #[test]
+    fn cfg_test_region_is_marked_through_nested_braces() {
+        let src = "fn live() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       fn inner() { if true { x(); } }\n\
+                   }\n\
+                   fn also_live() {}\n";
+        let f = scan("t.rs", src);
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[1].in_test, "attribute line is test code");
+        assert!(f.lines[2].in_test);
+        assert!(f.lines[3].in_test);
+        assert!(f.lines[4].in_test, "closing brace is test code");
+        assert!(!f.lines[5].in_test);
+    }
+
+    #[test]
+    fn allow_escape_roundtrip() {
+        let src = "a(); // lint: allow(no-stray-print) bench reporter\n\
+                   // lint: allow(ordering-discipline)\n\
+                   b();\n";
+        let f = scan("t.rs", src);
+        assert_eq!(f.escapes.len(), 2);
+        assert_eq!(f.escapes[0].line, 1);
+        assert_eq!(f.escapes[0].rule, "no-stray-print");
+        assert_eq!(f.escapes[1].line, 2);
+        assert_eq!(f.escapes[1].rule, "ordering-discipline");
+    }
+
+    #[test]
+    fn doc_comments_quoting_the_syntax_are_not_escapes() {
+        let src = "/// Write `// lint: allow(no-stray-print)` above the line.\n\
+                   //! And `lint: allow(ordering-discipline)` in module docs.\n\
+                   a(); // lint: allow(no-stray-print)\n";
+        let f = scan("t.rs", src);
+        assert_eq!(f.escapes.len(), 1, "doc-comment mentions must not be escapes");
+        assert_eq!(f.escapes[0].line, 3);
+    }
+
+    #[test]
+    fn escape_inside_string_is_not_an_escape() {
+        let src = "let s = \"// lint: allow(no-stray-print)\";\n";
+        let f = scan("t.rs", src);
+        assert!(f.escapes.is_empty());
+    }
+
+    #[test]
+    fn byte_and_raw_byte_strings() {
+        let src = "let a = b\"panic!\"; let b2 = br#\"todo!\"#; k();\n";
+        let f = scan("t.rs", src);
+        assert!(!code_of(&f, 1).contains("panic"));
+        assert!(!code_of(&f, 1).contains("todo"));
+        assert!(code_of(&f, 1).contains("k();"));
+    }
+
+    #[test]
+    fn last_line_without_newline_is_kept() {
+        let f = scan("t.rs", "fn f() {}");
+        assert_eq!(f.lines.len(), 1);
+        assert!(f.lines[0].code.contains("fn f()"));
+    }
+}

@@ -60,8 +60,10 @@ pub struct ShmBitArray {
     path: PathBuf,
 }
 
-// The mapping is owned exclusively by this struct; concurrent mutation is
-// prevented by &mut discipline, matching Vec<u64> semantics.
+// SAFETY: the mapping is owned exclusively by this struct (the pointer
+// never escapes except through `words`/`words_mut`, which borrow self),
+// so moving it to another thread moves sole access with it; concurrent
+// mutation is prevented by &mut discipline, matching Vec<u64> semantics.
 unsafe impl Send for ShmBitArray {}
 
 impl ShmBitArray {
@@ -113,6 +115,12 @@ impl ShmBitArray {
 
     fn map(file: File, path: &Path, words: usize) -> Result<Self> {
         let bytes = words * 8;
+        // SAFETY: plain FFI call with no pointer-validity precondition —
+        // addr is null (kernel chooses), `fd` is a live descriptor
+        // borrowed from `file` for the duration of the call, and the
+        // kernel validates len/prot/flags, returning MAP_FAILED (checked
+        // below) rather than faulting. The mapping outliving `file` is
+        // fine: MAP_SHARED mappings keep the inode alive after close.
         let ptr = unsafe {
             libc::mmap(
                 std::ptr::null_mut(),
@@ -135,17 +143,26 @@ impl ShmBitArray {
     /// The words as an immutable slice.
     #[inline(always)]
     pub fn words(&self) -> &[u64] {
+        // SAFETY: `ptr` is a live MAP_SHARED mapping of exactly
+        // `words * 8` bytes (validated against the file length in
+        // `open`, set by `create`), page-aligned so u64-aligned, and
+        // unmapped only in Drop; the returned borrow of self keeps the
+        // mapping alive and excludes `words_mut`'s aliasing &mut.
         unsafe { std::slice::from_raw_parts(self.ptr, self.words) }
     }
 
     /// The words as a mutable slice.
     #[inline(always)]
     pub fn words_mut(&mut self) -> &mut [u64] {
+        // SAFETY: same mapping validity as `words`; &mut self makes
+        // this the only live view, so the &mut slice cannot alias.
         unsafe { std::slice::from_raw_parts_mut(self.ptr, self.words) }
     }
 
     /// Flush dirty pages to the backing file (msync).
     pub fn sync(&self) -> Result<()> {
+        // SAFETY: `ptr`/len describe the live mapping (see `words`);
+        // msync only schedules writeback and reports errors via rc.
         let rc = unsafe { libc::msync(self.ptr as *mut _, self.words * 8, libc::MS_SYNC) };
         if rc != 0 {
             return Err(Error::io(
@@ -169,6 +186,9 @@ impl Drop for ShmBitArray {
         // lose the unsynced tail of the filter. Errors are unreportable
         // from drop; callers that must observe sync failures call
         // [`ShmBitArray::sync`] explicitly first.
+        // SAFETY: `ptr`/len describe the mapping created in `map` and
+        // never handed out beyond self-borrowed slices; Drop runs after
+        // all borrows end, so no view outlives the munmap.
         unsafe {
             let _ = libc::msync(self.ptr as *mut _, self.words * 8, libc::MS_SYNC);
             libc::munmap(self.ptr as *mut _, self.words * 8);
@@ -198,6 +218,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // mmap FFI is unsupported under Miri
     fn create_write_reopen() {
         let path = tmp("a.bits");
         {
@@ -216,6 +237,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // mmap FFI is unsupported under Miri
     fn create_truncates_existing() {
         let path = tmp("b.bits");
         {
@@ -246,6 +268,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // mmap FFI is unsupported under Miri
     fn open_size_mismatch_errors_instead_of_truncating() {
         let path = tmp("sized.bits");
         {

@@ -218,6 +218,8 @@ impl ConcurrentEngine {
 
     /// (documents processed, duplicates flagged) across all operations.
     pub fn stats(&self) -> (u64, u64) {
+        // Statistics counters, not verdicts.
+        // lint: allow(ordering-discipline)
         (self.docs.load(Ordering::Relaxed), self.duplicates.load(Ordering::Relaxed))
     }
 

@@ -187,6 +187,7 @@ impl ConcurrentLshBloomIndex {
             dst.union_from(src);
         }
         self.inserted
+            // lint: allow(ordering-discipline) — element counter, not a verdict
             .fetch_add(other.inserted.load(Ordering::Relaxed), Ordering::Relaxed);
     }
 
@@ -212,7 +213,8 @@ impl ConcurrentLshBloomIndex {
 
     /// Documents inserted so far.
     pub fn len(&self) -> u64 {
-        self.inserted.load(Ordering::Relaxed)
+        // Element counter, not a verdict.
+        self.inserted.load(Ordering::Relaxed) // lint: allow(ordering-discipline)
     }
 
     /// True when nothing has been inserted.
@@ -230,6 +232,7 @@ impl ConcurrentLshBloomIndex {
     /// synchronization point, so the snapshot holds every insert that
     /// happened before the caller obtained `self`.
     pub fn into_sequential(self) -> crate::index::LshBloomIndex {
+        // lint: allow(ordering-discipline) — exclusive ownership is the sync point
         let inserted = self.inserted.load(Ordering::Relaxed);
         let filters = self
             .filters

@@ -24,6 +24,14 @@
 //! ([`pipeline::run_stream`], exact stream-order semantics) and the
 //! lock-free concurrent engine ([`engine`], atomic Bloom filters +
 //! batched multi-threaded ingest — `--engine concurrent`).
+// Soundness gates: unsafe operations must sit in explicit `unsafe {}`
+// blocks even inside `unsafe fn` (each block carries its own SAFETY:
+// comment, enforced by `analysis`), and blocks that stop being needed
+// must be removed rather than linger.
+#![deny(unsafe_op_in_unsafe_fn)]
+#![deny(unused_unsafe)]
+
+pub mod analysis;
 pub mod bloom;
 pub mod cli;
 pub mod config;

@@ -10,6 +10,7 @@
 //!   extrapolate   runtime/storage projection (Fig. 8, Table 2)
 //!   serve         the TCP deduplication service (full, band-sharded, or slice)
 //!   route         band-partition router over N backend dedup servers
+//!   lint          run the in-repo soundness linter over the source tree
 //!   info          environment + artifact status
 
 use lshbloom::cli::{ArgSpec, Args, Command};
@@ -39,6 +40,7 @@ fn main() {
         "extrapolate" => cmd_extrapolate(rest),
         "serve" => cmd_serve(rest),
         "route" => cmd_route(rest),
+        "lint" => cmd_lint(rest),
         "info" => cmd_info(rest),
         "--help" | "-h" | "help" => {
             print_usage();
@@ -70,6 +72,7 @@ fn print_usage() {
            extrapolate   projections at extreme scale (Fig. 8, Table 2)\n\
            serve         run the TCP deduplication service\n\
            route         band-partition router over N backend dedup servers\n\
+           lint          run the in-repo soundness linter over the source tree\n\
            info          environment + artifact status\n\n\
          run `lshbloom <subcommand> --help` for flags"
     );
@@ -966,6 +969,36 @@ fn cmd_route(rest: Vec<String>) -> CliResult {
     }
     router.serve()?;
     Ok(())
+}
+
+fn cmd_lint(rest: Vec<String>) -> CliResult {
+    let cmd = Command::new("lint", "run the in-repo soundness linter over the source tree")
+        .arg(ArgSpec::opt("root", "repository root (directory containing rust/ and docs/)"));
+    let args = parse(cmd, rest)?;
+    let root = match args.get_opt("root") {
+        Some(r) => PathBuf::from(r),
+        // Auto-detect: run from the repo root (has rust/) or from
+        // rust/ itself (has Cargo.toml, repo root is the parent).
+        None if Path::new("rust").is_dir() => PathBuf::from("."),
+        None if Path::new("Cargo.toml").is_file() => PathBuf::from(".."),
+        None => return Err("cannot locate the repository root; pass --root".into()),
+    };
+    let started = std::time::Instant::now();
+    let report = lshbloom::analysis::lint_tree(&root)?;
+    for finding in &report.findings {
+        println!("{finding}");
+    }
+    println!(
+        "lint: {} file(s) scanned, {} finding(s) in {:.2}s",
+        report.files_scanned,
+        report.findings.len(),
+        started.elapsed().as_secs_f64()
+    );
+    if report.findings.is_empty() {
+        Ok(())
+    } else {
+        Err(format!("{} lint finding(s)", report.findings.len()).into())
+    }
 }
 
 fn cmd_info(rest: Vec<String>) -> CliResult {

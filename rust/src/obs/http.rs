@@ -186,6 +186,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // binds a real TCP listener
     fn scrape_routes_and_refresh_hook() {
         let hits = Arc::new(std::sync::atomic::AtomicU64::new(0));
         let h = hits.clone();

@@ -152,14 +152,15 @@ impl Bencher {
 /// One-shot convenience: default bencher, print + return the result.
 pub fn bench<T, F: FnMut() -> T>(name: &str, f: F) -> BenchResult {
     let r = Bencher::default().run(name, f);
-    println!("{}", r.report());
+    // Bench harness output is the product, not stray debugging.
+    println!("{}", r.report()); // lint: allow(no-stray-print)
     r
 }
 
 /// One-shot with throughput units.
 pub fn bench_n<T, F: FnMut() -> T>(name: &str, elems: u64, f: F) -> BenchResult {
     let r = Bencher::default().throughput(elems).run(name, f);
-    println!("{}", r.report());
+    println!("{}", r.report()); // lint: allow(no-stray-print)
     r
 }
 

@@ -27,11 +27,13 @@ use std::sync::atomic::Ordering;
 /// Words per IO chunk when copying a filter (64 KiB buffers).
 const COPY_CHUNK_WORDS: usize = 8 * 1024;
 
-/// Checksum a live filter's mapped/heap words (chunked relaxed loads).
+/// Checksum a live filter's mapped/heap words (chunked acquire loads,
+/// so the checksum covers at least every insert that happened-before
+/// the checkpoint call).
 fn checksum_filter(filter: &AtomicBloomFilter) -> u64 {
     let mut cs = ChecksumStream::new();
     for chunk in filter.words().chunks(COPY_CHUNK_WORDS) {
-        let vals: Vec<u64> = chunk.iter().map(|w| w.load(Ordering::Relaxed)).collect();
+        let vals: Vec<u64> = chunk.iter().map(|w| w.load(Ordering::Acquire)).collect();
         cs.update(&vals);
     }
     cs.finish()
@@ -133,7 +135,7 @@ pub(crate) fn write_checkpoint_filters(
             let mut w = std::io::BufWriter::new(file);
             let mut cs = ChecksumStream::new();
             for chunk in filter.words().chunks(COPY_CHUNK_WORDS) {
-                let vals: Vec<u64> = chunk.iter().map(|x| x.load(Ordering::Relaxed)).collect();
+                let vals: Vec<u64> = chunk.iter().map(|x| x.load(Ordering::Acquire)).collect();
                 cs.update(&vals);
                 let mut bytes = Vec::with_capacity(vals.len() * 8);
                 for v in &vals {
@@ -192,7 +194,12 @@ fn read_band_words(
     }
     let words: Vec<u64> = bytes
         .chunks_exact(8)
-        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .map(|c| {
+            // chunks_exact(8) guarantees the width; no fallible cast.
+            let mut le = [0u8; 8];
+            le.copy_from_slice(c);
+            u64::from_le_bytes(le)
+        })
         .collect();
     if mode == CheckpointMode::Snapshot {
         let mut cs = ChecksumStream::new();

@@ -7,8 +7,9 @@
 //! at once. This sibling maps the same file format (raw u64 words,
 //! page-aligned by mmap) and hands out the mapping as a shared slice of
 //! atomics, so [`crate::engine::AtomicBloomFilter`] keeps its exact
-//! `fetch_or`-insert / relaxed-probe semantics — and unchanged FP math —
-//! while every bit lands in a file.
+//! `fetch_or`-insert / atomic-probe semantics (and its release/acquire
+//! ordering discipline) — and unchanged FP math — while every bit lands
+//! in a file.
 //!
 //! Durability model: `fetch_or` writes dirty the mapped pages; the kernel
 //! writes them back on its own schedule, [`ShmAtomicBitArray::sync`]
@@ -34,9 +35,13 @@ pub struct ShmAtomicBitArray {
     path: PathBuf,
 }
 
-// The mapping itself is plain memory; all access goes through
-// `&[AtomicU64]`, which is what makes sharing across threads sound.
+// SAFETY: the raw pointer is only what blocks the auto-trait; the
+// mapping is plain owned memory whose sole access path is `words`, and
+// tearing it down is Drop's munmap, so ownership may move threads.
 unsafe impl Send for ShmAtomicBitArray {}
+// SAFETY: all shared access goes through `&[AtomicU64]` — every read
+// and write is an atomic op, so data races are impossible by
+// construction; no interior non-atomic mutation exists.
 unsafe impl Sync for ShmAtomicBitArray {}
 
 impl ShmAtomicBitArray {
@@ -88,6 +93,10 @@ impl ShmAtomicBitArray {
 
     fn map(file: File, path: &Path, words: usize) -> Result<Self> {
         let bytes = words * 8;
+        // SAFETY: same contract as `bloom::shm::ShmBitArray::map` — null
+        // addr (kernel picks), live fd borrowed from `file`, kernel
+        // validates the rest and reports failure as MAP_FAILED (checked
+        // below); MAP_SHARED keeps the inode alive past `file`'s close.
         let ptr = unsafe {
             libc::mmap(
                 std::ptr::null_mut(),
@@ -113,12 +122,20 @@ impl ShmAtomicBitArray {
     /// host (the cross-process sharing half of the §4.4.2 codesign).
     #[inline(always)]
     pub fn words(&self) -> &[AtomicU64] {
+        // SAFETY: `ptr` is a live mapping of exactly `words * 8` bytes
+        // (file length validated in `open`, set in `create`),
+        // page-aligned by mmap so AtomicU64-aligned, and unmapped only
+        // in Drop, which cannot run while this borrow of self is live.
+        // AtomicU64 tolerates concurrent mutation from other mappings
+        // of the same file by definition.
         unsafe { std::slice::from_raw_parts(self.ptr, self.words) }
     }
 
     /// Flush dirty pages to the backing file (msync, blocking until the
     /// writeback completes).
     pub fn sync(&self) -> Result<()> {
+        // SAFETY: `ptr`/len describe the live mapping (see `words`);
+        // msync only schedules writeback and reports errors via rc.
         let rc = unsafe { libc::msync(self.ptr as *mut _, self.words * 8, libc::MS_SYNC) };
         if rc != 0 {
             return Err(Error::io(
@@ -141,6 +158,9 @@ impl Drop for ShmAtomicBitArray {
         // before unmapping so a clean shutdown never silently drops
         // writes. Errors are unreportable here; durability-critical
         // paths call `sync()` explicitly and observe the Result.
+        // SAFETY: `ptr`/len describe the mapping created in `map`; Drop
+        // takes &mut self, so no `words()` borrow can outlive it and
+        // nothing dereferences the pointer after munmap.
         unsafe {
             let _ = libc::msync(self.ptr as *mut _, self.words * 8, libc::MS_SYNC);
             libc::munmap(self.ptr as *mut _, self.words * 8);
@@ -160,6 +180,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // mmap FFI is unsupported under Miri
     fn create_fetch_or_reopen() {
         let path = tmp("a.bits");
         {
@@ -178,6 +199,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // mmap FFI is unsupported under Miri
     fn drop_syncs_without_explicit_msync() {
         // Write, drop with NO sync() call, reopen: the Drop-side msync
         // must have pushed the words to the file.
@@ -192,6 +214,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // mmap FFI is unsupported under Miri
     fn open_missing_or_mismatched_refused() {
         let path = tmp("missing.bits");
         std::fs::remove_file(&path).ok();
@@ -214,6 +237,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // mmap FFI is unsupported under Miri
     fn concurrent_fetch_or_lands_in_file() {
         let path = tmp("conc.bits");
         {

@@ -61,6 +61,11 @@ pub struct XlaBandPreparer {
 // client itself is thread-safe; the Rc refcounts are only manipulated
 // from whichever thread holds the lock at that moment.
 unsafe impl Send for XlaBandPreparer {}
+// SAFETY: same argument as Send above — every path into the non-Sync
+// `state` internals goes through the Mutex, so concurrent `&self` calls
+// serialize on the lock and the Rc refcounts are never touched by two
+// threads at once; the other fields (`dims`, `hasher`) are plain Sync
+// data.
 unsafe impl Sync for XlaBandPreparer {}
 
 impl XlaBandPreparer {

@@ -504,7 +504,9 @@ fn ensure_fleet<'a>(
         }
         *fleet = Some(conns);
     }
-    Ok(fleet.as_mut().unwrap())
+    // Filled directly above when it was None; expressing that through
+    // ok_or keeps this connection-handler path panic-free.
+    fleet.as_mut().ok_or_else(|| "router fleet unavailable after connect".to_string())
 }
 
 /// Write `req` to every backend, then read every reply — pipelined, so

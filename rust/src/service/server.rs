@@ -173,7 +173,13 @@ impl IndexBackend {
                 // MinHash outside the lock (parallel across connections).
                 let prepared = preparer.prepare_batch(std::slice::from_ref(&doc));
                 let Prepared::Bands(ref bands) = prepared[0] else { unreachable!() };
-                let mut decider = decider.lock().unwrap();
+                // Poison recovery is sound here: the decider's filter
+                // state is monotone (bits only get set), so a panic in
+                // another handler cannot leave it half-updated in a way
+                // that corrupts later verdicts — and killing the serving
+                // thread over it would turn one bad request into an
+                // outage.
+                let mut decider = decider.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
                 if insert {
                     Ok(decider.decide(&prepared[0]))
                 } else {
@@ -218,7 +224,8 @@ impl IndexBackend {
         match self {
             IndexBackend::Classic { preparer, decider } => {
                 let prepared = preparer.prepare_batch(&docs);
-                let mut decider = decider.lock().unwrap();
+                // Same poison-recovery rationale as `decide` above.
+                let mut decider = decider.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
                 Ok(prepared.iter().map(|p| decider.decide(p)).collect())
             }
             IndexBackend::Concurrent(engine) => {

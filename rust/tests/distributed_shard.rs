@@ -4,6 +4,10 @@
 //! worker is killed mid-ingest — restart-and-resume reproduces the
 //! crash-free result exactly.
 
+// Miri cannot emulate this (spawns real worker OS processes); the miri CI job
+// covers the pure-logic suites instead.
+#![cfg(not(miri))]
+
 use lshbloom::config::PipelineConfig;
 use lshbloom::corpus::{Doc, LabeledDoc};
 use lshbloom::json::{obj, Value};

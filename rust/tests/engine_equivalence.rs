@@ -134,6 +134,7 @@ fn concurrent_submitters_lose_no_documents() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore)] // binds a real TCP listener
 fn concurrent_server_mode_serves_and_reconciles_across_connections() {
     use lshbloom::config::EngineMode;
     use lshbloom::service::{DedupClient, DedupServer};

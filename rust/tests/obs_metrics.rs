@@ -11,6 +11,10 @@
 //! router owns no filters and the fleet's slice servers are never asked
 //! to refresh (no `metrics` op, no state dir, so no checkpoint either).
 
+// Miri cannot emulate this (binds TCP listeners); the miri CI job
+// covers the pure-logic suites instead.
+#![cfg(not(miri))]
+
 use lshbloom::config::{EngineMode, PipelineConfig};
 use lshbloom::corpus::Doc;
 use lshbloom::service::{DedupClient, DedupRouter, DedupServer, RouterOptions, ServeOptions};

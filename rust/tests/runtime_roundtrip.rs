@@ -9,6 +9,10 @@
 //! trivially with a note) when the artifacts directory is missing so that
 //! plain `cargo test` works from a fresh checkout.
 
+// Miri cannot emulate this (loads XLA artifacts through PJRT FFI); the miri CI job
+// covers the pure-logic suites instead.
+#![cfg(not(miri))]
+
 use lshbloom::runtime::PjrtEngine;
 
 fn artifacts_dir() -> Option<std::path::PathBuf> {

@@ -1,5 +1,9 @@
 //! Integration tests for the network deduplication service.
 
+// Miri cannot emulate this (binds TCP listeners); the miri CI job
+// covers the pure-logic suites instead.
+#![cfg(not(miri))]
+
 use lshbloom::config::{EngineMode, PipelineConfig};
 use lshbloom::service::{DedupClient, DedupServer};
 

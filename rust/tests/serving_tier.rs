@@ -9,6 +9,10 @@
 //! mid-request, wrong band counts, slice servers rejecting text ops,
 //! a backend killed mid-stream, and slice-aware warm starts.
 
+// Miri cannot emulate this (binds TCP listeners); the miri CI job
+// covers the pure-logic suites instead.
+#![cfg(not(miri))]
+
 use lshbloom::config::{EngineMode, PipelineConfig};
 use lshbloom::corpus::Doc;
 use lshbloom::service::{DedupClient, DedupRouter, DedupServer, RouterOptions, ServeOptions};
