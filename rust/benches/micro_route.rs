@@ -53,6 +53,12 @@ fn start_fleet(
 fn main() {
     println!("# serving tier: engine vs band slices vs loopback router (docs/sec)\n");
     let fast = std::env::var("LSHBLOOM_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    // Trace sampling probability for the router variant (the CI smoke
+    // runs this bench at 0 and at 1.0 to bound the tracing overhead).
+    let trace_sample: f64 = std::env::var("LSHBLOOM_TRACE_SAMPLE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.0);
     let n: usize = if fast { 1_500 } else { 10_000 };
     let batch = 64usize;
 
@@ -75,6 +81,7 @@ fn main() {
         p_effective: 1e-10,
         expected_docs: n as u64,
         engine: EngineMode::Concurrent,
+        trace_sample,
         ..Default::default()
     };
 
@@ -146,6 +153,7 @@ fn main() {
         ("bench", Value::str("micro_route")),
         ("docs", Value::u64(n as u64)),
         ("batch", Value::u64(batch as u64)),
+        ("trace_sample", Value::num(trace_sample)),
         ("results", Value::Arr(results)),
     ]);
     println!("{}", summary.to_json());

@@ -126,6 +126,15 @@ pub struct PipelineConfig {
     /// registry as text exposition at `/metrics` and JSON at
     /// `/metrics.json`.
     pub metrics_addr: String,
+    /// Probability in [0, 1] that a request records a distributed
+    /// trace (`--trace-sample`, 0 = off). Errors and slow requests
+    /// record regardless; the verdict is derived deterministically
+    /// from the trace ID so every hop of one request agrees.
+    pub trace_sample: f64,
+    /// Slow-request threshold in milliseconds (`--trace-slow-ms`,
+    /// 0 = off). Requests at or above it always record a trace and
+    /// log one WARN line with the per-hop breakdown.
+    pub trace_slow_ms: u64,
 }
 
 impl Default for PipelineConfig {
@@ -150,6 +159,8 @@ impl Default for PipelineConfig {
             checkpoint_every: 0,
             serve_shards: 1,
             metrics_addr: String::new(),
+            trace_sample: 0.0,
+            trace_slow_ms: 0,
         }
     }
 }
@@ -196,6 +207,12 @@ impl PipelineConfig {
             return Err(Error::Config(format!(
                 "metrics_addr '{}' is not HOST:PORT",
                 self.metrics_addr
+            )));
+        }
+        if !(0.0..=1.0).contains(&self.trace_sample) {
+            return Err(Error::Config(format!(
+                "trace_sample {} not in [0,1]",
+                self.trace_sample
             )));
         }
         if self.checkpoint_every > 0 && self.checkpoint_dir.is_empty() && !self.distributed {
@@ -305,6 +322,12 @@ impl PipelineConfig {
                     self.serve_shards = v.parse().map_err(|_| bad("serve_shards"))?
                 }
                 "metrics_addr" | "service.metrics_addr" => self.metrics_addr = v.clone(),
+                "trace_sample" | "service.trace_sample" => {
+                    self.trace_sample = v.parse().map_err(|_| bad("trace_sample"))?
+                }
+                "trace_slow_ms" | "service.trace_slow_ms" => {
+                    self.trace_slow_ms = v.parse().map_err(|_| bad("trace_slow_ms"))?
+                }
                 other => return Err(Error::Config(format!("unknown config key '{other}'"))),
             }
         }
@@ -488,6 +511,28 @@ mod tests {
         assert!(cfg.validate().is_err(), "port-less metrics_addr rejected");
         cfg.metrics_addr.clear();
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn trace_keys_apply_and_validate() {
+        let mut cfg = PipelineConfig::default();
+        assert_eq!(cfg.trace_sample, 0.0, "tracing is off by default");
+        assert_eq!(cfg.trace_slow_ms, 0);
+        cfg.apply(
+            &parse_toml_subset("[service]\ntrace_sample = 0.25\ntrace_slow_ms = 250").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.trace_sample, 0.25);
+        assert_eq!(cfg.trace_slow_ms, 250);
+        cfg.validate().unwrap();
+        // Probabilities outside [0,1] are misconfigurations, not clamps.
+        cfg.trace_sample = 1.5;
+        assert!(cfg.validate().is_err(), "trace_sample > 1 rejected");
+        cfg.trace_sample = -0.1;
+        assert!(cfg.validate().is_err(), "negative trace_sample rejected");
+        let mut cfg = PipelineConfig::default();
+        assert!(cfg.apply(&parse_toml_subset("trace_sample = x").unwrap()).is_err());
+        assert!(cfg.apply(&parse_toml_subset("trace_slow_ms = -3").unwrap()).is_err());
     }
 
     #[test]

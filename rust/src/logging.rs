@@ -69,6 +69,35 @@ pub fn emit(level: Level, args: std::fmt::Arguments<'_>) {
     eprintln!("[{t:9.3}s {tag}] {args}");
 }
 
+/// Emit the slow-request line used by the tracing layer: one WARN line
+/// with the total wall time and the per-hop breakdown inline, e.g.
+///
+/// ```text
+/// [    1.042s WARN ] slow-request op=check_batch total=112.4ms trace=4f…e2 hops=[hop 10.0.0.1:9001=54.1ms(srv 53.0ms), hop 10.0.0.2:9001=58.0ms]
+/// ```
+///
+/// `hops` is `(label, client_ms, server_ms)`; a `server_ms` of `0.0`
+/// (no far-side timing reported) omits the `(srv …)` suffix.
+pub fn slow_request(op: &str, total_ms: f64, trace_id: &str, hops: &[(String, f64, f64)]) {
+    if !enabled(Level::Warn) {
+        return;
+    }
+    let mut breakdown = String::new();
+    for (i, (label, client_ms, server_ms)) in hops.iter().enumerate() {
+        if i > 0 {
+            breakdown.push_str(", ");
+        }
+        breakdown.push_str(&format!("{label}={client_ms:.1}ms"));
+        if *server_ms > 0.0 {
+            breakdown.push_str(&format!("(srv {server_ms:.1}ms)"));
+        }
+    }
+    let line = format!(
+        "slow-request op={op} total={total_ms:.1}ms trace={trace_id} hops=[{breakdown}]"
+    );
+    emit(Level::Warn, format_args!("{line}"));
+}
+
 /// Log at error level.
 #[macro_export]
 macro_rules! log_error { ($($t:tt)*) => { $crate::logging::emit($crate::logging::Level::Error, format_args!($($t)*)) } }
@@ -107,5 +136,17 @@ mod tests {
         crate::log_trace!("trace macro is exported and callable: {}", 42);
         set_level(Level::Info);
         assert!(!enabled(Level::Trace));
+    }
+
+    #[test]
+    fn slow_request_line_formats_every_hop_shape() {
+        // Smoke: hop with and without a server-side timing, plus the
+        // empty-hops case, must all format without panicking.
+        let hops = vec![
+            ("hop 10.0.0.1:9001".to_string(), 54.13, 53.02),
+            ("hop 10.0.0.2:9001".to_string(), 58.0, 0.0),
+        ];
+        slow_request("check_batch", 112.41, "00ab", &hops);
+        slow_request("check", 7.5, "00cd", &[]);
     }
 }

@@ -577,6 +577,14 @@ fn cmd_worker(rest: Vec<String>) -> CliResult {
     ));
     let args = parse(cmd, rest)?;
     let dir = PathBuf::from(args.get("dir"));
+    // Continue the supervisor's trace across the process boundary: when
+    // it exported LSHBLOOM_TRACE_PARENT, this worker's whole run becomes
+    // one (pre-forced) span in the distributed tree; absent or garbled,
+    // the run is simply untraced.
+    let _trace_root = lshbloom::obs::trace::root_from_env(
+        &format!("worker.shard{}", args.get_usize("shard")),
+        lshbloom::obs::TraceParams::default(),
+    );
     let cfg = PipelineConfig {
         threshold: args.get_f64("threshold"),
         num_perms: args.get_usize("perms"),
@@ -812,8 +820,19 @@ fn cmd_serve(rest: Vec<String>) -> CliResult {
         .arg(ArgSpec::opt(
             "metrics-addr",
             "HOST:PORT for a Prometheus metrics endpoint (GET /metrics for text \
-             exposition, /metrics.json for JSON; port 0 = ephemeral; empty = off)",
+             exposition, /metrics.json for JSON, plus /healthz, /readyz, and the \
+             /debug/traces explorer; port 0 = ephemeral; empty = off)",
         ).default(""))
+        .arg(ArgSpec::opt(
+            "trace-sample",
+            "probability in [0,1] that a request records a distributed trace \
+             (errors and slow requests always record; 0 = off)",
+        ).default("0"))
+        .arg(ArgSpec::opt(
+            "trace-slow-ms",
+            "slow-request threshold in ms: at or above it a request always records \
+             a trace and logs a WARN line with the per-hop breakdown (0 = off)",
+        ).default("0"))
         .arg(ArgSpec::switch("shm", "host bloom filters in /dev/shm (classic engine)"))
         .arg(ArgSpec::switch("blocked", "use blocked bloom filters (classic engine)"));
     let args = parse(cmd, rest)?;
@@ -828,6 +847,8 @@ fn cmd_serve(rest: Vec<String>) -> CliResult {
         checkpoint_dir: args.get("state-dir").to_string(),
         serve_shards: args.get_usize("serve-shards"),
         metrics_addr: args.get("metrics-addr").to_string(),
+        trace_sample: args.get_f64("trace-sample"),
+        trace_slow_ms: args.get_u64("trace-slow-ms"),
         ..Default::default()
     };
     // Catches --state-dir / --serve-shards without --engine concurrent,
@@ -880,7 +901,10 @@ fn cmd_serve(rest: Vec<String>) -> CliResult {
         },
     );
     if let Some(maddr) = server.metrics_addr() {
-        println!("metrics: http://{maddr}/metrics (Prometheus text) and /metrics.json");
+        println!(
+            "metrics: http://{maddr}/metrics (Prometheus text), /metrics.json, \
+             /healthz, /readyz, /debug/traces"
+        );
     }
     server.serve()?;
     Ok(())
@@ -919,8 +943,21 @@ fn cmd_route(rest: Vec<String>) -> CliResult {
         .arg(ArgSpec::opt(
             "metrics-addr",
             "HOST:PORT for a Prometheus metrics endpoint (GET /metrics for text \
-             exposition, /metrics.json for JSON; port 0 = ephemeral; empty = off)",
-        ).default(""));
+             exposition, /metrics.json for JSON, plus /healthz, /readyz — ready only \
+             while the backend fleet is healthy — and the /debug/traces explorer; \
+             port 0 = ephemeral; empty = off)",
+        ).default(""))
+        .arg(ArgSpec::opt(
+            "trace-sample",
+            "probability in [0,1] that a request records a distributed trace with \
+             one hop span per backend (errors and slow requests always record; \
+             0 = off)",
+        ).default("0"))
+        .arg(ArgSpec::opt(
+            "trace-slow-ms",
+            "slow-request threshold in ms: at or above it a request always records \
+             a trace and logs a WARN line with the per-hop breakdown (0 = off)",
+        ).default("0"));
     let args = parse(cmd, rest)?;
     let cfg = PipelineConfig {
         threshold: args.get_f64("threshold"),
@@ -928,6 +965,8 @@ fn cmd_route(rest: Vec<String>) -> CliResult {
         p_effective: args.get_f64("p-effective"),
         expected_docs: args.get_u64("expected-docs"),
         metrics_addr: args.get("metrics-addr").to_string(),
+        trace_sample: args.get_f64("trace-sample"),
+        trace_slow_ms: args.get_u64("trace-slow-ms"),
         ..Default::default()
     };
     cfg.validate()?;
@@ -965,7 +1004,10 @@ fn cmd_route(rest: Vec<String>) -> CliResult {
         opts.read_timeout.as_secs_f64(),
     );
     if let Some(maddr) = router.metrics_addr() {
-        println!("metrics: http://{maddr}/metrics (Prometheus text) and /metrics.json");
+        println!(
+            "metrics: http://{maddr}/metrics (Prometheus text), /metrics.json, \
+             /healthz, /readyz, /debug/traces"
+        );
     }
     router.serve()?;
     Ok(())

@@ -1,5 +1,5 @@
 //! The `--metrics-addr` endpoint: a minimal hand-rolled HTTP/1.1
-//! responder serving the global registry.
+//! responder serving the global registry and the trace ring.
 //!
 //! Std-only, same discipline as the line protocol in
 //! `service/proto.rs`: no HTTP library, bounded reads, one response
@@ -8,6 +8,16 @@
 //! * `GET /metrics` (or `/`) — Prometheus text exposition 0.0.4
 //! * `GET /metrics.json` — the registry as JSON (same shape as the
 //!   `{"op":"metrics"}` wire op)
+//! * `GET /healthz` — liveness: `200 ok` whenever the process can
+//!   answer at all
+//! * `GET /readyz` — readiness: `200 ready` or `503 not ready` from
+//!   the listener's [`ReadyHook`] (a router is ready only while its
+//!   backend fleet is reachable; no hook means always ready)
+//! * `GET /debug/traces` — recent traces from the
+//!   [`super::trace`] ring as JSON; query parameters `op=<root op>`,
+//!   `min_ms=<n>` (root duration floor), `limit=<n>` (default 64)
+//! * `GET /debug/traces/slowest` — the slowest traces by root
+//!   duration; `limit=<n>` (default 16)
 //!
 //! Scrapes are cheap (atomic loads + one string render), so requests
 //! are handled inline on the listener thread — a scrape endpoint does
@@ -27,6 +37,10 @@ const MAX_REQUEST_BYTES: usize = 8 * 1024;
 /// fill ratios, estimated FP) reflect the current filter state.
 pub type RefreshHook = Box<dyn Fn() + Send + Sync>;
 
+/// Readiness probe backing `GET /readyz`: `true` = ready. Liveness
+/// (`/healthz`) is unconditional — a process that can answer is live.
+pub type ReadyHook = Box<dyn Fn() -> bool + Send + Sync>;
+
 /// A running metrics HTTP listener (see module docs).
 pub struct MetricsHttp {
     addr: SocketAddr,
@@ -42,8 +56,17 @@ impl std::fmt::Debug for MetricsHttp {
 
 impl MetricsHttp {
     /// Bind `addr` (`HOST:PORT`, port 0 for ephemeral) and start the
-    /// listener thread. `refresh` (if any) runs before every scrape.
-    pub fn bind(addr: &str, refresh: Option<RefreshHook>) -> std::io::Result<Self> {
+    /// listener thread. `refresh` (if any) runs before every scrape;
+    /// `ready` (if any) answers `/readyz`.
+    ///
+    /// Both hooks are owned by the listener thread and dropped only
+    /// when it exits — see [`MetricsHttp::stop`] for the ordering
+    /// contract that makes capturing `Arc`s of caller state safe.
+    pub fn bind(
+        addr: &str,
+        refresh: Option<RefreshHook>,
+        ready: Option<ReadyHook>,
+    ) -> std::io::Result<Self> {
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(true)?;
         let local = listener.local_addr()?;
@@ -51,7 +74,7 @@ impl MetricsHttp {
         let flag = shutdown.clone();
         let handle = std::thread::Builder::new()
             .name("metrics-http".to_string())
-            .spawn(move || listen_loop(listener, flag, refresh))
+            .spawn(move || listen_loop(listener, flag, refresh, ready))
             .expect("spawn metrics-http thread");
         crate::log_info!("metrics endpoint listening on http://{local}/metrics");
         Ok(Self { addr: local, shutdown, handle: Some(handle) })
@@ -63,6 +86,14 @@ impl MetricsHttp {
     }
 
     /// Stop the listener thread and wait for it to exit.
+    ///
+    /// Ordering contract: the shutdown flag is raised and the accept
+    /// thread is *joined* before this returns. The refresh/ready hooks
+    /// live inside that thread, so any state they borrow (via captured
+    /// `Arc`s) cannot be observed mid-teardown: once `stop` (or the
+    /// `Drop` that routes through it) returns, the hooks have run for
+    /// the last time and have been dropped. A scrape in flight at stop
+    /// time is served to completion first.
     pub fn stop(&mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
         if let Some(h) = self.handle.take() {
@@ -77,13 +108,20 @@ impl Drop for MetricsHttp {
     }
 }
 
-fn listen_loop(listener: TcpListener, shutdown: Arc<AtomicBool>, refresh: Option<RefreshHook>) {
+fn listen_loop(
+    listener: TcpListener,
+    shutdown: Arc<AtomicBool>,
+    refresh: Option<RefreshHook>,
+    ready: Option<ReadyHook>,
+) {
     loop {
         if shutdown.load(Ordering::SeqCst) {
+            // Exiting here drops `listener`, `refresh`, and `ready`:
+            // the hooks outlive every scrape that could call them.
             return;
         }
         match listener.accept() {
-            Ok((stream, _)) => handle_scrape(stream, refresh.as_deref()),
+            Ok((stream, _)) => handle_scrape(stream, refresh.as_deref(), ready.as_deref()),
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(Duration::from_millis(25));
             }
@@ -95,8 +133,24 @@ fn listen_loop(listener: TcpListener, shutdown: Arc<AtomicBool>, refresh: Option
     }
 }
 
+/// First value of `key` in an `a=1&b=2` query string, if any.
+fn query_param<'a>(query: &'a str, key: &str) -> Option<&'a str> {
+    query.split('&').find_map(|kv| {
+        let (k, v) = kv.split_once('=')?;
+        (k == key).then_some(v)
+    })
+}
+
+fn parsed_param<T: std::str::FromStr>(query: &str, key: &str, default: T) -> T {
+    query_param(query, key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
 /// Read the request head (bounded), pick a route, write one response.
-fn handle_scrape(mut stream: TcpStream, refresh: Option<&(dyn Fn() + Send + Sync)>) {
+fn handle_scrape(
+    mut stream: TcpStream,
+    refresh: Option<&(dyn Fn() + Send + Sync)>,
+    ready: Option<&(dyn Fn() -> bool + Send + Sync)>,
+) {
     stream.set_read_timeout(Some(Duration::from_secs(2))).ok();
     stream.set_write_timeout(Some(Duration::from_secs(10))).ok();
     let mut head = Vec::new();
@@ -127,9 +181,15 @@ fn handle_scrape(mut stream: TcpStream, refresh: Option<&(dyn Fn() + Send + Sync
         .to_string();
     let mut parts = request_line.split_whitespace();
     let method = parts.next().unwrap_or("");
-    let path = parts.next().unwrap_or("");
+    let target = parts.next().unwrap_or("");
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+    const TEXT: &str = "text/plain; charset=utf-8";
+    const JSON: &str = "application/json";
     let (status, content_type, body) = if method != "GET" {
-        ("405 Method Not Allowed", "text/plain; charset=utf-8", "method not allowed\n".to_string())
+        ("405 Method Not Allowed", TEXT, "method not allowed\n".to_string())
     } else {
         match path {
             "/metrics" | "/" => {
@@ -146,9 +206,28 @@ fn handle_scrape(mut stream: TcpStream, refresh: Option<&(dyn Fn() + Send + Sync
                 if let Some(r) = refresh {
                     r();
                 }
-                ("200 OK", "application/json", super::global().to_json().to_json() + "\n")
+                ("200 OK", JSON, super::global().to_json().to_json() + "\n")
             }
-            _ => ("404 Not Found", "text/plain; charset=utf-8", "not found\n".to_string()),
+            "/healthz" => ("200 OK", TEXT, "ok\n".to_string()),
+            "/readyz" => {
+                if ready.is_none_or(|r| r()) {
+                    ("200 OK", TEXT, "ready\n".to_string())
+                } else {
+                    ("503 Service Unavailable", TEXT, "not ready\n".to_string())
+                }
+            }
+            "/debug/traces" => {
+                let op = query_param(query, "op");
+                let min_ms: u64 = parsed_param(query, "min_ms", 0);
+                let limit: usize = parsed_param(query, "limit", 64);
+                let dump = super::trace::traces_json(op, min_ms.saturating_mul(1_000_000), limit);
+                ("200 OK", JSON, dump.to_json() + "\n")
+            }
+            "/debug/traces/slowest" => {
+                let limit: usize = parsed_param(query, "limit", 16);
+                ("200 OK", JSON, super::trace::slowest_json(limit).to_json() + "\n")
+            }
+            _ => ("404 Not Found", TEXT, "not found\n".to_string()),
         }
     };
     let response = format!(
@@ -194,7 +273,7 @@ mod tests {
             h.fetch_add(1, Ordering::SeqCst);
         });
         crate::obs::global().counter("obs.http_test.total").add(9);
-        let mut server = MetricsHttp::bind("127.0.0.1:0", Some(refresh)).unwrap();
+        let mut server = MetricsHttp::bind("127.0.0.1:0", Some(refresh), None).unwrap();
         let addr = server.local_addr();
 
         let (status, body) = http_get(addr, "/metrics");
@@ -217,5 +296,123 @@ mod tests {
         assert_eq!(hits.load(Ordering::SeqCst), 2, "refresh runs per scrape, not per 404");
 
         server.stop();
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // binds a real TCP listener
+    fn health_and_readiness_probes() {
+        let ready_flag = Arc::new(AtomicBool::new(false));
+        let rf = ready_flag.clone();
+        let ready: ReadyHook = Box::new(move || rf.load(Ordering::SeqCst));
+        let mut server = MetricsHttp::bind("127.0.0.1:0", None, Some(ready)).unwrap();
+        let addr = server.local_addr();
+
+        // Liveness is unconditional; readiness follows the hook.
+        let (status, body) = http_get(addr, "/healthz");
+        assert!(status.contains("200"), "{status}");
+        assert_eq!(body, "ok\n");
+        let (status, body) = http_get(addr, "/readyz");
+        assert!(status.contains("503"), "{status}");
+        assert_eq!(body, "not ready\n");
+        ready_flag.store(true, Ordering::SeqCst);
+        let (status, body) = http_get(addr, "/readyz");
+        assert!(status.contains("200"), "{status}");
+        assert_eq!(body, "ready\n");
+
+        // Without a hook, a bound listener is simply ready.
+        let mut plain = MetricsHttp::bind("127.0.0.1:0", None, None).unwrap();
+        let (status, _) = http_get(plain.local_addr(), "/readyz");
+        assert!(status.contains("200"), "{status}");
+        plain.stop();
+        server.stop();
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // binds a real TCP listener
+    fn debug_traces_routes_serve_the_ring() {
+        use crate::obs::trace;
+        let _g = trace::test_ring_lock();
+        {
+            let _root = trace::start_root(
+                "obs.http_trace_route_op",
+                trace::TraceParams { sample: 1.0, slow_ms: 0 },
+            );
+            trace::record_child("obs.http_trace_child", Duration::from_micros(40));
+        }
+        let mut server = MetricsHttp::bind("127.0.0.1:0", None, None).unwrap();
+        let addr = server.local_addr();
+
+        let (status, body) = http_get(addr, "/debug/traces?op=obs.http_trace_route_op");
+        assert!(status.contains("200"), "{status}");
+        let parsed = crate::json::parse(body.trim()).unwrap();
+        let traces = parsed.get("traces").unwrap().as_arr().unwrap();
+        assert!(!traces.is_empty(), "filtered trace must be present: {body}");
+        let spans = traces[0].get("spans").unwrap().as_arr().unwrap();
+        assert_eq!(spans.len(), 2, "root + child: {body}");
+
+        // A min-duration floor far above anything recorded here.
+        let (_, body) = http_get(addr, "/debug/traces?op=obs.http_trace_route_op&min_ms=600000");
+        let parsed = crate::json::parse(body.trim()).unwrap();
+        assert!(parsed.get("traces").unwrap().as_arr().unwrap().is_empty(), "{body}");
+
+        let (status, body) = http_get(addr, "/debug/traces/slowest?limit=3");
+        assert!(status.contains("200"), "{status}");
+        let parsed = crate::json::parse(body.trim()).unwrap();
+        assert!(parsed.get("traces").unwrap().as_arr().unwrap().len() <= 3, "{body}");
+        server.stop();
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // binds a real TCP listener
+    fn drop_under_load_joins_accept_thread_before_hook_teardown() {
+        // Regression: stop()/Drop must join the accept thread *before*
+        // the caller proceeds to tear down state the hooks borrow. The
+        // hooks observe `alive`; the owner flips it to false only
+        // after drop returns — any hook run after that is a violation.
+        let alive = Arc::new(AtomicBool::new(true));
+        let violated = Arc::new(AtomicBool::new(false));
+        let (a, v) = (alive.clone(), violated.clone());
+        let refresh: RefreshHook = Box::new(move || {
+            if !a.load(Ordering::SeqCst) {
+                v.store(true, Ordering::SeqCst);
+            }
+        });
+        let (a, v) = (alive.clone(), violated.clone());
+        let ready: ReadyHook = Box::new(move || {
+            if !a.load(Ordering::SeqCst) {
+                v.store(true, Ordering::SeqCst);
+            }
+            true
+        });
+        let server = MetricsHttp::bind("127.0.0.1:0", Some(refresh), Some(ready)).unwrap();
+        let addr = server.local_addr();
+        let (status, _) = http_get(addr, "/metrics");
+        assert!(status.contains("200"), "{status}");
+
+        // Hammer both hook-bearing routes from several threads while
+        // the server drops out from under them.
+        let hammers: Vec<_> = (0..4)
+            .map(|i| {
+                std::thread::spawn(move || loop {
+                    let Ok(mut s) = TcpStream::connect(addr) else { break };
+                    s.set_read_timeout(Some(Duration::from_millis(500))).ok();
+                    s.set_write_timeout(Some(Duration::from_millis(500))).ok();
+                    let path = if i % 2 == 0 { "/metrics" } else { "/readyz" };
+                    let req = format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n");
+                    if s.write_all(req.as_bytes()).is_err() {
+                        break;
+                    }
+                    let mut sink = Vec::new();
+                    let _ = s.read_to_end(&mut sink);
+                })
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(30));
+        drop(server); // Drop routes through stop(): flag, then join.
+        alive.store(false, Ordering::SeqCst); // "teardown" happens after.
+        for h in hammers {
+            h.join().unwrap();
+        }
+        assert!(!violated.load(Ordering::SeqCst), "a hook ran after drop returned");
     }
 }

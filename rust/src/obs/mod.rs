@@ -11,13 +11,20 @@
 //!   p50/p90/p99 extraction;
 //! * [`registry`] — the name → metric [`Registry`] with JSON and
 //!   Prometheus text exposition;
-//! * [`span`] — RAII timing guards that record into histograms and, at
+//! * [`span`] — RAII timing guards that record into histograms, into
+//!   the thread's active trace (when one is open), and, at
 //!   `LSHBLOOM_LOG=trace`, emit timed trace lines through
 //!   [`crate::logging`];
 //! * [`http`] — the `--metrics-addr` listener: a minimal hand-rolled
 //!   HTTP/1.1 responder (std-only, same discipline as the line
 //!   protocol in `service/proto.rs`) serving `GET /metrics`
-//!   (Prometheus text) and `GET /metrics.json`.
+//!   (Prometheus text), `GET /metrics.json`, liveness/readiness
+//!   probes (`/healthz`, `/readyz`), and the trace explorer
+//!   (`/debug/traces`, `/debug/traces/slowest`);
+//! * [`trace`] — distributed request tracing: 128-bit trace IDs
+//!   propagated through the wire protocol's `trace` field and the
+//!   `LSHBLOOM_TRACE_PARENT` env var, a lock-free ring of finished
+//!   spans, and error/slow/probabilistic sampling.
 //!
 //! Instrumented tiers: engine submit phases, per-band filter
 //! fill/estimated-FP gauges, persist checkpoint/restore walls, server
@@ -41,10 +48,12 @@
 pub mod http;
 pub mod metrics;
 pub mod registry;
+pub mod trace;
 
 pub use http::MetricsHttp;
 pub use metrics::{Counter, Gauge, Histogram};
 pub use registry::Registry;
+pub use trace::{TraceContext, TraceParams};
 
 use std::sync::OnceLock;
 use std::time::Instant;
@@ -97,6 +106,9 @@ impl Drop for Span {
     fn drop(&mut self) {
         let elapsed = self.start.elapsed();
         global().histogram(&format!("{}.seconds", self.name)).record_duration(elapsed);
+        // If this thread has an active trace, the same measurement
+        // becomes a child span of it (no-op otherwise).
+        trace::record_child(self.name, elapsed);
         if crate::logging::enabled(crate::logging::Level::Trace) {
             crate::log_trace!("span {} {:.3}ms", self.name, elapsed.as_secs_f64() * 1e3);
         }

@@ -1,0 +1,910 @@
+//! Dependency-free distributed request tracing.
+//!
+//! Metrics (the rest of [`crate::obs`]) aggregate; traces explain one
+//! request. This module adds the request-scoped layer on top of the
+//! same std-only substrate:
+//!
+//! * **Identity** — process-unique 128-bit trace IDs and 64-bit span
+//!   IDs (splitmix64 over a per-process seed + atomic counter), with a
+//!   compact `"<32 hex>-<16 hex>"` wire encoding ([`TraceContext`])
+//!   carried in the `trace` field of the JSON line protocol and in the
+//!   `LSHBLOOM_TRACE_PARENT` environment variable across `worker`
+//!   process spawns.
+//! * **Storage** — a fixed-capacity lock-free ring of finished spans
+//!   ([`RING_CAPACITY`] slots). Writers claim a slot with one
+//!   `fetch_add` and publish through a per-slot seqlock (odd = mid-
+//!   write); readers that observe a torn slot skip it. Drop-oldest,
+//!   every field an atomic, no `unsafe`, and zero heap allocation on
+//!   the record path once the per-thread scratch is warm.
+//! * **Sampling** — per-listener [`TraceParams`]: errors and requests
+//!   slower than `slow_ms` always record; the rest record with
+//!   probability `sample`, decided deterministically from the trace ID
+//!   so every hop of a distributed request agrees without coordination.
+//!
+//! A request handler opens a [`RootGuard`] ([`start_root`] to mint,
+//! [`adopt_root`] when the peer supplied a context). In-flight child
+//! spans — including every [`crate::obs::span`] guard dropped on the
+//! same thread — buffer into thread-local scratch and flush to the
+//! ring only if the root ends up recorded, so an error discovered late
+//! still promotes the full span set. Finished traces are served by
+//! [`traces_json`]/[`slowest_json`] (the `/debug/traces` HTTP routes
+//! and the `{"op":"trace_dump"}` wire op).
+//!
+//! The ring's own bookkeeping counters (`trace.spans_recorded.total`,
+//! `trace.spans_dropped.total`) live in the global registry but are
+//! deliberately absent from the OPERATIONS.md metric catalog: they are
+//! observability-internal, like the registry's own uptime gauge.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{fence, AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+use crate::json::{obj, Value};
+
+/// Environment variable carrying a [`TraceContext`] across process
+/// spawns (supervisor → worker).
+pub const TRACE_PARENT_ENV: &str = "LSHBLOOM_TRACE_PARENT";
+
+/// Finished-span ring capacity (power of two; drop-oldest).
+pub const RING_CAPACITY: usize = 2048;
+
+/// Per-root cap on buffered child spans; beyond it children are
+/// counted as dropped rather than grown without bound.
+const MAX_CHILDREN: usize = 64;
+
+/// Span label bytes stored inline in a ring slot (longer labels are
+/// truncated; rendered lossily).
+const NAME_BYTES: usize = 40;
+const NAME_WORDS: usize = NAME_BYTES / 8;
+
+// ---------------------------------------------------------------------
+// Identity
+// ---------------------------------------------------------------------
+
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Per-process ID seed: wall clock ⊕ pid ⊕ a stack address, mixed.
+fn process_seed() -> u64 {
+    static SEED: OnceLock<u64> = OnceLock::new();
+    *SEED.get_or_init(|| {
+        let t = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0x5EED);
+        let pid = u64::from(std::process::id());
+        let stack = &t as *const u64 as usize as u64;
+        splitmix64(t ^ pid.rotate_left(32) ^ stack)
+    })
+}
+
+static ID_COUNTER: AtomicU64 = AtomicU64::new(1);
+
+/// A fresh process-unique nonzero 64-bit span ID.
+pub fn new_span_id() -> u64 {
+    let n = ID_COUNTER.fetch_add(1, Ordering::Relaxed);
+    let id = splitmix64(process_seed() ^ n);
+    if id == 0 {
+        1
+    } else {
+        id
+    }
+}
+
+/// A fresh process-unique nonzero 128-bit trace ID.
+pub fn new_trace_id() -> u128 {
+    (u128::from(new_span_id()) << 64) | u128::from(new_span_id())
+}
+
+/// Wire-propagated trace identity: which trace, and which span is the
+/// parent of whatever the receiver does next.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceContext {
+    /// 128-bit trace identity shared by every span in the tree.
+    pub trace_id: u128,
+    /// Span ID of the sender's current span (the receiver's parent).
+    pub span_id: u64,
+}
+
+impl TraceContext {
+    /// Encode as the wire/env form `"<32 hex>-<16 hex>"`.
+    pub fn encode(&self) -> String {
+        format!("{:032x}-{:016x}", self.trace_id, self.span_id)
+    }
+
+    /// Parse the wire/env form. Anything malformed (wrong shape, bad
+    /// hex, zero trace ID) yields `None` — a garbled or missing trace
+    /// field degrades to untraced, never to an error.
+    pub fn parse(s: &str) -> Option<Self> {
+        let s = s.trim();
+        if s.len() != 49 || s.as_bytes()[32] != b'-' {
+            return None;
+        }
+        let trace_id = u128::from_str_radix(&s[..32], 16).ok()?;
+        let span_id = u64::from_str_radix(&s[33..], 16).ok()?;
+        if trace_id == 0 {
+            return None;
+        }
+        Some(Self { trace_id, span_id })
+    }
+
+    /// Parse [`TRACE_PARENT_ENV`] from the process environment.
+    pub fn from_env() -> Option<Self> {
+        std::env::var(TRACE_PARENT_ENV).ok().as_deref().and_then(Self::parse)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sampling
+// ---------------------------------------------------------------------
+
+/// Per-listener tracing knobs (`--trace-sample`, `--trace-slow-ms`).
+///
+/// Carried by each server/router instance rather than a process global
+/// so in-process fleets (tests, benches) with different settings do
+/// not race. The default is fully off: sample `0.0`, no slow threshold.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct TraceParams {
+    /// Probability in `[0, 1]` that a non-error, non-slow trace records.
+    pub sample: f64,
+    /// Slow-request threshold in milliseconds; `0` disables. Requests
+    /// at or above it always record and emit a slow-request log line.
+    pub slow_ms: u64,
+}
+
+impl TraceParams {
+    /// Deterministic sampling verdict for `trace_id` — every process
+    /// that sees the same trace ID at the same rate agrees.
+    pub fn sampled(&self, trace_id: u128) -> bool {
+        if self.sample >= 1.0 {
+            return true;
+        }
+        if self.sample <= 0.0 {
+            return false;
+        }
+        let mixed = splitmix64(trace_id as u64 ^ (trace_id >> 64) as u64);
+        let unit = (mixed >> 11) as f64 / (1u64 << 53) as f64;
+        unit < self.sample
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fixed labels
+// ---------------------------------------------------------------------
+
+/// A span label stored inline (no heap) — truncated at [`NAME_BYTES`].
+#[derive(Clone, Copy)]
+struct Name {
+    bytes: [u8; NAME_BYTES],
+    len: u8,
+}
+
+impl Name {
+    fn new(s: &str) -> Self {
+        let mut bytes = [0u8; NAME_BYTES];
+        let take = s.len().min(NAME_BYTES);
+        bytes[..take].copy_from_slice(&s.as_bytes()[..take]);
+        Self { bytes, len: take as u8 }
+    }
+
+    fn render(&self) -> String {
+        String::from_utf8_lossy(&self.bytes[..usize::from(self.len)]).into_owned()
+    }
+}
+
+// ---------------------------------------------------------------------
+// The finished-span ring
+// ---------------------------------------------------------------------
+
+/// One finished span, as read back out of the ring.
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    /// Trace this span belongs to.
+    pub trace_id: u128,
+    /// This span's ID.
+    pub span_id: u64,
+    /// Parent span ID (`0` = root with no parent).
+    pub parent_id: u64,
+    /// Span label (op name, `hop <addr>`, …).
+    pub name: String,
+    /// Wall-clock start, microseconds since the Unix epoch.
+    pub start_us: u64,
+    /// Duration in nanoseconds as measured by the recording process.
+    pub dur_ns: u64,
+    /// For cross-process hop spans: the far side's self-reported
+    /// duration in nanoseconds (`0` = not a hop / not reported).
+    pub remote_ns: u64,
+}
+
+/// A span staged in thread-local scratch before the root decides
+/// whether the trace records at all.
+#[derive(Clone, Copy)]
+struct Pending {
+    span_id: u64,
+    parent_id: u64,
+    name: Name,
+    start_us: u64,
+    dur_ns: u64,
+    remote_ns: u64,
+}
+
+/// Ring slot: a seqlock (odd `seq` = mid-write) over all-atomic
+/// fields. Torn reads are detected and skipped, never UB.
+struct Slot {
+    seq: AtomicU64,
+    trace_hi: AtomicU64,
+    trace_lo: AtomicU64,
+    span_id: AtomicU64,
+    parent_id: AtomicU64,
+    start_us: AtomicU64,
+    dur_ns: AtomicU64,
+    remote_ns: AtomicU64,
+    name_len: AtomicU64,
+    name: [AtomicU64; NAME_WORDS],
+}
+
+impl Slot {
+    fn empty() -> Self {
+        Self {
+            seq: AtomicU64::new(0),
+            trace_hi: AtomicU64::new(0),
+            trace_lo: AtomicU64::new(0),
+            span_id: AtomicU64::new(0),
+            parent_id: AtomicU64::new(0),
+            start_us: AtomicU64::new(0),
+            dur_ns: AtomicU64::new(0),
+            remote_ns: AtomicU64::new(0),
+            name_len: AtomicU64::new(0),
+            name: [const { AtomicU64::new(0) }; NAME_WORDS],
+        }
+    }
+
+    fn publish(&self, ticket: u64, trace_id: u128, p: &Pending) {
+        // Seqlock write: go odd, fence, write fields, go even.
+        self.seq.store(ticket * 2 + 1, Ordering::Relaxed);
+        fence(Ordering::Release);
+        self.trace_hi.store((trace_id >> 64) as u64, Ordering::Relaxed);
+        self.trace_lo.store(trace_id as u64, Ordering::Relaxed);
+        self.span_id.store(p.span_id, Ordering::Relaxed);
+        self.parent_id.store(p.parent_id, Ordering::Relaxed);
+        self.start_us.store(p.start_us, Ordering::Relaxed);
+        self.dur_ns.store(p.dur_ns, Ordering::Relaxed);
+        self.remote_ns.store(p.remote_ns, Ordering::Relaxed);
+        self.name_len.store(u64::from(p.name.len), Ordering::Relaxed);
+        for (word, chunk) in self.name.iter().zip(p.name.bytes.chunks_exact(8)) {
+            let mut b = [0u8; 8];
+            b.copy_from_slice(chunk);
+            word.store(u64::from_le_bytes(b), Ordering::Relaxed);
+        }
+        self.seq.store(ticket * 2 + 2, Ordering::Release);
+    }
+
+    fn read(&self) -> Option<SpanRecord> {
+        for _ in 0..3 {
+            let s1 = self.seq.load(Ordering::Acquire);
+            if s1 == 0 || s1 % 2 == 1 {
+                return None; // never written, or mid-write right now
+            }
+            let hi = self.trace_hi.load(Ordering::Relaxed);
+            let lo = self.trace_lo.load(Ordering::Relaxed);
+            let rec = SpanRecord {
+                trace_id: (u128::from(hi) << 64) | u128::from(lo),
+                span_id: self.span_id.load(Ordering::Relaxed),
+                parent_id: self.parent_id.load(Ordering::Relaxed),
+                name: {
+                    let mut bytes = [0u8; NAME_BYTES];
+                    for (chunk, word) in bytes.chunks_exact_mut(8).zip(self.name.iter()) {
+                        chunk.copy_from_slice(&word.load(Ordering::Relaxed).to_le_bytes());
+                    }
+                    let len = (self.name_len.load(Ordering::Relaxed) as usize).min(NAME_BYTES);
+                    String::from_utf8_lossy(&bytes[..len]).into_owned()
+                },
+                start_us: self.start_us.load(Ordering::Relaxed),
+                dur_ns: self.dur_ns.load(Ordering::Relaxed),
+                remote_ns: self.remote_ns.load(Ordering::Relaxed),
+            };
+            fence(Ordering::Acquire);
+            if self.seq.load(Ordering::Relaxed) == s1 {
+                return Some(rec);
+            }
+        }
+        None // persistently torn under write pressure: skip
+    }
+}
+
+struct Ring {
+    slots: Vec<Slot>,
+    cursor: AtomicU64,
+}
+
+fn ring() -> &'static Ring {
+    static RING: OnceLock<Ring> = OnceLock::new();
+    RING.get_or_init(|| Ring {
+        slots: (0..RING_CAPACITY).map(|_| Slot::empty()).collect(),
+        cursor: AtomicU64::new(0),
+    })
+}
+
+fn push_record(trace_id: u128, p: &Pending) {
+    let r = ring();
+    let ticket = r.cursor.fetch_add(1, Ordering::Relaxed);
+    r.slots[ticket as usize % RING_CAPACITY].publish(ticket, trace_id, p);
+    recorded_counter().add(1);
+}
+
+fn recorded_counter() -> &'static crate::obs::Counter {
+    static C: OnceLock<std::sync::Arc<crate::obs::Counter>> = OnceLock::new();
+    &**C.get_or_init(|| crate::obs::global().counter("trace.spans_recorded.total"))
+}
+
+fn dropped_counter() -> &'static crate::obs::Counter {
+    static C: OnceLock<std::sync::Arc<crate::obs::Counter>> = OnceLock::new();
+    &**C.get_or_init(|| crate::obs::global().counter("trace.spans_dropped.total"))
+}
+
+/// All currently-readable finished spans, oldest first by start time.
+pub fn snapshot() -> Vec<SpanRecord> {
+    let mut out: Vec<SpanRecord> = ring().slots.iter().filter_map(Slot::read).collect();
+    out.sort_by_key(|r| (r.start_us, r.span_id));
+    out
+}
+
+// ---------------------------------------------------------------------
+// The active trace (thread-local)
+// ---------------------------------------------------------------------
+
+struct Active {
+    trace_id: u128,
+    root_span: u64,
+    root_parent: u64,
+    root_name: Name,
+    start: Instant,
+    start_us: u64,
+    sampled: bool,
+    forced: bool,
+    slow_ms: u64,
+    children: Vec<Pending>,
+    dropped: u32,
+}
+
+thread_local! {
+    static ACTIVE: std::cell::RefCell<Option<Active>> =
+        const { std::cell::RefCell::new(None) };
+    /// Child-span scratch recycled across roots on this thread, so a
+    /// warm request thread records without heap allocation.
+    static SCRATCH: std::cell::RefCell<Vec<Pending>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+fn unix_micros_now() -> u64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_micros() as u64).unwrap_or(0)
+}
+
+/// RAII guard for the root span of a request (or run) on this thread.
+///
+/// On drop, the trace flushes to the ring iff it was sampled, forced
+/// ([`force_record`]), or at least `slow_ms` old — and in the slow case
+/// also emits a slow-request log line with the per-hop breakdown.
+#[must_use = "the root span records when the guard drops"]
+pub struct RootGuard {
+    /// True when a root was already active on this thread: this guard
+    /// then records a plain child span instead of closing the trace.
+    nested: bool,
+    name: Name,
+    start: Instant,
+}
+
+fn install_root(ctx: TraceContext, parent: u64, name: &str, params: TraceParams) -> RootGuard {
+    let name = Name::new(name);
+    let start = Instant::now();
+    let nested = ACTIVE.with(|a| a.borrow().is_some());
+    if nested {
+        return RootGuard { nested: true, name, start };
+    }
+    let children = SCRATCH.with(|s| std::mem::take(&mut *s.borrow_mut()));
+    ACTIVE.with(|a| {
+        *a.borrow_mut() = Some(Active {
+            trace_id: ctx.trace_id,
+            root_span: ctx.span_id,
+            root_parent: parent,
+            root_name: name,
+            start,
+            start_us: unix_micros_now(),
+            sampled: params.sampled(ctx.trace_id),
+            forced: false,
+            slow_ms: params.slow_ms,
+            children,
+            dropped: 0,
+        });
+    });
+    RootGuard { nested: false, name, start }
+}
+
+/// Mint a fresh trace and open its root span on this thread.
+pub fn start_root(name: &str, params: TraceParams) -> RootGuard {
+    let ctx = TraceContext { trace_id: new_trace_id(), span_id: new_span_id() };
+    install_root(ctx, 0, name, params)
+}
+
+/// Open a root span that continues a trace begun elsewhere: the local
+/// root's parent is the remote sender's span.
+pub fn adopt_root(ctx: TraceContext, name: &str, params: TraceParams) -> RootGuard {
+    let local = TraceContext { trace_id: ctx.trace_id, span_id: new_span_id() };
+    install_root(local, ctx.span_id, name, params)
+}
+
+/// Adopt [`TRACE_PARENT_ENV`] if present and well-formed; the returned
+/// guard is pre-forced (process-level runs always record).
+pub fn root_from_env(name: &str, params: TraceParams) -> Option<RootGuard> {
+    let ctx = TraceContext::from_env()?;
+    let guard = adopt_root(ctx, name, params);
+    force_record();
+    Some(guard)
+}
+
+/// The active trace's identity on this thread (trace ID + root span),
+/// ready to stamp onto an outbound request or a child process env.
+pub fn current_context() -> Option<TraceContext> {
+    ACTIVE.with(|a| {
+        a.borrow()
+            .as_ref()
+            .map(|t| TraceContext { trace_id: t.trace_id, span_id: t.root_span })
+    })
+}
+
+/// Whether the active trace will flush on root drop as things stand —
+/// the cue for spending wire bytes on propagation. True when sampled,
+/// already forced, or a slow threshold is armed (a trace that *might*
+/// still be promoted needs its hop timings).
+pub fn should_propagate() -> bool {
+    ACTIVE.with(|a| {
+        a.borrow().as_ref().map(|t| t.sampled || t.forced || t.slow_ms > 0).unwrap_or(false)
+    })
+}
+
+/// Force the active trace to record regardless of sampling — error
+/// paths and run-level roots call this.
+pub fn force_record() {
+    ACTIVE.with(|a| {
+        if let Some(t) = a.borrow_mut().as_mut() {
+            t.forced = true;
+        }
+    });
+}
+
+/// `span_id` of `0` means "mint one" — deferred so the untraced fast
+/// path pays one thread-local check and nothing else.
+fn stage_child(span_id: u64, name: &str, dur: Duration, remote_ns: u64) {
+    ACTIVE.with(|a| {
+        let mut slot = a.borrow_mut();
+        let Some(t) = slot.as_mut() else {
+            return; // fast path: untraced thread
+        };
+        if t.children.len() >= MAX_CHILDREN {
+            t.dropped += 1;
+            return;
+        }
+        t.children.push(Pending {
+            span_id: if span_id == 0 { new_span_id() } else { span_id },
+            parent_id: t.root_span,
+            name: Name::new(name),
+            start_us: unix_micros_now().saturating_sub(dur.as_micros() as u64),
+            dur_ns: dur.as_nanos() as u64,
+            remote_ns,
+        });
+    });
+}
+
+/// Record a finished in-process child span (duration just elapsed,
+/// attached to the active root). No-op without an active trace —
+/// [`crate::obs::Span`] calls this unconditionally on drop.
+pub fn record_child(name: &str, dur: Duration) {
+    stage_child(0, name, dur, 0);
+}
+
+/// Record a cross-process hop: the local (client-side) duration plus
+/// the far side's self-reported span ID and duration from the reply.
+/// When `remote_span` is nonzero the hop reuses it, so the same span
+/// appears as the hop here and as the root in the far side's own ring
+/// — two views of one RPC.
+pub fn record_hop(name: &str, remote_span: u64, local_dur: Duration, remote_ns: u64) {
+    stage_child(remote_span, name, local_dur, remote_ns);
+}
+
+impl Drop for RootGuard {
+    fn drop(&mut self) {
+        if self.nested {
+            record_child(&self.name.render(), self.start.elapsed());
+            return;
+        }
+        let Some(mut t) = ACTIVE.with(|a| a.borrow_mut().take()) else {
+            return;
+        };
+        let dur = t.start.elapsed();
+        let dur_ns = dur.as_nanos() as u64;
+        let slow = t.slow_ms > 0 && dur >= Duration::from_millis(t.slow_ms);
+        if t.sampled || t.forced || slow {
+            push_record(
+                t.trace_id,
+                &Pending {
+                    span_id: t.root_span,
+                    parent_id: t.root_parent,
+                    name: t.root_name,
+                    start_us: t.start_us,
+                    dur_ns,
+                    remote_ns: 0,
+                },
+            );
+            for child in &t.children {
+                push_record(t.trace_id, child);
+            }
+            if t.dropped > 0 {
+                dropped_counter().add(u64::from(t.dropped));
+            }
+            if slow {
+                let hops: Vec<(String, f64, f64)> = t
+                    .children
+                    .iter()
+                    .map(|c| (c.name.render(), c.dur_ns as f64 / 1e6, c.remote_ns as f64 / 1e6))
+                    .collect();
+                crate::logging::slow_request(
+                    &t.root_name.render(),
+                    dur.as_secs_f64() * 1e3,
+                    &format!("{:032x}", t.trace_id),
+                    &hops,
+                );
+            }
+        }
+        // Hand the scratch buffer back for the thread's next root.
+        t.children.clear();
+        SCRATCH.with(|s| *s.borrow_mut() = t.children);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Trace assembly + JSON exposition
+// ---------------------------------------------------------------------
+
+struct Tree {
+    trace_id: u128,
+    op: String,
+    start_us: u64,
+    duration_ns: u64,
+    complete: bool,
+    spans: Vec<SpanRecord>,
+}
+
+/// Group the ring's spans into per-trace trees. A trace is `complete`
+/// when exactly one span qualifies as its root (parent `0` or parent
+/// not present locally — a wrapped-out parent or a remote one); with
+/// drop-oldest eviction a tree can lose its root while children
+/// survive, and such partial trees are reported, flagged, not dropped.
+fn assemble() -> Vec<Tree> {
+    let mut by: BTreeMap<u128, Vec<SpanRecord>> = BTreeMap::new();
+    for rec in snapshot() {
+        by.entry(rec.trace_id).or_default().push(rec);
+    }
+    by.into_iter()
+        .map(|(trace_id, spans)| {
+            let ids: std::collections::BTreeSet<u64> =
+                spans.iter().map(|s| s.span_id).collect();
+            let mut roots =
+                spans.iter().filter(|s| s.parent_id == 0 || !ids.contains(&s.parent_id));
+            let root = roots.next();
+            let complete = root.is_some() && roots.next().is_none();
+            let (op, start_us, duration_ns) = match root {
+                Some(r) => (r.name.clone(), r.start_us, r.dur_ns),
+                None => (String::new(), spans.first().map(|s| s.start_us).unwrap_or(0), 0),
+            };
+            Tree { trace_id, op, start_us, duration_ns, complete, spans }
+        })
+        .collect()
+}
+
+fn tree_json(t: &Tree) -> Value {
+    let spans: Vec<Value> = t
+        .spans
+        .iter()
+        .map(|s| {
+            let mut pairs = vec![
+                ("span_id", Value::u64(s.span_id)),
+                ("parent_id", Value::u64(s.parent_id)),
+                ("name", Value::str(s.name.as_str())),
+                ("start_us", Value::u64(s.start_us)),
+                ("dur_ns", Value::u64(s.dur_ns)),
+            ];
+            if s.remote_ns > 0 {
+                pairs.push(("server_dur_ns", Value::u64(s.remote_ns)));
+            }
+            obj(pairs)
+        })
+        .collect();
+    obj(vec![
+        ("trace_id", Value::str(format!("{:032x}", t.trace_id))),
+        ("op", Value::str(t.op.as_str())),
+        ("start_us", Value::u64(t.start_us)),
+        ("duration_ns", Value::u64(t.duration_ns)),
+        ("complete", Value::Bool(t.complete)),
+        ("spans", Value::Arr(spans)),
+    ])
+}
+
+/// Recent traces as JSON, newest first: `{"traces": [...]}`.
+/// `op` filters on the root span's exact name; `min_dur_ns` on the
+/// root duration; `limit` caps the result.
+pub fn traces_json(op: Option<&str>, min_dur_ns: u64, limit: usize) -> Value {
+    let mut trees: Vec<Tree> = assemble()
+        .into_iter()
+        .filter(|t| op.is_none_or(|o| t.op == o) && t.duration_ns >= min_dur_ns)
+        .collect();
+    trees.sort_by(|a, b| b.start_us.cmp(&a.start_us));
+    trees.truncate(limit);
+    obj(vec![("traces", Value::Arr(trees.iter().map(tree_json).collect()))])
+}
+
+/// The `limit` slowest traces by root duration, slowest first.
+pub fn slowest_json(limit: usize) -> Value {
+    let mut trees = assemble();
+    trees.sort_by(|a, b| b.duration_ns.cmp(&a.duration_ns));
+    trees.truncate(limit);
+    obj(vec![("traces", Value::Arr(trees.iter().map(tree_json).collect()))])
+}
+
+/// The span ring is process-global; tests (here and in sibling obs
+/// modules) that write it or assert on its contents serialize on this
+/// lock so wraparound tests cannot evict another test's spans
+/// mid-assertion.
+#[cfg(test)]
+pub(crate) fn test_ring_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ring_lock() -> std::sync::MutexGuard<'static, ()> {
+        test_ring_lock()
+    }
+
+    fn params(sample: f64) -> TraceParams {
+        TraceParams { sample, slow_ms: 0 }
+    }
+
+    fn spans_of(trace_id: u128) -> Vec<SpanRecord> {
+        snapshot().into_iter().filter(|s| s.trace_id == trace_id).collect()
+    }
+
+    #[test]
+    fn context_encode_parse_roundtrip() {
+        let ctx = TraceContext { trace_id: new_trace_id(), span_id: new_span_id() };
+        assert_eq!(TraceContext::parse(&ctx.encode()), Some(ctx));
+    }
+
+    #[test]
+    fn garbled_context_is_none_never_a_panic() {
+        let bads = [
+            String::new(),
+            "nonsense".to_string(),
+            "123-456".to_string(),
+            "f".repeat(49), // right length, no separator
+            format!("{}-{}", "g".repeat(32), "0".repeat(16)), // not hex
+            format!("{}-{}", "0".repeat(32), "0".repeat(16)), // zero trace id
+            format!("{}+{}", "a".repeat(32), "b".repeat(16)), // wrong separator
+        ];
+        for bad in &bads {
+            assert_eq!(TraceContext::parse(bad), None, "input {bad:?}");
+        }
+    }
+
+    #[test]
+    fn ids_are_unique_and_nonzero() {
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..1000 {
+            let id = new_span_id();
+            assert_ne!(id, 0);
+            assert!(seen.insert(id), "span id repeated");
+        }
+        assert_ne!(new_trace_id(), 0);
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_roughly_proportional() {
+        let p = TraceParams { sample: 0.5, slow_ms: 0 };
+        let ids: Vec<u128> = (0..2000).map(|_| new_trace_id()).collect();
+        let hits = ids.iter().filter(|&&id| p.sampled(id)).count();
+        assert!((700..1300).contains(&hits), "0.5 sampling hit {hits}/2000");
+        for &id in &ids[..50] {
+            assert_eq!(p.sampled(id), p.sampled(id), "same id must decide the same way");
+        }
+        assert!(params(1.0).sampled(ids[0]));
+        assert!(!params(0.0).sampled(ids[0]));
+    }
+
+    #[test]
+    fn sampled_root_flushes_root_and_children() {
+        let _g = ring_lock();
+        let tid;
+        {
+            let _root = start_root("test.sampled_op", params(1.0));
+            tid = current_context().unwrap().trace_id;
+            record_child("test.child_a", Duration::from_micros(50));
+            record_child("test.child_b", Duration::from_micros(70));
+        }
+        let spans = spans_of(tid);
+        assert_eq!(spans.len(), 3, "root + two children");
+        let root =
+            spans.iter().find(|s| s.name == "test.sampled_op").expect("root recorded");
+        assert_eq!(root.parent_id, 0);
+        for child in spans.iter().filter(|s| s.span_id != root.span_id) {
+            assert_eq!(child.parent_id, root.span_id);
+        }
+    }
+
+    #[test]
+    fn unsampled_root_records_nothing_but_error_forces() {
+        let _g = ring_lock();
+        let quiet;
+        {
+            let _root = start_root("test.unsampled_op", params(0.0));
+            quiet = current_context().unwrap().trace_id;
+            record_child("test.lost_child", Duration::from_micros(10));
+        }
+        assert!(spans_of(quiet).is_empty(), "sampling=0 must add no spans");
+
+        let forced;
+        {
+            let _root = start_root("test.error_op", params(0.0));
+            forced = current_context().unwrap().trace_id;
+            record_child("test.pre_error_child", Duration::from_micros(10));
+            force_record();
+        }
+        let spans = spans_of(forced);
+        assert_eq!(spans.len(), 2, "forced trace keeps buffered children");
+        assert!(spans.iter().any(|s| s.name == "test.pre_error_child"));
+    }
+
+    #[test]
+    fn adopt_root_parents_under_the_remote_span() {
+        let _g = ring_lock();
+        let remote = TraceContext { trace_id: new_trace_id(), span_id: 0xDEAD_BEEF };
+        {
+            let _root = adopt_root(remote, "test.adopted_op", params(1.0));
+            assert_eq!(current_context().unwrap().trace_id, remote.trace_id);
+        }
+        let spans = spans_of(remote.trace_id);
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].parent_id, 0xDEAD_BEEF);
+        // Parent lives in another process: locally this is still a
+        // single-root, complete tree.
+        let trees = assemble();
+        let t = trees.iter().find(|t| t.trace_id == remote.trace_id).unwrap();
+        assert!(t.complete);
+        assert_eq!(t.op, "test.adopted_op");
+    }
+
+    #[test]
+    fn nested_root_guard_degrades_to_a_child_span() {
+        let _g = ring_lock();
+        let tid;
+        {
+            let _outer = start_root("test.outer_op", params(1.0));
+            tid = current_context().unwrap().trace_id;
+            {
+                let _inner = start_root("test.inner_op", params(1.0));
+                // The outer root still owns the thread's context.
+                assert_eq!(current_context().unwrap().trace_id, tid);
+            }
+        }
+        let spans = spans_of(tid);
+        assert_eq!(spans.len(), 2);
+        let outer = spans.iter().find(|s| s.name == "test.outer_op").unwrap();
+        let inner = spans.iter().find(|s| s.name == "test.inner_op").unwrap();
+        assert_eq!(inner.parent_id, outer.span_id);
+    }
+
+    #[test]
+    fn hop_spans_carry_the_remote_duration() {
+        let _g = ring_lock();
+        let tid;
+        {
+            let _root = start_root("test.hop_op", params(1.0));
+            tid = current_context().unwrap().trace_id;
+            record_hop("hop 10.0.0.1:9000", 0x77, Duration::from_micros(900), 650_000);
+        }
+        let spans = spans_of(tid);
+        let hop = spans.iter().find(|s| s.name.starts_with("hop ")).unwrap();
+        assert_eq!(hop.span_id, 0x77, "hop reuses the far side's span id");
+        assert_eq!(hop.remote_ns, 650_000);
+        assert!(hop.dur_ns >= hop.remote_ns, "client side includes the wire");
+        let json = traces_json(Some("test.hop_op"), 0, 10);
+        let trace = json.get("traces").unwrap().as_arr().unwrap()[0].clone();
+        let spans = trace.get("spans").unwrap().as_arr().unwrap();
+        assert!(spans
+            .iter()
+            .any(|s| s.get("server_dur_ns").and_then(|v| v.as_u64()) == Some(650_000)));
+    }
+
+    #[test]
+    fn wraparound_keeps_reported_trees_self_consistent() {
+        let _g = ring_lock();
+        // Overfill the ring several times over with small sampled
+        // traces, then check every reported tree: span parents are
+        // either 0, in-tree, or the tree is flagged incomplete.
+        for i in 0..(RING_CAPACITY + 200) {
+            let _root = start_root("test.wrap_op", params(1.0));
+            if i % 3 == 0 {
+                record_child("test.wrap_child", Duration::from_nanos(100));
+            }
+        }
+        for tree in assemble() {
+            let ids: std::collections::BTreeSet<u64> =
+                tree.spans.iter().map(|s| s.span_id).collect();
+            let orphans = tree
+                .spans
+                .iter()
+                .filter(|s| s.parent_id != 0 && !ids.contains(&s.parent_id))
+                .count();
+            if tree.complete {
+                assert!(orphans <= 1, "complete tree has at most the adopted root orphan");
+            }
+            assert!(!tree.spans.is_empty());
+        }
+        // The ring holds at most RING_CAPACITY spans.
+        assert!(snapshot().len() <= RING_CAPACITY);
+    }
+
+    #[test]
+    fn ring_is_readable_under_concurrent_writes() {
+        let _g = ring_lock();
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let writers: Vec<_> = (0..4)
+            .map(|w| {
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    let mut n = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        let _root =
+                            start_root(&format!("test.concurrent_{w}"), params(1.0));
+                        n += 1;
+                        if n > 20_000 {
+                            break;
+                        }
+                    }
+                })
+            })
+            .collect();
+        for _ in 0..50 {
+            for rec in snapshot() {
+                // A torn slot would show as garbage; stable reads must
+                // carry the invariants every writer maintains.
+                assert_ne!(rec.trace_id, 0);
+                assert_ne!(rec.span_id, 0);
+            }
+        }
+        stop.store(true, Ordering::Relaxed);
+        for w in writers {
+            w.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn slowest_json_orders_by_duration() {
+        let _g = ring_lock();
+        let v = slowest_json(5);
+        let traces = v.get("traces").unwrap().as_arr().unwrap();
+        let durs: Vec<u64> = traces
+            .iter()
+            .map(|t| t.get("duration_ns").unwrap().as_u64().unwrap())
+            .collect();
+        for pair in durs.windows(2) {
+            assert!(pair[0] >= pair[1], "slowest first: {durs:?}");
+        }
+    }
+}

@@ -524,6 +524,13 @@ impl WorkerSpawner<'_> {
             .stdin(Stdio::null())
             .stdout(Stdio::from(log))
             .stderr(Stdio::from(log_err));
+        // The run-level trace crosses the process boundary by env: every
+        // spawn — first attempt and restart alike — carries the
+        // supervisor's context so each worker's run parents under the
+        // distributed-run root span.
+        if let Some(ctx) = crate::obs::trace::current_context() {
+            cmd.env(crate::obs::trace::TRACE_PARENT_ENV, ctx.encode());
+        }
         if restart {
             cmd.env_remove(CRASH_SHARD_ENV).env_remove(CRASH_AFTER_ENV);
         } else {
@@ -565,6 +572,25 @@ pub fn run_distributed(
 ) -> Result<DistributedRun> {
     let num_shards = cfg.shards.max(1);
     let total = docs.len();
+    // The whole distributed run is one trace: adopt an inherited
+    // context when a traced parent exported one, else mint a forced
+    // root — run-level traces are few and always worth keeping. Worker
+    // spawns below re-export this context, so per-shard ingest and the
+    // phase-2 aggregate all share one tree.
+    let _trace_root = match crate::obs::trace::root_from_env(
+        "dedup.distributed",
+        crate::obs::TraceParams::default(),
+    ) {
+        Some(guard) => guard,
+        None => {
+            let guard = crate::obs::trace::start_root(
+                "dedup.distributed",
+                crate::obs::TraceParams::default(),
+            );
+            crate::obs::trace::force_record();
+            guard
+        }
+    };
     // Same thread-budget split as the in-process sharded run, one
     // process instead of one scoped pool per shard.
     let worker_threads = (cfg.effective_workers() / num_shards).max(1);
@@ -691,6 +717,7 @@ pub fn run_distributed(
     // line (an outcomes file is large at scale; it never needs to be
     // resident at once).
     let t2 = Instant::now();
+    let aggregate_span = crate::obs::span("supervisor.aggregate");
     let mut agg = ShardAggregator::new(cfg, total);
     for shard in 0..num_shards {
         use std::io::BufRead;
@@ -741,6 +768,7 @@ pub fn run_distributed(
         agg.phase1_dropped + agg.phase2_dropped,
         state_dir,
     )?;
+    drop(aggregate_span);
     let phase2_wall = t2.elapsed();
 
     Ok(DistributedRun {

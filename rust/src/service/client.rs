@@ -210,6 +210,17 @@ impl DedupClient {
         Ok(resp)
     }
 
+    /// The raw `{"op":"trace_dump"}` response — recent distributed
+    /// traces from the peer's span ring (`{"traces": [...]}`, newest
+    /// first); the wire twin of the `/debug/traces` HTTP route.
+    pub fn trace_dump(&mut self) -> std::io::Result<Value> {
+        let resp = self.round_trip(json::obj(vec![("op", Value::str("trace_dump"))]))?;
+        if resp.get("error").is_some() {
+            return Err(err_from(&resp));
+        }
+        Ok(resp)
+    }
+
     /// Ask the server to stop accepting connections and exit.
     pub fn shutdown(&mut self) -> std::io::Result<()> {
         let resp = self.round_trip(json::obj(vec![("op", Value::str("shutdown"))]))?;

@@ -154,6 +154,48 @@ pub(crate) fn serve_connection<F>(
     crate::log_debug!("connection {peer} closed");
 }
 
+/// Extract the optional `trace` field from a request (or the echoed
+/// timing object from a reply). A missing, non-string, or garbled
+/// field degrades to `None` — an old client or a corrupted value must
+/// yield an untraced request, never a protocol error.
+pub(crate) fn trace_from_request(req: &Value) -> Option<crate::obs::TraceContext> {
+    req.get("trace").and_then(Value::as_str).and_then(crate::obs::TraceContext::parse)
+}
+
+/// Attach `trace` context to an outbound request object (no-op on
+/// non-object values, which cannot occur for requests we build).
+pub(crate) fn attach_trace(req: &mut Value, ctx: &crate::obs::TraceContext) {
+    if let Value::Obj(map) = req {
+        map.insert("trace".to_string(), Value::str(ctx.encode()));
+    }
+}
+
+/// The server-side timing object a traced reply carries back:
+/// `{"span_id": <decimal u64>, "dur_ns": <decimal u64>}` under the
+/// reply's `trace` key. The exact-integer JSON tokens round-trip the
+/// full 64-bit span ID.
+pub(crate) fn trace_reply(span_id: u64, dur_ns: u64) -> Value {
+    crate::json::obj(vec![("span_id", Value::u64(span_id)), ("dur_ns", Value::u64(dur_ns))])
+}
+
+/// Parse a reply's `trace` timing object; any malformed shape is
+/// `None` (old servers simply do not send one).
+pub(crate) fn trace_timing_from_reply(reply: &Value) -> Option<(u64, u64)> {
+    let t = reply.get("trace")?;
+    Some((t.get("span_id")?.as_u64()?, t.get("dur_ns")?.as_u64()?))
+}
+
+/// Shared handler for the `trace_dump` wire op (server and router):
+/// recent traces from this process's span ring, filtered by the
+/// optional `filter_op` (exact root-span name), `min_ms` (root
+/// duration floor), and `limit` request fields.
+pub(crate) fn trace_dump_response(req: &Value) -> Value {
+    let op = req.get("filter_op").and_then(Value::as_str);
+    let min_ms = req.get("min_ms").and_then(Value::as_u64).unwrap_or(0);
+    let limit = req.get("limit").and_then(Value::as_u64).unwrap_or(64) as usize;
+    crate::obs::trace::traces_json(op, min_ms.saturating_mul(1_000_000), limit)
+}
+
 /// Encode a band-hash vector for the `check_bands` ops. Band hashes are
 /// full-width u64s; the crate's JSON keeps the exact integer token, so
 /// they round-trip without the f64-mantissa loss a generic JSON layer
@@ -238,6 +280,44 @@ mod tests {
         input.push(b'\n');
         let reads = read_all(&input, 16);
         assert!(reads[0].1);
+    }
+
+    #[test]
+    fn trace_field_degrades_to_untraced_never_an_error() {
+        use crate::json::{obj, parse};
+        // Missing field (an old client).
+        let req = parse(r#"{"op":"check","text":"hi"}"#).unwrap();
+        assert_eq!(trace_from_request(&req), None);
+        // Garbled string, wrong type, wrong shape: all None, no panic.
+        for raw in [
+            r#"{"op":"check","trace":"not-a-context"}"#,
+            r#"{"op":"check","trace":12345}"#,
+            r#"{"op":"check","trace":{"deep":"object"}}"#,
+            r#"{"op":"check","trace":null}"#,
+        ] {
+            assert_eq!(trace_from_request(&parse(raw).unwrap()), None, "raw {raw}");
+        }
+        // A well-formed context round-trips through attach_trace.
+        let ctx = crate::obs::TraceContext { trace_id: 7, span_id: 9 };
+        let mut req = obj(vec![("op", Value::str("check"))]);
+        attach_trace(&mut req, &ctx);
+        assert_eq!(trace_from_request(&req), Some(ctx));
+    }
+
+    #[test]
+    fn reply_timing_roundtrips_and_tolerates_garbage() {
+        use crate::json::{obj, parse};
+        let mut reply = obj(vec![("ok", Value::Bool(true))]);
+        if let Value::Obj(m) = &mut reply {
+            m.insert("trace".to_string(), trace_reply(u64::MAX, 1234));
+        }
+        assert_eq!(trace_timing_from_reply(&reply), Some((u64::MAX, 1234)));
+        // No timing, partial timing, or junk: None, never an error.
+        assert_eq!(trace_timing_from_reply(&obj(vec![])), None);
+        let bad = parse(r#"{"trace":{"span_id":"xyz","dur_ns":5}}"#).unwrap();
+        assert_eq!(trace_timing_from_reply(&bad), None);
+        let bad = parse(r#"{"trace":"flat string"}"#).unwrap();
+        assert_eq!(trace_timing_from_reply(&bad), None);
     }
 
     #[test]

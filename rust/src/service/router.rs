@@ -41,6 +41,23 @@
 //! fan-out (some slices inserted, others not) can no longer promise
 //! exact verdicts on that stream. Re-connecting gets a fresh fan-out
 //! against whatever fleet is alive.
+//!
+//! ## Tracing and health
+//!
+//! The router is where distributed traces are usually born: every
+//! request opens a [`crate::obs::trace`] root span (adopting the
+//! client's `trace` context when present), and a fan-out that will
+//! record stamps that context onto the broadcast line so each backend
+//! parents its own span under this one. As replies land, a `hop
+//! <addr>` span per backend records the client-side latency *and* the
+//! backend's self-reported span ID + duration, so wire time and server
+//! time split per hop (`/debug/traces`, `{"op":"trace_dump"}`, and the
+//! `--trace-slow-ms` log line all show the breakdown). On the metrics
+//! endpoint, `/healthz` is pure liveness while `/readyz` tracks the
+//! fleet: ready once the bind-time handshake passes, not-ready again
+//! after any backend failure until a full fan-out succeeds — a router
+//! with a dead backend keeps running (liveness) but reports itself
+//! unfit for new traffic (readiness).
 
 use super::client::DedupClient;
 use super::proto::error_response;
@@ -110,6 +127,14 @@ struct RouterShared {
     max_line_bytes: usize,
     connect_timeout: Duration,
     read_timeout: Duration,
+    /// Tracing knobs (`--trace-sample`, `--trace-slow-ms`), per router
+    /// instance so in-process fleets with different settings coexist.
+    trace: crate::obs::TraceParams,
+    /// Fleet readiness for `/readyz`: true after the bind-time
+    /// handshake, false after any backend failure, true again once a
+    /// full fan-out succeeds. Liveness (`/healthz`) never follows it —
+    /// a router with a sick backend is alive but not ready.
+    ready: Arc<AtomicBool>,
     stats: ServerStats,
     shutdown: AtomicBool,
 }
@@ -166,6 +191,10 @@ impl DedupRouter {
         let preparer = BandPreparer::from_config(cfg);
         let num_bands = preparer.lsh.num_bands;
         validate_backend_layout(&backends, preparer.lsh, opts.connect_timeout, opts.read_timeout)?;
+        // The handshake above just proved the whole fleet answers and
+        // tiles the band space — that is the readiness criterion, so
+        // the flag starts true here and only backend failures clear it.
+        let ready = Arc::new(AtomicBool::new(true));
         let shared = Arc::new(RouterShared {
             preparer,
             num_bands,
@@ -173,15 +202,25 @@ impl DedupRouter {
             max_line_bytes: opts.max_line_bytes,
             connect_timeout: opts.connect_timeout,
             read_timeout: opts.read_timeout,
+            trace: crate::obs::TraceParams {
+                sample: cfg.trace_sample,
+                slow_ms: cfg.trace_slow_ms,
+            },
+            ready: Arc::clone(&ready),
             stats: ServerStats::default(),
             shutdown: AtomicBool::new(false),
         });
         crate::obs::init();
         // The router owns no filters, so scrapes need no refresh hook —
         // its registry entries (fan-out latency, backend errors) are
-        // updated inline on the request path.
+        // updated inline on the request path. Readiness reads the
+        // fleet-health flag maintained by the broadcast path.
         let metrics = match &opts.metrics_addr {
-            Some(maddr) => Some(crate::obs::MetricsHttp::bind(maddr, None)?),
+            Some(maddr) => Some(crate::obs::MetricsHttp::bind(
+                maddr,
+                None,
+                Some(Box::new(move || ready.load(Ordering::SeqCst))),
+            )?),
             None => None,
         };
         let listener = TcpListener::bind(addr)?;
@@ -311,11 +350,13 @@ fn connect_backend(
 /// receive error (including a read timeout), or an error reply. The
 /// labeled counter is what a fleet dashboard alerts on: a single
 /// backend's series climbing while the others stay flat localizes the
-/// sick host.
-fn count_backend_error(addr: &str) {
+/// sick host. Any backend failure also clears `/readyz` (a partial
+/// fleet cannot serve exact verdicts) until a full fan-out succeeds.
+fn count_backend_error(shared: &RouterShared, addr: &str) {
     let reg = crate::obs::global();
     reg.counter(&format!("router.backend.errors.total{{backend=\"{addr}\"}}")).inc();
     reg.counter("router.backend.errors.total").inc();
+    shared.ready.store(false, Ordering::SeqCst);
 }
 
 fn handle_conn(stream: TcpStream, shared: Arc<RouterShared>) {
@@ -351,7 +392,17 @@ fn handle_request(
         }
     };
     let op = req.get("op").and_then(|v| v.as_str()).map(str::to_string);
-    let (resp, close) = dispatch_request(&req, shared, fleet);
+    // The router is where a distributed trace is usually minted; a
+    // traced client's `trace` field is adopted instead. The root span
+    // covers MinHash + the whole fan-out, with `hop <addr>` children
+    // recorded as backend replies land.
+    let ctx = super::proto::trace_from_request(&req);
+    let label = op.as_deref().unwrap_or("unknown");
+    let root = match ctx {
+        Some(c) => crate::obs::trace::adopt_root(c, label, shared.trace),
+        None => crate::obs::trace::start_root(label, shared.trace),
+    };
+    let (mut resp, close) = dispatch_request(&req, shared, fleet);
     // Same contract as the server: only dedup ops feed the latency
     // histograms, so sample counts track requests routed, not scrapes.
     if let Some(op) = op.as_deref().filter(|&op| matches!(op, "check" | "query" | "check_batch")) {
@@ -363,7 +414,22 @@ fn handle_request(
     }
     if resp.get("error").is_some() {
         reg.counter("router.errors.total").inc();
+        // Error traces always record, whatever the sampling verdict.
+        crate::obs::trace::force_record();
     }
+    if ctx.is_some() {
+        // A traced client gets this router's span ID and self-measured
+        // duration back, mirroring what backends report to the router.
+        if let Some(local) = crate::obs::trace::current_context() {
+            if let Value::Obj(map) = &mut resp {
+                map.insert(
+                    "trace".to_string(),
+                    super::proto::trace_reply(local.span_id, start.elapsed().as_nanos() as u64),
+                );
+            }
+        }
+    }
+    drop(root);
     inflight.add(-1.0);
     (resp, close)
 }
@@ -448,6 +514,7 @@ fn dispatch_request(
             Err(f) => (error_response(f.msg), f.fatal),
         },
         Some("metrics") => (crate::obs::global().to_json(), false),
+        Some("trace_dump") => (super::proto::trace_dump_response(req), false),
         Some("shutdown") => {
             shared.shutdown.store(true, Ordering::SeqCst);
             (obj(vec![("ok", Value::Bool(true))]), false)
@@ -455,7 +522,8 @@ fn dispatch_request(
         Some(other) => {
             let msg = format!(
                 "unknown op '{other}' (the router serves check/query/check_batch/\
-                 stats/metrics/shutdown; band-level ops go directly to slice backends)"
+                 stats/metrics/trace_dump/shutdown; band-level ops go directly to \
+                 slice backends)"
             );
             (error_response(msg), false)
         }
@@ -497,7 +565,7 @@ fn ensure_fleet<'a>(
         for addr in &shared.backends {
             let conn = connect_backend(addr, shared.connect_timeout, shared.read_timeout)
                 .map_err(|e| {
-                    count_backend_error(addr);
+                    count_backend_error(shared, addr);
                     format!("backend {addr}: {e}")
                 })?;
             conns.push(conn);
@@ -528,7 +596,19 @@ fn broadcast(
     // lands, so a slow slice shows up in its own labeled series.
     let _fan = crate::obs::span("router.fan_out");
     let reg = crate::obs::global();
-    let line = req.to_json() + "\n";
+    // A trace that will (or may yet) record pays the wire bytes for
+    // propagation: the broadcast line carries this root's context so
+    // every backend parents its span under it. Unsampled traffic
+    // serializes the caller's request untouched.
+    let traced = crate::obs::trace::should_propagate();
+    let line = match crate::obs::trace::current_context().filter(|_| traced) {
+        Some(ctx) => {
+            let mut stamped = req.clone();
+            super::proto::attach_trace(&mut stamped, &ctx);
+            stamped.to_json() + "\n"
+        }
+        None => req.to_json() + "\n",
+    };
     if line.len() > shared.max_line_bytes {
         // Pre-flight, nothing sent: a clean reply, connection kept.
         return Err(Failure::clean(format!(
@@ -546,14 +626,14 @@ fn broadcast(
     for (conn, addr) in conns.iter_mut().zip(&shared.backends) {
         // From the first send onward a failure may be half-applied.
         conn.send_raw(&line).map_err(|e| {
-            count_backend_error(addr);
+            count_backend_error(shared, addr);
             Failure::fatal(format!("backend {addr}: {e}"))
         })?;
     }
     let mut replies = Vec::with_capacity(conns.len());
     for (conn, addr) in conns.iter_mut().zip(&shared.backends) {
         let resp = conn.recv().map_err(|e| {
-            count_backend_error(addr);
+            count_backend_error(shared, addr);
             Failure::fatal(format!("backend {addr}: {e}"))
         })?;
         // Requests are pipelined, so each backend's series measures
@@ -561,12 +641,28 @@ fn broadcast(
         // service time, and the per-slice signal worth graphing.
         reg.histogram(&format!("router.backend.seconds{{backend=\"{addr}\"}}"))
             .record_duration(start.elapsed());
+        if traced {
+            // One hop span per backend, reusing the backend's own span
+            // ID (two views of one RPC) with its self-reported duration
+            // alongside the client-side wall time measured here.
+            let (remote_span, remote_ns) =
+                super::proto::trace_timing_from_reply(&resp).unwrap_or((0, 0));
+            crate::obs::trace::record_hop(
+                &format!("hop {addr}"),
+                remote_span,
+                start.elapsed(),
+                remote_ns,
+            );
+        }
         if let Some(err) = resp.get("error").and_then(|v| v.as_str()) {
-            count_backend_error(addr);
+            count_backend_error(shared, addr);
             return Err(Failure::fatal(format!("backend {addr}: {err}")));
         }
         replies.push(resp);
     }
+    // Every backend answered cleanly: the fleet is healthy again as far
+    // as this router can observe, so readiness recovers here.
+    shared.ready.store(true, Ordering::SeqCst);
     Ok(replies)
 }
 

@@ -40,11 +40,21 @@
 //! `check_bands` / `check_bands_batch` (pre-MinHashed band vectors from
 //! a router — concurrent-family backends only), `stats`, `metrics`
 //! (the full [`crate::obs`] registry as JSON, fill gauges refreshed
-//! first), `shutdown`. With `--metrics-addr` the same registry is also
-//! scrapeable as Prometheus text over a minimal HTTP listener; request
-//! latency for the dedup ops feeds `server.request.seconds` (aggregate
-//! and per-op), with an in-flight gauge and request/error counters
-//! alongside.
+//! first), `trace_dump` (recent traces from the
+//! [`crate::obs::trace`] ring), `shutdown`. With `--metrics-addr` the
+//! same registry is also scrapeable as Prometheus text over a minimal
+//! HTTP listener (plus `/healthz`, `/readyz`, and the `/debug/traces`
+//! explorer); request latency for the dedup ops feeds
+//! `server.request.seconds` (aggregate and per-op), with an in-flight
+//! gauge and request/error counters alongside.
+//!
+//! Every request runs under a [`crate::obs::trace`] root span: adopted
+//! from the request's `trace` field when a router (or traced client)
+//! supplied one, minted locally otherwise, sampled per
+//! `--trace-sample` / forced by errors and `--trace-slow-ms`. Replies
+//! to traced requests carry a `trace` object with this server's span
+//! ID and self-measured duration so the caller can attribute wire time
+//! vs server time per hop.
 //! Request lines are capped ([`super::DEFAULT_MAX_LINE_BYTES`],
 //! `--max-line-bytes`): a client that streams bytes without a newline
 //! gets an error response and a closed connection instead of growing a
@@ -322,6 +332,9 @@ struct Shared {
     shard_workers: u64,
     /// Per-connection request-line cap.
     max_line_bytes: usize,
+    /// Tracing knobs (`--trace-sample`, `--trace-slow-ms`), per server
+    /// instance so in-process fleets with different settings coexist.
+    trace: crate::obs::TraceParams,
     stats: ServerStats,
     shutdown: AtomicBool,
 }
@@ -566,6 +579,10 @@ impl DedupServer {
             bind_disk_bytes,
             shard_workers,
             max_line_bytes: opts.max_line_bytes,
+            trace: crate::obs::TraceParams {
+                sample: cfg.trace_sample,
+                slow_ms: cfg.trace_slow_ms,
+            },
             stats,
             shutdown: AtomicBool::new(false),
         });
@@ -578,9 +595,13 @@ impl DedupServer {
                 // Prometheus always sees filter state no staler than the
                 // scrape itself.
                 let hook_shared = Arc::clone(&shared);
+                // A server is ready the moment it is bound: its index
+                // is local, so liveness and readiness coincide (unlike
+                // the router, whose readiness tracks its backend fleet).
                 Some(crate::obs::MetricsHttp::bind(
                     maddr,
                     Some(Box::new(move || hook_shared.refresh_gauges())),
+                    Some(Box::new(|| true)),
                 )?)
             }
             None => None,
@@ -717,7 +738,17 @@ fn handle_request(line: &str, shared: &Shared) -> Value {
         }
     };
     let op = req.get("op").and_then(|v| v.as_str()).map(str::to_string);
-    let resp = dispatch_request(&req, shared);
+    // The whole request runs under a trace root: adopted when the peer
+    // sent a context (a router hop, a traced client), minted fresh
+    // otherwise. A garbled `trace` field parses to `None` and the
+    // request proceeds untraced — tracing never rejects traffic.
+    let ctx = super::proto::trace_from_request(&req);
+    let label = op.as_deref().unwrap_or("unknown");
+    let root = match ctx {
+        Some(c) => crate::obs::trace::adopt_root(c, label, shared.trace),
+        None => crate::obs::trace::start_root(label, shared.trace),
+    };
+    let mut resp = dispatch_request(&req, shared);
     if let Some(op) = op.as_deref().filter(|&op| is_dedup_op(op)) {
         let elapsed = start.elapsed();
         reg.histogram("server.request.seconds").record_duration(elapsed);
@@ -727,7 +758,22 @@ fn handle_request(line: &str, shared: &Shared) -> Value {
     }
     if resp.get("error").is_some() {
         reg.counter("server.errors.total").inc();
+        // Error traces always record, whatever the sampling verdict.
+        crate::obs::trace::force_record();
     }
+    if ctx.is_some() {
+        // The caller is traced: report this hop's span ID and the
+        // server-side duration so it can split wire time from work.
+        if let Some(local) = crate::obs::trace::current_context() {
+            if let Value::Obj(map) = &mut resp {
+                map.insert(
+                    "trace".to_string(),
+                    super::proto::trace_reply(local.span_id, start.elapsed().as_nanos() as u64),
+                );
+            }
+        }
+    }
+    drop(root);
     inflight.add(-1.0);
     resp
 }
@@ -858,6 +904,7 @@ fn dispatch_request(req: &Value, shared: &Shared) -> Value {
             shared.refresh_gauges();
             crate::obs::global().to_json()
         }
+        Some("trace_dump") => super::proto::trace_dump_response(req),
         Some("shutdown") => {
             shared.shutdown.store(true, Ordering::SeqCst);
             obj(vec![("ok", Value::Bool(true))])

@@ -1,0 +1,283 @@
+//! End-to-end distributed tracing over the serving tier.
+//!
+//! The acceptance path: a router fanning out over two loopback slice
+//! backends at `trace_sample 1.0` must yield ONE trace tree — a single
+//! root span for the client-facing op, one hop child per backend
+//! carrying the backend's self-reported server-side duration, and the
+//! backends' own adopted root spans sharing those hop span IDs (two
+//! views of one RPC). The tree must be retrievable both ways: the
+//! `/debug/traces` HTTP route on the router's metrics endpoint and the
+//! `{"op":"trace_dump"}` wire op.
+//!
+//! The protocol edges ride along: a garbled or missing `trace` field
+//! must never error (the request simply runs untraced), and at
+//! `trace_sample 0` no spans are recorded while an error request still
+//! forces its trace into the ring.
+//!
+//! All servers here share one process and therefore ONE global span
+//! ring; every assertion filters by root op so concurrently-running
+//! tests cannot pollute each other.
+
+// Miri cannot emulate this (binds TCP listeners); the miri CI job
+// covers the pure-logic trace unit tests instead.
+#![cfg(not(miri))]
+
+use lshbloom::config::{EngineMode, PipelineConfig};
+use lshbloom::json::{self, Value};
+use lshbloom::service::{DedupClient, DedupRouter, DedupServer, RouterOptions, ServeOptions};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+fn base_cfg(sample: f64) -> PipelineConfig {
+    PipelineConfig {
+        num_perms: 64,
+        expected_docs: 10_000,
+        engine: EngineMode::Concurrent,
+        trace_sample: sample,
+        ..Default::default()
+    }
+}
+
+fn start_server(
+    cfg: PipelineConfig,
+    opts: ServeOptions,
+) -> (std::thread::JoinHandle<()>, String) {
+    let server = DedupServer::bind_with_opts("127.0.0.1:0", &cfg, &opts).expect("bind");
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.serve().expect("serve"));
+    (handle, addr)
+}
+
+fn start_fleet(
+    cfg: &PipelineConfig,
+    count: usize,
+) -> (Vec<std::thread::JoinHandle<()>>, Vec<String>) {
+    let mut handles = Vec::with_capacity(count);
+    let mut addrs = Vec::with_capacity(count);
+    for slice in 0..count {
+        let opts = ServeOptions { slice: Some((slice, count)), ..ServeOptions::default() };
+        let (handle, addr) = start_server(cfg.clone(), opts);
+        handles.push(handle);
+        addrs.push(addr);
+    }
+    (handles, addrs)
+}
+
+fn shutdown(addr: &str) {
+    DedupClient::connect(addr).unwrap().shutdown().unwrap();
+}
+
+/// One-shot HTTP GET against a metrics endpoint, returning the body.
+fn http_get(addr: std::net::SocketAddr, path: &str) -> String {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").as_bytes()).unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("200"), "status: {line}");
+    loop {
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        if line.trim().is_empty() {
+            break;
+        }
+    }
+    let mut body = String::new();
+    reader.read_to_string(&mut body).unwrap();
+    body
+}
+
+/// One raw request line over a fresh connection, parsed reply back —
+/// for requests a well-behaved client cannot produce (garbled trace
+/// context, hand-stamped context).
+fn raw_round_trip(addr: &str, line: &str) -> Value {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(line.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    stream.flush().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    json::parse(&resp).expect("reply must be JSON")
+}
+
+/// The traces whose root op is `op`, from a `{"traces": [...]}` doc.
+fn traces_for_op(doc: &Value, op: &str) -> Vec<Value> {
+    doc.get("traces")
+        .and_then(|t| t.as_arr())
+        .map(|arr| {
+            arr.iter()
+                .filter(|t| t.get("op").and_then(Value::as_str) == Some(op))
+                .cloned()
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+/// Structural check on one fan-out trace tree; returns its trace id.
+fn assert_fan_out_tree(trace: &Value, backend_count: usize) -> String {
+    let spans = trace.get("spans").unwrap().as_arr().unwrap();
+    let field = |s: &Value, k: &str| s.get(k).and_then(Value::as_u64).unwrap_or(0);
+
+    // Exactly one root: the router's client-facing span.
+    let roots: Vec<&Value> = spans.iter().filter(|&s| field(s, "parent_id") == 0).collect();
+    assert_eq!(roots.len(), 1, "one root span, got {spans:?}");
+    let root = roots[0];
+    let root_span = field(root, "span_id");
+    let root_dur = field(root, "dur_ns");
+    assert_eq!(root.get("name").and_then(Value::as_str), Some("check_batch"));
+
+    // One hop child per backend, each parented at the root and
+    // carrying both sides of the RPC timing: the local wall (includes
+    // the wire) and the backend's self-reported server duration.
+    let hops: Vec<&Value> = spans
+        .iter()
+        .filter(|&s| s.get("name").and_then(Value::as_str).is_some_and(|n| n.starts_with("hop ")))
+        .collect();
+    assert_eq!(hops.len(), backend_count, "one hop per backend: {spans:?}");
+    for &hop in &hops {
+        assert_eq!(field(hop, "parent_id"), root_span, "hops parent at the root");
+        let server_ns = field(hop, "server_dur_ns");
+        assert!(server_ns > 0, "hop must carry the server-side duration: {hop:?}");
+        assert!(field(hop, "dur_ns") >= server_ns, "client wall includes the wire: {hop:?}");
+        assert!(field(hop, "dur_ns") <= root_dur, "a hop cannot outlast its root: {hop:?}");
+        // The backend's own adopted root shares this span id — the
+        // in-process fleet writes both views into the same ring.
+        let views = spans.iter().filter(|&s| field(s, "span_id") == field(hop, "span_id"));
+        assert!(views.count() >= 2, "hop + backend view of one RPC: {spans:?}");
+    }
+    assert!(
+        spans.iter().any(|s| {
+            s.get("name").and_then(Value::as_str) == Some("check_bands_batch")
+                && field(s, "parent_id") == root_span
+        }),
+        "backend adopted roots join the tree: {spans:?}"
+    );
+    trace.get("trace_id").and_then(Value::as_str).unwrap().to_string()
+}
+
+#[test]
+fn router_fan_out_yields_one_trace_tree_via_http_and_wire() {
+    let cfg = base_cfg(1.0);
+    let (backend_handles, backend_addrs) = start_fleet(&cfg, 2);
+    let opts = RouterOptions {
+        metrics_addr: Some("127.0.0.1:0".to_string()),
+        ..RouterOptions::default()
+    };
+    let router = DedupRouter::bind("127.0.0.1:0", &cfg, backend_addrs.clone(), &opts)
+        .expect("bind router");
+    let router_addr = router.local_addr().unwrap().to_string();
+    let metrics_addr = router.metrics_addr().expect("router metrics endpoint");
+    let router_handle = std::thread::spawn(move || router.serve().expect("route"));
+
+    // The router is ready the moment its bind-time handshake passed.
+    assert_eq!(http_get(metrics_addr, "/healthz"), "ok\n");
+    assert_eq!(http_get(metrics_addr, "/readyz"), "ready\n");
+
+    let mut client = DedupClient::connect(&router_addr).unwrap();
+    let verdicts = client
+        .check_batch(&["traced fan-out alpha", "traced fan-out beta", "traced fan-out alpha"])
+        .unwrap();
+    assert_eq!(verdicts, [false, false, true]);
+
+    // Retrieval path 1: the /debug/traces explorer on the router's
+    // metrics endpoint, filtered to the client-facing op.
+    let body = http_get(metrics_addr, "/debug/traces?op=check_batch");
+    let doc = json::parse(body.trim()).unwrap();
+    let traces = traces_for_op(&doc, "check_batch");
+    assert!(!traces.is_empty(), "sampled fan-out must be in the ring: {body}");
+    let http_trace_id = assert_fan_out_tree(&traces[0], backend_addrs.len());
+
+    // Retrieval path 2: the trace_dump wire op returns the same tree.
+    let dump = client.trace_dump().unwrap();
+    let wire = traces_for_op(&dump, "check_batch");
+    let wire_ids: Vec<&str> =
+        wire.iter().filter_map(|t| t.get("trace_id").and_then(Value::as_str)).collect();
+    assert!(wire_ids.contains(&http_trace_id.as_str()), "wire dump must hold the same trace");
+    assert_fan_out_tree(&wire[0], backend_addrs.len());
+
+    // The slowest view serves from the same ring.
+    let body = http_get(metrics_addr, "/debug/traces/slowest?limit=4");
+    let slowest = json::parse(body.trim()).unwrap();
+    assert!(slowest.get("traces").unwrap().as_arr().is_some_and(|t| !t.is_empty()));
+
+    shutdown(&router_addr);
+    router_handle.join().unwrap();
+    for addr in &backend_addrs {
+        shutdown(addr);
+    }
+    for handle in backend_handles {
+        handle.join().unwrap();
+    }
+}
+
+#[test]
+fn garbled_or_missing_trace_context_never_errors() {
+    let (handle, addr) = start_server(base_cfg(0.0), ServeOptions::default());
+
+    // Garbled contexts of every shape: the request runs untraced and
+    // the reply carries no trace echo (nothing to correlate against).
+    let overlong = "f".repeat(49);
+    let garbled = ["zzz", "", "123", overlong.as_str(), "00000000000000000000000000000000-dead"];
+    for garbage in garbled {
+        let req = json::obj(vec![
+            ("op", Value::str("check")),
+            ("text", Value::str("garbled context doc")),
+            ("trace", Value::str(garbage)),
+        ]);
+        let resp = raw_round_trip(&addr, &req.to_json());
+        assert!(resp.get("error").is_none(), "garbled trace must not error: {resp:?}");
+        assert!(resp.get("duplicate").is_some(), "verdict must still arrive: {resp:?}");
+        assert!(resp.get("trace").is_none(), "no echo for an unparseable context: {resp:?}");
+    }
+
+    // No trace field at all: same untraced behavior.
+    let resp = raw_round_trip(&addr, r#"{"op":"query","text":"untraced doc"}"#);
+    assert!(resp.get("error").is_none() && resp.get("trace").is_none(), "{resp:?}");
+
+    // A well-formed context gets the timing echo even when the server
+    // itself samples at 0 — the caller owns the record decision.
+    let ctx = format!("{:032x}-{:016x}", 0xfeed_beef_u128, 0x1234_u64);
+    let req = json::obj(vec![
+        ("op", Value::str("query")),
+        ("text", Value::str("hand-stamped context doc")),
+        ("trace", Value::str(&ctx)),
+    ]);
+    let resp = raw_round_trip(&addr, &req.to_json());
+    let echo = resp.get("trace").expect("well-formed context earns a timing echo");
+    assert!(echo.get("span_id").and_then(Value::as_u64).is_some_and(|s| s > 0), "{resp:?}");
+    assert!(echo.get("dur_ns").and_then(Value::as_u64).is_some(), "{resp:?}");
+
+    shutdown(&addr);
+    handle.join().unwrap();
+}
+
+#[test]
+fn sampling_zero_records_nothing_but_errors_force_traces() {
+    let (handle, addr) = start_server(base_cfg(0.0), ServeOptions::default());
+    let mut client = DedupClient::connect(&addr).unwrap();
+
+    // A healthy workload at sample 0 must leave no trace behind.
+    for i in 0..30 {
+        let _ = client.check(&format!("sample-zero workload doc {i}")).unwrap();
+    }
+    let dump = client.trace_dump().unwrap();
+    assert!(
+        traces_for_op(&dump, "check").is_empty(),
+        "sample 0 must record no check traces: {dump:?}"
+    );
+
+    // An error reply forces its trace into the ring regardless.
+    assert!(client.check_bands(&[1, 2, 3]).is_err(), "wrong band count must error");
+    let dump = client.trace_dump().unwrap();
+    let forced = traces_for_op(&dump, "check_bands");
+    assert!(!forced.is_empty(), "error traces must appear at sample 0: {dump:?}");
+    let spans = forced[0].get("spans").unwrap().as_arr().unwrap();
+    assert!(
+        spans.iter().any(|s| s.get("parent_id").and_then(Value::as_u64) == Some(0)),
+        "forced trace still has a root: {spans:?}"
+    );
+
+    shutdown(&addr);
+    handle.join().unwrap();
+}
