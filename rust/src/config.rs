@@ -107,7 +107,9 @@ pub struct PipelineConfig {
     /// mmap-backed filters plus a checkpoint manifest (`crate::persist`).
     /// Drives `dedup --checkpoint-dir` / `serve --state-dir`; with
     /// shards > 1 it is the per-shard checkpoint root for the on-disk
-    /// phase-2 union.
+    /// phase-2 union. A slice server (`serve --slice-index`) owns its
+    /// band range here as live mmaps — acknowledged inserts survive a
+    /// crash-restart, and sibling slices may tile the same directory.
     pub checkpoint_dir: String,
     /// Checkpoint every N documents during engine-backed streaming
     /// ingest (0 = only the final end-of-stream checkpoint). Requires

@@ -160,6 +160,116 @@ impl BandSliceIndex {
         Ok(Self::from_parts(filters, range, config, manifest.inserted))
     }
 
+    /// Open — or create — this slice's bands as *live mmap-backed*
+    /// filters under `dir` (see
+    /// [`crate::persist::open_durable_slice`]): the replicated-serving
+    /// backend mode, where every insert lands in the backing file
+    /// before it is acknowledged, so a SIGKILL'd slice server restarts
+    /// with zero lost inserts. A fresh directory is initialized with
+    /// zeroed filters and a live-mode manifest; an existing one must
+    /// match `config`'s geometry exactly (full-restore strictness) and
+    /// a torn band file is a named error. Call [`Self::checkpoint`] at
+    /// orderly shutdown (or after an anti-entropy merge) to refresh the
+    /// manifest's counters.
+    pub fn open_durable(
+        config: LshBloomConfig,
+        dir: &std::path::Path,
+        slice: usize,
+        count: usize,
+    ) -> crate::error::Result<Self> {
+        let range = slice_range(config.lsh.num_bands, slice, count);
+        let (filters, inserted) = crate::persist::open_durable_slice(&config, range.clone(), dir)?;
+        Ok(Self::from_parts(filters, range, config, inserted))
+    }
+
+    /// Publish this slice's manifest entries into the checkpoint
+    /// directory `dir` ([`crate::persist::write_slice_checkpoint`]):
+    /// live mmap-backed filters are msync'd in place, heap filters are
+    /// cold-copied out. `docs`/`duplicates` are the serving counters to
+    /// record alongside the index's insert count.
+    pub fn checkpoint(
+        &self,
+        dir: &std::path::Path,
+        docs: u64,
+        duplicates: u64,
+    ) -> crate::error::Result<()> {
+        crate::persist::write_slice_checkpoint(
+            &self.filters,
+            &self.config,
+            self.range.clone(),
+            self.len(),
+            docs,
+            duplicates,
+            dir,
+        )?;
+        Ok(())
+    }
+
+    /// Snapshot the words of owned band `band` (global numbering) —
+    /// the payload of the `pull_bands` anti-entropy wire op. `None`
+    /// when this slice does not own `band`. Acquire loads, so the
+    /// snapshot contains at least every insert that happened-before
+    /// the call.
+    pub fn band_words(&self, band: usize) -> Option<Vec<u64>> {
+        let filter = self.filters.get(band.checked_sub(self.range.start)?)?;
+        Some(filter.words().iter().map(|w| w.load(Ordering::Acquire)).collect())
+    }
+
+    /// Keys inserted into owned band `band` (global numbering); `None`
+    /// when not owned.
+    pub fn band_inserted(&self, band: usize) -> Option<u64> {
+        let filter = self.filters.get(band.checked_sub(self.range.start)?)?;
+        Some(filter.inserted())
+    }
+
+    /// Bit-OR a peer replica's snapshot of band `band` (global
+    /// numbering) into the owned filter — the anti-entropy delta merge.
+    /// Bloom bit-sets are monotone, so the merge is idempotent and
+    /// commutative: replaying it after a mid-merge crash, or merging
+    /// from several peers in any order, converges to the same bits.
+    /// The filter's insert counter converges to the max of its own and
+    /// `peer_inserted` (replicas of one slice see overlapping streams,
+    /// so summing would double-count). Errors on a band this slice does
+    /// not own or a word-count mismatch (geometry drift), without
+    /// touching any bits.
+    pub fn merge_band_words(
+        &self,
+        band: usize,
+        words: &[u64],
+        peer_inserted: u64,
+    ) -> crate::error::Result<()> {
+        let filter = band
+            .checked_sub(self.range.start)
+            .and_then(|local| self.filters.get(local))
+            .ok_or_else(|| {
+                crate::error::Error::Format(format!(
+                    "merge_band_words: band {band} is outside this slice's range {:?}",
+                    self.range
+                ))
+            })?;
+        if words.len() != filter.word_count() {
+            return Err(crate::error::Error::Format(format!(
+                "merge_band_words: band {band} peer sent {} words but this filter has {}; \
+                 refusing a geometry-mismatched merge",
+                words.len(),
+                filter.word_count()
+            )));
+        }
+        filter.or_words_at(0, words);
+        let own = filter.inserted();
+        if peer_inserted > own {
+            filter.add_inserted(peer_inserted - own);
+        }
+        Ok(())
+    }
+
+    /// Converge the slice-level insert counter to `max(own, n)` — the
+    /// counter half of an anti-entropy merge (bits converge via
+    /// [`Self::merge_band_words`]).
+    pub fn adopt_inserted(&self, n: u64) {
+        self.inserted.fetch_max(n, Ordering::Relaxed);
+    }
+
     /// [`Self::restore`] against an already-loaded manifest — lets
     /// [`BandShardedEngine::restore`] parse `manifest.json` once for all
     /// N slices.
@@ -700,5 +810,148 @@ mod tests {
             assert!(whole.query_one(doc), "resaved checkpoint lost doc {}", doc.id);
         }
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Property test: over random geometries and random insert / probe /
+    /// verdict-free-set interleavings, an mmap-backed durable slice is
+    /// bit-for-bit identical to a heap slice fed the same stream — every
+    /// verdict and, at the end, every filter word.
+    #[test]
+    fn durable_slice_is_bit_identical_to_heap() {
+        let root = std::env::temp_dir()
+            .join(format!("lshbloom-durable-prop-{}", std::process::id()));
+        std::fs::remove_dir_all(&root).ok();
+        let mut rng = Xoshiro256pp::seeded(0xD17B_0007);
+        for case in 0..6u64 {
+            let bands = [3usize, 5, 8, 9, 12, 16][(rng.next_u64() % 6) as usize];
+            let rows = 4 + (rng.next_u64() % 12) as usize;
+            let count = 1 + (rng.next_u64() % (bands as u64).min(4)) as usize;
+            let config = index_cfg(bands, rows, 5_000);
+            let heap: Vec<BandSliceIndex> =
+                (0..count).map(|s| BandSliceIndex::new(config, s, count)).collect();
+            let durable: Vec<BandSliceIndex> = (0..count)
+                .map(|s| {
+                    BandSliceIndex::open_durable(
+                        config,
+                        &root.join(format!("case{case}-slice{s}")),
+                        s,
+                        count,
+                    )
+                    .unwrap()
+                })
+                .collect();
+            for step in 0..1_200u64 {
+                let hashes: Vec<u64> =
+                    (0..bands).map(|_| rng.next_u64() % 700).collect();
+                match rng.next_u64() % 3 {
+                    0 => {
+                        for (h, d) in heap.iter().zip(&durable) {
+                            assert_eq!(
+                                h.insert_if_new(&hashes),
+                                d.insert_if_new(&hashes),
+                                "case {case} step {step}: insert verdict diverged"
+                            );
+                        }
+                    }
+                    1 => {
+                        for (h, d) in heap.iter().zip(&durable) {
+                            h.set(&hashes);
+                            d.set(&hashes);
+                        }
+                    }
+                    _ => {
+                        for (h, d) in heap.iter().zip(&durable) {
+                            assert_eq!(
+                                h.query(&hashes),
+                                d.query(&hashes),
+                                "case {case} step {step}: probe verdict diverged"
+                            );
+                        }
+                    }
+                }
+            }
+            for (h, d) in heap.iter().zip(&durable) {
+                assert_eq!(h.len(), d.len(), "case {case}: insert counters diverged");
+                for g in h.band_range() {
+                    assert_eq!(
+                        h.band_words(g),
+                        d.band_words(g),
+                        "case {case} band {g}: mmap words differ from heap"
+                    );
+                }
+            }
+        }
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    /// Property test for the anti-entropy invariant: with every insert
+    /// delivered to a random subset of replicas such that replicas 0
+    /// and 1 *jointly* see everything, OR-merging both into the stale
+    /// replica 2 reproduces the reference slice (which saw every
+    /// insert) bit for bit — and replaying the merge changes nothing
+    /// (idempotence, the property that makes mid-merge crash retry
+    /// safe).
+    #[test]
+    fn replica_subset_union_recovers_the_full_slice() {
+        let config = index_cfg(8, 6, 4_000);
+        let reference = BandSliceIndex::new(config, 1, 3);
+        let replicas: Vec<BandSliceIndex> =
+            (0..3).map(|_| BandSliceIndex::new(config, 1, 3)).collect();
+        let mut rng = Xoshiro256pp::seeded(0xA117_E27);
+        for _ in 0..2_000 {
+            let hashes: Vec<u64> = (0..8).map(|_| rng.next_u64() % 900).collect();
+            reference.set(&hashes);
+            // Replicas 0 and 1 jointly cover every insert; replica 2
+            // sees only a strict-ish subset (the stale restartee).
+            match rng.next_u64() % 3 {
+                0 => replicas[0].set(&hashes),
+                1 => replicas[1].set(&hashes),
+                _ => {
+                    replicas[0].set(&hashes);
+                    replicas[1].set(&hashes);
+                }
+            }
+            if rng.next_u64() % 4 == 0 {
+                replicas[2].set(&hashes);
+            }
+        }
+        let merge_all_into = |target: &BandSliceIndex| {
+            for g in reference.band_range() {
+                for peer in &replicas[..2] {
+                    target
+                        .merge_band_words(
+                            g,
+                            &peer.band_words(g).unwrap(),
+                            peer.band_inserted(g).unwrap(),
+                        )
+                        .unwrap();
+                }
+            }
+        };
+        merge_all_into(&replicas[2]);
+        let converged: Vec<Option<Vec<u64>>> =
+            reference.band_range().map(|g| replicas[2].band_words(g)).collect();
+        for (g, words) in reference.band_range().zip(&converged) {
+            assert_eq!(
+                words.as_ref(),
+                reference.band_words(g).as_ref(),
+                "band {g}: replica union missed bits the full index has"
+            );
+        }
+        // Idempotence: a second full replay of the merge is a no-op.
+        merge_all_into(&replicas[2]);
+        for (g, words) in reference.band_range().zip(&converged) {
+            assert_eq!(
+                replicas[2].band_words(g).as_ref(),
+                words.as_ref(),
+                "band {g}: replaying the merge changed bits"
+            );
+        }
+        // Out-of-range band and wrong word count are named errors that
+        // leave no bits behind.
+        assert!(replicas[2].merge_band_words(0, &[], 0).is_err(), "band 0 is unowned");
+        let g = reference.band_range().start;
+        let err = replicas[2].merge_band_words(g, &[0u64; 1], 0).unwrap_err();
+        assert!(err.to_string().contains("geometry"), "{err}");
     }
 }

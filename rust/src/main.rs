@@ -792,10 +792,9 @@ fn cmd_serve(rest: Vec<String>) -> CliResult {
         .arg(ArgSpec::opt(
             "serve-shards",
             "run N in-process band-slice engines probed in parallel and OR-reduced \
-             (concurrent engine; verdicts identical to a single engine). NB: with \
-             --state-dir the slices are heap-backed and persist only at orderly \
-             shutdown — unlike serve-shards 1, whose mmap-backed filters survive a \
-             crash",
+             (concurrent engine; verdicts identical to a single engine); with \
+             --state-dir they slice-restore from its checkpoint and write a \
+             full-index snapshot back on orderly shutdown",
         ).default("1"))
         .arg(ArgSpec::opt(
             "slice-index",
@@ -815,7 +814,15 @@ fn cmd_serve(rest: Vec<String>) -> CliResult {
             "state-dir",
             "durable index dir (concurrent engine): warm-start from its checkpoint when \
              present, else create state there; checkpointed on shutdown. Band-sharded \
-             servers slice-restore from it; slice servers treat it as read-only",
+             servers slice-restore from it; slice servers own it as live mmap-backed \
+             filters, so every acknowledged insert survives a crash-restart",
+        ).default(""))
+        .arg(ArgSpec::opt(
+            "sync-from",
+            "comma-separated healthy replica addresses to anti-entropy from at bind \
+             (slice servers): each owned band is pulled (`pull_bands`) and bit-OR \
+             merged before the listener opens, so a restarted replica re-converges \
+             with its peers before it serves probes",
         ).default(""))
         .arg(ArgSpec::opt(
             "metrics-addr",
@@ -879,9 +886,19 @@ fn cmd_serve(rest: Vec<String>) -> CliResult {
     let warm = state_dir
         .as_deref()
         .is_some_and(lshbloom::persist::CheckpointManifest::exists);
+    let sync_from: Vec<String> = args
+        .get("sync-from")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if !sync_from.is_empty() && slice.is_none() {
+        return Err("--sync-from is a slice-server flag (requires --slice-index)".into());
+    }
     let opts = lshbloom::service::ServeOptions {
         state_dir,
         slice,
+        sync_from,
         max_line_bytes: args.get_usize("max-line-bytes"),
         metrics_addr: Some(&cfg.metrics_addr).filter(|s| !s.is_empty()).cloned(),
     };
@@ -915,9 +932,12 @@ fn cmd_route(rest: Vec<String>) -> CliResult {
         .arg(ArgSpec::opt("addr", "listen address").default("127.0.0.1:7879"))
         .arg(ArgSpec::req(
             "backends",
-            "comma-separated backend addresses; each must be `serve --slice-index I \
-             --slice-count N` with N = number of backends (one full --engine \
-             concurrent server also works as the degenerate 1-backend fleet)",
+            "comma-separated slice specs, each a `|`-separated replica group \
+             (`a:7001|b:7001,a:7002|b:7002` = 2 slices x 2 replicas); every replica \
+             must be `serve --slice-index I --slice-count N` with N = number of \
+             comma groups (one full --engine concurrent server also works as the \
+             degenerate 1-backend fleet). Inserts fan to all live replicas; probes \
+             fail over when one dies",
         ))
         .arg(ArgSpec::opt("threshold", "Jaccard threshold (must match the backends)").default("0.5"))
         .arg(ArgSpec::opt("perms", "minhash permutations (must match the backends)").default("256"))

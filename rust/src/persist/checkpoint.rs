@@ -126,30 +126,7 @@ pub(crate) fn write_checkpoint_filters(
             live += 1;
             0
         } else {
-            // Cold copy: each word is read once into the buffer, and both
-            // the file bytes and the checksum come from that one read, so
-            // they agree even if other threads are inserting concurrently.
-            let tmp = dir.join(format!("{name}.tmp"));
-            let file = std::fs::File::create(&tmp)
-                .map_err(|e| Error::io(tmp.display().to_string(), e))?;
-            let mut w = std::io::BufWriter::new(file);
-            let mut cs = ChecksumStream::new();
-            for chunk in filter.words().chunks(COPY_CHUNK_WORDS) {
-                let vals: Vec<u64> = chunk.iter().map(|x| x.load(Ordering::Acquire)).collect();
-                cs.update(&vals);
-                let mut bytes = Vec::with_capacity(vals.len() * 8);
-                for v in &vals {
-                    bytes.extend_from_slice(&v.to_le_bytes());
-                }
-                w.write_all(&bytes).map_err(|e| Error::io(tmp.display().to_string(), e))?;
-            }
-            let file = w
-                .into_inner()
-                .map_err(|e| Error::io(tmp.display().to_string(), e.into_error()))?;
-            file.sync_all().map_err(|e| Error::io(tmp.display().to_string(), e))?;
-            std::fs::rename(&tmp, &target)
-                .map_err(|e| Error::io(target.display().to_string(), e))?;
-            cs.finish()
+            copy_filter_cold(filter, dir, &name)?
         };
         files.push(FilterFile { name, words, checksum, inserted: filter.inserted() });
     }
@@ -158,6 +135,238 @@ pub(crate) fn write_checkpoint_filters(
         // Any in-place file means the bytes can keep moving under the
         // manifest, so checksums are meaningless there (and unrecorded).
         mode: if live > 0 { CheckpointMode::Live } else { CheckpointMode::Snapshot },
+        num_bands: config.lsh.num_bands,
+        rows_per_band: config.lsh.rows_per_band,
+        p_effective: config.p_effective,
+        expected_docs: config.expected_docs,
+        filter_params: params,
+        inserted,
+        docs,
+        duplicates,
+        files,
+    };
+    manifest.save(dir)?;
+    Ok(manifest)
+}
+
+/// Write `filter`'s words to `dir/name` as a checksummed cold copy
+/// (tmp + fsync + rename), returning the checksum. Each word is read
+/// once into the buffer, and both the file bytes and the checksum come
+/// from that one read, so they agree even if other threads are
+/// inserting concurrently.
+fn copy_filter_cold(filter: &AtomicBloomFilter, dir: &Path, name: &str) -> Result<u64> {
+    let target = dir.join(name);
+    let tmp = dir.join(format!("{name}.tmp"));
+    let file =
+        std::fs::File::create(&tmp).map_err(|e| Error::io(tmp.display().to_string(), e))?;
+    let mut w = std::io::BufWriter::new(file);
+    let mut cs = ChecksumStream::new();
+    for chunk in filter.words().chunks(COPY_CHUNK_WORDS) {
+        let vals: Vec<u64> = chunk.iter().map(|x| x.load(Ordering::Acquire)).collect();
+        cs.update(&vals);
+        let mut bytes = Vec::with_capacity(vals.len() * 8);
+        for v in &vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        w.write_all(&bytes).map_err(|e| Error::io(tmp.display().to_string(), e))?;
+    }
+    let file = w
+        .into_inner()
+        .map_err(|e| Error::io(tmp.display().to_string(), e.into_error()))?;
+    file.sync_all().map_err(|e| Error::io(tmp.display().to_string(), e))?;
+    std::fs::rename(&tmp, &target).map_err(|e| Error::io(target.display().to_string(), e))?;
+    Ok(cs.finish())
+}
+
+/// Placeholder manifest entries for every band of `config` — the shape
+/// a slice writer publishes for bands it does not own when no sibling
+/// has persisted them yet. `verify_geometry` checks recorded word
+/// counts, never file bytes, so a placeholder keeps the manifest
+/// restorable by the bands' real owner while costing nothing on disk.
+fn placeholder_files(expect_words: u64, num_bands: usize) -> Vec<FilterFile> {
+    (0..num_bands)
+        .map(|g| FilterFile {
+            name: band_file_name(g),
+            words: expect_words,
+            checksum: 0,
+            inserted: 0,
+        })
+        .collect()
+}
+
+/// Open — or create — the durable mmap-backed filters for the bands
+/// `range` of the checkpoint in `dir`: the crash-safe backing store of
+/// a `serve --slice-index --state-dir` replica
+/// ([`crate::engine::BandSliceIndex::open_durable`] wraps it).
+///
+/// With a manifest present the geometry is verified with full-restore
+/// strictness, each owned band file is re-attached in place
+/// (`ShmAtomicBitArray::open`'s exact-size discipline — a torn or
+/// truncated file is a named error, never a silent false-negative
+/// source) and, for snapshot checkpoints, checksum-verified before the
+/// manifest is republished in live mode (the files mutate in place from
+/// here on, so stale snapshot checksums must not survive to reject the
+/// next restart). A manifest entry whose file is missing is recreated
+/// zeroed only when it records zero inserts (a sibling slice's
+/// placeholder); a missing file with recorded inserts is a hard error.
+/// Without a manifest, fresh zeroed files are created for the owned
+/// range and a live-mode manifest with placeholder entries for the
+/// other bands is published.
+///
+/// Returns the owned filters in band order plus the manifest's document
+/// counter (0 for fresh state). Bits reach the backing files on every
+/// insert (mmap), so a crash loses no inserts; the *counters* are only
+/// as fresh as the last manifest publish — re-converge them through the
+/// serving tier's anti-entropy pull before trusting them.
+pub fn open_durable_slice(
+    expect: &LshBloomConfig,
+    range: std::ops::Range<usize>,
+    dir: &Path,
+) -> Result<(Vec<AtomicBloomFilter>, u64)> {
+    let _wall = crate::obs::span("persist.restore");
+    std::fs::create_dir_all(dir).map_err(|e| Error::io(dir.display().to_string(), e))?;
+    let params = crate::index::LshBloomIndex::filter_params(expect);
+    let expect_words = params.bits.div_ceil(64);
+    let mut filters = Vec::with_capacity(range.len());
+    if CheckpointManifest::exists(dir) {
+        let mut manifest = CheckpointManifest::load(dir)?;
+        manifest.verify_geometry(expect)?;
+        for g in range.clone() {
+            let entry = &manifest.files[g];
+            let path = dir.join(&entry.name);
+            let filter = if path.is_file() {
+                let filter = AtomicBloomFilter::open_shm(params, &path, entry.inserted)?;
+                if manifest.mode == CheckpointMode::Snapshot {
+                    let got = checksum_filter(&filter);
+                    if got != entry.checksum {
+                        return Err(checksum_mismatch(&path, got, entry.checksum));
+                    }
+                }
+                filter
+            } else if entry.inserted == 0 {
+                // A sibling slice published the manifest with a
+                // placeholder for this band; materialize it zeroed.
+                AtomicBloomFilter::new_shm(params, &path)?
+            } else {
+                return Err(Error::Format(format!(
+                    "checkpoint file {} is missing but its manifest entry records {} \
+                     inserts; refusing to restore a torn slice",
+                    path.display(),
+                    entry.inserted
+                )));
+            };
+            filters.push(filter);
+        }
+        // The owned files are live mappings from here on: flip the
+        // manifest to live mode and zero the owned checksums so a
+        // crash-restart does not reject legitimately moved-on bytes.
+        if manifest.mode == CheckpointMode::Snapshot {
+            manifest.mode = CheckpointMode::Live;
+        }
+        for g in range {
+            manifest.files[g].checksum = 0;
+        }
+        let inserted = manifest.inserted;
+        manifest.save(dir)?;
+        Ok((filters, inserted))
+    } else {
+        for g in range.clone() {
+            filters.push(AtomicBloomFilter::new_shm(params, &dir.join(band_file_name(g)))?);
+        }
+        let manifest = CheckpointManifest {
+            version: MANIFEST_VERSION,
+            mode: CheckpointMode::Live,
+            num_bands: expect.lsh.num_bands,
+            rows_per_band: expect.lsh.rows_per_band,
+            p_effective: expect.p_effective,
+            expected_docs: expect.expected_docs,
+            filter_params: params,
+            inserted: 0,
+            docs: 0,
+            duplicates: 0,
+            files: placeholder_files(expect_words, expect.lsh.num_bands),
+        };
+        manifest.save(dir)?;
+        Ok((filters, 0))
+    }
+}
+
+/// Publish/refresh the entries for the bands `range` of the checkpoint
+/// manifest in `dir` — the slice-owned half of [`write_checkpoint`],
+/// used by a durable slice replica at orderly shutdown (and after an
+/// anti-entropy merge). Read-modify-write: an existing
+/// geometry-compatible manifest keeps its entries for bands outside
+/// `range` (so N slices sharing one directory tile a full-index
+/// manifest between them), a missing one starts from placeholders.
+/// `filters` are the owned filters in band order; mmap-backed filters
+/// already living at their target path are msync'd in place, anything
+/// else is cold-copied. The manifest always publishes in live mode —
+/// entries owned by *other* slices may describe files still mutating in
+/// place, so snapshot-grade checksums cannot be promised for the
+/// directory as a whole.
+///
+/// The manifest-global counters (`inserted`/`docs`/`duplicates`) are
+/// published as `max(existing, this writer's view)`: they are monotone
+/// under both crash-restart and shared-directory tiling, so a slice
+/// that served no traffic cannot wipe a sibling's (or a full
+/// checkpoint's) corpus history. The serving tier treats them as
+/// advisory either way and re-converges replica counters over the wire.
+pub fn write_slice_checkpoint(
+    filters: &[AtomicBloomFilter],
+    config: &LshBloomConfig,
+    range: std::ops::Range<usize>,
+    inserted: u64,
+    docs: u64,
+    duplicates: u64,
+    dir: &Path,
+) -> Result<CheckpointManifest> {
+    let _wall = crate::obs::span("persist.checkpoint");
+    crate::obs::global().counter("persist.checkpoints.total").inc();
+    if filters.len() != range.len() {
+        return Err(Error::Format(format!(
+            "write_slice_checkpoint: {} filters for band range {range:?}",
+            filters.len()
+        )));
+    }
+    std::fs::create_dir_all(dir).map_err(|e| Error::io(dir.display().to_string(), e))?;
+    let params = crate::index::LshBloomIndex::filter_params(config);
+    let expect_words = params.bits.div_ceil(64);
+    let mut inserted = inserted;
+    let mut docs = docs;
+    let mut duplicates = duplicates;
+    let mut files = if CheckpointManifest::exists(dir) {
+        let existing = CheckpointManifest::load(dir)?;
+        // Refusing a mismatched directory beats silently clobbering a
+        // foreign checkpoint's manifest with wrong-geometry entries.
+        existing.verify_geometry(config)?;
+        inserted = inserted.max(existing.inserted);
+        docs = docs.max(existing.docs);
+        duplicates = duplicates.max(existing.duplicates);
+        existing.files
+    } else {
+        placeholder_files(expect_words, config.lsh.num_bands)
+    };
+    for (filter, g) in filters.iter().zip(range) {
+        let name = band_file_name(g);
+        let target = dir.join(&name);
+        if filter.backing_path() == Some(target.as_path()) {
+            filter.sync()?;
+        } else {
+            copy_filter_cold(filter, dir, &name)?;
+        }
+        files[g] = FilterFile {
+            name,
+            words: filter.word_count() as u64,
+            // Live-mode manifests carry no meaningful checksums; zero
+            // even the cold-copied ones so no reader can mistake a
+            // partially-checksummed directory for a verified snapshot.
+            checksum: 0,
+            inserted: filter.inserted(),
+        };
+    }
+    let manifest = CheckpointManifest {
+        version: MANIFEST_VERSION,
+        mode: CheckpointMode::Live,
         num_bands: config.lsh.num_bands,
         rows_per_band: config.lsh.rows_per_band,
         p_effective: config.p_effective,

@@ -27,6 +27,12 @@
 //!   ([`crate::engine::band_slice`], `serve --serve-shards` and router
 //!   backends) warm-starts each slice owner from the same manifest a
 //!   single engine would restore whole.
+//! * [`open_durable_slice`] / [`write_slice_checkpoint`] — the
+//!   mmap-backed variant of the above for replicated slice backends:
+//!   open (or create) just the owned band files as live mappings so
+//!   every insert is on disk before it is acknowledged, and publish the
+//!   owned slice of the manifest read-modify-write so several slices
+//!   can tile one checkpoint directory between them.
 //! * [`WorkerManifest`] — the completion marker a distributed shard
 //!   worker *process* publishes next to its checkpoint so the
 //!   supervising orchestrator ([`crate::pipeline::supervisor`]) can tell
@@ -62,7 +68,10 @@ pub mod manifest;
 pub mod shm_atomic;
 pub mod worker;
 
-pub use checkpoint::{restore_band_slice, restore_index, union_from_checkpoint, write_checkpoint};
+pub use checkpoint::{
+    open_durable_slice, restore_band_slice, restore_index, union_from_checkpoint,
+    write_checkpoint, write_slice_checkpoint,
+};
 
 pub(crate) use checkpoint::{restore_band_slice_from, write_checkpoint_filters};
 pub use manifest::{CheckpointManifest, CheckpointMode, ChecksumStream, MANIFEST_FILE};

@@ -221,6 +221,39 @@ impl DedupClient {
         Ok(resp)
     }
 
+    /// Pull one band's filter words from a band-capable server
+    /// (`{"op":"pull_bands","band":g}`, global band numbering) — the
+    /// anti-entropy primitive: a restarted replica OR-merges a healthy
+    /// peer's words band by band
+    /// ([`crate::engine::BandSliceIndex::merge_band_words`]) to
+    /// re-converge before rejoining probe rotation. Returns the raw
+    /// reply (`band`, `words`, `inserted`, plus the `num_bands` /
+    /// `rows_per_band` geometry echo the merge validates against).
+    pub fn pull_band(&mut self, band: usize) -> std::io::Result<Value> {
+        let resp = self.round_trip(json::obj(vec![
+            ("op", Value::str("pull_bands")),
+            ("band", Value::u64(band as u64)),
+        ]))?;
+        if resp.get("error").is_some() {
+            return Err(err_from(&resp));
+        }
+        Ok(resp)
+    }
+
+    /// Ask a [`super::DedupRouter`] to re-admit its downed backends
+    /// (`{"op":"revive"}`): the router re-runs the bind-time handshake
+    /// against each dead replica and marks it probe-eligible only if
+    /// geometry and insert counters agree with a healthy peer of the
+    /// same slice. Returns the raw reply (`revived` / `failed` address
+    /// lists).
+    pub fn revive(&mut self) -> std::io::Result<Value> {
+        let resp = self.round_trip(json::obj(vec![("op", Value::str("revive"))]))?;
+        if resp.get("error").is_some() {
+            return Err(err_from(&resp));
+        }
+        Ok(resp)
+    }
+
     /// Ask the server to stop accepting connections and exit.
     pub fn shutdown(&mut self) -> std::io::Result<()> {
         let resp = self.round_trip(json::obj(vec![("op", Value::str("shutdown"))]))?;

@@ -227,6 +227,38 @@ pub(crate) fn bands_from_json(v: &Value, expect_bands: usize) -> Result<Vec<u64>
     Ok(bands)
 }
 
+/// Encode a filter-word snapshot for the `pull_bands` anti-entropy op
+/// (same exact-u64 token discipline as band hashes: filter words are
+/// full-width bit patterns and must round-trip without f64-mantissa
+/// loss).
+pub(crate) fn words_to_json(words: &[u64]) -> Value {
+    Value::Arr(words.iter().map(|&w| Value::u64(w)).collect())
+}
+
+/// Decode a filter-word snapshot, enforcing the expected word count — a
+/// wrong-length snapshot means the peer runs a different filter
+/// geometry, and OR-merging it would corrupt the membership contract,
+/// so it is a protocol error, never something to truncate or pad.
+pub(crate) fn words_from_json(v: &Value, expect_words: usize) -> Result<Vec<u64>, String> {
+    let Some(arr) = v.as_arr() else {
+        return Err("'words' is not an array".to_string());
+    };
+    if arr.len() != expect_words {
+        return Err(format!(
+            "wrong word count: got {} filter words, this filter has {expect_words}",
+            arr.len()
+        ));
+    }
+    let mut words = Vec::with_capacity(arr.len());
+    for (i, w) in arr.iter().enumerate() {
+        let Some(w) = w.as_u64() else {
+            return Err(format!("words[{i}] is not a u64 filter word"));
+        };
+        words.push(w);
+    }
+    Ok(words)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,46 +1,73 @@
-//! The band-partition router: one MinHash, N backends, OR-reduced
-//! verdicts — the multi-host half of the serving tier (`route`
-//! subcommand).
+//! The band-partition router: one MinHash, N slices x R replicas,
+//! OR-reduced verdicts — the multi-host half of the serving tier
+//! (`route` subcommand).
 //!
-//! A router fronts `N` dedup servers, each serving one contiguous band
-//! slice of the same index geometry (`serve --slice-index I
-//! --slice-count N`; a single full concurrent-engine server also works
-//! as the degenerate slice 0 of 1). For every `check`/`check_batch` the router MinHashes
-//! the text *once*, fans the resulting band vectors across all backends
-//! with the band-level wire ops (`check_bands` /
+//! A router fronts a fleet of dedup servers arranged as *replica sets*:
+//! each set serves one contiguous band slice of the same index geometry
+//! (`serve --slice-index I --slice-count N`; a single full
+//! concurrent-engine server also works as the degenerate slice 0 of 1)
+//! and may hold R identical copies of that slice — in the backend spec,
+//! commas separate slices and pipes separate replicas
+//! (`--backends "h1:7001|h2:7001,h1:7002|h2:7002"` is 2 slices x 2
+//! replicas). For every `check`/`check_batch` the router MinHashes the
+//! text *once*, fans the resulting band vectors to every live replica
+//! of every slice with the band-level wire ops (`check_bands` /
 //! `check_bands_batch`) — so backends never re-MinHash — and OR-reduces
 //! the per-slice verdicts, which is exactly the single-index duplicate
-//! rule (any band collides, §4.2). Batched requests additionally run
-//! the shared intra-batch reconcile
-//! ([`crate::engine::reconcile_in_batch`]) at the router, so batch
-//! verdicts stay byte-identical to a single concurrent-engine server.
+//! rule (any band collides, §4.2). OR-reducing is also what makes
+//! replication free of coordination: replicas of one slice hold the
+//! same bits, so OR-ing across however many happen to answer can never
+//! change a verdict. Batched requests additionally run the shared
+//! intra-batch reconcile ([`crate::engine::reconcile_in_batch`]) at the
+//! router, so batch verdicts stay byte-identical to a single
+//! concurrent-engine server.
 //!
 //! ## Fleet validation and failure model
 //!
-//! At bind the router performs a stats handshake with every backend and
+//! At bind the router performs a stats handshake with every replica and
 //! fails fast on a misconfigured fleet: every backend must accept
 //! band-level ops (a classic text-only server is rejected here, not on
 //! the first routed request), serve the router's band count *and* rows
 //! per band (two perm counts can derive the same band count with
 //! different rows — band count alone would silently miss every probe),
-//! declare a slice count equal to the number of backends, and the slice
-//! indices must be a permutation of `0..N` — together, by the
-//! [`crate::engine::slice_range`] tiling, that proves the fleet covers
-//! every band exactly once.
+//! declare a slice count equal to the number of replica sets, agree
+//! with its set peers on both the slice index and the `inserted`
+//! counter (two diverged copies cannot both be probe sources; restart
+//! the stale one with `serve --sync-from` so anti-entropy re-converges
+//! it first), and the sets' slice indices must be a permutation of
+//! `0..N` — together, by the [`crate::engine::slice_range`] tiling,
+//! that proves the fleet covers every band exactly once.
 //!
 //! At serve time each client connection owns one dedicated connection
-//! per backend (established lazily, reused across requests — requests
-//! are pipelined: written to all N backends before any reply is read,
-//! so the slices work concurrently without router-side threads; each
-//! fan-out line is serialized once and size-checked before anything is
-//! sent). Failures split by blast radius: a pre-flight rejection
-//! (over-expanded batch, backend connect refused) provably sent nothing
-//! and only costs an error reply, while any failure after the first
-//! byte went out is **fail-fast** — the client receives an error naming
-//! the backend and the connection closes, because a half-applied
-//! fan-out (some slices inserted, others not) can no longer promise
-//! exact verdicts on that stream. Re-connecting gets a fresh fan-out
-//! against whatever fleet is alive.
+//! per live replica (established lazily, reused across requests —
+//! requests are pipelined: written to every live replica before any
+//! reply is read, so the whole fleet works concurrently without
+//! router-side threads; each fan-out line is serialized once and
+//! size-checked before anything is sent). Failures are scoped to the
+//! replica that produced them: a replica that refuses a connection,
+//! times out, or answers with an error is marked down — out of probe
+//! rotation until `{"op":"revive"}` re-admits it — and its set fails
+//! over to the surviving copies, so killing any single backend of a
+//! replicated slice mid-stream degrades no verdict. Only when an entire
+//! set is unreachable does the request fail, split by blast radius: a
+//! pre-flight rejection (over-expanded batch, no replica of some slice
+//! connectable) provably sent nothing and only costs an error reply,
+//! while losing a set's last replica after the first byte went out is
+//! **fail-fast** — the client receives an error naming the backend and
+//! the connection closes, because a half-applied fan-out (some slices
+//! inserted, others not) can no longer promise exact verdicts on that
+//! stream.
+//!
+//! Every replica carries a dirty-epoch counter: each acknowledged
+//! insert fan-out advances it, so a replica that missed traffic while
+//! down lags the set maximum by exactly its missed inserts
+//! (`router.replica.dirty_epoch`). `revive` marks a replica
+//! probe-eligible again only after a fresh handshake shows geometry,
+//! slice, and `inserted` parity with a healthy peer of its set — the
+//! state a restarted replica reaches by bind-time anti-entropy
+//! (`serve --sync-from`, a bit-OR
+//! [`merge`](crate::engine::BandSliceIndex::merge_band_words) of the
+//! peer's `pull_bands` stream).
 //!
 //! ## Tracing and health
 //!
@@ -54,10 +81,10 @@
 //! time split per hop (`/debug/traces`, `{"op":"trace_dump"}`, and the
 //! `--trace-slow-ms` log line all show the breakdown). On the metrics
 //! endpoint, `/healthz` is pure liveness while `/readyz` tracks the
-//! fleet: ready once the bind-time handshake passes, not-ready again
-//! after any backend failure until a full fan-out succeeds — a router
-//! with a dead backend keeps running (liveness) but reports itself
-//! unfit for new traffic (readiness).
+//! fleet per replica set: ready while every slice keeps at least one
+//! healthy replica, so one dead copy of a replicated slice degrades
+//! `router.replicas_healthy{slice=...}` without clearing readiness —
+//! only a slice with no live replica left does that.
 
 use super::client::DedupClient;
 use super::proto::error_response;
@@ -71,7 +98,7 @@ use crate::methods::lshbloom::BandPreparer;
 use crate::methods::{Prepared, Preparer};
 use crate::minhash::LshParams;
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -85,9 +112,10 @@ pub const DEFAULT_BACKEND_CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
 /// Default for [`RouterOptions::read_timeout`]: how long the router
 /// waits for one backend reply. Dedup ops are memory-speed (a capped
 /// request line parses and probes in well under a second), so a stall
-/// this long means a hung backend, and the fail-fast contract — error
-/// naming the backend, close the client stream — must fire rather than
-/// block forever (which would also wedge router shutdown on the
+/// this long means a hung backend, and that replica must be marked
+/// down (or, for a slice's last copy, the fail-fast contract — error
+/// naming the backend, close the client stream — must fire) rather
+/// than block forever (which would also wedge router shutdown on the
 /// connection join).
 pub const DEFAULT_BACKEND_READ_TIMEOUT: Duration = Duration::from_secs(30);
 
@@ -120,31 +148,80 @@ impl Default for RouterOptions {
     }
 }
 
+/// One backend endpoint: a single copy of one band slice.
+struct Replica {
+    addr: String,
+    /// Probe eligibility. True from the bind handshake until any
+    /// failure attributed to this replica (connect refused, send/recv
+    /// error, read timeout, error reply); only `{"op":"revive"}` — a
+    /// fresh handshake proving parity with a healthy set peer — sets it
+    /// back. Requests simply skip unhealthy replicas, which is the
+    /// failover: the set's surviving copies keep answering.
+    healthy: AtomicBool,
+    /// Count of insert operations this replica has *acknowledged*
+    /// (check fan-outs weigh 1, check_bands_batch fan-outs weigh the
+    /// batch length). A replica that was down, or whose ack was never
+    /// read, lags the set maximum by exactly its possibly-missed
+    /// inserts — the `router.replica.dirty_epoch` gauge — making missed
+    /// traffic detectable even though the bit-OR merge that repairs it
+    /// is idempotent either way.
+    epoch: AtomicU64,
+}
+
+/// The replicas serving one band slice. Every member holds (a copy of)
+/// the same filters, so probes may be answered by any live subset and
+/// inserts must reach every live member.
+struct ReplicaSet {
+    /// The slice index this set serves, from the bind handshake (the
+    /// spec's comma order need not match slice order).
+    slice: usize,
+    replicas: Vec<Replica>,
+}
+
+impl ReplicaSet {
+    fn healthy_count(&self) -> usize {
+        self.replicas.iter().filter(|r| r.healthy.load(Ordering::SeqCst)).count()
+    }
+
+    fn max_epoch(&self) -> u64 {
+        self.replicas.iter().map(|r| r.epoch.load(Ordering::SeqCst)).max().unwrap_or(0)
+    }
+}
+
+/// Per-connection backend connections, `fleet[set][replica]` mirroring
+/// `RouterShared::sets`. `None` until first use (or after the replica
+/// failed / was marked down elsewhere); re-filled from the shared
+/// health flags on each broadcast.
+type Fleet = Vec<Vec<Option<DedupClient>>>;
+
 struct RouterShared {
     preparer: BandPreparer,
     num_bands: usize,
-    backends: Vec<String>,
+    sets: Vec<ReplicaSet>,
     max_line_bytes: usize,
     connect_timeout: Duration,
     read_timeout: Duration,
     /// Tracing knobs (`--trace-sample`, `--trace-slow-ms`), per router
     /// instance so in-process fleets with different settings coexist.
     trace: crate::obs::TraceParams,
-    /// Fleet readiness for `/readyz`: true after the bind-time
-    /// handshake, false after any backend failure, true again once a
-    /// full fan-out succeeds. Liveness (`/healthz`) never follows it —
-    /// a router with a sick backend is alive but not ready.
+    /// Fleet readiness for `/readyz`: true while every replica set
+    /// keeps at least one healthy member. One dead copy of a replicated
+    /// slice degrades the `router.replicas_healthy` gauge but not
+    /// readiness; a slice with no live replica clears it until the
+    /// fleet recovers (`revive`, or a later fan-out succeeding).
+    /// Liveness (`/healthz`) never follows it — a router with a sick
+    /// backend is alive but not ready.
     ready: Arc<AtomicBool>,
     stats: ServerStats,
     shutdown: AtomicBool,
 }
 
 /// A failed fan-out, split by blast radius: `fatal` failures may have
-/// partially applied (some backends mutated, others not), so the client
+/// partially applied (some slices mutated, others not), so the client
 /// stream can no longer promise exact verdicts and must close; clean
-/// failures provably sent nothing (pre-flight size check, connect
-/// refused) and only need an error reply — the client keeps its
-/// connection and can retry or split the batch.
+/// failures provably sent nothing (pre-flight size check, no replica
+/// of some slice connectable) and only need an error reply — the
+/// client keeps its connection and can retry or split the batch.
 struct Failure {
     msg: String,
     fatal: bool,
@@ -174,11 +251,14 @@ fn invalid_input(msg: String) -> std::io::Error {
 }
 
 impl DedupRouter {
-    /// Bind to `addr`, fronting `backends` (dedup-server addresses, one
-    /// per band slice). `cfg` fixes the MinHash/band geometry — it must
-    /// match the geometry every backend was started with, and the
-    /// handshake verifies the observable half of that (band count and
-    /// slice layout) before the listener opens.
+    /// Bind to `addr`, fronting `backends`: one element per band slice,
+    /// each either a single dedup-server address or a `|`-separated
+    /// replica group serving identical copies of that slice
+    /// (`"h1:7001|h2:7001"`). `cfg` fixes the MinHash/band geometry —
+    /// it must match the geometry every backend was started with, and
+    /// the handshake verifies the observable half of that (band count,
+    /// rows per band, slice layout, and within-set `inserted`
+    /// agreement) before the listener opens.
     pub fn bind(
         addr: &str,
         cfg: &PipelineConfig,
@@ -188,17 +268,54 @@ impl DedupRouter {
         if backends.is_empty() {
             return Err(invalid_input("route: need at least one backend".to_string()));
         }
+        let groups: Vec<Vec<String>> = backends
+            .iter()
+            .map(|spec| {
+                spec.split('|')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect()
+            })
+            .collect();
+        if let Some(i) = groups.iter().position(|g: &Vec<String>| g.is_empty()) {
+            return Err(invalid_input(format!(
+                "route: backend spec '{}' names no replica addresses (write `addr` or \
+                 `addr1|addr2`)",
+                backends[i]
+            )));
+        }
         let preparer = BandPreparer::from_config(cfg);
         let num_bands = preparer.lsh.num_bands;
-        validate_backend_layout(&backends, preparer.lsh, opts.connect_timeout, opts.read_timeout)?;
+        let slices = validate_backend_layout(
+            &groups,
+            preparer.lsh,
+            opts.connect_timeout,
+            opts.read_timeout,
+        )?;
+        let sets: Vec<ReplicaSet> = groups
+            .into_iter()
+            .zip(slices)
+            .map(|(addrs, slice)| ReplicaSet {
+                slice,
+                replicas: addrs
+                    .into_iter()
+                    .map(|addr| Replica {
+                        addr,
+                        healthy: AtomicBool::new(true),
+                        epoch: AtomicU64::new(0),
+                    })
+                    .collect(),
+            })
+            .collect();
         // The handshake above just proved the whole fleet answers and
         // tiles the band space — that is the readiness criterion, so
-        // the flag starts true here and only backend failures clear it.
+        // the flag starts true here and only a fully-dead replica set
+        // clears it.
         let ready = Arc::new(AtomicBool::new(true));
         let shared = Arc::new(RouterShared {
             preparer,
             num_bands,
-            backends,
+            sets,
             max_line_bytes: opts.max_line_bytes,
             connect_timeout: opts.connect_timeout,
             read_timeout: opts.read_timeout,
@@ -211,10 +328,22 @@ impl DedupRouter {
             shutdown: AtomicBool::new(false),
         });
         crate::obs::init();
+        // Publish the replication gauges at their bind-time values so a
+        // scrape taken before any traffic already shows the fleet shape
+        // (R healthy replicas per slice, zero epoch lag everywhere).
+        let reg = crate::obs::global();
+        for set in &shared.sets {
+            reg.gauge(&format!("router.replicas_healthy{{slice=\"{}\"}}", set.slice))
+                .set(set.replicas.len() as f64);
+            for rep in &set.replicas {
+                reg.gauge(&format!("router.replica.dirty_epoch{{backend=\"{}\"}}", rep.addr))
+                    .set(0.0);
+            }
+        }
         // The router owns no filters, so scrapes need no refresh hook —
-        // its registry entries (fan-out latency, backend errors) are
-        // updated inline on the request path. Readiness reads the
-        // fleet-health flag maintained by the broadcast path.
+        // its registry entries (fan-out latency, backend errors,
+        // replica health) are updated inline on the request path.
+        // Readiness reads the fleet-health flag maintained there.
         let metrics = match &opts.metrics_addr {
             Some(maddr) => Some(crate::obs::MetricsHttp::bind(
                 maddr,
@@ -238,9 +367,10 @@ impl DedupRouter {
         self.metrics.as_ref().map(|m| m.local_addr())
     }
 
-    /// Number of backends this router fans out to.
+    /// Number of backend endpoints this router fans out to (replicas
+    /// summed across all slices).
     pub fn num_backends(&self) -> usize {
-        self.shared.backends.len()
+        self.shared.sets.iter().map(|s| s.replicas.len()).sum()
     }
 
     /// Serve until a client sends `{"op":"shutdown"}` — the same
@@ -275,66 +405,111 @@ impl DedupRouter {
     }
 }
 
-/// Stats-handshake every backend and fail fast unless the fleet forms a
-/// complete, non-overlapping band partition of this router's geometry
-/// (band count AND rows per band — two perm counts can derive the same
-/// band count with different rows, which would silently miss every
-/// probe) served by band-capable backends.
+/// Stats-handshake every replica of every set and fail fast unless the
+/// fleet forms a complete, non-overlapping band partition of this
+/// router's geometry (band count AND rows per band — two perm counts
+/// can derive the same band count with different rows, which would
+/// silently miss every probe) served by band-capable backends, with
+/// every set internally agreeing on its slice and its `inserted`
+/// counter (replicas that diverged while one was down must re-converge
+/// via `serve --sync-from` before they may serve probes). Returns each
+/// set's slice index, in spec order.
 fn validate_backend_layout(
-    backends: &[String],
+    sets: &[Vec<String>],
     lsh: LshParams,
     connect_timeout: Duration,
     read_timeout: Duration,
-) -> std::io::Result<()> {
-    let mut seen = vec![false; backends.len()];
-    for addr in backends {
-        let fail = |msg: String| invalid_input(format!("route: backend {addr}: {msg}"));
-        let mut client = connect_backend(addr, connect_timeout, read_timeout)
-            .map_err(|e| fail(format!("connect failed: {e}")))?;
-        let stats = client.stats_json().map_err(|e| fail(e.to_string()))?;
-        let get = |k: &str| stats.get(k).and_then(|v| v.as_usize());
-        let (Some(bands), Some(rows), Some(index), Some(count)) = (
-            get("num_bands"),
-            get("rows_per_band"),
-            get("slice_index"),
-            get("slice_count"),
-        ) else {
-            return Err(fail(
-                "stats response lacks the band-layout fields (num_bands/rows_per_band/\
-                 slice_index/slice_count) — not a band-aware dedup server?"
-                    .to_string(),
-            ));
-        };
-        if stats.get("band_ops").and_then(|v| v.as_bool()) != Some(true) {
-            return Err(fail(
-                "serves text ops only (classic engine); router backends must accept \
-                 band-level ops — start it with --engine concurrent"
-                    .to_string(),
-            ));
+) -> std::io::Result<Vec<usize>> {
+    let mut seen = vec![false; sets.len()];
+    let mut slices = Vec::with_capacity(sets.len());
+    for replicas in sets {
+        let mut set_slice: Option<usize> = None;
+        let mut set_inserted: Option<(&str, u64)> = None;
+        for addr in replicas {
+            let fail = |msg: String| invalid_input(format!("route: backend {addr}: {msg}"));
+            let mut client = connect_backend(addr, connect_timeout, read_timeout)
+                .map_err(|e| fail(format!("connect failed: {e}")))?;
+            let stats = client.stats_json().map_err(|e| fail(e.to_string()))?;
+            let get = |k: &str| stats.get(k).and_then(|v| v.as_usize());
+            let (Some(bands), Some(rows), Some(index), Some(count)) = (
+                get("num_bands"),
+                get("rows_per_band"),
+                get("slice_index"),
+                get("slice_count"),
+            ) else {
+                return Err(fail(
+                    "stats response lacks the band-layout fields (num_bands/rows_per_band/\
+                     slice_index/slice_count) — not a band-aware dedup server?"
+                        .to_string(),
+                ));
+            };
+            if stats.get("band_ops").and_then(|v| v.as_bool()) != Some(true) {
+                return Err(fail(
+                    "serves text ops only (classic engine); router backends must accept \
+                     band-level ops — start it with --engine concurrent"
+                        .to_string(),
+                ));
+            }
+            if bands != lsh.num_bands || rows != lsh.rows_per_band {
+                return Err(fail(format!(
+                    "serves {bands} bands x {rows} rows but the router's geometry derives \
+                     {} x {} (threshold/perms/p-effective/expected-docs must match across \
+                     the fleet)",
+                    lsh.num_bands, lsh.rows_per_band
+                )));
+            }
+            if count != sets.len() {
+                return Err(fail(format!(
+                    "declares slice count {count} but the router was given {} backend \
+                     replica sets",
+                    sets.len()
+                )));
+            }
+            match set_slice {
+                None => {
+                    if index >= count || seen[index] {
+                        return Err(fail(format!(
+                            "slice index {index} is out of range or already claimed by \
+                             another backend — the fleet must be a permutation of slices \
+                             0..{count}"
+                        )));
+                    }
+                    seen[index] = true;
+                    set_slice = Some(index);
+                }
+                Some(s) if s != index => {
+                    return Err(fail(format!(
+                        "claims slice {index} but its replica group serves slice {s} — \
+                         every replica behind one `|` group must serve the same slice"
+                    )));
+                }
+                Some(_) => {}
+            }
+            // Replicas of one slice must be bit-equal copies; the
+            // `inserted` counter is the cheap observable proxy the
+            // handshake can check. Servers that predate the field are
+            // admitted unchecked rather than rejected.
+            if let Some(ins) = stats.get("inserted").and_then(|v| v.as_u64()) {
+                match set_inserted {
+                    None => set_inserted = Some((addr, ins)),
+                    Some((peer, peer_ins)) if peer_ins != ins => {
+                        return Err(fail(format!(
+                            "reports {ins} inserted documents but its replica peer {peer} \
+                             reports {peer_ins} — the copies diverged; restart the stale \
+                             one with `serve --sync-from {peer}` so anti-entropy \
+                             re-converges it before it serves probes"
+                        )));
+                    }
+                    Some(_) => {}
+                }
+            }
         }
-        if bands != lsh.num_bands || rows != lsh.rows_per_band {
-            return Err(fail(format!(
-                "serves {bands} bands x {rows} rows but the router's geometry derives \
-                 {} x {} (threshold/perms/p-effective/expected-docs must match across \
-                 the fleet)",
-                lsh.num_bands, lsh.rows_per_band
-            )));
-        }
-        if count != backends.len() {
-            return Err(fail(format!(
-                "declares slice count {count} but the router was given {} backends",
-                backends.len()
-            )));
-        }
-        if index >= count || seen[index] {
-            return Err(fail(format!(
-                "slice index {index} is out of range or already claimed by another \
-                 backend — the fleet must be a permutation of slices 0..{count}"
-            )));
-        }
-        seen[index] = true;
+        // Every replica group was checked non-empty at bind, so the
+        // first replica filled this in; the unwrap-free form keeps the
+        // bind path panic-free.
+        slices.push(set_slice.unwrap_or(0));
     }
-    Ok(())
+    Ok(slices)
 }
 
 /// Open one timed-out backend connection (see [`RouterOptions`]).
@@ -346,39 +521,80 @@ fn connect_backend(
     DedupClient::connect_with_timeouts(addr, connect_timeout, read_timeout)
 }
 
-/// Count one failed interaction with `addr` — connect refused, send or
-/// receive error (including a read timeout), or an error reply. The
-/// labeled counter is what a fleet dashboard alerts on: a single
-/// backend's series climbing while the others stay flat localizes the
-/// sick host. Any backend failure also clears `/readyz` (a partial
-/// fleet cannot serve exact verdicts) until a full fan-out succeeds.
-fn count_backend_error(shared: &RouterShared, addr: &str) {
+/// Take one replica out of probe rotation after a failure attributed to
+/// it — connect refused, send or receive error (including a read
+/// timeout), or an error reply. The labeled counter is what a fleet
+/// dashboard alerts on: a single backend's series climbing while the
+/// others stay flat localizes the sick host, and
+/// `router.replicas_healthy` dropping below R on one slice is the page.
+/// Readiness is recomputed per replica set: the fleet stays ready while
+/// every slice keeps at least one live copy, and only `{"op":"revive"}`
+/// (a fresh parity handshake) puts this replica back.
+fn mark_replica_down(shared: &RouterShared, set: &ReplicaSet, rep: &Replica) {
     let reg = crate::obs::global();
-    reg.counter(&format!("router.backend.errors.total{{backend=\"{addr}\"}}")).inc();
+    reg.counter(&format!("router.backend.errors.total{{backend=\"{}\"}}", rep.addr)).inc();
     reg.counter("router.backend.errors.total").inc();
-    shared.ready.store(false, Ordering::SeqCst);
+    rep.healthy.store(false, Ordering::SeqCst);
+    reg.gauge(&format!("router.replicas_healthy{{slice=\"{}\"}}", set.slice))
+        .set(set.healthy_count() as f64);
+    update_readiness(shared);
+}
+
+/// Recompute `/readyz` from the shared health flags: ready iff every
+/// replica set keeps at least one healthy member.
+fn update_readiness(shared: &RouterShared) {
+    let ready = shared.sets.iter().all(|set| set.healthy_count() > 0);
+    shared.ready.store(ready, Ordering::SeqCst);
+}
+
+/// Refresh the per-replica `router.replica.dirty_epoch` gauges: each
+/// replica's lag behind its set's maximum acknowledged-insert epoch —
+/// an upper bound on the inserts it may have missed while down, and
+/// the series an operator watches drain to zero after `--sync-from`
+/// anti-entropy plus `revive`.
+fn update_dirty_epochs(shared: &RouterShared) {
+    let reg = crate::obs::global();
+    for set in &shared.sets {
+        let max = set.max_epoch();
+        for rep in &set.replicas {
+            let lag = max.saturating_sub(rep.epoch.load(Ordering::SeqCst));
+            reg.gauge(&format!("router.replica.dirty_epoch{{backend=\"{}\"}}", rep.addr))
+                .set(lag as f64);
+        }
+    }
+}
+
+/// The clean/fatal message for a replica set with no live member left.
+/// Always names the word "backend" plus every address, so operators
+/// (and the fail-fast contract) see which hosts to restart.
+fn dead_set_msg(set: &ReplicaSet) -> String {
+    let addrs: Vec<&str> = set.replicas.iter().map(|r| r.addr.as_str()).collect();
+    format!(
+        "slice {}: every backend replica is down ({}); restart the dead hosts (with \
+         --sync-from for anti-entropy) and send {{\"op\":\"revive\"}} to re-admit them",
+        set.slice,
+        addrs.join(", ")
+    )
 }
 
 fn handle_conn(stream: TcpStream, shared: Arc<RouterShared>) {
-    // One dedicated connection per backend, established at the first op
-    // that needs the fleet and reused for every later request on this
-    // client connection. The line loop itself is shared with the dedup
-    // server (`proto::serve_connection`); the close flag fires on the
-    // fail-fast path after a backend error.
-    let mut fleet: Option<Vec<DedupClient>> = None;
+    // One dedicated connection per live replica, established at the
+    // first op that needs the fleet and reused for every later request
+    // on this client connection. The line loop itself is shared with
+    // the dedup server (`proto::serve_connection`); the close flag
+    // fires on the fail-fast path after a replica set empties out.
+    let mut fleet: Fleet =
+        shared.sets.iter().map(|s| s.replicas.iter().map(|_| None).collect()).collect();
     super::proto::serve_connection(stream, &shared.shutdown, shared.max_line_bytes, |line| {
         handle_request(line, &shared, &mut fleet)
     });
 }
 
 /// Handle one request line; the bool asks the connection loop to close
-/// after replying (fail-fast after a backend error — a half-applied
-/// fan-out cannot keep serving exact verdicts on this stream).
-fn handle_request(
-    line: &str,
-    shared: &RouterShared,
-    fleet: &mut Option<Vec<DedupClient>>,
-) -> (Value, bool) {
+/// after replying (fail-fast after a replica set lost its last live
+/// member mid-fan-out — a half-applied fan-out cannot keep serving
+/// exact verdicts on this stream).
+fn handle_request(line: &str, shared: &RouterShared, fleet: &mut Fleet) -> (Value, bool) {
     let reg = crate::obs::global();
     let inflight = reg.gauge("router.inflight_requests");
     inflight.add(1.0);
@@ -434,11 +650,7 @@ fn handle_request(
     (resp, close)
 }
 
-fn dispatch_request(
-    req: &Value,
-    shared: &RouterShared,
-    fleet: &mut Option<Vec<DedupClient>>,
-) -> (Value, bool) {
+fn dispatch_request(req: &Value, shared: &RouterShared, fleet: &mut Fleet) -> (Value, bool) {
     match req.get("op").and_then(|v| v.as_str()) {
         Some("check") | Some("query") => {
             let insert = req.get("op").and_then(|v| v.as_str()) == Some("check");
@@ -497,6 +709,7 @@ fn dispatch_request(
         }
         Some("stats") => match fan_stats(shared, fleet) {
             Ok(disk_bytes) => {
+                let replicas: usize = shared.sets.iter().map(|s| s.replicas.len()).sum();
                 let resp = obj(vec![
                     ("docs", Value::u64(shared.stats.docs.load(Ordering::SeqCst))),
                     (
@@ -505,7 +718,8 @@ fn dispatch_request(
                     ),
                     ("disk_bytes", Value::u64(disk_bytes)),
                     ("num_bands", Value::u64(shared.num_bands as u64)),
-                    ("backends", Value::u64(shared.backends.len() as u64)),
+                    ("slices", Value::u64(shared.sets.len() as u64)),
+                    ("backends", Value::u64(replicas as u64)),
                     ("uptime_seconds", Value::num(crate::obs::uptime_seconds())),
                     ("version", Value::str(env!("CARGO_PKG_VERSION"))),
                 ]);
@@ -513,6 +727,7 @@ fn dispatch_request(
             }
             Err(f) => (error_response(f.msg), f.fatal),
         },
+        Some("revive") => (revive_fleet(shared), false),
         Some("metrics") => (crate::obs::global().to_json(), false),
         Some("trace_dump") => (super::proto::trace_dump_response(req), false),
         Some("shutdown") => {
@@ -522,7 +737,7 @@ fn dispatch_request(
         Some(other) => {
             let msg = format!(
                 "unknown op '{other}' (the router serves check/query/check_batch/\
-                 stats/metrics/trace_dump/shutdown; band-level ops go directly to \
+                 stats/revive/metrics/trace_dump/shutdown; band-level ops go directly to \
                  slice backends)"
             );
             (error_response(msg), false)
@@ -555,44 +770,34 @@ fn prepare_batch(shared: &RouterShared, texts: &[&str]) -> Vec<Vec<u64>> {
         .collect()
 }
 
-/// Connect the per-connection backend fleet on first use.
-fn ensure_fleet<'a>(
-    shared: &RouterShared,
-    fleet: &'a mut Option<Vec<DedupClient>>,
-) -> Result<&'a mut Vec<DedupClient>, String> {
-    if fleet.is_none() {
-        let mut conns = Vec::with_capacity(shared.backends.len());
-        for addr in &shared.backends {
-            let conn = connect_backend(addr, shared.connect_timeout, shared.read_timeout)
-                .map_err(|e| {
-                    count_backend_error(shared, addr);
-                    format!("backend {addr}: {e}")
-                })?;
-            conns.push(conn);
-        }
-        *fleet = Some(conns);
-    }
-    // Filled directly above when it was None; expressing that through
-    // ok_or keeps this connection-handler path panic-free.
-    fleet.as_mut().ok_or_else(|| "router fleet unavailable after connect".to_string())
-}
-
-/// Write `req` to every backend, then read every reply — pipelined, so
-/// all N backends process concurrently over their dedicated
-/// connections. The request is serialized once for the whole fleet and
+/// Write `req` to every live replica of every set, then read every
+/// reply — pipelined, so the whole fleet processes concurrently over
+/// dedicated connections. The request is serialized once and
 /// size-checked against the router's own line cap *before anything is
 /// sent*: band encoding expands short documents (~21 bytes per band
 /// hash), so a client batch under the cap can re-encode past it — that
 /// must be a clean pre-flight error, never a torn half-broadcast
-/// against backends that enforce their own caps. Any I/O failure or
-/// error reply is attributed to the backend address that produced it.
+/// against backends that enforce their own caps.
+///
+/// Failures are attributed to the replica that produced them and mark
+/// it down; the broadcast continues on the set's surviving members and
+/// only fails when some set ends the round with zero successful
+/// replies — cleanly if that is discovered before any byte went out
+/// (connect phase), fatally afterwards. `insert_weight` is the number
+/// of insert operations `req` carries (0 for probes/stats); each
+/// acknowledging replica's epoch advances by it, which is what makes a
+/// down replica's missed inserts observable as `dirty_epoch` lag.
+///
+/// Returns, per set in spec order, the non-empty list of
+/// `(replica_index, reply)` pairs that succeeded.
 fn broadcast(
     shared: &RouterShared,
-    fleet: &mut Option<Vec<DedupClient>>,
+    fleet: &mut Fleet,
     req: &Value,
-) -> Result<Vec<Value>, Failure> {
+    insert_weight: u64,
+) -> Result<Vec<Vec<(usize, Value)>>, Failure> {
     // The span covers the whole fan-out (serialize + send-all +
-    // read-all); per-backend latency is recorded below as each reply
+    // read-all); per-replica latency is recorded below as each reply
     // lands, so a slow slice shows up in its own labeled series.
     let _fan = crate::obs::span("router.fan_out");
     let reg = crate::obs::global();
@@ -619,57 +824,117 @@ fn broadcast(
             shared.max_line_bytes
         )));
     }
-    // Connect failures are clean too — the fleet is only installed once
-    // every backend connected, so no request bytes went anywhere.
-    let conns = ensure_fleet(shared, fleet).map_err(Failure::clean)?;
+    // Connect phase — still clean: no request bytes have gone anywhere,
+    // so a slice with no connectable replica only costs an error reply.
+    for (set, conns) in shared.sets.iter().zip(fleet.iter_mut()) {
+        let mut last_err: Option<String> = None;
+        for (rep, conn) in set.replicas.iter().zip(conns.iter_mut()) {
+            if !rep.healthy.load(Ordering::SeqCst) {
+                // Marked down (possibly by another connection); drop
+                // any cached connection so a later revive reconnects
+                // fresh instead of reusing a dead socket.
+                *conn = None;
+                continue;
+            }
+            if conn.is_none() {
+                match connect_backend(&rep.addr, shared.connect_timeout, shared.read_timeout) {
+                    Ok(c) => *conn = Some(c),
+                    Err(e) => {
+                        last_err = Some(format!("backend {}: {e}", rep.addr));
+                        mark_replica_down(shared, set, rep);
+                    }
+                }
+            }
+        }
+        if !conns.iter().any(|c| c.is_some()) {
+            return Err(Failure::clean(last_err.unwrap_or_else(|| dead_set_msg(set))));
+        }
+    }
+    // Send phase. From the first send onward a failure may be
+    // half-applied, so an emptied set is now fatal.
     let start = std::time::Instant::now();
-    for (conn, addr) in conns.iter_mut().zip(&shared.backends) {
-        // From the first send onward a failure may be half-applied.
-        conn.send_raw(&line).map_err(|e| {
-            count_backend_error(shared, addr);
-            Failure::fatal(format!("backend {addr}: {e}"))
-        })?;
-    }
-    let mut replies = Vec::with_capacity(conns.len());
-    for (conn, addr) in conns.iter_mut().zip(&shared.backends) {
-        let resp = conn.recv().map_err(|e| {
-            count_backend_error(shared, addr);
-            Failure::fatal(format!("backend {addr}: {e}"))
-        })?;
-        // Requests are pipelined, so each backend's series measures
-        // send-all → its reply read: an upper bound on that backend's
-        // service time, and the per-slice signal worth graphing.
-        reg.histogram(&format!("router.backend.seconds{{backend=\"{addr}\"}}"))
-            .record_duration(start.elapsed());
-        if traced {
-            // One hop span per backend, reusing the backend's own span
-            // ID (two views of one RPC) with its self-reported duration
-            // alongside the client-side wall time measured here.
-            let (remote_span, remote_ns) =
-                super::proto::trace_timing_from_reply(&resp).unwrap_or((0, 0));
-            crate::obs::trace::record_hop(
-                &format!("hop {addr}"),
-                remote_span,
-                start.elapsed(),
-                remote_ns,
-            );
+    for (set, conns) in shared.sets.iter().zip(fleet.iter_mut()) {
+        let mut last_err: Option<String> = None;
+        for (rep, conn) in set.replicas.iter().zip(conns.iter_mut()) {
+            let Some(c) = conn.as_mut() else { continue };
+            if let Err(e) = c.send_raw(&line) {
+                last_err = Some(format!("backend {}: {e}", rep.addr));
+                mark_replica_down(shared, set, rep);
+                *conn = None;
+            }
         }
-        if let Some(err) = resp.get("error").and_then(|v| v.as_str()) {
-            count_backend_error(shared, addr);
-            return Err(Failure::fatal(format!("backend {addr}: {err}")));
+        if !conns.iter().any(|c| c.is_some()) {
+            return Err(Failure::fatal(last_err.unwrap_or_else(|| dead_set_msg(set))));
         }
-        replies.push(resp);
     }
-    // Every backend answered cleanly: the fleet is healthy again as far
-    // as this router can observe, so readiness recovers here.
-    shared.ready.store(true, Ordering::SeqCst);
+    // Receive phase: collect each set's surviving replies.
+    let mut replies: Vec<Vec<(usize, Value)>> = Vec::with_capacity(shared.sets.len());
+    for (set, conns) in shared.sets.iter().zip(fleet.iter_mut()) {
+        let mut set_replies: Vec<(usize, Value)> = Vec::new();
+        let mut last_err: Option<String> = None;
+        for (ri, (rep, conn)) in set.replicas.iter().zip(conns.iter_mut()).enumerate() {
+            let Some(c) = conn.as_mut() else { continue };
+            let resp = match c.recv() {
+                Ok(resp) => resp,
+                Err(e) => {
+                    last_err = Some(format!("backend {}: {e}", rep.addr));
+                    mark_replica_down(shared, set, rep);
+                    *conn = None;
+                    continue;
+                }
+            };
+            // Requests are pipelined, so each replica's series measures
+            // send-all → its reply read: an upper bound on that
+            // backend's service time, and the per-slice signal worth
+            // graphing.
+            reg.histogram(&format!("router.backend.seconds{{backend=\"{}\"}}", rep.addr))
+                .record_duration(start.elapsed());
+            if traced {
+                // One hop span per backend, reusing the backend's own
+                // span ID (two views of one RPC) with its self-reported
+                // duration alongside the client-side wall time measured
+                // here.
+                let (remote_span, remote_ns) =
+                    super::proto::trace_timing_from_reply(&resp).unwrap_or((0, 0));
+                crate::obs::trace::record_hop(
+                    &format!("hop {}", rep.addr),
+                    remote_span,
+                    start.elapsed(),
+                    remote_ns,
+                );
+            }
+            if let Some(err) = resp.get("error").and_then(|v| v.as_str()) {
+                last_err = Some(format!("backend {}: {err}", rep.addr));
+                mark_replica_down(shared, set, rep);
+                *conn = None;
+                continue;
+            }
+            if insert_weight > 0 {
+                rep.epoch.fetch_add(insert_weight, Ordering::SeqCst);
+            }
+            set_replies.push((ri, resp));
+        }
+        if set_replies.is_empty() {
+            return Err(Failure::fatal(last_err.unwrap_or_else(|| dead_set_msg(set))));
+        }
+        replies.push(set_replies);
+    }
+    if insert_weight > 0 {
+        update_dirty_epochs(shared);
+    }
+    // Every set answered: as far as this router can observe the fleet
+    // serves full coverage again, so readiness recovers here (computed
+    // from the per-replica flags, never blanket-set).
+    update_readiness(shared);
     Ok(replies)
 }
 
-/// Fan one band vector to every slice and OR-reduce the verdicts.
+/// Fan one band vector to every slice and OR-reduce the verdicts
+/// across every replica that answered (replicas hold the same bits, so
+/// the OR is redundancy, not a semantic change).
 fn fan_check(
     shared: &RouterShared,
-    fleet: &mut Option<Vec<DedupClient>>,
+    fleet: &mut Fleet,
     bands: &[u64],
     insert: bool,
 ) -> Result<bool, Failure> {
@@ -678,26 +943,29 @@ fn fan_check(
         ("bands", super::proto::bands_to_json(bands)),
         ("insert", Value::Bool(insert)),
     ]);
-    let replies = broadcast(shared, fleet, &req)?;
+    let replies = broadcast(shared, fleet, &req, u64::from(insert))?;
     let mut duplicate = false;
-    for (resp, addr) in replies.iter().zip(&shared.backends) {
-        let Some(d) = resp.get("duplicate").and_then(|v| v.as_bool()) else {
-            return Err(Failure::fatal(format!(
-                "backend {addr}: malformed check_bands response"
-            )));
-        };
-        duplicate |= d;
+    for (set, set_replies) in shared.sets.iter().zip(&replies) {
+        for (ri, resp) in set_replies {
+            let Some(d) = resp.get("duplicate").and_then(|v| v.as_bool()) else {
+                return Err(Failure::fatal(format!(
+                    "backend {}: malformed check_bands response",
+                    set.replicas[*ri].addr
+                )));
+            };
+            duplicate |= d;
+        }
     }
     Ok(duplicate)
 }
 
 /// Fan a band-vector batch to every slice, OR-reduce the pre-batch
-/// verdicts, then apply the shared intra-batch reconcile — the final
-/// verdicts are byte-identical to a single concurrent-engine server
-/// processing the same batch.
+/// verdicts across sets and surviving replicas, then apply the shared
+/// intra-batch reconcile — the final verdicts are byte-identical to a
+/// single concurrent-engine server processing the same batch.
 fn fan_check_batch(
     shared: &RouterShared,
-    fleet: &mut Option<Vec<DedupClient>>,
+    fleet: &mut Fleet,
     bands_batch: &[Vec<u64>],
 ) -> Result<Vec<bool>, Failure> {
     let docs: Vec<Value> = bands_batch.iter().map(|b| super::proto::bands_to_json(b)).collect();
@@ -705,47 +973,182 @@ fn fan_check_batch(
         ("op", Value::str("check_bands_batch")),
         ("bands_batch", Value::Arr(docs)),
     ]);
-    let replies = broadcast(shared, fleet, &req)?;
+    let replies = broadcast(shared, fleet, &req, bands_batch.len() as u64)?;
     let mut pre = vec![false; bands_batch.len()];
-    for (resp, addr) in replies.iter().zip(&shared.backends) {
-        let Some(arr) = resp.get("pre_duplicates").and_then(|v| v.as_arr()) else {
-            return Err(Failure::fatal(format!(
-                "backend {addr}: malformed check_bands_batch response"
-            )));
-        };
-        if arr.len() != bands_batch.len() {
-            return Err(Failure::fatal(format!(
-                "backend {addr}: sent {} band vectors, got {} verdicts",
-                bands_batch.len(),
-                arr.len()
-            )));
-        }
-        for (p, v) in pre.iter_mut().zip(arr) {
-            let Some(d) = v.as_bool() else {
+    for (set, set_replies) in shared.sets.iter().zip(&replies) {
+        for (ri, resp) in set_replies {
+            let addr = &set.replicas[*ri].addr;
+            let Some(arr) = resp.get("pre_duplicates").and_then(|v| v.as_arr()) else {
                 return Err(Failure::fatal(format!(
                     "backend {addr}: malformed check_bands_batch response"
                 )));
             };
-            *p |= d;
+            if arr.len() != bands_batch.len() {
+                return Err(Failure::fatal(format!(
+                    "backend {addr}: sent {} band vectors, got {} verdicts",
+                    bands_batch.len(),
+                    arr.len()
+                )));
+            }
+            for (p, v) in pre.iter_mut().zip(arr) {
+                let Some(d) = v.as_bool() else {
+                    return Err(Failure::fatal(format!(
+                        "backend {addr}: malformed check_bands_batch response"
+                    )));
+                };
+                *p |= d;
+            }
         }
     }
     Ok(reconcile_in_batch(bands_batch, &pre))
 }
 
-/// Aggregate the fleet's persisted footprint (sum of backend
-/// `disk_bytes`) for the router's stats reply.
-fn fan_stats(
-    shared: &RouterShared,
-    fleet: &mut Option<Vec<DedupClient>>,
-) -> Result<u64, Failure> {
+/// Aggregate the fleet's persisted footprint for the router's stats
+/// reply: sum of backend `disk_bytes`, counting each slice once (its
+/// first surviving reply) — replicas are copies, not extra coverage.
+fn fan_stats(shared: &RouterShared, fleet: &mut Fleet) -> Result<u64, Failure> {
     let req = obj(vec![("op", Value::str("stats"))]);
-    let replies = broadcast(shared, fleet, &req)?;
+    let replies = broadcast(shared, fleet, &req, 0)?;
     let mut disk_bytes = 0u64;
-    for (resp, addr) in replies.iter().zip(&shared.backends) {
+    for (set, set_replies) in shared.sets.iter().zip(&replies) {
+        // Broadcast never returns an empty per-set list, but spelling
+        // that out keeps this path panic-free.
+        let Some((ri, resp)) = set_replies.first() else {
+            return Err(Failure::fatal(dead_set_msg(set)));
+        };
         let Some(b) = resp.get("disk_bytes").and_then(|v| v.as_u64()) else {
-            return Err(Failure::fatal(format!("backend {addr}: malformed stats response")));
+            return Err(Failure::fatal(format!(
+                "backend {}: malformed stats response",
+                set.replicas[*ri].addr
+            )));
         };
         disk_bytes += b;
     }
     Ok(disk_bytes)
+}
+
+/// `{"op":"revive"}`: try to re-admit every downed replica. Each one
+/// gets the bind-time handshake again — geometry, slice identity, and
+/// `inserted` parity with a healthy peer of its set (the state a
+/// restarted replica reaches via `serve --sync-from` anti-entropy). A
+/// replica that passes is marked probe-eligible with its epoch advanced
+/// to the set maximum (its lag is repaired, not forgiven); one that
+/// fails stays out of rotation with the reason reported, never touching
+/// the live fleet. Replies `{"revived": [addr...], "failed": [{"addr",
+/// "error"}...]}`.
+fn revive_fleet(shared: &RouterShared) -> Value {
+    let reg = crate::obs::global();
+    let mut revived: Vec<Value> = Vec::new();
+    let mut failed: Vec<Value> = Vec::new();
+    for set in &shared.sets {
+        if set.healthy_count() == set.replicas.len() {
+            continue;
+        }
+        let peer_inserted = healthy_peer_inserted(shared, set);
+        let max_epoch = set.max_epoch();
+        for rep in &set.replicas {
+            if rep.healthy.load(Ordering::SeqCst) {
+                continue;
+            }
+            match revive_one(shared, set, rep, peer_inserted) {
+                Ok(()) => {
+                    rep.epoch.store(max_epoch, Ordering::SeqCst);
+                    rep.healthy.store(true, Ordering::SeqCst);
+                    revived.push(Value::str(&rep.addr));
+                }
+                Err(msg) => {
+                    failed.push(obj(vec![
+                        ("addr", Value::str(&rep.addr)),
+                        ("error", Value::str(&msg)),
+                    ]));
+                }
+            }
+        }
+        reg.gauge(&format!("router.replicas_healthy{{slice=\"{}\"}}", set.slice))
+            .set(set.healthy_count() as f64);
+    }
+    update_dirty_epochs(shared);
+    update_readiness(shared);
+    obj(vec![
+        ("revived", Value::Arr(revived)),
+        ("failed", Value::Arr(failed)),
+    ])
+}
+
+/// The `inserted` counter of the first healthy, answering replica of
+/// `set` — the convergence target a revival candidate must match. With
+/// no healthy peer left (double fault) there is nothing to compare
+/// against and the candidate is re-admitted on geometry alone: it holds
+/// the only surviving copy.
+fn healthy_peer_inserted(shared: &RouterShared, set: &ReplicaSet) -> Option<u64> {
+    for rep in &set.replicas {
+        if !rep.healthy.load(Ordering::SeqCst) {
+            continue;
+        }
+        let Ok(mut client) =
+            connect_backend(&rep.addr, shared.connect_timeout, shared.read_timeout)
+        else {
+            continue;
+        };
+        let Ok(stats) = client.stats_json() else { continue };
+        if let Some(ins) = stats.get("inserted").and_then(|v| v.as_u64()) {
+            return Some(ins);
+        }
+    }
+    None
+}
+
+/// Re-run the bind-time handshake against one downed replica; `Ok`
+/// means it may rejoin probe rotation.
+fn revive_one(
+    shared: &RouterShared,
+    set: &ReplicaSet,
+    rep: &Replica,
+    peer_inserted: Option<u64>,
+) -> Result<(), String> {
+    let lsh = shared.preparer.lsh;
+    let mut client = connect_backend(&rep.addr, shared.connect_timeout, shared.read_timeout)
+        .map_err(|e| format!("connect failed: {e}"))?;
+    let stats = client.stats_json().map_err(|e| e.to_string())?;
+    let get = |k: &str| stats.get(k).and_then(|v| v.as_usize());
+    let (Some(bands), Some(rows), Some(index), Some(count)) = (
+        get("num_bands"),
+        get("rows_per_band"),
+        get("slice_index"),
+        get("slice_count"),
+    ) else {
+        return Err(
+            "stats response lacks the band-layout fields — not a band-aware dedup server?"
+                .to_string(),
+        );
+    };
+    if stats.get("band_ops").and_then(|v| v.as_bool()) != Some(true) {
+        return Err("serves text ops only (classic engine); router backends must accept \
+                    band-level ops"
+            .to_string());
+    }
+    if bands != lsh.num_bands || rows != lsh.rows_per_band {
+        return Err(format!(
+            "serves {bands} bands x {rows} rows but the router's geometry derives {} x {}",
+            lsh.num_bands, lsh.rows_per_band
+        ));
+    }
+    if index != set.slice || count != shared.sets.len() {
+        return Err(format!(
+            "serves slice {index} of {count} but this replica set is slice {} of {}",
+            set.slice,
+            shared.sets.len()
+        ));
+    }
+    if let (Some(peer), Some(mine)) =
+        (peer_inserted, stats.get("inserted").and_then(|v| v.as_u64()))
+    {
+        if peer != mine {
+            return Err(format!(
+                "inserted counter is {mine} but its healthy peer holds {peer} — restart it \
+                 with `serve --sync-from` so anti-entropy converges the copies first"
+            ));
+        }
+    }
+    Ok(())
 }

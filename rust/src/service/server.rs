@@ -65,10 +65,16 @@
 //! manifest is present, checkpointed again on orderly shutdown. A
 //! band-sharded server warm-starts each slice from the same full-index
 //! manifest (slice-aware restore) and writes a full-index snapshot back
-//! on shutdown; a slice server restores read-only and never writes.
-//! When the state dir is the aggregated output of a `dedup
-//! --distributed` run, `stats` additionally reports `shard_workers` —
-//! how many worker processes produced the index being served.
+//! on shutdown. A slice server *owns* its state dir as live mmaps
+//! ([`crate::engine::BandSliceIndex::open_durable`]): every insert is
+//! durable before it is acknowledged, a crash-restart loses nothing,
+//! and the shutdown checkpoint refreshes only the slice's own manifest
+//! entries. `--sync-from PEERS` re-converges a restarted replica by
+//! OR-merging a healthy peer's filters (the `pull_bands` op) before the
+//! listener accepts traffic. When the state dir is the aggregated
+//! output of a `dedup --distributed` run, `stats` additionally reports
+//! `shard_workers` — how many worker processes produced the index being
+//! served.
 
 use super::proto::{bands_from_json, error_response};
 use super::DEFAULT_MAX_LINE_BYTES;
@@ -93,15 +99,23 @@ pub struct ServerStats {
 /// Listener-level options beyond the pipeline config.
 #[derive(Clone, Debug)]
 pub struct ServeOptions {
-    /// Durable state directory (concurrent / band-sharded backends):
-    /// warm-start from its checkpoint when present, checkpoint on
-    /// orderly shutdown. A slice server treats it as a read-only
-    /// restore source.
+    /// Durable state directory. Concurrent / band-sharded backends
+    /// warm-start from its checkpoint when present and checkpoint on
+    /// orderly shutdown. A slice server *owns* it as live mmap-backed
+    /// state ([`crate::engine::BandSliceIndex::open_durable`]): every
+    /// insert is on disk before it is acknowledged, so a crashed slice
+    /// restarts with zero lost inserts.
     pub state_dir: Option<std::path::PathBuf>,
     /// Serve one band slice `(index, count)` as a router backend
     /// instead of a full index. Mutually exclusive with
     /// `cfg.serve_shards > 1`.
     pub slice: Option<(usize, usize)>,
+    /// Peer slice-server addresses to anti-entropy-pull from at bind
+    /// (`serve --sync-from`, slice mode only): the owned bands are
+    /// OR-merged from the first answering peer via `pull_bands` before
+    /// the listener accepts traffic, so a restarted replica re-converges
+    /// with its replica set before the router's handshake can see it.
+    pub sync_from: Vec<String>,
     /// Per-connection request-line cap in bytes
     /// ([`DEFAULT_MAX_LINE_BYTES`] unless overridden).
     pub max_line_bytes: usize,
@@ -116,6 +130,7 @@ impl Default for ServeOptions {
         Self {
             state_dir: None,
             slice: None,
+            sync_from: Vec::new(),
             max_line_bytes: DEFAULT_MAX_LINE_BYTES,
             metrics_addr: None,
         }
@@ -173,6 +188,20 @@ impl IndexBackend {
     /// on the first routed request.
     fn supports_band_ops(&self) -> bool {
         !matches!(self, IndexBackend::Classic { .. })
+    }
+
+    /// Documents inserted into the live index — the counter the router's
+    /// replica handshake compares across replicas of one slice (equal
+    /// counters + identical insert streams ⇒ identical filters). `None`
+    /// for the classic backend: reading its counter would take the
+    /// decider lock, and stats must never queue behind ingest.
+    fn inserted(&self) -> Option<u64> {
+        match self {
+            IndexBackend::Classic { .. } => None,
+            IndexBackend::Concurrent(engine) => Some(engine.index().len()),
+            IndexBackend::BandSharded(engine) => Some(engine.stats().0),
+            IndexBackend::Slice { index, .. } => Some(index.len()),
+        }
     }
 
     /// Query + optional insert for one document.
@@ -309,10 +338,10 @@ impl IndexBackend {
 
 struct Shared {
     backend: IndexBackend,
-    /// Durable state directory for a warm-startable concurrent or
-    /// band-sharded backend (`serve --state-dir`); the orderly-shutdown
-    /// checkpoint targets it. `None` for slice backends even when they
-    /// restored from a directory — slices are read-only views.
+    /// Durable state directory (`serve --state-dir`); the
+    /// orderly-shutdown checkpoint targets it. A slice backend's band
+    /// files live here as mmaps and its checkpoint is a
+    /// read-modify-write of only its own manifest entries.
     state_dir: Option<std::path::PathBuf>,
     /// Footprint snapshot taken at bind, used when the number is
     /// genuinely static: the classic decider's backing size, or — for a
@@ -477,22 +506,35 @@ impl DedupServer {
         let backend = if let Some((slice, count)) = opts.slice {
             let index_cfg = slice_mode_config(cfg, slice, count)?;
             let index = match state_dir {
-                Some(dir) => {
-                    if !crate::persist::CheckpointManifest::exists(dir) {
-                        return Err(invalid_input(format!(
-                            "slice server: no checkpoint manifest in {} (a lone slice \
-                             cannot create durable state; omit --state-dir for a fresh \
-                             in-memory slice, or point it at an existing checkpoint)",
-                            dir.display()
-                        )));
-                    }
-                    BandSliceIndex::restore(index_cfg, dir, slice, count).map_err(|e| {
+                // Durable slice: the owned band files are live mmaps in
+                // the state dir (fresh zeroed state, a previous durable
+                // slice's files, or a full-index checkpoint — e.g. a
+                // `dedup --distributed` aggregate — whose owned bands
+                // are adopted in place), so a SIGKILL loses no inserts.
+                Some(dir) => BandSliceIndex::open_durable(index_cfg, dir, slice, count)
+                    .map_err(|e| {
                         std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
-                    })?
-                }
+                    })?,
                 None => BandSliceIndex::new(index_cfg, slice, count),
             };
-            bind_disk_bytes = index.disk_bytes();
+            // Anti-entropy pull before the listener accepts traffic: a
+            // restarted replica OR-merges the inserts it missed from a
+            // healthy peer, so by the time the router's handshake (or a
+            // revive probe) reaches this process it already converged.
+            if !opts.sync_from.is_empty() {
+                sync_slice_from_peers(&index, &opts.sync_from)?;
+                if let Some(dir) = state_dir {
+                    // Merged bits are already durable (they landed in
+                    // the mmap); refresh the manifest counters too.
+                    index.checkpoint(dir, 0, 0).map_err(|e| {
+                        std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+                    })?;
+                }
+            }
+            bind_disk_bytes = match state_dir {
+                Some(dir) => dir_file_bytes(dir).unwrap_or_else(|| index.disk_bytes()),
+                None => index.disk_bytes(),
+            };
             IndexBackend::Slice { index, slice, count }
         } else if cfg.serve_shards > 1 {
             let engine = match state_dir {
@@ -564,14 +606,11 @@ impl DedupServer {
             stats.docs.store(docs, Ordering::SeqCst);
             stats.duplicates.store(duplicates, Ordering::SeqCst);
         }
-        // Slice restores are read-only: keep state_dir out of Shared so
-        // the shutdown path cannot overwrite a full-index manifest with
-        // a partial one.
-        let owned_state_dir = if opts.slice.is_some() {
-            None
-        } else {
-            opts.state_dir.clone()
-        };
+        // Every durable backend owns its state dir now — a slice's
+        // shutdown checkpoint is read-modify-write over the shared
+        // manifest (`write_slice_checkpoint`), so it refreshes only its
+        // own band entries and cannot clobber a sibling's.
+        let owned_state_dir = opts.state_dir.clone();
         let shard_workers = owned_state_dir.as_deref().map(count_shard_workers).unwrap_or(0);
         let shared = Arc::new(Shared {
             backend,
@@ -658,13 +697,18 @@ impl DedupServer {
         }
         // Durable servers leave a complete checkpoint behind (manifest +
         // synced filters) so the next `--state-dir` bind warm-starts
-        // with exact counters. Slice backends never reach here with a
-        // state dir (it is cleared at bind — read-only restores).
+        // with exact counters. A durable slice msyncs its live band
+        // files and refreshes only its own manifest entries.
         if let Some(dir) = &self.shared.state_dir {
             let result = match &self.shared.backend {
                 IndexBackend::Concurrent(engine) => Some(engine.checkpoint(dir)),
                 IndexBackend::BandSharded(engine) => Some(engine.checkpoint(dir)),
-                _ => None,
+                IndexBackend::Slice { index, .. } => Some(index.checkpoint(
+                    dir,
+                    self.shared.stats.docs.load(Ordering::SeqCst),
+                    self.shared.stats.duplicates.load(Ordering::SeqCst),
+                )),
+                IndexBackend::Classic { .. } => None,
             };
             if let Some(Err(e)) = result {
                 crate::log_warn!("final checkpoint to {} failed: {e}", dir.display());
@@ -702,6 +746,111 @@ fn slice_mode_config(
         )));
     }
     Ok(index_cfg)
+}
+
+/// Anti-entropy pull (`serve --sync-from`): OR-merge every owned band
+/// from the first peer that completes the walk. Transport failures move
+/// on to the next peer; a *reachable* peer with mismatched geometry is
+/// a hard bind error (merging it would corrupt the filter contract —
+/// that is operator error, not a transient fault). Safe to re-run after
+/// any interruption: the merge is a bit-OR, so replay is idempotent.
+fn sync_slice_from_peers(index: &BandSliceIndex, peers: &[String]) -> std::io::Result<()> {
+    use super::DedupClient;
+    // Fault-injection hook for the chaos suite: die mid-merge once the
+    // cumulative merged insert count crosses the threshold, so tests can
+    // prove the retried merge converges to the same bits.
+    let crash_after_docs: u64 = std::env::var("LSHBLOOM_REPLICA_CRASH_AFTER_DOCS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    let expect_words =
+        crate::index::LshBloomIndex::filter_params(&index.config()).bits.div_ceil(64) as usize;
+    let mut last_err = String::from("no peers given");
+    for addr in peers {
+        let mut client = match DedupClient::connect_with_timeouts(
+            addr,
+            std::time::Duration::from_secs(5),
+            std::time::Duration::from_secs(30),
+        ) {
+            Ok(c) => c,
+            Err(e) => {
+                last_err = format!("sync peer {addr}: {e}");
+                crate::log_warn!("{last_err}");
+                continue;
+            }
+        };
+        let stats = match client.stats_json() {
+            Ok(s) => s,
+            Err(e) => {
+                last_err = format!("sync peer {addr}: stats failed: {e}");
+                crate::log_warn!("{last_err}");
+                continue;
+            }
+        };
+        let peer_bands = stats.get("num_bands").and_then(|v| v.as_u64()).unwrap_or(0) as usize;
+        let peer_rows =
+            stats.get("rows_per_band").and_then(|v| v.as_u64()).unwrap_or(0) as usize;
+        if peer_bands != index.full_bands() || peer_rows != index.config().lsh.rows_per_band {
+            return Err(invalid_input(format!(
+                "sync peer {addr} serves a different index geometry ({peer_bands} bands x \
+                 {peer_rows} rows vs this slice's {} x {}); refusing the anti-entropy merge",
+                index.full_bands(),
+                index.config().lsh.rows_per_band
+            )));
+        }
+        let mut merged = 0u64;
+        let mut transport_failed = false;
+        for band in index.band_range() {
+            let reply = match client.pull_band(band) {
+                Ok(r) => r,
+                Err(e) => {
+                    last_err = format!("sync peer {addr}: pull_bands({band}) failed: {e}");
+                    crate::log_warn!("{last_err}");
+                    transport_failed = true;
+                    break;
+                }
+            };
+            let Some(words_json) = reply.get("words") else {
+                return Err(invalid_input(format!(
+                    "sync peer {addr}: pull_bands({band}) reply carries no 'words'"
+                )));
+            };
+            let words = super::proto::words_from_json(words_json, expect_words)
+                .map_err(|e| invalid_input(format!("sync peer {addr}: band {band}: {e}")))?;
+            let inserted = reply.get("inserted").and_then(|v| v.as_u64()).unwrap_or(0);
+            index
+                .merge_band_words(band, &words, inserted)
+                .map_err(|e| invalid_input(format!("sync peer {addr}: {e}")))?;
+            merged = merged.saturating_add(inserted);
+            if crash_after_docs > 0 && merged >= crash_after_docs {
+                // Deterministic mid-merge death: some owned bands have
+                // merged, some have not — exactly the torn state the
+                // idempotence property must survive.
+                crate::log_warn!(
+                    "LSHBLOOM_REPLICA_CRASH_AFTER_DOCS={crash_after_docs} reached \
+                     ({merged} inserts merged); dying mid-merge"
+                );
+                std::process::exit(42);
+            }
+        }
+        if transport_failed {
+            continue;
+        }
+        // Counter convergence: bits are already merged; adopt the peer's
+        // view of how many documents produced them.
+        if let Some(n) = stats.get("inserted").and_then(|v| v.as_u64()) {
+            index.adopt_inserted(n);
+        }
+        crate::log_info!(
+            "anti-entropy merge from {addr} complete ({merged} inserts folded across \
+             bands {:?})",
+            index.band_range()
+        );
+        return Ok(());
+    }
+    Err(invalid_input(format!(
+        "--sync-from: no peer completed the anti-entropy merge (last: {last_err})"
+    )))
 }
 
 fn handle_conn(stream: TcpStream, shared: Arc<Shared>) {
@@ -881,7 +1030,7 @@ fn dispatch_request(req: &Value, shared: &Shared) -> Value {
         }
         Some("stats") => {
             let (slice, count) = shared.backend.slice_layout();
-            obj(vec![
+            let mut fields = vec![
                 ("docs", Value::u64(shared.stats.docs.load(Ordering::SeqCst))),
                 (
                     "duplicates",
@@ -896,7 +1045,50 @@ fn dispatch_request(req: &Value, shared: &Shared) -> Value {
                 ("slice_count", Value::u64(count as u64)),
                 ("uptime_seconds", Value::num(crate::obs::uptime_seconds())),
                 ("version", Value::str(env!("CARGO_PKG_VERSION"))),
-            ])
+            ];
+            // Index insert counter (absent on the classic backend): the
+            // router's replica handshake compares this across replicas
+            // of one slice to catch a diverged restartee at bind.
+            if let Some(n) = shared.backend.inserted() {
+                fields.push(("inserted", Value::u64(n)));
+            }
+            obj(fields)
+        }
+        Some("pull_bands") => {
+            // Anti-entropy read: one owned band's filter words, exact
+            // u64 tokens, plus the geometry echo the puller validates
+            // before OR-merging. Served by slice backends only — they
+            // are the replicated tier; full backends checkpoint instead.
+            let Some(band) = req.get("band").and_then(|v| v.as_u64()) else {
+                return error_response("pull_bands: missing 'band' (global band index)");
+            };
+            let IndexBackend::Slice { index, .. } = &shared.backend else {
+                return error_response(
+                    "pull_bands requires a band-slice backend (--slice-index); \
+                     full indexes publish checkpoints instead",
+                );
+            };
+            let band = band as usize;
+            match (index.band_words(band), index.band_inserted(band)) {
+                (Some(words), Some(inserted)) => obj(vec![
+                    ("band", Value::u64(band as u64)),
+                    ("num_bands", Value::u64(index.full_bands() as u64)),
+                    (
+                        "rows_per_band",
+                        Value::u64(index.config().lsh.rows_per_band as u64),
+                    ),
+                    ("inserted", Value::u64(inserted)),
+                    ("words", super::proto::words_to_json(&words)),
+                ]),
+                _ => {
+                    let range = index.band_range();
+                    error_response(format!(
+                        "pull_bands: band {band} is outside this slice's range \
+                         [{}, {})",
+                        range.start, range.end
+                    ))
+                }
+            }
         }
         Some("metrics") => {
             // Same freshness contract as a scrape: re-sample the filter

@@ -1,0 +1,484 @@
+//! Chaos tests for the replicated serving tier.
+//!
+//! The load-bearing assertion is recall survival under replica death:
+//! a router over 2 band slices x 2 replicas each, with every replica a
+//! real `serve --slice-index` subprocess owning a durable state dir,
+//! must keep its verdict vector byte-identical to a single unsharded
+//! concurrent-engine oracle while a replica is SIGKILLed mid-stream,
+//! while it re-converges through `--sync-from` anti-entropy, and after
+//! its *peer* is killed too (double fault — the restarted copy is then
+//! the only holder of slice 0).
+//!
+//! The rest is fault injection on the recovery path itself: a crash
+//! mid-merge (`LSHBLOOM_REPLICA_CRASH_AFTER_DOCS`) followed by an
+//! idempotent retry, a geometry-mismatched sync peer refused as a hard
+//! bind error, and a torn (truncated) slice checkpoint refused at
+//! restart with a named error.
+
+// Miri cannot emulate this (TCP listeners + subprocesses); the miri CI
+// job covers the pure-logic suites instead.
+#![cfg(not(miri))]
+
+use lshbloom::config::{EngineMode, PipelineConfig};
+use lshbloom::methods::lshbloom::BandPreparer;
+use lshbloom::service::{DedupClient, DedupRouter, DedupServer, RouterOptions, ServeOptions};
+use std::io::{BufRead, BufReader, Read};
+use std::path::{Path, PathBuf};
+use std::process::{Child, ChildStdout, Command, Stdio};
+
+fn base_cfg() -> PipelineConfig {
+    PipelineConfig {
+        num_perms: 64,
+        expected_docs: 10_000,
+        engine: EngineMode::Concurrent,
+        ..Default::default()
+    }
+}
+
+/// Fresh per-test temp root (removes any stale leftover first).
+fn tmp_root(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("lshbloom-failover-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// `serve` invocation for one slice-server replica of the test fleet.
+/// Geometry flags must mirror [`base_cfg`] exactly — the router's
+/// bind-time handshake (and the sync handshake) verify they do.
+fn serve_cmd(
+    addr: &str,
+    perms: &str,
+    slice: usize,
+    count: usize,
+    state_dir: &Path,
+    sync_from: Option<&str>,
+) -> Command {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_lshbloom"));
+    cmd.arg("serve")
+        .args(["--addr", addr, "--engine", "concurrent"])
+        .args(["--perms", perms, "--expected-docs", "10000"])
+        .args(["--slice-index", &slice.to_string()])
+        .args(["--slice-count", &count.to_string()])
+        .args(["--state-dir", state_dir.to_str().unwrap()]);
+    if let Some(peers) = sync_from {
+        cmd.args(["--sync-from", peers]);
+    }
+    cmd.stdout(Stdio::piped()).stderr(Stdio::piped());
+    cmd
+}
+
+/// One replica subprocess; SIGKILLed on drop so a failed assertion
+/// never leaks servers.
+struct SliceProc {
+    child: Child,
+    addr: String,
+    // Held so the server's stdout pipe stays open for its lifetime.
+    _stdout: BufReader<ChildStdout>,
+}
+
+impl SliceProc {
+    /// SIGKILL — the chaos event. No shutdown op, no checkpoint.
+    fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for SliceProc {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+/// Spawn a slice server and block until it prints its listening line
+/// (which resolves `--addr 127.0.0.1:0` to the real port).
+fn spawn_slice(
+    addr: &str,
+    slice: usize,
+    count: usize,
+    state_dir: &Path,
+    sync_from: Option<&str>,
+) -> SliceProc {
+    let mut child = serve_cmd(addr, "64", slice, count, state_dir, sync_from)
+        .spawn()
+        .expect("spawn slice server");
+    let mut reader = BufReader::new(child.stdout.take().expect("child stdout"));
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line).expect("read slice server stdout");
+        if n == 0 {
+            let _ = child.wait();
+            let mut err = String::new();
+            if let Some(mut e) = child.stderr.take() {
+                let _ = e.read_to_string(&mut err);
+            }
+            panic!("slice server exited before listening: {err}");
+        }
+        if let Some(rest) = line.split("listening on ").nth(1) {
+            let addr = rest.split_whitespace().next().expect("listen addr token").to_string();
+            return SliceProc { child, addr, _stdout: reader };
+        }
+    }
+}
+
+/// Run a `serve` invocation expected to die before it listens; returns
+/// (exit code, stderr).
+fn serve_expect_death(mut cmd: Command) -> (Option<i32>, String) {
+    let out = cmd.output().expect("run slice server to completion");
+    assert!(
+        !out.status.success(),
+        "server unexpectedly survived: stdout={}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+    (out.status.code(), String::from_utf8_lossy(&out.stderr).into_owned())
+}
+
+fn start_router(cfg: &PipelineConfig, backends: Vec<String>) -> (std::thread::JoinHandle<()>, String) {
+    let router = DedupRouter::bind("127.0.0.1:0", cfg, backends, &RouterOptions::default())
+        .expect("bind router");
+    let addr = router.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || router.serve().expect("route"));
+    (handle, addr)
+}
+
+fn start_oracle(cfg: &PipelineConfig) -> (std::thread::JoinHandle<()>, String) {
+    let server = DedupServer::bind_with_opts("127.0.0.1:0", cfg, &ServeOptions::default())
+        .expect("bind oracle");
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.serve().expect("serve oracle"));
+    (handle, addr)
+}
+
+/// Band hashes for one document, bit-identical to what every serving
+/// path computes (shared preparer construction).
+fn bands_for(preparer: &BandPreparer, text: &str) -> Vec<u64> {
+    let sig = preparer.hasher.signature(&lshbloom::text::normalize(text));
+    let mut bands = Vec::new();
+    lshbloom::hash::band::band_hashes_for_doc(
+        &sig,
+        preparer.lsh.num_bands,
+        preparer.lsh.rows_per_band,
+        &mut bands,
+    );
+    bands
+}
+
+/// `pull_bands` one band: `Some((filter words, inserted))` when the
+/// server owns it, `None` when it answers "outside this slice's range".
+fn pull_words(client: &mut DedupClient, band: usize) -> Option<(Vec<u64>, u64)> {
+    let reply = client.pull_band(band).ok()?;
+    let words: Vec<u64> = reply
+        .get("words")
+        .and_then(|v| v.as_arr())
+        .expect("pull_bands reply words")
+        .iter()
+        .map(|w| w.as_u64().expect("u64 filter word"))
+        .collect();
+    let inserted = reply.get("inserted").and_then(|v| v.as_u64()).unwrap_or(0);
+    Some((words, inserted))
+}
+
+fn inserted_of(client: &mut DedupClient) -> u64 {
+    client
+        .stats_json()
+        .unwrap()
+        .get("inserted")
+        .and_then(|v| v.as_u64())
+        .expect("slice stats carries 'inserted'")
+}
+
+/// Assert two replicas hold bit-for-bit identical filters over every
+/// band either of them owns, and agree on the insert counter — the
+/// convergence contract anti-entropy must reach.
+fn assert_band_parity(addr_a: &str, addr_b: &str) {
+    let mut a = DedupClient::connect(addr_a).unwrap();
+    let mut b = DedupClient::connect(addr_b).unwrap();
+    let num_bands = a
+        .stats_json()
+        .unwrap()
+        .get("num_bands")
+        .and_then(|v| v.as_u64())
+        .expect("slice stats carries 'num_bands'") as usize;
+    let mut compared = 0;
+    for band in 0..num_bands {
+        match (pull_words(&mut a, band), pull_words(&mut b, band)) {
+            (Some((wa, ia)), Some((wb, ib))) => {
+                assert_eq!(wa, wb, "band {band}: replica filter words diverge");
+                assert_eq!(ia, ib, "band {band}: replica insert counters diverge");
+                compared += 1;
+            }
+            (None, None) => {}
+            _ => panic!("band {band}: replicas disagree on slice ownership"),
+        }
+    }
+    assert!(compared > 0, "replicas own no bands in common");
+    assert_eq!(inserted_of(&mut a), inserted_of(&mut b), "slice insert counters diverge");
+}
+
+enum Op {
+    Check(String),
+    Batch(Vec<String>),
+}
+
+/// Deterministic interleaved traffic with twins inside batches, across
+/// batches, and across the single/batched ops — the `i % 37` cycle
+/// guarantees duplicates that straddle the kill/restart phase
+/// boundaries, so recall loss would surface as a verdict mismatch.
+fn traffic() -> Vec<Op> {
+    let doc = |i: u64| format!("replica failover parity document number {}", i % 37);
+    let mut ops = Vec::new();
+    let mut i = 0u64;
+    while i < 200 {
+        match i % 5 {
+            0 | 3 => {
+                ops.push(Op::Check(doc(i)));
+                i += 1;
+            }
+            1 => {
+                let batch: Vec<String> = (0..7).map(|j| doc(i + j)).collect();
+                i += 7;
+                ops.push(Op::Batch(batch));
+            }
+            2 => {
+                // In-batch twin: first element repeated at the end.
+                let mut batch: Vec<String> = (0..5).map(|j| doc(i + j)).collect();
+                batch.push(doc(i));
+                i += 5;
+                ops.push(Op::Batch(batch));
+            }
+            _ => {
+                ops.push(Op::Check(format!("one-off failover document {i}")));
+                i += 1;
+            }
+        }
+    }
+    ops
+}
+
+/// Drive one op through the router and the oracle, asserting verdict
+/// parity — the router must never degrade a verdict, whatever the
+/// fleet's health.
+fn drive_parity(router: &mut DedupClient, oracle: &mut DedupClient, op: &Op, opno: usize) {
+    match op {
+        Op::Check(text) => {
+            assert_eq!(
+                router.check(text).unwrap(),
+                oracle.check(text).unwrap(),
+                "op {opno}: check verdict diverged from the oracle"
+            );
+        }
+        Op::Batch(texts) => {
+            let refs: Vec<&str> = texts.iter().map(String::as_str).collect();
+            assert_eq!(
+                router.check_batch(&refs).unwrap(),
+                oracle.check_batch(&refs).unwrap(),
+                "op {opno}: batch verdict vector diverged from the oracle"
+            );
+        }
+    }
+}
+
+fn revived_addrs(resp: &lshbloom::json::Value) -> Vec<String> {
+    resp.get("revived")
+        .and_then(|v| v.as_arr())
+        .expect("revive reply carries 'revived'")
+        .iter()
+        .map(|v| v.as_str().unwrap().to_string())
+        .collect()
+}
+
+fn failed_addrs(resp: &lshbloom::json::Value) -> Vec<(String, String)> {
+    resp.get("failed")
+        .and_then(|v| v.as_arr())
+        .expect("revive reply carries 'failed'")
+        .iter()
+        .map(|v| {
+            (
+                v.get("addr").and_then(|a| a.as_str()).unwrap().to_string(),
+                v.get("error").and_then(|e| e.as_str()).unwrap().to_string(),
+            )
+        })
+        .collect()
+}
+
+/// The tentpole chaos test: 2 slices x 2 replicas over loopback, kill
+/// one replica mid-stream, restart it with `--sync-from` anti-entropy,
+/// revive it through the router, prove it is bit-identical to its
+/// peer, then kill the peer — verdicts stay byte-identical to an
+/// unsharded oracle through every phase (double-fault recall survival).
+#[test]
+fn kill_a_replica_under_load_never_degrades_verdicts() {
+    let cfg = base_cfg();
+    let root = tmp_root("chaos");
+    let dirs: Vec<PathBuf> =
+        ["s0r0", "s0r1", "s1r0", "s1r1"].iter().map(|n| root.join(n)).collect();
+
+    // Fleet: replicas 0/1 serve slice 0, replicas 2/3 serve slice 1.
+    let mut reps: Vec<SliceProc> = dirs
+        .iter()
+        .enumerate()
+        .map(|(i, dir)| spawn_slice("127.0.0.1:0", i / 2, 2, dir, None))
+        .collect();
+    let addrs: Vec<String> = reps.iter().map(|r| r.addr.clone()).collect();
+
+    let backends = vec![
+        format!("{}|{}", addrs[0], addrs[1]),
+        format!("{}|{}", addrs[2], addrs[3]),
+    ];
+    let (router_handle, router_addr) = start_router(&cfg, backends);
+    let (oracle_handle, oracle_addr) = start_oracle(&cfg);
+    let mut rc = DedupClient::connect(&router_addr).unwrap();
+    let mut oc = DedupClient::connect(&oracle_addr).unwrap();
+
+    let ops = traffic();
+    let kill_at = ops.len() / 4;
+    let restart_at = ops.len() / 2;
+    for (i, op) in ops.iter().enumerate() {
+        if i == kill_at {
+            // Chaos: SIGKILL one replica of slice 0 mid-stream.
+            reps[1].kill();
+        }
+        if i == kill_at + 3 {
+            // By now a broadcast has failed against the corpse and the
+            // router holds it out of rotation. Reviving it while it is
+            // still dead must fail with the address named — and must
+            // not disturb the live fleet.
+            let resp = rc.revive().unwrap();
+            assert!(revived_addrs(&resp).is_empty(), "a dead replica was revived");
+            let failed = failed_addrs(&resp);
+            assert!(
+                failed.iter().any(|(a, e)| a == &addrs[1] && !e.is_empty()),
+                "revive did not report the dead replica: {failed:?}"
+            );
+        }
+        if i == restart_at {
+            // Recovery: rebind the same port over the surviving durable
+            // state, anti-entropy the missed inserts from the healthy
+            // peer, then re-admit it through the router handshake.
+            reps[1] = spawn_slice(&addrs[1], 0, 2, &dirs[1], Some(&addrs[0]));
+            let resp = rc.revive().unwrap();
+            assert!(
+                revived_addrs(&resp).contains(&addrs[1]),
+                "synced replica was not re-admitted: {resp:?}"
+            );
+            // Convergence is bit-exact, not approximate.
+            assert_band_parity(&addrs[0], &addrs[1]);
+            // Double fault: now kill the peer that held slice 0 alive.
+            // The revived replica is the only copy left.
+            reps[0].kill();
+        }
+        drive_parity(&mut rc, &mut oc, op, i);
+    }
+
+    rc.shutdown().unwrap();
+    DedupClient::connect(&oracle_addr).unwrap().shutdown().unwrap();
+    router_handle.join().unwrap();
+    oracle_handle.join().unwrap();
+    drop(reps);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Fault injection on the recovery path itself: a replica that dies
+/// mid-merge (env hook) leaves a torn half-merged filter set; the
+/// retried merge must converge to the same bits, because bit-OR is
+/// idempotent. A second replay over already-converged state must also
+/// be a no-op.
+#[test]
+fn crashed_anti_entropy_merge_is_idempotent_on_retry() {
+    let cfg = base_cfg();
+    let preparer = BandPreparer::from_config(&cfg);
+    let root = tmp_root("torn-merge");
+    let peer_dir = root.join("peer");
+    let rep_dir = root.join("replica");
+
+    // A healthy peer holding 40 documents (slice 0 of 1 = every band).
+    let mut peer = spawn_slice("127.0.0.1:0", 0, 1, &peer_dir, None);
+    let mut pc = DedupClient::connect(&peer.addr).unwrap();
+    for i in 0..40u64 {
+        let bands = bands_for(&preparer, &format!("anti entropy corpus doc {}", i % 17));
+        pc.check_bands(&bands).unwrap();
+    }
+
+    // Sync attempt 1: the crash hook kills the process mid-merge, after
+    // at least one band has been folded but before the walk completes.
+    let mut cmd = serve_cmd("127.0.0.1:0", "64", 0, 1, &rep_dir, Some(&peer.addr));
+    cmd.env("LSHBLOOM_REPLICA_CRASH_AFTER_DOCS", "1");
+    let (code, _) = serve_expect_death(cmd);
+    assert_eq!(code, Some(42), "crash hook must exit 42 mid-merge");
+
+    // Retry without the hook: replays the whole merge over the torn
+    // state and must converge bit-for-bit with the peer.
+    let mut rep = spawn_slice("127.0.0.1:0", 0, 1, &rep_dir, Some(&peer.addr));
+    assert_band_parity(&peer.addr, &rep.addr);
+
+    // Replay once more over fully-converged state (crash + resync):
+    // the merge is idempotent, so nothing may change.
+    rep.kill();
+    let mut rep = spawn_slice("127.0.0.1:0", 0, 1, &rep_dir, Some(&peer.addr));
+    assert_band_parity(&peer.addr, &rep.addr);
+
+    DedupClient::connect(&rep.addr).unwrap().shutdown().unwrap();
+    DedupClient::connect(&peer.addr).unwrap().shutdown().unwrap();
+    let _ = rep.child.wait();
+    let _ = peer.child.wait();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// A reachable sync peer running a different filter geometry is
+/// operator error, not a transient fault: merging it would corrupt the
+/// membership contract, so bind must fail hard with the reason named.
+#[test]
+fn geometry_mismatched_sync_peer_is_a_hard_bind_error() {
+    let root = tmp_root("geometry");
+    let peer = spawn_slice("127.0.0.1:0", 0, 1, &root.join("peer"), None);
+
+    // 128 permutations -> different band geometry than the peer's 64.
+    let cmd = serve_cmd("127.0.0.1:0", "128", 0, 1, &root.join("replica"), Some(&peer.addr));
+    let (code, stderr) = serve_expect_death(cmd);
+    assert_eq!(code, Some(1));
+    assert!(
+        stderr.contains("different index geometry"),
+        "geometry rejection not named: {stderr}"
+    );
+
+    drop(peer);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// A torn slice checkpoint (band file truncated after a crash, e.g. by
+/// a dying disk) must be refused at restart with the file and size
+/// named — never silently reopened as a smaller filter, which would
+/// turn missing bits into false "never seen" verdicts.
+#[test]
+fn truncated_slice_checkpoint_is_refused_at_restart() {
+    let cfg = base_cfg();
+    let preparer = BandPreparer::from_config(&cfg);
+    let root = tmp_root("torn-checkpoint");
+    let dir = root.join("replica");
+
+    let mut rep = spawn_slice("127.0.0.1:0", 0, 1, &dir, None);
+    let mut client = DedupClient::connect(&rep.addr).unwrap();
+    for i in 0..10u64 {
+        client.check_bands(&bands_for(&preparer, &format!("torn checkpoint doc {i}"))).unwrap();
+    }
+    rep.kill();
+
+    // Tear the checkpoint: halve the first band's backing file.
+    let band0 = dir.join("band000.bits");
+    let len = std::fs::metadata(&band0).unwrap().len();
+    let f = std::fs::OpenOptions::new().write(true).open(&band0).unwrap();
+    f.set_len(len / 2).unwrap();
+    drop(f);
+
+    let cmd = serve_cmd("127.0.0.1:0", "64", 0, 1, &dir, None);
+    let (code, stderr) = serve_expect_death(cmd);
+    assert_eq!(code, Some(1));
+    assert!(
+        stderr.contains("band000.bits") && stderr.contains("bytes"),
+        "torn checkpoint rejection not named: {stderr}"
+    );
+
+    let _ = std::fs::remove_dir_all(&root);
+}
