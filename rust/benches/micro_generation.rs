@@ -1,0 +1,164 @@
+//! Generational index: probe cost vs. generation count, and the
+//! ingest-side price of watermark rotation.
+//!
+//! Two questions the capacity autopilot raises, answered on your
+//! hardware:
+//!
+//! * `probe/...` — a probe ORs across every generation, so how does
+//!   query throughput scale at 1/2/4/8 generations? Misses are the
+//!   worst case (every generation's filter is consulted for every
+//!   band); hits early-exit at the owning generation (probed
+//!   newest-first, so old documents are the slow ones).
+//! * `ingest/...` — rotation costs a strided fill sample every few
+//!   thousand inserts plus the occasional freeze-and-reallocate. How
+//!   much docs/sec does that shave off a rotation-disabled ingest of
+//!   the same stream?
+//!
+//! Reports the same single-line text shape as the other `micro_*`
+//! benches plus one machine-readable JSON summary line (crate `json`
+//! module) for harness scripts.
+//!
+//! `cargo bench --bench micro_generation` (LSHBLOOM_BENCH_FAST=1 for a
+//! quick pass)
+
+use lshbloom::engine::ConcurrentLshBloomIndex;
+use lshbloom::index::lshbloom::LshBloomConfig;
+use lshbloom::json::{obj, Value};
+use lshbloom::minhash::LshParams;
+use lshbloom::perf::bench::{fmt_count, time_once};
+use lshbloom::rng::Xoshiro256pp;
+
+// The paper's extreme-scale band geometry (T=0.8, 128 perms).
+const LSH: LshParams = LshParams { num_bands: 9, rows_per_band: 13 };
+
+fn random_doc(rng: &mut Xoshiro256pp) -> Vec<u64> {
+    (0..LSH.num_bands).map(|_| rng.next_u64()).collect()
+}
+
+/// An index grown to exactly `generations` generations by streaming
+/// unique documents through watermark rotation (plus a quarter-plan of
+/// documents into the open generation so it is never empty). Returns
+/// the index and every document it holds.
+fn grown_index(
+    generations: usize,
+    per_gen: u64,
+    rng: &mut Xoshiro256pp,
+) -> (ConcurrentLshBloomIndex, Vec<Vec<u64>>) {
+    let mut index = ConcurrentLshBloomIndex::new(LshBloomConfig::new(LSH, 1e-10, per_gen));
+    index.enable_rotation(0.5);
+    let mut held = Vec::new();
+    // Hard cap so a sizing bug degrades to a short bench, not a hang.
+    let cap = (generations as u64 * per_gen).saturating_mul(8);
+    while index.num_generations() < generations && (held.len() as u64) < cap {
+        let doc = random_doc(rng);
+        index.insert_if_new_shared(&doc);
+        held.push(doc);
+    }
+    for _ in 0..per_gen / 4 {
+        let doc = random_doc(rng);
+        index.insert_if_new_shared(&doc);
+        held.push(doc);
+    }
+    assert_eq!(index.num_generations(), generations, "bench corpus failed to grow the index");
+    (index, held)
+}
+
+fn main() {
+    println!("# generational index: probe cost and rotation overhead\n");
+    let fast = std::env::var("LSHBLOOM_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let per_gen: u64 = if fast { 1_000 } else { 10_000 };
+    let probes: usize = if fast { 20_000 } else { 200_000 };
+    let mut rng = Xoshiro256pp::seeded(0x9E37_79B9_7F4A_7C15);
+
+    let mut results: Vec<Value> = Vec::new();
+    for &gens in &[1usize, 2, 4, 8] {
+        let (index, held) = grown_index(gens, per_gen, &mut rng);
+
+        // Misses: fresh random vectors, absent from every generation.
+        let miss_docs: Vec<Vec<u64>> = (0..probes).map(|_| random_doc(&mut rng)).collect();
+        let (miss_hits, wall) = time_once(|| {
+            let mut hits = 0usize;
+            for doc in &miss_docs {
+                hits += index.query(doc) as usize;
+            }
+            hits
+        });
+        let miss_rate = probes as f64 / wall.as_secs_f64();
+
+        // Hits: resident documents sampled uniformly across generations.
+        let hit_docs: Vec<&Vec<u64>> =
+            (0..probes).map(|i| &held[(i * 2_654_435_761) % held.len()]).collect();
+        let (hit_hits, wall) = time_once(|| {
+            let mut hits = 0usize;
+            for doc in &hit_docs {
+                hits += index.query(doc) as usize;
+            }
+            hits
+        });
+        let hit_rate = probes as f64 / wall.as_secs_f64();
+        assert_eq!(hit_hits, probes, "a resident document must always probe true");
+
+        println!(
+            "{:<44} {:>12}/s   ({} false positives)",
+            format!("probe/miss/generations={gens}"),
+            fmt_count(miss_rate),
+            miss_hits
+        );
+        println!(
+            "{:<44} {:>12}/s",
+            format!("probe/hit/generations={gens}"),
+            fmt_count(hit_rate)
+        );
+        results.push(obj(vec![
+            ("generations", Value::u64(gens as u64)),
+            ("miss_probes_per_sec", Value::num(miss_rate)),
+            ("hit_probes_per_sec", Value::num(hit_rate)),
+        ]));
+    }
+    println!();
+
+    // Ingest price of rotation: the same 3-plan stream into a rotating
+    // index vs. a fixed-size one left to saturate.
+    let stream: Vec<Vec<u64>> =
+        (0..per_gen * 3).map(|_| random_doc(&mut rng)).collect();
+    let mut rotating = ConcurrentLshBloomIndex::new(LshBloomConfig::new(LSH, 1e-10, per_gen));
+    rotating.enable_rotation(0.5);
+    let (_, wall) = time_once(|| {
+        for doc in &stream {
+            rotating.insert_if_new_shared(doc);
+        }
+    });
+    let rotating_rate = stream.len() as f64 / wall.as_secs_f64();
+
+    let fixed = ConcurrentLshBloomIndex::new(LshBloomConfig::new(LSH, 1e-10, per_gen));
+    let (_, wall) = time_once(|| {
+        for doc in &stream {
+            fixed.insert_if_new_shared(doc);
+        }
+    });
+    let fixed_rate = stream.len() as f64 / wall.as_secs_f64();
+
+    println!(
+        "{:<44} {:>12}/s   ({} rotations)",
+        "ingest/rotating",
+        fmt_count(rotating_rate),
+        rotating.rotations()
+    );
+    println!(
+        "{:<44} {:>12}/s   ({:.2}x vs rotating)",
+        "ingest/fixed-size",
+        fmt_count(fixed_rate),
+        fixed_rate / rotating_rate
+    );
+
+    let summary = obj(vec![
+        ("bench", Value::str("micro_generation")),
+        ("per_generation_docs", Value::u64(per_gen)),
+        ("probes", Value::u64(probes as u64)),
+        ("results", Value::Arr(results)),
+        ("ingest_rotating_docs_per_sec", Value::num(rotating_rate)),
+        ("ingest_fixed_docs_per_sec", Value::num(fixed_rate)),
+        ("rotations", Value::u64(rotating.rotations())),
+    ]);
+    println!("{}", summary.to_json());
+}

@@ -18,12 +18,8 @@
 //! concrete realization of the paper's §6 scaling future work.
 
 use super::filter::BloomFilter;
-use super::params::BloomParams;
-
-/// Error tightening ratio between successive sub-filters.
-pub const TIGHTENING: f64 = 0.5;
-/// Capacity growth factor between successive sub-filters.
-pub const GROWTH: u64 = 2;
+pub use crate::capacity::STAGE_GROWTH as GROWTH;
+pub use crate::capacity::STAGE_TIGHTENING as TIGHTENING;
 
 /// A chain of Bloom filters with bounded total false-positive rate.
 pub struct ScalableBloomFilter {
@@ -52,15 +48,11 @@ impl ScalableBloomFilter {
         f
     }
 
-    fn stage_rate(&self, i: usize) -> f64 {
-        // p_i = p0 * r^i with p0 = p_total * (1 - r) so that Σ p_i = p_total.
-        self.p_total * (1.0 - TIGHTENING) * TIGHTENING.powi(i as i32)
-    }
-
     fn push_stage(&mut self) {
+        // All stage sizing goes through the capacity oracle — this module
+        // holds no geometry math of its own.
         let i = self.stages.len();
-        let capacity = self.initial_capacity * GROWTH.pow(i as u32);
-        let params = BloomParams::for_capacity(capacity, self.stage_rate(i));
+        let params = crate::capacity::scalable_stage_params(self.initial_capacity, self.p_total, i);
         self.stages.push(BloomFilter::new(params));
     }
 

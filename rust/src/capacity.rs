@@ -1,0 +1,218 @@
+//! The capacity oracle — one place derives every piece of filter
+//! geometry (ROADMAP "capacity autopilot").
+//!
+//! Historically the sizing math lived in three places that could drift:
+//! [`crate::minhash::optimal_param`] picked the band layout,
+//! [`crate::bloom::BloomParams::for_capacity`] sized each filter, and
+//! `bloom/scalable.rs` carried its own private stage-growth rules. A
+//! [`Plan`] collapses them behind three operator inputs — target Jaccard
+//! threshold, expected document count, and a total false-positive budget
+//! (`dedup/serve --threshold T --expect-docs N --fp-budget p`, config
+//! keys `capacity.*`) — and every index construction path funnels
+//! through [`filter_geometry`], so engine, persist, and serving tiers
+//! always agree on layout.
+//!
+//! The plan also fixes *when to grow*: at the planned capacity a filter
+//! sits at ~50% fill (the optimum the §4.5 sizing rule lands on), so the
+//! default rotation watermark of 0.5 means "rotate exactly when the open
+//! generation reaches the capacity it was sized for".
+
+use crate::bloom::BloomParams;
+use crate::config::PipelineConfig;
+use crate::error::{Error, Result};
+use crate::index::LshBloomConfig;
+use crate::json::{self, Value};
+use crate::minhash::{optimal_param, LshParams};
+
+/// Error tightening ratio between successive scalable-filter stages.
+pub const STAGE_TIGHTENING: f64 = 0.5;
+/// Capacity growth factor between successive scalable-filter stages.
+pub const STAGE_GROWTH: u64 = 2;
+
+/// Per-band Bloom geometry for a resolved band count: the §4.3 budget
+/// split `p = 1-(1-p_eff)^(1/b)` followed by the §4.5 sizing rule.
+/// This is the single source of truth for (bits, hashes) — the classic
+/// index, the concurrent engine, checkpoints, and the serving handshake
+/// all call it (directly or via `LshBloomIndex::filter_params`).
+pub fn filter_geometry(num_bands: usize, fp_budget: f64, expected_docs: u64) -> BloomParams {
+    let p = BloomParams::per_filter_rate(fp_budget, num_bands);
+    BloomParams::for_capacity(expected_docs.max(1), p)
+}
+
+/// FP budget share of scalable stage `i`: `p_total·(1-r)·r^i`, chosen so
+/// the stage budgets sum to `p_total` over an unbounded chain.
+pub fn scalable_stage_rate(p_total: f64, stage: usize) -> f64 {
+    p_total * (1.0 - STAGE_TIGHTENING) * STAGE_TIGHTENING.powi(stage as i32)
+}
+
+/// Geometry of scalable stage `i`: capacity `initial·G^i` at that
+/// stage's share of the total budget. `bloom::scalable` re-derives its
+/// chain through here instead of carrying its own copy of the math.
+pub fn scalable_stage_params(initial_capacity: u64, p_total: f64, stage: usize) -> BloomParams {
+    let capacity = initial_capacity * STAGE_GROWTH.pow(stage as u32);
+    BloomParams::for_capacity(capacity, scalable_stage_rate(p_total, stage))
+}
+
+/// A fully-derived capacity plan: all the geometry the engine, persist,
+/// and serving tiers need, derived once from three operator inputs.
+#[derive(Clone, Copy, Debug)]
+pub struct Plan {
+    /// Target Jaccard threshold T.
+    pub threshold: f64,
+    /// MinHash permutations P.
+    pub num_perms: usize,
+    /// Planned corpus cardinality n (sizes each generation's filters).
+    pub expected_docs: u64,
+    /// Index-wide false-positive budget p_eff (§4.3).
+    pub fp_budget: f64,
+    /// Derived band layout (b, r) from the Eq. (1)–(2) argmin search.
+    pub lsh: LshParams,
+    /// Per-filter rate `p = 1-(1-p_eff)^(1/b)`.
+    pub per_filter_rate: f64,
+    /// Per-band Bloom geometry (bits, hashes, capacity).
+    pub filter: BloomParams,
+}
+
+impl Plan {
+    /// Derive a plan from the three operator inputs (plus the MinHash
+    /// permutation count the signatures were computed with).
+    pub fn derive(
+        threshold: f64,
+        num_perms: usize,
+        expected_docs: u64,
+        fp_budget: f64,
+    ) -> Result<Self> {
+        if !(0.0..=1.0).contains(&threshold) {
+            return Err(Error::Config(format!("plan threshold {threshold} not in [0,1]")));
+        }
+        if num_perms == 0 || num_perms > 4096 {
+            return Err(Error::Config(format!("plan num_perms {num_perms} out of range")));
+        }
+        if expected_docs == 0 {
+            return Err(Error::Config("plan expected_docs must be positive".into()));
+        }
+        if !(fp_budget > 0.0 && fp_budget < 1.0) {
+            return Err(Error::Config(format!("plan fp_budget {fp_budget} not in (0,1)")));
+        }
+        let lsh = optimal_param(threshold, num_perms);
+        let per_filter_rate = BloomParams::per_filter_rate(fp_budget, lsh.num_bands);
+        let filter = filter_geometry(lsh.num_bands, fp_budget, expected_docs);
+        Ok(Self { threshold, num_perms, expected_docs, fp_budget, lsh, per_filter_rate, filter })
+    }
+
+    /// Derive the plan a [`PipelineConfig`] implies (`--threshold`,
+    /// `--expect-docs`, `--fp-budget` / their `capacity.*` keys).
+    pub fn from_config(cfg: &PipelineConfig) -> Result<Self> {
+        Self::derive(cfg.threshold, cfg.num_perms, cfg.expected_docs, cfg.p_effective)
+    }
+
+    /// The index configuration this plan resolves to.
+    pub fn index_config(&self) -> LshBloomConfig {
+        LshBloomConfig::new(self.lsh, self.fp_budget, self.expected_docs)
+    }
+
+    /// Total backing bytes across all `b` filters of one generation.
+    pub fn total_bytes(&self) -> u64 {
+        self.filter.bytes() * self.lsh.num_bands as u64
+    }
+
+    /// One-line human summary for logs and run headers.
+    pub fn describe(&self) -> String {
+        format!(
+            "T={} P={} -> {} bands x {} rows; n={} at fp_budget={:.1e} -> \
+             {} bits x {} hashes per band ({} per generation)",
+            self.threshold,
+            self.num_perms,
+            self.lsh.num_bands,
+            self.lsh.rows_per_band,
+            self.expected_docs,
+            self.fp_budget,
+            self.filter.bits,
+            self.filter.hashes,
+            crate::report::table::bytes(self.total_bytes()),
+        )
+    }
+
+    /// JSON echo for stats replies and checkpoint manifests.
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("threshold", Value::num(self.threshold)),
+            ("num_perms", Value::u64(self.num_perms as u64)),
+            ("expected_docs", Value::u64(self.expected_docs)),
+            ("fp_budget", Value::num(self.fp_budget)),
+            ("num_bands", Value::u64(self.lsh.num_bands as u64)),
+            ("rows_per_band", Value::u64(self.lsh.rows_per_band as u64)),
+            ("filter_bits", Value::u64(self.filter.bits)),
+            ("filter_hashes", Value::u64(self.filter.hashes as u64)),
+            ("total_bytes", Value::u64(self.total_bytes())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_matches_band_and_filter_oracles() {
+        // §4.5 worked example: T=0.8, 128 perms -> 9 bands x 13 rows.
+        let plan = Plan::derive(0.8, 128, 10_000, 1e-8).unwrap();
+        assert_eq!((plan.lsh.num_bands, plan.lsh.rows_per_band), (9, 13));
+        let oracle = optimal_param(0.8, 128);
+        assert_eq!(plan.lsh, oracle);
+        // Filter geometry must be exactly what the legacy two-step
+        // derivation produced.
+        let p = BloomParams::per_filter_rate(1e-8, 9);
+        assert_eq!(plan.filter, BloomParams::for_capacity(10_000, p));
+        assert!((plan.per_filter_rate - p).abs() < 1e-18);
+    }
+
+    #[test]
+    fn plan_agrees_with_index_filter_params() {
+        let plan = Plan::derive(0.5, 256, 1_000_000, 1e-10).unwrap();
+        let via_index = crate::index::LshBloomIndex::filter_params(&plan.index_config());
+        assert_eq!(plan.filter, via_index);
+    }
+
+    #[test]
+    fn scalable_stage_math_matches_legacy_rules() {
+        // Stage i: capacity initial·2^i, rate p_total·(1-0.5)·0.5^i.
+        for i in 0..6 {
+            let rate = scalable_stage_rate(1e-4, i);
+            assert!((rate - 1e-4 * 0.5 * 0.5f64.powi(i as i32)).abs() < 1e-20);
+            let params = scalable_stage_params(100, 1e-4, i);
+            assert_eq!(params.capacity, 100 * 2u64.pow(i as u32));
+            assert_eq!(params, BloomParams::for_capacity(params.capacity, rate));
+        }
+        // The stage budgets telescope to the total.
+        let total: f64 = (0..60).map(|i| scalable_stage_rate(1e-3, i)).sum();
+        assert!((total - 1e-3).abs() / 1e-3 < 1e-9);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(Plan::derive(1.5, 128, 1000, 1e-8).is_err());
+        assert!(Plan::derive(0.5, 0, 1000, 1e-8).is_err());
+        assert!(Plan::derive(0.5, 128, 0, 1e-8).is_err());
+        assert!(Plan::derive(0.5, 128, 1000, 0.0).is_err());
+        assert!(Plan::derive(0.5, 128, 1000, 1.0).is_err());
+    }
+
+    #[test]
+    fn describe_and_json_echo_the_derived_numbers() {
+        let plan = Plan::from_config(&PipelineConfig::default()).unwrap();
+        let text = plan.describe();
+        assert!(text.contains("bands"), "{text}");
+        let j = plan.to_json();
+        assert_eq!(j.get("num_bands").and_then(|v| v.as_u64()), Some(plan.lsh.num_bands as u64));
+        assert_eq!(j.get("filter_bits").and_then(|v| v.as_u64()), Some(plan.filter.bits));
+    }
+
+    #[test]
+    fn total_bytes_reproduces_paper_example() {
+        // §4.5: 10B docs, p_eff 1e-10, T=0.8/128 perms -> ~590 GB.
+        let plan = Plan::derive(0.8, 128, 10_000_000_000, 1e-10).unwrap();
+        let gb = plan.total_bytes() as f64 / 1e9;
+        assert!((500.0..700.0).contains(&gb), "paper says ~590 GB, got {gb:.1}");
+    }
+}

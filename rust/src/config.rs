@@ -137,6 +137,14 @@ pub struct PipelineConfig {
     /// 0 = off). Requests at or above it always record a trace and
     /// log one WARN line with the per-hop breakdown.
     pub trace_slow_ms: u64,
+    /// Sampled-fill watermark in [0, 1) at which the concurrent engine
+    /// freezes the open filter generation and opens a fresh one sized
+    /// from the live capacity plan (`--rotate-watermark`, key
+    /// `capacity.rotate_watermark`; 0 disables rotation). The default
+    /// 0.5 is the fill the §4.5 sizing rule reaches at exactly the
+    /// planned capacity, so rotation fires the moment a generation
+    /// exceeds what it was sized for.
+    pub rotate_watermark: f64,
 }
 
 impl Default for PipelineConfig {
@@ -163,6 +171,7 @@ impl Default for PipelineConfig {
             metrics_addr: String::new(),
             trace_sample: 0.0,
             trace_slow_ms: 0,
+            rotate_watermark: 0.5,
         }
     }
 }
@@ -215,6 +224,12 @@ impl PipelineConfig {
             return Err(Error::Config(format!(
                 "trace_sample {} not in [0,1]",
                 self.trace_sample
+            )));
+        }
+        if !(0.0..1.0).contains(&self.rotate_watermark) {
+            return Err(Error::Config(format!(
+                "rotate_watermark {} not in [0,1) (0 disables generation rotation)",
+                self.rotate_watermark
             )));
         }
         if self.checkpoint_every > 0 && self.checkpoint_dir.is_empty() && !self.distributed {
@@ -279,17 +294,17 @@ impl PipelineConfig {
         for (k, v) in kv {
             let bad = |what: &str| Error::Config(format!("bad {what} value '{v}'"));
             match k.as_str() {
-                "threshold" | "pipeline.threshold" => {
+                "threshold" | "pipeline.threshold" | "capacity.threshold" => {
                     self.threshold = v.parse().map_err(|_| bad("threshold"))?
                 }
                 "num_perms" | "pipeline.num_perms" => {
                     self.num_perms = v.parse().map_err(|_| bad("num_perms"))?
                 }
                 "ngram" | "pipeline.ngram" => self.ngram = v.parse().map_err(|_| bad("ngram"))?,
-                "p_effective" | "bloom.p_effective" => {
+                "p_effective" | "bloom.p_effective" | "capacity.fp_budget" => {
                     self.p_effective = v.parse().map_err(|_| bad("p_effective"))?
                 }
-                "expected_docs" | "bloom.expected_docs" => {
+                "expected_docs" | "bloom.expected_docs" | "capacity.expect_docs" => {
                     self.expected_docs = v.parse().map_err(|_| bad("expected_docs"))?
                 }
                 "workers" | "pipeline.workers" => {
@@ -329,6 +344,9 @@ impl PipelineConfig {
                 }
                 "trace_slow_ms" | "service.trace_slow_ms" => {
                     self.trace_slow_ms = v.parse().map_err(|_| bad("trace_slow_ms"))?
+                }
+                "rotate_watermark" | "capacity.rotate_watermark" => {
+                    self.rotate_watermark = v.parse().map_err(|_| bad("rotate_watermark"))?
                 }
                 other => return Err(Error::Config(format!("unknown config key '{other}'"))),
             }
@@ -535,6 +553,34 @@ mod tests {
         let mut cfg = PipelineConfig::default();
         assert!(cfg.apply(&parse_toml_subset("trace_sample = x").unwrap()).is_err());
         assert!(cfg.apply(&parse_toml_subset("trace_slow_ms = -3").unwrap()).is_err());
+    }
+
+    #[test]
+    fn capacity_keys_apply_and_validate() {
+        let mut cfg = PipelineConfig::default();
+        assert_eq!(cfg.rotate_watermark, 0.5, "rotation defaults to the at-capacity fill");
+        cfg.apply(
+            &parse_toml_subset(
+                "[capacity]\nthreshold = 0.8\nexpect_docs = 5000000\nfp_budget = 1e-8\n\
+                 rotate_watermark = 0.7",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.threshold, 0.8);
+        assert_eq!(cfg.expected_docs, 5_000_000);
+        assert_eq!(cfg.p_effective, 1e-8);
+        assert_eq!(cfg.rotate_watermark, 0.7);
+        cfg.validate().unwrap();
+        // 0 disables rotation; a full or negative watermark is nonsense.
+        cfg.rotate_watermark = 0.0;
+        cfg.validate().unwrap();
+        cfg.rotate_watermark = 1.0;
+        assert!(cfg.validate().is_err(), "watermark 1.0 can never fire");
+        cfg.rotate_watermark = -0.1;
+        assert!(cfg.validate().is_err());
+        let mut cfg = PipelineConfig::default();
+        assert!(cfg.apply(&parse_toml_subset("rotate_watermark = x").unwrap()).is_err());
     }
 
     #[test]

@@ -111,9 +111,21 @@ fn or_reduce(per_slice: &[Vec<bool>], n: usize) -> Vec<bool> {
 /// exactly the bits one [`ConcurrentLshBloomIndex`] would — and the OR
 /// of their verdicts is the single-index verdict.
 ///
+/// A slice restored from a *rotated* checkpoint carries the same
+/// generation list as the index that wrote it: frozen generations are
+/// probe-only, every insert lands in the newest (open) generation, and
+/// the verdict ORs across generations exactly like
+/// [`ConcurrentLshBloomIndex::query`]. Unlike the ingest-tier index a
+/// slice never rotates on its own — the serving tier adopts whatever
+/// generation layout the checkpoint (or an anti-entropy peer) presents,
+/// so every replica of a slice agrees on the layout by construction.
+///
 /// [`ConcurrentLshBloomIndex`]: super::concurrent_index::ConcurrentLshBloomIndex
+/// [`ConcurrentLshBloomIndex::query`]: super::concurrent_index::ConcurrentLshBloomIndex::query
 pub struct BandSliceIndex {
-    filters: Vec<AtomicBloomFilter>,
+    /// Per-generation owned filters, oldest first; the last entry is
+    /// the open generation all inserts target. Never empty.
+    generations: Vec<Vec<AtomicBloomFilter>>,
     range: Range<usize>,
     config: LshBloomConfig,
     inserted: AtomicU64,
@@ -128,19 +140,23 @@ impl BandSliceIndex {
         let range = slice_range(config.lsh.num_bands, slice, count);
         let params = crate::index::LshBloomIndex::filter_params(&config);
         let filters = range.clone().map(|_| AtomicBloomFilter::new(params)).collect();
-        Self { filters, range, config, inserted: AtomicU64::new(0) }
+        Self::from_parts(vec![filters], range, config, 0)
     }
 
-    /// Slice adopting pre-built filters (checkpoint restore — see
-    /// [`crate::persist::restore_band_slice`]).
+    /// Slice adopting pre-built per-generation filters (checkpoint
+    /// restore — see [`crate::persist::restore_band_slice`]). Oldest
+    /// generation first; the last is open for inserts.
     pub(crate) fn from_parts(
-        filters: Vec<AtomicBloomFilter>,
+        generations: Vec<Vec<AtomicBloomFilter>>,
         range: Range<usize>,
         config: LshBloomConfig,
         inserted: u64,
     ) -> Self {
-        debug_assert_eq!(filters.len(), range.len());
-        Self { filters, range, config, inserted: AtomicU64::new(inserted) }
+        debug_assert!(!generations.is_empty());
+        for filters in &generations {
+            debug_assert_eq!(filters.len(), range.len());
+        }
+        Self { generations, range, config, inserted: AtomicU64::new(inserted) }
     }
 
     /// Restore this slice's bands from a *full-index* checkpoint in
@@ -155,9 +171,9 @@ impl BandSliceIndex {
         count: usize,
     ) -> crate::error::Result<Self> {
         let range = slice_range(config.lsh.num_bands, slice, count);
-        let (filters, manifest) =
+        let (generations, manifest) =
             crate::persist::restore_band_slice(dir, &config, range.clone())?;
-        Ok(Self::from_parts(filters, range, config, manifest.inserted))
+        Ok(Self::from_parts(generations, range, config, manifest.inserted))
     }
 
     /// Open — or create — this slice's bands as *live mmap-backed*
@@ -178,8 +194,9 @@ impl BandSliceIndex {
         count: usize,
     ) -> crate::error::Result<Self> {
         let range = slice_range(config.lsh.num_bands, slice, count);
-        let (filters, inserted) = crate::persist::open_durable_slice(&config, range.clone(), dir)?;
-        Ok(Self::from_parts(filters, range, config, inserted))
+        let (generations, inserted) =
+            crate::persist::open_durable_slice(&config, range.clone(), dir)?;
+        Ok(Self::from_parts(generations, range, config, inserted))
     }
 
     /// Publish this slice's manifest entries into the checkpoint
@@ -194,7 +211,7 @@ impl BandSliceIndex {
         duplicates: u64,
     ) -> crate::error::Result<()> {
         crate::persist::write_slice_checkpoint(
-            &self.filters,
+            &self.generations,
             &self.config,
             self.range.clone(),
             self.len(),
@@ -205,42 +222,54 @@ impl BandSliceIndex {
         Ok(())
     }
 
-    /// Snapshot the words of owned band `band` (global numbering) —
-    /// the payload of the `pull_bands` anti-entropy wire op. `None`
-    /// when this slice does not own `band`. Acquire loads, so the
-    /// snapshot contains at least every insert that happened-before
-    /// the call.
-    pub fn band_words(&self, band: usize) -> Option<Vec<u64>> {
-        let filter = self.filters.get(band.checked_sub(self.range.start)?)?;
+    /// Snapshot the words of owned band `band` (global numbering) in
+    /// generation `gen` — the payload of the `pull_bands` anti-entropy
+    /// wire op. `None` when this slice does not own `band` or holds no
+    /// generation `gen`. Acquire loads, so the snapshot contains at
+    /// least every insert that happened-before the call.
+    pub fn band_words(&self, gen: usize, band: usize) -> Option<Vec<u64>> {
+        let filters = self.generations.get(gen)?;
+        let filter = filters.get(band.checked_sub(self.range.start)?)?;
         Some(filter.words().iter().map(|w| w.load(Ordering::Acquire)).collect())
     }
 
-    /// Keys inserted into owned band `band` (global numbering); `None`
-    /// when not owned.
-    pub fn band_inserted(&self, band: usize) -> Option<u64> {
-        let filter = self.filters.get(band.checked_sub(self.range.start)?)?;
+    /// Keys inserted into owned band `band` (global numbering) of
+    /// generation `gen`; `None` when not owned / not held.
+    pub fn band_inserted(&self, gen: usize, band: usize) -> Option<u64> {
+        let filters = self.generations.get(gen)?;
+        let filter = filters.get(band.checked_sub(self.range.start)?)?;
         Some(filter.inserted())
     }
 
     /// Bit-OR a peer replica's snapshot of band `band` (global
-    /// numbering) into the owned filter — the anti-entropy delta merge.
-    /// Bloom bit-sets are monotone, so the merge is idempotent and
-    /// commutative: replaying it after a mid-merge crash, or merging
-    /// from several peers in any order, converges to the same bits.
-    /// The filter's insert counter converges to the max of its own and
-    /// `peer_inserted` (replicas of one slice see overlapping streams,
-    /// so summing would double-count). Errors on a band this slice does
-    /// not own or a word-count mismatch (geometry drift), without
-    /// touching any bits.
+    /// numbering), generation `gen`, into the matching owned filter —
+    /// the anti-entropy delta merge. Bloom bit-sets are monotone, so
+    /// the merge is idempotent and commutative: replaying it after a
+    /// mid-merge crash, or merging from several peers in any order,
+    /// converges to the same bits. The filter's insert counter
+    /// converges to the max of its own and `peer_inserted` (replicas of
+    /// one slice see overlapping streams, so summing would
+    /// double-count). Errors on a band this slice does not own, a
+    /// generation it does not hold (grow first via
+    /// [`Self::ensure_generations`]), or a word-count mismatch
+    /// (geometry drift), without touching any bits.
     pub fn merge_band_words(
         &self,
+        gen: usize,
         band: usize,
         words: &[u64],
         peer_inserted: u64,
     ) -> crate::error::Result<()> {
+        let filters = self.generations.get(gen).ok_or_else(|| {
+            crate::error::Error::Format(format!(
+                "merge_band_words: generation {gen} exceeds this slice's {} generation(s); \
+                 grow the slice (ensure_generations) before merging",
+                self.generations.len()
+            ))
+        })?;
         let filter = band
             .checked_sub(self.range.start)
-            .and_then(|local| self.filters.get(local))
+            .and_then(|local| filters.get(local))
             .ok_or_else(|| {
                 crate::error::Error::Format(format!(
                     "merge_band_words: band {band} is outside this slice's range {:?}",
@@ -263,6 +292,27 @@ impl BandSliceIndex {
         Ok(())
     }
 
+    /// Grow the generation list to at least `n` heap-backed generations
+    /// so a peer's rotated layout can be merged in
+    /// ([`Self::merge_band_words`] with `gen > 0`). All generations
+    /// share the full-index geometry, so the new filters are
+    /// bit-compatible by construction. Heap-backed even on a durable
+    /// slice: the post-merge [`Self::checkpoint`] cold-copies them into
+    /// the state directory, from where the next
+    /// [`Self::open_durable`] re-attaches them as live mmaps.
+    pub fn ensure_generations(&mut self, n: usize) {
+        let params = crate::index::LshBloomIndex::filter_params(&self.config);
+        while self.generations.len() < n {
+            self.generations
+                .push(self.range.clone().map(|_| AtomicBloomFilter::new(params)).collect());
+        }
+    }
+
+    /// Number of generations this slice holds (at least 1).
+    pub fn num_generations(&self) -> usize {
+        self.generations.len()
+    }
+
     /// Converge the slice-level insert counter to `max(own, n)` — the
     /// counter half of an anti-entropy merge (bits converge via
     /// [`Self::merge_band_words`]).
@@ -281,9 +331,9 @@ impl BandSliceIndex {
         count: usize,
     ) -> crate::error::Result<Self> {
         let range = slice_range(config.lsh.num_bands, slice, count);
-        let filters =
+        let generations =
             crate::persist::restore_band_slice_from(manifest, dir, &config, range.clone())?;
-        Ok(Self::from_parts(filters, range, config, manifest.inserted))
+        Ok(Self::from_parts(generations, range, config, manifest.inserted))
     }
 
     /// The band range this slice owns.
@@ -312,23 +362,44 @@ impl BandSliceIndex {
         self.len() == 0
     }
 
-    /// Bytes of backing storage for the owned filters.
+    /// Bytes of backing storage for the owned filters, all generations.
     pub fn disk_bytes(&self) -> u64 {
-        self.filters.iter().map(|f| f.size_bytes()).sum()
+        self.generations.iter().flatten().map(|f| f.size_bytes()).sum()
     }
 
-    /// The owned filters, band order (persistence internals).
-    pub(crate) fn filters(&self) -> &[AtomicBloomFilter] {
-        &self.filters
+    /// The owned filters per generation, oldest first, each in band
+    /// order (persistence internals).
+    pub(crate) fn generation_filters(&self) -> &[Vec<AtomicBloomFilter>] {
+        &self.generations
+    }
+
+    /// The open (newest) generation's filters, band order.
+    fn open_generation(&self) -> &[AtomicBloomFilter] {
+        // from_parts asserts the list is never empty.
+        &self.generations[self.generations.len() - 1]
     }
 
     /// Publish fill-ratio / estimated-FP gauges for the owned bands
-    /// (global band numbering) plus `engine.fp_estimate` over this
-    /// slice's bands — a slice server's contribution to the fleet-wide
-    /// any-band FP estimate.
+    /// (global band numbering; the open generation unlabeled, frozen
+    /// generations under a `gen` label), returning `Π(1 − fp)` over
+    /// every owned filter so [`BandShardedEngine`] can combine slices.
+    pub(crate) fn fill_gauge_miss(&self) -> f64 {
+        let open = self.generations.len() - 1;
+        let mut miss = super::publish_band_fill_gauges(self.open_generation(), self.range.start);
+        for (g, filters) in self.generations[..open].iter().enumerate() {
+            miss *= super::publish_band_fill_gauges_gen(filters, self.range.start, g);
+        }
+        miss
+    }
+
+    /// Publish fill-ratio / estimated-FP gauges for the owned bands
+    /// plus `engine.fp_estimate` over this slice's bands — a slice
+    /// server's contribution to the fleet-wide any-band FP estimate.
     pub fn refresh_fill_gauges(&self) {
-        let miss = super::publish_band_fill_gauges(&self.filters, self.range.start);
-        crate::obs::global().gauge("engine.fp_estimate").set(1.0 - miss);
+        let miss = self.fill_gauge_miss();
+        let reg = crate::obs::global();
+        reg.gauge("engine.fp_estimate").set(1.0 - miss);
+        reg.gauge("engine.generation.count").set(self.generations.len() as f64);
     }
 
     fn owned<'a>(&self, band_hashes: &'a [u64]) -> &'a [u64] {
@@ -342,20 +413,29 @@ impl BandSliceIndex {
         &band_hashes[self.range.clone()]
     }
 
+    /// `true` when any owned band of `filters` contains its hash.
+    fn collides(filters: &[AtomicBloomFilter], owned: &[u64]) -> bool {
+        filters.iter().zip(owned).any(|(f, &h)| f.contains(h))
+    }
+
     /// Query the owned bands without inserting (lock-free). `true` =
-    /// some owned band collides; OR this across slices for the
-    /// full-index verdict.
+    /// some owned band collides in *any* generation; OR this across
+    /// slices for the full-index verdict.
     pub fn query(&self, band_hashes: &[u64]) -> bool {
-        self.filters.iter().zip(self.owned(band_hashes)).any(|(f, &h)| f.contains(h))
+        let owned = self.owned(band_hashes);
+        self.generations.iter().rev().any(|g| Self::collides(g, owned))
     }
 
     /// Query + insert the owned bands in one lock-free pass; same
+    /// frozen-probe / open-insert split and the same
     /// short-circuit-to-`set` discipline (and therefore the same bits
     /// and the same verdict contribution) as
     /// [`super::concurrent_index::ConcurrentLshBloomIndex::insert_if_new_shared`].
     pub fn insert_if_new(&self, band_hashes: &[u64]) -> bool {
-        let mut dup = false;
-        for (f, &h) in self.filters.iter().zip(self.owned(band_hashes)) {
+        let owned = self.owned(band_hashes);
+        let open = self.generations.len() - 1;
+        let mut dup = self.generations[..open].iter().any(|g| Self::collides(g, owned));
+        for (f, &h) in self.open_generation().iter().zip(owned) {
             if dup {
                 f.set(h);
             } else {
@@ -366,10 +446,12 @@ impl BandSliceIndex {
         dup
     }
 
-    /// Insert the owned bands without computing a verdict (the batched
-    /// phase-3 path; test-and-test-and-set, bit-identical state).
+    /// Insert the owned bands into the open generation without
+    /// computing a verdict (the batched phase-3 path;
+    /// test-and-test-and-set, bit-identical state).
     pub fn set(&self, band_hashes: &[u64]) {
-        for (f, &h) in self.filters.iter().zip(self.owned(band_hashes)) {
+        let owned = self.owned(band_hashes);
+        for (f, &h) in self.open_generation().iter().zip(owned) {
             f.set(h);
         }
         self.inserted.fetch_add(1, Ordering::Relaxed);
@@ -468,13 +550,22 @@ impl BandShardedEngine {
     /// [`super::batch::ConcurrentEngine::checkpoint`] writes, so a
     /// sharded server's state restores into a single engine and back.
     pub fn checkpoint(&self, dir: &std::path::Path) -> crate::error::Result<()> {
-        let filters: Vec<&AtomicBloomFilter> =
-            self.slices.iter().flat_map(|s| s.filters().iter()).collect();
+        // Slices restored from one manifest (or built fresh) agree on
+        // the generation count; reassemble each generation in full band
+        // order across slices.
+        let gen_filters: Vec<Vec<&AtomicBloomFilter>> = (0..self.num_generations())
+            .map(|g| {
+                self.slices
+                    .iter()
+                    .flat_map(|s| s.generation_filters()[g].iter())
+                    .collect()
+            })
+            .collect();
         let (docs, duplicates) = self.stats();
         // Every processed document inserts into the index (duplicates
         // too), so the engine's docs counter is the inserted count.
-        crate::persist::write_checkpoint_filters(
-            &filters,
+        crate::persist::write_checkpoint_generations(
+            &gen_filters,
             &self.config,
             docs,
             docs,
@@ -501,6 +592,12 @@ impl BandShardedEngine {
         self.config.lsh.rows_per_band
     }
 
+    /// Generations held (all slices agree — they restore from one
+    /// manifest or start fresh at 1).
+    pub fn num_generations(&self) -> usize {
+        self.slices.first().map(|s| s.num_generations()).unwrap_or(1)
+    }
+
     /// (documents processed, duplicates flagged) across all operations.
     pub fn stats(&self) -> (u64, u64) {
         // Statistics counters, not verdicts.
@@ -519,10 +616,11 @@ impl BandShardedEngine {
     pub fn refresh_fill_gauges(&self) {
         let mut miss_all = 1.0f64;
         for slice in &self.slices {
-            miss_all *=
-                super::publish_band_fill_gauges(slice.filters(), slice.band_range().start);
+            miss_all *= slice.fill_gauge_miss();
         }
-        crate::obs::global().gauge("engine.fp_estimate").set(1.0 - miss_all);
+        let reg = crate::obs::global();
+        reg.gauge("engine.fp_estimate").set(1.0 - miss_all);
+        reg.gauge("engine.generation.count").set(self.num_generations() as f64);
     }
 
     fn prepare_one(&self, doc: &Doc) -> Vec<u64> {
@@ -874,8 +972,8 @@ mod tests {
                 assert_eq!(h.len(), d.len(), "case {case}: insert counters diverged");
                 for g in h.band_range() {
                     assert_eq!(
-                        h.band_words(g),
-                        d.band_words(g),
+                        h.band_words(0, g),
+                        d.band_words(0, g),
                         "case {case} band {g}: mmap words differ from heap"
                     );
                 }
@@ -920,9 +1018,10 @@ mod tests {
                 for peer in &replicas[..2] {
                     target
                         .merge_band_words(
+                            0,
                             g,
-                            &peer.band_words(g).unwrap(),
-                            peer.band_inserted(g).unwrap(),
+                            &peer.band_words(0, g).unwrap(),
+                            peer.band_inserted(0, g).unwrap(),
                         )
                         .unwrap();
                 }
@@ -930,11 +1029,11 @@ mod tests {
         };
         merge_all_into(&replicas[2]);
         let converged: Vec<Option<Vec<u64>>> =
-            reference.band_range().map(|g| replicas[2].band_words(g)).collect();
+            reference.band_range().map(|g| replicas[2].band_words(0, g)).collect();
         for (g, words) in reference.band_range().zip(&converged) {
             assert_eq!(
                 words.as_ref(),
-                reference.band_words(g).as_ref(),
+                reference.band_words(0, g).as_ref(),
                 "band {g}: replica union missed bits the full index has"
             );
         }
@@ -942,16 +1041,85 @@ mod tests {
         merge_all_into(&replicas[2]);
         for (g, words) in reference.band_range().zip(&converged) {
             assert_eq!(
-                replicas[2].band_words(g).as_ref(),
+                replicas[2].band_words(0, g).as_ref(),
                 words.as_ref(),
                 "band {g}: replaying the merge changed bits"
             );
         }
-        // Out-of-range band and wrong word count are named errors that
-        // leave no bits behind.
-        assert!(replicas[2].merge_band_words(0, &[], 0).is_err(), "band 0 is unowned");
+        // Out-of-range band, missing generation, and wrong word count
+        // are named errors that leave no bits behind.
+        assert!(replicas[2].merge_band_words(0, 0, &[], 0).is_err(), "band 0 is unowned");
         let g = reference.band_range().start;
-        let err = replicas[2].merge_band_words(g, &[0u64; 1], 0).unwrap_err();
+        let err = replicas[2].merge_band_words(1, g, &[], 0).unwrap_err();
+        assert!(err.to_string().contains("generation"), "{err}");
+        let err = replicas[2].merge_band_words(0, g, &[0u64; 1], 0).unwrap_err();
         assert!(err.to_string().contains("geometry"), "{err}");
+    }
+
+    /// A slice that adopted a rotated layout (frozen generations +
+    /// one open) answers exactly like the generational index: frozen
+    /// membership survives, inserts land only in the open generation,
+    /// and merging a rotated peer into a single-generation replica
+    /// converges after `ensure_generations`.
+    #[test]
+    fn generational_slice_matches_generational_index() {
+        let config = index_cfg(6, 4, 256);
+        let mut whole = ConcurrentLshBloomIndex::new(config);
+        whole.enable_rotation(0.5);
+        let mut rng = Xoshiro256pp::seeded(0x6E2A_51CE);
+        let docs: Vec<Vec<u64>> = (0..2_048)
+            .map(|_| (0..6).map(|_| rng.next_u64()).collect())
+            .collect();
+        for bands in &docs {
+            whole.insert_if_new_shared(bands);
+        }
+        assert!(whole.num_generations() > 1, "rotation must have fired");
+
+        // Rebuild the same layout slice-by-slice from a checkpoint.
+        let dir = std::env::temp_dir()
+            .join(format!("lshbloom-genslice-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        crate::persist::write_checkpoint(&whole, docs.len() as u64, 0, &dir).unwrap();
+        let count = 3usize;
+        let slices: Vec<BandSliceIndex> = (0..count)
+            .map(|s| BandSliceIndex::restore(config, &dir, s, count).unwrap())
+            .collect();
+        for s in &slices {
+            assert_eq!(s.num_generations(), whole.num_generations());
+        }
+        for bands in &docs {
+            assert!(
+                slices.iter().any(|s| s.query(bands)),
+                "restored generational slices lost a frozen-generation doc"
+            );
+        }
+
+        // Anti-entropy: a fresh single-generation replica of slice 1
+        // grows to the peer's layout and converges bit-for-bit.
+        let mut stale = BandSliceIndex::new(config, 1, count);
+        let peer = &slices[1];
+        stale.ensure_generations(peer.num_generations());
+        for gen in 0..peer.num_generations() {
+            for band in peer.band_range() {
+                stale
+                    .merge_band_words(
+                        gen,
+                        band,
+                        &peer.band_words(gen, band).unwrap(),
+                        peer.band_inserted(gen, band).unwrap(),
+                    )
+                    .unwrap();
+            }
+        }
+        for gen in 0..peer.num_generations() {
+            for band in peer.band_range() {
+                assert_eq!(
+                    stale.band_words(gen, band),
+                    peer.band_words(gen, band),
+                    "gen {gen} band {band}: merged replica diverged"
+                );
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -118,11 +118,18 @@ pub struct ConcurrentEngine {
 
 impl ConcurrentEngine {
     /// Build from the pipeline config (native Mix64 backend, same band
-    /// geometry derivation as `methods::lshbloom`).
+    /// geometry derivation as `methods::lshbloom`). When
+    /// `cfg.rotate_watermark` is nonzero the index rotates into a fresh
+    /// generation whenever sampled fill crosses the watermark
+    /// ([`ConcurrentLshBloomIndex::enable_rotation`]), so a stream that
+    /// outgrows `expected_docs` keeps its false-positive budget instead
+    /// of saturating.
     pub fn from_config(cfg: &PipelineConfig) -> Self {
         let preparer = BandPreparer::from_config(cfg);
         let index_cfg = LshBloomConfig::new(preparer.lsh, cfg.p_effective, cfg.expected_docs);
-        Self::with_preparer(Arc::new(preparer), index_cfg, cfg.effective_workers())
+        let mut index = ConcurrentLshBloomIndex::new(index_cfg);
+        index.enable_rotation(cfg.rotate_watermark);
+        Self::with_index(Arc::new(preparer), index, cfg.effective_workers(), 0, 0)
     }
 
     /// Build from an explicit band-producing preparer (e.g. the XLA
@@ -161,7 +168,8 @@ impl ConcurrentEngine {
     ) -> crate::error::Result<Self> {
         let preparer = BandPreparer::from_config(cfg);
         let index_cfg = LshBloomConfig::new(preparer.lsh, cfg.p_effective, cfg.expected_docs);
-        let index = ConcurrentLshBloomIndex::new_shm(index_cfg, dir)?;
+        let mut index = ConcurrentLshBloomIndex::new_shm(index_cfg, dir)?;
+        index.enable_rotation(cfg.rotate_watermark);
         Ok(Self::with_index(Arc::new(preparer), index, cfg.effective_workers(), 0, 0))
     }
 
@@ -182,7 +190,8 @@ impl ConcurrentEngine {
     ) -> crate::error::Result<Self> {
         let preparer = BandPreparer::from_config(cfg);
         let index_cfg = LshBloomConfig::new(preparer.lsh, cfg.p_effective, cfg.expected_docs);
-        let (index, manifest) = crate::persist::restore_index(dir, &index_cfg, mmap)?;
+        let (mut index, manifest) = crate::persist::restore_index(dir, &index_cfg, mmap)?;
+        index.enable_rotation(cfg.rotate_watermark);
         Ok(Self::with_index(
             Arc::new(preparer),
             index,

@@ -1,10 +1,31 @@
-//! Lock-free LSHBloom index: one [`AtomicBloomFilter`] per band.
+//! Lock-free LSHBloom index: one [`AtomicBloomFilter`] per band, grown
+//! in *generations* for unbounded streaming ingest.
 //!
 //! The structural twin of [`crate::index::LshBloomIndex`] — same band
 //! geometry, same per-filter rate derivation (`p = 1-(1-p_eff)^(1/b)`,
 //! §4.3), same single-pass insert-if-new semantics — but every operation
 //! takes `&self`, so any number of threads insert and query without a
 //! lock.
+//!
+//! ## Generations
+//!
+//! A Bloom filter sized for `n` documents degrades past `n`: fill climbs
+//! past the ~50% design point and the false-positive rate grows without
+//! bound. Instead of capping ingest at the plan, the index holds a list
+//! of *generations* — filter sets sharing one geometry (the live
+//! [`crate::capacity::Plan`]). The newest generation is *open*: all
+//! inserts land there. Older generations are *frozen*: probed read-only.
+//! A document is a duplicate when any band collides in any generation,
+//! so freezing never loses a positive; rotation only resets the fill
+//! (and FP) clock for new arrivals.
+//!
+//! Rotation is driven by sampled fill: when the open generation's
+//! fullest band crosses the configured watermark
+//! (`capacity.rotate_watermark`, default 0.5 ≈ "at planned capacity"),
+//! the current filter set is frozen and a fresh one opens, sized from
+//! the same plan. [`ConcurrentLshBloomIndex::new`] starts with rotation
+//! disabled; the engine wiring opts in via
+//! [`ConcurrentLshBloomIndex::enable_rotation`].
 //!
 //! ## Linearizability caveat
 //!
@@ -22,19 +43,43 @@
 use super::atomic_bloom::AtomicBloomFilter;
 use crate::index::lshbloom::LshBloomConfig;
 use crate::index::BandIndex;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard};
 
-/// Lock-free per-band Bloom index.
+/// One generation's band filters, shared so probes and checkpoints can
+/// hold a generation alive across a concurrent rotation.
+pub(crate) type GenerationFilters = Arc<Vec<AtomicBloomFilter>>;
+
+/// Words sampled per filter when deciding whether to rotate. Small
+/// enough to amortize over the check interval, exact for small filters.
+const ROTATE_SAMPLE_WORDS: usize = 1 << 12;
+
+/// Lock-free per-band Bloom index with generational growth.
 pub struct ConcurrentLshBloomIndex {
-    filters: Vec<AtomicBloomFilter>,
+    /// Generations, oldest first; the last entry is the open one. The
+    /// lock is write-held only during a rotation (and the rare
+    /// `ensure_generations` during restores/unions) — the hot path takes
+    /// the uncontended read side.
+    generations: RwLock<Vec<GenerationFilters>>,
     config: LshBloomConfig,
     inserted: AtomicU64,
+    /// Sampled-fill watermark that triggers a rotation; `0.0` disables.
+    watermark: f64,
+    /// Inserts since the last fill sample (rotation checks are strided).
+    since_check: AtomicU64,
+    /// Watermark-driven rotations performed.
+    rotations: AtomicU64,
+    /// Backing directory when mmap-backed: rotated generations open
+    /// their files under `<dir>/gen{g:03}/`.
+    shm_dir: Option<PathBuf>,
 }
 
 impl ConcurrentLshBloomIndex {
     /// Build from the same config the sequential index uses. The
     /// `blocked` flag is ignored (atomic filters are always the classic
     /// layout; blocking is a cache optimization for the sequential path).
+    /// Rotation starts disabled — see [`Self::enable_rotation`].
     pub fn new(config: LshBloomConfig) -> Self {
         // Same geometry derivation as the sequential index — required for
         // `into_sequential` snapshots and cross-index `union_from`.
@@ -42,15 +87,16 @@ impl ConcurrentLshBloomIndex {
         let filters = (0..config.lsh.num_bands)
             .map(|_| AtomicBloomFilter::new(params))
             .collect();
-        Self { filters, config, inserted: AtomicU64::new(0) }
+        Self::from_generations(vec![filters], config, 0)
     }
 
     /// Index with every band filter mmap-backed under `dir`
     /// (`band{i:03}.bits`, freshly zeroed) — the durable variant: same
     /// lock-free semantics, but every `fetch_or` lands in a file, and
     /// `persist::write_checkpoint` on this index is an msync instead of
-    /// a copy. Point `dir` at `/dev/shm/...` for the paper's
-    /// DRAM-resident setup (§4.4.2) or any path for plain persistence.
+    /// a copy. Rotated generations land in `gen{g:03}/` subdirectories.
+    /// Point `dir` at `/dev/shm/...` for the paper's DRAM-resident setup
+    /// (§4.4.2) or any path for plain persistence.
     pub fn new_shm(config: LshBloomConfig, dir: &std::path::Path) -> crate::error::Result<Self> {
         std::fs::create_dir_all(dir)
             .map_err(|e| crate::error::Error::io(dir.display().to_string(), e))?;
@@ -68,28 +114,121 @@ impl ConcurrentLshBloomIndex {
         ] {
             crate::persist::remove_file_if_exists(&dir.join(stale))?;
         }
+        // Stale generation directories from a previous incarnation go
+        // with the manifest — restores are manifest-driven so they are
+        // unreachable, but leaving them would let a later rotation adopt
+        // a directory it doesn't own.
+        if let Ok(entries) = std::fs::read_dir(dir) {
+            for entry in entries.flatten() {
+                let name = entry.file_name();
+                if crate::persist::manifest::parse_generation_dir_name(&name.to_string_lossy())
+                    .is_some()
+                    && entry.path().is_dir()
+                {
+                    std::fs::remove_dir_all(entry.path())
+                        .map_err(|e| crate::error::Error::io(entry.path().display().to_string(), e))?;
+                }
+            }
+        }
         let params = crate::index::LshBloomIndex::filter_params(&config);
         let mut filters = Vec::with_capacity(config.lsh.num_bands);
         for band in 0..config.lsh.num_bands {
             let path = dir.join(crate::persist::manifest::band_file_name(band));
             filters.push(AtomicBloomFilter::new_shm(params, &path)?);
         }
-        Ok(Self { filters, config, inserted: AtomicU64::new(0) })
+        Ok(Self::from_generations(vec![filters], config, 0))
     }
 
-    /// Index adopting pre-built band filters (checkpoint restore).
+    /// Index adopting pre-built band filters (checkpoint restore of a
+    /// single-generation index).
     pub(crate) fn from_parts(
         filters: Vec<AtomicBloomFilter>,
         config: LshBloomConfig,
         inserted: u64,
     ) -> Self {
-        debug_assert_eq!(filters.len(), config.lsh.num_bands);
-        Self { filters, config, inserted: AtomicU64::new(inserted) }
+        Self::from_generations(vec![filters], config, inserted)
     }
 
-    /// The per-band filters (persistence internals).
-    pub(crate) fn filters(&self) -> &[AtomicBloomFilter] {
-        &self.filters
+    /// Index adopting pre-built generations, oldest first (checkpoint
+    /// restore). The backing directory for future rotations is inferred
+    /// from generation 0's filter files when they are mmap-backed.
+    pub(crate) fn from_generations(
+        generations: Vec<Vec<AtomicBloomFilter>>,
+        config: LshBloomConfig,
+        inserted: u64,
+    ) -> Self {
+        debug_assert!(!generations.is_empty());
+        for g in &generations {
+            debug_assert_eq!(g.len(), config.lsh.num_bands);
+        }
+        let shm_dir = generations
+            .first()
+            .and_then(|g| g.first())
+            .and_then(|f| f.backing_path())
+            .and_then(|p| p.parent())
+            .map(|p| p.to_path_buf());
+        Self {
+            generations: RwLock::new(generations.into_iter().map(Arc::new).collect()),
+            config,
+            inserted: AtomicU64::new(inserted),
+            watermark: 0.0,
+            since_check: AtomicU64::new(0),
+            rotations: AtomicU64::new(0),
+            shm_dir,
+        }
+    }
+
+    /// Opt in to watermark-driven rotation: once the open generation's
+    /// sampled fill reaches `watermark`, it freezes and a fresh
+    /// generation opens. `0.0` keeps the index fixed-size (legacy
+    /// behavior — the filter saturates past its plan instead of
+    /// growing).
+    pub fn enable_rotation(&mut self, watermark: f64) {
+        self.watermark = watermark.clamp(0.0, 1.0);
+    }
+
+    /// The configured rotation watermark (`0.0` = disabled).
+    pub fn rotate_watermark(&self) -> f64 {
+        self.watermark
+    }
+
+    fn gens(&self) -> RwLockReadGuard<'_, Vec<GenerationFilters>> {
+        self.generations.read().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn gens_mut(&self) -> RwLockWriteGuard<'_, Vec<GenerationFilters>> {
+        self.generations.write().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Snapshot of every generation, oldest first (persistence
+    /// internals). The Arcs keep each filter set alive even if a
+    /// rotation lands mid-checkpoint.
+    pub(crate) fn generation_snapshot(&self) -> Vec<GenerationFilters> {
+        self.gens().clone()
+    }
+
+    /// Grow to at least `n` generations by opening fresh (empty) ones —
+    /// the restore/union half of rotation, where the source layout
+    /// dictates the count.
+    pub(crate) fn ensure_generations(&self, n: usize) -> crate::error::Result<()> {
+        let mut gens = self.gens_mut();
+        while gens.len() < n {
+            let fresh = self.fresh_generation(gens.len())?;
+            gens.push(Arc::new(fresh));
+        }
+        Ok(())
+    }
+
+    /// Number of generations (1 until the first rotation).
+    pub fn num_generations(&self) -> usize {
+        self.gens().len()
+    }
+
+    /// Watermark-driven rotations performed over this index's lifetime
+    /// (excludes generations adopted from a restore or union).
+    pub fn rotations(&self) -> u64 {
+        // Statistics counter, not a verdict.
+        self.rotations.load(Ordering::Relaxed) // lint: allow(ordering-discipline)
     }
 
     /// Fold an externally merged document count into the index counter
@@ -98,11 +237,13 @@ impl ConcurrentLshBloomIndex {
         self.inserted.fetch_add(n, Ordering::Relaxed);
     }
 
-    /// Flush every mmap-backed band filter to its file (no-op for heap
-    /// filters). See [`AtomicBloomFilter::sync`].
+    /// Flush every mmap-backed band filter of every generation to its
+    /// file (no-op for heap filters). See [`AtomicBloomFilter::sync`].
     pub fn sync(&self) -> crate::error::Result<()> {
-        for f in &self.filters {
-            f.sync()?;
+        for g in self.generation_snapshot() {
+            for f in g.iter() {
+                f.sync()?;
+            }
         }
         Ok(())
     }
@@ -112,20 +253,28 @@ impl ConcurrentLshBloomIndex {
         self.config
     }
 
-    /// Query without inserting (lock-free). `true` = any band collides.
+    fn collides(filters: &[AtomicBloomFilter], band_hashes: &[u64]) -> bool {
+        filters.iter().zip(band_hashes).any(|(f, &h)| f.contains(h))
+    }
+
+    /// Query without inserting (lock-free). `true` = any band collides
+    /// in any generation. Probes newest-first: recent keys are the
+    /// likeliest matches in a dedup stream.
     pub fn query(&self, band_hashes: &[u64]) -> bool {
-        debug_assert_eq!(band_hashes.len(), self.filters.len());
-        self.filters.iter().zip(band_hashes).any(|(f, &h)| f.contains(h))
+        debug_assert_eq!(band_hashes.len(), self.config.lsh.num_bands);
+        self.gens().iter().rev().any(|g| Self::collides(g, band_hashes))
     }
 
     /// Query + insert in one lock-free pass; `&self`, callable from any
     /// thread. Returns `true` if every probed bit of some band was
-    /// already set (duplicate). Subject to the module-level
-    /// linearizability caveat for concurrent twins.
+    /// already set (duplicate) in any generation. Frozen generations are
+    /// probed read-only; the insert lands in the open generation only.
+    /// Subject to the module-level linearizability caveat for concurrent
+    /// twins.
     ///
-    /// Once some band reports a collision the verdict is final, so the
-    /// remaining bands switch from the verdict-tracking
-    /// [`AtomicBloomFilter::insert`] to the cheaper
+    /// Once some band (or a frozen generation) reports a collision the
+    /// verdict is final, so the remaining bands switch from the
+    /// verdict-tracking [`AtomicBloomFilter::insert`] to the cheaper
     /// [`AtomicBloomFilter::set`]: the same bits are still set (state
     /// parity with the sequential single-pass insert is what keeps later
     /// verdicts exact), but already-present bits are detected with a
@@ -133,38 +282,148 @@ impl ConcurrentLshBloomIndex {
     /// duplicates, whose bits are all present, the tail of the pass
     /// issues no RMWs at all.
     pub fn insert_if_new_shared(&self, band_hashes: &[u64]) -> bool {
-        debug_assert_eq!(band_hashes.len(), self.filters.len());
-        let mut dup = false;
-        for (f, &h) in self.filters.iter().zip(band_hashes) {
-            if dup {
-                f.set(h);
-            } else {
-                dup = f.insert(h);
+        debug_assert_eq!(band_hashes.len(), self.config.lsh.num_bands);
+        let dup = {
+            let gens = self.gens();
+            let (open, frozen) = gens.split_last().expect("generation list never empty");
+            let mut dup = frozen.iter().any(|g| Self::collides(g, band_hashes));
+            for (f, &h) in open.iter().zip(band_hashes) {
+                if dup {
+                    f.set(h);
+                } else {
+                    dup = f.insert(h);
+                }
             }
-        }
+            dup
+        };
         self.inserted.fetch_add(1, Ordering::Relaxed);
+        self.maybe_rotate();
         dup
     }
 
     /// Insert a document's bands without computing a verdict — the bulk
     /// path for callers that already decided the document's fate (the
     /// engine's phase-3 insert after its reconcile pass). Sets exactly
-    /// the bits [`Self::insert_if_new_shared`] would, via the
-    /// test-and-test-and-set [`AtomicBloomFilter::set`], so filter state
-    /// — and every later verdict — is unchanged while already-present
-    /// bits cost a plain load instead of a contended `fetch_or`.
+    /// the bits [`Self::insert_if_new_shared`] would — in the open
+    /// generation — via the test-and-test-and-set
+    /// [`AtomicBloomFilter::set`], so filter state — and every later
+    /// verdict — is unchanged while already-present bits cost a plain
+    /// load instead of a contended `fetch_or`.
     pub fn set_shared(&self, band_hashes: &[u64]) {
-        debug_assert_eq!(band_hashes.len(), self.filters.len());
-        for (f, &h) in self.filters.iter().zip(band_hashes) {
-            f.set(h);
+        debug_assert_eq!(band_hashes.len(), self.config.lsh.num_bands);
+        {
+            let gens = self.gens();
+            let open = gens.last().expect("generation list never empty");
+            for (f, &h) in open.iter().zip(band_hashes) {
+                f.set(h);
+            }
         }
         self.inserted.fetch_add(1, Ordering::Relaxed);
+        self.maybe_rotate();
     }
 
-    /// Bit-OR merge: fold every band filter of `other` into `self`
-    /// (lock-free, geometry-checked — see
-    /// [`AtomicBloomFilter::union_from`]). Panics when the two indexes
-    /// disagree on band count or per-filter geometry.
+    /// How many inserts to absorb between fill samples: fine enough to
+    /// catch the watermark within ~6% of the plan, coarse enough that
+    /// the strided popcount amortizes to noise.
+    fn check_interval(&self) -> u64 {
+        (self.config.expected_docs / 16).clamp(32, 1 << 16)
+    }
+
+    fn max_fill(filters: &[AtomicBloomFilter]) -> f64 {
+        filters
+            .iter()
+            .map(|f| f.fill_ratio_sampled(ROTATE_SAMPLE_WORDS))
+            .fold(0.0, f64::max)
+    }
+
+    /// Strided rotation check: sample the open generation's fill every
+    /// `check_interval()` inserts and rotate when it crosses the
+    /// watermark.
+    fn maybe_rotate(&self) {
+        if self.watermark <= 0.0 {
+            return;
+        }
+        if self.since_check.fetch_add(1, Ordering::Relaxed) + 1 < self.check_interval() {
+            return;
+        }
+        // Benign race: concurrent resets only stretch the next interval.
+        self.since_check.store(0, Ordering::Relaxed);
+        let crossed = {
+            let gens = self.gens();
+            let open = gens.last().expect("generation list never empty");
+            Self::max_fill(open) >= self.watermark
+        };
+        if crossed {
+            self.rotate();
+        }
+    }
+
+    /// Freeze the open generation and open a fresh one. On shm failure
+    /// the index keeps ingesting into the (over-full) open generation —
+    /// correctness is unaffected, only the FP budget degrades — and the
+    /// next check retries.
+    fn rotate(&self) {
+        let mut gens = self.gens_mut();
+        // Re-sample under the write lock: a racing thread may have
+        // rotated between our sample and the lock acquisition, in which
+        // case the (fresh) open generation is nowhere near the
+        // watermark.
+        let open = gens.last().expect("generation list never empty");
+        if Self::max_fill(open) < self.watermark {
+            return;
+        }
+        match self.fresh_generation(gens.len()) {
+            Ok(fresh) => {
+                gens.push(Arc::new(fresh));
+                self.rotations.fetch_add(1, Ordering::Relaxed);
+                let reg = crate::obs::global();
+                reg.counter("engine.generation.rotations.total").inc();
+                reg.gauge("engine.generation.count").set(gens.len() as f64);
+                crate::log_info!(
+                    "generation rotation: open-generation fill crossed {:.2}, generation {} now open ({} total)",
+                    self.watermark,
+                    gens.len() - 1,
+                    gens.len()
+                );
+            }
+            Err(e) => {
+                crate::log_warn!(
+                    "generation rotation failed ({e}); continuing in generation {}",
+                    gens.len() - 1
+                );
+            }
+        }
+    }
+
+    /// Build generation `gen`'s filter set from the live plan — heap, or
+    /// mmap-backed under `gen{g:03}/` when the index is durable.
+    fn fresh_generation(&self, gen: usize) -> crate::error::Result<Vec<AtomicBloomFilter>> {
+        let params = crate::index::LshBloomIndex::filter_params(&self.config);
+        let bands = self.config.lsh.num_bands;
+        match &self.shm_dir {
+            Some(dir) => {
+                let gdir = dir.join(crate::persist::manifest::generation_dir_name(gen));
+                std::fs::create_dir_all(&gdir)
+                    .map_err(|e| crate::error::Error::io(gdir.display().to_string(), e))?;
+                let mut filters = Vec::with_capacity(bands);
+                for band in 0..bands {
+                    let path = gdir.join(crate::persist::manifest::band_file_name(band));
+                    filters.push(AtomicBloomFilter::new_shm(params, &path)?);
+                }
+                Ok(filters)
+            }
+            None => Ok((0..bands).map(|_| AtomicBloomFilter::new(params)).collect()),
+        }
+    }
+
+    /// Bit-OR merge: fold every band filter of every generation of
+    /// `other` into the matching generation of `self` (lock-free,
+    /// geometry-checked — see [`AtomicBloomFilter::union_from`]).
+    /// Generations align by position — sound because both indexes derive
+    /// every generation from the same plan — and `self` opens fresh
+    /// generations as needed to absorb a source that rotated further.
+    /// Panics when the two indexes disagree on band count or per-filter
+    /// geometry.
     ///
     /// This is the sharded-aggregation primitive (paper §6): after the
     /// union, `self` reports a collision for every band vector either
@@ -177,41 +436,64 @@ impl ConcurrentLshBloomIndex {
     /// memory-ordering contract.
     pub fn union_from(&self, other: &Self) {
         assert_eq!(
-            self.filters.len(),
-            other.filters.len(),
+            self.config.lsh.num_bands,
+            other.config.lsh.num_bands,
             "ConcurrentLshBloomIndex::union_from: band count mismatch ({} vs {})",
-            self.filters.len(),
-            other.filters.len()
+            self.config.lsh.num_bands,
+            other.config.lsh.num_bands
         );
-        for (dst, src) in self.filters.iter().zip(&other.filters) {
-            dst.union_from(src);
+        let src_gens = other.generation_snapshot();
+        self.ensure_generations(src_gens.len())
+            .expect("ConcurrentLshBloomIndex::union_from: cannot open destination generation");
+        let dst_gens = self.generation_snapshot();
+        for (dst, src) in dst_gens.iter().zip(&src_gens) {
+            for (d, s) in dst.iter().zip(src.iter()) {
+                d.union_from(s);
+            }
         }
         self.inserted
             // lint: allow(ordering-discipline) — element counter, not a verdict
             .fetch_add(other.inserted.load(Ordering::Relaxed), Ordering::Relaxed);
     }
 
-    /// Fill ratio of each filter (diagnostics).
+    /// Fill ratio of each band filter of the *open* generation
+    /// (diagnostics; frozen generations sit pinned at the watermark).
     pub fn fill_ratios(&self) -> Vec<f64> {
-        self.filters.iter().map(|f| f.fill_ratio()).collect()
+        let gens = self.gens();
+        let open = gens.last().expect("generation list never empty");
+        open.iter().map(|f| f.fill_ratio()).collect()
     }
 
     /// Publish per-band fill-ratio / estimated-FP gauges plus the
-    /// any-band FP estimate (`engine.fp_estimate`) into the global
-    /// observability registry. Popcounts are strided
+    /// any-band FP estimate (`engine.fp_estimate`) and generation count
+    /// into the global observability registry. The open generation keeps
+    /// the legacy `{band="B"}` labels; frozen generations carry an extra
+    /// `gen` label so dashboards see the live fill, not silently
+    /// generation 0's. Popcounts are strided
     /// ([`AtomicBloomFilter::fill_ratio_sampled`]), so this is cheap
     /// enough to run on every checkpoint and every metrics scrape.
     pub fn refresh_fill_gauges(&self) {
-        let miss = super::publish_band_fill_gauges(&self.filters, 0);
-        crate::obs::global().gauge("engine.fp_estimate").set(1.0 - miss);
+        let gens = self.generation_snapshot();
+        let open = gens.len() - 1;
+        let mut miss_all = 1.0;
+        for (g, filters) in gens.iter().enumerate() {
+            miss_all *= if g == open {
+                super::publish_band_fill_gauges(filters, 0)
+            } else {
+                super::publish_band_fill_gauges_gen(filters, 0, g)
+            };
+        }
+        let reg = crate::obs::global();
+        reg.gauge("engine.fp_estimate").set(1.0 - miss_all);
+        reg.gauge("engine.generation.count").set(gens.len() as f64);
     }
 
     /// Number of bands.
     pub fn num_bands(&self) -> usize {
-        self.filters.len()
+        self.config.lsh.num_bands
     }
 
-    /// Documents inserted so far.
+    /// Documents inserted so far (across all generations).
     pub fn len(&self) -> u64 {
         // Element counter, not a verdict.
         self.inserted.load(Ordering::Relaxed) // lint: allow(ordering-discipline)
@@ -222,24 +504,57 @@ impl ConcurrentLshBloomIndex {
         self.len() == 0
     }
 
-    /// Bytes of backing storage (static: fixed by capacity, not docs).
+    /// Bytes of backing storage across all generations (static per
+    /// generation: fixed by capacity, not docs).
     pub fn disk_bytes(&self) -> u64 {
-        self.filters.iter().map(|f| f.size_bytes()).sum()
+        self.gens()
+            .iter()
+            .map(|g| g.iter().map(|f| f.size_bytes()).sum::<u64>())
+            .sum()
+    }
+
+    /// OR every generation's band filters into one fresh filter set —
+    /// sound because all generations share one geometry; the cost is
+    /// merging the generations' independent FP budgets into one
+    /// (over-full) filter.
+    fn collapse(gens: &[GenerationFilters], config: &LshBloomConfig) -> Vec<AtomicBloomFilter> {
+        let params = crate::index::LshBloomIndex::filter_params(config);
+        (0..config.lsh.num_bands)
+            .map(|band| {
+                let acc = AtomicBloomFilter::new(params);
+                for g in gens {
+                    acc.union_from(&g[band]);
+                }
+                acc
+            })
+            .collect()
     }
 
     /// Freeze into a persistable sequential [`crate::index::LshBloomIndex`]
     /// snapshot. Consumes the index; exclusive ownership is the
     /// synchronization point, so the snapshot holds every insert that
-    /// happened before the caller obtained `self`.
+    /// happened before the caller obtained `self`. A multi-generation
+    /// index is collapsed by OR (see [`Self::collapse`]); single
+    /// generations move without copying.
     pub fn into_sequential(self) -> crate::index::LshBloomIndex {
         // lint: allow(ordering-discipline) — exclusive ownership is the sync point
         let inserted = self.inserted.load(Ordering::Relaxed);
-        let filters = self
-            .filters
-            .into_iter()
-            .map(|f| f.into_filter())
-            .collect::<Vec<_>>();
-        crate::index::LshBloomIndex::from_filters(filters, self.config, inserted)
+        let config = self.config;
+        let mut gens = self
+            .generations
+            .into_inner()
+            .unwrap_or_else(PoisonError::into_inner);
+        let filters = if gens.len() == 1 {
+            let only = gens.pop().expect("generation list never empty");
+            match Arc::try_unwrap(only) {
+                Ok(owned) => owned,
+                Err(shared) => Self::collapse(&[shared], &config),
+            }
+        } else {
+            Self::collapse(&gens, &config)
+        };
+        let filters = filters.into_iter().map(|f| f.into_filter()).collect::<Vec<_>>();
+        crate::index::LshBloomIndex::from_filters(filters, config, inserted)
     }
 }
 
@@ -428,6 +743,74 @@ mod tests {
         assert_eq!(frozen.disk_bytes(), disk);
         for d in &docs {
             assert!(frozen.query(d));
+        }
+    }
+
+    #[test]
+    fn rotation_stays_disabled_by_default() {
+        // 8x overfill without `enable_rotation` must not grow the index —
+        // legacy fixed-size behavior.
+        let idx = ConcurrentLshBloomIndex::new(cfg(6, 4, 256));
+        let mut rng = Xoshiro256pp::seeded(7);
+        for _ in 0..2_048 {
+            idx.insert_if_new_shared(&random_bands(&mut rng, 6));
+        }
+        assert_eq!(idx.num_generations(), 1);
+        assert_eq!(idx.rotations(), 0);
+    }
+
+    #[test]
+    fn rotation_opens_new_generations_and_keeps_all_verdicts() {
+        let mut idx = ConcurrentLshBloomIndex::new(cfg(6, 4, 256));
+        idx.enable_rotation(0.5);
+        let mut rng = Xoshiro256pp::seeded(9);
+        let docs: Vec<Vec<u64>> = (0..2_048).map(|_| random_bands(&mut rng, 6)).collect();
+        for d in &docs {
+            idx.insert_if_new_shared(d);
+        }
+        assert!(idx.num_generations() > 1, "8x overfill must cross the watermark");
+        assert_eq!(idx.rotations() as usize, idx.num_generations() - 1);
+        for d in &docs {
+            assert!(idx.query(d), "doc lost across a rotation");
+        }
+        assert_eq!(idx.len(), 2_048);
+    }
+
+    #[test]
+    fn union_from_absorbs_multi_generation_sources() {
+        let config = cfg(6, 4, 256);
+        let mut a = ConcurrentLshBloomIndex::new(config);
+        a.enable_rotation(0.5);
+        let mut rng = Xoshiro256pp::seeded(17);
+        let docs: Vec<Vec<u64>> = (0..1_024).map(|_| random_bands(&mut rng, 6)).collect();
+        for d in &docs {
+            a.insert_if_new_shared(d);
+        }
+        assert!(a.num_generations() > 1);
+        let b = ConcurrentLshBloomIndex::new(config);
+        b.union_from(&a);
+        assert_eq!(b.num_generations(), a.num_generations());
+        for d in &docs {
+            assert!(b.query(d), "doc lost in generational union");
+        }
+        assert_eq!(b.len(), a.len());
+    }
+
+    #[test]
+    fn into_sequential_collapses_generations() {
+        let mut idx = ConcurrentLshBloomIndex::new(cfg(5, 3, 200));
+        idx.enable_rotation(0.5);
+        let mut rng = Xoshiro256pp::seeded(23);
+        let docs: Vec<Vec<u64>> = (0..800).map(|_| random_bands(&mut rng, 5)).collect();
+        for d in &docs {
+            idx.insert_if_new_shared(d);
+        }
+        assert!(idx.num_generations() > 1);
+        let inserted = idx.len();
+        let frozen = idx.into_sequential();
+        assert_eq!(frozen.len(), inserted);
+        for d in &docs {
+            assert!(frozen.query(d), "doc lost collapsing generations");
         }
     }
 }

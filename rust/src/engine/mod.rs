@@ -97,3 +97,27 @@ pub(crate) fn publish_band_fill_gauges(
     }
     miss_all
 }
+
+/// [`publish_band_fill_gauges`] for a *frozen* generation: same base
+/// gauge names with an extra `gen` label, so after a rotation the
+/// unlabeled series keeps tracking the open generation instead of
+/// silently reporting generation 0 forever.
+pub(crate) fn publish_band_fill_gauges_gen(
+    filters: &[AtomicBloomFilter],
+    band_offset: usize,
+    generation: usize,
+) -> f64 {
+    let reg = crate::obs::global();
+    let mut miss_all = 1.0f64;
+    for (i, f) in filters.iter().enumerate() {
+        let band = band_offset + i;
+        let fill = f.fill_ratio_sampled(GAUGE_SAMPLE_WORDS);
+        let fp = fill.powi(f.params().hashes as i32);
+        reg.gauge(&format!("engine.band_fill_ratio{{band=\"{band}\",gen=\"{generation}\"}}"))
+            .set(fill);
+        reg.gauge(&format!("engine.band_fp_estimate{{band=\"{band}\",gen=\"{generation}\"}}"))
+            .set(fp);
+        miss_all *= 1.0 - fp;
+    }
+    miss_all
+}

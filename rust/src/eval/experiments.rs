@@ -41,10 +41,12 @@ impl Scale {
         Self { tuning_docs: 1_200, testing_docs: 2_000, scale_docs: 10_000, seed: 0xE5C0 }
     }
 
-    /// Select via env: `LSHBLOOM_BENCH_QUICK=1` → quick,
+    /// Select via env: `LSHBLOOM_BENCH_QUICK=1` (or the micro-bench
+    /// smoke switch `LSHBLOOM_BENCH_FAST=1`) → quick,
     /// `LSHBLOOM_SCALE=paper` → paper-sized, otherwise standard.
     pub fn from_env() -> Self {
-        if std::env::var("LSHBLOOM_BENCH_QUICK").map(|v| v == "1").unwrap_or(false) {
+        let flag = |name: &str| std::env::var(name).map(|v| v == "1").unwrap_or(false);
+        if flag("LSHBLOOM_BENCH_QUICK") || flag("LSHBLOOM_BENCH_FAST") {
             return Self::quick();
         }
         match std::env::var("LSHBLOOM_SCALE").as_deref() {

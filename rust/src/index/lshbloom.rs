@@ -100,10 +100,10 @@ impl LshBloomIndex {
 
     /// Per-band Bloom geometry for a config — shared with the concurrent
     /// index so frozen snapshots and bit-OR unions always agree on
-    /// filter layout.
+    /// filter layout. Delegates to the capacity oracle, the single
+    /// source of truth for (bits, hashes).
     pub(crate) fn filter_params(config: &LshBloomConfig) -> BloomParams {
-        let p = BloomParams::per_filter_rate(config.p_effective, config.lsh.num_bands);
-        BloomParams::for_capacity(config.expected_docs.max(1), p)
+        crate::capacity::filter_geometry(config.lsh.num_bands, config.p_effective, config.expected_docs)
     }
 
     /// The configuration this index was built with.

@@ -33,6 +33,7 @@
 
 pub mod analysis;
 pub mod bloom;
+pub mod capacity;
 pub mod cli;
 pub mod config;
 pub mod corpus;

@@ -125,6 +125,22 @@ fn cmd_dedup(rest: Vec<String>) -> CliResult {
         .arg(ArgSpec::opt("ngram", "shingle size").default("1"))
         .arg(ArgSpec::opt("p-effective", "index-wide FP bound").default("1e-10"))
         .arg(ArgSpec::opt("expected-docs", "planned corpus size (filter sizing; 0 = use input size)").default("0"))
+        .arg(ArgSpec::opt(
+            "expect-docs",
+            "capacity-planner spelling of --expected-docs (key capacity.expect_docs); \
+             wins over it when both are given",
+        ).default("0"))
+        .arg(ArgSpec::opt(
+            "fp-budget",
+            "capacity-planner spelling of --p-effective (key capacity.fp_budget); \
+             wins over it when non-empty",
+        ).default(""))
+        .arg(ArgSpec::opt(
+            "rotate-watermark",
+            "sampled-fill fraction in [0,1) at which the concurrent engine freezes \
+             the open filter generation and opens a fresh one (0 disables rotation; \
+             key capacity.rotate_watermark)",
+        ).default("0.5"))
         .arg(ArgSpec::opt("workers", "worker threads (0 = all cores)").default("0"))
         .arg(ArgSpec::opt("engine", "index engine: classic|concurrent (lock-free, lshbloom only)").default("classic"))
         .arg(ArgSpec::opt("shards", "shard count for §6 sharded aggregation (>1 runs per-shard concurrent engines + bit-OR filter merge; lshbloom/native only)").default("1"))
@@ -162,16 +178,24 @@ fn cmd_dedup(rest: Vec<String>) -> CliResult {
     let args = parse(cmd, rest)?;
 
     let docs = LabeledCorpus::load_jsonl(Path::new(args.get("input")))?;
-    let expected = match args.get_u64("expected-docs") {
-        0 => docs.len() as u64,
-        n => n,
+    // Capacity-planner spellings win over the legacy flags when given:
+    // --expect-docs over --expected-docs, --fp-budget over --p-effective.
+    let expected = match (args.get_u64("expect-docs"), args.get_u64("expected-docs")) {
+        (0, 0) => docs.len() as u64,
+        (0, n) => n,
+        (n, _) => n,
+    };
+    let p_effective = match args.get_opt("fp-budget").filter(|s| !s.is_empty()) {
+        Some(p) => p.parse::<f64>().map_err(|_| format!("bad --fp-budget '{p}'"))?,
+        None => args.get_f64("p-effective"),
     };
     let cfg = PipelineConfig {
         threshold: args.get_f64("threshold"),
         num_perms: args.get_usize("perms"),
         ngram: args.get_usize("ngram"),
-        p_effective: args.get_f64("p-effective"),
+        p_effective,
         expected_docs: expected,
+        rotate_watermark: args.get_f64("rotate-watermark"),
         workers: args.get_usize("workers"),
         backend: MinHashBackend::parse(args.get("backend"))?,
         artifacts_dir: args.get("artifacts").to_string(),
@@ -187,6 +211,13 @@ fn cmd_dedup(rest: Vec<String>) -> CliResult {
 
     let kind = MethodKind::parse(args.get("method"))
         .ok_or_else(|| format!("unknown method '{}'", args.get("method")))?;
+
+    // Echo the derived geometry so every run records what the planner
+    // chose (only the lshbloom method consumes the plan).
+    if kind == MethodKind::LshBloom {
+        let plan = lshbloom::capacity::Plan::from_config(&cfg)?;
+        println!("capacity plan: {}", plan.describe());
+    }
 
     // `--metrics-out`: a ticker thread snapshots the registry once per
     // second while the run is in flight; the error paths below just let
@@ -570,6 +601,11 @@ fn cmd_worker(rest: Vec<String>) -> CliResult {
         "checkpoint-every",
         "snapshot the engine every N shard documents (0 = only at end of stream)",
     ).default("0"))
+    .arg(ArgSpec::opt(
+        "rotate-watermark",
+        "sampled-fill fraction in [0,1) at which this worker's engine rotates to a \
+         fresh filter generation (0 disables; passed through by the supervisor)",
+    ).default("0.5"))
     .arg(ArgSpec::switch(
         "resume",
         "restore the engine checkpoint in --dir/checkpoint (if any) and continue; \
@@ -593,6 +629,7 @@ fn cmd_worker(rest: Vec<String>) -> CliResult {
         expected_docs: args.get_u64("expected-docs"),
         workers: args.get_usize("workers"),
         batch_size: args.get_usize("batch-size"),
+        rotate_watermark: args.get_f64("rotate-watermark"),
         engine: EngineMode::Concurrent,
         checkpoint_dir: dir
             .join(lshbloom::persist::WORKER_CHECKPOINT_DIR)
@@ -788,6 +825,21 @@ fn cmd_serve(rest: Vec<String>) -> CliResult {
         .arg(ArgSpec::opt("perms", "minhash permutations").default("256"))
         .arg(ArgSpec::opt("p-effective", "index-wide FP bound").default("1e-10"))
         .arg(ArgSpec::opt("expected-docs", "planned corpus size").default("1000000"))
+        .arg(ArgSpec::opt(
+            "expect-docs",
+            "capacity-planner spelling of --expected-docs (key capacity.expect_docs); \
+             wins over it when > 0",
+        ).default("0"))
+        .arg(ArgSpec::opt(
+            "fp-budget",
+            "capacity-planner spelling of --p-effective (key capacity.fp_budget); \
+             wins over it when non-empty",
+        ).default(""))
+        .arg(ArgSpec::opt(
+            "rotate-watermark",
+            "sampled-fill fraction in [0,1) at which the concurrent engine rotates to \
+             a fresh filter generation (0 disables; key capacity.rotate_watermark)",
+        ).default("0.5"))
         .arg(ArgSpec::opt("engine", "index engine: classic|concurrent (lock-free ingest)").default("classic"))
         .arg(ArgSpec::opt(
             "serve-shards",
@@ -843,11 +895,20 @@ fn cmd_serve(rest: Vec<String>) -> CliResult {
         .arg(ArgSpec::switch("shm", "host bloom filters in /dev/shm (classic engine)"))
         .arg(ArgSpec::switch("blocked", "use blocked bloom filters (classic engine)"));
     let args = parse(cmd, rest)?;
+    let expected = match args.get_u64("expect-docs") {
+        0 => args.get_u64("expected-docs"),
+        n => n,
+    };
+    let p_effective = match args.get_opt("fp-budget").filter(|s| !s.is_empty()) {
+        Some(p) => p.parse::<f64>().map_err(|_| format!("bad --fp-budget '{p}'"))?,
+        None => args.get_f64("p-effective"),
+    };
     let cfg = PipelineConfig {
         threshold: args.get_f64("threshold"),
         num_perms: args.get_usize("perms"),
-        p_effective: args.get_f64("p-effective"),
-        expected_docs: args.get_u64("expected-docs"),
+        p_effective,
+        expected_docs: expected,
+        rotate_watermark: args.get_f64("rotate-watermark"),
         use_shm: args.get_bool("shm"),
         blocked_bloom: args.get_bool("blocked"),
         engine: EngineMode::parse(args.get("engine"))?,
@@ -871,6 +932,10 @@ fn cmd_serve(rest: Vec<String>) -> CliResult {
                 .into(),
         );
     }
+    // Echo the derived geometry so the served layout is on record next
+    // to the listen line (router backends must all print the same plan).
+    let plan = lshbloom::capacity::Plan::from_config(&cfg)?;
+    println!("capacity plan: {}", plan.describe());
     let slice = match (args.get_opt("slice-index"), args.get_opt("slice-count")) {
         (Some(i), Some(n)) => {
             let i: usize = i.parse().map_err(|_| format!("bad --slice-index '{i}'"))?;
@@ -947,6 +1012,16 @@ fn cmd_route(rest: Vec<String>) -> CliResult {
             "planned corpus size (must match the backends' filter sizing)",
         ).default("1000000"))
         .arg(ArgSpec::opt(
+            "expect-docs",
+            "capacity-planner spelling of --expected-docs (key capacity.expect_docs); \
+             wins over it when > 0",
+        ).default("0"))
+        .arg(ArgSpec::opt(
+            "fp-budget",
+            "capacity-planner spelling of --p-effective (key capacity.fp_budget); \
+             wins over it when non-empty",
+        ).default(""))
+        .arg(ArgSpec::opt(
             "max-line-bytes",
             "per-connection request-line cap in bytes",
         ).default("16777216"))
@@ -979,11 +1054,19 @@ fn cmd_route(rest: Vec<String>) -> CliResult {
              a trace and logs a WARN line with the per-hop breakdown (0 = off)",
         ).default("0"));
     let args = parse(cmd, rest)?;
+    let expected = match args.get_u64("expect-docs") {
+        0 => args.get_u64("expected-docs"),
+        n => n,
+    };
+    let p_effective = match args.get_opt("fp-budget").filter(|s| !s.is_empty()) {
+        Some(p) => p.parse::<f64>().map_err(|_| format!("bad --fp-budget '{p}'"))?,
+        None => args.get_f64("p-effective"),
+    };
     let cfg = PipelineConfig {
         threshold: args.get_f64("threshold"),
         num_perms: args.get_usize("perms"),
-        p_effective: args.get_f64("p-effective"),
-        expected_docs: args.get_u64("expected-docs"),
+        p_effective,
+        expected_docs: expected,
         metrics_addr: args.get("metrics-addr").to_string(),
         trace_sample: args.get_f64("trace-sample"),
         trace_slow_ms: args.get_u64("trace-slow-ms"),

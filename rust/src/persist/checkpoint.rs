@@ -12,16 +12,27 @@
 //! size, and — for snapshot checkpoints — per-file checksums must match,
 //! or restore refuses with a clear error instead of silently admitting
 //! Bloom false negatives.
+//!
+//! ## Generations on disk
+//!
+//! A rotated index ([`ConcurrentLshBloomIndex`] generations) persists
+//! generation 0 at the checkpoint root — byte-identical to the legacy
+//! single-generation layout — and each later generation under a
+//! `gen{g:03}/` subdirectory listed in the manifest's `generations`
+//! array. All generations share one geometry (they are sized from the
+//! same plan), so every per-file check applies uniformly; a manifest
+//! that records a generation whose directory or files are missing is a
+//! torn checkpoint and restore refuses it by name.
 
 use super::manifest::{
-    band_file_name, CheckpointManifest, CheckpointMode, ChecksumStream, FilterFile,
-    MANIFEST_VERSION,
+    band_file_name, generation_dir_name, CheckpointManifest, CheckpointMode, ChecksumStream,
+    FilterFile, GenerationEntry, MANIFEST_VERSION, MANIFEST_VERSION_GENERATIONAL,
 };
 use crate::engine::{AtomicBloomFilter, ConcurrentLshBloomIndex};
 use crate::error::{Error, Result};
 use crate::index::lshbloom::LshBloomConfig;
 use std::io::Write;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::Ordering;
 
 /// Words per IO chunk when copying a filter (64 KiB buffers).
@@ -49,15 +60,37 @@ fn checksum_mismatch(path: &Path, got: u64, want: u64) -> Error {
     ))
 }
 
+/// Directory that holds generation `g`'s files: the checkpoint root for
+/// generation 0, `gen{g:03}/` after that.
+fn generation_dir(dir: &Path, g: usize) -> PathBuf {
+    if g == 0 {
+        dir.to_path_buf()
+    } else {
+        dir.join(generation_dir_name(g))
+    }
+}
+
+/// A manifest-listed generation directory that is absent on disk is a
+/// torn checkpoint — named refusal, never silent false negatives.
+fn missing_generation_dir(gdir: &Path) -> Error {
+    Error::Format(format!(
+        "checkpoint generation directory {} is missing but the manifest records it; \
+         refusing to restore a torn generational checkpoint",
+        gdir.display()
+    ))
+}
+
 /// Persist `index` (plus the engine counters `docs`/`duplicates`) into
 /// `dir`, returning the manifest that was written.
 ///
 /// Filters already mmap-backed *inside `dir`* are checkpointed in place
 /// (msync, no copy, no checksum — the periodic-checkpoint fast path;
 /// restore never verifies live-mode checksums, so none are computed);
-/// anything else is copied out as a checksummed cold snapshot. For
-/// exact counters, call between batches — concurrent inserts during the
-/// call are safe either way (the files only ever gain bits).
+/// anything else is copied out as a checksummed cold snapshot. A rotated
+/// index writes generation 0 at the root and later generations under
+/// `gen{g:03}/` (see the module docs). For exact counters, call between
+/// batches — concurrent inserts during the call are safe either way
+/// (the files only ever gain bits).
 ///
 /// # Examples
 ///
@@ -89,17 +122,108 @@ pub fn write_checkpoint(
     duplicates: u64,
     dir: &Path,
 ) -> Result<CheckpointManifest> {
-    let filters: Vec<&AtomicBloomFilter> = index.filters().iter().collect();
-    write_checkpoint_filters(&filters, &index.config(), index.len(), docs, duplicates, dir)
+    let _wall = crate::obs::span("persist.checkpoint");
+    crate::obs::global().counter("persist.checkpoints.total").inc();
+    std::fs::create_dir_all(dir).map_err(|e| Error::io(dir.display().to_string(), e))?;
+    let config = index.config();
+    let params = crate::index::LshBloomIndex::filter_params(&config);
+    let gens = index.generation_snapshot();
+    let mut live = 0usize;
+    let mut per_gen_files: Vec<Vec<FilterFile>> = Vec::with_capacity(gens.len());
+    for (g, filters) in gens.iter().enumerate() {
+        let gdir = generation_dir(dir, g);
+        if g > 0 {
+            std::fs::create_dir_all(&gdir)
+                .map_err(|e| Error::io(gdir.display().to_string(), e))?;
+        }
+        per_gen_files.push(write_generation_files(filters.iter(), &gdir, &mut live)?);
+    }
+    let mut per_gen_files = per_gen_files.into_iter();
+    let files = per_gen_files.next().unwrap_or_default();
+    let generations: Vec<GenerationEntry> = per_gen_files
+        .enumerate()
+        .map(|(i, files)| GenerationEntry { dir: generation_dir_name(i + 1), files })
+        .collect();
+    let manifest = CheckpointManifest {
+        version: if generations.is_empty() {
+            MANIFEST_VERSION
+        } else {
+            MANIFEST_VERSION_GENERATIONAL
+        },
+        // Any in-place file means the bytes can keep moving under the
+        // manifest, so checksums are meaningless there (and unrecorded).
+        mode: if live > 0 { CheckpointMode::Live } else { CheckpointMode::Snapshot },
+        num_bands: config.lsh.num_bands,
+        rows_per_band: config.lsh.rows_per_band,
+        p_effective: config.p_effective,
+        expected_docs: config.expected_docs,
+        filter_params: params,
+        inserted: index.len(),
+        docs,
+        duplicates,
+        files,
+        generations,
+    };
+    manifest.save(dir)?;
+    Ok(manifest)
+}
+
+/// Write one generation's band files into `gdir` (live msync or cold
+/// copy per filter), returning the manifest entries. `live` counts the
+/// in-place files so callers can pick the manifest mode.
+fn write_generation_files<'a>(
+    filters: impl IntoIterator<Item = &'a AtomicBloomFilter>,
+    gdir: &Path,
+    live: &mut usize,
+) -> Result<Vec<FilterFile>> {
+    let mut files = Vec::new();
+    for (i, filter) in filters.into_iter().enumerate() {
+        let name = band_file_name(i);
+        let target = gdir.join(&name);
+        let words = filter.word_count() as u64;
+        let checksum = if filter.backing_path() == Some(target.as_path()) {
+            // Live in-place checkpoint: the mapping *is* the file. No
+            // checksum — restore skips verification for live mode by
+            // design (post-crash bytes may legitimately be a superset),
+            // so computing one would scan every word of a multi-GB
+            // index per periodic checkpoint for a number nothing reads.
+            filter.sync()?;
+            *live += 1;
+            0
+        } else {
+            copy_filter_cold(filter, gdir, &name)?
+        };
+        files.push(FilterFile { name, words, checksum, inserted: filter.inserted() });
+    }
+    Ok(files)
 }
 
 /// [`write_checkpoint`] over an explicit band-ordered filter list — the
 /// shared core that also lets the band-sliced serving engine
 /// ([`crate::engine::BandShardedEngine`]) persist its slices as one
 /// full-index checkpoint (its filters live in N slice structs, not one
-/// index).
+/// index). Writes the single-generation layout; generational callers go
+/// through [`write_checkpoint_generations`], [`write_checkpoint`], or
+/// [`write_slice_checkpoint`].
 pub(crate) fn write_checkpoint_filters(
     filters: &[&AtomicBloomFilter],
+    config: &LshBloomConfig,
+    inserted: u64,
+    docs: u64,
+    duplicates: u64,
+    dir: &Path,
+) -> Result<CheckpointManifest> {
+    write_checkpoint_generations(&[filters.to_vec()], config, inserted, docs, duplicates, dir)
+}
+
+/// [`write_checkpoint_filters`] over per-generation filter lists
+/// (oldest first, each in full band order) — the sharded serving
+/// engine's checkpoint path once its slices carry frozen generations
+/// restored from a rotated index. Writes the same on-disk layout as
+/// [`write_checkpoint`]: generation 0 at the root, later generations
+/// under `gen{g:03}/` recorded in the manifest's `generations` array.
+pub(crate) fn write_checkpoint_generations(
+    gen_filters: &[Vec<&AtomicBloomFilter>],
     config: &LshBloomConfig,
     inserted: u64,
     docs: u64,
@@ -110,30 +234,28 @@ pub(crate) fn write_checkpoint_filters(
     crate::obs::global().counter("persist.checkpoints.total").inc();
     std::fs::create_dir_all(dir).map_err(|e| Error::io(dir.display().to_string(), e))?;
     let params = crate::index::LshBloomIndex::filter_params(config);
-    let mut files = Vec::with_capacity(filters.len());
     let mut live = 0usize;
-    for (i, filter) in filters.iter().enumerate() {
-        let name = band_file_name(i);
-        let target = dir.join(&name);
-        let words = filter.word_count() as u64;
-        let checksum = if filter.backing_path() == Some(target.as_path()) {
-            // Live in-place checkpoint: the mapping *is* the file. No
-            // checksum — restore skips verification for live mode by
-            // design (post-crash bytes may legitimately be a superset),
-            // so computing one would scan every word of a multi-GB
-            // index per periodic checkpoint for a number nothing reads.
-            filter.sync()?;
-            live += 1;
-            0
-        } else {
-            copy_filter_cold(filter, dir, &name)?
-        };
-        files.push(FilterFile { name, words, checksum, inserted: filter.inserted() });
+    let mut per_gen_files: Vec<Vec<FilterFile>> = Vec::with_capacity(gen_filters.len());
+    for (g, filters) in gen_filters.iter().enumerate() {
+        let gdir = generation_dir(dir, g);
+        if g > 0 {
+            std::fs::create_dir_all(&gdir)
+                .map_err(|e| Error::io(gdir.display().to_string(), e))?;
+        }
+        per_gen_files.push(write_generation_files(filters.iter().copied(), &gdir, &mut live)?);
     }
+    let mut per_gen_files = per_gen_files.into_iter();
+    let files = per_gen_files.next().unwrap_or_default();
+    let generations: Vec<GenerationEntry> = per_gen_files
+        .enumerate()
+        .map(|(i, files)| GenerationEntry { dir: generation_dir_name(i + 1), files })
+        .collect();
     let manifest = CheckpointManifest {
-        version: MANIFEST_VERSION,
-        // Any in-place file means the bytes can keep moving under the
-        // manifest, so checksums are meaningless there (and unrecorded).
+        version: if generations.is_empty() {
+            MANIFEST_VERSION
+        } else {
+            MANIFEST_VERSION_GENERATIONAL
+        },
         mode: if live > 0 { CheckpointMode::Live } else { CheckpointMode::Snapshot },
         num_bands: config.lsh.num_bands,
         rows_per_band: config.lsh.rows_per_band,
@@ -144,6 +266,7 @@ pub(crate) fn write_checkpoint_filters(
         docs,
         duplicates,
         files,
+        generations,
     };
     manifest.save(dir)?;
     Ok(manifest)
@@ -200,62 +323,73 @@ fn placeholder_files(expect_words: u64, num_bands: usize) -> Vec<FilterFile> {
 /// ([`crate::engine::BandSliceIndex::open_durable`] wraps it).
 ///
 /// With a manifest present the geometry is verified with full-restore
-/// strictness, each owned band file is re-attached in place
-/// (`ShmAtomicBitArray::open`'s exact-size discipline — a torn or
-/// truncated file is a named error, never a silent false-negative
-/// source) and, for snapshot checkpoints, checksum-verified before the
-/// manifest is republished in live mode (the files mutate in place from
-/// here on, so stale snapshot checksums must not survive to reject the
-/// next restart). A manifest entry whose file is missing is recreated
-/// zeroed only when it records zero inserts (a sibling slice's
-/// placeholder); a missing file with recorded inserts is a hard error.
-/// Without a manifest, fresh zeroed files are created for the owned
-/// range and a live-mode manifest with placeholder entries for the
-/// other bands is published.
+/// strictness, each owned band file — of *every* recorded generation —
+/// is re-attached in place (`ShmAtomicBitArray::open`'s exact-size
+/// discipline — a torn or truncated file is a named error, never a
+/// silent false-negative source) and, for snapshot checkpoints,
+/// checksum-verified before the manifest is republished in live mode
+/// (the files mutate in place from here on, so stale snapshot checksums
+/// must not survive to reject the next restart). A manifest entry whose
+/// file is missing is recreated zeroed only when it records zero inserts
+/// (a sibling slice's placeholder); a missing file with recorded inserts
+/// — or a whole missing generation directory — is a hard error. Without
+/// a manifest, fresh zeroed files are created for the owned range and a
+/// live-mode manifest with placeholder entries for the other bands is
+/// published.
 ///
-/// Returns the owned filters in band order plus the manifest's document
-/// counter (0 for fresh state). Bits reach the backing files on every
-/// insert (mmap), so a crash loses no inserts; the *counters* are only
-/// as fresh as the last manifest publish — re-converge them through the
-/// serving tier's anti-entropy pull before trusting them.
+/// Returns the owned filters per generation (oldest first, each in band
+/// order) plus the manifest's document counter (0 for fresh state).
+/// Bits reach the backing files on every insert (mmap), so a crash
+/// loses no inserts; the *counters* are only as fresh as the last
+/// manifest publish — re-converge them through the serving tier's
+/// anti-entropy pull before trusting them.
 pub fn open_durable_slice(
     expect: &LshBloomConfig,
     range: std::ops::Range<usize>,
     dir: &Path,
-) -> Result<(Vec<AtomicBloomFilter>, u64)> {
+) -> Result<(Vec<Vec<AtomicBloomFilter>>, u64)> {
     let _wall = crate::obs::span("persist.restore");
     std::fs::create_dir_all(dir).map_err(|e| Error::io(dir.display().to_string(), e))?;
     let params = crate::index::LshBloomIndex::filter_params(expect);
     let expect_words = params.bits.div_ceil(64);
-    let mut filters = Vec::with_capacity(range.len());
     if CheckpointManifest::exists(dir) {
         let mut manifest = CheckpointManifest::load(dir)?;
         manifest.verify_geometry(expect)?;
-        for g in range.clone() {
-            let entry = &manifest.files[g];
-            let path = dir.join(&entry.name);
-            let filter = if path.is_file() {
-                let filter = AtomicBloomFilter::open_shm(params, &path, entry.inserted)?;
-                if manifest.mode == CheckpointMode::Snapshot {
-                    let got = checksum_filter(&filter);
-                    if got != entry.checksum {
-                        return Err(checksum_mismatch(&path, got, entry.checksum));
+        let mut generations = Vec::with_capacity(manifest.num_generations());
+        for g in 0..manifest.num_generations() {
+            let gdir = generation_dir(dir, g);
+            if g > 0 && !gdir.is_dir() {
+                return Err(missing_generation_dir(&gdir));
+            }
+            let entries =
+                if g == 0 { &manifest.files } else { &manifest.generations[g - 1].files };
+            let mut filters = Vec::with_capacity(range.len());
+            for entry in &entries[range.clone()] {
+                let path = gdir.join(&entry.name);
+                let filter = if path.is_file() {
+                    let filter = AtomicBloomFilter::open_shm(params, &path, entry.inserted)?;
+                    if manifest.mode == CheckpointMode::Snapshot {
+                        let got = checksum_filter(&filter);
+                        if got != entry.checksum {
+                            return Err(checksum_mismatch(&path, got, entry.checksum));
+                        }
                     }
-                }
-                filter
-            } else if entry.inserted == 0 {
-                // A sibling slice published the manifest with a
-                // placeholder for this band; materialize it zeroed.
-                AtomicBloomFilter::new_shm(params, &path)?
-            } else {
-                return Err(Error::Format(format!(
-                    "checkpoint file {} is missing but its manifest entry records {} \
-                     inserts; refusing to restore a torn slice",
-                    path.display(),
-                    entry.inserted
-                )));
-            };
-            filters.push(filter);
+                    filter
+                } else if entry.inserted == 0 {
+                    // A sibling slice published the manifest with a
+                    // placeholder for this band; materialize it zeroed.
+                    AtomicBloomFilter::new_shm(params, &path)?
+                } else {
+                    return Err(Error::Format(format!(
+                        "checkpoint file {} is missing but its manifest entry records {} \
+                         inserts; refusing to restore a torn slice",
+                        path.display(),
+                        entry.inserted
+                    )));
+                };
+                filters.push(filter);
+            }
+            generations.push(filters);
         }
         // The owned files are live mappings from here on: flip the
         // manifest to live mode and zero the owned checksums so a
@@ -263,13 +397,19 @@ pub fn open_durable_slice(
         if manifest.mode == CheckpointMode::Snapshot {
             manifest.mode = CheckpointMode::Live;
         }
-        for g in range {
+        for g in range.clone() {
             manifest.files[g].checksum = 0;
+        }
+        for gen in &mut manifest.generations {
+            for g in range.clone() {
+                gen.files[g].checksum = 0;
+            }
         }
         let inserted = manifest.inserted;
         manifest.save(dir)?;
-        Ok((filters, inserted))
+        Ok((generations, inserted))
     } else {
+        let mut filters = Vec::with_capacity(range.len());
         for g in range.clone() {
             filters.push(AtomicBloomFilter::new_shm(params, &dir.join(band_file_name(g)))?);
         }
@@ -285,9 +425,10 @@ pub fn open_durable_slice(
             docs: 0,
             duplicates: 0,
             files: placeholder_files(expect_words, expect.lsh.num_bands),
+            generations: Vec::new(),
         };
         manifest.save(dir)?;
-        Ok((filters, 0))
+        Ok((vec![filters], 0))
     }
 }
 
@@ -297,8 +438,11 @@ pub fn open_durable_slice(
 /// anti-entropy merge). Read-modify-write: an existing
 /// geometry-compatible manifest keeps its entries for bands outside
 /// `range` (so N slices sharing one directory tile a full-index
-/// manifest between them), a missing one starts from placeholders.
-/// `filters` are the owned filters in band order; mmap-backed filters
+/// manifest between them), a missing one starts from placeholders; the
+/// manifest's generation list grows (with placeholder entries) to cover
+/// every generation this writer holds, and generations only the
+/// manifest knows about are preserved. `gen_filters` are the owned
+/// filters per generation, each in band order; mmap-backed filters
 /// already living at their target path are msync'd in place, anything
 /// else is cold-copied. The manifest always publishes in live mode —
 /// entries owned by *other* slices may describe files still mutating in
@@ -312,7 +456,7 @@ pub fn open_durable_slice(
 /// checkpoint's) corpus history. The serving tier treats them as
 /// advisory either way and re-converges replica counters over the wire.
 pub fn write_slice_checkpoint(
-    filters: &[AtomicBloomFilter],
+    gen_filters: &[Vec<AtomicBloomFilter>],
     config: &LshBloomConfig,
     range: std::ops::Range<usize>,
     inserted: u64,
@@ -322,11 +466,13 @@ pub fn write_slice_checkpoint(
 ) -> Result<CheckpointManifest> {
     let _wall = crate::obs::span("persist.checkpoint");
     crate::obs::global().counter("persist.checkpoints.total").inc();
-    if filters.len() != range.len() {
-        return Err(Error::Format(format!(
-            "write_slice_checkpoint: {} filters for band range {range:?}",
-            filters.len()
-        )));
+    for filters in gen_filters {
+        if filters.len() != range.len() {
+            return Err(Error::Format(format!(
+                "write_slice_checkpoint: {} filters for band range {range:?}",
+                filters.len()
+            )));
+        }
     }
     std::fs::create_dir_all(dir).map_err(|e| Error::io(dir.display().to_string(), e))?;
     let params = crate::index::LshBloomIndex::filter_params(config);
@@ -334,7 +480,7 @@ pub fn write_slice_checkpoint(
     let mut inserted = inserted;
     let mut docs = docs;
     let mut duplicates = duplicates;
-    let mut files = if CheckpointManifest::exists(dir) {
+    let (mut files, mut generations) = if CheckpointManifest::exists(dir) {
         let existing = CheckpointManifest::load(dir)?;
         // Refusing a mismatched directory beats silently clobbering a
         // foreign checkpoint's manifest with wrong-geometry entries.
@@ -342,30 +488,52 @@ pub fn write_slice_checkpoint(
         inserted = inserted.max(existing.inserted);
         docs = docs.max(existing.docs);
         duplicates = duplicates.max(existing.duplicates);
-        existing.files
+        (existing.files, existing.generations)
     } else {
-        placeholder_files(expect_words, config.lsh.num_bands)
+        (placeholder_files(expect_words, config.lsh.num_bands), Vec::new())
     };
-    for (filter, g) in filters.iter().zip(range) {
-        let name = band_file_name(g);
-        let target = dir.join(&name);
-        if filter.backing_path() == Some(target.as_path()) {
-            filter.sync()?;
-        } else {
-            copy_filter_cold(filter, dir, &name)?;
+    while generations.len() + 1 < gen_filters.len() {
+        generations.push(GenerationEntry {
+            dir: generation_dir_name(generations.len() + 1),
+            files: placeholder_files(expect_words, config.lsh.num_bands),
+        });
+    }
+    for (g, filters) in gen_filters.iter().enumerate() {
+        let gdir = generation_dir(dir, g);
+        if g > 0 {
+            std::fs::create_dir_all(&gdir)
+                .map_err(|e| Error::io(gdir.display().to_string(), e))?;
         }
-        files[g] = FilterFile {
-            name,
-            words: filter.word_count() as u64,
-            // Live-mode manifests carry no meaningful checksums; zero
-            // even the cold-copied ones so no reader can mistake a
-            // partially-checksummed directory for a verified snapshot.
-            checksum: 0,
-            inserted: filter.inserted(),
-        };
+        for (filter, band) in filters.iter().zip(range.clone()) {
+            let name = band_file_name(band);
+            let target = gdir.join(&name);
+            if filter.backing_path() == Some(target.as_path()) {
+                filter.sync()?;
+            } else {
+                copy_filter_cold(filter, &gdir, &name)?;
+            }
+            let entry = FilterFile {
+                name,
+                words: filter.word_count() as u64,
+                // Live-mode manifests carry no meaningful checksums; zero
+                // even the cold-copied ones so no reader can mistake a
+                // partially-checksummed directory for a verified snapshot.
+                checksum: 0,
+                inserted: filter.inserted(),
+            };
+            if g == 0 {
+                files[band] = entry;
+            } else {
+                generations[g - 1].files[band] = entry;
+            }
+        }
     }
     let manifest = CheckpointManifest {
-        version: MANIFEST_VERSION,
+        version: if generations.is_empty() {
+            MANIFEST_VERSION
+        } else {
+            MANIFEST_VERSION_GENERATIONAL
+        },
         mode: CheckpointMode::Live,
         num_bands: config.lsh.num_bands,
         rows_per_band: config.lsh.rows_per_band,
@@ -376,6 +544,7 @@ pub fn write_slice_checkpoint(
         docs,
         duplicates,
         files,
+        generations,
     };
     manifest.save(dir)?;
     Ok(manifest)
@@ -421,15 +590,46 @@ fn read_band_words(
     Ok(words)
 }
 
+/// Restore one generation's filters from `gdir` (full band set).
+fn restore_generation(
+    gdir: &Path,
+    entries: &[FilterFile],
+    mode: CheckpointMode,
+    params: crate::bloom::BloomParams,
+    expect_words: u64,
+    mmap: bool,
+) -> Result<Vec<AtomicBloomFilter>> {
+    let mut filters = Vec::with_capacity(entries.len());
+    for entry in entries {
+        if mmap {
+            let path = gdir.join(&entry.name);
+            let filter = AtomicBloomFilter::open_shm(params, &path, entry.inserted)?;
+            if mode == CheckpointMode::Snapshot {
+                let got = checksum_filter(&filter);
+                if got != entry.checksum {
+                    return Err(checksum_mismatch(&path, got, entry.checksum));
+                }
+            }
+            filters.push(filter);
+        } else {
+            let words = read_band_words(gdir, entry, mode, expect_words)?;
+            filters.push(AtomicBloomFilter::from_heap_words(words, entry.inserted, params));
+        }
+    }
+    Ok(filters)
+}
+
 /// Restore an index from the checkpoint in `dir`.
 ///
 /// `expect` is the geometry the caller is about to serve with; any
 /// mismatch with the manifest is a hard error (a wrong-geometry filter
 /// silently answers `false` for keys it was never probed at — Bloom
-/// false negatives). With `mmap` the band files become the live backing
-/// store (subsequent inserts mutate them in place and the next
-/// [`write_checkpoint`] is an msync); without it the words are copied to
-/// heap atomics and `dir` is left untouched.
+/// false negatives). Every recorded generation is re-attached, so a
+/// rotated index resumes with its full membership history and keeps
+/// inserting into the newest generation. With `mmap` the band files
+/// become the live backing store (subsequent inserts mutate them in
+/// place and the next [`write_checkpoint`] is an msync); without it the
+/// words are copied to heap atomics and `dir` is left untouched.
 ///
 /// See [`write_checkpoint`] for a runnable write-then-restore example.
 pub fn restore_index(
@@ -442,24 +642,30 @@ pub fn restore_index(
     manifest.verify_geometry(expect)?;
     let params = manifest.filter_params;
     let expect_words = params.bits.div_ceil(64);
-    let mut filters = Vec::with_capacity(manifest.files.len());
-    for entry in &manifest.files {
-        if mmap {
-            let path = dir.join(&entry.name);
-            let filter = AtomicBloomFilter::open_shm(params, &path, entry.inserted)?;
-            if manifest.mode == CheckpointMode::Snapshot {
-                let got = checksum_filter(&filter);
-                if got != entry.checksum {
-                    return Err(checksum_mismatch(&path, got, entry.checksum));
-                }
-            }
-            filters.push(filter);
-        } else {
-            let words = read_band_words(dir, entry, manifest.mode, expect_words)?;
-            filters.push(AtomicBloomFilter::from_heap_words(words, entry.inserted, params));
+    let mut generations = Vec::with_capacity(manifest.num_generations());
+    generations.push(restore_generation(
+        dir,
+        &manifest.files,
+        manifest.mode,
+        params,
+        expect_words,
+        mmap,
+    )?);
+    for gen in &manifest.generations {
+        let gdir = dir.join(&gen.dir);
+        if !gdir.is_dir() {
+            return Err(missing_generation_dir(&gdir));
         }
+        generations.push(restore_generation(
+            &gdir,
+            &gen.files,
+            manifest.mode,
+            params,
+            expect_words,
+            mmap,
+        )?);
     }
-    let index = ConcurrentLshBloomIndex::from_parts(filters, *expect, manifest.inserted);
+    let index = ConcurrentLshBloomIndex::from_generations(generations, *expect, manifest.inserted);
     Ok((index, manifest))
 }
 
@@ -473,7 +679,8 @@ pub fn restore_index(
 /// Geometry is verified against the *full* expected config first, with
 /// the same strictness as a full restore; per-file size (and, for
 /// snapshot checkpoints, checksum) checks cover exactly the files in
-/// `range`. The filters come back as heap copies in band order and the
+/// `range`, in every recorded generation. The filters come back as heap
+/// copies per generation (oldest first, each in band order) and the
 /// checkpoint directory is left untouched — slices are read-only views
 /// of a checkpoint, re-persisted (if at all) through
 /// [`crate::engine::BandShardedEngine::checkpoint`].
@@ -481,11 +688,11 @@ pub fn restore_band_slice(
     dir: &Path,
     expect: &LshBloomConfig,
     range: std::ops::Range<usize>,
-) -> Result<(Vec<AtomicBloomFilter>, CheckpointManifest)> {
+) -> Result<(Vec<Vec<AtomicBloomFilter>>, CheckpointManifest)> {
     let _wall = crate::obs::span("persist.restore");
     let manifest = CheckpointManifest::load(dir)?;
-    let filters = restore_band_slice_from(&manifest, dir, expect, range)?;
-    Ok((filters, manifest))
+    let generations = restore_band_slice_from(&manifest, dir, expect, range)?;
+    Ok((generations, manifest))
 }
 
 /// [`restore_band_slice`] against an already-loaded manifest — the
@@ -496,23 +703,38 @@ pub(crate) fn restore_band_slice_from(
     dir: &Path,
     expect: &LshBloomConfig,
     range: std::ops::Range<usize>,
-) -> Result<Vec<AtomicBloomFilter>> {
+) -> Result<Vec<Vec<AtomicBloomFilter>>> {
     manifest.verify_geometry(expect)?;
     let params = manifest.filter_params;
     let expect_words = params.bits.div_ceil(64);
-    let mut filters = Vec::with_capacity(range.len());
-    for entry in &manifest.files[range] {
-        let words = read_band_words(dir, entry, manifest.mode, expect_words)?;
-        filters.push(AtomicBloomFilter::from_heap_words(words, entry.inserted, params));
+    let mut generations = Vec::with_capacity(manifest.num_generations());
+    let restore_range = |gdir: &Path, entries: &[FilterFile]| -> Result<Vec<AtomicBloomFilter>> {
+        let mut filters = Vec::with_capacity(range.len());
+        for entry in &entries[range.clone()] {
+            let words = read_band_words(gdir, entry, manifest.mode, expect_words)?;
+            filters.push(AtomicBloomFilter::from_heap_words(words, entry.inserted, params));
+        }
+        Ok(filters)
+    };
+    generations.push(restore_range(dir, &manifest.files)?);
+    for gen in &manifest.generations {
+        let gdir = dir.join(&gen.dir);
+        if !gdir.is_dir() {
+            return Err(missing_generation_dir(&gdir));
+        }
+        generations.push(restore_range(&gdir, &gen.files)?);
     }
-    Ok(filters)
+    Ok(generations)
 }
 
 /// Bit-OR a *persisted* checkpoint into a live index — the cross-process
 /// half of the sharded-aggregation seam (paper §6): a sibling process
 /// checkpoints its shard filters, and this process folds them in
 /// straight from the files, no re-MinHashing, no IPC beyond the
-/// filesystem. Returns the merged checkpoint's document count.
+/// filesystem. Generations align by position (both sides derive every
+/// generation from the same plan) and the live index opens fresh
+/// generations as needed to absorb a checkpoint that rotated further.
+/// Returns the merged checkpoint's document count.
 ///
 /// Geometry is verified strictly against `index.config()` first, and in
 /// snapshot mode each file's checksum is verified *before* any of its
@@ -521,10 +743,31 @@ pub fn union_from_checkpoint(index: &ConcurrentLshBloomIndex, dir: &Path) -> Res
     let manifest = CheckpointManifest::load(dir)?;
     manifest.verify_geometry(&index.config())?;
     let expect_words = manifest.filter_params.bits.div_ceil(64);
-    let filters = index.filters();
-    debug_assert_eq!(filters.len(), manifest.files.len());
-    for (filter, entry) in filters.iter().zip(&manifest.files) {
-        let words = read_band_words(dir, entry, manifest.mode, expect_words)?;
+    index.ensure_generations(manifest.num_generations())?;
+    let gens = index.generation_snapshot();
+    merge_generation(&gens[0], dir, &manifest.files, manifest.mode, expect_words)?;
+    for (g, gen) in manifest.generations.iter().enumerate() {
+        let gdir = dir.join(&gen.dir);
+        if !gdir.is_dir() {
+            return Err(missing_generation_dir(&gdir));
+        }
+        merge_generation(&gens[g + 1], &gdir, &gen.files, manifest.mode, expect_words)?;
+    }
+    index.add_inserted(manifest.inserted);
+    Ok(manifest.docs)
+}
+
+/// OR one persisted generation's files into the matching live filters.
+fn merge_generation(
+    filters: &[AtomicBloomFilter],
+    gdir: &Path,
+    entries: &[FilterFile],
+    mode: CheckpointMode,
+    expect_words: u64,
+) -> Result<()> {
+    debug_assert_eq!(filters.len(), entries.len());
+    for (filter, entry) in filters.iter().zip(entries) {
+        let words = read_band_words(gdir, entry, mode, expect_words)?;
         if words.len() != filter.word_count() {
             return Err(Error::Format(format!(
                 "checkpoint file {}: {} words but the live filter has {}",
@@ -536,6 +779,5 @@ pub fn union_from_checkpoint(index: &ConcurrentLshBloomIndex, dir: &Path) -> Res
         filter.or_words_at(0, &words);
         filter.add_inserted(entry.inserted);
     }
-    index.add_inserted(manifest.inserted);
-    Ok(manifest.docs)
+    Ok(())
 }

@@ -34,6 +34,11 @@ use std::path::Path;
 /// Manifest format version; bumped on any incompatible layout change.
 pub const MANIFEST_VERSION: u64 = 1;
 
+/// Manifest format version for generational checkpoints (more than one
+/// filter set). Single-generation checkpoints keep writing
+/// [`MANIFEST_VERSION`] so pre-generational readers stay compatible.
+pub const MANIFEST_VERSION_GENERATIONAL: u64 = 2;
+
 /// File name of the manifest inside a checkpoint directory.
 pub const MANIFEST_FILE: &str = "manifest.json";
 
@@ -81,6 +86,18 @@ pub struct FilterFile {
     pub inserted: u64,
 }
 
+/// One generation beyond generation 0: its subdirectory inside the
+/// checkpoint and the per-band files it holds. Generation 0's files live
+/// at the checkpoint root (the legacy single-generation layout), so a
+/// non-rotated index round-trips byte-identically to the v1 format.
+#[derive(Clone, Debug)]
+pub struct GenerationEntry {
+    /// Subdirectory name inside the checkpoint dir (`gen{g:03}`).
+    pub dir: String,
+    /// One entry per band, band order.
+    pub files: Vec<FilterFile>,
+}
+
 /// The manifest proper.
 #[derive(Clone, Debug)]
 pub struct CheckpointManifest {
@@ -106,13 +123,33 @@ pub struct CheckpointManifest {
     pub docs: u64,
     /// …and duplicates flagged among them.
     pub duplicates: u64,
-    /// One entry per band, band order.
+    /// One entry per band, band order (generation 0, checkpoint root).
     pub files: Vec<FilterFile>,
+    /// Generations beyond 0, oldest first (`gen{g:03}/` subdirectories);
+    /// empty for a never-rotated index, which keeps the manifest at
+    /// [`MANIFEST_VERSION`].
+    pub generations: Vec<GenerationEntry>,
 }
 
 /// Conventional file name for band `i`.
 pub fn band_file_name(band: usize) -> String {
     format!("band{band:03}.bits")
+}
+
+/// Conventional subdirectory name for generation `g` (generation 0 lives
+/// at the checkpoint root; rotated generations in `gen{g:03}/`).
+pub fn generation_dir_name(generation: usize) -> String {
+    format!("gen{generation:03}")
+}
+
+/// Inverse of [`generation_dir_name`]: `Some(g)` when `name` names a
+/// generation subdirectory.
+pub fn parse_generation_dir_name(name: &str) -> Option<usize> {
+    let digits = name.strip_prefix("gen")?;
+    if digits.len() < 3 || !digits.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    digits.parse().ok()
 }
 
 /// Running checksum over a stream of u64 words, fed in chunks.
@@ -232,26 +269,49 @@ impl CheckpointManifest {
                 )));
             }
         }
+        // Every generation shares one geometry (they are all sized from
+        // the same plan), so the same word-count discipline applies.
+        for (gi, g) in self.generations.iter().enumerate() {
+            if g.files.len() != self.num_bands {
+                return Err(Error::Format(format!(
+                    "checkpoint manifest generation {} lists {} filter files for {} bands",
+                    gi + 1,
+                    g.files.len(),
+                    self.num_bands
+                )));
+            }
+            for f in &g.files {
+                if f.words != expect_words {
+                    return Err(Error::Format(format!(
+                        "checkpoint generation file {}/{} records {} words but the geometry \
+                         needs {expect_words}",
+                        g.dir, f.name, f.words
+                    )));
+                }
+            }
+        }
         Ok(())
+    }
+
+    /// Total generations described (1 + rotated generations).
+    pub fn num_generations(&self) -> usize {
+        1 + self.generations.len()
     }
 
     /// Serialize to the manifest JSON document.
     pub fn to_json(&self) -> Value {
-        let files: Vec<Value> = self
-            .files
-            .iter()
-            .map(|f| {
-                obj(vec![
-                    ("name", Value::str(f.name.clone())),
-                    ("words", Value::u64(f.words)),
-                    // u64 checksums exceed f64's mantissa; the crate's
-                    // json keeps the raw token so they round-trip exactly.
-                    ("checksum", Value::u64(f.checksum)),
-                    ("inserted", Value::u64(f.inserted)),
-                ])
-            })
-            .collect();
-        obj(vec![
+        fn file_json(f: &FilterFile) -> Value {
+            obj(vec![
+                ("name", Value::str(f.name.clone())),
+                ("words", Value::u64(f.words)),
+                // u64 checksums exceed f64's mantissa; the crate's
+                // json keeps the raw token so they round-trip exactly.
+                ("checksum", Value::u64(f.checksum)),
+                ("inserted", Value::u64(f.inserted)),
+            ])
+        }
+        let files: Vec<Value> = self.files.iter().map(file_json).collect();
+        let mut fields = vec![
             ("version", Value::u64(self.version)),
             ("mode", Value::str(self.mode.as_str())),
             ("num_bands", Value::u64(self.num_bands as u64)),
@@ -265,7 +325,21 @@ impl CheckpointManifest {
             ("docs", Value::u64(self.docs)),
             ("duplicates", Value::u64(self.duplicates)),
             ("files", Value::Arr(files)),
-        ])
+        ];
+        if !self.generations.is_empty() {
+            let gens: Vec<Value> = self
+                .generations
+                .iter()
+                .map(|g| {
+                    obj(vec![
+                        ("dir", Value::str(g.dir.clone())),
+                        ("files", Value::Arr(g.files.iter().map(file_json).collect())),
+                    ])
+                })
+                .collect();
+            fields.push(("generations", Value::Arr(gens)));
+        }
+        obj(fields)
     }
 
     /// Parse a manifest document; rejects unknown versions.
@@ -279,9 +353,10 @@ impl CheckpointManifest {
                 .ok_or_else(|| Error::Format(format!("checkpoint manifest '{k}' not a u64")))
         };
         let version = u("version")?;
-        if version != MANIFEST_VERSION {
+        if version != MANIFEST_VERSION && version != MANIFEST_VERSION_GENERATIONAL {
             return Err(Error::Format(format!(
-                "checkpoint manifest version {version} unsupported (expected {MANIFEST_VERSION})"
+                "checkpoint manifest version {version} unsupported (expected \
+                 {MANIFEST_VERSION} or {MANIFEST_VERSION_GENERATIONAL})"
             )));
         }
         let mode = CheckpointMode::parse(
@@ -292,28 +367,57 @@ impl CheckpointManifest {
         let p_effective = field("p_effective")?
             .as_f64()
             .ok_or_else(|| Error::Format("checkpoint manifest 'p_effective' not a number".into()))?;
+        fn parse_files(arr: &[Value], ctx: &str) -> Result<Vec<FilterFile>> {
+            let mut files = Vec::with_capacity(arr.len());
+            for (i, fv) in arr.iter().enumerate() {
+                let fu = |k: &str| -> Result<u64> {
+                    fv.get(k).and_then(|x| x.as_u64()).ok_or_else(|| {
+                        Error::Format(format!(
+                            "checkpoint manifest {ctx}[{i}].{k} missing or not u64"
+                        ))
+                    })
+                };
+                files.push(FilterFile {
+                    name: fv
+                        .get("name")
+                        .and_then(|x| x.as_str())
+                        .ok_or_else(|| {
+                            Error::Format(format!("checkpoint manifest {ctx}[{i}].name missing"))
+                        })?
+                        .to_string(),
+                    words: fu("words")?,
+                    checksum: fu("checksum")?,
+                    inserted: fu("inserted")?,
+                });
+            }
+            Ok(files)
+        }
         let files_json = field("files")?
             .as_arr()
             .ok_or_else(|| Error::Format("checkpoint manifest 'files' not an array".into()))?;
-        let mut files = Vec::with_capacity(files_json.len());
-        for (i, fv) in files_json.iter().enumerate() {
-            let fu = |k: &str| -> Result<u64> {
-                fv.get(k).and_then(|x| x.as_u64()).ok_or_else(|| {
-                    Error::Format(format!("checkpoint manifest files[{i}].{k} missing or not u64"))
-                })
-            };
-            files.push(FilterFile {
-                name: fv
-                    .get("name")
+        let files = parse_files(files_json, "files")?;
+        let mut generations = Vec::new();
+        if let Some(gens_json) = v.get("generations").and_then(|x| x.as_arr()) {
+            for (gi, gv) in gens_json.iter().enumerate() {
+                let dir = gv
+                    .get("dir")
                     .and_then(|x| x.as_str())
                     .ok_or_else(|| {
-                        Error::Format(format!("checkpoint manifest files[{i}].name missing"))
+                        Error::Format(format!(
+                            "checkpoint manifest generations[{gi}].dir missing"
+                        ))
                     })?
-                    .to_string(),
-                words: fu("words")?,
-                checksum: fu("checksum")?,
-                inserted: fu("inserted")?,
-            });
+                    .to_string();
+                let gfiles = gv.get("files").and_then(|x| x.as_arr()).ok_or_else(|| {
+                    Error::Format(format!(
+                        "checkpoint manifest generations[{gi}].files missing or not an array"
+                    ))
+                })?;
+                generations.push(GenerationEntry {
+                    dir,
+                    files: parse_files(gfiles, "generations.files")?,
+                });
+            }
         }
         Ok(Self {
             version,
@@ -331,6 +435,7 @@ impl CheckpointManifest {
             docs: u("docs")?,
             duplicates: u("duplicates")?,
             files,
+            generations,
         })
     }
 
@@ -388,6 +493,7 @@ mod tests {
                     inserted: 123,
                 })
                 .collect(),
+            generations: Vec::new(),
         }
     }
 
@@ -455,6 +561,56 @@ mod tests {
         }
         let err = CheckpointManifest::from_json(&v).unwrap_err();
         assert!(err.to_string().contains("version"), "{err}");
+    }
+
+    #[test]
+    fn single_generation_manifest_stays_version_one() {
+        // The legacy layout must keep round-tripping through version 1
+        // with no `generations` key, so pre-generational readers accept
+        // checkpoints from never-rotated indexes.
+        let m = sample();
+        let j = m.to_json();
+        assert_eq!(j.get("version").and_then(|v| v.as_u64()), Some(MANIFEST_VERSION));
+        assert!(j.get("generations").is_none());
+        assert_eq!(CheckpointManifest::from_json(&j).unwrap().num_generations(), 1);
+    }
+
+    #[test]
+    fn generational_manifest_roundtrips() {
+        let mut m = sample();
+        m.version = MANIFEST_VERSION_GENERATIONAL;
+        m.generations = vec![GenerationEntry {
+            dir: generation_dir_name(1),
+            files: m.files.clone(),
+        }];
+        m.verify_geometry(&m.index_config()).unwrap();
+        let back = CheckpointManifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(back.version, MANIFEST_VERSION_GENERATIONAL);
+        assert_eq!(back.num_generations(), 2);
+        assert_eq!(back.generations[0].dir, "gen001");
+        assert_eq!(back.generations[0].files.len(), 4);
+        assert_eq!(back.generations[0].files[0].checksum, m.files[0].checksum);
+    }
+
+    #[test]
+    fn generation_with_wrong_band_count_rejected() {
+        let mut m = sample();
+        m.version = MANIFEST_VERSION_GENERATIONAL;
+        let mut files = m.files.clone();
+        files.pop();
+        m.generations = vec![GenerationEntry { dir: generation_dir_name(1), files }];
+        let err = m.verify_geometry(&m.index_config()).unwrap_err();
+        assert!(err.to_string().contains("generation"), "{err}");
+    }
+
+    #[test]
+    fn generation_dir_names_roundtrip() {
+        assert_eq!(generation_dir_name(1), "gen001");
+        assert_eq!(parse_generation_dir_name("gen001"), Some(1));
+        assert_eq!(parse_generation_dir_name("gen123"), Some(123));
+        assert_eq!(parse_generation_dir_name("band003.bits"), None);
+        assert_eq!(parse_generation_dir_name("gen01"), None);
+        assert_eq!(parse_generation_dir_name("genxyz"), None);
     }
 
     #[test]

@@ -73,7 +73,9 @@ pub use checkpoint::{
     write_checkpoint, write_slice_checkpoint,
 };
 
-pub(crate) use checkpoint::{restore_band_slice_from, write_checkpoint_filters};
+pub(crate) use checkpoint::{
+    restore_band_slice_from, write_checkpoint_filters, write_checkpoint_generations,
+};
 pub use manifest::{CheckpointManifest, CheckpointMode, ChecksumStream, MANIFEST_FILE};
 pub use shm_atomic::ShmAtomicBitArray;
 pub use worker::{

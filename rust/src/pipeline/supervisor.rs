@@ -520,6 +520,8 @@ impl WorkerSpawner<'_> {
             .arg(self.cfg.batch_size.to_string())
             .arg("--checkpoint-every")
             .arg(self.cfg.checkpoint_every.to_string())
+            .arg("--rotate-watermark")
+            .arg(self.cfg.rotate_watermark.to_string())
             .arg("--resume")
             .stdin(Stdio::null())
             .stdout(Stdio::from(log))

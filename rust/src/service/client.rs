@@ -222,17 +222,21 @@ impl DedupClient {
     }
 
     /// Pull one band's filter words from a band-capable server
-    /// (`{"op":"pull_bands","band":g}`, global band numbering) — the
-    /// anti-entropy primitive: a restarted replica OR-merges a healthy
-    /// peer's words band by band
+    /// (`{"op":"pull_bands","band":b,"gen":g}`, global band numbering;
+    /// `gen` selects the generation, 0 — the oldest — when omitted, so
+    /// pre-generational servers keep answering) — the anti-entropy
+    /// primitive: a restarted replica OR-merges a healthy peer's words
+    /// band by band, generation by generation
     /// ([`crate::engine::BandSliceIndex::merge_band_words`]) to
     /// re-converge before rejoining probe rotation. Returns the raw
-    /// reply (`band`, `words`, `inserted`, plus the `num_bands` /
-    /// `rows_per_band` geometry echo the merge validates against).
-    pub fn pull_band(&mut self, band: usize) -> std::io::Result<Value> {
+    /// reply (`band`, `gen`, `generations`, `words`, `inserted`, plus
+    /// the `num_bands` / `rows_per_band` geometry echo the merge
+    /// validates against).
+    pub fn pull_band(&mut self, band: usize, gen: usize) -> std::io::Result<Value> {
         let resp = self.round_trip(json::obj(vec![
             ("op", Value::str("pull_bands")),
             ("band", Value::u64(band as u64)),
+            ("gen", Value::u64(gen as u64)),
         ]))?;
         if resp.get("error").is_some() {
             return Err(err_from(&resp));

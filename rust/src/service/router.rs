@@ -425,6 +425,7 @@ fn validate_backend_layout(
     for replicas in sets {
         let mut set_slice: Option<usize> = None;
         let mut set_inserted: Option<(&str, u64)> = None;
+        let mut set_generations: Option<(&str, u64)> = None;
         for addr in replicas {
             let fail = |msg: String| invalid_input(format!("route: backend {addr}: {msg}"));
             let mut client = connect_backend(addr, connect_timeout, read_timeout)
@@ -498,6 +499,26 @@ fn validate_backend_layout(
                              reports {peer_ins} — the copies diverged; restart the stale \
                              one with `serve --sync-from {peer}` so anti-entropy \
                              re-converges it before it serves probes"
+                        )));
+                    }
+                    Some(_) => {}
+                }
+            }
+            // Same contract for the generation layout: replicas of one
+            // slice must agree on how many frozen+open generations they
+            // hold, or a probe answered by the shallower copy could miss
+            // a duplicate recorded in a generation it never grew.
+            // Servers that predate the field are admitted unchecked
+            // rather than rejected.
+            if let Some(gens) = stats.get("generations").and_then(|v| v.as_u64()) {
+                match set_generations {
+                    None => set_generations = Some((addr, gens)),
+                    Some((peer, peer_gens)) if peer_gens != gens => {
+                        return Err(fail(format!(
+                            "holds {gens} index generation(s) but its replica peer {peer} \
+                             holds {peer_gens} — the copies diverged across a rotation; \
+                             restart the stale one with `serve --sync-from {peer}` so \
+                             anti-entropy grows and re-converges it before it serves probes"
                         )));
                     }
                     Some(_) => {}
@@ -1044,13 +1065,13 @@ fn revive_fleet(shared: &RouterShared) -> Value {
         if set.healthy_count() == set.replicas.len() {
             continue;
         }
-        let peer_inserted = healthy_peer_inserted(shared, set);
+        let (peer_inserted, peer_generations) = healthy_peer_state(shared, set);
         let max_epoch = set.max_epoch();
         for rep in &set.replicas {
             if rep.healthy.load(Ordering::SeqCst) {
                 continue;
             }
-            match revive_one(shared, set, rep, peer_inserted) {
+            match revive_one(shared, set, rep, peer_inserted, peer_generations) {
                 Ok(()) => {
                     rep.epoch.store(max_epoch, Ordering::SeqCst);
                     rep.healthy.store(true, Ordering::SeqCst);
@@ -1075,12 +1096,12 @@ fn revive_fleet(shared: &RouterShared) -> Value {
     ])
 }
 
-/// The `inserted` counter of the first healthy, answering replica of
-/// `set` — the convergence target a revival candidate must match. With
-/// no healthy peer left (double fault) there is nothing to compare
-/// against and the candidate is re-admitted on geometry alone: it holds
-/// the only surviving copy.
-fn healthy_peer_inserted(shared: &RouterShared, set: &ReplicaSet) -> Option<u64> {
+/// The `inserted` counter and generation count of the first healthy,
+/// answering replica of `set` — the convergence targets a revival
+/// candidate must match. With no healthy peer left (double fault) there
+/// is nothing to compare against and the candidate is re-admitted on
+/// geometry alone: it holds the only surviving copy.
+fn healthy_peer_state(shared: &RouterShared, set: &ReplicaSet) -> (Option<u64>, Option<u64>) {
     for rep in &set.replicas {
         if !rep.healthy.load(Ordering::SeqCst) {
             continue;
@@ -1092,10 +1113,10 @@ fn healthy_peer_inserted(shared: &RouterShared, set: &ReplicaSet) -> Option<u64>
         };
         let Ok(stats) = client.stats_json() else { continue };
         if let Some(ins) = stats.get("inserted").and_then(|v| v.as_u64()) {
-            return Some(ins);
+            return (Some(ins), stats.get("generations").and_then(|v| v.as_u64()));
         }
     }
-    None
+    (None, None)
 }
 
 /// Re-run the bind-time handshake against one downed replica; `Ok`
@@ -1105,6 +1126,7 @@ fn revive_one(
     set: &ReplicaSet,
     rep: &Replica,
     peer_inserted: Option<u64>,
+    peer_generations: Option<u64>,
 ) -> Result<(), String> {
     let lsh = shared.preparer.lsh;
     let mut client = connect_backend(&rep.addr, shared.connect_timeout, shared.read_timeout)
@@ -1147,6 +1169,17 @@ fn revive_one(
             return Err(format!(
                 "inserted counter is {mine} but its healthy peer holds {peer} — restart it \
                  with `serve --sync-from` so anti-entropy converges the copies first"
+            ));
+        }
+    }
+    if let (Some(peer), Some(mine)) =
+        (peer_generations, stats.get("generations").and_then(|v| v.as_u64()))
+    {
+        if peer != mine {
+            return Err(format!(
+                "holds {mine} index generation(s) but its healthy peer holds {peer} — \
+                 restart it with `serve --sync-from` so anti-entropy grows and converges \
+                 the copies first"
             ));
         }
     }

@@ -204,6 +204,21 @@ impl IndexBackend {
         }
     }
 
+    /// Generations the live index holds (1 until a rotation or a
+    /// generational restore) — compared across replicas of one slice by
+    /// the router's handshake, alongside `inserted`: two replicas with
+    /// different generation layouts cannot have absorbed the same
+    /// rotation history. `None` for the classic backend, which cannot
+    /// rotate.
+    fn generations(&self) -> Option<u64> {
+        match self {
+            IndexBackend::Classic { .. } => None,
+            IndexBackend::Concurrent(engine) => Some(engine.index().num_generations() as u64),
+            IndexBackend::BandSharded(engine) => Some(engine.num_generations() as u64),
+            IndexBackend::Slice { index, .. } => Some(index.num_generations() as u64),
+        }
+    }
+
     /// Query + optional insert for one document.
     fn decide(&self, text: &str, insert: bool) -> Result<bool, String> {
         let doc = Doc { id: 0, text: text.to_string() };
@@ -505,7 +520,7 @@ impl DedupServer {
         }
         let backend = if let Some((slice, count)) = opts.slice {
             let index_cfg = slice_mode_config(cfg, slice, count)?;
-            let index = match state_dir {
+            let mut index = match state_dir {
                 // Durable slice: the owned band files are live mmaps in
                 // the state dir (fresh zeroed state, a previous durable
                 // slice's files, or a full-index checkpoint — e.g. a
@@ -522,10 +537,14 @@ impl DedupServer {
             // healthy peer, so by the time the router's handshake (or a
             // revive probe) reaches this process it already converged.
             if !opts.sync_from.is_empty() {
-                sync_slice_from_peers(&index, &opts.sync_from)?;
+                sync_slice_from_peers(&mut index, &opts.sync_from)?;
                 if let Some(dir) = state_dir {
-                    // Merged bits are already durable (they landed in
-                    // the mmap); refresh the manifest counters too.
+                    // Bits merged into pre-existing generations are
+                    // already durable (they landed in the mmap);
+                    // generations the peer rotated past this replica
+                    // were merged into fresh heap filters, and this
+                    // checkpoint cold-copies them out alongside the
+                    // refreshed manifest counters.
                     index.checkpoint(dir, 0, 0).map_err(|e| {
                         std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
                     })?;
@@ -748,13 +767,18 @@ fn slice_mode_config(
     Ok(index_cfg)
 }
 
-/// Anti-entropy pull (`serve --sync-from`): OR-merge every owned band
-/// from the first peer that completes the walk. Transport failures move
-/// on to the next peer; a *reachable* peer with mismatched geometry is
-/// a hard bind error (merging it would corrupt the filter contract —
-/// that is operator error, not a transient fault). Safe to re-run after
-/// any interruption: the merge is a bit-OR, so replay is idempotent.
-fn sync_slice_from_peers(index: &BandSliceIndex, peers: &[String]) -> std::io::Result<()> {
+/// Anti-entropy pull (`serve --sync-from`): OR-merge every owned band —
+/// of every generation the peer holds — from the first peer that
+/// completes the walk. A peer that rotated past this replica grows the
+/// local generation list first
+/// ([`BandSliceIndex::ensure_generations`]), so a restart that missed a
+/// rotation converges to the peer's full layout. Transport failures
+/// move on to the next peer; a *reachable* peer with mismatched
+/// geometry is a hard bind error (merging it would corrupt the filter
+/// contract — that is operator error, not a transient fault). Safe to
+/// re-run after any interruption: the merge is a bit-OR, so replay is
+/// idempotent.
+fn sync_slice_from_peers(index: &mut BandSliceIndex, peers: &[String]) -> std::io::Result<()> {
     use super::DedupClient;
     // Fault-injection hook for the chaos suite: die mid-merge once the
     // cumulative merged insert count crosses the threshold, so tests can
@@ -798,39 +822,51 @@ fn sync_slice_from_peers(index: &BandSliceIndex, peers: &[String]) -> std::io::R
                 index.config().lsh.rows_per_band
             )));
         }
+        // Generation layout: servers that predate the field hold exactly
+        // one generation; a peer that rotated further grows this replica
+        // to its layout before the per-generation walk.
+        let peer_gens = stats
+            .get("generations")
+            .and_then(|v| v.as_u64())
+            .map(|n| n.max(1) as usize)
+            .unwrap_or(1);
+        index.ensure_generations(peer_gens);
         let mut merged = 0u64;
         let mut transport_failed = false;
-        for band in index.band_range() {
-            let reply = match client.pull_band(band) {
-                Ok(r) => r,
-                Err(e) => {
-                    last_err = format!("sync peer {addr}: pull_bands({band}) failed: {e}");
-                    crate::log_warn!("{last_err}");
-                    transport_failed = true;
-                    break;
+        'peer: for gen in 0..peer_gens {
+            for band in index.band_range() {
+                let reply = match client.pull_band(band, gen) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        last_err =
+                            format!("sync peer {addr}: pull_bands({band}, gen {gen}) failed: {e}");
+                        crate::log_warn!("{last_err}");
+                        transport_failed = true;
+                        break 'peer;
+                    }
+                };
+                let Some(words_json) = reply.get("words") else {
+                    return Err(invalid_input(format!(
+                        "sync peer {addr}: pull_bands({band}, gen {gen}) reply carries no 'words'"
+                    )));
+                };
+                let words = super::proto::words_from_json(words_json, expect_words)
+                    .map_err(|e| invalid_input(format!("sync peer {addr}: band {band}: {e}")))?;
+                let inserted = reply.get("inserted").and_then(|v| v.as_u64()).unwrap_or(0);
+                index
+                    .merge_band_words(gen, band, &words, inserted)
+                    .map_err(|e| invalid_input(format!("sync peer {addr}: {e}")))?;
+                merged = merged.saturating_add(inserted);
+                if crash_after_docs > 0 && merged >= crash_after_docs {
+                    // Deterministic mid-merge death: some owned bands have
+                    // merged, some have not — exactly the torn state the
+                    // idempotence property must survive.
+                    crate::log_warn!(
+                        "LSHBLOOM_REPLICA_CRASH_AFTER_DOCS={crash_after_docs} reached \
+                         ({merged} inserts merged); dying mid-merge"
+                    );
+                    std::process::exit(42);
                 }
-            };
-            let Some(words_json) = reply.get("words") else {
-                return Err(invalid_input(format!(
-                    "sync peer {addr}: pull_bands({band}) reply carries no 'words'"
-                )));
-            };
-            let words = super::proto::words_from_json(words_json, expect_words)
-                .map_err(|e| invalid_input(format!("sync peer {addr}: band {band}: {e}")))?;
-            let inserted = reply.get("inserted").and_then(|v| v.as_u64()).unwrap_or(0);
-            index
-                .merge_band_words(band, &words, inserted)
-                .map_err(|e| invalid_input(format!("sync peer {addr}: {e}")))?;
-            merged = merged.saturating_add(inserted);
-            if crash_after_docs > 0 && merged >= crash_after_docs {
-                // Deterministic mid-merge death: some owned bands have
-                // merged, some have not — exactly the torn state the
-                // idempotence property must survive.
-                crate::log_warn!(
-                    "LSHBLOOM_REPLICA_CRASH_AFTER_DOCS={crash_after_docs} reached \
-                     ({merged} inserts merged); dying mid-merge"
-                );
-                std::process::exit(42);
             }
         }
         if transport_failed {
@@ -843,7 +879,7 @@ fn sync_slice_from_peers(index: &BandSliceIndex, peers: &[String]) -> std::io::R
         }
         crate::log_info!(
             "anti-entropy merge from {addr} complete ({merged} inserts folded across \
-             bands {:?})",
+             bands {:?}, {peer_gens} generation(s))",
             index.band_range()
         );
         return Ok(());
@@ -1052,16 +1088,25 @@ fn dispatch_request(req: &Value, shared: &Shared) -> Value {
             if let Some(n) = shared.backend.inserted() {
                 fields.push(("inserted", Value::u64(n)));
             }
+            // Generation layout (absent on the classic backend): the
+            // other half of the replica handshake — and what a syncing
+            // replica reads to grow to its peer's rotation history.
+            if let Some(n) = shared.backend.generations() {
+                fields.push(("generations", Value::u64(n)));
+            }
             obj(fields)
         }
         Some("pull_bands") => {
-            // Anti-entropy read: one owned band's filter words, exact
-            // u64 tokens, plus the geometry echo the puller validates
-            // before OR-merging. Served by slice backends only — they
-            // are the replicated tier; full backends checkpoint instead.
+            // Anti-entropy read: one owned band's filter words — of one
+            // generation, oldest first; `gen` defaults to 0 so
+            // pre-generational pullers keep working — exact u64 tokens,
+            // plus the geometry echo the puller validates before
+            // OR-merging. Served by slice backends only — they are the
+            // replicated tier; full backends publish checkpoints instead.
             let Some(band) = req.get("band").and_then(|v| v.as_u64()) else {
                 return error_response("pull_bands: missing 'band' (global band index)");
             };
+            let gen = req.get("gen").and_then(|v| v.as_u64()).unwrap_or(0) as usize;
             let IndexBackend::Slice { index, .. } = &shared.backend else {
                 return error_response(
                     "pull_bands requires a band-slice backend (--slice-index); \
@@ -1069,9 +1114,17 @@ fn dispatch_request(req: &Value, shared: &Shared) -> Value {
                 );
             };
             let band = band as usize;
-            match (index.band_words(band), index.band_inserted(band)) {
+            if gen >= index.num_generations() {
+                return error_response(format!(
+                    "pull_bands: generation {gen} is beyond this slice's {} generation(s)",
+                    index.num_generations()
+                ));
+            }
+            match (index.band_words(gen, band), index.band_inserted(gen, band)) {
                 (Some(words), Some(inserted)) => obj(vec![
                     ("band", Value::u64(band as u64)),
+                    ("gen", Value::u64(gen as u64)),
+                    ("generations", Value::u64(index.num_generations() as u64)),
                     ("num_bands", Value::u64(index.full_bands() as u64)),
                     (
                         "rows_per_band",

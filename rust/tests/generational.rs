@@ -1,0 +1,302 @@
+//! Integration tests for the capacity autopilot's generational index.
+//!
+//! The contract under test: a stream that overruns `--expect-docs`
+//! rotates the concurrent index into fresh filter generations with
+//! **zero false negatives** (probes OR across every generation), the
+//! rotation history round-trips checkpoint → restore, a torn
+//! generational checkpoint is refused by name, and a restarted replica
+//! `--sync-from`s the whole generation layout — not just generation 0 —
+//! before it serves probes.
+
+// Miri cannot emulate the subprocess/TCP halves; the miri CI job covers
+// the pure-logic suites instead.
+#![cfg(not(miri))]
+
+use lshbloom::config::{EngineMode, PipelineConfig};
+use lshbloom::corpus::Doc;
+use lshbloom::engine::{ConcurrentEngine, ConcurrentLshBloomIndex};
+use lshbloom::index::lshbloom::LshBloomConfig;
+use lshbloom::methods::lshbloom::BandPreparer;
+use lshbloom::minhash::LshParams;
+use lshbloom::persist::{restore_index, write_checkpoint};
+use lshbloom::rng::Xoshiro256pp;
+use lshbloom::service::DedupClient;
+use std::io::{BufRead, BufReader, Read};
+use std::path::{Path, PathBuf};
+use std::process::{Child, ChildStdout, Stdio};
+
+/// Fresh per-test temp root (removes any stale leftover first).
+fn tmp_root(name: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("lshbloom-generational-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// One random band-hash vector (stands in for a unique document).
+fn random_doc(rng: &mut Xoshiro256pp, num_bands: usize) -> Vec<u64> {
+    (0..num_bands).map(|_| rng.next_u64()).collect()
+}
+
+/// A rotated index must agree verdict-for-verdict with a single index
+/// that was adequately sized up front: rotation is capacity management,
+/// not a semantic change. The stream overruns the small plan 6x and
+/// replays deterministic twins across generation boundaries, so a
+/// frozen-generation probe miss would surface as a verdict mismatch.
+#[test]
+fn rotation_matches_adequately_sized_oracle_verdicts() {
+    let lsh = LshParams { num_bands: 8, rows_per_band: 4 };
+    // Same geometry, 6x-underestimated capacity on the rotating side;
+    // the tiny FP budget keeps both sides' false-positive mass
+    // negligible so verdicts are label-exact, not merely similar.
+    let mut rotated = ConcurrentLshBloomIndex::new(LshBloomConfig::new(lsh, 1e-9, 300));
+    rotated.enable_rotation(0.5);
+    let oracle = ConcurrentLshBloomIndex::new(LshBloomConfig::new(lsh, 1e-9, 10_000));
+
+    let mut rng = Xoshiro256pp::seeded(0x6E2A_51CE);
+    let mut seen: Vec<Vec<u64>> = Vec::new();
+    for i in 0..1_800usize {
+        let doc = if i % 7 == 3 && !seen.is_empty() {
+            // Twin of an earlier document — often one ingested into a
+            // generation that has since been frozen.
+            seen[(i * 31) % seen.len()].clone()
+        } else {
+            let d = random_doc(&mut rng, lsh.num_bands);
+            seen.push(d.clone());
+            d
+        };
+        let r = rotated.insert_if_new_shared(&doc);
+        let o = oracle.insert_if_new_shared(&doc);
+        assert_eq!(r, o, "doc {i}: rotated index verdict diverged from the oracle");
+    }
+    assert!(
+        rotated.num_generations() > 1,
+        "a 6x overrun never rotated ({} generations)",
+        rotated.num_generations()
+    );
+    assert!(rotated.rotations() >= 1);
+    assert_eq!(oracle.num_generations(), 1, "the adequately-sized oracle must not rotate");
+
+    // Zero false negatives: every document ever inserted is still a
+    // member, wherever its generation ended up.
+    for (i, doc) in seen.iter().enumerate() {
+        assert!(rotated.query(doc), "doc {i} lost across rotation");
+    }
+}
+
+/// The full rotation history survives checkpoint → restore, and a
+/// manifest that records a generation whose directory is gone is
+/// refused with the torn-checkpoint error naming it — never silently
+/// reopened smaller (which would manufacture Bloom false negatives).
+#[test]
+fn generational_checkpoint_roundtrips_and_refuses_torn_generations() {
+    let cfg = LshBloomConfig::new(LshParams { num_bands: 6, rows_per_band: 4 }, 1e-8, 256);
+    let mut index = ConcurrentLshBloomIndex::new(cfg);
+    index.enable_rotation(0.5);
+    let mut rng = Xoshiro256pp::seeded(0x51CE_B007);
+    let docs: Vec<Vec<u64>> =
+        (0..1_500).map(|_| random_doc(&mut rng, cfg.lsh.num_bands)).collect();
+    for doc in &docs {
+        index.insert_if_new_shared(doc);
+    }
+    assert!(index.num_generations() > 1, "overrun corpus must rotate");
+
+    let dir = tmp_root("roundtrip");
+    let manifest = write_checkpoint(&index, docs.len() as u64, 0, &dir).unwrap();
+    assert_eq!(
+        manifest.num_generations(),
+        index.num_generations(),
+        "manifest must record every generation"
+    );
+
+    let (restored, manifest) = restore_index(&dir, &cfg, false).unwrap();
+    assert_eq!(restored.num_generations(), index.num_generations());
+    assert_eq!(manifest.inserted, index.len());
+    for (i, doc) in docs.iter().enumerate() {
+        assert!(restored.query(doc), "doc {i} lost across checkpoint round-trip");
+    }
+
+    // Tear the checkpoint: drop a rotated generation's directory.
+    std::fs::remove_dir_all(dir.join("gen001")).unwrap();
+    let err = restore_index(&dir, &cfg, false).unwrap_err().to_string();
+    assert!(
+        err.contains("generation") && err.contains("gen001"),
+        "torn generational checkpoint not refused by name: {err}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// Subprocess half: `--sync-from` anti-entropy across a rotation.
+// ---------------------------------------------------------------------
+
+fn sync_cfg() -> PipelineConfig {
+    PipelineConfig {
+        num_perms: 64,
+        expected_docs: 512,
+        engine: EngineMode::Concurrent,
+        ..Default::default()
+    }
+}
+
+/// One slice-server subprocess (slice 0 of 1, geometry mirroring
+/// [`sync_cfg`]); SIGKILLed on drop so a failed assertion never leaks
+/// servers.
+struct SliceProc {
+    child: Child,
+    addr: String,
+    // Held so the server's stdout pipe stays open for its lifetime.
+    _stdout: BufReader<ChildStdout>,
+}
+
+impl Drop for SliceProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Spawn a slice server over `state_dir` and block until it prints its
+/// listening line (skipping the capacity-plan echo and anything else).
+fn spawn_slice(state_dir: &Path, sync_from: Option<&str>) -> SliceProc {
+    let mut cmd = std::process::Command::new(env!("CARGO_BIN_EXE_lshbloom"));
+    cmd.arg("serve")
+        .args(["--addr", "127.0.0.1:0", "--engine", "concurrent"])
+        .args(["--perms", "64", "--expected-docs", "512"])
+        .args(["--slice-index", "0", "--slice-count", "1"])
+        .args(["--state-dir", state_dir.to_str().unwrap()]);
+    if let Some(peers) = sync_from {
+        cmd.args(["--sync-from", peers]);
+    }
+    cmd.stdout(Stdio::piped()).stderr(Stdio::piped());
+    let mut child = cmd.spawn().expect("spawn slice server");
+    let mut reader = BufReader::new(child.stdout.take().expect("child stdout"));
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line).expect("read slice server stdout");
+        if n == 0 {
+            let _ = child.wait();
+            let mut err = String::new();
+            if let Some(mut e) = child.stderr.take() {
+                let _ = e.read_to_string(&mut err);
+            }
+            panic!("slice server exited before listening: {err}");
+        }
+        if let Some(rest) = line.split("listening on ").nth(1) {
+            let addr = rest.split_whitespace().next().expect("listen addr token").to_string();
+            return SliceProc { child, addr, _stdout: reader };
+        }
+    }
+}
+
+fn generations_of(client: &mut DedupClient) -> u64 {
+    client
+        .stats_json()
+        .unwrap()
+        .get("generations")
+        .and_then(|v| v.as_u64())
+        .expect("slice stats carries 'generations'")
+}
+
+/// `pull_bands` one (band, generation): the filter words + insert
+/// counter the anti-entropy merge transfers.
+fn pull_words(client: &mut DedupClient, band: usize, gen: usize) -> (Vec<u64>, u64) {
+    let reply = client.pull_band(band, gen).expect("pull_bands");
+    let words: Vec<u64> = reply
+        .get("words")
+        .and_then(|v| v.as_arr())
+        .expect("pull_bands reply words")
+        .iter()
+        .map(|w| w.as_u64().expect("u64 filter word"))
+        .collect();
+    (words, reply.get("inserted").and_then(|v| v.as_u64()).unwrap_or(0))
+}
+
+/// Band hashes for one document, bit-identical to what every serving
+/// path computes (shared preparer construction).
+fn bands_for(preparer: &BandPreparer, text: &str) -> Vec<u64> {
+    let sig = preparer.hasher.signature(&lshbloom::text::normalize(text));
+    let mut bands = Vec::new();
+    lshbloom::hash::band::band_hashes_for_doc(
+        &sig,
+        preparer.lsh.num_bands,
+        preparer.lsh.rows_per_band,
+        &mut bands,
+    );
+    bands
+}
+
+/// A replica that `--sync-from`s a peer whose index rotated must grow
+/// to the peer's generation layout and converge bit-for-bit in *every*
+/// generation — syncing only generation 0 would silently drop the
+/// frozen generations' membership and admit false negatives.
+#[test]
+fn sync_from_converges_across_a_rotation() {
+    let cfg = sync_cfg();
+    let root = tmp_root("sync");
+    let peer_dir = root.join("peer");
+    let rep_dir = root.join("replica");
+
+    // Ingest 4x the planned capacity in-process so the index rotates,
+    // then persist the rotated layout as the peer's durable state.
+    // Tokens all embed the doc number, so distinct documents share no
+    // shingles and the filters genuinely fill.
+    let engine = ConcurrentEngine::from_config(&cfg);
+    let docs: Vec<Doc> = (0..2_048u64)
+        .map(|i| Doc {
+            id: i,
+            text: format!("t{i}x0 t{i}x1 t{i}x2 t{i}x3 t{i}x4 t{i}x5"),
+        })
+        .collect();
+    let early_doc = docs[3].text.clone();
+    engine.submit(docs);
+    assert!(
+        engine.index().num_generations() > 1,
+        "a 4x overrun must rotate ({} generations)",
+        engine.index().num_generations()
+    );
+    engine.checkpoint(&peer_dir).unwrap();
+
+    let peer = spawn_slice(&peer_dir, None);
+    let mut pc = DedupClient::connect(&peer.addr).unwrap();
+    let peer_gens = generations_of(&mut pc);
+    assert!(peer_gens > 1, "peer must re-attach the rotated layout");
+
+    // A fresh replica (empty state dir) anti-entropies the whole
+    // rotation history at bind.
+    let rep = spawn_slice(&rep_dir, Some(&peer.addr));
+    let mut rc = DedupClient::connect(&rep.addr).unwrap();
+    assert_eq!(generations_of(&mut rc), peer_gens, "replica generation layout diverges");
+
+    // Bit-for-bit parity in every (generation, band) cell.
+    let num_bands = pc
+        .stats_json()
+        .unwrap()
+        .get("num_bands")
+        .and_then(|v| v.as_u64())
+        .expect("slice stats carries 'num_bands'") as usize;
+    for gen in 0..peer_gens as usize {
+        for band in 0..num_bands {
+            let (pw, pi) = pull_words(&mut pc, band, gen);
+            let (rw, ri) = pull_words(&mut rc, band, gen);
+            assert_eq!(pw, rw, "gen {gen} band {band}: filter words diverge after sync");
+            assert_eq!(pi, ri, "gen {gen} band {band}: insert counters diverge after sync");
+        }
+    }
+
+    // Zero false negatives across rotation + sync: a document ingested
+    // before the first rotation is a duplicate on the synced replica.
+    let preparer = BandPreparer::from_config(&cfg);
+    assert!(
+        rc.check_bands(&bands_for(&preparer, &early_doc)).unwrap(),
+        "pre-rotation document lost by the synced replica"
+    );
+
+    DedupClient::connect(&rep.addr).unwrap().shutdown().unwrap();
+    DedupClient::connect(&peer.addr).unwrap().shutdown().unwrap();
+    drop(rep);
+    drop(peer);
+    let _ = std::fs::remove_dir_all(&root);
+}

@@ -165,10 +165,11 @@ fn bands_for(preparer: &BandPreparer, text: &str) -> Vec<u64> {
     bands
 }
 
-/// `pull_bands` one band: `Some((filter words, inserted))` when the
-/// server owns it, `None` when it answers "outside this slice's range".
-fn pull_words(client: &mut DedupClient, band: usize) -> Option<(Vec<u64>, u64)> {
-    let reply = client.pull_band(band).ok()?;
+/// `pull_bands` one band of one generation: `Some((filter words,
+/// inserted))` when the server owns it, `None` when it answers
+/// "outside this slice's range".
+fn pull_words(client: &mut DedupClient, band: usize, gen: usize) -> Option<(Vec<u64>, u64)> {
+    let reply = client.pull_band(band, gen).ok()?;
     let words: Vec<u64> = reply
         .get("words")
         .and_then(|v| v.as_arr())
@@ -190,27 +191,40 @@ fn inserted_of(client: &mut DedupClient) -> u64 {
 }
 
 /// Assert two replicas hold bit-for-bit identical filters over every
-/// band either of them owns, and agree on the insert counter — the
-/// convergence contract anti-entropy must reach.
+/// band either of them owns, across every index generation, and agree
+/// on the insert counter — the convergence contract anti-entropy must
+/// reach.
 fn assert_band_parity(addr_a: &str, addr_b: &str) {
     let mut a = DedupClient::connect(addr_a).unwrap();
     let mut b = DedupClient::connect(addr_b).unwrap();
-    let num_bands = a
-        .stats_json()
-        .unwrap()
+    let stats = a.stats_json().unwrap();
+    let num_bands = stats
         .get("num_bands")
         .and_then(|v| v.as_u64())
         .expect("slice stats carries 'num_bands'") as usize;
+    let gens_a = stats.get("generations").and_then(|v| v.as_u64()).unwrap_or(1);
+    let gens_b = b
+        .stats_json()
+        .unwrap()
+        .get("generations")
+        .and_then(|v| v.as_u64())
+        .unwrap_or(1);
+    assert_eq!(gens_a, gens_b, "replica generation counts diverge");
     let mut compared = 0;
-    for band in 0..num_bands {
-        match (pull_words(&mut a, band), pull_words(&mut b, band)) {
-            (Some((wa, ia)), Some((wb, ib))) => {
-                assert_eq!(wa, wb, "band {band}: replica filter words diverge");
-                assert_eq!(ia, ib, "band {band}: replica insert counters diverge");
-                compared += 1;
+    for gen in 0..gens_a as usize {
+        for band in 0..num_bands {
+            match (pull_words(&mut a, band, gen), pull_words(&mut b, band, gen)) {
+                (Some((wa, ia)), Some((wb, ib))) => {
+                    assert_eq!(wa, wb, "gen {gen} band {band}: replica filter words diverge");
+                    assert_eq!(
+                        ia, ib,
+                        "gen {gen} band {band}: replica insert counters diverge"
+                    );
+                    compared += 1;
+                }
+                (None, None) => {}
+                _ => panic!("gen {gen} band {band}: replicas disagree on slice ownership"),
             }
-            (None, None) => {}
-            _ => panic!("band {band}: replicas disagree on slice ownership"),
         }
     }
     assert!(compared > 0, "replicas own no bands in common");
